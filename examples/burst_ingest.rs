@@ -1,0 +1,65 @@
+//! E6 companion: a Cassandra-like storage node under bursty ingest —
+//! fixed-capacity filter (premature flushes) vs OCF (burst tolerant).
+//!
+//! ```bash
+//! cargo run --release --example burst_ingest [ops]
+//! ```
+
+use ocf::exp::{burst, Scale};
+use ocf::filter::{MembershipFilter, Mode, OcfConfig};
+use ocf::store::{FlushPolicy, NodeConfig, StorageNode};
+use ocf::workload::{BurstGenerator, Op};
+
+fn main() {
+    let ops: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+
+    // Narrated single-node run with phase-by-phase reporting.
+    let mut node = StorageNode::new(NodeConfig {
+        filter: OcfConfig {
+            mode: Mode::Eof,
+            initial_capacity: 4096,
+            ..OcfConfig::default()
+        },
+        flush: FlushPolicy::small(ops),
+        ..NodeConfig::default()
+    });
+    let mut gen = BurstGenerator::square_wave(ops / 8, 1 << 24, 0xB1157);
+    let mut phase = gen.current_phase();
+    println!("phase change -> {phase}");
+    for _ in 0..ops {
+        let Some(op) = gen.next_op() else { break };
+        if gen.current_phase() != phase {
+            phase = gen.current_phase();
+            println!(
+                "phase change -> {phase:13} | live={:7} filter cap={:8} occ={:.2} resizes={}",
+                node.live_keys(),
+                node.filter().capacity(),
+                node.filter().occupancy(),
+                node.filter().stats().resizes(),
+            );
+        }
+        match op {
+            Op::Insert(k) => {
+                let _ = node.put(k);
+            }
+            Op::Lookup(k) => {
+                let _ = node.get(k);
+            }
+            Op::Delete(k) => {
+                let _ = node.delete(k);
+            }
+        }
+    }
+    println!(
+        "\nOCF node: flushes={} premature={} filter-memory={}",
+        node.stats.flushes,
+        node.stats.flushes_premature,
+        ocf::util::fmt_bytes(node.filter_memory_bytes()),
+    );
+
+    // Then the full two-arm comparison (E6).
+    println!("{}", burst::run(Scale(ops as f64 / 400_000.0)));
+}

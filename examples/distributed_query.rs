@@ -1,0 +1,84 @@
+//! E7 companion: the paper's §I.B cartesian-product query on a
+//! simulated 3-node data-center, with and without membership filters.
+//!
+//! ```bash
+//! cargo run --release --example distributed_query [set_size]
+//! ```
+
+use ocf::cluster::{CartesianQuery, Cluster, Coordinator, ReplicationConfig};
+use ocf::store::{FlushPolicy, FlushReason, NodeConfig, StorageNode};
+use std::time::Instant;
+
+fn main() {
+    let set_size: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    // --- a 3-node cluster holding T, U and V --------------------------
+    let mut cluster = Cluster::new(
+        3,
+        64,
+        NodeConfig {
+            flush: FlushPolicy::small(100_000),
+            ..NodeConfig::default()
+        },
+        ReplicationConfig::none(),
+    );
+    let t: Vec<u64> = (0..set_size as u64).collect();
+    let u: Vec<u64> = (10_000..10_000 + set_size as u64).collect();
+    for &k in t.iter().chain(&u) {
+        cluster.put(k).unwrap();
+    }
+    println!(
+        "cluster loaded: {} keys over {} nodes; per-node ops so far: {:?}",
+        2 * set_size,
+        cluster.node_count(),
+        cluster.stats.per_node_ops
+    );
+
+    // --- V's node: bulk data + a few planted (t,u) matches ------------
+    let mut v_node = StorageNode::new(NodeConfig {
+        flush: FlushPolicy::small(100_000),
+        ..NodeConfig::default()
+    });
+    let planted = 12usize;
+    for i in 0..planted {
+        v_node
+            .put(CartesianQuery::pair_key(t[i], u[i]))
+            .unwrap();
+    }
+    for k in 0..50_000u64 {
+        v_node.put((1 << 50) + k).unwrap();
+    }
+    v_node.flush(FlushReason::MemtableKeys);
+
+    // --- the coordinated query -----------------------------------------
+    let query = CartesianQuery {
+        t,
+        u,
+        probe_key: CartesianQuery::pair_key,
+    };
+    let t0 = Instant::now();
+    let stats = Coordinator::execute(&query, &mut v_node);
+    let dt = t0.elapsed();
+    println!(
+        "\nT×U⋈V: {} pairs probed in {:.1} ms ({:.2} Mprobe/s)",
+        stats.pairs_generated,
+        dt.as_secs_f64() * 1e3,
+        stats.pairs_generated as f64 / dt.as_secs_f64() / 1e6,
+    );
+    println!(
+        "matches={} | filter-pruned={} ({:.2}%) | storage probes={}",
+        stats.matches,
+        stats.v_filter_pruned,
+        100.0 * stats.v_filter_pruned as f64 / stats.pairs_generated as f64,
+        stats.v_probes,
+    );
+    assert!(stats.matches as usize >= planted);
+    println!(
+        "\npaper §I.B: 'the number of look-ups on the node containing V is much \
+         greater' — the node filter absorbed {:.1}% of them before storage.",
+        100.0 * stats.v_filter_pruned as f64 / stats.pairs_generated as f64
+    );
+}

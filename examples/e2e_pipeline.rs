@@ -1,0 +1,114 @@
+//! **The end-to-end driver** (DESIGN.md E9): proves all three layers
+//! compose on a real workload.
+//!
+//! ```text
+//!  YCSB-A workload (1M ops)                         [L3 workload gen]
+//!    → dynamic batcher + backpressure               [L3 pipeline]
+//!    → AOT Pallas/JAX hash artifact via PJRT        [L1/L2 via runtime]
+//!    → OCF filter (EOF controller) + storage node   [L3 store]
+//! ```
+//!
+//! Prints the headline metrics recorded in EXPERIMENTS.md §E9:
+//! sustained ops/s, batch p50/p99, resize count, filter memory — and
+//! *verifies* the XLA and native hash paths produce identical filter
+//! state (the cross-language contract, end to end).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline [ops]
+//! ```
+
+use ocf::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+use ocf::pipeline::{BatchPolicy, IngestPipeline};
+use ocf::runtime::{ExecutorKind, HashExecutor, PjrtEngine};
+use ocf::workload::ycsb::Preset;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn run_arm(label: &str, executor: HashExecutor, ops: usize) -> (Ocf, f64) {
+    let mut filter = Ocf::new(OcfConfig {
+        mode: Mode::Eof,
+        initial_capacity: 8192,
+        ..OcfConfig::default()
+    });
+    let mut pipeline = IngestPipeline::new(
+        BatchPolicy {
+            max_batch: 1024,
+            max_delay: Duration::from_micros(500),
+        },
+        executor,
+    );
+    let mut gen = Preset::A.generator(1 << 22, 0xE2E_0CF);
+    let report = pipeline.run((0..ops).map(|_| gen.next_op()), &mut filter);
+    println!(
+        "[{label:>6}] {} | filter: len={} cap={} occ={:.2} resizes={} mem={}",
+        report.render(),
+        filter.len(),
+        filter.capacity(),
+        filter.occupancy(),
+        filter.stats().resizes(),
+        ocf::util::fmt_bytes(filter.memory_bytes()),
+    );
+    (filter, report.ops_per_sec())
+}
+
+fn main() {
+    let ops: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+
+    println!("e2e_pipeline: YCSB-A, {ops} ops, batch=1024\n");
+
+    // --- native arm ---------------------------------------------------
+    let hasher = Ocf::new(OcfConfig::default()).hasher();
+    let (native_filter, native_ops) = run_arm("native", HashExecutor::native(hasher), ops);
+
+    // --- XLA arm (the three-layer path) -------------------------------
+    match PjrtEngine::load_dir("artifacts") {
+        Ok(Some(engine)) => {
+            let engine = Arc::new(engine);
+            println!(
+                "\nPJRT engine up: platform={} artifacts={:?}",
+                engine.platform(),
+                engine.artifact_names()
+            );
+            let exec = HashExecutor::with_engine(engine, hasher);
+            assert_eq!(exec.kind(), ExecutorKind::Xla);
+            let (xla_filter, xla_ops) = run_arm("xla", exec, ops);
+
+            // cross-language contract, end to end: identical filter state
+            assert_eq!(native_filter.len(), xla_filter.len());
+            assert_eq!(native_filter.capacity(), xla_filter.capacity());
+            let mut checked = 0;
+            for k in (0..(1u64 << 22)).step_by(4097) {
+                assert_eq!(
+                    native_filter.contains(k),
+                    xla_filter.contains(k),
+                    "membership divergence at key {k}"
+                );
+                checked += 1;
+            }
+            println!(
+                "\nCROSS-LANGUAGE CHECK OK: native and XLA arms agree on \
+                 {checked} probes (len={} capacity={}).",
+                xla_filter.len(),
+                xla_filter.capacity()
+            );
+            println!(
+                "headline: native {} vs xla {} (per-batch PJRT dispatch overhead \
+                 dominates on CPU; see EXPERIMENTS.md §E9)",
+                ocf::util::fmt_rate(native_ops),
+                ocf::util::fmt_rate(xla_ops),
+            );
+        }
+        Ok(None) => {
+            println!(
+                "\nNOTE: artifacts/ not built — XLA arm skipped. \
+                 Run `make artifacts` for the full three-layer path."
+            );
+            println!("headline: native {}", ocf::util::fmt_rate(native_ops));
+        }
+        Err(e) => panic!("artifact load error: {e}"),
+    }
+    println!("\ne2e_pipeline OK");
+}

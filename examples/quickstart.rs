@@ -1,0 +1,60 @@
+//! Quickstart: the OCF public API in ~60 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ocf::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+
+fn main() {
+    // 1. Build an OCF in the congestion-aware (EOF) mode. The paper
+    //    recommends capacity = 2× the expected items, but OCF resizes
+    //    itself, so a rough guess is fine.
+    let mut filter = Ocf::new(OcfConfig {
+        mode: Mode::Eof,
+        initial_capacity: 8192,
+        fp_bits: 16,
+        ..OcfConfig::default()
+    });
+
+    // 2. Insert far more keys than the initial capacity: the EOF
+    //    controller grows the filter as the burst develops.
+    for key in 0..100_000u64 {
+        filter.insert(key).expect("OCF absorbs bursts by resizing");
+    }
+    println!(
+        "after 100k inserts: len={} capacity={} occupancy={:.2} resizes={} (α={:.3})",
+        filter.len(),
+        filter.capacity(),
+        filter.occupancy(),
+        filter.stats().resizes(),
+        filter.alpha().unwrap(),
+    );
+
+    // 3. Membership tests: no false negatives, ~2^-16 false positives.
+    assert!(filter.contains(42));
+    assert!(filter.contains(99_999));
+    let false_positives = (1_000_000..1_100_000u64)
+        .filter(|&k| filter.contains(k))
+        .count();
+    println!("false positives on 100k held-out keys: {false_positives}");
+
+    // 4. Verified deletes: removing a key you never inserted is
+    //    rejected (the traditional filter would silently damage a
+    //    resident key's fingerprint here — paper §IV).
+    assert!(filter.delete(42));
+    assert!(!filter.delete(424_242_424), "absent keys are rejected");
+
+    // 5. Delete storms shrink the filter back down.
+    for key in 0..90_000u64 {
+        filter.delete(key);
+    }
+    println!(
+        "after delete storm: len={} capacity={} occupancy={:.2} (shrinks={})",
+        filter.len(),
+        filter.capacity(),
+        filter.occupancy(),
+        filter.stats().resizes_shrink,
+    );
+    println!("quickstart OK");
+}

@@ -1,0 +1,64 @@
+//! YCSB-style workloads (A–F) against a replicated OCF cluster —
+//! the cloud-serving benchmark the paper cites as [6].
+//!
+//! ```bash
+//! cargo run --release --example ycsb [ops_per_workload]
+//! ```
+
+use ocf::cluster::{Cluster, ReplicationConfig};
+use ocf::metrics::Histogram;
+use ocf::store::{FlushPolicy, NodeConfig};
+use ocf::workload::ycsb::Preset;
+use std::time::Instant;
+
+fn main() {
+    let ops: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+
+    println!("| workload | ops/s | p50 ns | p99 ns | short-circuit % |");
+    println!("|---|---|---|---|---|");
+    for preset in Preset::all() {
+        let mut cluster = Cluster::new(
+            3,
+            64,
+            NodeConfig {
+                flush: FlushPolicy::small(50_000),
+                ..NodeConfig::default()
+            },
+            ReplicationConfig {
+                rf: 2,
+                ..ReplicationConfig::default()
+            },
+        );
+        // load phase: 10k keys so reads have something to hit
+        for k in 0..10_000u64 {
+            cluster.put(k).unwrap();
+        }
+        let mut gen = preset.generator(100_000, 0x4C5B);
+        let mut lat = Histogram::new();
+        let t0 = Instant::now();
+        for _ in 0..ops {
+            let op = gen.next_op();
+            let o0 = Instant::now();
+            let _ = cluster.apply(op);
+            lat.record(o0.elapsed().as_nanos() as u64);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let sc: u64 = (0..cluster.node_count())
+            .map(|i| cluster.node(i).stats.filter_short_circuits)
+            .sum();
+        let gets: u64 = (0..cluster.node_count())
+            .map(|i| cluster.node(i).stats.gets)
+            .sum();
+        println!(
+            "| {} | {} | {} | {} | {:.1} |",
+            preset.name(),
+            ocf::util::fmt_rate(ops as f64 / dt),
+            lat.quantile(0.5),
+            lat.quantile(0.99),
+            100.0 * sc as f64 / gets.max(1) as f64,
+        );
+    }
+}

@@ -1,0 +1,12 @@
+"""OCF compile path (build-time only; never imported at runtime).
+
+Layer 1 (Pallas kernels) and Layer 2 (JAX model) live here; ``aot.py``
+lowers them once to HLO text under ``artifacts/`` for the rust runtime.
+
+x64 MUST be enabled before any jax array is created: the hash pipeline
+is u64 end-to-end and must be bit-exact with the rust implementation.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,157 @@
+"""AOT lowering: JAX/Pallas model → HLO *text* artifacts for rust/PJRT.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts`` (incremental: the Makefile only reruns
+this when a compile-path source changed).  Outputs:
+
+  artifacts/
+    hash_b{256,1024,4096}.hlo.txt          hash_batch at 3 batch sizes
+    probe_nb16384_b1024.hlo.txt            frozen-table probe
+    hash_probe_nb16384_b1024.hlo.txt       fused read path
+    manifest.txt                           one `k=v;...` line per artifact
+                                           (parsed by rust/src/runtime/artifacts.rs)
+    manifest.json                          same, for humans/tools
+
+Python never runs on the request path: the rust binary is self-contained
+once these files exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+# allow `python -m compile.aot` from python/ and `python aot.py` from compile/
+if __package__ in (None, ""):  # pragma: no cover
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    import compile  # noqa: F401  (sets jax_enable_x64)
+    from compile import model
+else:
+    from . import model
+
+from jax._src.lib import xla_client as xc
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+
+HASH_BATCH_SIZES = (256, 1024, 4096)
+PROBE_NBUCKETS = 16384  # frozen-table artifact size (SSTable filters)
+PROBE_BATCH = 1024
+SLOTS = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_hash(batch: int) -> str:
+    """hash_batch: (u64[B] keys, u64[1] seed, u32[1] fp_mask) -> 3×u32[B]."""
+    lowered = jax.jit(model.hash_batch).lower(
+        _spec((batch,), U64), _spec((1,), U64), _spec((1,), U32)
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_probe(nbuckets: int, batch: int) -> str:
+    """probe_batch: (u32[nb*4] table, u32[B] fp, u32[B] i1, u32[B] i2) -> u32[B]."""
+    lowered = jax.jit(model.probe_batch).lower(
+        _spec((nbuckets * SLOTS,), U32),
+        _spec((batch,), U32),
+        _spec((batch,), U32),
+        _spec((batch,), U32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_hash_probe(nbuckets: int, batch: int) -> str:
+    """hash_and_probe: fused read path against one frozen table."""
+    lowered = jax.jit(model.hash_and_probe).lower(
+        _spec((batch,), U64),
+        _spec((1,), U64),
+        _spec((1,), U32),
+        _spec((nbuckets * SLOTS,), U32),
+        _spec((1,), U32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+        help="artifacts output directory (or a path inside it)",
+    )
+    args = ap.parse_args()
+    out_dir = args.out
+    # Makefile historically passed artifacts/model.hlo.txt; accept a file
+    # path and use its directory.
+    if out_dir.endswith(".txt"):
+        out_dir = os.path.dirname(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = []
+
+    def emit(name: str, text: str, **meta) -> None:
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entries.append({"file": name, "sha256_16": digest, **meta})
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for b in HASH_BATCH_SIZES:
+        emit(
+            f"hash_b{b}.hlo.txt",
+            lower_hash(b),
+            kind="hash",
+            batch=b,
+            outputs=3,
+        )
+    emit(
+        f"probe_nb{PROBE_NBUCKETS}_b{PROBE_BATCH}.hlo.txt",
+        lower_probe(PROBE_NBUCKETS, PROBE_BATCH),
+        kind="probe",
+        batch=PROBE_BATCH,
+        nbuckets=PROBE_NBUCKETS,
+        outputs=1,
+    )
+    emit(
+        f"hash_probe_nb{PROBE_NBUCKETS}_b{PROBE_BATCH}.hlo.txt",
+        lower_hash_probe(PROBE_NBUCKETS, PROBE_BATCH),
+        kind="hash_probe",
+        batch=PROBE_BATCH,
+        nbuckets=PROBE_NBUCKETS,
+        outputs=4,
+    )
+
+    # manifest.txt: trivially parseable `k=v;k=v` lines for the rust side.
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for e in entries:
+            f.write(";".join(f"{k}={v}" for k, v in e.items()) + "\n")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(entries, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts in {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

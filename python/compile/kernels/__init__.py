@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the OCF fingerprint pipeline.
+
+* ``hash_kernel``  — splitmix64 fingerprint/index hashing over key tiles.
+* ``probe_kernel`` — batched 4-slot bucket membership probe.
+* ``ref``          — pure-jnp oracle both kernels are verified against.
+"""
+
+from . import ref  # noqa: F401
+from .hash_kernel import hash_batch_pallas  # noqa: F401
+from .probe_kernel import probe_batch_pallas  # noqa: F401

@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernel: batched fingerprint hashing.
+
+The ingest hot-spot of the OCF pipeline: for every key in a batch,
+compute the partial-key-cuckoo triple ``(fp, idx_hash, fp_hash)``
+(see ``ref.hash_batch_ref`` for the exact specification).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): keys stream through VMEM
+in 1-D tiles of ``block`` keys via ``BlockSpec``; the body is pure VPU
+element-wise integer work (adds/mults/shifts/xors) — there is no MXU
+work in this paper's hot path, so the roofline is the VPU/HBM one.
+VMEM per grid step: block × (8 B in + 3 × 4 B out) = 20 B/key →
+20 KiB at block=1024, far under the ~16 MiB VMEM budget; double
+buffering of in/out tiles still fits hundreds of blocks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret-mode lowers the kernel to plain HLO so
+the same artifact runs on the rust CPU client (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GOLDEN_GAMMA, MIX32_M1, MIX32_M2, MIX64_M1, MIX64_M2
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+
+DEFAULT_BLOCK = 1024
+
+
+def _hash_tile_kernel(seed_ref, mask_ref, keys_ref, fp_ref, idx_ref, fph_ref):
+    """Kernel body: one VMEM tile of keys -> three u32 tiles.
+
+    The mix chains are written out inline (rather than calling ref.mix64)
+    so the kernel stays self-contained and the VPU sees one straight-line
+    dependency chain per lane.
+    """
+    seed = seed_ref[0]
+    mask = mask_ref[0]
+    z = keys_ref[...] ^ seed
+    # -- mix64 (SplitMix64 next()) --
+    z = z + U64(GOLDEN_GAMMA)
+    z = (z ^ (z >> U64(30))) * U64(MIX64_M1)
+    z = (z ^ (z >> U64(27))) * U64(MIX64_M2)
+    h = z ^ (z >> U64(31))
+    # -- split into fingerprint + primary-index hash --
+    raw_fp = (h >> U64(32)).astype(U32) & mask
+    fp = jnp.where(raw_fp == U32(0), U32(1), raw_fp)
+    idx = (h & U64(0xFFFFFFFF)).astype(U32)
+    # -- mix32 (murmur3 fmix32) of the fingerprint --
+    w = fp
+    w = (w ^ (w >> U32(16))) * U32(MIX32_M1)
+    w = (w ^ (w >> U32(13))) * U32(MIX32_M2)
+    fph = w ^ (w >> U32(16))
+    fp_ref[...] = fp
+    idx_ref[...] = idx
+    fph_ref[...] = fph
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def hash_batch_pallas(keys, seed, fp_mask, *, block: int = DEFAULT_BLOCK):
+    """Pallas-tiled fingerprint pipeline.
+
+    Args:
+      keys:    ``u64[B]`` batch; ``B`` must be a multiple of ``block``
+               (the rust batcher pads to the artifact's batch size).
+      seed:    ``u64[1]`` per-filter seed (kept whole in every tile).
+      fp_mask: ``u32[1]`` fingerprint mask ``(1 << fp_bits) - 1``.
+      block:   tile length (keys per grid step).
+
+    Returns:
+      ``(fp, idx_hash, fp_hash)``, each ``u32[B]``.
+    """
+    keys = jnp.asarray(keys, U64)
+    seed = jnp.asarray(seed, U64).reshape((1,))
+    fp_mask = jnp.asarray(fp_mask, U32).reshape((1,))
+    n = keys.shape[0]
+    block = min(block, n)  # small batches become a single tile
+    if n % block != 0:
+        raise ValueError(f"batch {n} not a multiple of block {block}")
+    grid = (n // block,)
+    out_shape = [
+        jax.ShapeDtypeStruct((n,), U32),
+        jax.ShapeDtypeStruct((n,), U32),
+        jax.ShapeDtypeStruct((n,), U32),
+    ]
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    tile_spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _hash_tile_kernel,
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec, tile_spec],
+        out_specs=[tile_spec, tile_spec, tile_spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(seed, fp_mask, keys)

@@ -1,0 +1,77 @@
+"""Layer-1 Pallas kernel: batched bucket probe (membership test).
+
+Probes a *frozen* bucket table — the serialized form of an immutable
+filter (e.g. the per-SSTable filter written at flush time, whose
+capacity never changes again) — with a batch of pre-hashed queries.
+
+TPU mapping: the table is small enough to pin in VMEM for the whole
+grid (nbuckets × 4 slots × 4 B; 256 KiB at nbuckets=2^14), queries
+stream through in 1-D tiles.  Each grid step gathers the two candidate
+buckets per query and reduces the 4-way slot compare with ``any`` —
+pure VPU work.
+
+``interpret=True`` as everywhere (see hash_kernel.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import SLOTS
+
+U32 = jnp.uint32
+
+DEFAULT_QUERY_BLOCK = 1024
+
+
+def _probe_tile_kernel(table_ref, fp_ref, i1_ref, i2_ref, out_ref):
+    """One tile of queries against the whole (VMEM-resident) table."""
+    table = table_ref[...].reshape(-1, SLOTS)
+    fp = fp_ref[...]
+    i1 = i1_ref[...].astype(jnp.int32)
+    i2 = i2_ref[...].astype(jnp.int32)
+    b1 = table[i1]  # [block, SLOTS] gather
+    b2 = table[i2]
+    hit = jnp.any(b1 == fp[:, None], axis=1) | jnp.any(b2 == fp[:, None], axis=1)
+    out_ref[...] = hit.astype(U32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def probe_batch_pallas(table, fp, i1, i2, *, block: int = DEFAULT_QUERY_BLOCK):
+    """Pallas-tiled batched membership probe.
+
+    Args:
+      table: ``u32[nbuckets * SLOTS]`` frozen bucket table (row-major).
+      fp:    ``u32[B]`` query fingerprints.
+      i1:    ``u32[B]`` primary bucket indices (already masked).
+      i2:    ``u32[B]`` alternate bucket indices (already masked).
+      block: queries per grid step; ``B`` must be a multiple.
+
+    Returns:
+      ``u32[B]`` of 0/1 membership verdicts.
+    """
+    table = jnp.asarray(table, U32)
+    fp = jnp.asarray(fp, U32)
+    i1 = jnp.asarray(i1, U32)
+    i2 = jnp.asarray(i2, U32)
+    n = fp.shape[0]
+    block = min(block, n)  # small batches become a single tile
+    if n % block != 0:
+        raise ValueError(f"batch {n} not a multiple of block {block}")
+    if table.shape[0] % SLOTS != 0:
+        raise ValueError("table length must be a multiple of SLOTS")
+    grid = (n // block,)
+    table_spec = pl.BlockSpec(table.shape, lambda i: (0,))  # whole table, every step
+    tile_spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _probe_tile_kernel,
+        grid=grid,
+        in_specs=[table_spec, tile_spec, tile_spec, tile_spec],
+        out_specs=tile_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(table, fp, i1, i2)

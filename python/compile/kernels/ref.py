@@ -1,0 +1,109 @@
+"""Pure-jnp reference oracle for the OCF fingerprint pipeline.
+
+These are the *specification* implementations the Pallas kernels are
+checked against at build time (pytest), and the bit-exact twins of the
+rust fallback path in ``rust/src/filter/fingerprint.rs``.  Any change
+here MUST be mirrored there (and vice versa) — the integration test
+``rust/tests/runtime_integration.rs`` asserts rust == XLA on random keys.
+
+Hash family
+-----------
+* ``mix64`` — the splitmix64 finalizer with the golden-gamma pre-add,
+  i.e. exactly one ``next()`` step of SplitMix64 seeded with the key:
+  ``mix64(0) == 0xE220A8397B1DCDAF`` (the well-known first SplitMix64
+  output).
+* ``mix32`` — the murmur3 32-bit finalizer (fmix32), used to derive the
+  alternate-bucket displacement from a fingerprint alone (partial-key
+  cuckoo hashing: ``i2 = i1 ^ mix32(fp)``).
+
+All arithmetic is wrapping/unsigned; jax must run with x64 enabled
+(``python/compile/__init__.py`` enforces this).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# SplitMix64 constants (Steele, Lea & Flood 2014).
+GOLDEN_GAMMA = 0x9E3779B97F4A7C15
+MIX64_M1 = 0xBF58476D1CE4E5B9
+MIX64_M2 = 0x94D049BB133111EB
+
+# murmur3 fmix32 constants.
+MIX32_M1 = 0x85EBCA6B
+MIX32_M2 = 0xC2B2AE35
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+
+# Bucket width is frozen at 4 slots (paper §II.B: "recommended value for
+# bucket size is 4") for the serialized/immutable probe path.
+SLOTS = 4
+
+
+def mix64(z):
+    """SplitMix64 next(): wrapping u64 avalanche of ``z``."""
+    z = jnp.asarray(z, U64)
+    z = z + U64(GOLDEN_GAMMA)
+    z = (z ^ (z >> U64(30))) * U64(MIX64_M1)
+    z = (z ^ (z >> U64(27))) * U64(MIX64_M2)
+    return z ^ (z >> U64(31))
+
+
+def mix32(z):
+    """murmur3 fmix32: wrapping u32 avalanche of ``z``."""
+    z = jnp.asarray(z, U32)
+    z = (z ^ (z >> U32(16))) * U32(MIX32_M1)
+    z = (z ^ (z >> U32(13))) * U32(MIX32_M2)
+    return z ^ (z >> U32(16))
+
+
+def hash_batch_ref(keys, seed, fp_mask):
+    """Fingerprint pipeline over a batch of u64 keys.
+
+    Returns ``(fp, idx_hash, fp_hash)`` — all ``u32[B]``:
+
+    * ``fp``       — fingerprint: high 32 bits of ``mix64(key ^ seed)``
+                     masked to ``fp_mask``; 0 is reserved for EMPTY so a
+                     zero fingerprint is remapped to 1.
+    * ``idx_hash`` — low 32 bits of the same hash; the caller masks it
+                     with ``nbuckets - 1`` to get the primary bucket.
+    * ``fp_hash``  — ``mix32(fp)``; the caller computes the alternate
+                     bucket as ``(i1 ^ fp_hash) & (nbuckets - 1)``.
+
+    ``seed`` is a u64 scalar (per-filter seed); ``fp_mask`` a u32 scalar
+    (``(1 << fp_bits) - 1``).  Bit-exact twin of
+    ``rust/src/filter/fingerprint.rs::hash_key``.
+    """
+    keys = jnp.asarray(keys, U64)
+    h = mix64(keys ^ jnp.asarray(seed, U64))
+    raw_fp = (h >> U64(32)).astype(U32) & jnp.asarray(fp_mask, U32)
+    fp = jnp.where(raw_fp == U32(0), U32(1), raw_fp)
+    idx_hash = (h & U64(0xFFFFFFFF)).astype(U32)
+    fp_hash = mix32(fp)
+    return fp, idx_hash, fp_hash
+
+
+def probe_batch_ref(table, fp, i1, i2):
+    """Batched membership probe against a frozen bucket table.
+
+    ``table`` is ``u32[nbuckets * SLOTS]`` (row-major buckets), the
+    serialized form of an immutable (e.g. flushed-SSTable) filter.
+    ``fp/i1/i2`` are ``u32[B]`` (indices already masked to the table).
+    Returns ``u32[B]`` of 0/1: whether the fingerprint is present in
+    either candidate bucket.
+    """
+    table = jnp.asarray(table, U32)
+    fp = jnp.asarray(fp, U32)
+    i1 = jnp.asarray(i1, U32).astype(jnp.int32)
+    i2 = jnp.asarray(i2, U32).astype(jnp.int32)
+    t = table.reshape(-1, SLOTS)
+    b1 = t[i1]  # [B, SLOTS]
+    b2 = t[i2]
+    hit = jnp.any(b1 == fp[:, None], axis=1) | jnp.any(b2 == fp[:, None], axis=1)
+    return hit.astype(U32)
+
+
+def alt_index_ref(i, fp_hash, nbuckets):
+    """Alternate bucket: ``(i ^ mix32(fp)) & (nbuckets-1)`` (power-of-two)."""
+    return (jnp.asarray(i, U32) ^ jnp.asarray(fp_hash, U32)) & U32(nbuckets - 1)

@@ -1,0 +1,53 @@
+"""Layer-2 JAX model: the OCF batched fingerprint pipeline.
+
+This is the compute graph the rust coordinator executes on its hot
+path (via the AOT HLO artifacts).  It composes the Layer-1 Pallas
+kernels into the three entry points the runtime loads:
+
+* ``hash_batch``   — key batch → (fp, idx_hash, fp_hash); used by the
+                     ingest batcher for every insert/lookup/delete batch.
+* ``probe_batch``  — pre-hashed queries × frozen table → membership;
+                     used for batched reads against immutable SSTable
+                     filters.
+* ``hash_and_probe`` — fused hash+probe for the read path against one
+                     frozen table: one round trip instead of two.
+
+Shapes are static per artifact (PJRT AOT requirement); the rust batcher
+pads the tail batch with duplicate keys and trims the outputs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.hash_kernel import hash_batch_pallas
+from .kernels.probe_kernel import probe_batch_pallas
+
+U64 = jnp.uint64
+U32 = jnp.uint32
+
+
+def hash_batch(keys, seed, fp_mask):
+    """Fingerprint pipeline over ``u64[B]`` keys (see kernels.ref)."""
+    return hash_batch_pallas(keys, seed, fp_mask)
+
+
+def probe_batch(table, fp, i1, i2):
+    """Membership of pre-hashed queries in a frozen bucket table."""
+    return (probe_batch_pallas(table, fp, i1, i2),)
+
+
+def hash_and_probe(keys, seed, fp_mask, table, nbuckets_mask):
+    """Fused read path: hash keys, derive both bucket indices for the
+    frozen table (power-of-two sized, ``nbuckets_mask = nbuckets-1``),
+    probe, and also return the triple so the caller can reuse it for
+    memtable-side checks.
+
+    Returns ``(present, fp, i1, i2)``.
+    """
+    fp, idx_hash, fp_hash = hash_batch_pallas(keys, seed, fp_mask)
+    mask = jnp.asarray(nbuckets_mask, U32).reshape(())
+    i1 = idx_hash & mask
+    i2 = (i1 ^ fp_hash) & mask
+    present = probe_batch_pallas(table, fp, i1, i2)
+    return present, fp, i1, i2

@@ -1,0 +1,8 @@
+"""Shared fixtures: make `compile` importable and force x64 first."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import compile  # noqa: E402,F401  (sets jax_enable_x64 before any jax use)

@@ -1,0 +1,84 @@
+"""AOT lowering sanity: HLO text artifacts parse-ready for the rust side."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+
+
+def test_lower_hash_emits_entry():
+    text = aot.lower_hash(256)
+    assert "ENTRY" in text
+    assert "u64[256]" in text  # key batch shape survives lowering
+    assert "u32[256]" in text  # outputs
+
+
+def test_lower_probe_emits_entry():
+    text = aot.lower_probe(64, 64)
+    assert "ENTRY" in text
+    assert f"u32[{64 * aot.SLOTS}]" in text
+
+
+def test_lower_hash_probe_emits_entry():
+    text = aot.lower_hash_probe(64, 64)
+    assert "ENTRY" in text
+
+
+def test_lowered_hash_has_no_custom_calls():
+    """interpret=True must lower pallas to plain HLO — a Mosaic
+    custom-call would be unloadable by the CPU PJRT client."""
+    text = aot.lower_hash(256)
+    assert "custom-call" not in text.lower()
+
+
+def test_emit_to_tmpdir(tmp_path, monkeypatch):
+    """End-to-end: aot.main writes artifacts + manifests."""
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out", str(tmp_path)]
+    )
+    # shrink the workload for test speed
+    monkeypatch.setattr(aot, "HASH_BATCH_SIZES", (256,))
+    monkeypatch.setattr(aot, "PROBE_NBUCKETS", 64)
+    monkeypatch.setattr(aot, "PROBE_BATCH", 64)
+    aot.main()
+    files = sorted(os.listdir(tmp_path))
+    assert "hash_b256.hlo.txt" in files
+    assert "probe_nb64_b64.hlo.txt" in files
+    assert "hash_probe_nb64_b64.hlo.txt" in files
+    assert "manifest.txt" in files and "manifest.json" in files
+    manifest = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    assert len(manifest) == 3
+    for line in manifest:
+        fields = dict(kv.split("=", 1) for kv in line.split(";"))
+        assert {"file", "kind", "batch", "outputs"} <= set(fields)
+        assert (tmp_path / fields["file"]).exists()
+
+
+def test_out_accepts_legacy_file_path(tmp_path, monkeypatch):
+    """Makefile used to pass artifacts/model.hlo.txt — dir is derived."""
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out", str(tmp_path / "model.hlo.txt")]
+    )
+    monkeypatch.setattr(aot, "HASH_BATCH_SIZES", (256,))
+    monkeypatch.setattr(aot, "PROBE_NBUCKETS", 64)
+    monkeypatch.setattr(aot, "PROBE_BATCH", 64)
+    aot.main()
+    assert (tmp_path / "manifest.txt").exists()
+
+
+def test_numeric_roundtrip_through_lowered_fn():
+    """Executing the jitted (pre-lowering) fn equals the oracle — the
+    same computation the artifact freezes."""
+    from compile import model
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, (1 << 64) - 1, size=256, dtype=np.uint64)
+    seed = np.array([123456789], dtype=np.uint64)
+    mask = np.array([0xFFFF], dtype=np.uint32)
+    got = model.hash_batch(keys, seed, mask)
+    want = ref.hash_batch_ref(keys, seed[0], mask[0])
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))

@@ -1,0 +1,140 @@
+"""Pallas hash kernel vs pure-jnp oracle, plus known-answer vectors.
+
+The known-answer constants double as the cross-language contract: the
+same vectors are asserted in rust/src/filter/fingerprint.rs unit tests.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hash_kernel import hash_batch_pallas
+
+MASK64 = (1 << 64) - 1
+MASK32 = (1 << 32) - 1
+
+
+# ---------------------------------------------------------------- python-int
+# plain-integer model of the hash, independent of jax/numpy — a third
+# implementation to triangulate the other two.
+def py_mix64(z: int) -> int:
+    z = (z + ref.GOLDEN_GAMMA) & MASK64
+    z = ((z ^ (z >> 30)) * ref.MIX64_M1) & MASK64
+    z = ((z ^ (z >> 27)) * ref.MIX64_M2) & MASK64
+    return (z ^ (z >> 31)) & MASK64
+
+
+def py_mix32(z: int) -> int:
+    z = ((z ^ (z >> 16)) * ref.MIX32_M1) & MASK32
+    z = ((z ^ (z >> 13)) * ref.MIX32_M2) & MASK32
+    return (z ^ (z >> 16)) & MASK32
+
+
+def py_hash_key(key: int, seed: int, fp_mask: int):
+    h = py_mix64(key ^ seed)
+    raw = (h >> 32) & fp_mask
+    fp = 1 if raw == 0 else raw
+    return fp, h & MASK32, py_mix32(fp)
+
+
+# ------------------------------------------------------------- known answers
+def test_mix64_splitmix_vector():
+    # first output of SplitMix64 seeded with 0 — the canonical vector
+    assert py_mix64(0) == 0xE220A8397B1DCDAF
+    assert int(ref.mix64(np.uint64(0))) == 0xE220A8397B1DCDAF
+
+
+def test_mix64_more_vectors():
+    # SplitMix64 stream seeded 0: state_i = i * gamma
+    expected = [0xE220A8397B1DCDAF, 0x6E789E6AA1B965F4, 0x06C45D188009454F]
+    for i, want in enumerate(expected):
+        state = (i * ref.GOLDEN_GAMMA) & MASK64
+        assert py_mix64(state) == want
+        assert int(ref.mix64(np.uint64(state))) == want
+
+
+def test_mix32_murmur_vector():
+    # fmix32 avalanche of small ints, computed from the reference formula
+    assert py_mix32(0) == 0
+    assert int(ref.mix32(np.uint32(1))) == py_mix32(1)
+    assert int(ref.mix32(np.uint32(0xDEADBEEF))) == py_mix32(0xDEADBEEF)
+
+
+def test_hash_batch_ref_matches_python_ints():
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, MASK64, size=64, dtype=np.uint64)
+    seed, fp_mask = 0x5EED, 0xFFFF
+    fp, idx, fph = ref.hash_batch_ref(keys, np.uint64(seed), np.uint32(fp_mask))
+    for k, f, i, h in zip(keys.tolist(), np.asarray(fp), np.asarray(idx), np.asarray(fph)):
+        pf, pi, ph = py_hash_key(k, seed, fp_mask)
+        assert (int(f), int(i), int(h)) == (pf, pi, ph)
+
+
+def test_zero_fingerprint_remapped():
+    # find a key whose raw fp is 0 for a tiny mask, check remap to 1
+    seed, fp_mask = 0, 0x1
+    keys = np.arange(0, 4096, dtype=np.uint64)
+    fp, _, _ = ref.hash_batch_ref(keys, np.uint64(seed), np.uint32(fp_mask))
+    fp = np.asarray(fp)
+    raw = [(py_mix64(int(k)) >> 32) & fp_mask for k in keys]
+    assert any(r == 0 for r in raw), "test needs at least one zero raw fp"
+    assert (fp >= 1).all() and (fp <= 1).all()  # mask 0x1 → everything is 1
+
+
+# --------------------------------------------------------- pallas-vs-ref
+@pytest.mark.parametrize("block", [256, 1024])
+@pytest.mark.parametrize("nblocks", [1, 2, 4])
+def test_pallas_matches_ref_shapes(block, nblocks):
+    rng = np.random.default_rng(block + nblocks)
+    n = block * nblocks
+    keys = rng.integers(0, MASK64, size=n, dtype=np.uint64)
+    seed = np.uint64(rng.integers(0, MASK64, dtype=np.uint64))
+    mask = np.uint32(0xFFFF)
+    want = ref.hash_batch_ref(keys, seed, mask)
+    got = hash_batch_pallas(keys, np.array([seed]), np.array([mask]), block=block)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=MASK64),
+    fp_bits=st.sampled_from([4, 8, 12, 16, 24, 32]),
+    data=st.data(),
+)
+def test_pallas_matches_ref_hypothesis(seed, fp_bits, data):
+    """Hypothesis sweep: random seeds, fingerprint widths, key batches."""
+    n = data.draw(st.sampled_from([64, 128, 256]))
+    keys = np.array(
+        data.draw(
+            st.lists(
+                st.integers(min_value=0, max_value=MASK64), min_size=n, max_size=n
+            )
+        ),
+        dtype=np.uint64,
+    )
+    fp_mask = np.uint32((1 << fp_bits) - 1 if fp_bits < 32 else MASK32)
+    want = ref.hash_batch_ref(keys, np.uint64(seed), fp_mask)
+    got = hash_batch_pallas(
+        keys, np.array([seed], dtype=np.uint64), np.array([fp_mask]), block=64
+    )
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+
+
+def test_pallas_rejects_ragged_batch():
+    keys = np.zeros(100, dtype=np.uint64)
+    with pytest.raises(ValueError, match="not a multiple"):
+        hash_batch_pallas(
+            keys, np.zeros(1, np.uint64), np.full(1, 0xFFFF, np.uint32), block=64
+        )
+
+
+def test_seed_changes_everything():
+    keys = np.arange(1024, dtype=np.uint64)
+    a = ref.hash_batch_ref(keys, np.uint64(1), np.uint32(0xFFFF))
+    b = ref.hash_batch_ref(keys, np.uint64(2), np.uint32(0xFFFF))
+    # different seeds must decorrelate fingerprints almost everywhere
+    same = (np.asarray(a[0]) == np.asarray(b[0])).mean()
+    assert same < 0.05

@@ -1,0 +1,14 @@
+//! Bench target for E2 / paper Fig 2: per-trial throughput of EOF, PRE
+//! and the traditional cuckoo filter. `cargo bench --bench fig2_throughput`.
+
+use ocf::exp::{fig2, Scale};
+
+fn main() {
+    let scale: f64 = std::env::var("OCF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2);
+    let t0 = std::time::Instant::now();
+    println!("{}", fig2::run(Scale(scale)));
+    eprintln!("fig2 completed in {:.1}s (scale {scale})", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,14 @@
+//! Bench target for E3 / paper Fig 3: capacity trendlines EOF vs PRE.
+//! `cargo bench --bench fig3_trendlines`.
+
+use ocf::exp::{fig3, Scale};
+
+fn main() {
+    let scale: f64 = std::env::var("OCF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2);
+    let t0 = std::time::Instant::now();
+    println!("{}", fig3::run(Scale(scale)));
+    eprintln!("fig3 completed in {:.1}s (scale {scale})", t0.elapsed().as_secs_f64());
+}

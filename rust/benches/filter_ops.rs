@@ -1,0 +1,138 @@
+//! Micro-benchmarks of the filter family's core ops (the L3 hot path):
+//! insert / positive lookup / negative lookup / delete across OCF
+//! modes and baselines. This is the bench behind the paper's "high
+//! throughput, low latency" framing and the §Perf L3 targets.
+
+use ocf::bench_harness::{render_table, Bench, BenchConfig};
+use ocf::filter::scalable_bloom::SbfParams;
+use ocf::filter::{
+    BloomFilter, CuckooFilter, CuckooParams, FlatTable, MembershipFilter, Mode, Ocf, OcfConfig,
+    PackedTable, ScalableBloomFilter, XorFilter,
+};
+use std::time::Duration;
+
+const N: usize = 100_000;
+
+fn cfg() -> BenchConfig {
+    BenchConfig {
+        warmup: Duration::from_millis(150),
+        measure: Duration::from_millis(600),
+        batch: 64,
+    }
+}
+
+fn bench_filter(name: &str, mut mk: impl FnMut() -> Box<dyn MembershipFilter>) -> Vec<ocf::bench_harness::BenchReport> {
+    let mut reports = Vec::new();
+
+    // insert throughput (rotating key stream into a pre-warmed filter,
+    // deleting behind itself so occupancy stays put)
+    let mut f = mk();
+    for k in 0..N as u64 {
+        f.insert(k).unwrap();
+    }
+    let supports_delete = f.delete(0);
+    if supports_delete {
+        f.insert(0).unwrap();
+        let mut next = N as u64;
+        let mut evict = 0u64;
+        reports.push(Bench::with_config(format!("{name}/insert+delete"), cfg()).run(|| {
+            let _ = f.insert(next);
+            f.delete(evict);
+            next += 1;
+            evict += 1;
+        }));
+    } else {
+        let mut f2 = mk();
+        let mut next = 0u64;
+        reports.push(Bench::with_config(format!("{name}/insert"), cfg()).run(|| {
+            let _ = f2.insert(next);
+            next += 1;
+        }));
+    }
+
+    // positive lookups
+    let f = {
+        let mut f = mk();
+        for k in 0..N as u64 {
+            f.insert(k).unwrap();
+        }
+        f
+    };
+    let mut k = 0u64;
+    reports.push(Bench::with_config(format!("{name}/lookup-hit"), cfg()).run(|| {
+        std::hint::black_box(f.contains(k % N as u64));
+        k += 1;
+    }));
+    let mut k = 0u64;
+    reports.push(Bench::with_config(format!("{name}/lookup-miss"), cfg()).run(|| {
+        std::hint::black_box(f.contains((1 << 42) + k));
+        k += 1;
+    }));
+    reports
+}
+
+fn main() {
+    let mut all = Vec::new();
+
+    all.extend(bench_filter("ocf-eof", || {
+        Box::new(Ocf::new(OcfConfig {
+            mode: Mode::Eof,
+            initial_capacity: N * 2,
+            ..OcfConfig::default()
+        }))
+    }));
+    all.extend(bench_filter("ocf-pre", || {
+        Box::new(Ocf::new(OcfConfig {
+            mode: Mode::Pre,
+            initial_capacity: N * 2,
+            ..OcfConfig::default()
+        }))
+    }));
+    all.extend(bench_filter("cuckoo-flat", || {
+        Box::new(CuckooFilter::<FlatTable>::new(CuckooParams {
+            capacity: N * 2,
+            ..CuckooParams::default()
+        }))
+    }));
+    all.extend(bench_filter("cuckoo-packed", || {
+        Box::new(CuckooFilter::<PackedTable>::new(CuckooParams {
+            capacity: N * 2,
+            ..CuckooParams::default()
+        }))
+    }));
+    all.extend(bench_filter("bloom", || {
+        Box::new(BloomFilter::new(N, 0.01, 0xB))
+    }));
+    all.extend(bench_filter("scalable-bloom", || {
+        Box::new(ScalableBloomFilter::new(
+            SbfParams {
+                initial_capacity: N,
+                ..SbfParams::default()
+            },
+            0x5B,
+        ))
+    }));
+
+    // xor (static): lookups only
+    let keys: Vec<u64> = (0..N as u64).collect();
+    let xf = XorFilter::build(&keys, 7);
+    let mut k = 0u64;
+    all.push(
+        Bench::with_config("xor/lookup-hit", cfg()).run(|| {
+            std::hint::black_box(xf.contains(k % N as u64));
+            k += 1;
+        }),
+    );
+    let mut k = 0u64;
+    all.push(
+        Bench::with_config("xor/lookup-miss", cfg()).run(|| {
+            std::hint::black_box(xf.contains((1 << 42) + k));
+            k += 1;
+        }),
+    );
+
+    println!("{}", render_table("filter_ops — core op micro-benchmarks", &all));
+    for r in &all {
+        println!("{}", r.render());
+    }
+}

@@ -1,0 +1,83 @@
+//! E9 — end-to-end pipeline bench: workload → batcher → hash executor
+//! (XLA artifacts when built, native otherwise) → OCF apply.
+//! `cargo bench --bench pipeline_e2e`.
+//!
+//! Reports ops/s and batch latency for a matrix of batch sizes ×
+//! executor paths — the headline throughput/latency numbers of the
+//! reproduction (DESIGN.md §Perf L3 target) plus remaining experiment
+//! drivers (E5–E8) at bench scale.
+
+use ocf::exp::{ablation, burst, cartesian, safety, sweep, Scale};
+use ocf::filter::{MembershipFilter, Ocf, OcfConfig};
+use ocf::pipeline::{BatchPolicy, IngestPipeline};
+use ocf::runtime::{HashExecutor, PjrtEngine};
+use ocf::workload::{KeyDist, MixGenerator, OpMix};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn run_pipeline(label: &str, executor: HashExecutor, batch: usize, ops: usize) {
+    let mut filter = Ocf::new(OcfConfig {
+        initial_capacity: 1 << 16,
+        ..OcfConfig::default()
+    });
+    let mut pipeline = IngestPipeline::new(
+        BatchPolicy {
+            max_batch: batch,
+            max_delay: Duration::from_micros(500),
+        },
+        executor,
+    );
+    let mut gen = MixGenerator::new(KeyDist::uniform(1 << 40), OpMix::new(0.5, 0.4, 0.1), 0xE2E);
+    let report = pipeline.run((0..ops).map(|_| gen.next_op()), &mut filter);
+    println!(
+        "| {label} | batch={batch} | {} | p50 {} ns/batch | p99 {} ns/batch |",
+        ocf::util::fmt_rate(report.ops_per_sec()),
+        report.batch_latency_ns.quantile(0.5),
+        report.batch_latency_ns.quantile(0.99),
+    );
+    assert!(filter.len() > 0);
+}
+
+fn main() {
+    let ops: usize = std::env::var("OCF_BENCH_OPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000_000);
+    println!("\n## pipeline_e2e — ingest pipeline throughput ({ops} ops)\n");
+    println!("| path | batch | throughput | p50 | p99 |");
+    println!("|---|---|---|---|---|");
+
+    let engine = PjrtEngine::load_dir("artifacts").ok().flatten().map(Arc::new);
+    for &batch in &[256usize, 1024, 4096] {
+        let hasher = Ocf::new(OcfConfig::default()).hasher();
+        run_pipeline("native", HashExecutor::native(hasher), batch, ops);
+        if let Some(engine) = &engine {
+            run_pipeline(
+                "xla",
+                HashExecutor::with_engine(engine.clone(), hasher),
+                batch,
+                ops,
+            );
+        }
+    }
+    if engine.is_none() {
+        println!("| xla | - | (skipped: no artifacts/ — run `make artifacts`) | - | - |");
+    }
+
+    // the remaining experiment drivers at bench scale
+    let scale: f64 = std::env::var("OCF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    for (name, f) in [
+        ("sweep", sweep::run as fn(Scale) -> String),
+        ("safety", safety::run),
+        ("burst", burst::run),
+        ("cartesian", cartesian::run),
+        ("ablation", ablation::run),
+    ] {
+        let t0 = std::time::Instant::now();
+        println!("{}", f(Scale(scale)));
+        eprintln!("{name} completed in {:.1}s", t0.elapsed().as_secs_f64());
+    }
+}

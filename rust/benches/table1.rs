@@ -1,0 +1,17 @@
+//! Bench target for E1 / paper Table I: regenerates the occupancy &
+//! false-positive comparison (EOF vs PRE). `cargo bench --bench table1`.
+//!
+//! Scale via OCF_BENCH_SCALE (default 0.1 → 100k keys; 1.0 = the
+//! paper's 1M).
+
+use ocf::exp::{table1, Scale};
+
+fn main() {
+    let scale: f64 = std::env::var("OCF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let t0 = std::time::Instant::now();
+    println!("{}", table1::run(Scale(scale)));
+    eprintln!("table1 completed in {:.1}s (scale {scale})", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,221 @@
+//! Benchmark harness: the warmup/measure/percentile engine behind every
+//! `cargo bench` target (the environment has no `criterion`; this
+//! provides the same discipline — warmup, calibrated iteration counts,
+//! outlier-resistant statistics — in-crate; DESIGN.md §substitutions).
+//!
+//! ```no_run
+//! use ocf::bench_harness::Bench;
+//!
+//! let mut b = Bench::new("lookup");
+//! let report = b.run(|| {
+//!     // one measured operation (or batch)
+//! });
+//! println!("{}", report.render());
+//! ```
+
+use crate::metrics::Histogram;
+use std::time::{Duration, Instant};
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Wallclock budget for warmup.
+    pub warmup: Duration,
+    /// Wallclock budget for measurement.
+    pub measure: Duration,
+    /// Ops executed per timed sample (amortizes timer overhead).
+    pub batch: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            batch: 1,
+        }
+    }
+}
+
+/// One benchmark.
+pub struct Bench {
+    name: String,
+    cfg: BenchConfig,
+}
+
+/// Benchmark outcome.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    /// Total measured operations.
+    pub ops: u64,
+    /// Wallclock of the measure phase.
+    pub elapsed: Duration,
+    /// Per-op latency distribution (ns; per *sample*/batch if batch>1,
+    /// already divided back to per-op).
+    pub latency_ns: Histogram,
+}
+
+impl BenchReport {
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            0.0
+        } else {
+            self.ops as f64 / self.elapsed.as_secs_f64()
+        }
+    }
+
+    /// One-line human rendering.
+    pub fn render(&self) -> String {
+        let s = self.latency_ns.summary();
+        format!(
+            "{:<32} {:>14}  p50={:>7}ns p99={:>8}ns  (n={})",
+            self.name,
+            crate::util::fmt_rate(self.ops_per_sec()),
+            s.p50,
+            s.p99,
+            self.ops,
+        )
+    }
+
+    /// Machine-readable CSV row: name,ops,secs,opsps,p50,p90,p99.
+    pub fn csv_row(&self) -> String {
+        let s = self.latency_ns.summary();
+        format!(
+            "{},{},{:.6},{:.1},{},{},{}",
+            self.name,
+            self.ops,
+            self.elapsed.as_secs_f64(),
+            self.ops_per_sec(),
+            s.p50,
+            s.p90,
+            s.p99
+        )
+    }
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            cfg: BenchConfig::default(),
+        }
+    }
+
+    pub fn with_config(name: impl Into<String>, cfg: BenchConfig) -> Self {
+        Self {
+            name: name.into(),
+            cfg,
+        }
+    }
+
+    /// Run: warmup for the configured budget, then measure.
+    pub fn run(&mut self, mut op: impl FnMut()) -> BenchReport {
+        // warmup
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.cfg.warmup {
+            op();
+        }
+        // measure
+        let mut hist = Histogram::new();
+        let mut ops = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.cfg.measure {
+            let t0 = Instant::now();
+            for _ in 0..self.cfg.batch {
+                op();
+            }
+            let dt = t0.elapsed().as_nanos() as u64 / self.cfg.batch;
+            hist.record(dt);
+            ops += self.cfg.batch;
+        }
+        BenchReport {
+            name: self.name.clone(),
+            ops,
+            elapsed: start.elapsed(),
+            latency_ns: hist,
+        }
+    }
+
+    /// Measure a closure that processes `n` items per call (throughput
+    /// benches over batches).
+    pub fn run_batched(&mut self, items_per_call: u64, mut op: impl FnMut()) -> BenchReport {
+        let saved = self.cfg.batch;
+        self.cfg.batch = 1;
+        let mut rep = self.run(&mut op);
+        self.cfg.batch = saved;
+        rep.ops *= items_per_call;
+        rep
+    }
+}
+
+/// Render a markdown table from reports (bench binaries print these so
+/// `cargo bench | tee bench_output.txt` is the artifact).
+pub fn render_table(title: &str, reports: &[BenchReport]) -> String {
+    let mut out = format!("\n## {title}\n\n");
+    out.push_str("| benchmark | throughput | p50 | p99 |\n");
+    out.push_str("|---|---|---|---|\n");
+    for r in reports {
+        let s = r.latency_ns.summary();
+        out.push_str(&format!(
+            "| {} | {} | {} ns | {} ns |\n",
+            r.name,
+            crate::util::fmt_rate(r.ops_per_sec()),
+            s.p50,
+            s.p99
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            batch: 10,
+        }
+    }
+
+    #[test]
+    fn measures_something() {
+        let mut x = 0u64;
+        let rep = Bench::with_config("spin", fast_cfg()).run(|| {
+            x = x.wrapping_add(1);
+        });
+        assert!(rep.ops > 100, "ops={}", rep.ops);
+        assert!(rep.ops_per_sec() > 0.0);
+        assert!(rep.latency_ns.count() > 0);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn report_renders() {
+        let rep = Bench::with_config("r", fast_cfg()).run(|| {});
+        let line = rep.render();
+        assert!(line.contains("r"));
+        assert!(line.contains("ops"));
+        let csv = rep.csv_row();
+        assert_eq!(csv.split(',').count(), 7);
+    }
+
+    #[test]
+    fn batched_scales_ops() {
+        let rep = Bench::with_config("b", fast_cfg()).run_batched(100, || {});
+        let base = Bench::with_config("b2", fast_cfg()).run(|| {});
+        // batched report claims ~100× the op count for same wallclock
+        assert!(rep.ops > base.ops / 10);
+    }
+
+    #[test]
+    fn table_renders_rows() {
+        let r1 = Bench::with_config("one", fast_cfg()).run(|| {});
+        let r2 = Bench::with_config("two", fast_cfg()).run(|| {});
+        let t = render_table("T", &[r1, r2]);
+        assert!(t.contains("| one |"));
+        assert!(t.contains("| two |"));
+    }
+}

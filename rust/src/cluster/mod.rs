@@ -1,0 +1,19 @@
+//! The distributed layer: consistent-hash ring, request router,
+//! replication, and the query coordinator for the paper's §I.B
+//! cartesian-product workload.
+//!
+//! The "data-center" is simulated in-process: N [`StorageNode`]s behind
+//! a [`Router`], with per-node op accounting so experiments can report
+//! the fan-out asymmetries the paper describes ("the number of look-ups
+//! on the node containing T is much greater"). Replication is
+//! RF-way with filter-first quorum reads.
+
+pub mod coordinator;
+pub mod replication;
+pub mod ring;
+pub mod router;
+
+pub use coordinator::{CartesianQuery, Coordinator, QueryStats};
+pub use replication::ReplicationConfig;
+pub use ring::HashRing;
+pub use router::{Cluster, RouterStats};

@@ -1,0 +1,74 @@
+//! Replication configuration and quorum math.
+
+/// Replication settings for a cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicationConfig {
+    /// Replication factor (copies per key).
+    pub rf: usize,
+    /// Read consistency level: how many replicas must answer.
+    pub read_consistency: Consistency,
+    /// Write consistency level.
+    pub write_consistency: Consistency,
+}
+
+/// Consistency levels (Cassandra-style subset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Consistency {
+    One,
+    Quorum,
+    All,
+}
+
+impl Consistency {
+    /// Number of replicas that must participate for `rf` copies.
+    pub fn required(&self, rf: usize) -> usize {
+        match self {
+            Consistency::One => 1,
+            Consistency::Quorum => rf / 2 + 1,
+            Consistency::All => rf,
+        }
+    }
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        Self {
+            rf: 3,
+            read_consistency: Consistency::One,
+            write_consistency: Consistency::Quorum,
+        }
+    }
+}
+
+impl ReplicationConfig {
+    pub fn none() -> Self {
+        Self {
+            rf: 1,
+            read_consistency: Consistency::One,
+            write_consistency: Consistency::One,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quorum_math() {
+        assert_eq!(Consistency::Quorum.required(3), 2);
+        assert_eq!(Consistency::Quorum.required(5), 3);
+        assert_eq!(Consistency::Quorum.required(1), 1);
+        assert_eq!(Consistency::One.required(3), 1);
+        assert_eq!(Consistency::All.required(3), 3);
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let c = ReplicationConfig::default();
+        assert_eq!(c.rf, 3);
+        assert_eq!(c.write_consistency.required(c.rf), 2);
+        let n = ReplicationConfig::none();
+        assert_eq!(n.rf, 1);
+    }
+}

@@ -1,0 +1,141 @@
+//! Consistent-hash ring with virtual nodes.
+//!
+//! Standard Cassandra-style token ring: each physical node owns
+//! `vnodes` tokens placed by hashing `(node_id, vnode_index)`; a key
+//! routes to the first token clockwise from `mix64(key)`, and the next
+//! RF-1 *distinct* nodes clockwise are its replicas.
+
+use crate::filter::fingerprint::mix64;
+
+/// Token ring over physical node ids.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// (token, node_id), sorted by token.
+    tokens: Vec<(u64, usize)>,
+    nodes: usize,
+}
+
+impl HashRing {
+    pub fn new(nodes: usize, vnodes: usize) -> Self {
+        assert!(nodes > 0 && vnodes > 0);
+        let mut tokens = Vec::with_capacity(nodes * vnodes);
+        for n in 0..nodes {
+            for v in 0..vnodes {
+                let token = mix64(((n as u64) << 32) | v as u64 ^ 0x51A7_ED00);
+                tokens.push((token, n));
+            }
+        }
+        tokens.sort_unstable();
+        tokens.dedup_by_key(|t| t.0);
+        Self { tokens, nodes }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes
+    }
+
+    /// Primary owner of a key.
+    pub fn primary(&self, key: u64) -> usize {
+        self.walk(key).next().unwrap()
+    }
+
+    /// The first `rf` *distinct* nodes clockwise from the key's token.
+    pub fn replicas(&self, key: u64, rf: usize) -> Vec<usize> {
+        let rf = rf.min(self.nodes);
+        let mut out = Vec::with_capacity(rf);
+        for n in self.walk(key) {
+            if !out.contains(&n) {
+                out.push(n);
+                if out.len() == rf {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Clockwise node walk starting at the key's token.
+    fn walk(&self, key: u64) -> impl Iterator<Item = usize> + '_ {
+        let h = mix64(key);
+        let start = self.tokens.partition_point(|&(t, _)| t < h);
+        (0..self.tokens.len()).map(move |i| self.tokens[(start + i) % self.tokens.len()].1)
+    }
+
+    /// Fraction of a large key sample owned by each node (balance
+    /// diagnostic).
+    pub fn ownership(&self, sample: u64) -> Vec<f64> {
+        let mut counts = vec![0u64; self.nodes];
+        for k in 0..sample {
+            counts[self.primary(k)] += 1;
+        }
+        counts
+            .into_iter()
+            .map(|c| c as f64 / sample as f64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_are_stable() {
+        let ring = HashRing::new(5, 64);
+        for k in 0..1000u64 {
+            assert_eq!(ring.primary(k), ring.primary(k));
+        }
+    }
+
+    #[test]
+    fn ownership_roughly_balanced() {
+        let ring = HashRing::new(4, 128);
+        let shares = ring.ownership(40_000);
+        for (n, s) in shares.iter().enumerate() {
+            assert!(
+                (0.15..0.35).contains(s),
+                "node {n} owns {s} (expect ~0.25)"
+            );
+        }
+    }
+
+    #[test]
+    fn replicas_distinct_and_sized() {
+        let ring = HashRing::new(5, 32);
+        for k in 0..500u64 {
+            let r = ring.replicas(k, 3);
+            assert_eq!(r.len(), 3);
+            let set: std::collections::HashSet<_> = r.iter().collect();
+            assert_eq!(set.len(), 3, "replicas must be distinct nodes");
+            assert_eq!(r[0], ring.primary(k), "first replica is the primary");
+        }
+    }
+
+    #[test]
+    fn rf_capped_at_cluster_size() {
+        let ring = HashRing::new(2, 16);
+        assert_eq!(ring.replicas(1, 5).len(), 2);
+    }
+
+    #[test]
+    fn single_node_ring() {
+        let ring = HashRing::new(1, 8);
+        for k in 0..100u64 {
+            assert_eq!(ring.primary(k), 0);
+        }
+    }
+
+    #[test]
+    fn more_vnodes_improve_balance() {
+        let coarse = HashRing::new(4, 2).ownership(20_000);
+        let fine = HashRing::new(4, 256).ownership(20_000);
+        let spread = |v: &[f64]| {
+            v.iter().cloned().fold(f64::MIN, f64::max)
+                - v.iter().cloned().fold(f64::MAX, f64::min)
+        };
+        assert!(
+            spread(&fine) < spread(&coarse),
+            "fine {fine:?} vs coarse {coarse:?}"
+        );
+    }
+}

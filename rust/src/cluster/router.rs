@@ -1,0 +1,214 @@
+//! The cluster: N storage nodes behind a consistent-hash router.
+//!
+//! In-process simulation of the data-center the paper targets: each op
+//! routes to its replica set; per-node op counts expose the fan-out
+//! asymmetries of §I.B. The router is also where the membership-filter
+//! economics show up cluster-wide: a read whose replica filter says
+//! "absent" never touches that node's SSTables.
+
+use super::replication::ReplicationConfig;
+use super::ring::HashRing;
+use crate::store::{NodeConfig, StorageNode};
+use crate::workload::Op;
+
+/// Router-level counters.
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    pub ops_routed: u64,
+    /// Per-node op counts (fan-out visibility).
+    pub per_node_ops: Vec<u64>,
+}
+
+/// An in-process cluster.
+#[derive(Debug)]
+pub struct Cluster {
+    ring: HashRing,
+    nodes: Vec<StorageNode>,
+    repl: ReplicationConfig,
+    pub stats: RouterStats,
+}
+
+impl Cluster {
+    /// Build `n` nodes from a config template (node_id/seed are
+    /// specialized per node so filters are independent).
+    pub fn new(n: usize, vnodes: usize, template: NodeConfig, repl: ReplicationConfig) -> Self {
+        let nodes = (0..n)
+            .map(|i| {
+                let mut cfg = template;
+                cfg.node_id = i as u64;
+                cfg.filter.seed = template.filter.seed ^ ((i as u64 + 1) << 17);
+                StorageNode::new(cfg)
+            })
+            .collect();
+        Self {
+            ring: HashRing::new(n, vnodes),
+            nodes,
+            repl,
+            stats: RouterStats {
+                ops_routed: 0,
+                per_node_ops: vec![0; n],
+            },
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, i: usize) -> &StorageNode {
+        &self.nodes[i]
+    }
+
+    pub fn node_mut(&mut self, i: usize) -> &mut StorageNode {
+        &mut self.nodes[i]
+    }
+
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    /// Write to all RF replicas (the write consistency level governs
+    /// how many must succeed; in-process nodes never fail, so this is
+    /// an accounting distinction surfaced for experiments).
+    pub fn put(&mut self, key: u64) -> Result<(), crate::filter::FilterError> {
+        self.stats.ops_routed += 1;
+        let replicas = self.ring.replicas(key, self.repl.rf);
+        // consistency is computed over the *achievable* replica set —
+        // a 1-node cluster with rf=3 has quorum 1, not 2
+        let need = self.repl.write_consistency.required(replicas.len());
+        let mut ok = 0;
+        let mut last_err = None;
+        for &n in &replicas {
+            self.stats.per_node_ops[n] += 1;
+            match self.nodes[n].put(key) {
+                Ok(()) => ok += 1,
+                Err(e) => last_err = Some(e),
+            }
+        }
+        if ok >= need {
+            Ok(())
+        } else {
+            Err(last_err.expect("failed write must carry an error"))
+        }
+    }
+
+    /// Verified delete across replicas.
+    pub fn delete(&mut self, key: u64) -> bool {
+        self.stats.ops_routed += 1;
+        let replicas = self.ring.replicas(key, self.repl.rf);
+        let mut any = false;
+        for &n in &replicas {
+            self.stats.per_node_ops[n] += 1;
+            any |= self.nodes[n].delete(key);
+        }
+        any
+    }
+
+    /// Read at the configured consistency: consult up to `required`
+    /// replicas, first positive wins (membership semantics).
+    pub fn get(&mut self, key: u64) -> bool {
+        self.stats.ops_routed += 1;
+        let replicas = self.ring.replicas(key, self.repl.rf);
+        let need = self.repl.read_consistency.required(replicas.len());
+        for &n in replicas.iter().take(need.max(1)) {
+            self.stats.per_node_ops[n] += 1;
+            if self.nodes[n].get(key) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Apply a workload op.
+    pub fn apply(&mut self, op: Op) -> bool {
+        match op {
+            Op::Insert(k) => self.put(k).is_ok(),
+            Op::Lookup(k) => self.get(k),
+            Op::Delete(k) => self.delete(k),
+        }
+    }
+
+    /// Sum of filter memory across nodes.
+    pub fn filter_memory_bytes(&self) -> usize {
+        self.nodes.iter().map(|n| n.filter_memory_bytes()).sum()
+    }
+
+    /// Aggregate flush counts (premature, total).
+    pub fn flush_counts(&self) -> (u64, u64) {
+        let premature = self.nodes.iter().map(|n| n.stats.flushes_premature).sum();
+        let total = self.nodes.iter().map(|n| n.stats.flushes).sum();
+        (premature, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::FlushPolicy;
+
+    fn cluster(n: usize, rf: usize) -> Cluster {
+        Cluster::new(
+            n,
+            32,
+            NodeConfig {
+                flush: FlushPolicy::small(10_000),
+                ..NodeConfig::default()
+            },
+            ReplicationConfig {
+                rf,
+                ..ReplicationConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn put_get_across_cluster() {
+        let mut c = cluster(4, 2);
+        for k in 0..2000u64 {
+            c.put(k).unwrap();
+        }
+        for k in 0..2000u64 {
+            assert!(c.get(k), "{k}");
+        }
+        assert!(!c.get(999_999));
+    }
+
+    #[test]
+    fn replication_writes_rf_copies() {
+        let mut c = cluster(4, 3);
+        c.put(42).unwrap();
+        let holders = (0..4).filter(|&i| c.node(i).live_keys() > 0).count();
+        assert_eq!(holders, 3, "rf=3 must store 3 copies");
+    }
+
+    #[test]
+    fn delete_removes_from_all_replicas() {
+        let mut c = cluster(3, 3);
+        c.put(7).unwrap();
+        assert!(c.delete(7));
+        assert!(!c.get(7));
+        for i in 0..3 {
+            assert_eq!(c.node(i).live_keys(), 0);
+        }
+        assert!(!c.delete(7), "second delete rejected everywhere");
+    }
+
+    #[test]
+    fn per_node_ops_accumulate() {
+        let mut c = cluster(3, 1);
+        for k in 0..300u64 {
+            c.put(k).unwrap();
+        }
+        let total: u64 = c.stats.per_node_ops.iter().sum();
+        assert_eq!(total, 300, "rf=1 → one node op per put");
+        assert!(c.stats.per_node_ops.iter().all(|&x| x > 50), "{:?}", c.stats.per_node_ops);
+    }
+
+    #[test]
+    fn single_node_cluster_degenerates_gracefully() {
+        let mut c = cluster(1, 3);
+        c.put(1).unwrap();
+        assert!(c.get(1));
+        assert!(c.delete(1));
+    }
+}

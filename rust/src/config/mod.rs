@@ -1,0 +1,214 @@
+//! Configuration: a TOML-subset file format + CLI overrides.
+//!
+//! The offline build has no `serde`/`toml`, so [`parser`] implements
+//! the subset real deployments need: `[section]` headers, `key = value`
+//! with string/int/float/bool values, comments. [`OcfFileConfig`] maps
+//! the parsed tree onto the typed configs of the filter, store and
+//! pipeline layers; every field has a default so a partial file (or no
+//! file) works. CLI `--set section.key=value` overrides come last.
+
+pub mod parser;
+
+pub use parser::{ConfigError, ConfigTree, Value};
+
+use crate::filter::{Mode, OcfConfig};
+use crate::store::{FlushPolicy, NodeConfig};
+
+/// Typed application config assembled from file + overrides.
+#[derive(Debug, Clone)]
+pub struct OcfFileConfig {
+    pub filter: OcfConfig,
+    pub node: NodeConfig,
+    /// Cluster shape.
+    pub nodes: usize,
+    pub vnodes: usize,
+    pub rf: usize,
+    /// Pipeline shape.
+    pub batch_size: usize,
+    pub queue_depth: usize,
+    /// Artifacts directory for the PJRT runtime.
+    pub artifacts_dir: String,
+}
+
+impl Default for OcfFileConfig {
+    fn default() -> Self {
+        Self {
+            filter: OcfConfig::default(),
+            node: NodeConfig::default(),
+            nodes: 3,
+            vnodes: 64,
+            rf: 1,
+            batch_size: 1024,
+            queue_depth: 64,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl OcfFileConfig {
+    /// Build from a parsed tree (missing keys keep defaults).
+    pub fn from_tree(tree: &ConfigTree) -> Result<Self, ConfigError> {
+        let mut cfg = Self::default();
+
+        if let Some(mode) = tree.get_str("filter", "mode")? {
+            cfg.filter.mode = match mode.as_str() {
+                "pre" => Mode::Pre,
+                "eof" => Mode::Eof,
+                "static" => Mode::Static,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "filter.mode must be pre|eof|static, got '{other}'"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = tree.get_int("filter", "initial_capacity")? {
+            cfg.filter.initial_capacity = v as usize;
+        }
+        if let Some(v) = tree.get_int("filter", "fp_bits")? {
+            cfg.filter.fp_bits = v as u32;
+        }
+        if let Some(v) = tree.get_int("filter", "max_displacements")? {
+            cfg.filter.max_displacements = v as u32;
+        }
+        if let Some(v) = tree.get_int("filter", "seed")? {
+            cfg.filter.seed = v as u64;
+        }
+        if let Some(v) = tree.get_float("filter", "o_min")? {
+            cfg.filter.o_min = v;
+        }
+        if let Some(v) = tree.get_float("filter", "o_max")? {
+            cfg.filter.o_max = v;
+        }
+        if let Some(v) = tree.get_float("filter", "k_min")? {
+            cfg.filter.k_min = v;
+        }
+        if let Some(v) = tree.get_float("filter", "k_max")? {
+            cfg.filter.k_max = v;
+        }
+        if let Some(v) = tree.get_float("filter", "g")? {
+            cfg.filter.g = v;
+        }
+        if let Some(v) = tree.get_int("filter", "min_capacity")? {
+            cfg.filter.min_capacity = v as usize;
+        }
+        if let Some(v) = tree.get_int("filter", "max_capacity")? {
+            cfg.filter.max_capacity = Some(v as usize);
+        }
+        if let Some(v) = tree.get_bool("filter", "verify_deletes")? {
+            cfg.filter.verify_deletes = v;
+        }
+
+        if let Some(v) = tree.get_int("store", "max_memtable_keys")? {
+            cfg.node.flush.max_memtable_keys = v as usize;
+        }
+        if let Some(v) = tree.get_int("store", "max_memtable_bytes")? {
+            cfg.node.flush.max_memtable_bytes = v as usize;
+        }
+        if let Some(v) = tree.get_float("store", "filter_pressure")? {
+            cfg.node.flush = FlushPolicy {
+                filter_pressure: Some(v),
+                ..cfg.node.flush
+            };
+        }
+        if let Some(v) = tree.get_int("store", "max_sstables")? {
+            cfg.node.compaction.max_tables = v as usize;
+        }
+
+        if let Some(v) = tree.get_int("cluster", "nodes")? {
+            cfg.nodes = v as usize;
+        }
+        if let Some(v) = tree.get_int("cluster", "vnodes")? {
+            cfg.vnodes = v as usize;
+        }
+        if let Some(v) = tree.get_int("cluster", "rf")? {
+            cfg.rf = v as usize;
+        }
+
+        if let Some(v) = tree.get_int("pipeline", "batch_size")? {
+            cfg.batch_size = v as usize;
+        }
+        if let Some(v) = tree.get_int("pipeline", "queue_depth")? {
+            cfg.queue_depth = v as usize;
+        }
+        if let Some(v) = tree.get_str("runtime", "artifacts_dir")? {
+            cfg.artifacts_dir = v;
+        }
+
+        cfg.node.filter = cfg.filter;
+        Ok(cfg)
+    }
+
+    /// Parse file text + apply `section.key=value` CLI overrides.
+    pub fn load(text: &str, overrides: &[String]) -> Result<Self, ConfigError> {
+        let mut tree = ConfigTree::parse(text)?;
+        for ov in overrides {
+            tree.apply_override(ov)?;
+        }
+        Self::from_tree(&tree)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_without_file() {
+        let cfg = OcfFileConfig::load("", &[]).unwrap();
+        assert_eq!(cfg.nodes, 3);
+        assert_eq!(cfg.filter.mode, Mode::Eof);
+    }
+
+    #[test]
+    fn full_file_parses() {
+        let text = r#"
+# OCF config
+[filter]
+mode = "pre"
+initial_capacity = 8192
+fp_bits = 12
+o_min = 0.25
+o_max = 0.8
+verify_deletes = false
+
+[store]
+max_memtable_keys = 5000
+filter_pressure = 0.8
+
+[cluster]
+nodes = 5
+rf = 3
+
+[pipeline]
+batch_size = 4096
+"#;
+        let cfg = OcfFileConfig::load(text, &[]).unwrap();
+        assert_eq!(cfg.filter.mode, Mode::Pre);
+        assert_eq!(cfg.filter.initial_capacity, 8192);
+        assert_eq!(cfg.filter.fp_bits, 12);
+        assert!(!cfg.filter.verify_deletes);
+        assert_eq!(cfg.node.flush.max_memtable_keys, 5000);
+        assert_eq!(cfg.node.flush.filter_pressure, Some(0.8));
+        assert_eq!(cfg.nodes, 5);
+        assert_eq!(cfg.rf, 3);
+        assert_eq!(cfg.batch_size, 4096);
+        // node filter config mirrors the filter section
+        assert_eq!(cfg.node.filter.fp_bits, 12);
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let text = "[cluster]\nnodes = 2\n";
+        let cfg =
+            OcfFileConfig::load(text, &["cluster.nodes=7".into(), "filter.mode=static".into()])
+                .unwrap();
+        assert_eq!(cfg.nodes, 7);
+        assert_eq!(cfg.filter.mode, Mode::Static);
+    }
+
+    #[test]
+    fn bad_mode_rejected() {
+        assert!(OcfFileConfig::load("[filter]\nmode = \"warp\"\n", &[]).is_err());
+    }
+}

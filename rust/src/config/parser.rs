@@ -1,0 +1,249 @@
+//! TOML-subset parser: sections, scalar `key = value` pairs, comments.
+//!
+//! Supported values: `"strings"`, integers (decimal, underscores ok),
+//! floats, booleans. Arrays/tables-in-tables/dates are not — config for
+//! this system doesn't need them (and the environment has no `toml`
+//! crate; see DESIGN.md §substitutions).
+
+use std::collections::BTreeMap;
+
+/// Parse/typing errors.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ConfigError {
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("type error: {0}")]
+    Type(String),
+    #[error("invalid value: {0}")]
+    Invalid(String),
+}
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str, line: usize) -> Result<Self, ConfigError> {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            return Err(ConfigError::Parse {
+                line,
+                msg: "empty value".into(),
+            });
+        }
+        if let Some(stripped) = raw.strip_prefix('"') {
+            let inner = stripped.strip_suffix('"').ok_or(ConfigError::Parse {
+                line,
+                msg: "unterminated string".into(),
+            })?;
+            return Ok(Value::Str(inner.to_string()));
+        }
+        match raw {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        let cleaned = raw.replace('_', "");
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        // bare words act as strings (lenient; also covers enum-ish values)
+        if raw.chars().all(|c| c.is_alphanumeric() || c == '-' || c == '_') {
+            return Ok(Value::Str(raw.to_string()));
+        }
+        Err(ConfigError::Parse {
+            line,
+            msg: format!("cannot parse value '{raw}'"),
+        })
+    }
+}
+
+/// Parsed config: section → key → value.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigTree {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl ConfigTree {
+    /// Parse file text.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut tree = ConfigTree::default();
+        let mut section = String::new();
+        for (i, raw_line) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = match raw_line.find('#') {
+                Some(p) if !raw_line[..p].contains('"') => &raw_line[..p],
+                _ => raw_line,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner.strip_suffix(']').ok_or(ConfigError::Parse {
+                    line: line_no,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                tree.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or(ConfigError::Parse {
+                line: line_no,
+                msg: format!("expected key = value, got '{line}'"),
+            })?;
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(ConfigError::Parse {
+                    line: line_no,
+                    msg: "empty key".into(),
+                });
+            }
+            let value = Value::parse(value, line_no)?;
+            tree.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(tree)
+    }
+
+    /// Apply a `section.key=value` override string.
+    pub fn apply_override(&mut self, spec: &str) -> Result<(), ConfigError> {
+        let (path, raw) = spec.split_once('=').ok_or_else(|| {
+            ConfigError::Invalid(format!("override '{spec}' must be section.key=value"))
+        })?;
+        let (section, key) = path.split_once('.').ok_or_else(|| {
+            ConfigError::Invalid(format!("override path '{path}' must be section.key"))
+        })?;
+        let value = Value::parse(raw, 0)?;
+        self.sections
+            .entry(section.trim().to_string())
+            .or_default()
+            .insert(key.trim().to_string(), value);
+        Ok(())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<Option<String>, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Str(s)) => Ok(Some(s.clone())),
+            Some(v) => Err(ConfigError::Type(format!(
+                "{section}.{key}: expected string, got {v:?}"
+            ))),
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Result<Option<i64>, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Int(i)) => Ok(Some(*i)),
+            Some(v) => Err(ConfigError::Type(format!(
+                "{section}.{key}: expected integer, got {v:?}"
+            ))),
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Result<Option<f64>, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Float(f)) => Ok(Some(*f)),
+            Some(Value::Int(i)) => Ok(Some(*i as f64)), // ints widen
+            Some(v) => Err(ConfigError::Type(format!(
+                "{section}.{key}: expected float, got {v:?}"
+            ))),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Bool(b)) => Ok(Some(*b)),
+            Some(v) => Err(ConfigError::Type(format!(
+                "{section}.{key}: expected bool, got {v:?}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let t = ConfigTree::parse(
+            "[s]\na = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = 1_000_000\nf = bare-word\n",
+        )
+        .unwrap();
+        assert_eq!(t.get_int("s", "a").unwrap(), Some(1));
+        assert_eq!(t.get_float("s", "b").unwrap(), Some(2.5));
+        assert_eq!(t.get_str("s", "c").unwrap(), Some("hi".into()));
+        assert_eq!(t.get_bool("s", "d").unwrap(), Some(true));
+        assert_eq!(t.get_int("s", "e").unwrap(), Some(1_000_000));
+        assert_eq!(t.get_str("s", "f").unwrap(), Some("bare-word".into()));
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let t = ConfigTree::parse("# top\n\n[s]\n a = 1  # trailing\n").unwrap();
+        assert_eq!(t.get_int("s", "a").unwrap(), Some(1));
+    }
+
+    #[test]
+    fn keys_before_any_section_live_in_root() {
+        let t = ConfigTree::parse("x = 5\n[s]\ny = 6\n").unwrap();
+        assert_eq!(t.get_int("", "x").unwrap(), Some(5));
+        assert_eq!(t.get_int("s", "y").unwrap(), Some(6));
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let t = ConfigTree::parse("[s]\na = \"text\"\n").unwrap();
+        assert!(t.get_int("s", "a").is_err());
+        assert!(t.get_bool("s", "a").is_err());
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let t = ConfigTree::parse("[s]\na = 3\n").unwrap();
+        assert_eq!(t.get_float("s", "a").unwrap(), Some(3.0));
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = ConfigTree::parse("[s]\nnot-a-kv\n").unwrap_err();
+        match err {
+            ConfigError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("{other:?}"),
+        }
+        let err = ConfigTree::parse("[unterminated\n").unwrap_err();
+        assert!(matches!(err, ConfigError::Parse { line: 1, .. }));
+    }
+
+    #[test]
+    fn overrides_create_and_replace() {
+        let mut t = ConfigTree::parse("[s]\na = 1\n").unwrap();
+        t.apply_override("s.a=2").unwrap();
+        t.apply_override("new.k=3.5").unwrap();
+        assert_eq!(t.get_int("s", "a").unwrap(), Some(2));
+        assert_eq!(t.get_float("new", "k").unwrap(), Some(3.5));
+        assert!(t.apply_override("malformed").is_err());
+        assert!(t.apply_override("nodots=1").is_err());
+    }
+
+    #[test]
+    fn missing_returns_none() {
+        let t = ConfigTree::parse("").unwrap();
+        assert_eq!(t.get_int("a", "b").unwrap(), None);
+    }
+}

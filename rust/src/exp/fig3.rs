@@ -1,0 +1,169 @@
+//! E3 — Fig 3: capacity trendlines of EOF vs PRE over trials.
+//!
+//! Same drive as Fig 2 plus a delete phase, recording capacity `c(t)`:
+//! PRE's doubling staircase overshoots demand and shrinks in slow 10%
+//! steps; EOF's EWMA growth tracks demand ("EOF tends to maintain
+//! optimality by utilizing maximum possible space").
+
+use super::report::{f, Table};
+use super::Scale;
+use crate::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+
+const FULL_TRIALS: usize = 2_500;
+const INSERTS_PER_TRIAL: usize = 400;
+
+/// Capacity trace point.
+#[derive(Debug, Clone)]
+pub struct TrendPoint {
+    pub trial: usize,
+    pub len: usize,
+    pub capacity: usize,
+    pub occupancy: f64,
+}
+
+/// Drive inserts then deletes; record capacity every `stride` trials.
+pub fn run_arm(mode: Mode, trials: usize, stride: usize, seed: u64) -> Vec<TrendPoint> {
+    let mut filter = Ocf::new(OcfConfig {
+        mode,
+        initial_capacity: 4096,
+        seed,
+        ..OcfConfig::default()
+    });
+    let mut out = Vec::new();
+    let mut next_key = 0u64;
+    // half inserts, half deletes: the delete phase fully drains the
+    // filter so both shrink paths (PRE's 10% steps, EOF's c·α) show up
+    // in the trendline.
+    let insert_trials = trials / 2;
+    for trial in 0..trials {
+        if trial < insert_trials {
+            for _ in 0..INSERTS_PER_TRIAL {
+                filter.insert(next_key).expect("dynamic arm insert");
+                next_key += 1;
+            }
+        } else {
+            // delete phase: drain the oldest keys
+            let start = (trial - insert_trials) as u64 * INSERTS_PER_TRIAL as u64;
+            for i in 0..INSERTS_PER_TRIAL as u64 {
+                let k = start + i;
+                if k < next_key {
+                    filter.delete(k);
+                }
+            }
+        }
+        if trial % stride == 0 || trial == trials - 1 {
+            out.push(TrendPoint {
+                trial,
+                len: filter.len(),
+                capacity: filter.capacity(),
+                occupancy: filter.occupancy(),
+            });
+        }
+    }
+    out
+}
+
+/// Full experiment.
+pub fn run(scale: Scale) -> String {
+    let trials = scale.n(FULL_TRIALS, 90);
+    let stride = (trials / 15).max(1);
+    let eof = run_arm(Mode::Eof, trials, stride, 0xF16_3);
+    let pre = run_arm(Mode::Pre, trials, stride, 0xF16_3);
+
+    let mut t = Table::new(
+        format!("E3 / Fig 3 — capacity trendlines ({trials} trials; inserts then deletes)"),
+        &[
+            "Trial",
+            "Live keys",
+            "EOF capacity",
+            "PRE capacity",
+            "EOF occ",
+            "PRE occ",
+            "PRE/EOF cap",
+        ],
+    );
+    for i in 0..eof.len() {
+        t.row(&[
+            eof[i].trial.to_string(),
+            eof[i].len.to_string(),
+            eof[i].capacity.to_string(),
+            pre[i].capacity.to_string(),
+            f(eof[i].occupancy, 2),
+            f(pre[i].occupancy, 2),
+            f(pre[i].capacity as f64 / eof[i].capacity as f64, 2),
+        ]);
+    }
+    // Trendline comparison over the *insert phase* (the delete phase is
+    // mostly quiet-band for both arms, which dilutes the growth-dynamics
+    // signal the paper's figure is about). Peak ratios at one stop point
+    // are staircase-luck: PRE's overshoot at any instant is uniform in
+    // [1, 2]×, EOF's in [1, 1+α]× — the mean is the robust statistic.
+    let half = eof.len() / 2;
+    let mean_occ = |v: &[TrendPoint]| {
+        let pts = &v[v.len().min(2)..half.max(3)];
+        pts.iter().map(|p| p.occupancy).sum::<f64>() / pts.len().max(1) as f64
+    };
+    let peak_eof = eof.iter().map(|p| p.capacity).max().unwrap();
+    let peak_pre = pre.iter().map(|p| p.capacity).max().unwrap();
+    t.note(format!(
+        "shape check (insert phase): mean occupancy EOF {:.2} vs PRE {:.2} \
+         (paper trendline: EOF 'maintains optimality by utilizing maximum \
+         possible space'; PRE staircase overshoots — 'consumes almost twice \
+         as much space' at 1M). peak capacity PRE/EOF at this scale = {:.2}× \
+         (single-point peaks carry staircase variance; run --scale 1.0 for \
+         the paper's regime).",
+        mean_occ(&eof),
+        mean_occ(&pre),
+        peak_pre as f64 / peak_eof as f64,
+    ));
+    t.markdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eof_tracks_demand_tighter_than_pre() {
+        let eof = run_arm(Mode::Eof, 120, 1, 7);
+        let pre = run_arm(Mode::Pre, 120, 1, 7);
+        let mean_occ = |v: &[TrendPoint]| {
+            // skip warmup trials where both are at min capacity
+            let tail = &v[20..];
+            tail.iter().map(|p| p.occupancy).sum::<f64>() / tail.len() as f64
+        };
+        assert!(
+            mean_occ(&eof) > mean_occ(&pre),
+            "EOF must run denser: {} vs {}",
+            mean_occ(&eof),
+            mean_occ(&pre)
+        );
+    }
+
+    #[test]
+    fn capacity_never_below_live_keys() {
+        for mode in [Mode::Eof, Mode::Pre] {
+            for p in run_arm(mode, 90, 1, 9) {
+                assert!(p.capacity >= p.len, "{mode:?}: c={} s={}", p.capacity, p.len);
+                assert!(p.occupancy <= 0.91, "{mode:?}: occ={}", p.occupancy);
+            }
+        }
+    }
+
+    #[test]
+    fn delete_phase_shrinks_both() {
+        for mode in [Mode::Eof, Mode::Pre] {
+            let pts = run_arm(mode, 150, 1, 11);
+            let peak = pts.iter().map(|p| p.capacity).max().unwrap();
+            let last = pts.last().unwrap().capacity;
+            assert!(last < peak, "{mode:?} must shrink: peak={peak} last={last}");
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let md = run(Scale(0.04));
+        assert!(md.contains("Fig 3"));
+        assert!(md.contains("trendline"));
+    }
+}

@@ -1,0 +1,99 @@
+//! Experiment drivers: one module per paper table/figure + extensions.
+//!
+//! | id | paper artifact | module |
+//! |----|----------------|--------|
+//! | E1 | Table I (occupancy & false positives, EOF vs PRE) | [`table1`] |
+//! | E2 | Fig 2 (throughput: EOF vs PRE vs traditional)     | [`fig2`]   |
+//! | E3 | Fig 3 (capacity trendlines EOF vs PRE)            | [`fig3`]   |
+//! | E4 | §III key-size sweep 10k…1M                        | [`sweep`]  |
+//! | E5 | §II/§IV safety: false negatives & unsafe deletes  | [`safety`] |
+//! | E6 | §I.A burst tolerance / premature flushes          | [`burst`]  |
+//! | E7 | §I.B cartesian-product query fan-out              | [`cartesian`] |
+//! | E8 | ablations (g, fp_bits, k-band)                    | [`ablation`] |
+//!
+//! Every driver takes a [`Scale`] so the same code serves quick checks
+//! (`--scale 0.01`), CI, and full paper-scale runs, and returns a
+//! markdown report (printed by the CLI; benches re-use the same
+//! functions).
+
+pub mod ablation;
+pub mod burst;
+pub mod cartesian;
+pub mod fig2;
+pub mod fig3;
+pub mod report;
+pub mod safety;
+pub mod sweep;
+pub mod table1;
+
+pub use report::Table;
+
+/// Scales every experiment's workload (1.0 = paper scale).
+#[derive(Debug, Clone, Copy)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    pub fn full() -> Self {
+        Scale(1.0)
+    }
+
+    /// Scale an op/key count, keeping a sane floor.
+    pub fn n(&self, full: usize, floor: usize) -> usize {
+        ((full as f64 * self.0) as usize).max(floor)
+    }
+}
+
+/// Run one experiment (or `all`) by name; returns the markdown report.
+pub fn run(name: &str, scale: Scale) -> Result<String, String> {
+    let one = |n: &str| -> Result<String, String> {
+        match n {
+            "table1" => Ok(table1::run(scale)),
+            "fig2" => Ok(fig2::run(scale)),
+            "fig3" => Ok(fig3::run(scale)),
+            "sweep" => Ok(sweep::run(scale)),
+            "safety" => Ok(safety::run(scale)),
+            "burst" => Ok(burst::run(scale)),
+            "cartesian" => Ok(cartesian::run(scale)),
+            "ablation" => Ok(ablation::run(scale)),
+            other => Err(format!(
+                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation all)"
+            )),
+        }
+    };
+    if name == "all" {
+        let mut out = String::new();
+        for n in [
+            "table1",
+            "fig2",
+            "fig3",
+            "sweep",
+            "safety",
+            "burst",
+            "cartesian",
+            "ablation",
+        ] {
+            out.push_str(&one(n)?);
+            out.push('\n');
+        }
+        Ok(out)
+    } else {
+        one(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_math() {
+        assert_eq!(Scale(1.0).n(1000, 10), 1000);
+        assert_eq!(Scale(0.001).n(1000, 10), 10);
+        assert_eq!(Scale(0.5).n(1000, 10), 500);
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(run("nope", Scale(0.01)).is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! E4 — §III key-size sweep: 10k … 1M keys, all filter arms.
+//!
+//! "We ran our implementation on different key sizes ranging from
+//! 10000 - 1000000. We test both the modes of OCF for throughput and
+//! accuracy." Extended with the baselines the paper positions against:
+//! traditional cuckoo (sized for the workload — the favourable case),
+//! bloom, scalable bloom, and the static xor filter.
+
+use super::report::{f, Table};
+use super::Scale;
+use crate::filter::scalable_bloom::SbfParams;
+use crate::filter::{
+    BloomFilter, MembershipFilter, Mode, Ocf, OcfConfig, ScalableBloomFilter, XorFilter,
+};
+use std::time::Instant;
+
+const FULL_SIZES: [usize; 5] = [10_000, 30_000, 100_000, 300_000, 1_000_000];
+const PROBES: usize = 100_000;
+
+/// One (filter, size) measurement.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub filter: String,
+    pub n: usize,
+    pub build_mops: f64,
+    pub lookup_mops: f64,
+    pub fp_rate: f64,
+    pub memory_bytes: usize,
+    pub bits_per_key: f64,
+}
+
+fn measure_dynamic(name: &str, filter: &mut dyn MembershipFilter, n: usize) -> SweepRow {
+    let t0 = Instant::now();
+    for k in 0..n as u64 {
+        filter.insert(k).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+    let build = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
+
+    let t1 = Instant::now();
+    let lookups = n.min(PROBES);
+    let mut hits = 0u64;
+    for k in 0..lookups as u64 {
+        if filter.contains(k) {
+            hits += 1;
+        }
+    }
+    let lookup = lookups as f64 / t1.elapsed().as_secs_f64() / 1e6;
+    assert_eq!(hits as usize, lookups, "{name}: false negatives!");
+
+    let mut fps = 0u64;
+    for k in 0..PROBES as u64 {
+        if filter.contains((1 << 41) + k) {
+            fps += 1;
+        }
+    }
+    SweepRow {
+        filter: name.to_string(),
+        n,
+        build_mops: build,
+        lookup_mops: lookup,
+        fp_rate: fps as f64 / PROBES as f64,
+        memory_bytes: filter.memory_bytes(),
+        bits_per_key: filter.memory_bytes() as f64 * 8.0 / n as f64,
+    }
+}
+
+fn measure_xor(n: usize) -> SweepRow {
+    let keys: Vec<u64> = (0..n as u64).collect();
+    let t0 = Instant::now();
+    let xf = XorFilter::build(&keys, 0x50_50);
+    let build = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    let t1 = Instant::now();
+    let mut hits = 0;
+    for &k in keys.iter().take(PROBES) {
+        if xf.contains(k) {
+            hits += 1;
+        }
+    }
+    assert_eq!(hits, keys.len().min(PROBES));
+    let lookup = keys.len().min(PROBES) as f64 / t1.elapsed().as_secs_f64() / 1e6;
+    let mut fps = 0u64;
+    for k in 0..PROBES as u64 {
+        if xf.contains((1 << 41) + k) {
+            fps += 1;
+        }
+    }
+    SweepRow {
+        filter: "xor (static)".into(),
+        n,
+        build_mops: build,
+        lookup_mops: lookup,
+        fp_rate: fps as f64 / PROBES as f64,
+        memory_bytes: xf.memory_bytes(),
+        bits_per_key: xf.bits_per_key(),
+    }
+}
+
+/// All arms at one size.
+pub fn run_size(n: usize) -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    for mode in [Mode::Eof, Mode::Pre] {
+        let mut ocf = Ocf::new(OcfConfig {
+            mode,
+            initial_capacity: 4096,
+            ..OcfConfig::default()
+        });
+        rows.push(measure_dynamic(
+            &format!("ocf-{}", mode.as_str()),
+            &mut ocf,
+            n,
+        ));
+    }
+    // traditional cuckoo pre-sized for n (its favourable configuration)
+    let mut trad = Ocf::new(OcfConfig {
+        mode: Mode::Static,
+        initial_capacity: n * 2,
+        ..OcfConfig::default()
+    });
+    rows.push(measure_dynamic("cuckoo (pre-sized)", &mut trad, n));
+    let mut bloom = BloomFilter::new(n, 0.01, 0xB100);
+    rows.push(measure_dynamic("bloom (1% target)", &mut bloom, n));
+    let mut sbf = ScalableBloomFilter::new(
+        SbfParams {
+            initial_capacity: 4096,
+            fpr: 0.01,
+            ..SbfParams::default()
+        },
+        0x5BF,
+    );
+    rows.push(measure_dynamic("scalable-bloom", &mut sbf, n));
+    rows.push(measure_xor(n));
+    rows
+}
+
+/// Full sweep.
+pub fn run(scale: Scale) -> String {
+    let mut t = Table::new(
+        "E4 — key-size sweep (10k…1M), all filter arms",
+        &[
+            "Filter",
+            "Keys",
+            "Build Mops/s",
+            "Lookup Mops/s",
+            "FP rate",
+            "Memory",
+            "Bits/key",
+        ],
+    );
+    for &full_n in &FULL_SIZES {
+        let n = scale.n(full_n, 5_000);
+        for row in run_size(n) {
+            t.row(&[
+                row.filter.clone(),
+                row.n.to_string(),
+                f(row.build_mops, 2),
+                f(row.lookup_mops, 2),
+                format!("{:.2e}", row.fp_rate),
+                crate::util::fmt_bytes(row.memory_bytes),
+                f(row.bits_per_key, 1),
+            ]);
+        }
+    }
+    t.note(
+        "paper §II: 'The traditional Cuckoo filter provides higher lookup \
+         performance than Bloom Filters, it also consumes less space provided \
+         the false positive rate remains below 3%' — compare cuckoo vs bloom \
+         lookup columns; xor is the static floor line.",
+    );
+    t.markdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_arms_measured_no_false_negatives() {
+        let rows = run_size(8_000);
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(r.build_mops > 0.0, "{}", r.filter);
+            assert!(r.lookup_mops > 0.0, "{}", r.filter);
+            assert!(r.fp_rate < 0.05, "{}: {}", r.filter, r.fp_rate);
+        }
+    }
+
+    #[test]
+    fn cuckoo_lookup_faster_than_bloom() {
+        // the paper's §II claim, at moderate scale (averaged over 3 runs
+        // to reduce timer noise on a 1-vCPU container)
+        let score = |name: &str| -> f64 {
+            (0..3)
+                .map(|_| {
+                    run_size(20_000)
+                        .into_iter()
+                        .find(|r| r.filter.starts_with(name))
+                        .unwrap()
+                        .lookup_mops
+                })
+                .sum::<f64>()
+                / 3.0
+        };
+        let cuckoo = score("cuckoo");
+        let bloom = score("bloom");
+        assert!(
+            cuckoo > bloom * 0.8,
+            "cuckoo {cuckoo} must not trail bloom {bloom} badly"
+        );
+    }
+
+    #[test]
+    fn report_renders() {
+        let md = run(Scale(0.01));
+        assert!(md.contains("E4"));
+        assert!(md.contains("xor"));
+    }
+}

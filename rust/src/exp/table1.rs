@@ -1,0 +1,163 @@
+//! E1 — Table I: occupancy and average false positives, EOF vs PRE.
+//!
+//! Protocol (reconstructed from §III): insert N keys (paper: 1M; the
+//! prose for the table says 100k — we run the scaled N and report
+//! both the per-round FP count and the rate), then probe `ROUNDS`
+//! batches of held-out keys and report the mean false-positive count
+//! per round plus the final occupancy.
+//!
+//! Expected shape (paper Table I): EOF occupancy ≫ PRE (≈0.74 vs
+//! ≈0.47 — PRE's doubling overshoots, EOF tracks demand); PRE slightly
+//! fewer FPs *because* it wastes ~2× the memory (FPR ∝ occupancy).
+
+use super::report::{f, Table};
+use super::Scale;
+use crate::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+
+const FULL_KEYS: usize = 1_000_000;
+const ROUNDS: usize = 100;
+const PROBES_PER_ROUND: usize = 10_000;
+
+/// One arm's measurements.
+#[derive(Debug, Clone)]
+pub struct Arm {
+    pub mode: Mode,
+    pub occupancy: f64,
+    /// Mean occupancy sampled along the insert trajectory — the
+    /// staircase-robust version of the single-point number (PRE's final
+    /// occupancy depends on where N lands on its doubling staircase;
+    /// the paper's 1M lands at 0.477).
+    pub mean_occupancy: f64,
+    pub avg_false_positives: f64,
+    pub fp_rate: f64,
+    pub capacity: usize,
+    pub memory_bytes: usize,
+    pub resizes: u64,
+}
+
+/// Run one arm at `n` keys.
+pub fn run_arm(mode: Mode, n: usize, fp_bits: u32, seed: u64) -> Arm {
+    let mut filter = Ocf::new(OcfConfig {
+        mode,
+        fp_bits,
+        initial_capacity: 4096,
+        min_capacity: 1024,
+        seed,
+        ..OcfConfig::default()
+    });
+    let sample_every = (n / 1000).max(1) as u64;
+    let (mut occ_sum, mut occ_n) = (0.0, 0u64);
+    for k in 0..n as u64 {
+        filter
+            .insert(k)
+            .unwrap_or_else(|e| panic!("{mode:?} insert {k}: {e}"));
+        if k % sample_every == sample_every - 1 {
+            occ_sum += filter.occupancy();
+            occ_n += 1;
+        }
+    }
+    // held-out probes: keys disjoint from the inserted range
+    let mut fp_total = 0u64;
+    for round in 0..ROUNDS {
+        let base = (1u64 << 40) + (round * PROBES_PER_ROUND) as u64;
+        for i in 0..PROBES_PER_ROUND as u64 {
+            if filter.contains(base + i) {
+                fp_total += 1;
+            }
+        }
+    }
+    let probes = (ROUNDS * PROBES_PER_ROUND) as f64;
+    Arm {
+        mode,
+        occupancy: filter.occupancy(),
+        mean_occupancy: occ_sum / occ_n.max(1) as f64,
+        avg_false_positives: fp_total as f64 / ROUNDS as f64,
+        fp_rate: fp_total as f64 / probes,
+        capacity: filter.capacity(),
+        memory_bytes: filter.memory_bytes(),
+        resizes: filter.stats().resizes(),
+    }
+}
+
+/// Full experiment: both arms, markdown report.
+pub fn run(scale: Scale) -> String {
+    let n = scale.n(FULL_KEYS, 20_000);
+    // fp_bits=12 puts the absolute FP-per-round numbers in the same
+    // regime as the paper's 32–49 (see DESIGN.md E1); the *shape*
+    // (EOF > PRE occupancy, PRE < EOF false positives) is fp_bits-
+    // independent.
+    let fp_bits = 12;
+    let eof = run_arm(Mode::Eof, n, fp_bits, 0x7AB1E1);
+    let pre = run_arm(Mode::Pre, n, fp_bits, 0x7AB1E1);
+
+    let mut t = Table::new(
+        format!("E1 / Table I — occupancy & false positives after {n} keys"),
+        &[
+            "Mode",
+            "Occupancy",
+            "Mean occ (trajectory)",
+            "Avg FP / round (10k probes)",
+            "FP rate",
+            "Capacity",
+            "Filter memory",
+            "Resizes",
+        ],
+    );
+    for arm in [&eof, &pre] {
+        t.row(&[
+            arm.mode.as_str().to_uppercase(),
+            f(arm.occupancy, 2),
+            f(arm.mean_occupancy, 2),
+            f(arm.avg_false_positives, 1),
+            format!("{:.2e}", arm.fp_rate),
+            arm.capacity.to_string(),
+            crate::util::fmt_bytes(arm.memory_bytes),
+            arm.resizes.to_string(),
+        ]);
+    }
+    t.note(format!(
+        "paper Table I: EOF occ 0.74 / 49 FPs, PRE occ 0.47 / 32 FPs. \
+         shape check: EOF/PRE trajectory-mean occupancy ratio = {:.2} \
+         (paper's final-point ratio at 1M: 1.57), \
+         PRE memory / EOF memory = {:.2}",
+        eof.mean_occupancy / pre.mean_occupancy,
+        pre.memory_bytes as f64 / eof.memory_bytes as f64
+    ));
+    t.markdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper_at_small_scale() {
+        let eof = run_arm(Mode::Eof, 30_000, 12, 1);
+        let pre = run_arm(Mode::Pre, 30_000, 12, 1);
+        // Table I shape: EOF denser than PRE along the trajectory
+        // (final-point occupancy depends on where N lands on PRE's
+        // doubling staircase — 30k lands sparse, which also matches)
+        assert!(
+            eof.mean_occupancy > pre.mean_occupancy,
+            "eof={} pre={}",
+            eof.mean_occupancy,
+            pre.mean_occupancy
+        );
+        assert!(
+            eof.occupancy > pre.occupancy,
+            "at 30k PRE lands sparse: eof={} pre={}",
+            eof.occupancy,
+            pre.occupancy
+        );
+        // FP rate tracks occupancy (PRE ≤ EOF at this scale)
+        assert!(pre.fp_rate <= eof.fp_rate * 1.1);
+    }
+
+    #[test]
+    fn report_renders() {
+        let md = run(Scale(0.02));
+        assert!(md.contains("Table I"));
+        assert!(md.contains("EOF"));
+        assert!(md.contains("PRE"));
+    }
+}

@@ -1,0 +1,319 @@
+//! Bloom filter baselines.
+//!
+//! * [`BloomFilter`] — the classic k-hash bloom filter Cassandra uses
+//!   for SSTable membership (paper §I.B). No deletes — the limitation
+//!   the paper leads with (§II: "A limitation of the conventional bloom
+//!   filters is that it does not support deletes").
+//! * [`CountingBloomFilter`] — the standard delete-capable extension
+//!   (4-bit counters); included because the paper notes "the Hash Table
+//!   based approach makes it less space-efficient" — experiments can
+//!   quantify that 4× blowup directly.
+//!
+//! Both use double hashing `h_i = h1 + i·h2` (Kirsch–Mitzenmacher) from
+//! the crate's `mix64`, so no extra hash family is needed.
+
+use super::fingerprint::mix64;
+use super::{FilterError, MembershipFilter};
+
+/// Compute (m bits, k hashes) for `n` expected items at `fpr` target.
+pub fn optimal_params(n: usize, fpr: f64) -> (usize, u32) {
+    assert!(n > 0 && fpr > 0.0 && fpr < 1.0);
+    let ln2 = std::f64::consts::LN_2;
+    let m = (-(n as f64) * fpr.ln() / (ln2 * ln2)).ceil() as usize;
+    let k = ((m as f64 / n as f64) * ln2).round().max(1.0) as u32;
+    (m.max(64), k)
+}
+
+#[inline(always)]
+fn hash_pair(key: u64, seed: u64) -> (u64, u64) {
+    let h1 = mix64(key ^ seed);
+    let h2 = mix64(h1) | 1; // odd stride
+    (h1, h2)
+}
+
+/// Classic bloom filter (no deletes).
+#[derive(Debug, Clone)]
+pub struct BloomFilter {
+    bits: Vec<u64>,
+    m: usize,
+    k: u32,
+    seed: u64,
+    len: usize,
+}
+
+impl BloomFilter {
+    /// Sized for `n` expected items at target false-positive rate `fpr`.
+    pub fn new(n: usize, fpr: f64, seed: u64) -> Self {
+        let (m, k) = optimal_params(n, fpr);
+        Self::with_params(m, k, seed)
+    }
+
+    pub fn with_params(m: usize, k: u32, seed: u64) -> Self {
+        assert!(m >= 64 && k >= 1);
+        Self {
+            bits: vec![0u64; (m + 63) / 64],
+            m,
+            k,
+            seed,
+            len: 0,
+        }
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    #[inline(always)]
+    fn set_bit(&mut self, i: usize) {
+        self.bits[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline(always)]
+    fn get_bit(&self, i: usize) -> bool {
+        self.bits[i >> 6] & (1u64 << (i & 63)) != 0
+    }
+
+    /// Fraction of set bits (saturation diagnostic).
+    pub fn fill_ratio(&self) -> f64 {
+        let set: u64 = self.bits.iter().map(|w| w.count_ones() as u64).sum();
+        set as f64 / self.m as f64
+    }
+}
+
+impl MembershipFilter for BloomFilter {
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        let (h1, h2) = hash_pair(key, self.seed);
+        for i in 0..self.k as u64 {
+            let idx = (h1.wrapping_add(i.wrapping_mul(h2)) % self.m as u64) as usize;
+            self.set_bit(idx);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        let (h1, h2) = hash_pair(key, self.seed);
+        (0..self.k as u64).all(|i| {
+            let idx = (h1.wrapping_add(i.wrapping_mul(h2)) % self.m as u64) as usize;
+            self.get_bit(idx)
+        })
+    }
+
+    /// Bloom filters cannot delete — always false (the paper's point).
+    fn delete(&mut self, _key: u64) -> bool {
+        false
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// "Capacity" for occupancy comparisons: bits (saturation proxy).
+    fn capacity(&self) -> usize {
+        self.m
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.bits.len() * 8
+    }
+
+    fn name(&self) -> &'static str {
+        "bloom"
+    }
+}
+
+/// Counting bloom filter: 4-bit saturating counters → delete support
+/// at 4× the bit-bloom footprint.
+#[derive(Debug, Clone)]
+pub struct CountingBloomFilter {
+    /// two counters per byte
+    counters: Vec<u8>,
+    m: usize,
+    k: u32,
+    seed: u64,
+    len: usize,
+}
+
+impl CountingBloomFilter {
+    pub fn new(n: usize, fpr: f64, seed: u64) -> Self {
+        let (m, k) = optimal_params(n, fpr);
+        Self {
+            counters: vec![0u8; (m + 1) / 2],
+            m,
+            k,
+            seed,
+            len: 0,
+        }
+    }
+
+    #[inline(always)]
+    fn get_ctr(&self, i: usize) -> u8 {
+        let b = self.counters[i >> 1];
+        if i & 1 == 0 {
+            b & 0x0F
+        } else {
+            b >> 4
+        }
+    }
+
+    #[inline(always)]
+    fn set_ctr(&mut self, i: usize, v: u8) {
+        debug_assert!(v <= 0x0F);
+        let b = &mut self.counters[i >> 1];
+        if i & 1 == 0 {
+            *b = (*b & 0xF0) | v;
+        } else {
+            *b = (*b & 0x0F) | (v << 4);
+        }
+    }
+
+    #[inline(always)]
+    fn idx(&self, h1: u64, h2: u64, i: u64) -> usize {
+        (h1.wrapping_add(i.wrapping_mul(h2)) % self.m as u64) as usize
+    }
+}
+
+impl MembershipFilter for CountingBloomFilter {
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        let (h1, h2) = hash_pair(key, self.seed);
+        for i in 0..self.k as u64 {
+            let idx = self.idx(h1, h2, i);
+            let c = self.get_ctr(idx);
+            if c < 0x0F {
+                self.set_ctr(idx, c + 1); // saturate at 15 (standard CBF)
+            }
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        let (h1, h2) = hash_pair(key, self.seed);
+        (0..self.k as u64).all(|i| self.get_ctr(self.idx(h1, h2, i)) > 0)
+    }
+
+    fn delete(&mut self, key: u64) -> bool {
+        if !self.contains(key) {
+            return false;
+        }
+        let (h1, h2) = hash_pair(key, self.seed);
+        for i in 0..self.k as u64 {
+            let idx = self.idx(h1, h2, i);
+            let c = self.get_ctr(idx);
+            if c > 0 && c < 0x0F {
+                self.set_ctr(idx, c - 1); // saturated counters stay (standard)
+            }
+        }
+        self.len = self.len.saturating_sub(1);
+        true
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.m
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.counters.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "counting-bloom"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimal_params_sane() {
+        let (m, k) = optimal_params(1000, 0.01);
+        // textbook: ~9.59 bits/key, k≈7
+        assert!((9000..11000).contains(&m), "m={m}");
+        assert!((6..=8).contains(&k), "k={k}");
+    }
+
+    #[test]
+    fn bloom_no_false_negatives() {
+        let mut f = BloomFilter::new(10_000, 0.01, 7);
+        for k in 0..10_000u64 {
+            f.insert(k).unwrap();
+        }
+        for k in 0..10_000u64 {
+            assert!(f.contains(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn bloom_fpr_near_target() {
+        let mut f = BloomFilter::new(10_000, 0.01, 7);
+        for k in 0..10_000u64 {
+            f.insert(k).unwrap();
+        }
+        let fps = (1_000_000..1_100_000u64).filter(|&k| f.contains(k)).count();
+        let rate = fps as f64 / 100_000.0;
+        assert!(rate < 0.02, "fpr {rate} (target 0.01)");
+        assert!(rate > 0.001, "suspiciously low fpr {rate}");
+    }
+
+    #[test]
+    fn bloom_delete_unsupported() {
+        let mut f = BloomFilter::new(100, 0.01, 7);
+        f.insert(5).unwrap();
+        assert!(!f.delete(5), "bloom cannot delete");
+        assert!(f.contains(5));
+    }
+
+    #[test]
+    fn counting_bloom_supports_delete() {
+        let mut f = CountingBloomFilter::new(10_000, 0.01, 7);
+        for k in 0..5000u64 {
+            f.insert(k).unwrap();
+        }
+        for k in 0..5000u64 {
+            assert!(f.contains(k));
+        }
+        for k in 0..2500u64 {
+            assert!(f.delete(k), "{k}");
+        }
+        for k in 2500..5000u64 {
+            assert!(f.contains(k), "{k} must survive others' deletes");
+        }
+        assert_eq!(f.len(), 2500);
+    }
+
+    #[test]
+    fn counting_bloom_4x_bit_bloom_memory() {
+        let b = BloomFilter::new(10_000, 0.01, 7);
+        let c = CountingBloomFilter::new(10_000, 0.01, 7);
+        let ratio = c.memory_bytes() as f64 / b.memory_bytes() as f64;
+        assert!((3.5..=4.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn counting_bloom_delete_absent_rejected() {
+        let mut f = CountingBloomFilter::new(1000, 0.01, 7);
+        f.insert(1).unwrap();
+        let miss = (100..100_000u64).find(|&k| !f.contains(k)).unwrap();
+        assert!(!f.delete(miss));
+    }
+
+    #[test]
+    fn fill_ratio_grows() {
+        let mut f = BloomFilter::new(1000, 0.01, 7);
+        let r0 = f.fill_ratio();
+        for k in 0..1000u64 {
+            f.insert(k).unwrap();
+        }
+        assert!(f.fill_ratio() > r0);
+        assert!(f.fill_ratio() < 0.6, "optimal fill ≈ 0.5");
+    }
+}

@@ -1,0 +1,360 @@
+//! Bucketed fingerprint storage for cuckoo filters.
+//!
+//! Two interchangeable backends behind [`BucketTable`]:
+//!
+//! * [`FlatTable`] — one `u32` per slot. Fast (word-aligned loads, no
+//!   bit twiddling); memory = `4 B × slots` regardless of `fp_bits`.
+//!   This is the hot-path default.
+//! * [`PackedTable`] — `fp_bits` per slot, bit-packed into `u64` words.
+//!   The space-optimal layout the cuckoo-filter literature assumes when
+//!   quoting bits/key; ~`fp_bits/32` of FlatTable's footprint at the
+//!   cost of shift/mask work per access.
+//!
+//! Both store buckets of [`SLOTS`] = 4 fingerprints (paper §II.B:
+//! "recommended value for bucket size is 4"), with 0 = EMPTY. The
+//! generic bucket count is always a power of two so index masking is a
+//! single AND.
+
+/// Slots per bucket. Frozen at 4 — also baked into the serialized
+/// frozen-table layout the Pallas probe kernel reads.
+pub const SLOTS: usize = 4;
+
+/// Abstract fingerprint bucket storage.
+pub trait BucketTable: Clone {
+    /// Construct with `nbuckets` buckets (any size ≥ 1; power-of-two
+    /// tables get the faster xor index mapping — see
+    /// [`super::fingerprint::Hasher::alt_index`]), storing fingerprints
+    /// of `fp_bits` significant bits.
+    fn with_buckets(nbuckets: usize, fp_bits: u32) -> Self;
+
+    /// Number of buckets.
+    fn nbuckets(&self) -> usize;
+
+    /// Fingerprint width in bits.
+    fn fp_bits(&self) -> u32;
+
+    /// Read slot `s` of bucket `b` (0 = empty).
+    fn get(&self, b: usize, s: usize) -> u32;
+
+    /// Write slot `s` of bucket `b`.
+    fn set(&mut self, b: usize, s: usize, fp: u32);
+
+    /// Try to place `fp` in any empty slot of bucket `b`.
+    #[inline]
+    fn try_insert(&mut self, b: usize, fp: u32) -> bool {
+        for s in 0..SLOTS {
+            if self.get(b, s) == 0 {
+                self.set(b, s, fp);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Does bucket `b` contain `fp`?
+    #[inline]
+    fn contains(&self, b: usize, fp: u32) -> bool {
+        (0..SLOTS).any(|s| self.get(b, s) == fp)
+    }
+
+    /// Remove one copy of `fp` from bucket `b`. Returns true if removed.
+    #[inline]
+    fn remove(&mut self, b: usize, fp: u32) -> bool {
+        for s in 0..SLOTS {
+            if self.get(b, s) == fp {
+                self.set(b, s, 0);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Swap `fp` with the occupant of slot `s` in bucket `b` (eviction).
+    #[inline]
+    fn swap(&mut self, b: usize, s: usize, fp: u32) -> u32 {
+        let old = self.get(b, s);
+        self.set(b, s, fp);
+        old
+    }
+
+    /// Count of occupied slots in bucket `b`.
+    #[inline]
+    fn occupancy(&self, b: usize) -> usize {
+        (0..SLOTS).filter(|&s| self.get(b, s) != 0).count()
+    }
+
+    /// Actual heap footprint of the table in bytes.
+    fn memory_bytes(&self) -> usize;
+
+    /// Serialize to the frozen row-major `u32[nbuckets * SLOTS]` layout
+    /// consumed by the Pallas/XLA probe kernel and by SSTable filters.
+    fn to_frozen(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.nbuckets() * SLOTS);
+        for b in 0..self.nbuckets() {
+            for s in 0..SLOTS {
+                out.push(self.get(b, s));
+            }
+        }
+        out
+    }
+}
+
+/// Unpacked storage: one `u32` per slot.
+#[derive(Debug, Clone)]
+pub struct FlatTable {
+    slots: Vec<u32>,
+    nbuckets: usize,
+    fp_bits: u32,
+}
+
+impl BucketTable for FlatTable {
+    fn with_buckets(nbuckets: usize, fp_bits: u32) -> Self {
+        assert!(nbuckets >= 1, "need at least one bucket");
+        assert!((1..=32).contains(&fp_bits));
+        Self {
+            slots: vec![0u32; nbuckets * SLOTS],
+            nbuckets,
+            fp_bits,
+        }
+    }
+
+    #[inline(always)]
+    fn nbuckets(&self) -> usize {
+        self.nbuckets
+    }
+
+    fn fp_bits(&self) -> u32 {
+        self.fp_bits
+    }
+
+    #[inline(always)]
+    fn get(&self, b: usize, s: usize) -> u32 {
+        self.slots[b * SLOTS + s]
+    }
+
+    #[inline(always)]
+    fn set(&mut self, b: usize, s: usize, fp: u32) {
+        self.slots[b * SLOTS + s] = fp;
+    }
+
+    /// Branch-light whole-bucket probe (hot path override).
+    #[inline(always)]
+    fn contains(&self, b: usize, fp: u32) -> bool {
+        let base = b * SLOTS;
+        let s = &self.slots[base..base + SLOTS];
+        (s[0] == fp) | (s[1] == fp) | (s[2] == fp) | (s[3] == fp)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.slots.len() * std::mem::size_of::<u32>()
+    }
+
+    fn to_frozen(&self) -> Vec<u32> {
+        self.slots.clone()
+    }
+}
+
+/// Bit-packed storage: `fp_bits` per slot in a `u64` word array.
+#[derive(Debug, Clone)]
+pub struct PackedTable {
+    words: Vec<u64>,
+    nbuckets: usize,
+    fp_bits: u32,
+}
+
+impl PackedTable {
+    #[inline(always)]
+    fn bit_pos(&self, b: usize, s: usize) -> (usize, u32) {
+        let bit = (b * SLOTS + s) * self.fp_bits as usize;
+        (bit >> 6, (bit & 63) as u32)
+    }
+
+    #[inline(always)]
+    fn mask(&self) -> u64 {
+        if self.fp_bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.fp_bits) - 1
+        }
+    }
+}
+
+impl BucketTable for PackedTable {
+    fn with_buckets(nbuckets: usize, fp_bits: u32) -> Self {
+        assert!(nbuckets >= 1, "need at least one bucket");
+        assert!((1..=32).contains(&fp_bits));
+        let bits = nbuckets * SLOTS * fp_bits as usize;
+        Self {
+            // +1 guard word lets get/set read across a word boundary
+            // without bounds special-casing.
+            words: vec![0u64; (bits + 63) / 64 + 1],
+            nbuckets,
+            fp_bits,
+        }
+    }
+
+    #[inline(always)]
+    fn nbuckets(&self) -> usize {
+        self.nbuckets
+    }
+
+    fn fp_bits(&self) -> u32 {
+        self.fp_bits
+    }
+
+    #[inline(always)]
+    fn get(&self, b: usize, s: usize) -> u32 {
+        let (w, off) = self.bit_pos(b, s);
+        let lo = self.words[w] >> off;
+        let hi = if off == 0 {
+            0
+        } else {
+            self.words[w + 1] << (64 - off)
+        };
+        ((lo | hi) & self.mask()) as u32
+    }
+
+    #[inline(always)]
+    fn set(&mut self, b: usize, s: usize, fp: u32) {
+        debug_assert!(u64::from(fp) <= self.mask());
+        let (w, off) = self.bit_pos(b, s);
+        let m = self.mask();
+        self.words[w] &= !(m << off);
+        self.words[w] |= (fp as u64) << off;
+        if off + self.fp_bits > 64 {
+            let spill = 64 - off;
+            self.words[w + 1] &= !(m >> spill);
+            self.words[w + 1] |= (fp as u64) >> spill;
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.words.len() * std::mem::size_of::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise<T: BucketTable>(fp_bits: u32) {
+        let mut t = T::with_buckets(8, fp_bits);
+        let max_fp = if fp_bits == 32 {
+            u32::MAX
+        } else {
+            (1 << fp_bits) - 1
+        };
+        assert_eq!(t.nbuckets(), 8);
+        assert_eq!(t.occupancy(3), 0);
+        assert!(!t.contains(3, 5));
+
+        assert!(t.try_insert(3, 5));
+        assert!(t.contains(3, 5));
+        assert_eq!(t.occupancy(3), 1);
+
+        // fill the bucket
+        assert!(t.try_insert(3, 6));
+        assert!(t.try_insert(3, 7));
+        assert!(t.try_insert(3, max_fp));
+        assert_eq!(t.occupancy(3), SLOTS);
+        assert!(!t.try_insert(3, 9), "full bucket rejects");
+
+        // max-width fingerprint round-trips
+        assert!(t.contains(3, max_fp));
+
+        // swap (eviction)
+        let old = t.swap(3, 0, 2);
+        assert_eq!(old, 5);
+        assert!(t.contains(3, 2));
+        assert!(!t.contains(3, 5));
+
+        // remove
+        assert!(t.remove(3, 6));
+        assert!(!t.contains(3, 6));
+        assert_eq!(t.occupancy(3), SLOTS - 1);
+        assert!(!t.remove(3, 6), "double remove fails");
+
+        // other buckets untouched
+        for b in [0usize, 1, 2, 4, 5, 6, 7] {
+            assert_eq!(t.occupancy(b), 0, "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn flat_table_semantics() {
+        exercise::<FlatTable>(16);
+        exercise::<FlatTable>(32);
+    }
+
+    #[test]
+    fn packed_table_semantics() {
+        for bits in [4, 8, 12, 13, 16, 21, 24, 32] {
+            exercise::<PackedTable>(bits);
+        }
+    }
+
+    #[test]
+    fn packed_matches_flat_randomized() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(1234);
+        for &bits in &[7u32, 12, 16, 29] {
+            let nb = 64;
+            let mut flat = FlatTable::with_buckets(nb, bits);
+            let mut packed = PackedTable::with_buckets(nb, bits);
+            let mask = (1u64 << bits) - 1;
+            for _ in 0..10_000 {
+                let b = rng.next_below(nb as u64) as usize;
+                let s = rng.next_below(SLOTS as u64) as usize;
+                let fp = (rng.next_u64() & mask) as u32;
+                flat.set(b, s, fp);
+                packed.set(b, s, fp);
+            }
+            for b in 0..nb {
+                for s in 0..SLOTS {
+                    assert_eq!(flat.get(b, s), packed.get(b, s), "bits={bits} b={b} s={s}");
+                }
+            }
+            assert_eq!(flat.to_frozen(), packed.to_frozen());
+        }
+    }
+
+    #[test]
+    fn packed_is_smaller_for_narrow_fp() {
+        let flat = FlatTable::with_buckets(1 << 12, 12);
+        let packed = PackedTable::with_buckets(1 << 12, 12);
+        assert!(
+            packed.memory_bytes() * 2 < flat.memory_bytes(),
+            "packed {} vs flat {}",
+            packed.memory_bytes(),
+            flat.memory_bytes()
+        );
+    }
+
+    #[test]
+    fn non_pow2_tables_work() {
+        exercise::<FlatTable>(16);
+        let mut t = FlatTable::with_buckets(6, 16);
+        assert_eq!(t.nbuckets(), 6);
+        assert!(t.try_insert(5, 9));
+        assert!(t.contains(5, 9));
+        let mut p = PackedTable::with_buckets(7, 12);
+        p.set(6, 3, 0xABC);
+        assert_eq!(p.get(6, 3), 0xABC);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one bucket")]
+    fn zero_buckets_rejected() {
+        FlatTable::with_buckets(0, 16);
+    }
+
+    #[test]
+    fn frozen_layout_row_major() {
+        let mut t = FlatTable::with_buckets(4, 16);
+        t.set(1, 2, 77);
+        let frozen = t.to_frozen();
+        assert_eq!(frozen.len(), 4 * SLOTS);
+        assert_eq!(frozen[1 * SLOTS + 2], 77);
+        assert_eq!(frozen.iter().filter(|&&x| x != 0).count(), 1);
+    }
+}

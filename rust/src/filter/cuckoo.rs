@@ -1,0 +1,472 @@
+//! The traditional partial-key cuckoo filter (Fan et al., CoNEXT'14).
+//!
+//! This is both the substrate OCF wraps and the paper's main baseline.
+//! It deliberately reproduces the two failure modes the paper calls out:
+//!
+//! 1. **Fills up** — fixed capacity; once max displacements are
+//!    exhausted, inserts fail (`FilterError::Full`). With
+//!    [`VictimPolicy::Drop`] the in-flight evicted fingerprint is lost,
+//!    which manifests as a *false negative* for whichever resident key
+//!    owned it — the paper: "We observed an occasional false negative
+//!    when operating at this threshold [load > 0.9]".
+//!    [`VictimPolicy::Stash`] instead parks it in a victim cache (what
+//!    Fan's reference implementation does).
+//! 2. **Unsafe deletes** — `delete` removes a matching fingerprint
+//!    even if the key was never inserted, silently evicting another
+//!    key's fingerprint (paper §IV). OCF fixes this with verified
+//!    deletes; the raw filter exposes it so experiments can measure it.
+
+use super::bucket::{BucketTable, FlatTable, SLOTS};
+use super::fingerprint::{Hasher, HashTriple};
+use super::metrics::FilterStats;
+use super::{FilterError, MembershipFilter};
+use crate::util::SplitMix64;
+
+/// What to do with the evicted fingerprint when an insert exhausts its
+/// displacement budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VictimPolicy {
+    /// Park it in a one-slot victim cache, checked by `contains`
+    /// (Fan et al. reference behaviour). Insert still reports `Full`.
+    Stash,
+    /// Drop it (naive implementations; yields false negatives — the
+    /// paper's observed failure mode at high load).
+    Drop,
+}
+
+/// Construction parameters for the raw cuckoo filter.
+#[derive(Debug, Clone, Copy)]
+pub struct CuckooParams {
+    /// Requested slot capacity `c` (`nbuckets = ceil(c / SLOTS)`,
+    /// exact — see `CuckooFilter::new`).
+    pub capacity: usize,
+    /// Fingerprint width in bits (paper §II.B "Fingerprint Size").
+    pub fp_bits: u32,
+    /// Max displacement steps before declaring the filter full
+    /// (paper §II.B "Max Displacements"; Fan et al. use 500).
+    pub max_displacements: u32,
+    /// Hash seed for this instance.
+    pub seed: u64,
+    /// Victim handling on insert failure.
+    pub victim_policy: VictimPolicy,
+}
+
+impl Default for CuckooParams {
+    fn default() -> Self {
+        Self {
+            capacity: 1 << 16,
+            fp_bits: 16,
+            max_displacements: 500,
+            seed: 0x0C_F0_0D,
+            victim_policy: VictimPolicy::Stash,
+        }
+    }
+}
+
+/// Traditional cuckoo filter over a pluggable bucket table.
+#[derive(Debug, Clone)]
+pub struct CuckooFilter<T: BucketTable = FlatTable> {
+    table: T,
+    hasher: Hasher,
+    len: usize,
+    max_displacements: u32,
+    victim_policy: VictimPolicy,
+    /// Victim cache: (bucket_index, fingerprint) parked by a failed insert.
+    victim: Option<(usize, u32)>,
+    /// Deterministic eviction-victim chooser.
+    evict_rng: SplitMix64,
+    pub stats: FilterStats,
+    params: CuckooParams,
+}
+
+impl<T: BucketTable> CuckooFilter<T> {
+    pub fn new(params: CuckooParams) -> Self {
+        // Exact sizing: nbuckets = ceil(c / SLOTS), NOT rounded to a
+        // power of two — OCF's resize policies hand down fine-grained
+        // capacity targets (EOF: c + cα) and rounding would quantize
+        // them back into doubling. Power-of-two sizes still get the
+        // xor fast path in the hasher automatically.
+        let nbuckets = crate::util::ceil_div(params.capacity.max(SLOTS), SLOTS);
+        Self {
+            table: T::with_buckets(nbuckets, params.fp_bits),
+            hasher: Hasher::new(params.seed, params.fp_bits),
+            len: 0,
+            max_displacements: params.max_displacements,
+            victim_policy: params.victim_policy,
+            victim: None,
+            evict_rng: SplitMix64::new(params.seed ^ 0xE71C_7ED0),
+            stats: FilterStats::new(),
+            params,
+        }
+    }
+
+    pub fn params(&self) -> &CuckooParams {
+        &self.params
+    }
+
+    pub fn hasher(&self) -> Hasher {
+        self.hasher
+    }
+
+    pub fn nbuckets(&self) -> usize {
+        self.table.nbuckets()
+    }
+
+    /// Serialize to the frozen layout consumed by the XLA probe kernel
+    /// and by SSTable filters.
+    pub fn to_frozen(&self) -> Vec<u32> {
+        self.table.to_frozen()
+    }
+
+    /// Insert a pre-hashed triple. Exposed so OCF's rebuild and the
+    /// batched ingest path (which gets triples from the XLA artifact)
+    /// skip re-hashing.
+    pub fn insert_triple(&mut self, t: HashTriple) -> Result<(), FilterError> {
+        let nb = self.table.nbuckets();
+        let i1 = Hasher::primary_index(t, nb);
+        let i2 = Hasher::alt_index(i1, t.fp, nb);
+
+        if self.table.try_insert(i1, t.fp) || self.table.try_insert(i2, t.fp) {
+            self.len += 1;
+            self.stats.inserts += 1;
+            return Ok(());
+        }
+
+        // Random-walk eviction from a random candidate bucket.
+        let mut b = if self.evict_rng.next_u64() & 1 == 0 { i1 } else { i2 };
+        let mut fp = t.fp;
+        for kick in 0..self.max_displacements {
+            let s = self.evict_rng.next_below(SLOTS as u64) as usize;
+            fp = self.table.swap(b, s, fp);
+            self.stats.kicks += 1;
+            b = Hasher::alt_index(b, fp, nb);
+            if self.table.try_insert(b, fp) {
+                self.len += 1;
+                self.stats.inserts += 1;
+                return Ok(());
+            }
+            let _ = kick;
+        }
+
+        // Displacement budget exhausted with fingerprint `fp` in hand.
+        self.stats.insert_failures += 1;
+        match self.victim_policy {
+            VictimPolicy::Stash => {
+                if self.victim.is_none() {
+                    // The *evicted* fingerprint is parked; the caller's key
+                    // effectively took its slot, so the filter still holds
+                    // `len + 1` fingerprints worth of content.
+                    self.victim = Some((b, fp));
+                    self.len += 1;
+                    self.stats.victim_stashes += 1;
+                } else {
+                    self.stats.dropped_fingerprints += 1;
+                }
+            }
+            VictimPolicy::Drop => {
+                // The caller's fingerprint landed in a bucket during the
+                // eviction walk; `fp` (some earlier key's) is dropped.
+                // Net stored count is unchanged, but that earlier key is
+                // now a false negative.
+                self.stats.dropped_fingerprints += 1;
+            }
+        }
+        Err(FilterError::Full {
+            kicks: self.max_displacements,
+            occupancy: self.occupancy(),
+        })
+    }
+
+    /// Membership of a pre-hashed triple.
+    #[inline]
+    pub fn contains_triple(&self, t: HashTriple) -> bool {
+        let nb = self.table.nbuckets();
+        let i1 = Hasher::primary_index(t, nb);
+        if self.table.contains(i1, t.fp) {
+            return true;
+        }
+        let i2 = Hasher::alt_index(i1, t.fp, nb);
+        if self.table.contains(i2, t.fp) {
+            return true;
+        }
+        match self.victim {
+            Some((b, fp)) => fp == t.fp && (b == i1 || b == i2),
+            None => false,
+        }
+    }
+
+    /// Unverified delete of a pre-hashed triple (the unsafe primitive).
+    pub fn delete_triple(&mut self, t: HashTriple) -> bool {
+        let nb = self.table.nbuckets();
+        let i1 = Hasher::primary_index(t, nb);
+        let i2 = Hasher::alt_index(i1, t.fp, nb);
+        if self.table.remove(i1, t.fp) || self.table.remove(i2, t.fp) {
+            self.len -= 1;
+            self.stats.deletes += 1;
+            // A freed slot lets the victim come home.
+            if let Some((vb, vfp)) = self.victim {
+                if self.table.try_insert(vb, vfp)
+                    || self.table.try_insert(Hasher::alt_index(vb, vfp, nb), vfp)
+                {
+                    self.victim = None;
+                }
+            }
+            return true;
+        }
+        if let Some((vb, vfp)) = self.victim {
+            if vfp == t.fp && (vb == i1 || vb == i2) {
+                self.victim = None;
+                self.len -= 1;
+                self.stats.deletes += 1;
+                return true;
+            }
+        }
+        self.stats.delete_rejects += 1;
+        false
+    }
+
+    /// Iterate all stored fingerprints with their bucket (for analysis).
+    pub fn iter_fingerprints(&self) -> impl Iterator<Item = (usize, u32)> + '_ {
+        let nb = self.table.nbuckets();
+        (0..nb)
+            .flat_map(move |b| (0..SLOTS).map(move |s| (b, self.table.get(b, s))))
+            .filter(|&(_, fp)| fp != 0)
+            .chain(self.victim)
+    }
+}
+
+impl<T: BucketTable> MembershipFilter for CuckooFilter<T> {
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        let t = self.hasher.hash_key(key);
+        self.insert_triple(t)
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        // stats.lookups is bumped by callers that own &mut; contains is &self.
+        self.contains_triple(self.hasher.hash_key(key))
+    }
+
+    fn delete(&mut self, key: u64) -> bool {
+        self.delete_triple(self.hasher.hash_key(key))
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.table.nbuckets() * SLOTS
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.table.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "cuckoo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filter(cap: usize) -> CuckooFilter<FlatTable> {
+        CuckooFilter::new(CuckooParams {
+            capacity: cap,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn insert_then_contains() {
+        let mut f = filter(1 << 12);
+        for k in 0..1000u64 {
+            f.insert(k).unwrap();
+        }
+        for k in 0..1000u64 {
+            assert!(f.contains(k), "key {k}");
+        }
+        assert_eq!(f.len(), 1000);
+    }
+
+    #[test]
+    fn no_false_negatives_below_90_pct_load() {
+        let cap = 1 << 12; // 4096 slots
+        let mut f = filter(cap);
+        let n = (cap as f64 * 0.9) as u64;
+        let mut inserted = vec![];
+        for k in 0..n {
+            if f.insert(k).is_ok() {
+                inserted.push(k);
+            }
+        }
+        for &k in &inserted {
+            assert!(f.contains(k), "false negative for {k}");
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_sane() {
+        let mut f = filter(1 << 14);
+        for k in 0..8000u64 {
+            f.insert(k).unwrap();
+        }
+        // held-out keys: fp rate should be around 2b/2^f ≈ 8*4096/2^16
+        let fps = (1_000_000..1_100_000u64).filter(|&k| f.contains(k)).count();
+        let rate = fps as f64 / 100_000.0;
+        assert!(rate < 0.01, "fp rate {rate}");
+    }
+
+    #[test]
+    fn fills_up_and_reports_full() {
+        let mut f = filter(256);
+        let mut failures = 0;
+        for k in 0..400u64 {
+            if f.insert(k).is_err() {
+                failures += 1;
+            }
+        }
+        assert!(failures > 0, "overfilled filter must reject");
+        assert!(f.occupancy() > 0.9, "occupancy {}", f.occupancy());
+    }
+
+    #[test]
+    fn drop_policy_plants_false_negatives() {
+        // paper §II: naive victim handling near full load loses a
+        // resident fingerprint — an observable false negative.
+        let mut f = CuckooFilter::<FlatTable>::new(CuckooParams {
+            capacity: 256,
+            victim_policy: VictimPolicy::Drop,
+            ..Default::default()
+        });
+        let mut accepted = vec![];
+        for k in 0..2000u64 {
+            // keep hammering; Drop loses fingerprints on each failure
+            if f.insert(k).is_ok() {
+                accepted.push(k);
+            }
+        }
+        assert!(f.stats.dropped_fingerprints > 0);
+        let false_negs = accepted.iter().filter(|&&k| !f.contains(k)).count();
+        assert!(
+            false_negs > 0,
+            "Drop policy at saturation must lose some resident key"
+        );
+    }
+
+    #[test]
+    fn stash_policy_keeps_victim_findable() {
+        let mut f = CuckooFilter::<FlatTable>::new(CuckooParams {
+            capacity: 256,
+            victim_policy: VictimPolicy::Stash,
+            ..Default::default()
+        });
+        let mut accepted = vec![];
+        for k in 0..400u64 {
+            match f.insert(k) {
+                Ok(()) => accepted.push(k),
+                Err(_) => break, // stop at first failure: stash holds one victim
+            }
+        }
+        for &k in &accepted {
+            assert!(f.contains(k), "stash must prevent the false negative");
+        }
+    }
+
+    #[test]
+    fn unsafe_delete_removes_collider() {
+        // Deleting a never-inserted key whose fingerprint collides
+        // removes a resident key's fingerprint (paper §IV).
+        let mut f = filter(1 << 10);
+        for k in 0..700u64 {
+            f.insert(k).unwrap();
+        }
+        // find a non-inserted key that the filter *thinks* it contains
+        let collider = (10_000..10_000_000u64).find(|&k| f.contains(k));
+        let collider = match collider {
+            Some(c) => c,
+            None => return, // astronomically unlikely with 700 keys
+        };
+        assert!(f.delete(collider), "collider delete succeeds (the bug)");
+        let false_negs = (0..700u64).filter(|&k| !f.contains(k)).count();
+        assert!(false_negs > 0, "a resident key must have been evicted");
+    }
+
+    #[test]
+    fn delete_restores_space() {
+        let mut f = filter(1 << 10);
+        for k in 0..600u64 {
+            f.insert(k).unwrap();
+        }
+        for k in 0..600u64 {
+            assert!(f.delete(k), "key {k}");
+        }
+        assert_eq!(f.len(), 0);
+        for k in 0..600u64 {
+            f.insert(k).unwrap();
+        }
+    }
+
+    #[test]
+    fn delete_absent_rejected() {
+        let mut f = filter(1 << 10);
+        f.insert(1).unwrap();
+        // an absent key with a non-colliding fingerprint must be rejected
+        let miss = (100..10_000u64).find(|&k| !f.contains(k)).unwrap();
+        assert!(!f.delete(miss));
+        assert_eq!(f.stats.delete_rejects, 1);
+    }
+
+    #[test]
+    fn insert_triple_matches_insert() {
+        let mut a = filter(1 << 10);
+        let mut b = filter(1 << 10);
+        let h = a.hasher();
+        for k in 0..500u64 {
+            a.insert(k).unwrap();
+            b.insert_triple(h.hash_key(k)).unwrap();
+        }
+        for k in 0..500u64 {
+            assert_eq!(a.contains(k), b.contains(k));
+        }
+        assert_eq!(a.to_frozen(), b.to_frozen());
+    }
+
+    #[test]
+    fn frozen_roundtrip_has_len_fingerprints() {
+        let mut f = filter(1 << 10);
+        for k in 0..300u64 {
+            f.insert(k).unwrap();
+        }
+        let frozen = f.to_frozen();
+        let occupied = frozen.iter().filter(|&&x| x != 0).count();
+        assert_eq!(occupied, 300);
+        assert_eq!(f.iter_fingerprints().count(), 300);
+    }
+
+    #[test]
+    fn packed_backend_equivalent() {
+        let params = CuckooParams {
+            capacity: 1 << 12,
+            ..Default::default()
+        };
+        let mut flat = CuckooFilter::<FlatTable>::new(params);
+        let mut packed = CuckooFilter::<crate::filter::PackedTable>::new(params);
+        for k in 0..2000u64 {
+            assert_eq!(flat.insert(k).is_ok(), packed.insert(k).is_ok());
+        }
+        for k in 0..4000u64 {
+            assert_eq!(flat.contains(k), packed.contains(k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn kicks_counted() {
+        let mut f = filter(512);
+        for k in 0..450u64 {
+            let _ = f.insert(k);
+        }
+        assert!(f.stats.kicks > 0, "high load must cause displacements");
+    }
+}

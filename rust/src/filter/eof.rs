@@ -1,0 +1,394 @@
+//! EOF — the Congestion Aware mode of OCF (paper §II.A.2, Algorithm 1).
+//!
+//! Design lineage: ECN marking + TCP's EWMA RTT estimator. Two nested
+//! watermark bands around occupancy `O`:
+//!
+//! ```text
+//!   0 ─── O_min ───── k_min ······ k_max ───── O_max ─── 1
+//!             └─ resize ┘└── quiet band ──┘└ resize ─┘
+//! ```
+//!
+//! * While `O` is inside `[k_min, k_max]` the policy is quiet.
+//! * When `O` crosses a K marker (`O > k_max` or `O < k_min`) the policy
+//!   starts **marking**: every subsequent mutation is counted against a
+//!   logical-time window (paper: "mark the consecutive items").
+//! * When `O` then crosses the outer band (`O > O_max` or `O < O_min`),
+//!   it computes `M` and folds it into the growth factor with an EWMA
+//!   (paper-reconstruction: Algorithm 1 line 3 prints `M = (c*t)/(c*t)`
+//!   — identically 1 as typeset; the prose distinguishes "capacity and
+//!   time before reset c & t" from "capacity and time during reset
+//!   c' and t'", giving the intended form):
+//!
+//!   ```text
+//!   M = (c·t) / (c'·t')        capacity × window-ticks of the PREVIOUS
+//!                              resize over the same product NOW
+//!   α ← α·(1-g) + g·M          (g = estimation gain, default 1/16)
+//!   ```
+//!
+//!   and demands `c' = c + c·α` (grow) or `c' = c - c·(1-α)` = `c·α`
+//!   (shrink, clamped by the wrapper so occupancy stays safe).
+//!
+//! `t` is the logical-tick span of the resize window (from the K-marker
+//! crossing, or from the previous resize when no marking preceded).
+//! The dynamics this yields are exactly the paper's qualitative claims:
+//! under *steady* load the window lengthens as capacity grows, so
+//! `M < 1` and α decays toward `g` — fine-grained ~6% growth steps that
+//! keep occupancy high ("EOF maintains optimality", Table I's 0.74 vs
+//! PRE's 0.47); under *accelerating* bursts the window shrinks faster
+//! than capacity grows, `M > 1`, and α climbs toward 1 (doubling).
+//! Because `α` carries EWMA state across resizes, "each increase or
+//! decrease takes into account the factors that caused the previous
+//! resize" (paper §II.A.2).
+
+use super::policy::{FilterEvent, Occupancy, ResizeDecision, ResizePolicy};
+
+/// Marking window state (between a K-marker crossing and a resize).
+#[derive(Debug, Clone, Copy)]
+struct MarkState {
+    start_tick: u64,
+    ops: u64,
+}
+
+/// Congestion-aware resize policy.
+#[derive(Debug, Clone)]
+pub struct EofPolicy {
+    /// Outer band: resize triggers (paper defaults 0.2 / 0.85).
+    pub o_min: f64,
+    pub o_max: f64,
+    /// Inner band: K markers where monitoring starts (paper §II.B
+    /// "K Marker"; defaults 0.35 / 0.7).
+    pub k_min: f64,
+    pub k_max: f64,
+    /// Estimation gain `g` (paper default 1/16).
+    pub g: f64,
+    /// Never shrink below this capacity.
+    pub min_capacity: usize,
+    /// Current EWMA growth factor α ∈ [g, 1].
+    alpha: f64,
+    /// `c·t` of the previous resize window (capacity × window ticks);
+    /// the numerator of `M`.
+    prev_ct: Option<f64>,
+    /// Logical tick of the last resize (window fallback when no
+    /// marking preceded the trigger).
+    last_resize_tick: u64,
+    marking: Option<MarkState>,
+}
+
+impl Default for EofPolicy {
+    fn default() -> Self {
+        Self::new(0.2, 0.85, 0.35, 0.7, 1.0 / 16.0, 1024)
+    }
+}
+
+impl EofPolicy {
+    pub fn new(
+        o_min: f64,
+        o_max: f64,
+        k_min: f64,
+        k_max: f64,
+        g: f64,
+        min_capacity: usize,
+    ) -> Self {
+        assert!(
+            0.0 <= o_min && o_min <= k_min && k_min < k_max && k_max <= o_max && o_max <= 1.0,
+            "need 0 <= o_min <= k_min < k_max <= o_max <= 1, \
+             got o=[{o_min},{o_max}] k=[{k_min},{k_max}]"
+        );
+        assert!((0.0..=1.0).contains(&g) && g > 0.0, "gain g in (0,1]");
+        Self {
+            o_min,
+            o_max,
+            k_min,
+            k_max,
+            g,
+            min_capacity,
+            // α₀ = 0.5: halfway between "no change" and "double"
+            // (paper-reconstruction: initial α unspecified).
+            alpha: 0.5,
+            prev_ct: None,
+            last_resize_tick: 0,
+            marking: None,
+        }
+    }
+
+    /// Current EWMA growth factor (for experiments/telemetry).
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Is the policy currently marking?
+    pub fn is_marking(&self) -> bool {
+        self.marking.is_some()
+    }
+
+    /// Ticks in the current resize window: since the K-marker crossing
+    /// when marking, else since the previous resize.
+    fn window_ticks(&self, now: u64) -> u64 {
+        let start = self
+            .marking
+            .map(|m| m.start_tick)
+            .unwrap_or(self.last_resize_tick);
+        now.saturating_sub(start).max(1)
+    }
+
+    /// Algorithm 1 lines 3–4: `M = (c·t)/(c'·t')`, then the EWMA fold.
+    fn update_alpha(&mut self, now: u64, capacity: usize) {
+        let ct_cur = capacity as f64 * self.window_ticks(now) as f64;
+        let m = match self.prev_ct {
+            Some(prev) if prev > 0.0 && ct_cur > 0.0 => prev / ct_cur,
+            _ => 1.0, // first resize: no history
+        };
+        self.alpha = self.alpha * (1.0 - self.g) + self.g * m;
+        // Clamp so a resize always makes progress and never exceeds
+        // doubling per step.
+        self.alpha = self.alpha.clamp(self.g, 1.0);
+        self.prev_ct = Some(ct_cur);
+    }
+}
+
+impl ResizePolicy for EofPolicy {
+    fn on_event(
+        &mut self,
+        event: FilterEvent,
+        occ: Occupancy,
+        tick: u64,
+    ) -> Option<ResizeDecision> {
+        let o = occ.ratio();
+
+        // --- marking state machine ---
+        let outside_k = o > self.k_max || o < self.k_min;
+        match (&mut self.marking, outside_k) {
+            (Some(m), true) => m.ops += 1,
+            (None, true) => {
+                self.marking = Some(MarkState {
+                    start_tick: tick,
+                    ops: 1,
+                });
+            }
+            (Some(_), false) => self.marking = None, // burst subsided
+            (None, false) => {}
+        }
+
+        // --- resize triggers ---
+        let force_grow = event == FilterEvent::InsertFull;
+        if o > self.o_max || force_grow {
+            self.update_alpha(tick, occ.capacity);
+            let grow_by = ((occ.capacity as f64) * self.alpha) as usize;
+            return Some(ResizeDecision {
+                // Algorithm 1 line 9: c = c + c·α
+                new_capacity: occ.capacity + grow_by.max(1),
+                grow: true,
+            });
+        }
+        if o < self.o_min && event == FilterEvent::Delete && occ.capacity > self.min_capacity {
+            self.update_alpha(tick, occ.capacity);
+            // Algorithm 1 line 7: c = c - c·(1-α)  ⇒  c' = c·α
+            let target = ((occ.capacity as f64) * self.alpha) as usize;
+            let target = target.max(self.min_capacity);
+            if target < occ.capacity {
+                return Some(ResizeDecision {
+                    new_capacity: target,
+                    grow: false,
+                });
+            }
+        }
+        None
+    }
+
+    fn on_resized(&mut self, _achieved: usize, tick: u64) {
+        // A resize closes the marking window; the next burst starts fresh.
+        self.marking = None;
+        self.last_resize_tick = tick;
+    }
+
+    fn name(&self) -> &'static str {
+        "eof"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn occ(len: usize, cap: usize) -> Occupancy {
+        Occupancy { len, capacity: cap }
+    }
+
+    fn drive_to_grow(p: &mut EofPolicy, cap: usize, start_tick: u64) -> (ResizeDecision, u64) {
+        // fill from k_max upward one insert per tick until resize fires
+        let mut tick = start_tick;
+        let mut len = (cap as f64 * p.k_max) as usize + 1;
+        loop {
+            let d = p.on_event(FilterEvent::Insert, occ(len, cap), tick);
+            tick += 1;
+            len += 1;
+            if let Some(d) = d {
+                return (d, tick);
+            }
+            assert!(len <= cap, "never fired before filling?");
+        }
+    }
+
+    #[test]
+    fn quiet_band_never_resizes() {
+        let mut p = EofPolicy::default();
+        for tick in 0..1000u64 {
+            let o = occ(500, 1000); // O=0.5 ∈ [k_min, k_max]
+            assert!(p.on_event(FilterEvent::Insert, o, tick).is_none());
+            assert!(!p.is_marking());
+        }
+    }
+
+    #[test]
+    fn marking_starts_at_k_and_fires_at_o_max() {
+        let mut p = EofPolicy::default();
+        // O = 0.72 > k_max=0.7 → marking, no resize yet
+        assert!(p.on_event(FilterEvent::Insert, occ(720, 1000), 0).is_none());
+        assert!(p.is_marking());
+        // O = 0.86 > o_max → resize
+        let d = p
+            .on_event(FilterEvent::Insert, occ(860, 1000), 10)
+            .expect("must fire above O_max");
+        assert!(d.grow);
+        assert!(d.new_capacity > 1000);
+        assert!(d.new_capacity <= 2000, "α ≤ 1 caps growth at doubling");
+    }
+
+    #[test]
+    fn marking_resets_when_burst_subsides() {
+        let mut p = EofPolicy::default();
+        p.on_event(FilterEvent::Insert, occ(720, 1000), 0);
+        assert!(p.is_marking());
+        p.on_event(FilterEvent::Delete, occ(500, 1000), 1); // back in band
+        assert!(!p.is_marking());
+    }
+
+    #[test]
+    fn accelerating_bursts_raise_alpha() {
+        let mut p = EofPolicy::default();
+        let a0 = p.alpha();
+        // slow burst: 1 op / 10 ticks
+        let mut tick = 0u64;
+        let mut len = 701;
+        loop {
+            let d = p.on_event(FilterEvent::Insert, occ(len, 1000), tick);
+            tick += 10;
+            len += 5;
+            if d.is_some() {
+                break;
+            }
+        }
+        p.on_resized(1100, tick);
+        let a1 = p.alpha();
+        // fast burst: 1 op per tick, same occupancy path on bigger filter
+        let mut len = 781;
+        loop {
+            let d = p.on_event(FilterEvent::Insert, occ(len, 1100), tick);
+            tick += 1;
+            len += 6;
+            if d.is_some() {
+                break;
+            }
+        }
+        let a2 = p.alpha();
+        assert!(
+            a2 > a1 || a1 < a0,
+            "faster burst must not lower α: a0={a0} a1={a1} a2={a2}"
+        );
+    }
+
+    #[test]
+    fn steady_state_alpha_decays_toward_g() {
+        let mut p = EofPolicy::default();
+        // identical bursts over and over: M→1, α decays toward EWMA
+        // fixpoint of 1·g + α(1-g) → 1? No: M=1 pulls α toward 1·g+α(1-g)
+        // ⇒ fixpoint α*=1? α = α(1-g)+g·1 → α* = 1? Solving: α* = 1.
+        // With *identical* rates M=1 the fixpoint is α→1 only if M=1
+        // exactly each time; decelerating bursts (M<1) decay α.
+        let mut tick = 0;
+        let mut alphas = vec![];
+        let mut rate_mult = 1.0f64;
+        for _ in 0..6 {
+            // each burst half the rate of the previous (M = 0.5)
+            rate_mult *= 2.0;
+            let step = rate_mult as u64;
+            let mut len = 701;
+            loop {
+                let d = p.on_event(FilterEvent::Insert, occ(len, 1000), tick);
+                tick += step;
+                len += 3;
+                if d.is_some() {
+                    break;
+                }
+            }
+            p.on_resized(1000, tick);
+            alphas.push(p.alpha());
+        }
+        assert!(
+            alphas.last().unwrap() < &alphas[0],
+            "decelerating bursts must decay α: {alphas:?}"
+        );
+        assert!(alphas.iter().all(|a| *a >= p.g && *a <= 1.0));
+    }
+
+    #[test]
+    fn shrink_fires_below_o_min() {
+        let mut p = EofPolicy::default();
+        let d = p
+            .on_event(FilterEvent::Delete, occ(1000, 10_000), 5)
+            .expect("O=0.1 < o_min must shrink");
+        assert!(!d.grow);
+        assert!(d.new_capacity < 10_000);
+        assert!(d.new_capacity >= p.min_capacity.min(10_000));
+    }
+
+    #[test]
+    fn shrink_respects_min_capacity() {
+        let mut p = EofPolicy::new(0.2, 0.85, 0.35, 0.7, 1.0 / 16.0, 900);
+        let d = p.on_event(FilterEvent::Delete, occ(10, 1000), 5);
+        if let Some(d) = d {
+            assert!(d.new_capacity >= 900);
+        }
+        // at the floor: no shrink at all
+        assert!(p
+            .on_event(FilterEvent::Delete, occ(10, 900), 6)
+            .is_none());
+    }
+
+    #[test]
+    fn insert_full_forces_grow() {
+        let mut p = EofPolicy::default();
+        let d = p
+            .on_event(FilterEvent::InsertFull, occ(400, 1000), 0)
+            .expect("Full forces grow");
+        assert!(d.grow);
+    }
+
+    #[test]
+    fn alpha_stays_clamped() {
+        let mut p = EofPolicy::default();
+        let mut tick = 0;
+        for round in 0..20 {
+            let (d, t) = drive_to_grow(&mut p, 1000 + round, tick);
+            tick = t + 1;
+            p.on_resized(d.new_capacity, tick);
+            let a = p.alpha();
+            assert!((p.g..=1.0).contains(&a), "round {round}: α={a}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k_min < k_max")]
+    fn bad_bands_rejected() {
+        EofPolicy::new(0.2, 0.85, 0.7, 0.35, 0.1, 10);
+    }
+
+    #[test]
+    fn grow_is_at_least_one_slot() {
+        let mut p = EofPolicy::default();
+        let d = p
+            .on_event(FilterEvent::InsertFull, occ(4, 4), 0)
+            .unwrap();
+        assert!(d.new_capacity > 4);
+    }
+}

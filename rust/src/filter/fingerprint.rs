@@ -1,0 +1,238 @@
+//! The partial-key cuckoo hash family — bit-exact twin of
+//! `python/compile/kernels/ref.py` (and therefore of the AOT HLO
+//! artifacts the runtime executes).
+//!
+//! Contract (verified by `rust/tests/runtime_integration.rs` against the
+//! XLA-executed artifact, and by known-answer vectors mirrored in
+//! `python/tests/test_hash_kernel.py`):
+//!
+//! ```text
+//! h        = mix64(key ^ seed)            // SplitMix64 next()
+//! fp       = hi32(h) & fp_mask            // 0 remapped to 1 (EMPTY)
+//! idx_hash = lo32(h)                      // caller masks with nbuckets-1
+//! fp_hash  = mix32(fp)                    // murmur3 fmix32
+//! i1       = idx_hash & (nbuckets-1)
+//! i2       = (i1 ^ fp_hash) & (nbuckets-1)
+//! ```
+//!
+//! The alternate index is derived from the fingerprint alone, so from
+//! *either* bucket the partner is `i ^ (fp_hash & mask)` — the property
+//! cuckoo displacement depends on (Fan et al., CoNEXT'14).
+
+use crate::util::rng::GOLDEN_GAMMA;
+
+/// SplitMix64 finalizer (one `next()` step seeded with `z`).
+#[inline(always)]
+pub fn mix64(z: u64) -> u64 {
+    let mut z = z.wrapping_add(GOLDEN_GAMMA);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// murmur3 fmix32 finalizer.
+#[inline(always)]
+pub fn mix32(z: u32) -> u32 {
+    let mut z = (z ^ (z >> 16)).wrapping_mul(0x85EB_CA6B);
+    z = (z ^ (z >> 13)).wrapping_mul(0xC2B2_AE35);
+    z ^ (z >> 16)
+}
+
+/// The per-key hash triple consumed by table operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HashTriple {
+    /// Fingerprint (never 0; 0 is the EMPTY slot marker).
+    pub fp: u32,
+    /// Low 32 bits of the 64-bit hash; mask to get the primary bucket.
+    pub idx_hash: u32,
+    /// `mix32(fp)`; XOR-displacement for the alternate bucket.
+    pub fp_hash: u32,
+}
+
+/// A seeded hasher for one filter instance.
+///
+/// `fp_mask` is `(1 << fp_bits) - 1`; fingerprints are stored unpacked
+/// as `u32` but only `fp_bits` of entropy is used, which is what
+/// determines the false-positive rate (paper §II.B "Fingerprint Size").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hasher {
+    pub seed: u64,
+    pub fp_mask: u32,
+}
+
+impl Hasher {
+    pub fn new(seed: u64, fp_bits: u32) -> Self {
+        assert!(
+            (1..=32).contains(&fp_bits),
+            "fp_bits must be in 1..=32, got {fp_bits}"
+        );
+        let fp_mask = if fp_bits == 32 {
+            u32::MAX
+        } else {
+            (1u32 << fp_bits) - 1
+        };
+        Self { seed, fp_mask }
+    }
+
+    /// Hash one key. Bit-exact with `ref.hash_batch_ref` / the Pallas
+    /// kernel / the AOT artifact.
+    #[inline(always)]
+    pub fn hash_key(&self, key: u64) -> HashTriple {
+        let h = mix64(key ^ self.seed);
+        let raw_fp = (h >> 32) as u32 & self.fp_mask;
+        let fp = if raw_fp == 0 { 1 } else { raw_fp };
+        HashTriple {
+            fp,
+            idx_hash: h as u32,
+            fp_hash: mix32(fp),
+        }
+    }
+
+    /// Primary bucket for a triple in a table of `nbuckets`.
+    ///
+    /// Power-of-two tables use the mask fast path (bit-identical with
+    /// the AOT `hash_probe` artifact and the frozen SSTable layout);
+    /// arbitrary sizes — which OCF's resize controller needs so EOF's
+    /// fine-grained `c + cα` targets aren't quantized back into PRE's
+    /// doubling staircase — use modulo.
+    #[inline(always)]
+    pub fn primary_index(t: HashTriple, nbuckets: usize) -> usize {
+        if nbuckets.is_power_of_two() {
+            (t.idx_hash as usize) & (nbuckets - 1)
+        } else {
+            // Lemire multiply-shift reduction — a mul+shift instead of
+            // the div unit (perf log: +46% on insert+delete, see
+            // EXPERIMENTS.md §Perf step 2)
+            ((t.idx_hash as u64 * nbuckets as u64) >> 32) as usize
+        }
+    }
+
+    /// Alternate bucket given either bucket index and the fingerprint.
+    ///
+    /// Both mappings are involutions (`alt(alt(i)) == i` — the property
+    /// cuckoo displacement requires): XOR for power-of-two tables
+    /// (Fan et al.), and `i' = (d - i) mod nb` with the displacement
+    /// anchor `d = reduce(mix32(fp))` for arbitrary sizes (any fixed
+    /// `d ∈ [0, nb)` derived from the fingerprint alone gives an
+    /// involution; multiply-shift keeps it div-free).
+    #[inline(always)]
+    pub fn alt_index(i: usize, fp: u32, nbuckets: usize) -> usize {
+        let h = mix32(fp);
+        if nbuckets.is_power_of_two() {
+            (i ^ h as usize) & (nbuckets - 1)
+        } else {
+            debug_assert!(i < nbuckets);
+            let d = ((h as u64 * nbuckets as u64) >> 32) as usize;
+            // (d - i) mod nb via one conditional add — no division
+            if d >= i {
+                d - i
+            } else {
+                d + nbuckets - i
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_splitmix_vectors() {
+        // Mirror of python/tests/test_hash_kernel.py known answers.
+        assert_eq!(mix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(mix64(GOLDEN_GAMMA.wrapping_mul(1)), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(mix64(GOLDEN_GAMMA.wrapping_mul(2)), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn mix32_zero_fixed_point() {
+        assert_eq!(mix32(0), 0);
+        assert_ne!(mix32(1), 1);
+    }
+
+    #[test]
+    fn fingerprint_never_zero() {
+        // With a 1-bit mask half of raw fingerprints are 0 — all must remap.
+        let h = Hasher::new(0, 1);
+        for key in 0..4096u64 {
+            assert_eq!(h.hash_key(key).fp, 1);
+        }
+        let h16 = Hasher::new(0, 16);
+        for key in 0..65_536u64 {
+            assert_ne!(h16.hash_key(key).fp, 0);
+        }
+    }
+
+    #[test]
+    fn fp_respects_mask() {
+        for bits in [4u32, 8, 12, 16, 24, 32] {
+            let h = Hasher::new(99, bits);
+            for key in 0..1000u64 {
+                let fp = h.hash_key(key).fp;
+                if bits < 32 {
+                    assert!(fp < (1 << bits), "bits={bits} fp={fp}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fp_bits")]
+    fn zero_bits_rejected() {
+        Hasher::new(0, 0);
+    }
+
+    #[test]
+    fn alt_index_is_involution() {
+        // alt(alt(i)) == i — the displacement property cuckoo needs —
+        // for BOTH the pow2 (xor) and arbitrary (mod-subtract) mappings.
+        let h = Hasher::new(7, 16);
+        for nb in [1usize << 12, 4096 + 1, 3000, 7, 1, 2, 12345] {
+            for key in 0..3_000u64 {
+                let t = h.hash_key(key);
+                let i1 = Hasher::primary_index(t, nb);
+                assert!(i1 < nb);
+                let i2 = Hasher::alt_index(i1, t.fp, nb);
+                assert!(i2 < nb, "nb={nb} i2={i2}");
+                assert_eq!(Hasher::alt_index(i2, t.fp, nb), i1, "nb={nb} key={key}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp_hash_matches_mix32_of_fp() {
+        let h = Hasher::new(3, 16);
+        for key in 0..1000u64 {
+            let t = h.hash_key(key);
+            assert_eq!(t.fp_hash, mix32(t.fp));
+        }
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let a = Hasher::new(1, 16);
+        let b = Hasher::new(2, 16);
+        let same = (0..10_000u64)
+            .filter(|&k| a.hash_key(k).fp == b.hash_key(k).fp)
+            .count();
+        // collisions at ~2^-16 rate; 10k trials should see almost none
+        assert!(same < 50, "same={same}");
+    }
+
+    #[test]
+    fn index_distribution_roughly_uniform() {
+        let h = Hasher::new(11, 16);
+        let nb = 256;
+        let mut counts = vec![0usize; nb];
+        let n = 100_000u64;
+        for key in 0..n {
+            counts[Hasher::primary_index(h.hash_key(key), nb)] += 1;
+        }
+        let expect = n as f64 / nb as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.25, "bucket {i}: count {c} vs expect {expect}");
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! The authoritative in-memory key store backing OCF.
+//!
+//! The paper's OCF "verifies the incoming key with the in-memory
+//! key-store before deleting it" (§IV) and resizes by rebuilding — both
+//! need exact key membership and iteration. This is a purpose-built
+//! open-addressing (linear probing, tombstone) hash set over `u64`
+//! keys, hashed with the crate's `mix64` so behaviour is deterministic
+//! and independent of std's randomized SipHash.
+//!
+//! Capacity is a power of two; load is kept ≤ 7/8 with growth ×2 and
+//! a shrink rebuild when ≤ 1/8 after heavy deletion. Tombstones are
+//! purged on every rebuild.
+
+use super::fingerprint::mix64;
+
+const EMPTY: u64 = u64::MAX;
+const TOMB: u64 = u64::MAX - 1;
+const MIN_CAP: usize = 16;
+
+/// Deterministic open-addressing set of `u64` keys.
+///
+/// Slot values `u64::MAX` (EMPTY) and `u64::MAX - 1` (TOMB) are
+/// sentinels; the two raw keys that collide with them are stored
+/// out-of-band in two bools (any in-band bijection would just move the
+/// collision to two other keys), so the full `u64` domain is usable.
+#[derive(Debug, Clone)]
+pub struct KeyStore {
+    slots: Vec<u64>,
+    len: usize,
+    tombs: usize,
+    /// Out-of-band presence flags for the sentinel-colliding keys
+    /// `EMPTY` (= u64::MAX) and `TOMB` (= u64::MAX - 1) themselves.
+    has_empty_key: bool,
+    has_tomb_key: bool,
+}
+
+impl Default for KeyStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KeyStore {
+    pub fn new() -> Self {
+        Self::with_capacity(MIN_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(MIN_CAP).next_power_of_two();
+        Self {
+            slots: vec![EMPTY; cap],
+            len: 0,
+            tombs: 0,
+            has_empty_key: false,
+            has_tomb_key: false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Heap bytes of the slot array.
+    pub fn memory_bytes(&self) -> usize {
+        self.slots.len() * std::mem::size_of::<u64>()
+    }
+
+    #[inline(always)]
+    fn mask(&self) -> usize {
+        self.slots.len() - 1
+    }
+
+    #[inline(always)]
+    fn start_index(&self, enc: u64) -> usize {
+        (mix64(enc) as usize) & self.mask()
+    }
+
+    /// Insert; returns false if already present.
+    pub fn insert(&mut self, key: u64) -> bool {
+        if key == EMPTY {
+            let fresh = !self.has_empty_key;
+            self.has_empty_key = true;
+            if fresh {
+                self.len += 1;
+            }
+            return fresh;
+        }
+        if key == TOMB {
+            let fresh = !self.has_tomb_key;
+            self.has_tomb_key = true;
+            if fresh {
+                self.len += 1;
+            }
+            return fresh;
+        }
+        if (self.len + self.tombs + 1) * 8 > self.slots.len() * 7 {
+            self.rebuild(self.slots.len() * 2);
+        }
+        let enc = key;
+        let mask = self.mask();
+        let mut i = self.start_index(enc);
+        let mut first_tomb: Option<usize> = None;
+        loop {
+            match self.slots[i] {
+                e if e == enc => return false,
+                EMPTY => {
+                    let at = first_tomb.unwrap_or(i);
+                    if self.slots[at] == TOMB {
+                        self.tombs -= 1;
+                    }
+                    self.slots[at] = enc;
+                    self.len += 1;
+                    return true;
+                }
+                TOMB => {
+                    if first_tomb.is_none() {
+                        first_tomb = Some(i);
+                    }
+                }
+                _ => {}
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        if key == EMPTY {
+            return self.has_empty_key;
+        }
+        if key == TOMB {
+            return self.has_tomb_key;
+        }
+        let enc = key;
+        let mask = self.mask();
+        let mut i = self.start_index(enc);
+        loop {
+            match self.slots[i] {
+                e if e == enc => return true,
+                EMPTY => return false,
+                _ => {}
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Remove; returns whether the key was present.
+    pub fn remove(&mut self, key: u64) -> bool {
+        if key == EMPTY {
+            let had = self.has_empty_key;
+            self.has_empty_key = false;
+            if had {
+                self.len -= 1;
+            }
+            return had;
+        }
+        if key == TOMB {
+            let had = self.has_tomb_key;
+            self.has_tomb_key = false;
+            if had {
+                self.len -= 1;
+            }
+            return had;
+        }
+        let enc = key;
+        let mask = self.mask();
+        let mut i = self.start_index(enc);
+        loop {
+            match self.slots[i] {
+                e if e == enc => {
+                    self.slots[i] = TOMB;
+                    self.len -= 1;
+                    self.tombs += 1;
+                    // shrink when very sparse (and not tiny)
+                    if self.slots.len() > MIN_CAP && self.len * 8 < self.slots.len() {
+                        let target = (self.len * 4).max(MIN_CAP).next_power_of_two();
+                        self.rebuild(target);
+                    }
+                    return true;
+                }
+                EMPTY => return false,
+                _ => {}
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Iterate stored keys (arbitrary order).
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.slots
+            .iter()
+            .filter(|&&s| s != EMPTY && s != TOMB)
+            .copied()
+            .chain(self.has_empty_key.then_some(EMPTY))
+            .chain(self.has_tomb_key.then_some(TOMB))
+    }
+
+    fn rebuild(&mut self, new_cap: usize) {
+        let new_cap = new_cap.max(MIN_CAP).next_power_of_two();
+        let old = std::mem::replace(&mut self.slots, vec![EMPTY; new_cap]);
+        self.tombs = 0;
+        let mask = self.mask();
+        for enc in old.into_iter().filter(|&s| s != EMPTY && s != TOMB) {
+            let mut i = (mix64(enc) as usize) & mask;
+            while self.slots[i] != EMPTY {
+                i = (i + 1) & mask;
+            }
+            self.slots[i] = enc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+    use std::collections::HashSet;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut s = KeyStore::new();
+        assert!(s.insert(5));
+        assert!(!s.insert(5), "duplicate");
+        assert!(s.contains(5));
+        assert!(!s.contains(6));
+        assert!(s.remove(5));
+        assert!(!s.remove(5));
+        assert!(!s.contains(5));
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn reserved_marker_keys_work() {
+        let mut s = KeyStore::new();
+        for k in [u64::MAX, u64::MAX - 1, u64::MAX - 2, 0, 1, 2] {
+            assert!(s.insert(k), "{k}");
+        }
+        for k in [u64::MAX, u64::MAX - 1, u64::MAX - 2, 0, 1, 2] {
+            assert!(s.contains(k), "{k}");
+        }
+        assert!(s.remove(u64::MAX));
+        assert!(!s.contains(u64::MAX));
+        assert!(s.contains(u64::MAX - 1));
+    }
+
+    #[test]
+    fn grows_and_keeps_everything() {
+        let mut s = KeyStore::with_capacity(16);
+        for k in 0..10_000u64 {
+            assert!(s.insert(k));
+        }
+        assert_eq!(s.len(), 10_000);
+        for k in 0..10_000u64 {
+            assert!(s.contains(k), "{k}");
+        }
+        assert!(!s.contains(10_001));
+    }
+
+    #[test]
+    fn shrinks_after_mass_delete() {
+        let mut s = KeyStore::new();
+        for k in 0..10_000u64 {
+            s.insert(k);
+        }
+        let big = s.memory_bytes();
+        for k in 0..9_990u64 {
+            assert!(s.remove(k));
+        }
+        assert!(s.memory_bytes() < big / 4, "{} vs {}", s.memory_bytes(), big);
+        for k in 9_990..10_000u64 {
+            assert!(s.contains(k));
+        }
+    }
+
+    #[test]
+    fn tombstones_dont_break_probe_chains() {
+        // force collisions into chains, delete the middle, keep finding the end
+        let mut s = KeyStore::with_capacity(16);
+        let keys: Vec<u64> = (0..12).collect();
+        for &k in &keys {
+            s.insert(k);
+        }
+        for &k in &keys[..6] {
+            assert!(s.remove(k));
+        }
+        for &k in &keys[6..] {
+            assert!(s.contains(k), "{k}");
+        }
+        // reinsert over tombstones
+        for &k in &keys[..6] {
+            assert!(s.insert(k));
+        }
+        assert_eq!(s.len(), 12);
+    }
+
+    #[test]
+    fn iter_yields_exact_set() {
+        let mut s = KeyStore::new();
+        let mut expect = HashSet::new();
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..5000 {
+            let k = rng.next_u64();
+            s.insert(k);
+            expect.insert(k);
+        }
+        let got: HashSet<u64> = s.iter().collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn randomized_against_std_hashset() {
+        let mut s = KeyStore::new();
+        let mut model = HashSet::new();
+        let mut rng = SplitMix64::new(1234);
+        for step in 0..50_000 {
+            let k = rng.next_below(2000);
+            match rng.next_below(3) {
+                0 => assert_eq!(s.insert(k), model.insert(k), "step {step} insert {k}"),
+                1 => assert_eq!(s.remove(k), model.remove(&k), "step {step} remove {k}"),
+                _ => assert_eq!(s.contains(k), model.contains(&k), "step {step} contains {k}"),
+            }
+            if step % 10_000 == 0 {
+                assert_eq!(s.len(), model.len());
+            }
+        }
+        assert_eq!(s.len(), model.len());
+    }
+}

@@ -1,0 +1,129 @@
+//! Per-filter operation statistics.
+//!
+//! Cheap monotone counters bumped on the hot path (no atomics — filters
+//! are single-writer; cross-thread aggregation happens in
+//! [`crate::metrics`]). Experiments read these to report eviction
+//! pressure, resize churn, and rebuild cost alongside the paper's
+//! occupancy/false-positive numbers.
+
+/// Counters for one filter instance.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FilterStats {
+    /// Successful inserts.
+    pub inserts: u64,
+    /// Inserts rejected with `Full`.
+    pub insert_failures: u64,
+    /// Successful deletes.
+    pub deletes: u64,
+    /// Deletes rejected (key not present / verification failed).
+    pub delete_rejects: u64,
+    /// Membership queries served.
+    pub lookups: u64,
+    /// Cuckoo displacement steps (kicks) performed across all inserts.
+    pub kicks: u64,
+    /// Resizes triggered (grow + shrink).
+    pub resizes_grow: u64,
+    pub resizes_shrink: u64,
+    /// Keys rehashed during resizes (total rebuild work).
+    pub rehashed_keys: u64,
+    /// Times the victim stash was used (traditional filter, Stash policy).
+    pub victim_stashes: u64,
+    /// Fingerprints silently dropped (traditional filter, Drop policy) —
+    /// each one is a latent false negative.
+    pub dropped_fingerprints: u64,
+}
+
+impl FilterStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total resize events.
+    pub fn resizes(&self) -> u64 {
+        self.resizes_grow + self.resizes_shrink
+    }
+
+    /// Mean displacements per successful insert.
+    pub fn kicks_per_insert(&self) -> f64 {
+        if self.inserts == 0 {
+            0.0
+        } else {
+            self.kicks as f64 / self.inserts as f64
+        }
+    }
+
+    /// Mean keys rehashed per resize (rebuild amplification).
+    pub fn rehash_per_resize(&self) -> f64 {
+        let r = self.resizes();
+        if r == 0 {
+            0.0
+        } else {
+            self.rehashed_keys as f64 / r as f64
+        }
+    }
+
+    /// Fold another stats block into this one (aggregation across
+    /// shards/nodes).
+    pub fn merge(&mut self, other: &FilterStats) {
+        self.inserts += other.inserts;
+        self.insert_failures += other.insert_failures;
+        self.deletes += other.deletes;
+        self.delete_rejects += other.delete_rejects;
+        self.lookups += other.lookups;
+        self.kicks += other.kicks;
+        self.resizes_grow += other.resizes_grow;
+        self.resizes_shrink += other.resizes_shrink;
+        self.rehashed_keys += other.rehashed_keys;
+        self.victim_stashes += other.victim_stashes;
+        self.dropped_fingerprints += other.dropped_fingerprints;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_rates() {
+        let s = FilterStats {
+            inserts: 100,
+            kicks: 250,
+            resizes_grow: 3,
+            resizes_shrink: 1,
+            rehashed_keys: 4000,
+            ..Default::default()
+        };
+        assert_eq!(s.resizes(), 4);
+        assert!((s.kicks_per_insert() - 2.5).abs() < 1e-12);
+        assert!((s.rehash_per_resize() - 1000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let s = FilterStats::new();
+        assert_eq!(s.kicks_per_insert(), 0.0);
+        assert_eq!(s.rehash_per_resize(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_fields() {
+        let mut a = FilterStats {
+            inserts: 1,
+            deletes: 2,
+            lookups: 3,
+            ..Default::default()
+        };
+        let b = FilterStats {
+            inserts: 10,
+            deletes: 20,
+            lookups: 30,
+            dropped_fingerprints: 5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.inserts, 11);
+        assert_eq!(a.deletes, 22);
+        assert_eq!(a.lookups, 33);
+        assert_eq!(a.dropped_fingerprints, 5);
+    }
+}

@@ -1,0 +1,97 @@
+//! The membership-filter family.
+//!
+//! * [`CuckooFilter`] — the traditional partial-key cuckoo filter
+//!   (Fan et al., CoNEXT'14): fixed capacity, fast lookups, but fills
+//!   up and (with [`VictimPolicy::Drop`]) exhibits exactly the
+//!   false-negative failure mode the paper observed at load > 0.9.
+//! * [`Ocf`] — the paper's contribution: a cuckoo filter wrapped in a
+//!   dynamic resize controller with two modes, [`Mode::Pre`]
+//!   (static thresholds) and [`Mode::Eof`] (congestion aware), plus
+//!   verified deletes against an authoritative key store.
+//! * [`BloomFilter`], [`CountingBloomFilter`], [`ScalableBloomFilter`],
+//!   [`XorFilter`] — the baselines the paper positions against.
+//!
+//! All dynamic filters implement [`MembershipFilter`], so experiment
+//! drivers and the store layer are generic over the filter choice.
+
+pub mod bloom;
+pub mod bucket;
+pub mod cuckoo;
+pub mod eof;
+pub mod fingerprint;
+pub mod keystore;
+pub mod metrics;
+pub mod ocf;
+pub mod policy;
+pub mod pre;
+pub mod resize;
+pub mod scalable_bloom;
+pub mod xor;
+
+pub use bloom::{BloomFilter, CountingBloomFilter};
+pub use bucket::{BucketTable, FlatTable, PackedTable, SLOTS};
+pub use cuckoo::{CuckooFilter, CuckooParams, VictimPolicy};
+pub use eof::EofPolicy;
+pub use fingerprint::{mix32, mix64, Hasher, HashTriple};
+pub use keystore::KeyStore;
+pub use metrics::FilterStats;
+pub use ocf::{Mode, Ocf, OcfConfig};
+pub use policy::{FilterEvent, Occupancy, ResizeDecision, ResizePolicy};
+pub use pre::PrePolicy;
+pub use scalable_bloom::ScalableBloomFilter;
+pub use xor::XorFilter;
+
+/// Errors from filter mutation.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum FilterError {
+    /// Insert failed: max displacements exhausted and no resize policy
+    /// rescued it (paper §II.B "Max Displacements ... the filter is full").
+    #[error("filter full: {kicks} displacements exhausted at occupancy {occupancy:.3}")]
+    Full { kicks: u32, occupancy: f64 },
+    /// A resize was required but the policy refused (e.g. capacity cap).
+    #[error("resize refused: {0}")]
+    ResizeRefused(String),
+}
+
+/// Common interface over all *dynamic* membership filters (xor is
+/// build-once and only implements lookup).
+pub trait MembershipFilter {
+    /// Add a key. Filters with resize policies may grow; fixed-capacity
+    /// filters return [`FilterError::Full`].
+    fn insert(&mut self, key: u64) -> Result<(), FilterError>;
+
+    /// Membership test. May return false positives at the configured
+    /// rate; must never return a false negative for a resident key
+    /// (the traditional filter's documented violations of this are
+    /// exactly what the paper's experiments surface).
+    fn contains(&self, key: u64) -> bool;
+
+    /// Remove a key. Returns whether something was removed.
+    fn delete(&mut self, key: u64) -> bool;
+
+    /// Number of stored items `s`.
+    fn len(&self) -> usize;
+
+    /// Slot capacity `c` (paper §II.B "Capacity").
+    fn capacity(&self) -> usize;
+
+    /// Occupancy `O = s / c` (paper §II.C).
+    fn occupancy(&self) -> f64 {
+        if self.capacity() == 0 {
+            0.0
+        } else {
+            self.len() as f64 / self.capacity() as f64
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Heap bytes attributable to the *filter* (excludes any
+    /// authoritative key store; see [`Ocf::keystore_bytes`]).
+    fn memory_bytes(&self) -> usize;
+
+    /// Short display name for reports ("cuckoo", "ocf-eof", ...).
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,683 @@
+//! OCF — the Optimized Cuckoo Filter (the paper's contribution).
+//!
+//! A traditional cuckoo filter wrapped with:
+//!
+//! 1. a **resize controller** — [`Mode::Pre`] (static thresholds) or
+//!    [`Mode::Eof`] (congestion aware; see [`super::eof`]) — driven by a
+//!    logical op clock;
+//! 2. an **authoritative key store** for verified deletes (paper §IV:
+//!    "verifying the incoming key with the in-memory key-store, before
+//!    deleting it") and for rebuild-with-rehash on resize;
+//! 3. **safety clamps** ([`super::resize::clamp_capacity`]) so no policy
+//!    decision can shrink the filter into the false-negative zone.
+//!
+//! Invariants (property-tested in `rust/tests/proptests.rs`):
+//!
+//! * no false negatives: every inserted, undeleted key is `contains`;
+//! * `len() ==` number of distinct live keys;
+//! * occupancy stays within `(0, safe_load]` after every operation;
+//! * deletes of never-inserted keys are rejected and never disturb
+//!   resident fingerprints.
+
+use super::cuckoo::{CuckooFilter, CuckooParams, VictimPolicy};
+use super::eof::EofPolicy;
+use super::keystore::KeyStore;
+use super::metrics::FilterStats;
+use super::policy::{FilterEvent, Occupancy, ResizePolicy, StaticPolicy};
+use super::pre::PrePolicy;
+use super::resize::{clamp_capacity, rebuild};
+use super::{FilterError, MembershipFilter};
+
+/// OCF mode of operation, selected at initialization (paper §II.A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Primitive: static occupancy thresholds.
+    Pre,
+    /// Congestion Aware: K-marker monitoring + EWMA growth factor.
+    Eof,
+    /// No resizing — the traditional-cuckoo arm of experiments, run
+    /// through the same wrapper so all arms share one code path.
+    Static,
+}
+
+impl Mode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Pre => "pre",
+            Mode::Eof => "eof",
+            Mode::Static => "static",
+        }
+    }
+}
+
+/// Full OCF configuration (paper §II.B parameters).
+#[derive(Debug, Clone, Copy)]
+pub struct OcfConfig {
+    pub mode: Mode,
+    /// Initial slot capacity `c`. Paper: "recommended that the capacity
+    /// be set twice as much as the number of elements to be inserted".
+    pub initial_capacity: usize,
+    /// Fingerprint width in bits.
+    pub fp_bits: u32,
+    /// Max displacements before an insert is declared Full.
+    pub max_displacements: u32,
+    /// Hash seed.
+    pub seed: u64,
+    /// Outer resize band (both modes).
+    pub o_min: f64,
+    pub o_max: f64,
+    /// K markers (EOF only).
+    pub k_min: f64,
+    pub k_max: f64,
+    /// Estimation gain g (EOF only; paper default 1/16).
+    pub g: f64,
+    /// Capacity floor / optional ceiling.
+    pub min_capacity: usize,
+    pub max_capacity: Option<usize>,
+    /// Safety clamp: resize never leaves occupancy above this.
+    pub safe_load: f64,
+    /// Verify deletes against the key store (paper §IV). Disabling
+    /// exposes the traditional unsafe-delete behaviour for experiments.
+    pub verify_deletes: bool,
+}
+
+impl Default for OcfConfig {
+    fn default() -> Self {
+        Self {
+            mode: Mode::Eof,
+            initial_capacity: 4096,
+            fp_bits: 16,
+            max_displacements: 500,
+            seed: 0x0CF_CAFE,
+            o_min: 0.2,
+            o_max: 0.85,
+            k_min: 0.35,
+            k_max: 0.7,
+            g: 1.0 / 16.0,
+            min_capacity: 1024,
+            max_capacity: None,
+            safe_load: 0.9,
+            verify_deletes: true,
+        }
+    }
+}
+
+impl OcfConfig {
+    /// Paper-recommended sizing for an expected number of keys.
+    pub fn for_expected_items(n: usize) -> Self {
+        Self {
+            initial_capacity: (2 * n).max(1024),
+            ..Self::default()
+        }
+    }
+
+    fn cuckoo_params(&self) -> CuckooParams {
+        CuckooParams {
+            capacity: self.initial_capacity,
+            fp_bits: self.fp_bits,
+            max_displacements: self.max_displacements,
+            seed: self.seed,
+            victim_policy: VictimPolicy::Stash,
+        }
+    }
+}
+
+/// Policy dispatch that keeps `Ocf: Clone` (no `dyn`).
+#[derive(Debug, Clone)]
+enum Policy {
+    Pre(PrePolicy),
+    Eof(EofPolicy),
+    Static(StaticPolicy),
+}
+
+impl Policy {
+    fn as_mut(&mut self) -> &mut dyn ResizePolicy {
+        match self {
+            Policy::Pre(p) => p,
+            Policy::Eof(p) => p,
+            Policy::Static(p) => p,
+        }
+    }
+}
+
+/// The Optimized Cuckoo Filter.
+#[derive(Debug, Clone)]
+pub struct Ocf {
+    filter: CuckooFilter,
+    keys: KeyStore,
+    policy: Policy,
+    cfg: OcfConfig,
+    /// Logical clock: one tick per mutating operation.
+    tick: u64,
+    stats: FilterStats,
+}
+
+impl Ocf {
+    pub fn new(cfg: OcfConfig) -> Self {
+        let policy = match cfg.mode {
+            Mode::Pre => Policy::Pre(PrePolicy::new(cfg.o_min, cfg.o_max, cfg.min_capacity)),
+            Mode::Eof => Policy::Eof(EofPolicy::new(
+                cfg.o_min,
+                cfg.o_max,
+                cfg.k_min,
+                cfg.k_max,
+                cfg.g,
+                cfg.min_capacity,
+            )),
+            Mode::Static => Policy::Static(StaticPolicy),
+        };
+        Self {
+            filter: CuckooFilter::new(cfg.cuckoo_params()),
+            keys: KeyStore::with_capacity(cfg.initial_capacity),
+            policy,
+            cfg,
+            tick: 0,
+            stats: FilterStats::new(),
+        }
+    }
+
+    pub fn config(&self) -> &OcfConfig {
+        &self.cfg
+    }
+
+    /// Aggregated stats: wrapper-level counters merged with the inner
+    /// filter's (kicks etc. live in the inner filter).
+    pub fn stats(&self) -> FilterStats {
+        let mut s = self.stats.clone();
+        s.kicks = self.filter.stats.kicks;
+        s.victim_stashes = self.filter.stats.victim_stashes;
+        s.dropped_fingerprints = self.filter.stats.dropped_fingerprints;
+        s
+    }
+
+    /// Current EWMA growth factor (EOF mode; `None` otherwise).
+    pub fn alpha(&self) -> Option<f64> {
+        match &self.policy {
+            Policy::Eof(p) => Some(p.alpha()),
+            _ => None,
+        }
+    }
+
+    /// Bytes of the authoritative key store (reported separately from
+    /// the filter: the store exists in the database node anyway — it is
+    /// the memtable index — so the paper's memory comparisons count
+    /// filter bytes only).
+    pub fn keystore_bytes(&self) -> usize {
+        self.keys.memory_bytes()
+    }
+
+    /// Exact (non-probabilistic) membership via the key store.
+    pub fn contains_exact(&self, key: u64) -> bool {
+        self.keys.contains(key)
+    }
+
+    /// Serialize the filter table to the frozen layout the XLA probe
+    /// kernel / SSTable filters consume.
+    pub fn to_frozen(&self) -> Vec<u32> {
+        self.filter.to_frozen()
+    }
+
+    pub fn hasher(&self) -> super::fingerprint::Hasher {
+        self.filter.hasher()
+    }
+
+    pub fn nbuckets(&self) -> usize {
+        self.filter.nbuckets()
+    }
+
+    /// Insert with a pre-computed hash triple (from the XLA batch
+    /// executor) — skips the native hash. The triple MUST be
+    /// `self.hasher().hash_key(key)`; debug builds assert it.
+    pub fn insert_hashed(
+        &mut self,
+        key: u64,
+        triple: super::fingerprint::HashTriple,
+    ) -> Result<(), FilterError> {
+        debug_assert_eq!(triple, self.hasher().hash_key(key), "foreign triple");
+        if !self.keys.insert(key) {
+            return Ok(());
+        }
+        self.tick += 1;
+        match self.filter.insert_triple(triple) {
+            Ok(()) => {
+                self.stats.inserts += 1;
+                let occ = self.occupancy_snapshot();
+                if let Some(d) = self
+                    .policy
+                    .as_mut()
+                    .on_event(FilterEvent::Insert, occ, self.tick)
+                {
+                    self.maybe_resize(d.new_capacity, d.grow);
+                }
+                Ok(())
+            }
+            Err(e) => {
+                let occ = self.occupancy_snapshot();
+                match self
+                    .policy
+                    .as_mut()
+                    .on_event(FilterEvent::InsertFull, occ, self.tick)
+                {
+                    Some(d) => {
+                        if !self.maybe_resize(d.new_capacity, d.grow) {
+                            self.maybe_resize(self.filter.capacity() * 2, true);
+                        }
+                        self.stats.inserts += 1;
+                        Ok(())
+                    }
+                    None => {
+                        self.keys.remove(key);
+                        self.stats.insert_failures += 1;
+                        Err(e)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Membership with a pre-computed triple.
+    #[inline]
+    pub fn contains_triple(&self, triple: super::fingerprint::HashTriple) -> bool {
+        self.filter.contains_triple(triple)
+    }
+
+    /// Verified delete with a pre-computed triple.
+    pub fn delete_hashed(&mut self, key: u64, triple: super::fingerprint::HashTriple) -> bool {
+        debug_assert_eq!(triple, self.hasher().hash_key(key), "foreign triple");
+        if !self.keys.remove(key) && self.cfg.verify_deletes {
+            self.stats.delete_rejects += 1;
+            return false;
+        }
+        self.tick += 1;
+        let removed = self.filter.delete_triple(triple);
+        if removed {
+            self.stats.deletes += 1;
+            let occ = self.occupancy_snapshot();
+            if let Some(d) = self
+                .policy
+                .as_mut()
+                .on_event(FilterEvent::Delete, occ, self.tick)
+            {
+                self.maybe_resize(d.new_capacity, d.grow);
+            }
+        } else {
+            self.stats.delete_rejects += 1;
+        }
+        removed
+    }
+
+    fn occupancy_snapshot(&self) -> Occupancy {
+        Occupancy {
+            len: self.filter.len(),
+            capacity: self.filter.capacity(),
+        }
+    }
+
+    /// Apply a policy decision (clamped); returns whether a resize ran.
+    fn maybe_resize(&mut self, demanded: usize, grow: bool) -> bool {
+        let clamped = clamp_capacity(
+            demanded,
+            self.keys.len(),
+            self.cfg.safe_load,
+            self.cfg.min_capacity,
+            self.cfg.max_capacity,
+        );
+        // Skip no-op resizes (clamp pulled the target back to the
+        // bucket count we already have).
+        let current = self.filter.capacity();
+        let would =
+            crate::util::ceil_div(clamped.max(super::SLOTS), super::SLOTS) * super::SLOTS;
+        if would == current {
+            return false;
+        }
+        let (new_filter, outcome) = rebuild(&self.keys, clamped, *self.filter.params());
+        // carry over cumulative kick stats so they aren't lost on rebuild
+        let mut nf = new_filter;
+        nf.stats.kicks += self.filter.stats.kicks;
+        nf.stats.victim_stashes += self.filter.stats.victim_stashes;
+        nf.stats.dropped_fingerprints += self.filter.stats.dropped_fingerprints;
+        self.filter = nf;
+        if grow {
+            self.stats.resizes_grow += 1;
+        } else {
+            self.stats.resizes_shrink += 1;
+        }
+        self.stats.rehashed_keys += outcome.keys_rehashed;
+        self.policy
+            .as_mut()
+            .on_resized(outcome.achieved_capacity, self.tick);
+        true
+    }
+}
+
+impl MembershipFilter for Ocf {
+    /// Insert (idempotent — OCF mirrors the upsert semantics of the
+    /// data stores it serves; a duplicate insert is an Ok no-op).
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        if !self.keys.insert(key) {
+            return Ok(());
+        }
+        self.tick += 1;
+
+        match self.filter.insert(key) {
+            Ok(()) => {
+                self.stats.inserts += 1;
+                let occ = self.occupancy_snapshot();
+                if let Some(d) = self
+                    .policy
+                    .as_mut()
+                    .on_event(FilterEvent::Insert, occ, self.tick)
+                {
+                    self.maybe_resize(d.new_capacity, d.grow);
+                }
+                Ok(())
+            }
+            Err(e) => {
+                // Emergency: displacement budget exhausted. The key IS
+                // in the key store; a forced rebuild (policy-directed or
+                // doubling fallback) will place it.
+                let occ = self.occupancy_snapshot();
+                let decision =
+                    self.policy
+                        .as_mut()
+                        .on_event(FilterEvent::InsertFull, occ, self.tick);
+                match decision {
+                    Some(d) => {
+                        // The rebuild re-inserts from the key store, which
+                        // already holds `key`. If the clamp no-ops the
+                        // decision, force a doubling rebuild so the wedged
+                        // key always lands.
+                        if !self.maybe_resize(d.new_capacity, d.grow) {
+                            self.maybe_resize(self.filter.capacity() * 2, true);
+                        }
+                        self.stats.inserts += 1;
+                        Ok(())
+                    }
+                    None => {
+                        // Static mode: surface the failure like the
+                        // traditional filter would.
+                        self.keys.remove(key);
+                        self.stats.insert_failures += 1;
+                        Err(e)
+                    }
+                }
+            }
+        }
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.filter.contains(key)
+    }
+
+    /// Verified delete (paper §IV): the key must exist in the
+    /// authoritative store, otherwise the delete is rejected *before*
+    /// touching any fingerprint — never evicts a collider's entry.
+    /// (`remove` doubles as the verification probe — one keystore walk,
+    /// not two; perf log step 3.)
+    fn delete(&mut self, key: u64) -> bool {
+        if !self.keys.remove(key) && self.cfg.verify_deletes {
+            // absent key: rejected before touching any fingerprint
+            // (unverified mode falls through to the raw unsafe delete,
+            // faithfully reproducing the traditional behaviour)
+            self.stats.delete_rejects += 1;
+            return false;
+        }
+        self.tick += 1;
+        let removed = self.filter.delete(key);
+        if removed {
+            self.stats.deletes += 1;
+            let occ = self.occupancy_snapshot();
+            if let Some(d) = self
+                .policy
+                .as_mut()
+                .on_event(FilterEvent::Delete, occ, self.tick)
+            {
+                self.maybe_resize(d.new_capacity, d.grow);
+            }
+        } else {
+            self.stats.delete_rejects += 1;
+        }
+        removed
+    }
+
+    fn len(&self) -> usize {
+        self.filter.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.filter.capacity()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.filter.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        match self.cfg.mode {
+            Mode::Pre => "ocf-pre",
+            Mode::Eof => "ocf-eof",
+            Mode::Static => "ocf-static",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ocf(mode: Mode) -> Ocf {
+        Ocf::new(OcfConfig {
+            mode,
+            initial_capacity: 1024,
+            min_capacity: 256,
+            ..OcfConfig::default()
+        })
+    }
+
+    #[test]
+    fn insert_beyond_initial_capacity_grows() {
+        for mode in [Mode::Pre, Mode::Eof] {
+            let mut f = ocf(mode);
+            for k in 0..50_000u64 {
+                f.insert(k).unwrap_or_else(|e| panic!("{mode:?} k={k}: {e}"));
+            }
+            assert_eq!(f.len(), 50_000);
+            assert!(f.capacity() >= 50_000);
+            assert!(f.stats().resizes_grow > 0, "{mode:?}");
+            for k in (0..50_000u64).step_by(97) {
+                assert!(f.contains(k), "{mode:?} key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn static_mode_fills_like_traditional() {
+        let mut f = ocf(Mode::Static);
+        let mut failed = 0;
+        for k in 0..2000u64 {
+            if f.insert(k).is_err() {
+                failed += 1;
+            }
+        }
+        assert!(failed > 0, "static mode must hit Full");
+        assert_eq!(f.stats().resizes(), 0);
+    }
+
+    #[test]
+    fn no_false_negatives_through_resizes() {
+        let mut f = ocf(Mode::Eof);
+        for k in 0..20_000u64 {
+            f.insert(k).unwrap();
+        }
+        for k in 0..10_000u64 {
+            assert!(f.delete(k), "{k}");
+        }
+        for k in 10_000..20_000u64 {
+            assert!(f.contains(k), "false negative {k}");
+        }
+        assert_eq!(f.len(), 10_000);
+    }
+
+    #[test]
+    fn shrinks_after_delete_storm() {
+        for mode in [Mode::Pre, Mode::Eof] {
+            let mut f = ocf(mode);
+            for k in 0..40_000u64 {
+                f.insert(k).unwrap();
+            }
+            let big = f.capacity();
+            for k in 0..39_000u64 {
+                assert!(f.delete(k));
+            }
+            assert!(
+                f.capacity() < big,
+                "{mode:?}: {} !< {big}",
+                f.capacity()
+            );
+            assert!(f.stats().resizes_shrink > 0, "{mode:?}");
+            // survivors still present
+            for k in 39_000..40_000u64 {
+                assert!(f.contains(k), "{mode:?} {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn occupancy_never_exceeds_safe_load_after_ops() {
+        let mut f = ocf(Mode::Eof);
+        for k in 0..30_000u64 {
+            f.insert(k).unwrap();
+            assert!(
+                f.occupancy() <= f.config().safe_load + 1e-9,
+                "occ {} at k={k}",
+                f.occupancy()
+            );
+        }
+        for k in 0..30_000u64 {
+            f.delete(k);
+            assert!(f.occupancy() <= f.config().safe_load + 1e-9);
+        }
+    }
+
+    #[test]
+    fn verified_delete_rejects_absent_keys() {
+        let mut f = ocf(Mode::Eof);
+        for k in 0..5000u64 {
+            f.insert(k).unwrap();
+        }
+        // try to delete a massive range of never-inserted keys — even
+        // fingerprint colliders must be rejected by verification
+        let mut rejected = 0;
+        for k in 1_000_000..1_010_000u64 {
+            assert!(!f.delete(k), "{k} must be rejected");
+            rejected += 1;
+        }
+        assert_eq!(rejected, 10_000);
+        // zero collateral damage
+        for k in 0..5000u64 {
+            assert!(f.contains(k), "{k}");
+        }
+        assert_eq!(f.stats().delete_rejects, 10_000);
+    }
+
+    #[test]
+    fn unverified_delete_reproduces_unsafe_behaviour() {
+        let mut f = Ocf::new(OcfConfig {
+            verify_deletes: false,
+            initial_capacity: 2048,
+            mode: Mode::Static,
+            ..OcfConfig::default()
+        });
+        for k in 0..1500u64 {
+            f.insert(k).unwrap();
+        }
+        // find a collider and delete it — unsafe mode lets it through
+        if let Some(c) = (1_000_000..5_000_000u64).find(|&k| f.contains(k)) {
+            assert!(f.delete(c), "unsafe mode deletes the collider");
+            let fns = (0..1500u64).filter(|&k| !f.contains(k)).count();
+            assert!(fns > 0, "a resident key must be damaged");
+        }
+    }
+
+    #[test]
+    fn duplicate_insert_is_idempotent() {
+        let mut f = ocf(Mode::Eof);
+        f.insert(7).unwrap();
+        f.insert(7).unwrap();
+        f.insert(7).unwrap();
+        assert_eq!(f.len(), 1);
+        assert!(f.delete(7));
+        assert!(!f.delete(7));
+        assert_eq!(f.len(), 0);
+    }
+
+    #[test]
+    fn pre_mode_overshoots_eof_in_memory() {
+        // the paper's Table I / Fig 3 shape: PRE's doubling staircase
+        // overshoots, EOF converges to fine-grained growth. At any
+        // *single* stop point PRE may happen to sit near the dense end
+        // of its staircase, so the robust claim is about the mean
+        // occupancy across the whole insert trajectory.
+        let n = 100_000u64;
+        let mut pre = Ocf::new(OcfConfig {
+            mode: Mode::Pre,
+            initial_capacity: 1024,
+            ..OcfConfig::default()
+        });
+        let mut eof = Ocf::new(OcfConfig {
+            mode: Mode::Eof,
+            initial_capacity: 1024,
+            ..OcfConfig::default()
+        });
+        let (mut sum_pre, mut sum_eof, mut samples) = (0.0, 0.0, 0u32);
+        for k in 0..n {
+            pre.insert(k).unwrap();
+            eof.insert(k).unwrap();
+            if k % 1000 == 999 {
+                sum_pre += pre.occupancy();
+                sum_eof += eof.occupancy();
+                samples += 1;
+            }
+        }
+        let (mp, me) = (sum_pre / samples as f64, sum_eof / samples as f64);
+        assert!(
+            me > mp + 0.05,
+            "EOF must run denser than PRE on average: eof={me:.3} pre={mp:.3}"
+        );
+    }
+
+    #[test]
+    fn max_capacity_cap_respected() {
+        let mut f = Ocf::new(OcfConfig {
+            mode: Mode::Eof,
+            initial_capacity: 1024,
+            max_capacity: Some(8192),
+            ..OcfConfig::default()
+        });
+        for k in 0..6000u64 {
+            f.insert(k).unwrap();
+        }
+        // cap is 8192 slots → 2048 buckets; power-of-2 rounding may give
+        // one step above, but the safety floor dominates if violated
+        assert!(f.capacity() <= 16_384, "{}", f.capacity());
+    }
+
+    #[test]
+    fn alpha_visible_in_eof_mode_only() {
+        assert!(ocf(Mode::Eof).alpha().is_some());
+        assert!(ocf(Mode::Pre).alpha().is_none());
+        assert!(ocf(Mode::Static).alpha().is_none());
+    }
+
+    #[test]
+    fn stats_track_rebuild_work() {
+        let mut f = ocf(Mode::Pre);
+        for k in 0..10_000u64 {
+            f.insert(k).unwrap();
+        }
+        let s = f.stats();
+        assert!(s.rehashed_keys > 0);
+        assert!(s.rehash_per_resize() > 0.0);
+        assert_eq!(s.inserts, 10_000);
+    }
+}

@@ -1,0 +1,106 @@
+//! Resize-policy abstraction shared by PRE and EOF.
+//!
+//! A policy observes every filter mutation (with a *logical clock* —
+//! one tick per operation — rather than wallclock, so experiments are
+//! deterministic; paper-reconstruction: the paper's "rate" is
+//! mutations per unit time, and op-ticks preserve exactly the ratio
+//! semantics Algorithm 1 needs while making runs reproducible) and may
+//! demand a resize to a new slot capacity.
+
+/// A filter mutation visible to the resize policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FilterEvent {
+    Insert,
+    Delete,
+    /// An insert that failed with `Full` — an emergency signal that
+    /// forces a grow decision regardless of thresholds.
+    InsertFull,
+}
+
+/// Occupancy snapshot handed to the policy with each event.
+#[derive(Debug, Clone, Copy)]
+pub struct Occupancy {
+    /// Stored items `s`.
+    pub len: usize,
+    /// Slot capacity `c`.
+    pub capacity: usize,
+}
+
+impl Occupancy {
+    /// `O = s / c` (paper §II.C).
+    #[inline]
+    pub fn ratio(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            self.len as f64 / self.capacity as f64
+        }
+    }
+}
+
+/// A demanded resize.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResizeDecision {
+    /// New slot capacity `c` (the filter rounds buckets to a power of 2).
+    pub new_capacity: usize,
+    /// Whether this is a grow (for stats attribution).
+    pub grow: bool,
+}
+
+/// Resize controller interface.
+pub trait ResizePolicy: std::fmt::Debug {
+    /// Observe one mutation; optionally demand a resize. `tick` is the
+    /// logical time (monotone operation counter, maintained by the
+    /// filter wrapper).
+    fn on_event(&mut self, event: FilterEvent, occ: Occupancy, tick: u64)
+        -> Option<ResizeDecision>;
+
+    /// Called after the wrapper actually performed a resize (the
+    /// achieved capacity may differ from the demanded one due to
+    /// power-of-two rounding / clamps).
+    fn on_resized(&mut self, achieved_capacity: usize, tick: u64);
+
+    /// Display name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// A no-op policy: never resizes (turns `Ocf` into a plain cuckoo
+/// filter — used for the "traditional" arm of the experiments so all
+/// arms share one code path).
+#[derive(Debug, Clone, Default)]
+pub struct StaticPolicy;
+
+impl ResizePolicy for StaticPolicy {
+    fn on_event(&mut self, _: FilterEvent, _: Occupancy, _: u64) -> Option<ResizeDecision> {
+        None
+    }
+
+    fn on_resized(&mut self, _: usize, _: u64) {}
+
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_ratio() {
+        let o = Occupancy { len: 3, capacity: 4 };
+        assert!((o.ratio() - 0.75).abs() < 1e-12);
+        let z = Occupancy { len: 0, capacity: 0 };
+        assert_eq!(z.ratio(), 0.0);
+    }
+
+    #[test]
+    fn static_policy_never_resizes() {
+        let mut p = StaticPolicy;
+        for tick in 0..100 {
+            let occ = Occupancy { len: tick as usize, capacity: 16 };
+            assert!(p.on_event(FilterEvent::Insert, occ, tick).is_none());
+            assert!(p.on_event(FilterEvent::InsertFull, occ, tick).is_none());
+        }
+    }
+}

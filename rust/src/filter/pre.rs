@@ -1,0 +1,179 @@
+//! PRE — the Primitive mode of OCF (paper §II.A.1, §II.C).
+//!
+//! Static-threshold resizing:
+//!
+//! * `O > O_max` → capacity doubles (`c = 2c`).
+//! * `O < O_min` → capacity shrinks by a tenth (`c = c - c/10`) —
+//!   *not* halved; the paper is explicit that halving would overshoot.
+//!
+//! The paper's caveat (§II.A.1): beyond ~1M keys, delete storms shrink
+//! the filter linearly (10% steps) while occupancy stays above the safe
+//! limit — PRE has no memory of the rate that got it there, so it keeps
+//! re-triggering. We reproduce that behaviour faithfully; the guard
+//! rails (never shrink below `len / safe_load`, floor capacity) are
+//! safety clamps the wrapper applies to *any* policy, and are what keeps
+//! "breaking the implementation" (false negatives) out of the library
+//! while still letting experiments show PRE's thrash.
+
+use super::policy::{FilterEvent, Occupancy, ResizeDecision, ResizePolicy};
+
+/// Static-threshold resize policy.
+#[derive(Debug, Clone)]
+pub struct PrePolicy {
+    /// Shrink threshold `O_min` (paper default 0.2).
+    pub o_min: f64,
+    /// Grow threshold `O_max` (paper default 0.85 — below the 0.9
+    /// failure load the paper observed, leaving eviction headroom).
+    pub o_max: f64,
+    /// Never shrink below this capacity.
+    pub min_capacity: usize,
+}
+
+impl Default for PrePolicy {
+    fn default() -> Self {
+        Self {
+            o_min: 0.2,
+            o_max: 0.85,
+            min_capacity: 1024,
+        }
+    }
+}
+
+impl PrePolicy {
+    pub fn new(o_min: f64, o_max: f64, min_capacity: usize) -> Self {
+        assert!(
+            0.0 <= o_min && o_min < o_max && o_max <= 1.0,
+            "need 0 <= o_min < o_max <= 1, got [{o_min}, {o_max}]"
+        );
+        Self {
+            o_min,
+            o_max,
+            min_capacity,
+        }
+    }
+}
+
+impl ResizePolicy for PrePolicy {
+    fn on_event(
+        &mut self,
+        event: FilterEvent,
+        occ: Occupancy,
+        _tick: u64,
+    ) -> Option<ResizeDecision> {
+        let o = occ.ratio();
+        match event {
+            FilterEvent::Insert | FilterEvent::InsertFull => {
+                // InsertFull forces growth even if thresholds say no —
+                // the table hit its displacement limit early (clustered
+                // load), so staying put would wedge the filter.
+                if o > self.o_max || event == FilterEvent::InsertFull {
+                    return Some(ResizeDecision {
+                        new_capacity: occ.capacity * 2, // paper: "the bucket is doubled"
+                        grow: true,
+                    });
+                }
+            }
+            FilterEvent::Delete => {
+                if o < self.o_min && occ.capacity > self.min_capacity {
+                    // paper: "the new size is calculated by c = (c - c/10)"
+                    let c = occ.capacity - occ.capacity / 10;
+                    if c >= self.min_capacity && c < occ.capacity {
+                        return Some(ResizeDecision {
+                            new_capacity: c,
+                            grow: false,
+                        });
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn on_resized(&mut self, _achieved: usize, _tick: u64) {}
+
+    fn name(&self) -> &'static str {
+        "pre"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn occ(len: usize, cap: usize) -> Occupancy {
+        Occupancy { len, capacity: cap }
+    }
+
+    #[test]
+    fn grows_by_doubling_above_o_max() {
+        let mut p = PrePolicy::default();
+        let d = p
+            .on_event(FilterEvent::Insert, occ(870, 1000), 0)
+            .expect("0.87 > 0.85 must grow");
+        assert!(d.grow);
+        assert_eq!(d.new_capacity, 2000);
+    }
+
+    #[test]
+    fn no_resize_in_band() {
+        let mut p = PrePolicy::default();
+        assert!(p.on_event(FilterEvent::Insert, occ(500, 1000), 0).is_none());
+        assert!(p.on_event(FilterEvent::Delete, occ(500, 1000), 0).is_none());
+        // boundary: exactly O_max does not grow (strict >)
+        assert!(p.on_event(FilterEvent::Insert, occ(850, 1000), 0).is_none());
+    }
+
+    #[test]
+    fn shrinks_by_tenth_below_o_min() {
+        let mut p = PrePolicy::new(0.2, 0.85, 100);
+        let d = p
+            .on_event(FilterEvent::Delete, occ(100, 1000), 0)
+            .expect("0.1 < 0.2 must shrink");
+        assert!(!d.grow);
+        assert_eq!(d.new_capacity, 900); // c - c/10
+    }
+
+    #[test]
+    fn shrink_respects_floor() {
+        let mut p = PrePolicy::new(0.2, 0.85, 1000);
+        assert!(
+            p.on_event(FilterEvent::Delete, occ(10, 1000), 0).is_none(),
+            "at the floor, no shrink"
+        );
+        // just above the floor but target would cross it → refuse
+        assert!(p.on_event(FilterEvent::Delete, occ(10, 1100), 0).is_none());
+    }
+
+    #[test]
+    fn insert_full_forces_growth_even_below_threshold() {
+        let mut p = PrePolicy::default();
+        let d = p
+            .on_event(FilterEvent::InsertFull, occ(500, 1000), 0)
+            .expect("Full must force grow");
+        assert!(d.grow);
+        assert_eq!(d.new_capacity, 2000);
+    }
+
+    #[test]
+    fn repeated_shrink_is_linear_not_geometric() {
+        // the paper's §II.A.1 criticism: 10% steps, slow under delete storms
+        let mut p = PrePolicy::new(0.2, 0.85, 100);
+        let mut cap = 10_000usize;
+        let mut steps = 0;
+        while let Some(d) = p.on_event(FilterEvent::Delete, occ(100, cap), steps) {
+            cap = d.new_capacity;
+            steps += 1;
+            if steps > 100 {
+                break;
+            }
+        }
+        // halving would take ~4 steps to reach 500; 10% steps take ~22
+        assert!(steps > 15, "took {steps} steps (linear-ish shrink expected)");
+    }
+
+    #[test]
+    #[should_panic(expected = "o_min < o_max")]
+    fn bad_thresholds_rejected() {
+        PrePolicy::new(0.9, 0.2, 10);
+    }
+}

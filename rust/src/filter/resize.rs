@@ -1,0 +1,160 @@
+//! Resize machinery: clamped capacity targets + rebuild-with-rehash.
+//!
+//! OCF resizes by *rebuilding*: allocate a fresh table at the target
+//! capacity and re-insert every authoritative key (paper: "the filter
+//! resets"). A rebuild can itself fail if the target is too tight for
+//! cuckoo placement (clustered fingerprints); [`rebuild`] retries with
+//! doubled capacity until placement succeeds, so a resize never leaves
+//! the filter wedged.
+
+use super::cuckoo::{CuckooFilter, CuckooParams};
+use super::keystore::KeyStore;
+use super::MembershipFilter;
+
+/// Clamp a demanded capacity so the post-resize filter is safe:
+///
+/// * never below `min_capacity`;
+/// * never below `len / safe_load` (shrinking past this would push
+///   occupancy above the eviction-failure zone — the exact
+///   "O remains above the safe limit → false negatives" failure the
+///   paper attributes to PRE at scale, which the *library* must refuse
+///   even when the policy demands it);
+/// * never above `max_capacity` if one is set.
+pub fn clamp_capacity(
+    demanded: usize,
+    len: usize,
+    safe_load: f64,
+    min_capacity: usize,
+    max_capacity: Option<usize>,
+) -> usize {
+    debug_assert!(safe_load > 0.0 && safe_load <= 1.0);
+    let safety_floor = (len as f64 / safe_load).ceil() as usize;
+    let mut c = demanded.max(min_capacity).max(safety_floor);
+    if let Some(max) = max_capacity {
+        c = c.min(max.max(safety_floor));
+    }
+    c
+}
+
+/// Outcome of a rebuild.
+#[derive(Debug, Clone, Copy)]
+pub struct RebuildOutcome {
+    /// Capacity actually achieved (post power-of-two rounding and any
+    /// retry doublings).
+    pub achieved_capacity: usize,
+    /// Placement attempts (1 = first try succeeded).
+    pub attempts: u32,
+    /// Total keys rehashed across all attempts.
+    pub keys_rehashed: u64,
+}
+
+/// Build a fresh filter at `target_capacity` containing every key in
+/// `keys`, doubling on placement failure. The new filter keeps the old
+/// seed/fp parameters from `params` (updated capacity).
+pub fn rebuild(
+    keys: &KeyStore,
+    target_capacity: usize,
+    params: CuckooParams,
+) -> (CuckooFilter, RebuildOutcome) {
+    let mut capacity = target_capacity.max(super::bucket::SLOTS);
+    let mut attempts = 0u32;
+    let mut rehashed = 0u64;
+    loop {
+        attempts += 1;
+        let mut f = CuckooFilter::new(CuckooParams {
+            capacity,
+            ..params
+        });
+        let mut ok = true;
+        for key in keys.iter() {
+            rehashed += 1;
+            if f.insert(key).is_err() {
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            return (
+                f,
+                RebuildOutcome {
+                    achieved_capacity: capacity,
+                    attempts,
+                    keys_rehashed: rehashed,
+                },
+            );
+        }
+        capacity *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::MembershipFilter;
+
+    fn keyset(n: u64) -> KeyStore {
+        let mut ks = KeyStore::new();
+        for k in 0..n {
+            ks.insert(k);
+        }
+        ks
+    }
+
+    #[test]
+    fn clamp_basics() {
+        // demanded wins when safe
+        assert_eq!(clamp_capacity(1000, 100, 0.9, 64, None), 1000);
+        // min_capacity floor
+        assert_eq!(clamp_capacity(10, 0, 0.9, 64, None), 64);
+        // safety floor: can't shrink below len/safe_load
+        assert_eq!(clamp_capacity(100, 900, 0.9, 64, None), 1000);
+        // max cap
+        assert_eq!(clamp_capacity(10_000, 100, 0.9, 64, Some(2048)), 2048);
+        // max cap never violates the safety floor
+        assert_eq!(clamp_capacity(10_000, 1800, 0.9, 64, Some(1000)), 2000);
+    }
+
+    #[test]
+    fn rebuild_preserves_all_keys() {
+        let ks = keyset(5000);
+        let (f, out) = rebuild(&ks, 8192, CuckooParams::default());
+        assert_eq!(f.len(), 5000);
+        for k in 0..5000u64 {
+            assert!(f.contains(k), "{k}");
+        }
+        assert_eq!(out.attempts, 1);
+        assert_eq!(out.keys_rehashed, 5000);
+        assert!(out.achieved_capacity >= 8192);
+    }
+
+    #[test]
+    fn rebuild_retries_on_too_tight_target() {
+        let ks = keyset(4000);
+        // demand a capacity barely above len → guaranteed placement pain
+        let (f, out) = rebuild(&ks, 4096, CuckooParams::default());
+        assert_eq!(f.len(), 4000);
+        // whether it took 1 or more attempts, everything must be present
+        for k in 0..4000u64 {
+            assert!(f.contains(k), "{k}");
+        }
+        assert!(out.achieved_capacity >= 4096);
+        assert!(out.attempts >= 1);
+    }
+
+    #[test]
+    fn rebuild_impossible_target_still_succeeds_by_doubling() {
+        let ks = keyset(1000);
+        let (f, out) = rebuild(&ks, 8, CuckooParams::default()); // absurd target
+        assert_eq!(f.len(), 1000);
+        assert!(out.achieved_capacity >= 1024, "{}", out.achieved_capacity);
+        assert!(out.attempts > 1);
+    }
+
+    #[test]
+    fn rebuild_empty_keystore() {
+        let ks = KeyStore::new();
+        let (f, out) = rebuild(&ks, 64, CuckooParams::default());
+        assert_eq!(f.len(), 0);
+        assert_eq!(out.keys_rehashed, 0);
+    }
+}

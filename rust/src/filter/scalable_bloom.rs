@@ -1,0 +1,180 @@
+//! Scalable Bloom Filter (Almeida, Baquero, Preguiça & Hutchison 2007 —
+//! the paper's reference [1]).
+//!
+//! The classic answer to "bloom filters must know n in advance": a
+//! series of plain bloom slices. When the current slice reaches its
+//! design fill, a new slice is added with `growth`× the capacity and a
+//! `tightening`× smaller error budget, so the compound FPR converges to
+//! `fpr0 / (1 - tightening)`.
+//!
+//! Included as the dynamic-sizing baseline OCF actually competes with:
+//! it grows but (like all blooms) cannot delete, which is the axis the
+//! paper's burst experiments exercise.
+
+use super::bloom::BloomFilter;
+use super::{FilterError, MembershipFilter};
+
+/// Growth/tightening parameters from the SBF paper.
+#[derive(Debug, Clone, Copy)]
+pub struct SbfParams {
+    /// Capacity of the first slice.
+    pub initial_capacity: usize,
+    /// Compound target false-positive rate.
+    pub fpr: f64,
+    /// Slice-capacity growth factor (paper: s = 2 for smooth growth).
+    pub growth: usize,
+    /// Error tightening ratio r (paper recommends 0.8–0.9).
+    pub tightening: f64,
+}
+
+impl Default for SbfParams {
+    fn default() -> Self {
+        Self {
+            initial_capacity: 1024,
+            fpr: 0.01,
+            growth: 2,
+            tightening: 0.85,
+        }
+    }
+}
+
+/// A growing series of bloom slices.
+#[derive(Debug, Clone)]
+pub struct ScalableBloomFilter {
+    slices: Vec<(BloomFilter, usize)>, // (slice, design capacity)
+    params: SbfParams,
+    seed: u64,
+    len: usize,
+}
+
+impl ScalableBloomFilter {
+    pub fn new(params: SbfParams, seed: u64) -> Self {
+        let mut s = Self {
+            slices: Vec::new(),
+            params,
+            seed,
+            len: 0,
+        };
+        s.push_slice();
+        s
+    }
+
+    pub fn slice_count(&self) -> usize {
+        self.slices.len()
+    }
+
+    fn push_slice(&mut self) {
+        let i = self.slices.len();
+        let cap = self.params.initial_capacity * self.params.growth.pow(i as u32);
+        // slice error budget: fpr0 * (1-r) * r^i keeps the compound sum ≤ fpr
+        let fpr_i = self.params.fpr * (1.0 - self.params.tightening)
+            * self.params.tightening.powi(i as i32);
+        let fpr_i = fpr_i.max(1e-9);
+        let slice = BloomFilter::new(cap, fpr_i, self.seed.wrapping_add(i as u64));
+        self.slices.push((slice, cap));
+    }
+}
+
+impl MembershipFilter for ScalableBloomFilter {
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        {
+            let (last, cap) = self.slices.last().unwrap();
+            if last.len() >= *cap {
+                self.push_slice();
+            }
+        }
+        let (last, _) = self.slices.last_mut().unwrap();
+        last.insert(key)?;
+        self.len += 1;
+        Ok(())
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.slices.iter().any(|(s, _)| s.contains(key))
+    }
+
+    /// Still a bloom: no deletes.
+    fn delete(&mut self, _key: u64) -> bool {
+        false
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.slices.iter().map(|(_, c)| *c).sum()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.slices.iter().map(|(s, _)| s.memory_bytes()).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "scalable-bloom"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut f = ScalableBloomFilter::new(SbfParams::default(), 3);
+        for k in 0..50_000u64 {
+            f.insert(k).unwrap();
+        }
+        assert!(f.slice_count() > 1, "slices={}", f.slice_count());
+        for k in 0..50_000u64 {
+            assert!(f.contains(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn compound_fpr_stays_near_target() {
+        let mut f = ScalableBloomFilter::new(
+            SbfParams {
+                initial_capacity: 2048,
+                fpr: 0.01,
+                ..Default::default()
+            },
+            11,
+        );
+        for k in 0..40_000u64 {
+            f.insert(k).unwrap();
+        }
+        let fps = (10_000_000..10_100_000u64)
+            .filter(|&k| f.contains(k))
+            .count();
+        let rate = fps as f64 / 100_000.0;
+        assert!(rate < 0.03, "compound fpr {rate} vs target 0.01");
+    }
+
+    #[test]
+    fn slice_capacities_grow_geometrically() {
+        let mut f = ScalableBloomFilter::new(
+            SbfParams {
+                initial_capacity: 100,
+                growth: 2,
+                ..Default::default()
+            },
+            5,
+        );
+        for k in 0..2000u64 {
+            f.insert(k).unwrap();
+        }
+        let caps: Vec<usize> = f.slices.iter().map(|(_, c)| *c).collect();
+        for w in caps.windows(2) {
+            assert_eq!(w[1], w[0] * 2);
+        }
+    }
+
+    #[test]
+    fn delete_unsupported() {
+        let mut f = ScalableBloomFilter::new(SbfParams::default(), 1);
+        f.insert(9).unwrap();
+        assert!(!f.delete(9));
+        assert!(f.contains(9));
+    }
+}

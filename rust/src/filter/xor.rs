@@ -1,0 +1,218 @@
+//! Xor filter (Graf & Lemire 2020 — the paper's reference [10]:
+//! "Xor Filters: Faster and Smaller Than Bloom and Cuckoo Filters").
+//!
+//! A *static* filter: built once from the full key set via 3-wise
+//! peeling, then immutable — ~1.23 · fp_bits bits/key and one cheap
+//! probe (`fp == B[h0] ^ B[h1] ^ B[h2]`). Included as the lookup-only
+//! comparator for the experiment sweeps; it is exactly what OCF is
+//! *not* (no inserts, no deletes, no bursts) which makes it the right
+//! floor line for lookup cost and memory in the figures.
+
+use super::fingerprint::mix64;
+
+/// Static xor filter with 16-bit fingerprints.
+#[derive(Debug, Clone)]
+pub struct XorFilter {
+    table: Vec<u16>,
+    seg_len: usize,
+    seed: u64,
+    len: usize,
+}
+
+/// Expand one 64-bit key hash into three *independent* full-width
+/// 32-bit lanes (one per segment) plus the fingerprint. A second
+/// `mix64` supplies the extra entropy — plain bit-shifts of one word
+/// leave the third lane with too few significant bits, which collapses
+/// its multiply-shift range and makes peeling fail systematically.
+#[inline(always)]
+fn lanes(h: u64) -> (u32, u32, u32, u16) {
+    let h2 = mix64(h);
+    (h as u32, (h >> 32) as u32, h2 as u32, (h2 >> 48) as u16)
+}
+
+#[inline(always)]
+fn mul_shift(v: u32, seg_len: usize) -> usize {
+    // Lemire multiply-shift onto [0, seg_len)
+    ((v as u64 * seg_len as u64) >> 32) as usize
+}
+
+impl XorFilter {
+    /// Build from a key set. Retries internal seeds until peeling
+    /// succeeds (expected ~1 attempt at c = 1.23n + 32).
+    pub fn build(keys: &[u64], seed: u64) -> Self {
+        let n = keys.len();
+        let capacity = ((1.23 * n as f64) as usize + 32) / 3 * 3;
+        let seg_len = capacity / 3;
+        let mut attempt_seed = seed;
+        loop {
+            if let Some(table) = Self::try_build(keys, seg_len, attempt_seed) {
+                return Self {
+                    table,
+                    seg_len,
+                    seed: attempt_seed,
+                    len: n,
+                };
+            }
+            attempt_seed = mix64(attempt_seed);
+        }
+    }
+
+    #[inline(always)]
+    fn positions(h: u64, seg_len: usize) -> [usize; 3] {
+        let (a, b, c, _) = lanes(h);
+        [
+            mul_shift(a, seg_len),
+            seg_len + mul_shift(b, seg_len),
+            2 * seg_len + mul_shift(c, seg_len),
+        ]
+    }
+
+    fn try_build(keys: &[u64], seg_len: usize, seed: u64) -> Option<Vec<u16>> {
+        let cap = 3 * seg_len;
+        let n = keys.len();
+        if n == 0 {
+            return Some(vec![0u16; cap.max(3)]);
+        }
+        // occupancy sets per position: count + xor of key-hash ids
+        let mut count = vec![0u32; cap];
+        let mut xorh = vec![0u64; cap];
+        let hashes: Vec<u64> = keys.iter().map(|&k| mix64(k ^ seed)).collect();
+        for &h in &hashes {
+            for p in Self::positions(h, seg_len) {
+                count[p] += 1;
+                xorh[p] ^= h;
+            }
+        }
+        // peel: positions with exactly one key
+        let mut queue: Vec<usize> = (0..cap).filter(|&p| count[p] == 1).collect();
+        let mut stack: Vec<(usize, u64)> = Vec::with_capacity(n);
+        while let Some(p) = queue.pop() {
+            if count[p] != 1 {
+                continue;
+            }
+            let h = xorh[p];
+            stack.push((p, h));
+            for q in Self::positions(h, seg_len) {
+                count[q] -= 1;
+                xorh[q] ^= h;
+                if count[q] == 1 {
+                    queue.push(q);
+                }
+            }
+        }
+        if stack.len() != n {
+            return None; // peeling failed; retry with a new seed
+        }
+        // assign in reverse peel order
+        let mut table = vec![0u16; cap];
+        for &(p, h) in stack.iter().rev() {
+            let [a, b, c] = Self::positions(h, seg_len);
+            let mut v = lanes(h).3;
+            if a != p {
+                v ^= table[a];
+            }
+            if b != p {
+                v ^= table[b];
+            }
+            if c != p {
+                v ^= table[c];
+            }
+            table[p] = v;
+        }
+        Some(table)
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        if self.len == 0 {
+            return false;
+        }
+        let h = mix64(key ^ self.seed);
+        let [a, b, c] = Self::positions(h, self.seg_len);
+        lanes(h).3 == self.table[a] ^ self.table[b] ^ self.table[c]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.table.len() * 2
+    }
+
+    /// Bits per stored key (the headline metric of the xor paper).
+    pub fn bits_per_key(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.memory_bytes() as f64 * 8.0 / self.len as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn no_false_negatives() {
+        let keys: Vec<u64> = (0..50_000).collect();
+        let f = XorFilter::build(&keys, 99);
+        for &k in &keys {
+            assert!(f.contains(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn fpr_matches_16bit_fingerprint() {
+        let keys: Vec<u64> = (0..20_000).collect();
+        let f = XorFilter::build(&keys, 7);
+        let fps = (10_000_000..10_500_000u64)
+            .filter(|&k| f.contains(k))
+            .count();
+        let rate = fps as f64 / 500_000.0;
+        // expected 2^-16 ≈ 1.5e-5
+        assert!(rate < 2e-4, "fpr {rate}");
+    }
+
+    #[test]
+    fn bits_per_key_near_theory() {
+        let keys: Vec<u64> = (0..100_000).collect();
+        let f = XorFilter::build(&keys, 3);
+        let bpk = f.bits_per_key();
+        // theory: 1.23 * 16 ≈ 19.7
+        assert!((18.0..22.0).contains(&bpk), "bits/key {bpk}");
+    }
+
+    #[test]
+    fn empty_build() {
+        let f = XorFilter::build(&[], 0);
+        assert!(f.is_empty());
+        assert!(!f.contains(42));
+    }
+
+    #[test]
+    fn random_keys_build_and_query() {
+        let mut rng = SplitMix64::new(31);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_u64()).collect();
+        let f = XorFilter::build(&keys, 1);
+        for &k in &keys {
+            assert!(f.contains(k));
+        }
+        assert_eq!(f.len(), 10_000);
+    }
+
+    #[test]
+    fn single_key() {
+        let f = XorFilter::build(&[12345], 5);
+        assert!(f.contains(12345));
+        let fps = (0..100_000u64).filter(|&k| k != 12345 && f.contains(k)).count();
+        assert!(fps < 10, "{fps}");
+    }
+}

@@ -1,0 +1,61 @@
+//! # OCF — Optimized Cuckoo Filter
+//!
+//! A production-shaped reproduction of *"Optimizing Cuckoo Filter for high
+//! burst tolerance, low latency, and high throughput"* (Khalid, cs.DC 2020):
+//! burst-tolerant membership testing for distributed data stores.
+//!
+//! The crate is organised in layers (bottom-up):
+//!
+//! * [`util`] — deterministic RNG (SplitMix64 / Xoshiro256++), helpers.
+//! * [`filter`] — the membership-filter family: the partial-key cuckoo
+//!   table, the traditional cuckoo filter baseline, **OCF** with its two
+//!   resize policies (**PRE** — static thresholds, **EOF** — congestion
+//!   aware), and the bloom / scalable-bloom / xor baselines the paper
+//!   compares against.
+//! * [`store`] — the Cassandra-like per-node substrate: memtable,
+//!   SSTables with frozen per-table filters, flush + compaction policy.
+//! * [`cluster`] — consistent-hash ring, router, replication, and the
+//!   paper's §I.B cartesian-product query coordinator.
+//! * [`pipeline`] — the streaming ingestion path: dynamic batcher,
+//!   credit-based backpressure, worker pool.
+//! * [`runtime`] — the PJRT bridge: loads the AOT HLO artifacts built by
+//!   `python/compile/aot.py` and executes them from the hot path (with a
+//!   bit-exact pure-rust fallback when artifacts are absent).
+//! * [`workload`] — workload generators (uniform/zipf draws, YCSB-style
+//!   mixes, burst phases, trace record/replay).
+//! * [`metrics`] — latency histograms, counters, throughput meters.
+//! * [`config`] — TOML-subset config files + CLI overrides.
+//! * [`bench_harness`] — the warmup/measure/percentile engine behind
+//!   every `cargo bench` target.
+//! * [`exp`] — experiment drivers regenerating each paper table/figure.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use ocf::filter::{MembershipFilter, Ocf, OcfConfig, Mode};
+//!
+//! let mut f = Ocf::new(OcfConfig { mode: Mode::Eof, ..OcfConfig::default() });
+//! for k in 0..10_000u64 {
+//!     f.insert(k).unwrap();
+//! }
+//! assert!(f.contains(42));
+//! assert!(f.delete(42));
+//! ```
+//!
+//! Python never runs on the request path: `make artifacts` AOT-lowers the
+//! JAX/Pallas fingerprint pipeline once; the binary is then self-contained.
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod exp;
+pub mod filter;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod store;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+pub use filter::{MembershipFilter, Mode, Ocf, OcfConfig};

@@ -1,0 +1,248 @@
+//! `ocf` — the leader binary: experiments, the ingest pipeline, and a
+//! line-protocol membership server.
+//!
+//! ```text
+//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|all>
+//!         [--scale F]           # workload scale, 1.0 = paper scale
+//! ocf pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]
+//! ocf serve [--config FILE] [--set section.key=value ...]
+//! ocf info [--artifacts DIR]
+//! ```
+//!
+//! (Argument parsing is hand-rolled — the offline environment has no
+//! clap; see DESIGN.md §substitutions.)
+
+use ocf::bench_harness;
+use ocf::config::OcfFileConfig;
+use ocf::exp::{self, Scale};
+use ocf::filter::{MembershipFilter, Ocf};
+use ocf::pipeline::{BatchPolicy, IngestPipeline};
+use ocf::runtime::{HashExecutor, PjrtEngine};
+use ocf::workload::{KeyDist, MixGenerator, OpMix};
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("exp") => cmd_exp(&args[1..]),
+        Some("pipeline") => cmd_pipeline(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "ocf — Optimized Cuckoo Filter coordinator\n\n\
+         commands:\n  \
+         exp <name|all> [--scale F]   regenerate paper tables/figures\n  \
+         pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]\n  \
+         serve [--config FILE] [--set section.key=value]\n  \
+         info [--artifacts DIR]\n  \
+         help"
+    );
+}
+
+/// Pull `--flag value` out of an arg list.
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn flag_present(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn cmd_exp(args: &[String]) -> i32 {
+    let name = match args.first() {
+        Some(n) if !n.starts_with("--") => n.clone(),
+        _ => {
+            eprintln!("usage: ocf exp <name|all> [--scale F]");
+            return 2;
+        }
+    };
+    let scale = flag_value(args, "--scale")
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(1.0);
+    match exp::run(&name, Scale(scale)) {
+        Ok(report) => {
+            println!("{report}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
+}
+
+fn cmd_pipeline(args: &[String]) -> i32 {
+    let ops: usize = flag_value(args, "--ops")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let batch: usize = flag_value(args, "--batch")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024);
+    let artifacts = flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let threaded = flag_present(args, "--threads");
+
+    let mut filter = Ocf::new(ocf::filter::OcfConfig::default());
+    let executor = match PjrtEngine::load_dir(&artifacts) {
+        Ok(Some(engine)) => {
+            let engine = Arc::new(engine);
+            eprintln!(
+                "pipeline: XLA path via {} ({:?})",
+                engine.platform(),
+                engine.artifact_names()
+            );
+            HashExecutor::with_engine(engine, filter.hasher())
+        }
+        Ok(None) => {
+            eprintln!("pipeline: no artifacts in '{artifacts}', native hash path");
+            HashExecutor::native(filter.hasher())
+        }
+        Err(e) => {
+            eprintln!("pipeline: artifact load failed ({e}), native hash path");
+            HashExecutor::native(filter.hasher())
+        }
+    };
+    let mut pipeline = IngestPipeline::new(
+        BatchPolicy {
+            max_batch: batch,
+            ..BatchPolicy::default()
+        },
+        executor,
+    );
+    let mut gen = MixGenerator::new(
+        KeyDist::uniform(1 << 40),
+        OpMix::new(0.5, 0.4, 0.1),
+        0x0CF_11FE,
+    );
+    let report = if threaded {
+        let mut left = ops;
+        pipeline.run_threaded(
+            move || {
+                if left == 0 {
+                    None
+                } else {
+                    left -= 1;
+                    Some(gen.next_op())
+                }
+            },
+            &mut filter,
+            64,
+            batch,
+        )
+    } else {
+        let ops_iter = (0..ops).map(move |_| gen.next_op());
+        pipeline.run(ops_iter, &mut filter)
+    };
+    println!("{}", report.render());
+    println!(
+        "filter: len={} capacity={} occupancy={:.3} memory={} resizes={}",
+        filter.len(),
+        filter.capacity(),
+        filter.occupancy(),
+        ocf::util::fmt_bytes(filter.memory_bytes()),
+        filter.stats().resizes(),
+    );
+    let _ = bench_harness::render_table; // referenced by benches
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cfg_text = flag_value(args, "--config")
+        .map(|p| std::fs::read_to_string(&p).unwrap_or_else(|e| {
+            eprintln!("warning: cannot read config '{p}': {e}; using defaults");
+            String::new()
+        }))
+        .unwrap_or_default();
+    let overrides: Vec<String> = args
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| *a == "--set")
+        .filter_map(|(i, _)| args.get(i + 1).cloned())
+        .collect();
+    let cfg = match OcfFileConfig::load(&cfg_text, &overrides) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    eprintln!(
+        "ocf serve: mode={} capacity={} (line protocol: put K | get K | del K | stats | quit)",
+        cfg.filter.mode.as_str(),
+        cfg.filter.initial_capacity
+    );
+    let mut filter = Ocf::new(cfg.filter);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for line in stdin.lock().lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        let mut parts = line.split_whitespace();
+        let reply = match (parts.next(), parts.next()) {
+            (Some("put"), Some(k)) => match k.parse::<u64>() {
+                Ok(k) => match filter.insert(k) {
+                    Ok(()) => "ok".to_string(),
+                    Err(e) => format!("err {e}"),
+                },
+                Err(_) => "err bad-key".into(),
+            },
+            (Some("get"), Some(k)) => match k.parse::<u64>() {
+                Ok(k) => if filter.contains(k) { "maybe" } else { "absent" }.to_string(),
+                Err(_) => "err bad-key".into(),
+            },
+            (Some("del"), Some(k)) => match k.parse::<u64>() {
+                Ok(k) => if filter.delete(k) { "ok" } else { "rejected" }.to_string(),
+                Err(_) => "err bad-key".into(),
+            },
+            (Some("stats"), _) => format!(
+                "len={} capacity={} occupancy={:.3} resizes={}",
+                filter.len(),
+                filter.capacity(),
+                filter.occupancy(),
+                filter.stats().resizes()
+            ),
+            (Some("quit"), _) => break,
+            _ => "err unknown-command".into(),
+        };
+        if writeln!(out, "{reply}").is_err() {
+            break;
+        }
+    }
+    0
+}
+
+fn cmd_info(args: &[String]) -> i32 {
+    let artifacts = flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    println!("ocf {} — Optimized Cuckoo Filter", env!("CARGO_PKG_VERSION"));
+    match PjrtEngine::load_dir(&artifacts) {
+        Ok(Some(engine)) => {
+            println!("pjrt platform: {}", engine.platform());
+            println!("artifacts ({}):", artifacts);
+            for name in engine.artifact_names() {
+                println!("  {name}");
+            }
+        }
+        Ok(None) => println!("no artifacts in '{artifacts}' (run `make artifacts`)"),
+        Err(e) => println!("artifact load error: {e}"),
+    }
+    0
+}

@@ -1,0 +1,134 @@
+//! Counters and throughput meters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A shareable monotone counter (relaxed; used for cross-thread tallies
+/// where exactness at read time doesn't matter).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Windowed throughput meter: ops since construction / per window.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    start: Instant,
+    ops: u64,
+    window_start: Instant,
+    window_ops: u64,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self {
+            start: now,
+            ops: 0,
+            window_start: now,
+            window_ops: 0,
+        }
+    }
+
+    #[inline]
+    pub fn tick(&mut self, n: u64) {
+        self.ops += n;
+        self.window_ops += n;
+    }
+
+    /// Total ops/sec since construction.
+    pub fn overall(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / dt
+        }
+    }
+
+    /// Ops/sec in the current window, then reset the window.
+    pub fn window(&mut self) -> f64 {
+        let dt = self.window_start.elapsed().as_secs_f64();
+        let rate = if dt <= 0.0 {
+            0.0
+        } else {
+            self.window_ops as f64 / dt
+        };
+        self.window_start = Instant::now();
+        self.window_ops = 0;
+        rate
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(5);
+        assert_eq!(c.get(), 6);
+    }
+
+    #[test]
+    fn counter_cross_thread() {
+        let c = std::sync::Arc::new(Counter::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 40_000);
+    }
+
+    #[test]
+    fn meter_counts_ops() {
+        let mut m = ThroughputMeter::new();
+        m.tick(100);
+        m.tick(50);
+        assert_eq!(m.total_ops(), 150);
+        assert!(m.overall() > 0.0);
+        let w = m.window();
+        assert!(w > 0.0);
+        // window reset
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        assert_eq!(m.window(), 0.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! Runtime metrics: latency histograms, counters, throughput meters.
+//!
+//! The coordinator's observability substrate. [`Histogram`] is an
+//! HDR-style log-linear bucketed recorder (fixed memory, ~2.5%
+//! worst-case quantile error) built for the hot path: recording is two
+//! integer ops + one increment, no allocation, no locks (single-writer;
+//! use [`Histogram::merge`] to aggregate across threads).
+
+pub mod histogram;
+pub mod meter;
+
+pub use histogram::Histogram;
+pub use meter::{Counter, ThroughputMeter};
+
+/// A latency/metric summary row for reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: u64,
+    pub min: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub p999: u64,
+}
+
+impl Summary {
+    /// Render with a unit suffix (e.g. "ns", "us").
+    pub fn render(&self, unit: &str) -> String {
+        format!(
+            "n={} min={}{u} p50={}{u} p90={}{u} p99={}{u} p99.9={}{u} max={}{u} mean={:.1}{u}",
+            self.count,
+            self.min,
+            self.p50,
+            self.p90,
+            self.p99,
+            self.p999,
+            self.max,
+            self.mean,
+            u = unit
+        )
+    }
+}

@@ -1,0 +1,181 @@
+//! Backpressure primitives: credit gate + token-bucket rate limiter.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A counting credit gate: producers `acquire` one credit per in-flight
+//  item and block when the window is exhausted; consumers `release`
+/// as they finish. Bounds queue memory and propagates slowness upstream.
+#[derive(Debug)]
+pub struct CreditGate {
+    credits: Mutex<usize>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl CreditGate {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            credits: Mutex::new(capacity),
+            cv: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Block until a credit is available, then take it.
+    pub fn acquire(&self) {
+        let mut c = self.credits.lock().unwrap();
+        while *c == 0 {
+            c = self.cv.wait(c).unwrap();
+        }
+        *c -= 1;
+    }
+
+    /// Non-blocking acquire.
+    pub fn try_acquire(&self) -> bool {
+        let mut c = self.credits.lock().unwrap();
+        if *c == 0 {
+            false
+        } else {
+            *c -= 1;
+            true
+        }
+    }
+
+    /// Return a credit.
+    pub fn release(&self) {
+        let mut c = self.credits.lock().unwrap();
+        *c += 1;
+        assert!(*c <= self.capacity, "release without acquire");
+        drop(c);
+        self.cv.notify_one();
+    }
+
+    /// Credits currently available.
+    pub fn available(&self) -> usize {
+        *self.credits.lock().unwrap()
+    }
+}
+
+/// Token-bucket rate limiter (workload shaping: drive a node at a
+/// target ops/sec with bounded burst).
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate_per_sec: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_sec: f64, burst: usize) -> Self {
+        assert!(rate_per_sec > 0.0 && burst > 0);
+        Self {
+            rate_per_sec,
+            burst: burst as f64,
+            tokens: burst as f64,
+            last: Instant::now(),
+        }
+    }
+
+    fn refill(&mut self, now: Instant) {
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * self.rate_per_sec).min(self.burst);
+        self.last = now;
+    }
+
+    /// Take one token if available.
+    pub fn try_take(&mut self, now: Instant) -> bool {
+        self.refill(now);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// How long until a token will be available.
+    pub fn time_to_token(&mut self, now: Instant) -> Duration {
+        self.refill(now);
+        if self.tokens >= 1.0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64((1.0 - self.tokens) / self.rate_per_sec)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn gate_counts_credits() {
+        let g = CreditGate::new(2);
+        assert!(g.try_acquire());
+        assert!(g.try_acquire());
+        assert!(!g.try_acquire(), "exhausted");
+        g.release();
+        assert!(g.try_acquire());
+        assert_eq!(g.available(), 0);
+    }
+
+    #[test]
+    fn gate_blocks_and_wakes() {
+        let g = Arc::new(CreditGate::new(1));
+        g.acquire();
+        let g2 = g.clone();
+        let t = std::thread::spawn(move || {
+            g2.acquire(); // blocks until main releases
+            true
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!t.is_finished(), "must be blocked");
+        g.release();
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    #[should_panic(expected = "release without acquire")]
+    fn over_release_panics() {
+        let g = CreditGate::new(1);
+        g.release();
+    }
+
+    #[test]
+    fn bucket_respects_rate() {
+        let mut b = TokenBucket::new(1000.0, 10);
+        let now = Instant::now();
+        // burst drains
+        let mut taken = 0;
+        while b.try_take(now) {
+            taken += 1;
+        }
+        assert_eq!(taken, 10);
+        // refills over time
+        let later = now + Duration::from_millis(5);
+        let mut refilled = 0;
+        let mut t = later;
+        while b.try_take(t) {
+            refilled += 1;
+            t = later; // same instant: only the 5ms refill available
+        }
+        assert!((4..=6).contains(&refilled), "{refilled} tokens after 5ms at 1k/s");
+    }
+
+    #[test]
+    fn time_to_token_sane() {
+        let mut b = TokenBucket::new(100.0, 1);
+        let now = Instant::now();
+        assert!(b.try_take(now));
+        let wait = b.time_to_token(now);
+        assert!(wait > Duration::ZERO && wait <= Duration::from_millis(11), "{wait:?}");
+    }
+}

@@ -1,0 +1,157 @@
+//! Dynamic batching: accumulate ops until size or deadline fires.
+//!
+//! Classic throughput/latency knob (cf. vLLM-style serving routers):
+//! the hash executor amortizes per-execution overhead over big batches,
+//! but a lone op must not wait unboundedly — `max_delay` caps its
+//! queueing time.
+
+use crate::workload::Op;
+use std::time::{Duration, Instant};
+
+/// Batch-forming policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Flush when this many ops are pending.
+    pub max_batch: usize,
+    /// Flush a non-empty batch this long after its first op arrived.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 1024,
+            max_delay: Duration::from_micros(200),
+        }
+    }
+}
+
+/// The batcher: push ops, poll batches.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    pending: Vec<Op>,
+    oldest: Option<Instant>,
+    /// Telemetry.
+    pub batches_emitted: u64,
+    pub size_flushes: u64,
+    pub deadline_flushes: u64,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            pending: Vec::with_capacity(policy.max_batch),
+            oldest: None,
+            batches_emitted: 0,
+            size_flushes: 0,
+            deadline_flushes: 0,
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add an op; returns a full batch if the size trigger fired.
+    pub fn push(&mut self, op: Op) -> Option<Vec<Op>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(op);
+        if self.pending.len() >= self.policy.max_batch {
+            self.size_flushes += 1;
+            return Some(self.take());
+        }
+        None
+    }
+
+    /// Poll the deadline trigger.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<Op>> {
+        match self.oldest {
+            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.policy.max_delay => {
+                self.deadline_flushes += 1;
+                Some(self.take())
+            }
+            _ => None,
+        }
+    }
+
+    /// Drain whatever is pending (pipeline shutdown).
+    pub fn drain(&mut self) -> Option<Vec<Op>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.take())
+        }
+    }
+
+    fn take(&mut self) -> Vec<Op> {
+        self.batches_emitted += 1;
+        self.oldest = None;
+        std::mem::replace(&mut self.pending, Vec::with_capacity(self.policy.max_batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, delay_us: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_delay: Duration::from_micros(delay_us),
+        }
+    }
+
+    #[test]
+    fn size_trigger_fires_exactly() {
+        let mut b = DynamicBatcher::new(policy(4, 1_000_000));
+        assert!(b.push(Op::Insert(1)).is_none());
+        assert!(b.push(Op::Insert(2)).is_none());
+        assert!(b.push(Op::Insert(3)).is_none());
+        let batch = b.push(Op::Insert(4)).expect("4th op completes the batch");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.size_flushes, 1);
+    }
+
+    #[test]
+    fn deadline_trigger_fires_after_delay() {
+        let mut b = DynamicBatcher::new(policy(1000, 100));
+        b.push(Op::Insert(1));
+        assert!(b.poll(Instant::now()).is_none(), "too early");
+        std::thread::sleep(Duration::from_micros(300));
+        let batch = b.poll(Instant::now()).expect("deadline passed");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.deadline_flushes, 1);
+    }
+
+    #[test]
+    fn empty_batcher_never_fires() {
+        let mut b = DynamicBatcher::new(policy(4, 1));
+        std::thread::sleep(Duration::from_micros(100));
+        assert!(b.poll(Instant::now()).is_none());
+        assert!(b.drain().is_none());
+    }
+
+    #[test]
+    fn drain_returns_partial() {
+        let mut b = DynamicBatcher::new(policy(100, 1_000_000));
+        b.push(Op::Lookup(7));
+        b.push(Op::Delete(8));
+        let batch = b.drain().unwrap();
+        assert_eq!(batch, vec![Op::Lookup(7), Op::Delete(8)]);
+        assert_eq!(b.batches_emitted, 1);
+    }
+
+    #[test]
+    fn deadline_clock_resets_per_batch() {
+        let mut b = DynamicBatcher::new(policy(2, 50_000));
+        b.push(Op::Insert(1));
+        b.push(Op::Insert(2)); // size flush
+        b.push(Op::Insert(3)); // new batch, fresh clock
+        assert!(b.poll(Instant::now()).is_none(), "fresh batch not yet due");
+    }
+}

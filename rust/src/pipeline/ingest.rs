@@ -1,0 +1,304 @@
+//! The ingest pump: workload → batcher → hash executor → filter apply.
+//!
+//! Two drive modes:
+//!
+//! * [`IngestPipeline::run`] — single-threaded pull loop (deterministic;
+//!   what the experiments use so arms are comparable);
+//! * [`IngestPipeline::run_threaded`] — a producer thread feeding a
+//!   bounded channel (real backpressure) while the consumer batches,
+//!   executes, applies. The consumer thread owns the PJRT engine, so
+//!   no `Send` requirement leaks into the xla wrapper types.
+//!
+//! Each batch is hashed ONCE (on the XLA artifact when available) and
+//! the resulting triples drive `insert_hashed`/`contains_triple`/
+//! `delete_hashed`, so the accelerated hash is genuinely on the request
+//! path rather than a sidecar.
+
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use crate::filter::Ocf;
+use crate::metrics::Histogram;
+use crate::runtime::HashExecutor;
+use crate::workload::Op;
+use std::time::Instant;
+
+/// Pipeline outcome.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    pub ops: u64,
+    pub inserts: u64,
+    pub lookups: u64,
+    pub lookup_hits: u64,
+    pub deletes: u64,
+    pub batches: u64,
+    pub elapsed_secs: f64,
+    /// Per-batch processing latency (ns).
+    pub batch_latency_ns: Histogram,
+    /// Per-op latency derived from batch latency (ns).
+    pub op_latency_ns: Histogram,
+}
+
+impl IngestReport {
+    fn new() -> Self {
+        Self {
+            ops: 0,
+            inserts: 0,
+            lookups: 0,
+            lookup_hits: 0,
+            deletes: 0,
+            batches: 0,
+            elapsed_secs: 0.0,
+            batch_latency_ns: Histogram::new(),
+            op_latency_ns: Histogram::new(),
+        }
+    }
+
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.elapsed_secs <= 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / self.elapsed_secs
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{} ops in {:.3}s = {} | batches={} (avg {:.0} ops) | p50 batch {}ns p99 {}ns",
+            self.ops,
+            self.elapsed_secs,
+            crate::util::fmt_rate(self.ops_per_sec()),
+            self.batches,
+            self.ops as f64 / self.batches.max(1) as f64,
+            self.batch_latency_ns.quantile(0.5),
+            self.batch_latency_ns.quantile(0.99),
+        )
+    }
+}
+
+/// The pipeline.
+pub struct IngestPipeline {
+    pub batch_policy: BatchPolicy,
+    pub executor: HashExecutor,
+}
+
+impl IngestPipeline {
+    pub fn new(batch_policy: BatchPolicy, executor: HashExecutor) -> Self {
+        Self {
+            batch_policy,
+            executor,
+        }
+    }
+
+    /// Apply one batch: hash all keys once, then apply ops with the
+    /// precomputed triples.
+    fn apply_batch(&self, batch: &[Op], filter: &mut Ocf, report: &mut IngestReport) {
+        let keys: Vec<u64> = batch.iter().map(|op| op.key()).collect();
+        let triples = self
+            .executor
+            .hash_batch(&keys)
+            .expect("hash executor failed");
+        let t0 = Instant::now();
+        for (op, &triple) in batch.iter().zip(&triples) {
+            match *op {
+                Op::Insert(k) => {
+                    let _ = filter.insert_hashed(k, triple);
+                    report.inserts += 1;
+                }
+                Op::Lookup(_) => {
+                    report.lookups += 1;
+                    if filter.contains_triple(triple) {
+                        report.lookup_hits += 1;
+                    }
+                }
+                Op::Delete(k) => {
+                    filter.delete_hashed(k, triple);
+                    report.deletes += 1;
+                }
+            }
+        }
+        let dt = t0.elapsed().as_nanos() as u64;
+        report.batches += 1;
+        report.ops += batch.len() as u64;
+        report.batch_latency_ns.record(dt);
+        report
+            .op_latency_ns
+            .record(dt / batch.len().max(1) as u64);
+    }
+
+    /// Single-threaded pull pipeline.
+    pub fn run(&mut self, ops: impl Iterator<Item = Op>, filter: &mut Ocf) -> IngestReport {
+        let mut report = IngestReport::new();
+        let mut batcher = DynamicBatcher::new(self.batch_policy);
+        let start = Instant::now();
+        for op in ops {
+            if let Some(batch) = batcher.push(op) {
+                self.apply_batch(&batch, filter, &mut report);
+            } else if let Some(batch) = batcher.poll(Instant::now()) {
+                self.apply_batch(&batch, filter, &mut report);
+            }
+        }
+        if let Some(batch) = batcher.drain() {
+            self.apply_batch(&batch, filter, &mut report);
+        }
+        report.elapsed_secs = start.elapsed().as_secs_f64();
+        report
+    }
+
+    /// Two-thread pipeline: a producer feeds a bounded channel (the
+    /// backpressure window is `queue_depth` chunks of `chunk` ops);
+    /// this thread consumes, batches, hashes, applies.
+    pub fn run_threaded(
+        &mut self,
+        mut source: impl FnMut() -> Option<Op> + Send,
+        filter: &mut Ocf,
+        queue_depth: usize,
+        chunk: usize,
+    ) -> IngestReport {
+        let mut report = IngestReport::new();
+        let start = Instant::now();
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<Op>>(queue_depth);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let mut buf = Vec::with_capacity(chunk);
+                while let Some(op) = source() {
+                    buf.push(op);
+                    if buf.len() == chunk {
+                        // send blocks when the consumer lags: backpressure
+                        if tx.send(std::mem::take(&mut buf)).is_err() {
+                            return;
+                        }
+                        buf.reserve(chunk);
+                    }
+                }
+                if !buf.is_empty() {
+                    let _ = tx.send(buf);
+                }
+            });
+            let mut batcher = DynamicBatcher::new(self.batch_policy);
+            while let Ok(chunk_ops) = rx.recv() {
+                for op in chunk_ops {
+                    if let Some(batch) = batcher.push(op) {
+                        self.apply_batch(&batch, filter, &mut report);
+                    }
+                }
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    self.apply_batch(&batch, filter, &mut report);
+                }
+            }
+            if let Some(batch) = batcher.drain() {
+                self.apply_batch(&batch, filter, &mut report);
+            }
+        });
+        report.elapsed_secs = start.elapsed().as_secs_f64();
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::{MembershipFilter, Mode, OcfConfig};
+    use crate::runtime::HashExecutor;
+    use crate::workload::{KeyDist, MixGenerator, OpMix};
+
+    fn pipeline(batch: usize) -> (IngestPipeline, Ocf) {
+        let filter = Ocf::new(OcfConfig {
+            mode: Mode::Eof,
+            initial_capacity: 2048,
+            ..OcfConfig::default()
+        });
+        let exec = HashExecutor::native(filter.hasher());
+        (
+            IngestPipeline::new(
+                BatchPolicy {
+                    max_batch: batch,
+                    max_delay: std::time::Duration::from_millis(10),
+                },
+                exec,
+            ),
+            filter,
+        )
+    }
+
+    #[test]
+    fn pipeline_result_equals_direct_application() {
+        let mut gen = MixGenerator::new(
+            KeyDist::uniform(1 << 20),
+            OpMix::new(0.5, 0.3, 0.2),
+            99,
+        );
+        let ops = gen.batch(20_000);
+
+        // arm 1: through the pipeline
+        let (mut p, mut f1) = pipeline(512);
+        let report = p.run(ops.iter().copied(), &mut f1);
+        assert_eq!(report.ops, 20_000);
+
+        // arm 2: direct op-at-a-time
+        let mut f2 = Ocf::new(*f1.config());
+        // fresh instance with identical config/seed
+        let mut f2b = Ocf::new(OcfConfig { ..*f2.config() });
+        std::mem::swap(&mut f2, &mut f2b);
+        for op in &ops {
+            match *op {
+                Op::Insert(k) => {
+                    let _ = f2.insert(k);
+                }
+                Op::Lookup(k) => {
+                    let _ = f2.contains(k);
+                }
+                Op::Delete(k) => {
+                    f2.delete(k);
+                }
+            }
+        }
+        assert_eq!(f1.len(), f2.len(), "pipeline must be semantically transparent");
+        for probe in (0..1u64 << 20).step_by(10_007) {
+            assert_eq!(f1.contains(probe), f2.contains(probe), "key {probe}");
+        }
+    }
+
+    #[test]
+    fn report_counts_ops() {
+        let (mut p, mut f) = pipeline(64);
+        let ops = vec![Op::Insert(1), Op::Insert(2), Op::Lookup(1), Op::Delete(1)];
+        let r = p.run(ops.into_iter(), &mut f);
+        assert_eq!(r.ops, 4);
+        assert_eq!(r.inserts, 2);
+        assert_eq!(r.lookups, 1);
+        assert_eq!(r.lookup_hits, 1);
+        assert_eq!(r.deletes, 1);
+        assert!(f.contains(2));
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn threaded_matches_single_threaded() {
+        let mk_ops = || {
+            let mut gen =
+                MixGenerator::new(KeyDist::uniform(1 << 16), OpMix::new(0.6, 0.2, 0.2), 7);
+            gen.batch(10_000)
+        };
+        let ops1 = mk_ops();
+        let ops2 = mk_ops();
+
+        let (mut p1, mut f1) = pipeline(256);
+        let r1 = p1.run(ops1.into_iter(), &mut f1);
+
+        let (mut p2, mut f2) = pipeline(256);
+        let mut it = ops2.into_iter();
+        let r2 = p2.run_threaded(move || it.next(), &mut f2, 4, 128);
+
+        assert_eq!(r1.ops, r2.ops);
+        assert_eq!(f1.len(), f2.len());
+        assert_eq!(r1.inserts, r2.inserts);
+        assert_eq!(r1.lookup_hits, r2.lookup_hits);
+    }
+
+    #[test]
+    fn render_smoke() {
+        let (mut p, mut f) = pipeline(8);
+        let r = p.run((0..100u64).map(Op::Insert), &mut f);
+        assert!(r.render().contains("ops"));
+        assert!(r.ops_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! The streaming ingestion pipeline (the L3 coordination hot path).
+//!
+//! ```text
+//!  workload source ──▶ bounded queue ──▶ dynamic batcher ──▶ hash
+//!   (producer thread)   (backpressure)    (size/deadline)    executor
+//!                                                             (XLA/native)
+//!                                                        ──▶ node apply
+//! ```
+//!
+//! * [`batcher`] — size-or-deadline dynamic batching (big batches for
+//!   throughput, bounded delay for latency).
+//! * [`backpressure`] — credit gate + token-bucket rate limiter; the
+//!   producer blocks when the consumer lags, bounding memory and
+//!   keeping tail latency honest (the "congestion" the paper's EOF
+//!   mode is named after, applied at the pipeline level).
+//! * [`ingest`] — the pump: single-threaded pull pipeline and a
+//!   two-thread producer/consumer variant with real backpressure.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod ingest;
+
+pub use backpressure::{CreditGate, TokenBucket};
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use ingest::{IngestPipeline, IngestReport};

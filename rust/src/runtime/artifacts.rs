@@ -1,0 +1,215 @@
+//! Artifact manifest: what `aot.py` produced and how to call it.
+//!
+//! `artifacts/manifest.txt` has one `key=value;key=value` line per
+//! artifact (a format chosen to be trivially parseable without a JSON
+//! dependency; `manifest.json` carries the same data for humans).
+
+use super::RuntimeError;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// What computation an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// keys → (fp, idx_hash, fp_hash)
+    Hash,
+    /// (table, fp, i1, i2) → present
+    Probe,
+    /// (keys, seed, mask, table, nb_mask) → (present, fp, i1, i2)
+    HashProbe,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "hash" => Some(ArtifactKind::Hash),
+            "probe" => Some(ArtifactKind::Probe),
+            "hash_probe" => Some(ArtifactKind::HashProbe),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    pub file: PathBuf,
+    /// Fixed batch size (keys or queries per execution).
+    pub batch: usize,
+    /// Bucket count for probe-family artifacts.
+    pub nbuckets: Option<usize>,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub entries: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`. A missing manifest is `Ok(None)` —
+    /// the runtime falls back to the native hash path.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Option<Self>, RuntimeError> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.txt");
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let mut entries = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields: BTreeMap<&str, &str> = line
+                .split(';')
+                .filter_map(|kv| kv.split_once('='))
+                .collect();
+            let get = |k: &str| {
+                fields.get(k).copied().ok_or_else(|| {
+                    RuntimeError::Artifact(format!("manifest line {}: missing {k}", no + 1))
+                })
+            };
+            let kind = ArtifactKind::parse(get("kind")?).ok_or_else(|| {
+                RuntimeError::Artifact(format!("manifest line {}: bad kind", no + 1))
+            })?;
+            let parse_usize = |k: &str| -> Result<usize, RuntimeError> {
+                get(k)?.parse().map_err(|e| {
+                    RuntimeError::Artifact(format!("manifest line {}: bad {k}: {e}", no + 1))
+                })
+            };
+            let file = dir.join(get("file")?);
+            if !file.exists() {
+                return Err(RuntimeError::Artifact(format!(
+                    "manifest references missing file {}",
+                    file.display()
+                )));
+            }
+            entries.push(ArtifactMeta {
+                kind,
+                file,
+                batch: parse_usize("batch")?,
+                nbuckets: fields
+                    .get("nbuckets")
+                    .map(|s| s.parse())
+                    .transpose()
+                    .map_err(|e| {
+                        RuntimeError::Artifact(format!("manifest line {}: bad nbuckets: {e}", no + 1))
+                    })?,
+                outputs: parse_usize("outputs")?,
+            });
+        }
+        if entries.is_empty() {
+            return Err(RuntimeError::Artifact("manifest.txt is empty".into()));
+        }
+        Ok(Some(Self {
+            entries,
+            dir: dir.to_path_buf(),
+        }))
+    }
+
+    /// Hash-kind artifacts sorted by batch size ascending.
+    pub fn hash_artifacts(&self) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Hash)
+            .collect();
+        v.sort_by_key(|e| e.batch);
+        v
+    }
+
+    /// Probe artifact for a given bucket count, if any.
+    pub fn probe_artifact(&self, nbuckets: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::Probe && e.nbuckets == Some(nbuckets))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, lines: &[&str], files: &[&str]) {
+        for f in files {
+            std::fs::File::create(dir.join(f)).unwrap();
+        }
+        let mut m = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        for l in lines {
+            writeln!(m, "{l}").unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ocf-manifest-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            &[
+                "file=hash_b256.hlo.txt;sha256_16=abc;kind=hash;batch=256;outputs=3",
+                "file=probe_nb64_b64.hlo.txt;sha256_16=def;kind=probe;batch=64;nbuckets=64;outputs=1",
+            ],
+            &["hash_b256.hlo.txt", "probe_nb64_b64.hlo.txt"],
+        );
+        let m = ArtifactManifest::load(&d).unwrap().unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.hash_artifacts().len(), 1);
+        assert_eq!(m.hash_artifacts()[0].batch, 256);
+        assert!(m.probe_artifact(64).is_some());
+        assert!(m.probe_artifact(128).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_none() {
+        let d = tmpdir("none");
+        assert!(ArtifactManifest::load(&d).unwrap().is_none());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let d = tmpdir("missingfile");
+        write_manifest(
+            &d,
+            &["file=ghost.hlo.txt;kind=hash;batch=256;outputs=3"],
+            &[],
+        );
+        assert!(ArtifactManifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        let d = tmpdir("badline");
+        write_manifest(&d, &["file=x.hlo.txt;kind=hash"], &["x.hlo.txt"]);
+        assert!(ArtifactManifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn hash_artifacts_sorted_by_batch() {
+        let d = tmpdir("sorted");
+        write_manifest(
+            &d,
+            &[
+                "file=b.hlo.txt;kind=hash;batch=4096;outputs=3",
+                "file=a.hlo.txt;kind=hash;batch=256;outputs=3",
+            ],
+            &["a.hlo.txt", "b.hlo.txt"],
+        );
+        let m = ArtifactManifest::load(&d).unwrap().unwrap();
+        let batches: Vec<usize> = m.hash_artifacts().iter().map(|a| a.batch).collect();
+        assert_eq!(batches, vec![256, 4096]);
+    }
+}

@@ -1,0 +1,311 @@
+//! Batched executors: the facade the ingest pipeline calls.
+//!
+//! [`HashExecutor`] turns a batch of keys into hash triples, via the
+//! XLA artifact when available (picking the smallest artifact batch
+//! that fits, padding the tail) or via the bit-exact native rust path.
+//! [`ProbeExecutor`] batch-probes a frozen table (SSTable filter read
+//! path) the same way.
+//!
+//! Equality of the two paths is asserted by
+//! `rust/tests/runtime_integration.rs` on random keys — this is the
+//! cross-language contract that makes the artifact swap-in safe.
+
+use super::pjrt::PjrtEngine;
+use super::RuntimeError;
+use crate::filter::fingerprint::{Hasher, HashTriple};
+use std::sync::Arc;
+
+/// Which path an executor is using (for logs/reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// AOT XLA artifacts through PJRT.
+    Xla,
+    /// Pure-rust fallback (bit-exact twin).
+    Native,
+}
+
+/// Batched fingerprint hashing.
+pub struct HashExecutor {
+    engine: Option<Arc<PjrtEngine>>,
+    hasher: Hasher,
+    /// Available artifact batch sizes, ascending (e.g. [256,1024,4096]).
+    batches: Vec<usize>,
+    /// Executions + keys processed per path (telemetry).
+    pub xla_executions: std::cell::Cell<u64>,
+    pub native_calls: std::cell::Cell<u64>,
+}
+
+impl std::fmt::Debug for HashExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HashExecutor")
+            .field("kind", &self.kind())
+            .field("batches", &self.batches)
+            .finish()
+    }
+}
+
+impl HashExecutor {
+    /// Native-only executor.
+    pub fn native(hasher: Hasher) -> Self {
+        Self {
+            engine: None,
+            hasher,
+            batches: vec![],
+            xla_executions: Default::default(),
+            native_calls: Default::default(),
+        }
+    }
+
+    /// Executor backed by a PJRT engine (falls back to native for
+    /// undersized batches).
+    pub fn with_engine(engine: Arc<PjrtEngine>, hasher: Hasher) -> Self {
+        let mut batches: Vec<usize> = engine
+            .artifact_names()
+            .iter()
+            .filter_map(|n| n.strip_prefix("hash_b").and_then(|b| b.parse().ok()))
+            .collect();
+        batches.sort_unstable();
+        Self {
+            engine: Some(engine),
+            hasher,
+            batches,
+            xla_executions: Default::default(),
+            native_calls: Default::default(),
+        }
+    }
+
+    pub fn kind(&self) -> ExecutorKind {
+        if self.engine.is_some() && !self.batches.is_empty() {
+            ExecutorKind::Xla
+        } else {
+            ExecutorKind::Native
+        }
+    }
+
+    pub fn hasher(&self) -> Hasher {
+        self.hasher
+    }
+
+    /// Smallest artifact batch ≥ n (None → native path).
+    fn pick_batch(&self, n: usize) -> Option<usize> {
+        self.batches.iter().copied().find(|&b| b >= n).or_else(|| {
+            // n larger than the biggest artifact: chunk by the biggest
+            self.batches.last().copied()
+        })
+    }
+
+    /// Hash a batch of keys into triples.
+    pub fn hash_batch(&self, keys: &[u64]) -> Result<Vec<HashTriple>, RuntimeError> {
+        match (&self.engine, self.pick_batch(keys.len())) {
+            (Some(engine), Some(batch)) if !keys.is_empty() => {
+                let mut out = Vec::with_capacity(keys.len());
+                for chunk in keys.chunks(batch) {
+                    self.hash_chunk_xla(engine, chunk, batch, &mut out)?;
+                }
+                Ok(out)
+            }
+            _ => {
+                self.native_calls.set(self.native_calls.get() + 1);
+                Ok(keys.iter().map(|&k| self.hasher.hash_key(k)).collect())
+            }
+        }
+    }
+
+    fn hash_chunk_xla(
+        &self,
+        engine: &PjrtEngine,
+        chunk: &[u64],
+        batch: usize,
+        out: &mut Vec<HashTriple>,
+    ) -> Result<(), RuntimeError> {
+        let art = engine
+            .get(&format!("hash_b{batch}"))
+            .ok_or_else(|| RuntimeError::Artifact(format!("hash_b{batch} vanished")))?;
+        // pad the tail with the last key (outputs trimmed below)
+        let mut padded;
+        let keys: &[u64] = if chunk.len() == batch {
+            chunk
+        } else {
+            padded = chunk.to_vec();
+            padded.resize(batch, *chunk.last().unwrap());
+            &padded
+        };
+        let keys_lit = xla::Literal::vec1(keys);
+        let seed_lit = xla::Literal::vec1(&[self.hasher.seed]);
+        let mask_lit = xla::Literal::vec1(&[self.hasher.fp_mask]);
+        let outs = art.execute(&[keys_lit, seed_lit, mask_lit])?;
+        if outs.len() != 3 {
+            return Err(RuntimeError::Artifact(format!(
+                "hash artifact returned {} outputs, want 3",
+                outs.len()
+            )));
+        }
+        let fp = outs[0].to_vec::<u32>()?;
+        let idx = outs[1].to_vec::<u32>()?;
+        let fph = outs[2].to_vec::<u32>()?;
+        self.xla_executions.set(self.xla_executions.get() + 1);
+        for i in 0..chunk.len() {
+            out.push(HashTriple {
+                fp: fp[i],
+                idx_hash: idx[i],
+                fp_hash: fph[i],
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Batched frozen-table probing (read path over SSTable filters).
+pub struct ProbeExecutor {
+    engine: Option<Arc<PjrtEngine>>,
+    /// (nbuckets, batch) supported by the probe artifact, if any.
+    shape: Option<(usize, usize)>,
+}
+
+impl std::fmt::Debug for ProbeExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProbeExecutor")
+            .field("shape", &self.shape)
+            .finish()
+    }
+}
+
+impl ProbeExecutor {
+    pub fn native() -> Self {
+        Self {
+            engine: None,
+            shape: None,
+        }
+    }
+
+    pub fn with_engine(engine: Arc<PjrtEngine>) -> Self {
+        let shape = engine.artifact_names().iter().find_map(|n| {
+            let rest = n.strip_prefix("probe_nb")?;
+            let (nb, b) = rest.split_once("_b")?;
+            Some((nb.parse().ok()?, b.parse().ok()?))
+        });
+        Self {
+            engine: Some(engine),
+            shape,
+        }
+    }
+
+    /// Probe `queries` (pre-hashed triples) against a frozen table.
+    /// Uses the XLA artifact when the table's bucket count matches the
+    /// artifact shape; native otherwise.
+    pub fn probe(
+        &self,
+        table: &[u32],
+        nbuckets: usize,
+        queries: &[HashTriple],
+    ) -> Result<Vec<bool>, RuntimeError> {
+        if let (Some(engine), Some((art_nb, art_b))) = (&self.engine, self.shape) {
+            if nbuckets == art_nb && !queries.is_empty() {
+                return self.probe_xla(engine, table, nbuckets, queries, art_b);
+            }
+        }
+        Ok(Self::probe_native(table, nbuckets, queries))
+    }
+
+    /// The pure-rust probe (bit-identical to the artifact). Frozen
+    /// tables are always power-of-two sized (xor index mapping — the
+    /// layout the artifact bakes in).
+    pub fn probe_native(table: &[u32], nbuckets: usize, queries: &[HashTriple]) -> Vec<bool> {
+        use crate::filter::bucket::SLOTS;
+        debug_assert!(nbuckets.is_power_of_two(), "frozen tables are pow2");
+        queries
+            .iter()
+            .map(|t| {
+                let i1 = (t.idx_hash as usize) & (nbuckets - 1);
+                let i2 = (i1 ^ t.fp_hash as usize) & (nbuckets - 1);
+                let b1 = &table[i1 * SLOTS..i1 * SLOTS + SLOTS];
+                let b2 = &table[i2 * SLOTS..i2 * SLOTS + SLOTS];
+                b1.contains(&t.fp) || b2.contains(&t.fp)
+            })
+            .collect()
+    }
+
+    fn probe_xla(
+        &self,
+        engine: &PjrtEngine,
+        table: &[u32],
+        nbuckets: usize,
+        queries: &[HashTriple],
+        art_batch: usize,
+    ) -> Result<Vec<bool>, RuntimeError> {
+        let art = engine
+            .get(&format!("probe_nb{nbuckets}_b{art_batch}"))
+            .ok_or_else(|| RuntimeError::Artifact("probe artifact vanished".into()))?;
+        let table_lit = xla::Literal::vec1(table);
+        let mask = (nbuckets - 1) as u32;
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(art_batch) {
+            let pad = |v: Vec<u32>| -> Vec<u32> {
+                let mut v = v;
+                let last = *v.last().unwrap();
+                v.resize(art_batch, last);
+                v
+            };
+            let fp = pad(chunk.iter().map(|t| t.fp).collect());
+            let i1: Vec<u32> = chunk.iter().map(|t| t.idx_hash & mask).collect();
+            let i2 = pad(
+                i1.iter()
+                    .zip(chunk)
+                    .map(|(&a, t)| (a ^ t.fp_hash) & mask)
+                    .collect(),
+            );
+            let i1 = pad(i1);
+            let outs = art.execute(&[
+                table_lit.clone(),
+                xla::Literal::vec1(&fp),
+                xla::Literal::vec1(&i1),
+                xla::Literal::vec1(&i2),
+            ])?;
+            let hits = outs[0].to_vec::<u32>()?;
+            out.extend(hits[..chunk.len()].iter().map(|&h| h != 0));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_hash_matches_hasher() {
+        let h = Hasher::new(0xA5, 16);
+        let ex = HashExecutor::native(h);
+        assert_eq!(ex.kind(), ExecutorKind::Native);
+        let keys: Vec<u64> = (0..100).collect();
+        let triples = ex.hash_batch(&keys).unwrap();
+        for (k, t) in keys.iter().zip(&triples) {
+            assert_eq!(*t, h.hash_key(*k));
+        }
+    }
+
+    #[test]
+    fn native_probe_matches_frozen_filter() {
+        use crate::filter::{CuckooFilter, CuckooParams, MembershipFilter};
+        let mut f = CuckooFilter::<crate::filter::FlatTable>::new(CuckooParams {
+            capacity: 1 << 10,
+            ..CuckooParams::default()
+        });
+        for k in 0..500u64 {
+            f.insert(k).unwrap();
+        }
+        let table = f.to_frozen();
+        let h = f.hasher();
+        let queries: Vec<HashTriple> = (0..1000u64).map(|k| h.hash_key(k)).collect();
+        let hits = ProbeExecutor::probe_native(&table, f.nbuckets(), &queries);
+        for (k, hit) in (0..1000u64).zip(hits) {
+            assert_eq!(hit, f.contains(k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_ok() {
+        let ex = HashExecutor::native(Hasher::new(1, 16));
+        assert!(ex.hash_batch(&[]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,34 @@
+//! The PJRT runtime bridge: load + execute the AOT HLO artifacts.
+//!
+//! `python/compile/aot.py` lowers the JAX/Pallas fingerprint pipeline
+//! once (`make artifacts`) to HLO *text* (the id-safe interchange —
+//! see aot.py's docstring); this module loads those files into a PJRT
+//! CPU client at startup and executes them from the rust hot path.
+//! Python is never on the request path.
+//!
+//! * [`artifacts`] — manifest discovery/parsing.
+//! * [`pjrt`] — client + compiled-executable cache.
+//! * [`executor`] — the batched [`HashExecutor`]/[`ProbeExecutor`]
+//!   facades the pipeline calls, with a **bit-exact pure-rust
+//!   fallback** (`fingerprint::Hasher`) when artifacts are absent, and
+//!   an equality test between the two paths in
+//!   `rust/tests/runtime_integration.rs`.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactKind, ArtifactManifest, ArtifactMeta};
+pub use executor::{ExecutorKind, HashExecutor, ProbeExecutor};
+pub use pjrt::PjrtEngine;
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}

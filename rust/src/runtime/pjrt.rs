@@ -1,0 +1,116 @@
+//! PJRT engine: one CPU client + a cache of compiled executables.
+//!
+//! Follows the reference wiring from /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Compilation happens once per artifact at engine construction; the
+//! hot path only executes.
+
+use super::artifacts::{ArtifactManifest, ArtifactMeta};
+use super::RuntimeError;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled artifact ready to execute.
+pub struct CompiledArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for CompiledArtifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledArtifact")
+            .field("meta", &self.meta)
+            .finish_non_exhaustive()
+    }
+}
+
+impl CompiledArtifact {
+    /// Execute with literal inputs; returns the decomposed result tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// The engine: client + compiled executables keyed by file stem.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, CompiledArtifact>,
+}
+
+impl std::fmt::Debug for PjrtEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtEngine")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.compiled.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl PjrtEngine {
+    /// Build from a manifest: compile every artifact eagerly so the
+    /// request path never compiles.
+    pub fn from_manifest(manifest: &ArtifactManifest) -> Result<Self, RuntimeError> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut compiled = HashMap::new();
+        for meta in &manifest.entries {
+            let art = Self::compile_one(&client, meta)?;
+            let stem = meta
+                .file
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or_default()
+                // strip the inner ".hlo" of "x.hlo.txt"
+                .trim_end_matches(".hlo")
+                .to_string();
+            compiled.insert(stem, art);
+        }
+        Ok(Self { client, compiled })
+    }
+
+    /// Load the manifest in `dir` and build; `Ok(None)` when no
+    /// artifacts exist (callers fall back to the native path).
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Option<Self>, RuntimeError> {
+        match ArtifactManifest::load(dir)? {
+            Some(m) => Ok(Some(Self::from_manifest(&m)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn compile_one(
+        client: &xla::PjRtClient,
+        meta: &ArtifactMeta,
+    ) -> Result<CompiledArtifact, RuntimeError> {
+        let path_str = meta.file.to_str().ok_or_else(|| {
+            RuntimeError::Artifact(format!("non-utf8 path {}", meta.file.display()))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(CompiledArtifact {
+            meta: meta.clone(),
+            exe,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Look up a compiled artifact by name stem (e.g. "hash_b1024").
+    pub fn get(&self, stem: &str) -> Option<&CompiledArtifact> {
+        self.compiled.get(stem)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.compiled.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+// NOTE: no #[cfg(test)] unit tests here — engine construction needs the
+// real artifacts; covered by rust/tests/runtime_integration.rs which
+// skips gracefully when artifacts/ hasn't been built.

@@ -1,0 +1,90 @@
+//! Size-tiered compaction: merge sorted runs, newest-wins, drop
+//! tombstones at the bottom level.
+
+use super::memtable::Entry;
+use super::sstable::SsTable;
+
+/// Compaction trigger/shape parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CompactionPolicy {
+    /// Compact when the node holds more than this many SSTables.
+    pub max_tables: usize,
+    /// Drop tombstones during compaction (safe when compacting down to
+    /// one table — nothing older can be shadowed).
+    pub drop_tombstones: bool,
+}
+
+impl Default for CompactionPolicy {
+    fn default() -> Self {
+        Self {
+            max_tables: 4,
+            drop_tombstones: true,
+        }
+    }
+}
+
+/// K-way merge of SSTables into one sorted run. `tables` must be in
+/// generation order (oldest first); for duplicate keys the *newest*
+/// version wins. Tombstones are dropped if `drop_tombstones`.
+pub fn merge_tables(tables: &[SsTable], drop_tombstones: bool) -> Vec<(u64, Entry)> {
+    // collect newest-wins via reverse iteration: later (newer) tables
+    // overwrite earlier entries in the map
+    let mut merged: std::collections::BTreeMap<u64, Entry> = std::collections::BTreeMap::new();
+    for t in tables {
+        // tables is oldest→newest, so straight insertion overwrites
+        for &(k, e) in t.iter() {
+            merged.insert(k, e);
+        }
+    }
+    merged
+        .into_iter()
+        .filter(|(_, e)| !(drop_tombstones && matches!(e, Entry::Tombstone)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sst(gen: u64, entries: Vec<(u64, Entry)>) -> SsTable {
+        SsTable::from_sorted_run(entries, gen, 16, gen ^ 0xABCD)
+    }
+
+    #[test]
+    fn newest_version_wins() {
+        let old = sst(1, vec![(1, Entry::Put { value_len: 1 }), (2, Entry::Put { value_len: 1 })]);
+        let new = sst(2, vec![(2, Entry::Put { value_len: 99 })]);
+        let merged = merge_tables(&[old, new], true);
+        assert_eq!(
+            merged,
+            vec![
+                (1, Entry::Put { value_len: 1 }),
+                (2, Entry::Put { value_len: 99 })
+            ]
+        );
+    }
+
+    #[test]
+    fn tombstones_shadow_then_drop() {
+        let old = sst(1, vec![(5, Entry::Put { value_len: 1 })]);
+        let new = sst(2, vec![(5, Entry::Tombstone)]);
+        let merged = merge_tables(&[old.clone(), new.clone()], true);
+        assert!(merged.is_empty(), "tombstone must erase the old put");
+        let kept = merge_tables(&[old, new], false);
+        assert_eq!(kept, vec![(5, Entry::Tombstone)]);
+    }
+
+    #[test]
+    fn merge_preserves_sort_order() {
+        let a = sst(1, vec![(1, Entry::Put { value_len: 0 }), (5, Entry::Put { value_len: 0 })]);
+        let b = sst(2, vec![(2, Entry::Put { value_len: 0 }), (9, Entry::Put { value_len: 0 })]);
+        let merged = merge_tables(&[a, b], true);
+        let keys: Vec<u64> = merged.iter().map(|&(k, _)| k).collect();
+        assert_eq!(keys, vec![1, 2, 5, 9]);
+    }
+
+    #[test]
+    fn empty_merge() {
+        assert!(merge_tables(&[], true).is_empty());
+    }
+}

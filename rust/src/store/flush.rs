@@ -1,0 +1,138 @@
+//! Flush policy: when does a memtable freeze into an SSTable?
+//!
+//! Two triggers, matching the paper's framing (§I.A):
+//!
+//! * **MemtableBytes / MemtableKeys** — the healthy reason: the write
+//!   buffer is actually full.
+//! * **FilterPressure** — the pathological reason OCF exists to remove:
+//!   a fixed-capacity filter near saturation forces a *premature* flush
+//!   ("having too many misses is also an indication that the buckets in
+//!   the filter are reaching capacity, which can warrant flushes …
+//!   leading to a complete rebuild of the in-memory data structures").
+//!
+//! Experiment E6 runs the same burst workload under both configurations
+//! and counts flushes + measures ingest latency.
+
+/// Why a flush fired (recorded in node stats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    MemtableBytes,
+    MemtableKeys,
+    FilterPressure,
+}
+
+/// Flush trigger configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FlushPolicy {
+    /// Flush when the memtable's approximate bytes exceed this.
+    pub max_memtable_bytes: usize,
+    /// Flush when the memtable holds this many records.
+    pub max_memtable_keys: usize,
+    /// If set, flush when the node's live filter occupancy exceeds this
+    /// (models the fixed-filter Cassandra behaviour; `None` = trust the
+    /// filter to resize — the OCF configuration).
+    pub filter_pressure: Option<f64>,
+}
+
+impl Default for FlushPolicy {
+    fn default() -> Self {
+        Self {
+            max_memtable_bytes: 64 << 20,
+            max_memtable_keys: 1 << 20,
+            filter_pressure: None,
+        }
+    }
+}
+
+impl FlushPolicy {
+    /// A small-memtable policy for tests/experiments.
+    pub fn small(max_keys: usize) -> Self {
+        Self {
+            max_memtable_bytes: usize::MAX,
+            max_memtable_keys: max_keys,
+            filter_pressure: None,
+        }
+    }
+
+    /// The fixed-filter arm: flush under filter pressure too.
+    pub fn with_filter_pressure(mut self, occupancy: f64) -> Self {
+        self.filter_pressure = Some(occupancy);
+        self
+    }
+
+    /// Evaluate the triggers.
+    pub fn should_flush(
+        &self,
+        memtable_bytes: usize,
+        memtable_keys: usize,
+        filter_occupancy: f64,
+    ) -> Option<FlushReason> {
+        if memtable_bytes > self.max_memtable_bytes {
+            return Some(FlushReason::MemtableBytes);
+        }
+        if memtable_keys > self.max_memtable_keys {
+            return Some(FlushReason::MemtableKeys);
+        }
+        if let Some(p) = self.filter_pressure {
+            if filter_occupancy > p {
+                return Some(FlushReason::FilterPressure);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_flush_when_under_all_thresholds() {
+        let p = FlushPolicy::default();
+        assert_eq!(p.should_flush(1024, 10, 0.5), None);
+    }
+
+    #[test]
+    fn bytes_trigger() {
+        let p = FlushPolicy {
+            max_memtable_bytes: 1000,
+            ..Default::default()
+        };
+        assert_eq!(
+            p.should_flush(1001, 0, 0.0),
+            Some(FlushReason::MemtableBytes)
+        );
+    }
+
+    #[test]
+    fn keys_trigger() {
+        let p = FlushPolicy::small(100);
+        assert_eq!(p.should_flush(0, 101, 0.0), Some(FlushReason::MemtableKeys));
+        assert_eq!(p.should_flush(0, 100, 0.0), None, "strict >");
+    }
+
+    #[test]
+    fn filter_pressure_only_when_configured() {
+        let without = FlushPolicy::small(1_000_000);
+        assert_eq!(without.should_flush(0, 0, 0.99), None);
+        let with = without.with_filter_pressure(0.8);
+        assert_eq!(
+            with.should_flush(0, 0, 0.85),
+            Some(FlushReason::FilterPressure)
+        );
+        assert_eq!(with.should_flush(0, 0, 0.75), None);
+    }
+
+    #[test]
+    fn priority_order_bytes_first() {
+        let p = FlushPolicy {
+            max_memtable_bytes: 10,
+            max_memtable_keys: 10,
+            filter_pressure: Some(0.1),
+        };
+        assert_eq!(
+            p.should_flush(100, 100, 0.9),
+            Some(FlushReason::MemtableBytes)
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! The in-memory write buffer (memtable) of a storage node.
+//!
+//! A sorted map from key to [`Entry`] (live value marker or tombstone).
+//! This is also the "in-memory key-store" the paper's verified-delete
+//! path consults (§IV) — [`Memtable::live_contains`] answers the
+//! authoritative question for keys that haven't been flushed yet.
+
+use std::collections::BTreeMap;
+
+/// A memtable record: either a live key (with a value-size proxy — this
+/// store is membership-centric, so payloads are sizes not bytes) or a
+/// tombstone shadowing older versions in SSTables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Entry {
+    Put { value_len: u32 },
+    Tombstone,
+}
+
+/// Sorted in-memory write buffer.
+#[derive(Debug, Clone, Default)]
+pub struct Memtable {
+    map: BTreeMap<u64, Entry>,
+    /// Approximate heap bytes (keys + entries + payload proxies).
+    approx_bytes: usize,
+    live: usize,
+}
+
+const ENTRY_OVERHEAD: usize = 8 + 8; // key + entry tag/len, BTree overhead elided
+
+impl Memtable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Upsert a live key. Returns true if the key was not live before.
+    pub fn put(&mut self, key: u64, value_len: u32) -> bool {
+        let was_live = matches!(self.map.get(&key), Some(Entry::Put { .. }));
+        let old = self.map.insert(key, Entry::Put { value_len });
+        if old.is_none() {
+            self.approx_bytes += ENTRY_OVERHEAD;
+        }
+        self.approx_bytes += value_len as usize;
+        if !was_live {
+            self.live += 1;
+        }
+        !was_live
+    }
+
+    /// Write a tombstone. Returns true if the key was live *in this
+    /// memtable* before (it may still shadow an SSTable version).
+    pub fn delete(&mut self, key: u64) -> bool {
+        let was_live = matches!(self.map.get(&key), Some(Entry::Put { .. }));
+        if self.map.insert(key, Entry::Tombstone).is_none() {
+            self.approx_bytes += ENTRY_OVERHEAD;
+        }
+        if was_live {
+            self.live -= 1;
+        }
+        was_live
+    }
+
+    /// Three-valued read: `Some(Put)` live here, `Some(Tombstone)`
+    /// deleted here (shadowing), `None` unknown — consult SSTables.
+    pub fn get(&self, key: u64) -> Option<Entry> {
+        self.map.get(&key).copied()
+    }
+
+    /// Is the key live in this memtable?
+    pub fn live_contains(&self, key: u64) -> bool {
+        matches!(self.map.get(&key), Some(Entry::Put { .. }))
+    }
+
+    /// Total records (live + tombstones).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Live (non-tombstone) records.
+    pub fn live_len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        self.approx_bytes
+    }
+
+    /// Drain into a sorted run for flushing (leaves self empty).
+    pub fn drain_sorted(&mut self) -> Vec<(u64, Entry)> {
+        self.approx_bytes = 0;
+        self.live = 0;
+        std::mem::take(&mut self.map).into_iter().collect()
+    }
+
+    /// Iterate live keys (for filter rebuilds).
+    pub fn live_keys(&self) -> impl Iterator<Item = u64> + '_ {
+        self.map
+            .iter()
+            .filter(|(_, e)| matches!(e, Entry::Put { .. }))
+            .map(|(&k, _)| k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_delete_cycle() {
+        let mut m = Memtable::new();
+        assert!(m.put(5, 100));
+        assert!(!m.put(5, 50), "upsert of live key");
+        assert_eq!(m.get(5), Some(Entry::Put { value_len: 50 }));
+        assert!(m.live_contains(5));
+        assert!(m.delete(5));
+        assert_eq!(m.get(5), Some(Entry::Tombstone));
+        assert!(!m.live_contains(5));
+        assert!(!m.delete(5), "already tombstoned");
+        assert_eq!(m.len(), 1, "tombstone still occupies a record");
+        assert_eq!(m.live_len(), 0);
+    }
+
+    #[test]
+    fn unknown_key_is_none() {
+        let m = Memtable::new();
+        assert_eq!(m.get(42), None);
+    }
+
+    #[test]
+    fn tombstone_of_unknown_key_recorded() {
+        // deleting a key that lives only in an SSTable must still write
+        // a shadowing tombstone here
+        let mut m = Memtable::new();
+        assert!(!m.delete(7));
+        assert_eq!(m.get(7), Some(Entry::Tombstone));
+    }
+
+    #[test]
+    fn drain_sorted_is_sorted_and_empties() {
+        let mut m = Memtable::new();
+        for k in [5u64, 1, 9, 3, 7] {
+            m.put(k, 10);
+        }
+        m.delete(3);
+        let run = m.drain_sorted();
+        assert_eq!(run.len(), 5);
+        assert!(run.windows(2).all(|w| w[0].0 < w[1].0));
+        assert!(m.is_empty());
+        assert_eq!(m.approx_bytes(), 0);
+    }
+
+    #[test]
+    fn bytes_grow_with_payload() {
+        let mut m = Memtable::new();
+        m.put(1, 1000);
+        let b1 = m.approx_bytes();
+        m.put(2, 0);
+        assert!(m.approx_bytes() > b1);
+        assert!(b1 >= 1000);
+    }
+
+    #[test]
+    fn live_keys_excludes_tombstones() {
+        let mut m = Memtable::new();
+        m.put(1, 0);
+        m.put(2, 0);
+        m.delete(2);
+        m.delete(3);
+        let live: Vec<u64> = m.live_keys().collect();
+        assert_eq!(live, vec![1]);
+    }
+}

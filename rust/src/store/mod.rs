@@ -1,0 +1,30 @@
+//! The Cassandra-like per-node storage substrate (paper §I.A/§I.B).
+//!
+//! Write path: ops land in a [`Memtable`]; when the flush policy fires
+//! the memtable is frozen into an immutable [`SsTable`] with a *frozen*
+//! membership filter snapshot, and a fresh memtable starts. Size-tiered
+//! [`compaction`] merges tables and drops tombstones.
+//!
+//! The paper's burst-tolerance claim lives exactly here: with a
+//! fixed-capacity filter, filter saturation forces **premature
+//! flushes** ("can warrant flushes in databases like Cassandra, leading
+//! to a complete rebuild of the in-memory data structures"); with OCF
+//! the filter resizes in place and flushes happen only when the
+//! *memtable* is actually full. [`FlushPolicy`] captures both triggers
+//! so experiments can measure the difference (E6).
+//!
+//! The "disk" is simulated in-memory (this container has no durable
+//! store requirement; DESIGN.md §substitutions) — SSTables are
+//! immutable sorted runs with the same read amplification and filter
+//! behaviour a disk-backed implementation would show.
+
+pub mod compaction;
+pub mod flush;
+pub mod memtable;
+pub mod node;
+pub mod sstable;
+
+pub use flush::{FlushPolicy, FlushReason};
+pub use memtable::{Entry, Memtable};
+pub use node::{NodeConfig, NodeStats, StorageNode};
+pub use sstable::{FrozenFilter, SsTable};

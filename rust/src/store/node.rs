@@ -1,0 +1,459 @@
+//! A storage node: memtable + SSTables + the node-level OCF filter.
+//!
+//! This is the unit the paper's experiments live on. The node-level
+//! filter tracks the node's *live key population* (memtable + SSTables,
+//! net of deletes) and short-circuits reads for definitely-absent keys;
+//! each SSTable additionally carries its own frozen filter, Cassandra
+//! style, to prune run probes.
+//!
+//! Read path for `get(k)`:
+//! 1. node OCF says "absent" → done (no memtable/SSTable work);
+//! 2. memtable (put → found, tombstone → absent);
+//! 3. SSTables newest→oldest, each gated by its frozen filter.
+//!
+//! Write path: memtable upsert + OCF insert; then the [`FlushPolicy`]
+//! decides whether to freeze (premature flushes are exactly what a
+//! pressured fixed filter causes — experiment E6).
+
+use super::compaction::{merge_tables, CompactionPolicy};
+use super::flush::{FlushPolicy, FlushReason};
+use super::memtable::{Entry, Memtable};
+use super::sstable::SsTable;
+use crate::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+
+/// Node configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeConfig {
+    pub node_id: u64,
+    pub filter: OcfConfig,
+    pub flush: FlushPolicy,
+    pub compaction: CompactionPolicy,
+    /// Value-size proxy for puts (bytes accounted in the memtable).
+    pub value_len: u32,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        Self {
+            node_id: 0,
+            filter: OcfConfig::default(),
+            flush: FlushPolicy::default(),
+            compaction: CompactionPolicy::default(),
+            value_len: 64,
+        }
+    }
+}
+
+impl NodeConfig {
+    /// The fixed-filter ("traditional Cassandra") arm: static filter,
+    /// flush under filter pressure.
+    pub fn fixed_filter(capacity: usize) -> Self {
+        Self {
+            filter: OcfConfig {
+                mode: Mode::Static,
+                initial_capacity: capacity,
+                ..OcfConfig::default()
+            },
+            flush: FlushPolicy::default().with_filter_pressure(0.85),
+            ..Self::default()
+        }
+    }
+}
+
+/// Node operation counters.
+#[derive(Debug, Clone, Default)]
+pub struct NodeStats {
+    pub puts: u64,
+    pub deletes: u64,
+    pub gets: u64,
+    /// Reads answered "absent" by the node filter alone.
+    pub filter_short_circuits: u64,
+    /// SSTable probes skipped thanks to per-table frozen filters.
+    pub sstable_probes_skipped: u64,
+    /// SSTable probes that went to binary search.
+    pub sstable_probes: u64,
+    pub flushes: u64,
+    pub flushes_premature: u64,
+    pub compactions: u64,
+}
+
+/// A single storage node.
+#[derive(Debug)]
+pub struct StorageNode {
+    cfg: NodeConfig,
+    memtable: Memtable,
+    sstables: Vec<SsTable>,
+    /// Node-level live-set filter (the paper's OCF).
+    filter: Ocf,
+    next_generation: u64,
+    pub stats: NodeStats,
+}
+
+impl StorageNode {
+    pub fn new(cfg: NodeConfig) -> Self {
+        Self {
+            memtable: Memtable::new(),
+            sstables: Vec::new(),
+            filter: Ocf::new(cfg.filter),
+            next_generation: 1,
+            cfg,
+            stats: NodeStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &NodeConfig {
+        &self.cfg
+    }
+
+    pub fn filter(&self) -> &Ocf {
+        &self.filter
+    }
+
+    pub fn sstable_count(&self) -> usize {
+        self.sstables.len()
+    }
+
+    pub fn memtable_len(&self) -> usize {
+        self.memtable.len()
+    }
+
+    /// Total live keys on the node (exact, via the filter's keystore).
+    pub fn live_keys(&self) -> usize {
+        self.filter.len()
+    }
+
+    /// Insert/overwrite a key. Returns Err only in Static filter mode
+    /// when the filter is wedged *and* flushing can't relieve it.
+    pub fn put(&mut self, key: u64) -> Result<(), crate::filter::FilterError> {
+        self.stats.puts += 1;
+        self.memtable.put(key, self.cfg.value_len);
+        match self.filter.insert(key) {
+            Ok(()) => {}
+            Err(e) => {
+                // Fixed-filter node: saturation → forced (premature)
+                // flush, then retry once after the flush cleared the
+                // memtable; the filter itself stays static so the
+                // failure is visible to stats/experiments.
+                self.flush(FlushReason::FilterPressure);
+                if self.filter.insert(key).is_err() {
+                    return Err(e);
+                }
+            }
+        }
+        self.maybe_flush();
+        Ok(())
+    }
+
+    /// Delete a key (verified against the node's authoritative state —
+    /// the paper's safe-delete path).
+    pub fn delete(&mut self, key: u64) -> bool {
+        self.stats.deletes += 1;
+        // authority: the OCF keystore tracks the node's live set exactly
+        if !self.filter.contains_exact(key) {
+            return false;
+        }
+        self.memtable.delete(key);
+        self.filter.delete(key);
+        self.maybe_flush();
+        true
+    }
+
+    /// Membership-test read.
+    pub fn get(&mut self, key: u64) -> bool {
+        self.stats.gets += 1;
+        if !self.filter.contains(key) {
+            self.stats.filter_short_circuits += 1;
+            return false;
+        }
+        match self.memtable.get(key) {
+            Some(Entry::Put { .. }) => return true,
+            Some(Entry::Tombstone) => return false,
+            None => {}
+        }
+        for t in self.sstables.iter().rev() {
+            if !t.might_contain(key) {
+                self.stats.sstable_probes_skipped += 1;
+                continue;
+            }
+            self.stats.sstable_probes += 1;
+            match t.get(key) {
+                Some(Entry::Put { .. }) => return true,
+                Some(Entry::Tombstone) => return false,
+                None => {}
+            }
+        }
+        false
+    }
+
+    fn maybe_flush(&mut self) {
+        if let Some(reason) = self.cfg.flush.should_flush(
+            self.memtable.approx_bytes(),
+            self.memtable.len(),
+            self.filter.occupancy(),
+        ) {
+            self.flush(reason);
+        }
+    }
+
+    /// Freeze the memtable into an SSTable.
+    pub fn flush(&mut self, reason: FlushReason) {
+        if self.memtable.is_empty() {
+            return;
+        }
+        self.stats.flushes += 1;
+        if reason == FlushReason::FilterPressure {
+            self.stats.flushes_premature += 1;
+        }
+        let run = self.memtable.drain_sorted();
+        let gen = self.next_generation;
+        self.next_generation += 1;
+        let seed = self.cfg.filter.seed ^ gen;
+        self.sstables
+            .push(SsTable::from_sorted_run(run, gen, self.cfg.filter.fp_bits, seed));
+        // Fixed-filter nodes rebuild their node filter from the live set
+        // after a pressure flush ("complete rebuild of the in-memory
+        // data structures" — the cost the paper wants to avoid).
+        if reason == FlushReason::FilterPressure {
+            self.rebuild_node_filter();
+        }
+        self.maybe_compact();
+    }
+
+    fn rebuild_node_filter(&mut self) {
+        let mut fresh = Ocf::new(OcfConfig {
+            initial_capacity: (self.filter.len() * 2).max(self.cfg.filter.initial_capacity),
+            ..self.cfg.filter
+        });
+        // live set = current filter keystore (exact)
+        let mut keys: Vec<u64> = Vec::with_capacity(self.filter.len());
+        self.for_each_live_key(|k| keys.push(k));
+        for k in keys {
+            let _ = fresh.insert(k);
+        }
+        self.filter = fresh;
+    }
+
+    /// Enumerate the node's live keys (memtable ∪ sstables, minus
+    /// tombstones). Exactness is guaranteed by replaying newest-first.
+    fn for_each_live_key(&self, mut f: impl FnMut(u64)) {
+        let mut seen = std::collections::HashSet::new();
+        for k in self.memtable.live_keys() {
+            if seen.insert(k) {
+                f(k);
+            }
+        }
+        // memtable tombstones (and older-table tombstones, walked
+        // newest-first) shadow sstable versions
+        let mut dead: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        for t in self.sstables.iter().rev() {
+            for &(k, e) in t.iter() {
+                if seen.contains(&k) || dead.contains(&k) {
+                    continue;
+                }
+                match e {
+                    Entry::Put { .. } => {
+                        if self.memtable.get(k) != Some(Entry::Tombstone) {
+                            seen.insert(k);
+                            f(k);
+                        } else {
+                            dead.insert(k);
+                        }
+                    }
+                    Entry::Tombstone => {
+                        dead.insert(k);
+                    }
+                }
+            }
+        }
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.sstables.len() > self.cfg.compaction.max_tables {
+            self.compact();
+        }
+    }
+
+    /// Merge all SSTables into one.
+    pub fn compact(&mut self) {
+        if self.sstables.len() < 2 {
+            return;
+        }
+        self.stats.compactions += 1;
+        let merged = merge_tables(&self.sstables, self.cfg.compaction.drop_tombstones);
+        let gen = self.next_generation;
+        self.next_generation += 1;
+        let seed = self.cfg.filter.seed ^ gen;
+        self.sstables = vec![SsTable::from_sorted_run(
+            merged,
+            gen,
+            self.cfg.filter.fp_bits,
+            seed,
+        )];
+    }
+
+    /// Filter memory (node-level) + per-SSTable frozen filters.
+    pub fn filter_memory_bytes(&self) -> usize {
+        self.filter.memory_bytes()
+            + self
+                .sstables
+                .iter()
+                .map(|t| t.memory_bytes())
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> StorageNode {
+        StorageNode::new(NodeConfig {
+            flush: FlushPolicy::small(1000),
+            ..NodeConfig::default()
+        })
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut n = node();
+        for k in 0..500u64 {
+            n.put(k).unwrap();
+        }
+        for k in 0..500u64 {
+            assert!(n.get(k), "{k}");
+        }
+        assert!(!n.get(10_000));
+    }
+
+    #[test]
+    fn reads_survive_flushes() {
+        let mut n = node();
+        for k in 0..5000u64 {
+            n.put(k).unwrap();
+        }
+        assert!(n.stats.flushes > 0, "small policy must have flushed");
+        assert!(n.sstable_count() >= 1);
+        for k in (0..5000u64).step_by(13) {
+            assert!(n.get(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn delete_shadows_flushed_data() {
+        let mut n = node();
+        for k in 0..3000u64 {
+            n.put(k).unwrap();
+        }
+        n.flush(FlushReason::MemtableKeys);
+        assert!(n.delete(7));
+        assert!(!n.get(7), "tombstone must shadow the SSTable version");
+        assert!(n.get(8));
+    }
+
+    #[test]
+    fn delete_of_absent_key_rejected() {
+        let mut n = node();
+        n.put(1).unwrap();
+        assert!(!n.delete(99));
+        assert!(n.get(1));
+        assert_eq!(n.stats.deletes, 1);
+    }
+
+    #[test]
+    fn filter_short_circuits_absent_reads() {
+        let mut n = node();
+        for k in 0..1000u64 {
+            n.put(k).unwrap();
+        }
+        let before = n.stats.filter_short_circuits;
+        for k in 1_000_000..1_001_000u64 {
+            n.get(k);
+        }
+        let hits = n.stats.filter_short_circuits - before;
+        assert!(hits > 950, "filter should kill most absent reads: {hits}");
+    }
+
+    #[test]
+    fn compaction_merges_and_preserves() {
+        let mut n = StorageNode::new(NodeConfig {
+            flush: FlushPolicy::small(100),
+            compaction: CompactionPolicy {
+                max_tables: 3,
+                drop_tombstones: true,
+            },
+            ..NodeConfig::default()
+        });
+        for k in 0..2000u64 {
+            n.put(k).unwrap();
+        }
+        assert!(n.stats.compactions > 0);
+        assert!(n.sstable_count() <= 4);
+        for k in (0..2000u64).step_by(37) {
+            assert!(n.get(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn deleted_keys_stay_dead_through_compaction() {
+        let mut n = StorageNode::new(NodeConfig {
+            flush: FlushPolicy::small(100),
+            ..NodeConfig::default()
+        });
+        for k in 0..500u64 {
+            n.put(k).unwrap();
+        }
+        for k in 0..250u64 {
+            assert!(n.delete(k), "{k}");
+        }
+        n.flush(FlushReason::MemtableKeys);
+        n.compact();
+        for k in 0..250u64 {
+            assert!(!n.get(k), "{k} resurrected");
+        }
+        for k in 250..500u64 {
+            assert!(n.get(k), "{k} lost");
+        }
+    }
+
+    #[test]
+    fn fixed_filter_node_flushes_prematurely() {
+        let mut n = StorageNode::new(NodeConfig {
+            flush: FlushPolicy::small(1_000_000).with_filter_pressure(0.8),
+            filter: OcfConfig {
+                mode: Mode::Static,
+                initial_capacity: 2048,
+                ..OcfConfig::default()
+            },
+            ..NodeConfig::default()
+        });
+        for k in 0..10_000u64 {
+            let _ = n.put(k);
+        }
+        assert!(
+            n.stats.flushes_premature > 0,
+            "fixed filter under load must premature-flush"
+        );
+        // OCF node under the same load: zero premature flushes
+        let mut o = StorageNode::new(NodeConfig {
+            flush: FlushPolicy::small(1_000_000),
+            ..NodeConfig::default()
+        });
+        for k in 0..10_000u64 {
+            o.put(k).unwrap();
+        }
+        assert_eq!(o.stats.flushes_premature, 0);
+    }
+
+    #[test]
+    fn live_keys_tracks_population() {
+        let mut n = node();
+        for k in 0..100u64 {
+            n.put(k).unwrap();
+        }
+        assert_eq!(n.live_keys(), 100);
+        for k in 0..50u64 {
+            n.delete(k);
+        }
+        assert_eq!(n.live_keys(), 50);
+    }
+}

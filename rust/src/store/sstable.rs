@@ -1,0 +1,235 @@
+//! Immutable sorted runs (SSTables) with frozen membership filters.
+//!
+//! An [`SsTable`] is created by a memtable flush or a compaction. Its
+//! [`FrozenFilter`] is the serialized form of a cuckoo table at flush
+//! time — the exact `u32[nbuckets * SLOTS]` layout the Pallas/XLA probe
+//! kernel consumes, so batched read paths can probe SSTable filters on
+//! the accelerator (see `runtime::executor`).
+
+use super::memtable::Entry;
+use crate::filter::bucket::SLOTS;
+use crate::filter::cuckoo::{CuckooFilter, CuckooParams};
+use crate::filter::fingerprint::Hasher;
+use crate::filter::MembershipFilter;
+
+/// An immutable, query-only cuckoo-table snapshot.
+#[derive(Debug, Clone)]
+pub struct FrozenFilter {
+    table: Vec<u32>,
+    nbuckets: usize,
+    hasher: Hasher,
+}
+
+impl FrozenFilter {
+    /// Freeze a filter built from `keys`. Capacity is sized at 2× keys
+    /// (paper §II.B recommendation) rounded to a power-of-two bucket
+    /// count — immutable tables never grow, and pow2 keeps the frozen
+    /// layout bit-compatible with the AOT `hash_probe` artifact (which
+    /// derives indices with the xor mapping).
+    pub fn build(keys: &[u64], fp_bits: u32, seed: u64) -> Self {
+        let nbuckets =
+            crate::util::next_pow2(crate::util::ceil_div((keys.len() * 2).max(SLOTS * 4), SLOTS));
+        let mut f = CuckooFilter::<crate::filter::FlatTable>::new(CuckooParams {
+            capacity: nbuckets * SLOTS,
+            fp_bits,
+            seed,
+            ..CuckooParams::default()
+        });
+        for &k in keys {
+            // 2× headroom makes failure here practically impossible, but
+            // the build loop stays total: grow-and-retry like resize::rebuild.
+            if f.insert(k).is_err() {
+                let mut ks = crate::filter::keystore::KeyStore::new();
+                for &k2 in keys {
+                    ks.insert(k2);
+                }
+                let (bigger, _) = crate::filter::resize::rebuild(
+                    &ks,
+                    f.capacity() * 2,
+                    *f.params(),
+                );
+                f = bigger;
+                break;
+            }
+        }
+        Self {
+            table: f.to_frozen(),
+            nbuckets: f.nbuckets(),
+            hasher: f.hasher(),
+        }
+    }
+
+    /// Membership probe (pure rust path; bit-identical to the XLA
+    /// `probe` artifact over the same `table()` buffer).
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        let t = self.hasher.hash_key(key);
+        let i1 = Hasher::primary_index(t, self.nbuckets);
+        let i2 = Hasher::alt_index(i1, t.fp, self.nbuckets);
+        let b1 = &self.table[i1 * SLOTS..i1 * SLOTS + SLOTS];
+        let b2 = &self.table[i2 * SLOTS..i2 * SLOTS + SLOTS];
+        b1.contains(&t.fp) || b2.contains(&t.fp)
+    }
+
+    /// The raw frozen table (for the XLA probe path).
+    pub fn table(&self) -> &[u32] {
+        &self.table
+    }
+
+    pub fn nbuckets(&self) -> usize {
+        self.nbuckets
+    }
+
+    pub fn hasher(&self) -> Hasher {
+        self.hasher
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.table.len() * 4
+    }
+}
+
+/// Immutable sorted run.
+#[derive(Debug, Clone)]
+pub struct SsTable {
+    /// Sorted by key; tombstones included (dropped at bottom-level
+    /// compaction).
+    run: Vec<(u64, Entry)>,
+    filter: FrozenFilter,
+    /// Monotone creation stamp (newer tables shadow older ones).
+    pub generation: u64,
+}
+
+impl SsTable {
+    /// Build from a sorted run (as produced by `Memtable::drain_sorted`
+    /// or a compaction merge).
+    pub fn from_sorted_run(run: Vec<(u64, Entry)>, generation: u64, fp_bits: u32, seed: u64) -> Self {
+        debug_assert!(run.windows(2).all(|w| w[0].0 < w[1].0), "run must be sorted+deduped");
+        // The frozen filter indexes *all* records including tombstones:
+        // a tombstone must be findable so reads stop at the shadowing
+        // entry instead of resurrecting older versions below.
+        let keys: Vec<u64> = run.iter().map(|&(k, _)| k).collect();
+        let filter = FrozenFilter::build(&keys, fp_bits, seed);
+        Self {
+            run,
+            filter,
+            generation,
+        }
+    }
+
+    /// Number of records (live + tombstones).
+    pub fn len(&self) -> usize {
+        self.run.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.run.is_empty()
+    }
+
+    /// Probabilistic pre-check (the read path consults this before the
+    /// binary search — Cassandra's per-SSTable bloom, here a frozen
+    /// cuckoo snapshot).
+    #[inline]
+    pub fn might_contain(&self, key: u64) -> bool {
+        self.filter.contains(key)
+    }
+
+    /// Exact lookup.
+    pub fn get(&self, key: u64) -> Option<Entry> {
+        self.run
+            .binary_search_by_key(&key, |&(k, _)| k)
+            .ok()
+            .map(|i| self.run[i].1)
+    }
+
+    pub fn filter(&self) -> &FrozenFilter {
+        &self.filter
+    }
+
+    /// Iterate records in key order.
+    pub fn iter(&self) -> impl Iterator<Item = &(u64, Entry)> {
+        self.run.iter()
+    }
+
+    /// Simulated on-disk size.
+    pub fn data_bytes(&self) -> usize {
+        self.run.len() * (8 + 5)
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.filter.memory_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_of(keys: &[u64]) -> SsTable {
+        let mut run: Vec<(u64, Entry)> = keys
+            .iter()
+            .map(|&k| (k, Entry::Put { value_len: 8 }))
+            .collect();
+        run.sort_by_key(|&(k, _)| k);
+        SsTable::from_sorted_run(run, 1, 16, 7)
+    }
+
+    #[test]
+    fn get_finds_all_records() {
+        let keys: Vec<u64> = (0..5000).map(|i| i * 3).collect();
+        let t = table_of(&keys);
+        for &k in &keys {
+            assert!(t.might_contain(k), "filter must pass {k}");
+            assert_eq!(t.get(k), Some(Entry::Put { value_len: 8 }));
+        }
+        assert_eq!(t.get(1), None);
+        assert_eq!(t.len(), 5000);
+    }
+
+    #[test]
+    fn filter_never_false_negative() {
+        let keys: Vec<u64> = (0..20_000).collect();
+        let t = table_of(&keys);
+        for &k in &keys {
+            assert!(t.might_contain(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn filter_prunes_most_absent_keys() {
+        let keys: Vec<u64> = (0..10_000).collect();
+        let t = table_of(&keys);
+        let passed = (1_000_000..1_100_000u64)
+            .filter(|&k| t.might_contain(k))
+            .count();
+        assert!(passed < 1000, "filter pass rate too high: {passed}/100000");
+    }
+
+    #[test]
+    fn tombstones_are_findable() {
+        let run = vec![
+            (1u64, Entry::Put { value_len: 4 }),
+            (2, Entry::Tombstone),
+            (3, Entry::Put { value_len: 4 }),
+        ];
+        let t = SsTable::from_sorted_run(run, 2, 16, 3);
+        assert!(t.might_contain(2), "tombstone must be indexed by the filter");
+        assert_eq!(t.get(2), Some(Entry::Tombstone));
+    }
+
+    #[test]
+    fn frozen_filter_matches_source_layout() {
+        let keys: Vec<u64> = (0..100).collect();
+        let f = FrozenFilter::build(&keys, 16, 5);
+        assert_eq!(f.table().len(), f.nbuckets() * SLOTS);
+        let occupied = f.table().iter().filter(|&&x| x != 0).count();
+        assert_eq!(occupied, 100);
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = SsTable::from_sorted_run(vec![], 1, 16, 1);
+        assert!(t.is_empty());
+        assert_eq!(t.get(5), None);
+    }
+}

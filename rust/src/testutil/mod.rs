@@ -1,0 +1,12 @@
+//! Test utilities, including a small property-testing harness.
+//!
+//! The offline build has no access to `proptest`/`quickcheck`, so
+//! [`prop`] provides the same workflow in ~150 lines: generate many
+//! random cases from a seeded RNG, run the property, and on failure
+//! *minimize* the case with a user-supplied shrinker before reporting.
+//! Deterministic by construction (fixed seeds), so CI failures
+//! reproduce locally.
+
+pub mod prop;
+
+pub use prop::{prop_check, Gen};

@@ -1,0 +1,217 @@
+//! Bursty traffic: the phased generator behind the paper's headline
+//! claims ("burst tolerance", "sudden changes in traffic", §I/§II).
+//!
+//! A burst workload is a sequence of [`Phase`]s, each with its own op
+//! mix, key distribution intensity, and length. The canonical patterns
+//! used by the experiments:
+//!
+//! * [`BurstGenerator::square_wave`] — alternating insert-storm /
+//!   delete-storm phases (tests both resize directions);
+//! * [`BurstGenerator::spike`] — long quiet trickle with short extreme
+//!   insert spikes (tests EOF's rate-ratio memory);
+//! * [`BurstGenerator::ramp`] — each burst bigger than the last
+//!   (accelerating demand; EOF's EWMA should learn the trend).
+
+use super::generator::{KeyDist, MixGenerator, OpMix};
+use super::Op;
+
+/// One phase of a bursty workload.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    /// Ops in this phase.
+    pub len: usize,
+    /// Mix during the phase.
+    pub mix: OpMix,
+    /// Human label for reports ("storm", "quiet", ...).
+    pub label: &'static str,
+}
+
+/// Phased workload generator.
+#[derive(Debug, Clone)]
+pub struct BurstGenerator {
+    phases: Vec<Phase>,
+    gen: MixGenerator,
+    phase_idx: usize,
+    in_phase: usize,
+    cycles: usize,
+    emitted: u64,
+}
+
+impl BurstGenerator {
+    /// Build from explicit phases, cycling `cycles` times (0 = forever).
+    pub fn new(phases: Vec<Phase>, keyspace: u64, seed: u64, cycles: usize) -> Self {
+        assert!(!phases.is_empty());
+        let first_mix = phases[0].mix;
+        Self {
+            phases,
+            gen: MixGenerator::new(KeyDist::uniform(keyspace), first_mix, seed),
+            phase_idx: 0,
+            in_phase: 0,
+            cycles,
+            emitted: 0,
+        }
+    }
+
+    /// Alternating insert storm / delete storm.
+    pub fn square_wave(phase_len: usize, keyspace: u64, seed: u64) -> Self {
+        Self::new(
+            vec![
+                Phase {
+                    len: phase_len,
+                    mix: OpMix::new(0.9, 0.1, 0.0),
+                    label: "insert-storm",
+                },
+                Phase {
+                    len: phase_len,
+                    mix: OpMix::new(0.0, 0.1, 0.9),
+                    label: "delete-storm",
+                },
+            ],
+            keyspace,
+            seed,
+            0,
+        )
+    }
+
+    /// Quiet trickle with a 10× insert spike every `period` ops.
+    pub fn spike(period: usize, spike_len: usize, keyspace: u64, seed: u64) -> Self {
+        assert!(spike_len < period);
+        Self::new(
+            vec![
+                Phase {
+                    len: period - spike_len,
+                    mix: OpMix::new(0.05, 0.9, 0.05),
+                    label: "quiet",
+                },
+                Phase {
+                    len: spike_len,
+                    mix: OpMix::new(0.95, 0.05, 0.0),
+                    label: "spike",
+                },
+            ],
+            keyspace,
+            seed,
+            0,
+        )
+    }
+
+    /// Geometrically growing insert bursts separated by quiet periods.
+    pub fn ramp(base_len: usize, steps: usize, keyspace: u64, seed: u64) -> Self {
+        let mut phases = Vec::new();
+        for i in 0..steps {
+            phases.push(Phase {
+                len: base_len,
+                mix: OpMix::new(0.1, 0.9, 0.0),
+                label: "quiet",
+            });
+            phases.push(Phase {
+                len: base_len << i,
+                mix: OpMix::new(0.95, 0.05, 0.0),
+                label: "burst",
+            });
+        }
+        Self::new(phases, keyspace, seed, 1)
+    }
+
+    /// Label of the phase the *next* op will come from.
+    pub fn current_phase(&self) -> &'static str {
+        self.phases[self.phase_idx].label
+    }
+
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Next op, or `None` when all cycles are exhausted.
+    pub fn next_op(&mut self) -> Option<Op> {
+        if self.in_phase >= self.phases[self.phase_idx].len {
+            self.in_phase = 0;
+            self.phase_idx += 1;
+            if self.phase_idx >= self.phases.len() {
+                self.phase_idx = 0;
+                if self.cycles > 0 {
+                    self.cycles -= 1;
+                    if self.cycles == 0 {
+                        return None;
+                    }
+                }
+            }
+            self.gen.mix = self.phases[self.phase_idx].mix;
+        }
+        self.in_phase += 1;
+        self.emitted += 1;
+        Some(self.gen.next_op())
+    }
+
+    /// Drain up to `n` ops.
+    pub fn batch(&mut self, n: usize) -> Vec<Op> {
+        (0..n).filter_map(|_| self.next_op()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_wave_alternates() {
+        let mut g = BurstGenerator::square_wave(1000, 1 << 30, 5);
+        let first: Vec<Op> = g.batch(1000);
+        let ins1 = first.iter().filter(|o| matches!(o, Op::Insert(_))).count();
+        assert!(ins1 > 800, "storm phase should be ~90% inserts: {ins1}");
+        let second: Vec<Op> = g.batch(1000);
+        let del2 = second.iter().filter(|o| matches!(o, Op::Delete(_))).count();
+        assert!(del2 > 700, "delete storm: {del2}");
+    }
+
+    #[test]
+    fn spike_pattern_shape() {
+        let mut g = BurstGenerator::spike(10_000, 1000, 1 << 30, 7);
+        let quiet = g.batch(9000);
+        let spike = g.batch(1000);
+        let qi = quiet.iter().filter(|o| matches!(o, Op::Insert(_))).count() as f64
+            / quiet.len() as f64;
+        let si = spike.iter().filter(|o| matches!(o, Op::Insert(_))).count() as f64
+            / spike.len() as f64;
+        assert!(qi < 0.1, "quiet inserts {qi}");
+        assert!(si > 0.85, "spike inserts {si}");
+    }
+
+    #[test]
+    fn finite_cycles_terminate() {
+        let mut g = BurstGenerator::new(
+            vec![Phase {
+                len: 10,
+                mix: OpMix::insert_only(),
+                label: "only",
+            }],
+            1000,
+            3,
+            2,
+        );
+        let mut n = 0;
+        while g.next_op().is_some() {
+            n += 1;
+            assert!(n < 1000, "must terminate");
+        }
+        // 2 cycles × 10 ops, minus the sentinel boundary behaviour
+        assert!((10..=20).contains(&n), "n={n}");
+    }
+
+    #[test]
+    fn ramp_bursts_grow() {
+        let mut g = BurstGenerator::ramp(100, 4, 1 << 30, 9);
+        let mut total = 0;
+        while g.next_op().is_some() {
+            total += 1;
+        }
+        // 4 quiets (100 each) + bursts 100+200+400+800
+        assert!(total >= 1800, "total={total}");
+    }
+
+    #[test]
+    fn phase_label_tracks() {
+        let g = BurstGenerator::square_wave(10, 1000, 1);
+        assert_eq!(g.current_phase(), "insert-storm");
+    }
+}

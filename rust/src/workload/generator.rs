@@ -1,0 +1,273 @@
+//! Key distributions and op-mix generators.
+
+use super::{Op, OpKind};
+use crate::util::Xoshiro256pp;
+
+/// Key distribution over a `[0, n)` keyspace.
+#[derive(Debug, Clone)]
+pub enum KeyDist {
+    /// Uniform over the keyspace.
+    Uniform { n: u64 },
+    /// Zipfian with parameter `theta` (YCSB default 0.99) via the
+    /// Gray et al. rejection-free method (precomputed zeta).
+    Zipf { n: u64, theta: f64, zetan: f64 },
+    /// Strictly sequential (0, 1, 2, ...) — ingest scans.
+    Sequential { next: u64 },
+}
+
+impl KeyDist {
+    pub fn uniform(n: u64) -> Self {
+        assert!(n > 0);
+        KeyDist::Uniform { n }
+    }
+
+    pub fn zipf(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta > 0.0 && theta < 1.0);
+        let zetan = Self::zeta(n, theta);
+        KeyDist::Zipf { n, theta, zetan }
+    }
+
+    pub fn sequential() -> Self {
+        KeyDist::Sequential { next: 0 }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // direct sum for n ≤ 1e6; beyond that use the standard
+        // incremental approximation (Gray et al. / YCSB do the same)
+        let cap = n.min(1_000_000);
+        let mut z: f64 = (1..=cap).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+        if n > cap {
+            // integral approximation of the tail
+            let a = 1.0 - theta;
+            z += ((n as f64).powf(a) - (cap as f64).powf(a)) / a;
+        }
+        z
+    }
+
+    /// Draw a key.
+    pub fn draw(&mut self, rng: &mut Xoshiro256pp) -> u64 {
+        match self {
+            KeyDist::Uniform { n } => rng.next_below(*n),
+            KeyDist::Zipf { n, theta, zetan } => {
+                // Gray et al. quantile method
+                let alpha = 1.0 / (1.0 - *theta);
+                let eta = (1.0 - (2.0 / *n as f64).powf(1.0 - *theta))
+                    / (1.0 - Self::zeta(2, *theta) / *zetan);
+                let u = rng.next_f64();
+                let uz = u * *zetan;
+                if uz < 1.0 {
+                    0
+                } else if uz < 1.0 + 0.5f64.powf(*theta) {
+                    1
+                } else {
+                    ((*n as f64) * (eta * u - eta + 1.0).powf(alpha)) as u64 % *n
+                }
+            }
+            KeyDist::Sequential { next } => {
+                let k = *next;
+                *next += 1;
+                k
+            }
+        }
+    }
+}
+
+/// Probabilities of each op kind (must sum to ~1).
+#[derive(Debug, Clone, Copy)]
+pub struct OpMix {
+    pub insert: f64,
+    pub lookup: f64,
+    pub delete: f64,
+}
+
+impl OpMix {
+    pub fn new(insert: f64, lookup: f64, delete: f64) -> Self {
+        let sum = insert + lookup + delete;
+        assert!((sum - 1.0).abs() < 1e-6, "mix must sum to 1, got {sum}");
+        Self {
+            insert,
+            lookup,
+            delete,
+        }
+    }
+
+    pub fn insert_only() -> Self {
+        Self::new(1.0, 0.0, 0.0)
+    }
+
+    pub fn read_heavy() -> Self {
+        Self::new(0.05, 0.95, 0.0)
+    }
+
+    fn draw(&self, rng: &mut Xoshiro256pp) -> OpKind {
+        let u = rng.next_f64();
+        if u < self.insert {
+            OpKind::Insert
+        } else if u < self.insert + self.lookup {
+            OpKind::Lookup
+        } else {
+            OpKind::Delete
+        }
+    }
+}
+
+/// Stateless-ish op stream: key distribution × op mix.
+///
+/// Deletes draw from the *inserted* window (tracked as a ring of recent
+/// inserts) so delete ops usually target live keys, like a real store.
+#[derive(Debug, Clone)]
+pub struct MixGenerator {
+    pub dist: KeyDist,
+    pub mix: OpMix,
+    rng: Xoshiro256pp,
+    recent: Vec<u64>,
+    recent_cap: usize,
+    next_slot: usize,
+}
+
+impl MixGenerator {
+    pub fn new(dist: KeyDist, mix: OpMix, seed: u64) -> Self {
+        Self {
+            dist,
+            mix,
+            rng: Xoshiro256pp::new(seed),
+            recent: Vec::new(),
+            recent_cap: 1 << 16,
+            next_slot: 0,
+        }
+    }
+
+    /// Next operation.
+    pub fn next_op(&mut self) -> Op {
+        match self.mix.draw(&mut self.rng) {
+            OpKind::Insert => {
+                let k = self.dist.draw(&mut self.rng);
+                if self.recent.len() < self.recent_cap {
+                    self.recent.push(k);
+                } else {
+                    self.recent[self.next_slot] = k;
+                    self.next_slot = (self.next_slot + 1) % self.recent_cap;
+                }
+                Op::Insert(k)
+            }
+            OpKind::Lookup => Op::Lookup(self.dist.draw(&mut self.rng)),
+            OpKind::Delete => {
+                if self.recent.is_empty() {
+                    // nothing inserted yet: degrade to a lookup
+                    Op::Lookup(self.dist.draw(&mut self.rng))
+                } else {
+                    let i = self.rng.next_below(self.recent.len() as u64) as usize;
+                    Op::Delete(self.recent[i])
+                }
+            }
+        }
+    }
+
+    /// Generate a batch.
+    pub fn batch(&mut self, n: usize) -> Vec<Op> {
+        (0..n).map(|_| self.next_op()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_covers_keyspace() {
+        let mut d = KeyDist::uniform(100);
+        let mut rng = Xoshiro256pp::new(1);
+        let mut seen = vec![false; 100];
+        for _ in 0..10_000 {
+            seen[d.draw(&mut rng) as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() > 95);
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut d = KeyDist::zipf(10_000, 0.99);
+        let mut rng = Xoshiro256pp::new(2);
+        let mut counts = vec![0u32; 10_000];
+        for _ in 0..100_000 {
+            counts[d.draw(&mut rng) as usize] += 1;
+        }
+        let top10: u32 = counts.iter().take(10).sum();
+        // zipf(0.99): top-10 keys get a large share (>25%)
+        assert!(
+            top10 as f64 / 100_000.0 > 0.25,
+            "top10 share {}",
+            top10 as f64 / 100_000.0
+        );
+        // but the tail is not empty
+        assert!(counts[1000..].iter().any(|&c| c > 0));
+    }
+
+    #[test]
+    fn zipf_in_range() {
+        let mut d = KeyDist::zipf(1000, 0.5);
+        let mut rng = Xoshiro256pp::new(3);
+        for _ in 0..10_000 {
+            assert!(d.draw(&mut rng) < 1000);
+        }
+    }
+
+    #[test]
+    fn sequential_counts_up() {
+        let mut d = KeyDist::sequential();
+        let mut rng = Xoshiro256pp::new(4);
+        for i in 0..100 {
+            assert_eq!(d.draw(&mut rng), i);
+        }
+    }
+
+    #[test]
+    fn mix_ratios_respected() {
+        let mut g = MixGenerator::new(
+            KeyDist::uniform(1 << 30),
+            OpMix::new(0.5, 0.3, 0.2),
+            7,
+        );
+        let ops = g.batch(100_000);
+        let ins = ops.iter().filter(|o| matches!(o, Op::Insert(_))).count();
+        let del = ops.iter().filter(|o| matches!(o, Op::Delete(_))).count();
+        assert!((0.48..0.52).contains(&(ins as f64 / 100_000.0)));
+        assert!((0.17..0.23).contains(&(del as f64 / 100_000.0)));
+    }
+
+    #[test]
+    fn deletes_target_inserted_keys() {
+        let mut g = MixGenerator::new(
+            KeyDist::uniform(1 << 40), // huge keyspace: collisions ≈ 0
+            OpMix::new(0.5, 0.0, 0.5),
+            11,
+        );
+        let ops = g.batch(10_000);
+        let mut inserted = std::collections::HashSet::new();
+        for op in &ops {
+            match op {
+                Op::Insert(k) => {
+                    inserted.insert(*k);
+                }
+                Op::Delete(k) => {
+                    assert!(inserted.contains(k), "delete of never-inserted {k}");
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn bad_mix_rejected() {
+        OpMix::new(0.5, 0.1, 0.1);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mk = || MixGenerator::new(KeyDist::uniform(1000), OpMix::read_heavy(), 42);
+        let a = mk().batch(1000);
+        let b = mk().batch(1000);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,53 @@
+//! Workload generation: key distributions, op mixes, burst phases,
+//! trace record/replay.
+//!
+//! Experiments drive filters/nodes with an [`Op`] stream from one of:
+//!
+//! * [`KeyDist`] — uniform or zipfian key draws over a keyspace;
+//! * [`MixGenerator`] — YCSB-style read/insert/delete mixes
+//!   ([`ycsb::Preset`] gives the A–F letter workloads adapted to
+//!   membership testing);
+//! * [`BurstGenerator`] — phased square-wave / spike traffic, the
+//!   "sudden changes in traffic" the paper's §I.B motivates;
+//! * [`trace::Trace`] — record any stream, replay it bit-identically.
+
+pub mod burst;
+pub mod generator;
+pub mod trace;
+pub mod ycsb;
+
+pub use burst::{BurstGenerator, Phase};
+pub use generator::{KeyDist, MixGenerator, OpMix};
+pub use trace::Trace;
+
+/// One operation against a membership-testing node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Insert(u64),
+    Lookup(u64),
+    Delete(u64),
+}
+
+impl Op {
+    pub fn key(&self) -> u64 {
+        match *self {
+            Op::Insert(k) | Op::Lookup(k) | Op::Delete(k) => k,
+        }
+    }
+
+    pub fn kind(&self) -> OpKind {
+        match self {
+            Op::Insert(_) => OpKind::Insert,
+            Op::Lookup(_) => OpKind::Lookup,
+            Op::Delete(_) => OpKind::Delete,
+        }
+    }
+}
+
+/// Operation kind without payload (for mixes/stats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Insert,
+    Lookup,
+    Delete,
+}

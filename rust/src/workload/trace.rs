@@ -1,0 +1,155 @@
+//! Op-trace record & replay.
+//!
+//! Experiments that compare filter arms must drive every arm with the
+//! *identical* op sequence; a [`Trace`] captures a generator's output
+//! once and replays it any number of times. Traces also serialize to a
+//! compact line format (`i <key>` / `l <key>` / `d <key>`) so a run can
+//! be archived or diffed.
+
+use super::Op;
+use std::io::{BufRead, Write};
+
+/// A recorded operation sequence.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub ops: Vec<Op>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `n` ops from a generator closure.
+    pub fn record(n: usize, mut next: impl FnMut() -> Option<Op>) -> Self {
+        let mut ops = Vec::with_capacity(n);
+        for _ in 0..n {
+            match next() {
+                Some(op) => ops.push(op),
+                None => break,
+            }
+        }
+        Self { ops }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Replay into a consumer.
+    pub fn replay(&self, mut f: impl FnMut(Op)) {
+        for &op in &self.ops {
+            f(op);
+        }
+    }
+
+    /// Serialize to the line format.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        for op in &self.ops {
+            match op {
+                Op::Insert(k) => writeln!(w, "i {k}")?,
+                Op::Lookup(k) => writeln!(w, "l {k}")?,
+                Op::Delete(k) => writeln!(w, "d {k}")?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from the line format. Unknown lines are an error.
+    pub fn read_from(r: impl BufRead) -> std::io::Result<Self> {
+        let mut ops = Vec::new();
+        for (no, line) in r.lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (kind, key) = line.split_once(' ').ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("trace line {}: missing space", no + 1),
+                )
+            })?;
+            let key: u64 = key.trim().parse().map_err(|e| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("trace line {}: bad key: {e}", no + 1),
+                )
+            })?;
+            ops.push(match kind {
+                "i" => Op::Insert(key),
+                "l" => Op::Lookup(key),
+                "d" => Op::Delete(key),
+                other => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("trace line {}: unknown op '{other}'", no + 1),
+                    ))
+                }
+            });
+        }
+        Ok(Self { ops })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generator::{KeyDist, MixGenerator, OpMix};
+
+    #[test]
+    fn record_and_replay_identical() {
+        let mut g = MixGenerator::new(KeyDist::uniform(1000), OpMix::new(0.4, 0.4, 0.2), 9);
+        let t = Trace::record(5000, || Some(g.next_op()));
+        assert_eq!(t.len(), 5000);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        t.replay(|op| a.push(op));
+        t.replay(|op| b.push(op));
+        assert_eq!(a, b);
+        assert_eq!(a, t.ops);
+    }
+
+    #[test]
+    fn serde_roundtrip() {
+        let t = Trace {
+            ops: vec![Op::Insert(1), Op::Lookup(2), Op::Delete(3), Op::Insert(u64::MAX)],
+        };
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let parsed = Trace::read_from(std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let text = "# header\n\ni 5\n  l 6  \n";
+        let t = Trace::read_from(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(t.ops, vec![Op::Insert(5), Op::Lookup(6)]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Trace::read_from(std::io::Cursor::new("x 5\n")).is_err());
+        assert!(Trace::read_from(std::io::Cursor::new("i notanumber\n")).is_err());
+        assert!(Trace::read_from(std::io::Cursor::new("i\n")).is_err());
+    }
+
+    #[test]
+    fn record_stops_at_none() {
+        let mut left = 3;
+        let t = Trace::record(10, || {
+            if left == 0 {
+                None
+            } else {
+                left -= 1;
+                Some(Op::Insert(left))
+            }
+        });
+        assert_eq!(t.len(), 3);
+    }
+}

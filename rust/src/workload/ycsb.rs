@@ -1,0 +1,102 @@
+//! YCSB-style workload presets (Cooper et al., SoCC'10 — the paper's
+//! reference [6]), adapted to membership testing.
+//!
+//! YCSB's update/read-modify-write ops map onto the membership domain
+//! as insert/lookup (an update touches the filter only via its read
+//! check), and workload D's "read latest" skew is approximated with a
+//! zipfian over the most recent window.
+
+use super::generator::{KeyDist, MixGenerator, OpMix};
+
+/// The classic YCSB letter workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    /// A: update heavy (50/50 read/write).
+    A,
+    /// B: read mostly (95/5).
+    B,
+    /// C: read only.
+    C,
+    /// D: read latest (95/5, skewed toward recent inserts).
+    D,
+    /// E: short ranges — approximated as read-mostly with sequential keys.
+    E,
+    /// F: read-modify-write (50/50 with lookups preceding inserts).
+    F,
+}
+
+impl Preset {
+    pub fn all() -> [Preset; 6] {
+        [
+            Preset::A,
+            Preset::B,
+            Preset::C,
+            Preset::D,
+            Preset::E,
+            Preset::F,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Preset::A => "ycsb-a",
+            Preset::B => "ycsb-b",
+            Preset::C => "ycsb-c",
+            Preset::D => "ycsb-d",
+            Preset::E => "ycsb-e",
+            Preset::F => "ycsb-f",
+        }
+    }
+
+    /// Build the generator for this preset over `keyspace` keys.
+    pub fn generator(&self, keyspace: u64, seed: u64) -> MixGenerator {
+        let (dist, mix) = match self {
+            Preset::A => (KeyDist::zipf(keyspace, 0.99), OpMix::new(0.5, 0.5, 0.0)),
+            Preset::B => (KeyDist::zipf(keyspace, 0.99), OpMix::new(0.05, 0.95, 0.0)),
+            Preset::C => (KeyDist::zipf(keyspace, 0.99), OpMix::new(0.0, 1.0, 0.0)),
+            Preset::D => (KeyDist::zipf(keyspace, 0.7), OpMix::new(0.05, 0.95, 0.0)),
+            Preset::E => (KeyDist::sequential(), OpMix::new(0.05, 0.95, 0.0)),
+            Preset::F => (KeyDist::zipf(keyspace, 0.99), OpMix::new(0.5, 0.5, 0.0)),
+        };
+        MixGenerator::new(dist, mix, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Op;
+
+    #[test]
+    fn all_presets_generate() {
+        for p in Preset::all() {
+            let mut g = p.generator(100_000, 42);
+            let ops = g.batch(1000);
+            assert_eq!(ops.len(), 1000, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn c_is_read_only() {
+        let mut g = Preset::C.generator(10_000, 1);
+        assert!(g
+            .batch(5000)
+            .iter()
+            .all(|o| matches!(o, Op::Lookup(_))));
+    }
+
+    #[test]
+    fn a_is_update_heavy() {
+        let mut g = Preset::A.generator(10_000, 2);
+        let ops = g.batch(10_000);
+        let ins = ops.iter().filter(|o| matches!(o, Op::Insert(_))).count();
+        assert!((4000..6000).contains(&ins), "{ins}");
+    }
+
+    #[test]
+    fn names_unique() {
+        let names: std::collections::HashSet<_> =
+            Preset::all().iter().map(|p| p.name()).collect();
+        assert_eq!(names.len(), 6);
+    }
+}

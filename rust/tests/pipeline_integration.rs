@@ -1,0 +1,154 @@
+//! Integration: the ingest pipeline end-to-end over workload → batcher
+//! → (native) hash executor → OCF, including the threaded variant with
+//! real backpressure, and hashed-op equivalence.
+
+use ocf::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+use ocf::pipeline::{BatchPolicy, CreditGate, IngestPipeline};
+use ocf::runtime::HashExecutor;
+use ocf::workload::{BurstGenerator, KeyDist, MixGenerator, Op, OpMix};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn mk_pipeline(batch: usize, filter: &Ocf) -> IngestPipeline {
+    IngestPipeline::new(
+        BatchPolicy {
+            max_batch: batch,
+            max_delay: Duration::from_millis(5),
+        },
+        HashExecutor::native(filter.hasher()),
+    )
+}
+
+#[test]
+fn burst_workload_through_pipeline_resizes_filter() {
+    let mut filter = Ocf::new(OcfConfig {
+        mode: Mode::Eof,
+        initial_capacity: 2048,
+        ..OcfConfig::default()
+    });
+    let mut p = mk_pipeline(512, &filter);
+    let mut gen = BurstGenerator::square_wave(10_000, 1 << 24, 3);
+    let mut left = 60_000;
+    let report = p.run(
+        std::iter::from_fn(move || {
+            if left == 0 {
+                None
+            } else {
+                left -= 1;
+                gen.next_op()
+            }
+        }),
+        &mut filter,
+    );
+    assert_eq!(report.ops, 60_000);
+    assert!(
+        filter.stats().resizes() > 0,
+        "bursts must trigger resizes: {:?}",
+        filter.stats()
+    );
+    assert!(report.batches >= 60_000 / 512);
+    assert!(report.ops_per_sec() > 0.0);
+}
+
+#[test]
+fn hashed_ops_equal_plain_ops() {
+    // insert_hashed/delete_hashed/contains_triple vs plain key APIs
+    let cfg = OcfConfig {
+        initial_capacity: 1024,
+        ..OcfConfig::default()
+    };
+    let mut a = Ocf::new(cfg);
+    let mut b = Ocf::new(cfg);
+    let h = a.hasher();
+    let mut gen = MixGenerator::new(KeyDist::uniform(1 << 16), OpMix::new(0.5, 0.2, 0.3), 11);
+    for op in gen.batch(30_000) {
+        match op {
+            Op::Insert(k) => {
+                let ra = a.insert(k);
+                let rb = b.insert_hashed(k, h.hash_key(k));
+                assert_eq!(ra.is_ok(), rb.is_ok());
+            }
+            Op::Lookup(k) => {
+                assert_eq!(a.contains(k), b.contains_triple(h.hash_key(k)), "key {k}");
+            }
+            Op::Delete(k) => {
+                assert_eq!(a.delete(k), b.delete_hashed(k, h.hash_key(k)), "key {k}");
+            }
+        }
+    }
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.capacity(), b.capacity());
+}
+
+#[test]
+fn threaded_pipeline_with_tight_queue_applies_backpressure() {
+    let mut filter = Ocf::new(OcfConfig::default());
+    let mut p = mk_pipeline(256, &filter);
+    let mut gen = MixGenerator::new(KeyDist::uniform(1 << 30), OpMix::insert_only(), 5);
+    let mut left = 50_000;
+    // queue depth 1: the producer can only ever be one chunk ahead
+    let report = p.run_threaded(
+        move || {
+            if left == 0 {
+                None
+            } else {
+                left -= 1;
+                Some(gen.next_op())
+            }
+        },
+        &mut filter,
+        1,
+        256,
+    );
+    assert_eq!(report.ops, 50_000);
+    assert_eq!(report.inserts, 50_000);
+    assert_eq!(filter.len(), 50_000);
+}
+
+#[test]
+fn credit_gate_bounds_concurrent_inflight() {
+    let gate = Arc::new(CreditGate::new(4));
+    let peak = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let inflight = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let gate = gate.clone();
+            let peak = peak.clone();
+            let inflight = inflight.clone();
+            s.spawn(move || {
+                for _ in 0..200 {
+                    gate.acquire();
+                    let now = inflight.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, std::sync::atomic::Ordering::SeqCst);
+                    std::thread::yield_now();
+                    inflight.fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+                    gate.release();
+                }
+            });
+        }
+    });
+    let p = peak.load(std::sync::atomic::Ordering::SeqCst);
+    assert!(p <= 4, "credit gate violated: peak inflight {p}");
+    assert!(p >= 2, "test should exercise concurrency: peak {p}");
+}
+
+#[test]
+fn pipeline_lookup_hit_rate_sane() {
+    let mut filter = Ocf::new(OcfConfig::default());
+    let mut p = mk_pipeline(1024, &filter);
+    // insert 0..N then look them all up through the pipeline
+    let n = 20_000u64;
+    let ops = (0..n)
+        .map(Op::Insert)
+        .chain((0..n).map(Op::Lookup))
+        .chain((n..2 * n).map(Op::Lookup)); // absent
+    let report = p.run(ops, &mut filter);
+    assert_eq!(report.inserts, n);
+    assert_eq!(report.lookups, 2 * n);
+    assert!(report.lookup_hits >= n, "no false negatives");
+    let fp = report.lookup_hits - n;
+    assert!(
+        (fp as f64) < 0.01 * n as f64,
+        "false-positive excess too high: {fp}"
+    );
+}

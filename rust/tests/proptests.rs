@@ -1,0 +1,305 @@
+//! Property-based tests on coordinator/filter invariants (see
+//! `ocf::testutil::prop` — the in-crate property harness).
+//!
+//! The invariants (DESIGN.md, `filter::ocf` docs):
+//!  P1  no false negatives: every inserted, undeleted key is contained;
+//!  P2  `len()` equals the number of distinct live keys;
+//!  P3  occupancy after every op stays ≤ safe_load;
+//!  P4  verified deletes of absent keys change nothing;
+//!  P5  pipeline batching is semantically transparent;
+//!  P6  KeyStore behaves as a set under arbitrary op sequences;
+//!  P7  frozen-filter serialization preserves membership answers;
+//!  P8  router replication: every acked write is readable.
+
+use ocf::cluster::{Cluster, ReplicationConfig};
+use ocf::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+use ocf::pipeline::{BatchPolicy, IngestPipeline};
+use ocf::runtime::HashExecutor;
+use ocf::store::{FlushPolicy, NodeConfig};
+use ocf::testutil::prop::{prop_check, Gen};
+use ocf::workload::Op;
+use std::collections::HashSet;
+
+/// A random op sequence plus the mode to run it under.
+#[derive(Debug, Clone)]
+struct OpCase {
+    mode: Mode,
+    ops: Vec<Op>,
+}
+
+fn gen_case(g: &mut Gen, max_ops: usize, keyspace: u64) -> OpCase {
+    let mode = *g.choose(&[Mode::Pre, Mode::Eof]);
+    let n = g.usize_in(10, max_ops);
+    let mut live: Vec<u64> = Vec::new();
+    let ops = g.vec(n, |g| {
+        let r = g.f64();
+        if r < 0.55 || live.is_empty() {
+            let k = g.u64_below(keyspace);
+            live.push(k);
+            Op::Insert(k)
+        } else if r < 0.8 {
+            Op::Lookup(g.u64_below(keyspace))
+        } else {
+            let i = g.usize_in(0, live.len() - 1);
+            Op::Delete(live.swap_remove(i))
+        }
+    });
+    OpCase { mode, ops }
+}
+
+fn model_apply(ops: &[Op]) -> HashSet<u64> {
+    let mut live = HashSet::new();
+    for op in ops {
+        match op {
+            Op::Insert(k) => {
+                live.insert(*k);
+            }
+            Op::Delete(k) => {
+                live.remove(k);
+            }
+            Op::Lookup(_) => {}
+        }
+    }
+    live
+}
+
+#[test]
+fn p1_p2_p3_no_false_negatives_len_and_load() {
+    prop_check(
+        "ocf-invariants",
+        60,
+        |g| gen_case(g, 3000, 1 << 14),
+        |case| {
+            let mut f = Ocf::new(OcfConfig {
+                mode: case.mode,
+                initial_capacity: 1024,
+                min_capacity: 256,
+                ..OcfConfig::default()
+            });
+            for op in &case.ops {
+                match op {
+                    Op::Insert(k) => {
+                        if f.insert(*k).is_err() {
+                            return false;
+                        }
+                    }
+                    Op::Lookup(k) => {
+                        let _ = f.contains(*k);
+                    }
+                    Op::Delete(k) => {
+                        f.delete(*k);
+                    }
+                }
+                // P3
+                if f.occupancy() > f.config().safe_load + 1e-9 {
+                    return false;
+                }
+            }
+            let live = model_apply(&case.ops);
+            // P2
+            if f.len() != live.len() {
+                return false;
+            }
+            // P1
+            live.iter().all(|&k| f.contains(k))
+        },
+    );
+}
+
+#[test]
+fn p4_absent_deletes_are_inert() {
+    prop_check(
+        "absent-delete-inert",
+        40,
+        |g| {
+            let nkeys = g.usize_in(50, 500);
+            let keys = g.vec(nkeys, |g| g.u64_below(1 << 30));
+            let hostile = g.vec(200, |g| (1u64 << 40) + g.u64_below(1 << 20));
+            (keys, hostile)
+        },
+        |(keys, hostile)| {
+            let mut f = Ocf::new(OcfConfig {
+                initial_capacity: 1024,
+                ..OcfConfig::default()
+            });
+            for &k in keys {
+                f.insert(k).unwrap();
+            }
+            let before: Vec<bool> = keys.iter().map(|&k| f.contains(k)).collect();
+            for &h in hostile {
+                if f.delete(h) {
+                    return false; // verified delete must reject
+                }
+            }
+            let after: Vec<bool> = keys.iter().map(|&k| f.contains(k)).collect();
+            before == after && f.len() == {
+                let s: HashSet<_> = keys.iter().collect();
+                s.len()
+            }
+        },
+    );
+}
+
+#[test]
+fn p5_pipeline_transparent() {
+    prop_check(
+        "pipeline-transparent",
+        25,
+        |g| {
+            let case = gen_case(g, 2000, 1 << 12);
+            let batch = *g.choose(&[1usize, 7, 64, 333, 1024]);
+            (case, batch)
+        },
+        |(case, batch)| {
+            let cfg = OcfConfig {
+                mode: case.mode,
+                initial_capacity: 1024,
+                ..OcfConfig::default()
+            };
+            let mut direct = Ocf::new(cfg);
+            for op in &case.ops {
+                match op {
+                    Op::Insert(k) => {
+                        let _ = direct.insert(*k);
+                    }
+                    Op::Lookup(k) => {
+                        let _ = direct.contains(*k);
+                    }
+                    Op::Delete(k) => {
+                        direct.delete(*k);
+                    }
+                }
+            }
+            let mut piped = Ocf::new(cfg);
+            let mut p = IngestPipeline::new(
+                BatchPolicy {
+                    max_batch: *batch,
+                    max_delay: std::time::Duration::from_secs(10),
+                },
+                HashExecutor::native(piped.hasher()),
+            );
+            p.run(case.ops.iter().copied(), &mut piped);
+            if direct.len() != piped.len() {
+                return false;
+            }
+            // membership answers identical across a probe sample
+            (0..(1u64 << 12)).step_by(61).all(|k| direct.contains(k) == piped.contains(k))
+        },
+    );
+}
+
+#[test]
+fn p6_keystore_is_a_set() {
+    use ocf::filter::KeyStore;
+    prop_check(
+        "keystore-set-semantics",
+        40,
+        |g| {
+            let n = g.usize_in(10, 2000);
+            g.vec(n, |g| {
+                let k = g.u64_below(300); // tight keyspace → collisions
+                match g.usize_in(0, 2) {
+                    0 => Op::Insert(k),
+                    1 => Op::Delete(k),
+                    _ => Op::Lookup(k),
+                }
+            })
+        },
+        |ops| {
+            let mut ks = KeyStore::new();
+            let mut model = HashSet::new();
+            for op in ops {
+                match op {
+                    Op::Insert(k) => {
+                        if ks.insert(*k) != model.insert(*k) {
+                            return false;
+                        }
+                    }
+                    Op::Delete(k) => {
+                        if ks.remove(*k) != model.remove(k) {
+                            return false;
+                        }
+                    }
+                    Op::Lookup(k) => {
+                        if ks.contains(*k) != model.contains(k) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            ks.len() == model.len() && ks.iter().collect::<HashSet<_>>() == model
+        },
+    );
+}
+
+#[test]
+fn p7_frozen_filter_preserves_answers() {
+    use ocf::runtime::ProbeExecutor;
+    prop_check(
+        "frozen-roundtrip",
+        30,
+        |g| {
+            let n = g.usize_in(10, 3000);
+            g.vec(n, |g| g.u64())
+        },
+        |keys| {
+            use ocf::filter::{CuckooFilter, CuckooParams, FlatTable};
+            // frozen tables are always pow2-bucketed (xor index mapping
+            // baked into the serialized layout) — match that here
+            let capacity = (keys.len() * 4).next_power_of_two();
+            let mut f = CuckooFilter::<FlatTable>::new(CuckooParams {
+                capacity,
+                ..CuckooParams::default()
+            });
+            for &k in keys {
+                if f.insert(k).is_err() {
+                    return true; // astronomically unlikely at 4×; skip
+                }
+            }
+            let table = f.to_frozen();
+            let h = f.hasher();
+            let probes: Vec<u64> = keys.iter().copied().chain(0..500).collect();
+            let triples: Vec<_> = probes.iter().map(|&k| h.hash_key(k)).collect();
+            let frozen = ProbeExecutor::probe_native(&table, f.nbuckets(), &triples);
+            probes
+                .iter()
+                .zip(frozen)
+                .all(|(&k, hit)| hit == f.contains(k))
+        },
+    );
+}
+
+#[test]
+fn p8_replicated_writes_readable() {
+    prop_check(
+        "replicated-write-read",
+        15,
+        |g| {
+            let nodes = g.usize_in(1, 6);
+            let rf = g.usize_in(1, 3);
+            let nkeys = g.usize_in(10, 800);
+            let keys = g.vec(nkeys, |g| g.u64_below(1 << 32));
+            (nodes, rf, keys)
+        },
+        |(nodes, rf, keys)| {
+            let mut c = Cluster::new(
+                *nodes,
+                32,
+                NodeConfig {
+                    flush: FlushPolicy::small(10_000),
+                    ..NodeConfig::default()
+                },
+                ReplicationConfig {
+                    rf: *rf,
+                    ..ReplicationConfig::default()
+                },
+            );
+            for &k in keys {
+                if c.put(k).is_err() {
+                    return false;
+                }
+            }
+            keys.iter().all(|&k| c.get(k))
+        },
+    );
+}

@@ -1,0 +1,133 @@
+//! Integration: the PJRT runtime executing the real AOT artifacts, and
+//! the cross-language hash contract (rust native == XLA artifact).
+//!
+//! These tests need `artifacts/` (run `make artifacts` first). When the
+//! directory is absent they SKIP (pass trivially with a note) so
+//! `cargo test` works in a fresh checkout; CI always builds artifacts
+//! first via `make test`.
+
+use ocf::filter::fingerprint::Hasher;
+use ocf::filter::{CuckooFilter, CuckooParams, MembershipFilter};
+use ocf::runtime::{HashExecutor, PjrtEngine, ProbeExecutor};
+use ocf::util::SplitMix64;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<PjrtEngine>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtEngine::load_dir(&dir) {
+        Ok(Some(e)) => Some(Arc::new(e)),
+        Ok(None) => {
+            eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
+            None
+        }
+        Err(e) => panic!("artifact load failed: {e}"),
+    }
+}
+
+#[test]
+fn xla_hash_bit_exact_with_native() {
+    let Some(engine) = engine() else { return };
+    let mut rng = SplitMix64::new(0xC0411EC7);
+    for fp_bits in [8u32, 16, 32] {
+        let hasher = Hasher::new(rng.next_u64(), fp_bits);
+        let xla = HashExecutor::with_engine(engine.clone(), hasher);
+        assert_eq!(xla.kind(), ocf::runtime::ExecutorKind::Xla);
+        // batch sizes exercising exact-fit, padding, and chunking paths
+        for n in [1usize, 7, 256, 300, 1024, 5000] {
+            let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let got = xla.hash_batch(&keys).expect("xla hash");
+            assert_eq!(got.len(), n);
+            for (k, t) in keys.iter().zip(&got) {
+                assert_eq!(
+                    *t,
+                    hasher.hash_key(*k),
+                    "fp_bits={fp_bits} n={n} key={k:#x}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_hash_edge_keys() {
+    let Some(engine) = engine() else { return };
+    let hasher = Hasher::new(0, 16);
+    let xla = HashExecutor::with_engine(engine, hasher);
+    let keys = [0u64, 1, u64::MAX, u64::MAX - 1, 0x8000_0000_0000_0000];
+    let got = xla.hash_batch(&keys).unwrap();
+    for (k, t) in keys.iter().zip(&got) {
+        assert_eq!(*t, hasher.hash_key(*k), "key={k:#x}");
+    }
+}
+
+#[test]
+fn xla_probe_matches_native_on_frozen_table() {
+    let Some(engine) = engine() else { return };
+    // the probe artifact is built for nbuckets=16384 → capacity 65536
+    let nbuckets = 16384usize;
+    let mut filter = CuckooFilter::<ocf::filter::FlatTable>::new(CuckooParams {
+        capacity: nbuckets * 4,
+        ..CuckooParams::default()
+    });
+    for k in 0..40_000u64 {
+        filter.insert(k).unwrap();
+    }
+    assert_eq!(filter.nbuckets(), nbuckets);
+    let table = filter.to_frozen();
+    let hasher = filter.hasher();
+
+    let queries: Vec<_> = (0..10_000u64)
+        .map(|i| hasher.hash_key(i * 7)) // mix of present/absent
+        .collect();
+    let native = ProbeExecutor::probe_native(&table, nbuckets, &queries);
+    let xla = ProbeExecutor::with_engine(engine)
+        .probe(&table, nbuckets, &queries)
+        .expect("xla probe");
+    assert_eq!(native, xla);
+    // and both agree with the filter itself
+    for (i, &hit) in native.iter().enumerate() {
+        let k = (i as u64) * 7;
+        assert_eq!(hit, filter.contains(k), "key {k}");
+    }
+}
+
+#[test]
+fn xla_probe_wrong_shape_falls_back_native() {
+    let Some(engine) = engine() else { return };
+    let nbuckets = 512usize; // no artifact at this shape
+    let mut filter = CuckooFilter::<ocf::filter::FlatTable>::new(CuckooParams {
+        capacity: nbuckets * 4,
+        ..CuckooParams::default()
+    });
+    for k in 0..1000u64 {
+        filter.insert(k).unwrap();
+    }
+    let table = filter.to_frozen();
+    let h = filter.hasher();
+    let queries: Vec<_> = (0..2000u64).map(|k| h.hash_key(k)).collect();
+    let got = ProbeExecutor::with_engine(engine)
+        .probe(&table, nbuckets, &queries)
+        .unwrap();
+    for (k, hit) in (0..2000u64).zip(got) {
+        assert_eq!(hit, filter.contains(k));
+    }
+}
+
+#[test]
+fn engine_reports_expected_artifacts() {
+    let Some(engine) = engine() else { return };
+    let names = engine.artifact_names();
+    for expected in [
+        "hash_b256",
+        "hash_b1024",
+        "hash_b4096",
+        "probe_nb16384_b1024",
+        "hash_probe_nb16384_b1024",
+    ] {
+        assert!(
+            names.contains(&expected),
+            "missing artifact {expected}; have {names:?}"
+        );
+    }
+    assert_eq!(engine.platform(), "cpu");
+}

@@ -1,0 +1,158 @@
+//! Integration across store + cluster + workload layers: a simulated
+//! multi-node data store under realistic mixed workloads.
+
+use ocf::cluster::{Cluster, ReplicationConfig};
+use ocf::filter::{Mode, OcfConfig};
+use ocf::store::{FlushPolicy, FlushReason, NodeConfig, StorageNode};
+use ocf::workload::{ycsb::Preset, BurstGenerator, KeyDist, MixGenerator, Op, OpMix, Trace};
+
+fn small_node_cfg() -> NodeConfig {
+    NodeConfig {
+        flush: FlushPolicy::small(2_000),
+        ..NodeConfig::default()
+    }
+}
+
+#[test]
+fn node_survives_ycsb_all_presets() {
+    for preset in Preset::all() {
+        let mut node = StorageNode::new(small_node_cfg());
+        let mut gen = preset.generator(50_000, 0xCE);
+        let mut inserted = std::collections::HashSet::new();
+        for _ in 0..20_000 {
+            match gen.next_op() {
+                Op::Insert(k) => {
+                    node.put(k).unwrap();
+                    inserted.insert(k);
+                }
+                Op::Lookup(k) => {
+                    let got = node.get(k);
+                    if inserted.contains(&k) {
+                        assert!(got, "{}: lost key {k}", preset.name());
+                    }
+                }
+                Op::Delete(k) => {
+                    node.delete(k);
+                    inserted.remove(&k);
+                }
+            }
+        }
+        // full retention audit
+        for &k in &inserted {
+            assert!(node.get(k), "{}: retention of {k}", preset.name());
+        }
+    }
+}
+
+#[test]
+fn cluster_consistency_under_burst_workload() {
+    let mut cluster = Cluster::new(
+        4,
+        64,
+        small_node_cfg(),
+        ReplicationConfig {
+            rf: 2,
+            ..ReplicationConfig::default()
+        },
+    );
+    let mut gen = BurstGenerator::square_wave(5_000, 1 << 22, 0xBB);
+    let mut model = std::collections::HashSet::new();
+    for _ in 0..40_000 {
+        let op = gen.next_op().unwrap();
+        match op {
+            Op::Insert(k) => {
+                cluster.put(k).unwrap();
+                model.insert(k);
+            }
+            Op::Lookup(k) => {
+                if model.contains(&k) {
+                    assert!(cluster.get(k), "lost {k}");
+                }
+            }
+            Op::Delete(k) => {
+                let was = model.remove(&k);
+                let got = cluster.delete(k);
+                assert_eq!(got, was, "delete({k}) disagreement");
+            }
+        }
+    }
+    // audit a sample of live keys
+    for &k in model.iter().take(2_000) {
+        assert!(cluster.get(k), "retention of {k}");
+    }
+}
+
+#[test]
+fn trace_replay_gives_identical_cluster_state() {
+    let mut gen = MixGenerator::new(KeyDist::uniform(1 << 20), OpMix::new(0.5, 0.3, 0.2), 7);
+    let trace = Trace::record(15_000, || Some(gen.next_op()));
+
+    let run = || {
+        let mut c = Cluster::new(3, 32, small_node_cfg(), ReplicationConfig::none());
+        trace.replay(|op| {
+            let _ = c.apply(op);
+        });
+        c
+    };
+    let a = run();
+    let b = run();
+    for i in 0..3 {
+        assert_eq!(a.node(i).live_keys(), b.node(i).live_keys(), "node {i}");
+        assert_eq!(
+            a.node(i).sstable_count(),
+            b.node(i).sstable_count(),
+            "node {i} sstables"
+        );
+    }
+    assert_eq!(a.stats.per_node_ops, b.stats.per_node_ops);
+}
+
+#[test]
+fn premature_flush_counters_differ_between_arms() {
+    // fixed-filter cluster vs OCF cluster under identical load
+    let run = |node_cfg: NodeConfig| {
+        let mut c = Cluster::new(2, 32, node_cfg, ReplicationConfig::none());
+        for k in 0..30_000u64 {
+            let _ = c.put(k);
+        }
+        c.flush_counts()
+    };
+    let (fixed_premature, _) = run(NodeConfig {
+        filter: OcfConfig {
+            mode: Mode::Static,
+            initial_capacity: 4096,
+            ..OcfConfig::default()
+        },
+        flush: FlushPolicy::small(1_000_000).with_filter_pressure(0.85),
+        ..NodeConfig::default()
+    });
+    let (ocf_premature, _) = run(NodeConfig {
+        flush: FlushPolicy::small(1_000_000),
+        ..NodeConfig::default()
+    });
+    assert!(fixed_premature > 0, "fixed arm must premature-flush");
+    assert_eq!(ocf_premature, 0, "OCF arm must not");
+}
+
+#[test]
+fn compaction_preserves_cluster_reads() {
+    let mut node = StorageNode::new(NodeConfig {
+        flush: FlushPolicy::small(500),
+        ..NodeConfig::default()
+    });
+    for k in 0..5_000u64 {
+        node.put(k).unwrap();
+    }
+    for k in 0..2_500u64 {
+        assert!(node.delete(k));
+    }
+    node.flush(FlushReason::MemtableKeys);
+    node.compact();
+    assert_eq!(node.sstable_count(), 1);
+    for k in 0..2_500u64 {
+        assert!(!node.get(k), "{k} must stay deleted post-compaction");
+    }
+    for k in 2_500..5_000u64 {
+        assert!(node.get(k), "{k} must survive compaction");
+    }
+}

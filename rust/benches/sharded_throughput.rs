@@ -1,0 +1,42 @@
+//! Bench target for E9: shard-scaling throughput of the concurrent
+//! OCF front-end under the burst workload.
+//! `cargo bench --bench sharded_throughput`.
+//!
+//! Env knobs: `OCF_BENCH_SCALE` (default 0.2 of paper scale),
+//! `OCF_BENCH_SHARDS` (comma list, default "1,2,4,8").
+
+use ocf::exp::{sharded, Scale};
+
+fn main() {
+    let scale: f64 = std::env::var("OCF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2);
+    let shard_counts: Vec<usize> = std::env::var("OCF_BENCH_SHARDS")
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4, 8]);
+
+    let threads = sharded::default_threads();
+    let ops_per_thread = Scale(scale).n(400_000, 10_000);
+    let t0 = std::time::Instant::now();
+    let rows = sharded::scaling_curve(&shard_counts, threads, ops_per_thread, 1024);
+    let base = rows[0].ops_per_sec();
+    println!("# sharded_throughput — {threads} threads, {ops_per_thread} ops/thread");
+    println!("shards,ops,secs,mops_per_sec,speedup");
+    for r in &rows {
+        println!(
+            "{},{},{:.3},{:.3},{:.2}",
+            r.shards,
+            r.ops,
+            r.secs,
+            r.ops_per_sec() / 1e6,
+            if base > 0.0 { r.ops_per_sec() / base } else { 0.0 },
+        );
+    }
+    eprintln!(
+        "sharded_throughput completed in {:.1}s (scale {scale})",
+        t0.elapsed().as_secs_f64()
+    );
+}

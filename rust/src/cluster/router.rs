@@ -205,6 +205,34 @@ mod tests {
     }
 
     #[test]
+    fn sharded_filter_cluster_roundtrip() {
+        // nodes opt into the concurrent filter front-end via config;
+        // routing/replication semantics must be unchanged
+        let mut c = Cluster::new(
+            3,
+            32,
+            NodeConfig {
+                filter_shards: 4,
+                flush: FlushPolicy::small(10_000),
+                ..NodeConfig::default()
+            },
+            ReplicationConfig {
+                rf: 2,
+                ..ReplicationConfig::default()
+            },
+        );
+        for k in 0..2000u64 {
+            c.put(k).unwrap();
+        }
+        for k in 0..2000u64 {
+            assert!(c.get(k), "{k}");
+        }
+        assert!(!c.get(999_999));
+        assert!(c.delete(42));
+        assert!(!c.get(42));
+    }
+
+    #[test]
     fn single_node_cluster_degenerates_gracefully() {
         let mut c = cluster(1, 3);
         c.put(1).unwrap();

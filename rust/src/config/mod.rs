@@ -98,6 +98,14 @@ impl OcfFileConfig {
         if let Some(v) = tree.get_bool("filter", "verify_deletes")? {
             cfg.filter.verify_deletes = v;
         }
+        if let Some(v) = tree.get_int("filter", "shards")? {
+            if !(1..=1024).contains(&v) {
+                return Err(ConfigError::Invalid(format!(
+                    "filter.shards must be in 1..=1024, got {v}"
+                )));
+            }
+            cfg.node.filter_shards = v as usize;
+        }
 
         if let Some(v) = tree.get_int("store", "max_memtable_keys")? {
             cfg.node.flush.max_memtable_keys = v as usize;
@@ -195,6 +203,18 @@ batch_size = 4096
         assert_eq!(cfg.batch_size, 4096);
         // node filter config mirrors the filter section
         assert_eq!(cfg.node.filter.fp_bits, 12);
+    }
+
+    #[test]
+    fn filter_shards_opt_in() {
+        let cfg = OcfFileConfig::load("", &[]).unwrap();
+        assert_eq!(cfg.node.filter_shards, 1, "sharding is opt-in");
+        let cfg = OcfFileConfig::load("[filter]\nshards = 8\n", &[]).unwrap();
+        assert_eq!(cfg.node.filter_shards, 8);
+        let cfg = OcfFileConfig::load("", &["filter.shards=4".into()]).unwrap();
+        assert_eq!(cfg.node.filter_shards, 4);
+        assert!(OcfFileConfig::load("[filter]\nshards = 0\n", &[]).is_err());
+        assert!(OcfFileConfig::load("[filter]\nshards = 1000000000\n", &[]).is_err());
     }
 
     #[test]

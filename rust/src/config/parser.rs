@@ -8,15 +8,24 @@
 use std::collections::BTreeMap;
 
 /// Parse/typing errors.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ConfigError {
-    #[error("parse error at line {line}: {msg}")]
     Parse { line: usize, msg: String },
-    #[error("type error: {0}")]
     Type(String),
-    #[error("invalid value: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            ConfigError::Type(msg) => write!(f, "type error: {msg}"),
+            ConfigError::Invalid(msg) => write!(f, "invalid value: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// A parsed scalar.
 #[derive(Debug, Clone, PartialEq)]

@@ -10,6 +10,7 @@
 //! | E6 | §I.A burst tolerance / premature flushes          | [`burst`]  |
 //! | E7 | §I.B cartesian-product query fan-out              | [`cartesian`] |
 //! | E8 | ablations (g, fp_bits, k-band)                    | [`ablation`] |
+//! | E9 | sharded concurrent front-end scaling              | [`sharded`] |
 //!
 //! Every driver takes a [`Scale`] so the same code serves quick checks
 //! (`--scale 0.01`), CI, and full paper-scale runs, and returns a
@@ -23,6 +24,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod report;
 pub mod safety;
+pub mod sharded;
 pub mod sweep;
 pub mod table1;
 
@@ -55,8 +57,9 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "burst" => Ok(burst::run(scale)),
             "cartesian" => Ok(cartesian::run(scale)),
             "ablation" => Ok(ablation::run(scale)),
+            "sharded" => Ok(sharded::run(scale)),
             other => Err(format!(
-                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation all)"
+                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded all)"
             )),
         }
     };
@@ -71,6 +74,7 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "burst",
             "cartesian",
             "ablation",
+            "sharded",
         ] {
             out.push_str(&one(n)?);
             out.push('\n');

@@ -1,0 +1,169 @@
+//! E9 — shard-scaling throughput of the concurrent OCF front-end.
+//!
+//! Measures aggregate insert+lookup+delete throughput of
+//! [`ShardedOcf`](crate::filter::ShardedOcf) at 1/2/4/8 shards under
+//! the burst workload generator (square-wave insert/delete storms —
+//! the paper's §I "sudden changes in traffic"), driven by a fixed pool
+//! of writer threads using the batched APIs. One shard serializes the
+//! pool on a single lock stripe; N shards let disjoint groups proceed
+//! concurrently, so throughput should scale until memory bandwidth or
+//! core count binds (the Cuckoo-GPU partitioning argument on CPU).
+
+use super::report::{f, Table};
+use super::Scale;
+use crate::filter::{OcfConfig, ShardedOcf};
+use crate::workload::{BurstGenerator, Op};
+use std::time::Instant;
+
+/// One measured scaling point.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingRow {
+    pub shards: usize,
+    pub threads: usize,
+    pub ops: u64,
+    pub secs: f64,
+}
+
+impl ScalingRow {
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.secs <= 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / self.secs
+        }
+    }
+}
+
+/// Drive one arm: `threads` workers, each feeding its own burst stream
+/// over a disjoint key range into the shared filter via the batched
+/// APIs (`batch` ops per call, split by op kind).
+pub fn run_arm(shards: usize, threads: usize, ops_per_thread: usize, batch: usize) -> ScalingRow {
+    let filter = ShardedOcf::with_shards(
+        shards,
+        OcfConfig {
+            initial_capacity: 1 << 16,
+            ..OcfConfig::default()
+        },
+    );
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let filter = &filter;
+            s.spawn(move || {
+                // disjoint key ranges: contention is purely on the
+                // filter's lock stripes, never on key ownership
+                let base = (t as u64 + 1) << 40;
+                let mut gen =
+                    BurstGenerator::square_wave(batch.max(1024) * 4, 1 << 22, 0xB007 + t as u64);
+                let mut inserts = Vec::with_capacity(batch);
+                let mut lookups = Vec::with_capacity(batch);
+                let mut deletes = Vec::with_capacity(batch);
+                let mut done = 0usize;
+                while done < ops_per_thread {
+                    inserts.clear();
+                    lookups.clear();
+                    deletes.clear();
+                    let take = batch.min(ops_per_thread - done);
+                    for _ in 0..take {
+                        match gen.next_op() {
+                            Some(Op::Insert(k)) => inserts.push(base | k),
+                            Some(Op::Lookup(k)) => lookups.push(base | k),
+                            Some(Op::Delete(k)) => deletes.push(base | k),
+                            None => break,
+                        }
+                    }
+                    if !inserts.is_empty() {
+                        for r in filter.insert_batch(&inserts) {
+                            let _ = r;
+                        }
+                    }
+                    if !lookups.is_empty() {
+                        std::hint::black_box(filter.contains_batch(&lookups));
+                    }
+                    if !deletes.is_empty() {
+                        std::hint::black_box(filter.delete_batch(&deletes));
+                    }
+                    done += take;
+                }
+            });
+        }
+    });
+    ScalingRow {
+        shards,
+        threads,
+        ops: (threads * ops_per_thread) as u64,
+        secs: start.elapsed().as_secs_f64(),
+    }
+}
+
+/// Measure the scaling curve across `shard_counts`.
+pub fn scaling_curve(
+    shard_counts: &[usize],
+    threads: usize,
+    ops_per_thread: usize,
+    batch: usize,
+) -> Vec<ScalingRow> {
+    shard_counts
+        .iter()
+        .map(|&n| run_arm(n, threads, ops_per_thread, batch))
+        .collect()
+}
+
+/// Default thread pool: 8, capped by the machine's parallelism.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+        .max(2)
+}
+
+/// The experiment driver: markdown report over 1/2/4/8 shards.
+pub fn run(scale: Scale) -> String {
+    let threads = default_threads();
+    let ops_per_thread = scale.n(400_000, 10_000);
+    let batch = 1024;
+    let rows = scaling_curve(&[1, 2, 4, 8], threads, ops_per_thread, batch);
+    let base = rows[0].ops_per_sec();
+    let mut table = Table::new(
+        format!("E9 — sharded OCF scaling ({threads} threads, burst workload)"),
+        &["shards", "threads", "ops", "secs", "Mops/s", "speedup"],
+    );
+    for r in &rows {
+        let speedup = if base > 0.0 { r.ops_per_sec() / base } else { 0.0 };
+        table.row(&[
+            r.shards.to_string(),
+            r.threads.to_string(),
+            r.ops.to_string(),
+            f(r.secs, 3),
+            f(r.ops_per_sec() / 1e6, 2),
+            format!("{}x", f(speedup, 2)),
+        ]);
+    }
+    table.note(
+        "one shard serializes the thread pool on a single lock stripe; \
+         N shards let disjoint batch groups proceed concurrently",
+    );
+    table.markdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_runs_and_counts() {
+        let r = run_arm(4, 2, 5_000, 512);
+        assert_eq!(r.shards, 4);
+        assert_eq!(r.ops, 10_000);
+        assert!(r.secs > 0.0);
+        assert!(r.ops_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let md = run(Scale(0.01));
+        assert!(md.contains("E9"));
+        assert!(md.contains("| 4 |"));
+    }
+}

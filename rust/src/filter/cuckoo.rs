@@ -28,10 +28,19 @@ use crate::util::SplitMix64;
 pub enum VictimPolicy {
     /// Park it in a one-slot victim cache, checked by `contains`
     /// (Fan et al. reference behaviour). Insert still reports `Full`.
+    /// The caller's fingerprint stays resident even though the insert
+    /// reported failure — callers that track keys authoritatively
+    /// (OCF) want [`VictimPolicy::Rollback`] instead.
     Stash,
     /// Drop it (naive implementations; yields false negatives — the
     /// paper's observed failure mode at high load).
     Drop,
+    /// Undo the whole eviction walk: a failed insert leaves the table
+    /// bit-identical to its pre-call state (no resident caller
+    /// fingerprint, no lost victim). This is the policy OCF uses so a
+    /// keystore rollback after `Err(Full)` cannot strand a phantom
+    /// fingerprint.
+    Rollback,
 }
 
 /// Construction parameters for the raw cuckoo filter.
@@ -135,9 +144,18 @@ impl<T: BucketTable> CuckooFilter<T> {
         // Random-walk eviction from a random candidate bucket.
         let mut b = if self.evict_rng.next_u64() & 1 == 0 { i1 } else { i2 };
         let mut fp = t.fp;
-        for kick in 0..self.max_displacements {
+        // Under Rollback every swap is journaled as (bucket, slot,
+        // evicted_fp) so a failed walk can be unwound; the other
+        // policies skip the journal (and keep their lossy semantics).
+        let rollback = self.victim_policy == VictimPolicy::Rollback;
+        let mut walk: Vec<(usize, usize, u32)> = Vec::new();
+        for _ in 0..self.max_displacements {
             let s = self.evict_rng.next_below(SLOTS as u64) as usize;
-            fp = self.table.swap(b, s, fp);
+            let evicted = self.table.swap(b, s, fp);
+            if rollback {
+                walk.push((b, s, evicted));
+            }
+            fp = evicted;
             self.stats.kicks += 1;
             b = Hasher::alt_index(b, fp, nb);
             if self.table.try_insert(b, fp) {
@@ -145,7 +163,6 @@ impl<T: BucketTable> CuckooFilter<T> {
                 self.stats.inserts += 1;
                 return Ok(());
             }
-            let _ = kick;
         }
 
         // Displacement budget exhausted with fingerprint `fp` in hand.
@@ -169,6 +186,16 @@ impl<T: BucketTable> CuckooFilter<T> {
                 // Net stored count is unchanged, but that earlier key is
                 // now a false negative.
                 self.stats.dropped_fingerprints += 1;
+            }
+            VictimPolicy::Rollback => {
+                // Unwind the walk newest-first (a random walk may visit
+                // the same slot twice; reverse order nests correctly).
+                // The final in-hand fingerprint goes home first, the
+                // caller's fingerprint is dropped last — the table ends
+                // bit-identical to its pre-call state.
+                for &(wb, ws, evicted) in walk.iter().rev() {
+                    self.table.set(wb, ws, evicted);
+                }
             }
         }
         Err(FilterError::Full {
@@ -458,6 +485,70 @@ mod tests {
         }
         for k in 0..4000u64 {
             assert_eq!(flat.contains(k), packed.contains(k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn rollback_failed_insert_is_a_noop() {
+        let mut f = CuckooFilter::<FlatTable>::new(CuckooParams {
+            capacity: 256,
+            victim_policy: VictimPolicy::Rollback,
+            ..Default::default()
+        });
+        let mut accepted = vec![];
+        let mut failures = 0;
+        for k in 0..2000u64 {
+            let before_table = f.to_frozen();
+            let before_len = f.len();
+            match f.insert(k) {
+                Ok(()) => accepted.push(k),
+                Err(_) => {
+                    failures += 1;
+                    assert_eq!(
+                        f.to_frozen(),
+                        before_table,
+                        "failed insert of {k} must leave the table bit-identical"
+                    );
+                    assert_eq!(f.len(), before_len);
+                }
+            }
+            assert_eq!(
+                f.len(),
+                f.iter_fingerprints().count(),
+                "len/table divergence after key {k}"
+            );
+        }
+        assert!(failures > 0, "saturation must produce failures");
+        // Rollback loses nothing: every accepted key stays findable.
+        for &k in &accepted {
+            assert!(f.contains(k), "false negative for accepted key {k}");
+        }
+        assert_eq!(f.stats.dropped_fingerprints, 0);
+        assert_eq!(f.stats.victim_stashes, 0);
+    }
+
+    #[test]
+    fn rollback_then_delete_restores_space() {
+        // after a storm of failures the table must still be fully
+        // functional: delete everything, reinsert cleanly
+        let mut f = CuckooFilter::<FlatTable>::new(CuckooParams {
+            capacity: 256,
+            victim_policy: VictimPolicy::Rollback,
+            ..Default::default()
+        });
+        let mut accepted = vec![];
+        for k in 0..2000u64 {
+            if f.insert(k).is_ok() {
+                accepted.push(k);
+            }
+        }
+        for &k in &accepted {
+            assert!(f.delete(k), "{k}");
+        }
+        assert_eq!(f.len(), 0);
+        assert_eq!(f.iter_fingerprints().count(), 0);
+        for k in 0..100u64 {
+            f.insert(k).unwrap();
         }
     }
 

@@ -17,6 +17,10 @@ pub struct FilterStats {
     pub deletes: u64,
     /// Deletes rejected (key not present / verification failed).
     pub delete_rejects: u64,
+    /// Verified deletes whose filter-side removal failed, forcing the
+    /// keystore entry to be restored (state-divergence guard; should
+    /// stay 0 under [`super::cuckoo::VictimPolicy::Rollback`]).
+    pub delete_rollbacks: u64,
     /// Membership queries served.
     pub lookups: u64,
     /// Cuckoo displacement steps (kicks) performed across all inserts.
@@ -69,6 +73,7 @@ impl FilterStats {
         self.insert_failures += other.insert_failures;
         self.deletes += other.deletes;
         self.delete_rejects += other.delete_rejects;
+        self.delete_rollbacks += other.delete_rollbacks;
         self.lookups += other.lookups;
         self.kicks += other.kicks;
         self.resizes_grow += other.resizes_grow;

@@ -8,11 +8,51 @@
 //!   dynamic resize controller with two modes, [`Mode::Pre`]
 //!   (static thresholds) and [`Mode::Eof`] (congestion aware), plus
 //!   verified deletes against an authoritative key store.
+//! * [`ShardedOcf`] — the concurrent front-end: N independent [`Ocf`]
+//!   shards, each behind its own lock stripe, selected by (a finalizer
+//!   of) the key hash. Batched APIs group a pre-hashed batch by shard
+//!   and apply each shard's group under a single lock acquisition, so
+//!   M threads scale to min(M, shards) until the memory bus saturates.
 //! * [`BloomFilter`], [`CountingBloomFilter`], [`ScalableBloomFilter`],
 //!   [`XorFilter`] — the baselines the paper positions against.
 //!
 //! All dynamic filters implement [`MembershipFilter`], so experiment
 //! drivers and the store layer are generic over the filter choice.
+//!
+//! ## State-consistency invariants
+//!
+//! The OCF wrapper pairs the probabilistic cuckoo table with an
+//! authoritative [`KeyStore`]; the two MUST stay in lockstep through
+//! every success *and failure* path (property-tested in
+//! `rust/tests/proptests.rs`):
+//!
+//! * **failed inserts are no-ops** — [`CuckooFilter::insert_triple`]
+//!   rolls its eviction walk back under [`VictimPolicy::Rollback`] (the
+//!   policy OCF uses), so an `Err(Full)` leaves the table bit-identical
+//!   to its pre-call state and the keystore rollback in Static mode
+//!   cannot strand a phantom fingerprint;
+//! * **failed deletes restore the keystore** — if the filter delete of
+//!   a verified key somehow fails, the key is re-inserted into the
+//!   keystore (and counted in [`FilterStats::delete_rollbacks`]) so a
+//!   later rebuild cannot silently drop a key the filter still reports;
+//! * `len() == iter_fingerprints().count()` and `len()` equals the
+//!   number of distinct live keys, after every operation.
+//!
+//! ([`VictimPolicy::Stash`] and [`VictimPolicy::Drop`] keep the
+//! traditional lossy semantics — they are the experiment baselines that
+//! reproduce the paper's observed failure modes, not defaults.)
+//!
+//! ## Sharding design
+//!
+//! [`ShardedOcf`] picks a shard from the high bits of `mix32(idx_hash
+//! ^ fp)` — a finalizer over the triple, NOT raw high bits of
+//! `idx_hash`. Raw bits would correlate with the in-shard bucket
+//! mapping (non-power-of-two tables reduce the *high* bits of
+//! `idx_hash` via multiply-shift), confining each shard's keys to a
+//! slice of its buckets; the finalizer decorrelates shard choice from
+//! both bucket mappings. All shards share one [`Hasher`] (same
+//! seed/fp_bits), so a batch is hashed exactly once and the triples are
+//! valid against every shard.
 
 pub mod bloom;
 pub mod bucket;
@@ -26,6 +66,7 @@ pub mod policy;
 pub mod pre;
 pub mod resize;
 pub mod scalable_bloom;
+pub mod sharded;
 pub mod xor;
 
 pub use bloom::{BloomFilter, CountingBloomFilter};
@@ -39,19 +80,32 @@ pub use ocf::{Mode, Ocf, OcfConfig};
 pub use policy::{FilterEvent, Occupancy, ResizeDecision, ResizePolicy};
 pub use pre::PrePolicy;
 pub use scalable_bloom::ScalableBloomFilter;
+pub use sharded::{ShardedOcf, ShardedOcfConfig};
 pub use xor::XorFilter;
 
 /// Errors from filter mutation.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum FilterError {
     /// Insert failed: max displacements exhausted and no resize policy
     /// rescued it (paper §II.B "Max Displacements ... the filter is full").
-    #[error("filter full: {kicks} displacements exhausted at occupancy {occupancy:.3}")]
     Full { kicks: u32, occupancy: f64 },
     /// A resize was required but the policy refused (e.g. capacity cap).
-    #[error("resize refused: {0}")]
     ResizeRefused(String),
 }
+
+impl std::fmt::Display for FilterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FilterError::Full { kicks, occupancy } => write!(
+                f,
+                "filter full: {kicks} displacements exhausted at occupancy {occupancy:.3}"
+            ),
+            FilterError::ResizeRefused(msg) => write!(f, "resize refused: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FilterError {}
 
 /// Common interface over all *dynamic* membership filters (xor is
 /// build-once and only implements lookup).

@@ -21,6 +21,7 @@
 
 use super::cuckoo::{CuckooFilter, CuckooParams, VictimPolicy};
 use super::eof::EofPolicy;
+use super::fingerprint::HashTriple;
 use super::keystore::KeyStore;
 use super::metrics::FilterStats;
 use super::policy::{FilterEvent, Occupancy, ResizePolicy, StaticPolicy};
@@ -117,7 +118,11 @@ impl OcfConfig {
             fp_bits: self.fp_bits,
             max_displacements: self.max_displacements,
             seed: self.seed,
-            victim_policy: VictimPolicy::Stash,
+            // Rollback (not Stash): a failed insert must leave the
+            // table bit-identical so the keystore rollback in Static
+            // mode cannot strand a phantom fingerprint (the
+            // state-divergence bug; see `filter` module docs).
+            victim_policy: VictimPolicy::Rollback,
         }
     }
 }
@@ -228,12 +233,27 @@ impl Ocf {
     /// Insert with a pre-computed hash triple (from the XLA batch
     /// executor) — skips the native hash. The triple MUST be
     /// `self.hasher().hash_key(key)`; debug builds assert it.
-    pub fn insert_hashed(
-        &mut self,
-        key: u64,
-        triple: super::fingerprint::HashTriple,
-    ) -> Result<(), FilterError> {
+    pub fn insert_hashed(&mut self, key: u64, triple: HashTriple) -> Result<(), FilterError> {
         debug_assert_eq!(triple, self.hasher().hash_key(key), "foreign triple");
+        self.insert_impl(key, triple)
+    }
+
+    /// Membership with a pre-computed triple.
+    #[inline]
+    pub fn contains_triple(&self, triple: HashTriple) -> bool {
+        self.filter.contains_triple(triple)
+    }
+
+    /// Verified delete with a pre-computed triple.
+    pub fn delete_hashed(&mut self, key: u64, triple: HashTriple) -> bool {
+        debug_assert_eq!(triple, self.hasher().hash_key(key), "foreign triple");
+        self.delete_impl(key, triple)
+    }
+
+    /// The single insert path shared by `insert` and `insert_hashed`
+    /// (the duplicated Full-handling branches are where the two used to
+    /// be able to drift). Idempotent: a duplicate insert is an Ok no-op.
+    fn insert_impl(&mut self, key: u64, triple: HashTriple) -> Result<(), FilterError> {
         if !self.keys.insert(key) {
             return Ok(());
         }
@@ -252,13 +272,21 @@ impl Ocf {
                 Ok(())
             }
             Err(e) => {
+                // Emergency: displacement budget exhausted. Rollback
+                // already restored the table, and the key IS in the key
+                // store; a forced rebuild (policy-directed or doubling
+                // fallback) will place it.
                 let occ = self.occupancy_snapshot();
-                match self
-                    .policy
-                    .as_mut()
-                    .on_event(FilterEvent::InsertFull, occ, self.tick)
-                {
+                let decision =
+                    self.policy
+                        .as_mut()
+                        .on_event(FilterEvent::InsertFull, occ, self.tick);
+                match decision {
                     Some(d) => {
+                        // The rebuild re-inserts from the key store, which
+                        // already holds `key`. If the clamp no-ops the
+                        // decision, force a doubling rebuild so the wedged
+                        // key always lands.
                         if !self.maybe_resize(d.new_capacity, d.grow) {
                             self.maybe_resize(self.filter.capacity() * 2, true);
                         }
@@ -266,6 +294,10 @@ impl Ocf {
                         Ok(())
                     }
                     None => {
+                        // Static mode: surface the failure like the
+                        // traditional filter would. The eviction walk was
+                        // rolled back, so removing the keystore entry
+                        // restores the exact pre-insert state.
                         self.keys.remove(key);
                         self.stats.insert_failures += 1;
                         Err(e)
@@ -275,16 +307,22 @@ impl Ocf {
         }
     }
 
-    /// Membership with a pre-computed triple.
-    #[inline]
-    pub fn contains_triple(&self, triple: super::fingerprint::HashTriple) -> bool {
-        self.filter.contains_triple(triple)
-    }
-
-    /// Verified delete with a pre-computed triple.
-    pub fn delete_hashed(&mut self, key: u64, triple: super::fingerprint::HashTriple) -> bool {
-        debug_assert_eq!(triple, self.hasher().hash_key(key), "foreign triple");
-        if !self.keys.remove(key) && self.cfg.verify_deletes {
+    /// The single delete path shared by `delete` and `delete_hashed`.
+    ///
+    /// Verified delete (paper §IV): the key must exist in the
+    /// authoritative store, otherwise the delete is rejected *before*
+    /// touching any fingerprint — never evicts a collider's entry.
+    /// (`remove` doubles as the verification probe — one keystore walk,
+    /// not two; perf log step 3.) If the filter-side removal of a
+    /// verified key ever fails, the keystore entry is restored so the
+    /// two structures cannot diverge (a rebuild would otherwise
+    /// permanently drop a key the filter still reports present).
+    fn delete_impl(&mut self, key: u64, triple: HashTriple) -> bool {
+        let was_in_store = self.keys.remove(key);
+        if !was_in_store && self.cfg.verify_deletes {
+            // absent key: rejected before touching any fingerprint
+            // (unverified mode falls through to the raw unsafe delete,
+            // faithfully reproducing the traditional behaviour)
             self.stats.delete_rejects += 1;
             return false;
         }
@@ -301,9 +339,26 @@ impl Ocf {
                 self.maybe_resize(d.new_capacity, d.grow);
             }
         } else {
+            if was_in_store {
+                self.keys.insert(key);
+                self.stats.delete_rollbacks += 1;
+            }
             self.stats.delete_rejects += 1;
         }
         removed
+    }
+
+    /// Number of keys in the authoritative store (exact; equals `len()`
+    /// whenever the filter and keystore are in sync — the invariant the
+    /// proptests pin down).
+    pub fn keystore_len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Fingerprints actually resident in the inner table (including a
+    /// stashed victim). Must always equal `len()`.
+    pub fn fingerprint_count(&self) -> usize {
+        self.filter.iter_fingerprints().count()
     }
 
     fn occupancy_snapshot(&self) -> Occupancy {
@@ -354,90 +409,20 @@ impl MembershipFilter for Ocf {
     /// Insert (idempotent — OCF mirrors the upsert semantics of the
     /// data stores it serves; a duplicate insert is an Ok no-op).
     fn insert(&mut self, key: u64) -> Result<(), FilterError> {
-        if !self.keys.insert(key) {
-            return Ok(());
-        }
-        self.tick += 1;
-
-        match self.filter.insert(key) {
-            Ok(()) => {
-                self.stats.inserts += 1;
-                let occ = self.occupancy_snapshot();
-                if let Some(d) = self
-                    .policy
-                    .as_mut()
-                    .on_event(FilterEvent::Insert, occ, self.tick)
-                {
-                    self.maybe_resize(d.new_capacity, d.grow);
-                }
-                Ok(())
-            }
-            Err(e) => {
-                // Emergency: displacement budget exhausted. The key IS
-                // in the key store; a forced rebuild (policy-directed or
-                // doubling fallback) will place it.
-                let occ = self.occupancy_snapshot();
-                let decision =
-                    self.policy
-                        .as_mut()
-                        .on_event(FilterEvent::InsertFull, occ, self.tick);
-                match decision {
-                    Some(d) => {
-                        // The rebuild re-inserts from the key store, which
-                        // already holds `key`. If the clamp no-ops the
-                        // decision, force a doubling rebuild so the wedged
-                        // key always lands.
-                        if !self.maybe_resize(d.new_capacity, d.grow) {
-                            self.maybe_resize(self.filter.capacity() * 2, true);
-                        }
-                        self.stats.inserts += 1;
-                        Ok(())
-                    }
-                    None => {
-                        // Static mode: surface the failure like the
-                        // traditional filter would.
-                        self.keys.remove(key);
-                        self.stats.insert_failures += 1;
-                        Err(e)
-                    }
-                }
-            }
-        }
+        let triple = self.hasher().hash_key(key);
+        self.insert_impl(key, triple)
     }
 
     fn contains(&self, key: u64) -> bool {
         self.filter.contains(key)
     }
 
-    /// Verified delete (paper §IV): the key must exist in the
-    /// authoritative store, otherwise the delete is rejected *before*
-    /// touching any fingerprint — never evicts a collider's entry.
-    /// (`remove` doubles as the verification probe — one keystore walk,
-    /// not two; perf log step 3.)
+    /// Verified delete (paper §IV); see [`Ocf::delete_hashed`] — both
+    /// routes share `delete_impl` so the Full/reject handling cannot
+    /// drift between them.
     fn delete(&mut self, key: u64) -> bool {
-        if !self.keys.remove(key) && self.cfg.verify_deletes {
-            // absent key: rejected before touching any fingerprint
-            // (unverified mode falls through to the raw unsafe delete,
-            // faithfully reproducing the traditional behaviour)
-            self.stats.delete_rejects += 1;
-            return false;
-        }
-        self.tick += 1;
-        let removed = self.filter.delete(key);
-        if removed {
-            self.stats.deletes += 1;
-            let occ = self.occupancy_snapshot();
-            if let Some(d) = self
-                .policy
-                .as_mut()
-                .on_event(FilterEvent::Delete, occ, self.tick)
-            {
-                self.maybe_resize(d.new_capacity, d.grow);
-            }
-        } else {
-            self.stats.delete_rejects += 1;
-        }
-        removed
+        let triple = self.hasher().hash_key(key);
+        self.delete_impl(key, triple)
     }
 
     fn len(&self) -> usize {
@@ -501,6 +486,80 @@ mod tests {
         }
         assert!(failed > 0, "static mode must hit Full");
         assert_eq!(f.stats().resizes(), 0);
+    }
+
+    #[test]
+    fn static_mode_failed_insert_fully_rolls_back() {
+        // The state-divergence bug: a failed Static-mode insert used to
+        // leave the caller's fingerprint resident (phantom) after the
+        // keystore rollback. Now every failure path is a true no-op.
+        let mut f = ocf(Mode::Static);
+        let mut failed = 0;
+        for k in 0..3000u64 {
+            let ok = f.insert(k).is_ok();
+            if !ok {
+                failed += 1;
+                assert!(!f.contains_exact(k), "failed insert left {k} in keystore");
+            }
+            assert_eq!(
+                f.len(),
+                f.keystore_len(),
+                "filter len diverged from keystore after key {k}"
+            );
+            assert_eq!(
+                f.len(),
+                f.fingerprint_count(),
+                "len diverged from resident fingerprints after key {k}"
+            );
+        }
+        assert!(failed > 0, "static mode must saturate");
+        // a previously failed key can be retried without double-counting
+        let before = f.len();
+        for k in 0..3000u64 {
+            let _ = f.insert(k);
+            assert_eq!(f.len(), f.keystore_len());
+            assert_eq!(f.len(), f.fingerprint_count());
+        }
+        assert!(f.len() >= before);
+    }
+
+    #[test]
+    fn hashed_and_plain_paths_identical() {
+        // the dedup guarantee: insert/delete and their _hashed twins
+        // drive the same internal path, so interleaving them across two
+        // instances must produce identical state
+        let mut a = ocf(Mode::Static);
+        let mut b = ocf(Mode::Static);
+        let h = a.hasher();
+        for k in 0..3000u64 {
+            assert_eq!(a.insert(k).is_ok(), b.insert_hashed(k, h.hash_key(k)).is_ok(), "{k}");
+        }
+        for k in (0..3000u64).step_by(3) {
+            assert_eq!(a.delete(k), b.delete_hashed(k, h.hash_key(k)), "{k}");
+        }
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.to_frozen(), b.to_frozen());
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    fn delete_rollbacks_stay_zero_under_pressure() {
+        // with Rollback victim handling a verified key's fingerprint is
+        // always removable, so the delete-desync guard must never fire
+        let mut f = ocf(Mode::Static);
+        let mut accepted = vec![];
+        for k in 0..3000u64 {
+            if f.insert(k).is_ok() {
+                accepted.push(k);
+            }
+        }
+        for &k in &accepted {
+            assert!(f.delete(k), "verified delete of {k} must succeed");
+        }
+        assert_eq!(f.stats().delete_rollbacks, 0);
+        assert_eq!(f.len(), 0);
+        assert_eq!(f.keystore_len(), 0);
+        assert_eq!(f.fingerprint_count(), 0);
     }
 
     #[test]

@@ -1,0 +1,483 @@
+//! `ShardedOcf` — the concurrent OCF front-end.
+//!
+//! The paper's target deployment (§I: bursty traffic against
+//! distributed data stores) needs a filter that many request threads
+//! can hit at once. A single [`Ocf`] is single-writer by construction
+//! (resizes rebuild the whole table), so instead of threading locks
+//! through the hot single-threaded path, this front-end runs **N
+//! independent `Ocf` shards**, each behind its own lock stripe, in the
+//! spirit of Cuckoo-GPU's partitioned batch probes:
+//!
+//! * a key's shard is chosen from a finalizer of its hash triple
+//!   ([`ShardedOcf::shard_of`]), so a batch hashed ONCE by the XLA/native
+//!   executor can be routed without re-hashing;
+//! * batched APIs ([`ShardedOcf::insert_batch`],
+//!   [`ShardedOcf::contains_batch`], [`ShardedOcf::delete_batch`])
+//!   group the batch by shard and apply each shard's group under a
+//!   **single lock acquisition** — M threads driving batches scale to
+//!   min(M, N) because disjoint shards never contend;
+//! * each shard keeps the full OCF machinery (resize policy, verified
+//!   deletes, keystore) over 1/N of the keyspace, so every
+//!   state-consistency invariant of [`Ocf`] holds per shard and
+//!   therefore globally.
+//!
+//! Shard choice must be decorrelated from the in-shard bucket mapping:
+//! see the `filter` module docs ("Sharding design") for why the raw
+//! high bits of `idx_hash` would skew non-power-of-two tables and how
+//! `mix32(idx_hash ^ fp)` avoids it.
+
+use super::fingerprint::{mix32, Hasher, HashTriple};
+use super::metrics::FilterStats;
+use super::ocf::{Ocf, OcfConfig};
+use super::{FilterError, MembershipFilter};
+use std::sync::Mutex;
+
+/// Configuration for the sharded front-end.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedOcfConfig {
+    /// Number of shards (rounded up to a power of two, min 1). Aim for
+    /// the number of writer threads; more shards = less contention but
+    /// more per-shard fixed overhead.
+    pub shards: usize,
+    /// Template for every shard. Capacities are split across shards;
+    /// seed and fingerprint parameters are shared so all shards agree
+    /// on one [`Hasher`] (a batch is hashed exactly once).
+    pub base: OcfConfig,
+}
+
+impl Default for ShardedOcfConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            base: OcfConfig::default(),
+        }
+    }
+}
+
+/// N independent OCF shards behind per-shard lock stripes.
+#[derive(Debug)]
+pub struct ShardedOcf {
+    shards: Vec<Mutex<Ocf>>,
+    shard_bits: u32,
+    hasher: Hasher,
+}
+
+impl ShardedOcf {
+    pub fn new(cfg: ShardedOcfConfig) -> Self {
+        Self::with_shards(cfg.shards, cfg.base)
+    }
+
+    /// Build `n` shards (rounded up to a power of two) from a template
+    /// config whose capacities are divided across shards.
+    pub fn with_shards(n: usize, base: OcfConfig) -> Self {
+        let n = n.max(1).next_power_of_two();
+        let shard_cfg = OcfConfig {
+            initial_capacity: crate::util::ceil_div(base.initial_capacity, n).max(64),
+            min_capacity: crate::util::ceil_div(base.min_capacity, n).max(64),
+            max_capacity: base.max_capacity.map(|m| crate::util::ceil_div(m, n).max(64)),
+            ..base
+        };
+        let shards: Vec<Mutex<Ocf>> = (0..n).map(|_| Mutex::new(Ocf::new(shard_cfg))).collect();
+        let hasher = shards[0].lock().unwrap().hasher();
+        Self {
+            shards,
+            shard_bits: n.trailing_zeros(),
+            hasher,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The hasher shared by every shard; a triple produced by it is
+    /// valid against any shard.
+    pub fn hasher(&self) -> Hasher {
+        self.hasher
+    }
+
+    /// Shard index for a pre-hashed triple: high bits of a finalizer
+    /// over the triple (NOT raw `idx_hash` bits, which the in-shard
+    /// bucket mappings consume — see module docs).
+    #[inline(always)]
+    pub fn shard_of(&self, t: HashTriple) -> usize {
+        if self.shard_bits == 0 {
+            0
+        } else {
+            (mix32(t.idx_hash ^ t.fp) >> (32 - self.shard_bits)) as usize
+        }
+    }
+
+    /// Run `f` with exclusive access to shard `sid` under a single lock
+    /// acquisition (the primitive the pipeline's parallel apply stage
+    /// builds its per-shard fan-out on).
+    pub fn with_shard<R>(&self, sid: usize, f: impl FnOnce(&mut Ocf) -> R) -> R {
+        let mut guard = self.shards[sid].lock().unwrap();
+        f(&mut guard)
+    }
+
+    /// Group triple indices by shard: `groups[s]` lists the positions
+    /// in `triples` owned by shard `s`, in input order. `pub(crate)` so
+    /// the pipeline's parallel apply stage shares this exact routing.
+    pub(crate) fn group_by_shard(&self, triples: &[HashTriple]) -> Vec<Vec<usize>> {
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, t) in triples.iter().enumerate() {
+            groups[self.shard_of(*t)].push(i);
+        }
+        groups
+    }
+
+    // ---- single-key convenience (shared-reference: locks internally) ----
+
+    pub fn insert_one(&self, key: u64) -> Result<(), FilterError> {
+        let t = self.hasher.hash_key(key);
+        self.with_shard(self.shard_of(t), |s| s.insert_hashed(key, t))
+    }
+
+    pub fn contains_one(&self, key: u64) -> bool {
+        let t = self.hasher.hash_key(key);
+        self.with_shard(self.shard_of(t), |s| s.contains_triple(t))
+    }
+
+    pub fn delete_one(&self, key: u64) -> bool {
+        let t = self.hasher.hash_key(key);
+        self.with_shard(self.shard_of(t), |s| s.delete_hashed(key, t))
+    }
+
+    /// Exact (non-probabilistic) membership via the owning shard's
+    /// authoritative key store.
+    pub fn contains_exact(&self, key: u64) -> bool {
+        let t = self.hasher.hash_key(key);
+        self.with_shard(self.shard_of(t), |s| s.contains_exact(key))
+    }
+
+    // ---- batched APIs: hash once, group by shard, one lock per shard ----
+
+    /// Insert a batch; results are positionally aligned with `keys`.
+    pub fn insert_batch(&self, keys: &[u64]) -> Vec<Result<(), FilterError>> {
+        let triples: Vec<HashTriple> = keys.iter().map(|&k| self.hasher.hash_key(k)).collect();
+        self.insert_batch_hashed(keys, &triples)
+    }
+
+    /// Insert a pre-hashed batch (`triples[i]` MUST be the hash of
+    /// `keys[i]` under [`ShardedOcf::hasher`]).
+    pub fn insert_batch_hashed(
+        &self,
+        keys: &[u64],
+        triples: &[HashTriple],
+    ) -> Vec<Result<(), FilterError>> {
+        assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        let mut out: Vec<Result<(), FilterError>> = keys.iter().map(|_| Ok(())).collect();
+        for (sid, group) in self.group_by_shard(triples).iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let mut shard = self.shards[sid].lock().unwrap();
+            for &i in group {
+                out[i] = shard.insert_hashed(keys[i], triples[i]);
+            }
+        }
+        out
+    }
+
+    /// Batched membership; results aligned with `keys`.
+    pub fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
+        let triples: Vec<HashTriple> = keys.iter().map(|&k| self.hasher.hash_key(k)).collect();
+        self.contains_batch_hashed(&triples)
+    }
+
+    /// Batched membership over pre-hashed triples.
+    pub fn contains_batch_hashed(&self, triples: &[HashTriple]) -> Vec<bool> {
+        let mut out = vec![false; triples.len()];
+        for (sid, group) in self.group_by_shard(triples).iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let shard = self.shards[sid].lock().unwrap();
+            for &i in group {
+                out[i] = shard.contains_triple(triples[i]);
+            }
+        }
+        out
+    }
+
+    /// Batched verified delete; results aligned with `keys`.
+    pub fn delete_batch(&self, keys: &[u64]) -> Vec<bool> {
+        let triples: Vec<HashTriple> = keys.iter().map(|&k| self.hasher.hash_key(k)).collect();
+        self.delete_batch_hashed(keys, &triples)
+    }
+
+    /// Batched verified delete over a pre-hashed batch.
+    pub fn delete_batch_hashed(&self, keys: &[u64], triples: &[HashTriple]) -> Vec<bool> {
+        assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        let mut out = vec![false; keys.len()];
+        for (sid, group) in self.group_by_shard(triples).iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let mut shard = self.shards[sid].lock().unwrap();
+            for &i in group {
+                out[i] = shard.delete_hashed(keys[i], triples[i]);
+            }
+        }
+        out
+    }
+
+    // ---- merged views across shards ----
+
+    /// Total stored keys across shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total slot capacity across shards.
+    pub fn capacity(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().capacity())
+            .sum()
+    }
+
+    /// Aggregate occupancy `len / capacity` across shards.
+    pub fn occupancy(&self) -> f64 {
+        let (mut len, mut cap) = (0usize, 0usize);
+        for s in &self.shards {
+            let g = s.lock().unwrap();
+            len += g.len();
+            cap += g.capacity();
+        }
+        if cap == 0 {
+            0.0
+        } else {
+            len as f64 / cap as f64
+        }
+    }
+
+    /// Filter bytes across shards (excludes keystores, matching
+    /// [`Ocf::keystore_bytes`]'s accounting split).
+    pub fn memory_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().memory_bytes())
+            .sum()
+    }
+
+    /// Keystore bytes across shards.
+    pub fn keystore_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().keystore_bytes())
+            .sum()
+    }
+
+    /// Merged stats across shards.
+    pub fn stats(&self) -> FilterStats {
+        let mut out = FilterStats::new();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap().stats());
+        }
+        out
+    }
+
+    /// Per-shard lengths (occupancy-balance visibility for tests and
+    /// the throughput bench).
+    pub fn shard_lens(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().len())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sharded(n: usize) -> ShardedOcf {
+        ShardedOcf::with_shards(
+            n,
+            OcfConfig {
+                initial_capacity: 4096,
+                min_capacity: 1024,
+                ..OcfConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn shard_count_rounds_to_pow2() {
+        assert_eq!(sharded(1).shard_count(), 1);
+        assert_eq!(sharded(3).shard_count(), 4);
+        assert_eq!(sharded(8).shard_count(), 8);
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let f = sharded(4);
+        let keys: Vec<u64> = (0..10_000).collect();
+        for r in f.insert_batch(&keys) {
+            r.unwrap();
+        }
+        assert_eq!(f.len(), 10_000);
+        assert!(f.contains_batch(&keys).iter().all(|&b| b));
+        let absent: Vec<u64> = (1_000_000..1_001_000).collect();
+        let hits = f.contains_batch(&absent).iter().filter(|&&b| b).count();
+        assert!(hits < 50, "false-positive burst: {hits}");
+    }
+
+    #[test]
+    fn batch_results_positionally_aligned() {
+        let f = sharded(4);
+        for r in f.insert_batch(&[10, 20, 30]) {
+            r.unwrap();
+        }
+        let probe = vec![10u64, 999_999, 20, 888_888, 30];
+        let got = f.contains_batch(&probe);
+        assert!(got[0] && got[2] && got[4]);
+        let deleted = f.delete_batch(&probe);
+        assert_eq!(deleted, vec![true, false, true, false, true]);
+        assert_eq!(f.len(), 0);
+    }
+
+    #[test]
+    fn batch_matches_single_key_path() {
+        let f = sharded(8);
+        let g = sharded(8);
+        let keys: Vec<u64> = (0..5000).map(|i| i * 2654435761).collect();
+        for r in f.insert_batch(&keys) {
+            r.unwrap();
+        }
+        for &k in &keys {
+            g.insert_one(k).unwrap();
+        }
+        assert_eq!(f.len(), g.len());
+        assert_eq!(f.shard_lens(), g.shard_lens());
+        for &k in &keys {
+            assert_eq!(f.contains_one(k), g.contains_one(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn shards_spread_keys() {
+        let f = sharded(8);
+        let keys: Vec<u64> = (0..80_000).collect();
+        for r in f.insert_batch(&keys) {
+            r.unwrap();
+        }
+        let lens = f.shard_lens();
+        assert_eq!(lens.iter().sum::<usize>(), 80_000);
+        let expect = 80_000 / 8;
+        for (i, &l) in lens.iter().enumerate() {
+            let dev = (l as f64 - expect as f64).abs() / expect as f64;
+            assert!(dev < 0.15, "shard {i} holds {l}, expect ~{expect}");
+        }
+    }
+
+    #[test]
+    fn grows_under_burst_and_keeps_everything() {
+        // each shard starts small and must resize independently
+        let f = ShardedOcf::with_shards(
+            4,
+            OcfConfig {
+                initial_capacity: 1024,
+                min_capacity: 256,
+                ..OcfConfig::default()
+            },
+        );
+        let keys: Vec<u64> = (0..100_000).collect();
+        for chunk in keys.chunks(4096) {
+            for r in f.insert_batch(chunk) {
+                r.unwrap();
+            }
+        }
+        assert_eq!(f.len(), 100_000);
+        assert!(f.stats().resizes() > 0);
+        for probe in keys.iter().step_by(97) {
+            assert!(f.contains_one(*probe), "{probe}");
+        }
+        // aggregate occupancy stays inside every shard's safe band
+        assert!(f.occupancy() <= 0.9 + 1e-9);
+    }
+
+    #[test]
+    fn verified_delete_preserved_per_shard() {
+        let f = sharded(4);
+        let keys: Vec<u64> = (0..2000).collect();
+        for r in f.insert_batch(&keys) {
+            r.unwrap();
+        }
+        // hostile deletes of never-inserted keys must all be rejected
+        let hostile: Vec<u64> = (5_000_000..5_002_000).collect();
+        assert!(f.delete_batch(&hostile).iter().all(|&d| !d));
+        assert_eq!(f.len(), 2000);
+        assert!(f.contains_batch(&keys).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn stats_merge_across_shards() {
+        let f = sharded(4);
+        let keys: Vec<u64> = (0..3000).collect();
+        for r in f.insert_batch(&keys) {
+            r.unwrap();
+        }
+        let del: Vec<u64> = (0..1000).collect();
+        f.delete_batch(&del);
+        let s = f.stats();
+        assert_eq!(s.inserts, 3000);
+        assert_eq!(s.deletes, 1000);
+        assert_eq!(f.len(), 2000);
+    }
+
+    #[test]
+    fn agrees_with_unsharded_ocf_semantics() {
+        // one shard == plain OCF behaviour
+        let f = sharded(1);
+        let mut plain = Ocf::new(OcfConfig {
+            initial_capacity: 4096,
+            min_capacity: 1024,
+            ..OcfConfig::default()
+        });
+        let keys: Vec<u64> = (0..20_000).collect();
+        for r in f.insert_batch(&keys) {
+            r.unwrap();
+        }
+        for &k in &keys {
+            plain.insert(k).unwrap();
+        }
+        assert_eq!(f.len(), plain.len());
+        for k in (0..40_000u64).step_by(7) {
+            assert_eq!(f.contains_one(k), plain.contains(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn concurrent_disjoint_writers_smoke() {
+        use std::sync::Arc;
+        let f = Arc::new(sharded(8));
+        let nthreads = 8u64;
+        let per = 10_000u64;
+        std::thread::scope(|s| {
+            for t in 0..nthreads {
+                let f = Arc::clone(&f);
+                s.spawn(move || {
+                    let keys: Vec<u64> = (t * per..(t + 1) * per).collect();
+                    for chunk in keys.chunks(1024) {
+                        for r in f.insert_batch(chunk) {
+                            r.unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(f.len(), (nthreads * per) as usize);
+        let all: Vec<u64> = (0..nthreads * per).collect();
+        assert!(f.contains_batch(&all).iter().all(|&b| b));
+    }
+}

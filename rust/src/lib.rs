@@ -10,8 +10,9 @@
 //! * [`filter`] — the membership-filter family: the partial-key cuckoo
 //!   table, the traditional cuckoo filter baseline, **OCF** with its two
 //!   resize policies (**PRE** — static thresholds, **EOF** — congestion
-//!   aware), and the bloom / scalable-bloom / xor baselines the paper
-//!   compares against.
+//!   aware), the **sharded concurrent front-end** (`ShardedOcf`), and
+//!   the bloom / scalable-bloom / xor baselines the paper compares
+//!   against.
 //! * [`store`] — the Cassandra-like per-node substrate: memtable,
 //!   SSTables with frozen per-table filters, flush + compaction policy.
 //! * [`cluster`] — consistent-hash ring, router, replication, and the

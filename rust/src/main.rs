@@ -2,9 +2,10 @@
 //! line-protocol membership server.
 //!
 //! ```text
-//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|all>
+//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|all>
 //!         [--scale F]           # workload scale, 1.0 = paper scale
 //! ocf pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]
+//!              [--shards N]     # >1 = sharded concurrent filter front-end
 //! ocf serve [--config FILE] [--set section.key=value ...]
 //! ocf info [--artifacts DIR]
 //! ```
@@ -47,7 +48,7 @@ fn print_help() {
         "ocf — Optimized Cuckoo Filter coordinator\n\n\
          commands:\n  \
          exp <name|all> [--scale F]   regenerate paper tables/figures\n  \
-         pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]\n  \
+         pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads] [--shards N]\n  \
          serve [--config FILE] [--set section.key=value]\n  \
          info [--artifacts DIR]\n  \
          help"
@@ -97,6 +98,19 @@ fn cmd_pipeline(args: &[String]) -> i32 {
         .unwrap_or(1024);
     let artifacts = flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
     let threaded = flag_present(args, "--threads");
+    let shards: usize = flag_value(args, "--shards")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+
+    if shards > 1 {
+        if flag_value(args, "--artifacts").is_some() {
+            eprintln!("pipeline: --artifacts is ignored with --shards (sharded path is native-hash)");
+        }
+        if threaded {
+            eprintln!("pipeline: --threads is ignored with --shards (parallelism comes from the per-shard fan-out)");
+        }
+        return cmd_pipeline_sharded(ops, batch, shards);
+    }
 
     let mut filter = Ocf::new(ocf::filter::OcfConfig::default());
     let executor = match PjrtEngine::load_dir(&artifacts) {
@@ -159,6 +173,38 @@ fn cmd_pipeline(args: &[String]) -> i32 {
         filter.stats().resizes(),
     );
     let _ = bench_harness::render_table; // referenced by benches
+    0
+}
+
+/// Pipeline against the sharded concurrent front-end (native hash path;
+/// shard routing needs the triple anyway, and the parallel apply stage
+/// is the thing being exercised here).
+fn cmd_pipeline_sharded(ops: usize, batch: usize, shards: usize) -> i32 {
+    let filter = ocf::filter::ShardedOcf::with_shards(shards, ocf::filter::OcfConfig::default());
+    let mut pipeline = IngestPipeline::new(
+        BatchPolicy {
+            max_batch: batch,
+            ..BatchPolicy::default()
+        },
+        HashExecutor::native(filter.hasher()),
+    );
+    let mut gen = MixGenerator::new(
+        KeyDist::uniform(1 << 40),
+        OpMix::new(0.5, 0.4, 0.1),
+        0x0CF_11FE,
+    );
+    let ops_iter = (0..ops).map(move |_| gen.next_op());
+    let report = pipeline.run_sharded(ops_iter, &filter);
+    println!("{}", report.render());
+    println!(
+        "sharded filter: shards={} len={} capacity={} occupancy={:.3} memory={} resizes={}",
+        filter.shard_count(),
+        filter.len(),
+        filter.capacity(),
+        filter.occupancy(),
+        ocf::util::fmt_bytes(filter.memory_bytes()),
+        filter.stats().resizes(),
+    );
     0
 }
 

@@ -13,9 +13,16 @@
 //! the resulting triples drive `insert_hashed`/`contains_triple`/
 //! `delete_hashed`, so the accelerated hash is genuinely on the request
 //! path rather than a sidecar.
+//!
+//! A third drive mode targets the concurrent front-end:
+//!
+//! * [`IngestPipeline::run_sharded`] — same pull loop, but each hashed
+//!   batch is grouped by shard and fanned out across scoped threads,
+//!   one per non-empty shard group, each applying its group under a
+//!   single lock acquisition ([`ShardedOcf::with_shard`]).
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
-use crate::filter::Ocf;
+use crate::filter::{Ocf, ShardedOcf};
 use crate::metrics::Histogram;
 use crate::runtime::HashExecutor;
 use crate::workload::Op;
@@ -122,6 +129,99 @@ impl IngestPipeline {
         report
             .op_latency_ns
             .record(dt / batch.len().max(1) as u64);
+    }
+
+    /// Apply one batch against the sharded front-end: hash all keys
+    /// once, group op indices by shard, then fan the groups out across
+    /// scoped threads — one per non-empty shard — each applying its
+    /// group under a single lock acquisition.
+    fn apply_batch_sharded(
+        &self,
+        batch: &[Op],
+        filter: &ShardedOcf,
+        report: &mut IngestReport,
+    ) {
+        let keys: Vec<u64> = batch.iter().map(|op| op.key()).collect();
+        let triples = self
+            .executor
+            .hash_batch(&keys)
+            .expect("hash executor failed");
+        let t0 = Instant::now();
+        let groups = filter.group_by_shard(&triples);
+        let triples = &triples;
+        // (inserts, lookups, lookup_hits, deletes) per shard group
+        let partials: Vec<(u64, u64, u64, u64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = groups
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| !g.is_empty())
+                .map(|(sid, group)| {
+                    s.spawn(move || {
+                        filter.with_shard(sid, |shard| {
+                            let (mut ins, mut looks, mut hits, mut dels) = (0u64, 0u64, 0u64, 0u64);
+                            for &i in group {
+                                match batch[i] {
+                                    Op::Insert(k) => {
+                                        let _ = shard.insert_hashed(k, triples[i]);
+                                        ins += 1;
+                                    }
+                                    Op::Lookup(_) => {
+                                        looks += 1;
+                                        if shard.contains_triple(triples[i]) {
+                                            hits += 1;
+                                        }
+                                    }
+                                    Op::Delete(k) => {
+                                        shard.delete_hashed(k, triples[i]);
+                                        dels += 1;
+                                    }
+                                }
+                            }
+                            (ins, looks, hits, dels)
+                        })
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (ins, looks, hits, dels) in partials {
+            report.inserts += ins;
+            report.lookups += looks;
+            report.lookup_hits += hits;
+            report.deletes += dels;
+        }
+        let dt = t0.elapsed().as_nanos() as u64;
+        report.batches += 1;
+        report.ops += batch.len() as u64;
+        report.batch_latency_ns.record(dt);
+        report
+            .op_latency_ns
+            .record(dt / batch.len().max(1) as u64);
+    }
+
+    /// Pull pipeline against the sharded front-end (parallel apply).
+    /// The executor's hasher MUST match `filter.hasher()`, as with
+    /// [`IngestPipeline::run`].
+    pub fn run_sharded(
+        &mut self,
+        ops: impl Iterator<Item = Op>,
+        filter: &ShardedOcf,
+    ) -> IngestReport {
+        let mut report = IngestReport::new();
+        let mut batcher = DynamicBatcher::new(self.batch_policy);
+        let start = Instant::now();
+        for op in ops {
+            if let Some(batch) = batcher.push(op) {
+                self.apply_batch_sharded(&batch, filter, &mut report);
+            } else if let Some(batch) = batcher.poll(Instant::now()) {
+                self.apply_batch_sharded(&batch, filter, &mut report);
+            }
+        }
+        if let Some(batch) = batcher.drain() {
+            self.apply_batch_sharded(&batch, filter, &mut report);
+        }
+        report.elapsed_secs = start.elapsed().as_secs_f64();
+        report
     }
 
     /// Single-threaded pull pipeline.
@@ -292,6 +392,55 @@ mod tests {
         assert_eq!(f1.len(), f2.len());
         assert_eq!(r1.inserts, r2.inserts);
         assert_eq!(r1.lookup_hits, r2.lookup_hits);
+    }
+
+    #[test]
+    fn sharded_pipeline_matches_exact_model() {
+        use std::collections::HashSet;
+        let mut gen = MixGenerator::new(
+            KeyDist::uniform(1 << 14),
+            OpMix::new(0.5, 0.3, 0.2),
+            42,
+        );
+        let ops = gen.batch(20_000);
+        let filter = crate::filter::ShardedOcf::with_shards(
+            4,
+            OcfConfig {
+                mode: Mode::Eof,
+                initial_capacity: 2048,
+                ..OcfConfig::default()
+            },
+        );
+        let mut p = IngestPipeline::new(
+            BatchPolicy {
+                max_batch: 512,
+                max_delay: std::time::Duration::from_millis(10),
+            },
+            HashExecutor::native(filter.hasher()),
+        );
+        let report = p.run_sharded(ops.iter().copied(), &filter);
+        assert_eq!(report.ops, 20_000);
+        assert!(report.batches > 1);
+
+        // ops on the same key land in the same shard in input order, so
+        // final exact membership must match the sequential set model
+        let mut model = HashSet::new();
+        for op in &ops {
+            match *op {
+                Op::Insert(k) => {
+                    model.insert(k);
+                }
+                Op::Delete(k) => {
+                    model.remove(&k);
+                }
+                Op::Lookup(_) => {}
+            }
+        }
+        assert_eq!(filter.len(), model.len());
+        for &k in &model {
+            assert!(filter.contains_one(k), "false negative for {k}");
+            assert!(filter.contains_exact(k), "keystore lost {k}");
+        }
     }
 
     #[test]

@@ -111,6 +111,23 @@ impl HashExecutor {
         }
     }
 
+    /// Unreachable without the `xla` feature (the stub engine exposes
+    /// no artifact batches, so `pick_batch` is always `None`); kept as
+    /// a native fallback so call sites are feature-independent.
+    #[cfg(not(feature = "xla"))]
+    fn hash_chunk_xla(
+        &self,
+        _engine: &PjrtEngine,
+        chunk: &[u64],
+        _batch: usize,
+        out: &mut Vec<HashTriple>,
+    ) -> Result<(), RuntimeError> {
+        self.native_calls.set(self.native_calls.get() + 1);
+        out.extend(chunk.iter().map(|&k| self.hasher.hash_key(k)));
+        Ok(())
+    }
+
+    #[cfg(feature = "xla")]
     fn hash_chunk_xla(
         &self,
         engine: &PjrtEngine,
@@ -225,6 +242,22 @@ impl ProbeExecutor {
             .collect()
     }
 
+    /// Unreachable without the `xla` feature (the stub engine reports
+    /// no probe shape); kept as a native fallback so call sites are
+    /// feature-independent.
+    #[cfg(not(feature = "xla"))]
+    fn probe_xla(
+        &self,
+        _engine: &PjrtEngine,
+        table: &[u32],
+        nbuckets: usize,
+        queries: &[HashTriple],
+        _art_batch: usize,
+    ) -> Result<Vec<bool>, RuntimeError> {
+        Ok(Self::probe_native(table, nbuckets, queries))
+    }
+
+    #[cfg(feature = "xla")]
     fn probe_xla(
         &self,
         engine: &PjrtEngine,

@@ -23,12 +23,41 @@ pub use executor::{ExecutorKind, HashExecutor, ProbeExecutor};
 pub use pjrt::PjrtEngine;
 
 /// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("artifact error: {0}")]
     Artifact(String),
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Xla(String),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            RuntimeError::Xla(msg) => write!(f, "xla error: {msg}"),
+            RuntimeError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
 }

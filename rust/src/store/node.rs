@@ -19,13 +19,17 @@ use super::compaction::{merge_tables, CompactionPolicy};
 use super::flush::{FlushPolicy, FlushReason};
 use super::memtable::{Entry, Memtable};
 use super::sstable::SsTable;
-use crate::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+use crate::filter::{FilterError, FilterStats, MembershipFilter, Mode, Ocf, OcfConfig, ShardedOcf};
 
 /// Node configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeConfig {
     pub node_id: u64,
     pub filter: OcfConfig,
+    /// Shards for the node-level filter: 1 = plain single-threaded
+    /// [`Ocf`]; > 1 = the concurrent [`ShardedOcf`] front-end (rounded
+    /// up to a power of two).
+    pub filter_shards: usize,
     pub flush: FlushPolicy,
     pub compaction: CompactionPolicy,
     /// Value-size proxy for puts (bytes accounted in the memtable).
@@ -37,9 +41,103 @@ impl Default for NodeConfig {
         Self {
             node_id: 0,
             filter: OcfConfig::default(),
+            filter_shards: 1,
             flush: FlushPolicy::default(),
             compaction: CompactionPolicy::default(),
             value_len: 64,
+        }
+    }
+}
+
+/// The node-level live-set filter: plain OCF or the sharded concurrent
+/// front-end, selected by [`NodeConfig::filter_shards`]. Both variants
+/// expose the same surface, so the node's read/write paths are
+/// agnostic to the choice.
+#[derive(Debug)]
+pub enum NodeFilter {
+    Single(Box<Ocf>),
+    Sharded(ShardedOcf),
+}
+
+impl NodeFilter {
+    fn build(cfg: &NodeConfig, initial_capacity: usize) -> Self {
+        let fcfg = OcfConfig {
+            initial_capacity,
+            ..cfg.filter
+        };
+        if cfg.filter_shards > 1 {
+            NodeFilter::Sharded(ShardedOcf::with_shards(cfg.filter_shards, fcfg))
+        } else {
+            NodeFilter::Single(Box::new(Ocf::new(fcfg)))
+        }
+    }
+
+    pub fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        match self {
+            NodeFilter::Single(f) => f.insert(key),
+            NodeFilter::Sharded(f) => f.insert_one(key),
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        match self {
+            NodeFilter::Single(f) => f.contains(key),
+            NodeFilter::Sharded(f) => f.contains_one(key),
+        }
+    }
+
+    /// Exact membership via the authoritative keystore(s).
+    pub fn contains_exact(&self, key: u64) -> bool {
+        match self {
+            NodeFilter::Single(f) => f.contains_exact(key),
+            NodeFilter::Sharded(f) => f.contains_exact(key),
+        }
+    }
+
+    pub fn delete(&mut self, key: u64) -> bool {
+        match self {
+            NodeFilter::Single(f) => f.delete(key),
+            NodeFilter::Sharded(f) => f.delete_one(key),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            NodeFilter::Single(f) => f.len(),
+            NodeFilter::Sharded(f) => f.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        match self {
+            NodeFilter::Single(f) => f.capacity(),
+            NodeFilter::Sharded(f) => f.capacity(),
+        }
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        match self {
+            NodeFilter::Single(f) => f.occupancy(),
+            NodeFilter::Sharded(f) => f.occupancy(),
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            NodeFilter::Single(f) => f.memory_bytes(),
+            NodeFilter::Sharded(f) => f.memory_bytes(),
+        }
+    }
+
+    /// Aggregated filter stats (merged across shards when sharded).
+    pub fn stats(&self) -> FilterStats {
+        match self {
+            NodeFilter::Single(f) => f.stats(),
+            NodeFilter::Sharded(f) => f.stats(),
         }
     }
 }
@@ -83,8 +181,8 @@ pub struct StorageNode {
     cfg: NodeConfig,
     memtable: Memtable,
     sstables: Vec<SsTable>,
-    /// Node-level live-set filter (the paper's OCF).
-    filter: Ocf,
+    /// Node-level live-set filter (the paper's OCF; optionally sharded).
+    filter: NodeFilter,
     next_generation: u64,
     pub stats: NodeStats,
 }
@@ -94,7 +192,7 @@ impl StorageNode {
         Self {
             memtable: Memtable::new(),
             sstables: Vec::new(),
-            filter: Ocf::new(cfg.filter),
+            filter: NodeFilter::build(&cfg, cfg.filter.initial_capacity),
             next_generation: 1,
             cfg,
             stats: NodeStats::default(),
@@ -105,7 +203,7 @@ impl StorageNode {
         &self.cfg
     }
 
-    pub fn filter(&self) -> &Ocf {
+    pub fn filter(&self) -> &NodeFilter {
         &self.filter
     }
 
@@ -220,10 +318,10 @@ impl StorageNode {
     }
 
     fn rebuild_node_filter(&mut self) {
-        let mut fresh = Ocf::new(OcfConfig {
-            initial_capacity: (self.filter.len() * 2).max(self.cfg.filter.initial_capacity),
-            ..self.cfg.filter
-        });
+        let mut fresh = NodeFilter::build(
+            &self.cfg,
+            (self.filter.len() * 2).max(self.cfg.filter.initial_capacity),
+        );
         // live set = current filter keystore (exact)
         let mut keys: Vec<u64> = Vec::with_capacity(self.filter.len());
         self.for_each_live_key(|k| keys.push(k));
@@ -442,6 +540,37 @@ mod tests {
             o.put(k).unwrap();
         }
         assert_eq!(o.stats.flushes_premature, 0);
+    }
+
+    #[test]
+    fn sharded_filter_node_roundtrip() {
+        let mut n = StorageNode::new(NodeConfig {
+            filter_shards: 4,
+            flush: FlushPolicy::small(1000),
+            ..NodeConfig::default()
+        });
+        for k in 0..5000u64 {
+            n.put(k).unwrap();
+        }
+        assert!(n.stats.flushes > 0, "small policy must have flushed");
+        for k in (0..5000u64).step_by(13) {
+            assert!(n.get(k), "{k}");
+        }
+        assert!(!n.get(10_000_000));
+        assert!(n.delete(7));
+        assert!(!n.get(7));
+        assert!(!n.delete(9_999_999), "absent delete rejected");
+        assert_eq!(n.live_keys(), 4999);
+        // same put/get/delete semantics as the single-filter node
+        let mut single = StorageNode::new(NodeConfig {
+            flush: FlushPolicy::small(1000),
+            ..NodeConfig::default()
+        });
+        for k in 0..5000u64 {
+            single.put(k).unwrap();
+        }
+        single.delete(7);
+        assert_eq!(n.live_keys(), single.live_keys());
     }
 
     #[test]

@@ -9,10 +9,15 @@
 //!  P5  pipeline batching is semantically transparent;
 //!  P6  KeyStore behaves as a set under arbitrary op sequences;
 //!  P7  frozen-filter serialization preserves membership answers;
-//!  P8  router replication: every acked write is readable.
+//!  P8  router replication: every acked write is readable;
+//!  P9  failure atomicity: under Static-mode full pressure, every op
+//!      (including failed inserts) leaves `len()`, the resident
+//!      fingerprint count and the keystore mutually consistent;
+//!  P10 the sharded front-end is semantically transparent vs plain OCF
+//!      and safe under concurrent disjoint writers.
 
 use ocf::cluster::{Cluster, ReplicationConfig};
-use ocf::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+use ocf::filter::{MembershipFilter, Mode, Ocf, OcfConfig, ShardedOcf};
 use ocf::pipeline::{BatchPolicy, IngestPipeline};
 use ocf::runtime::HashExecutor;
 use ocf::store::{FlushPolicy, NodeConfig};
@@ -267,6 +272,169 @@ fn p7_frozen_filter_preserves_answers() {
                 .all(|(&k, hit)| hit == f.contains(k))
         },
     );
+}
+
+#[test]
+fn p9_full_pressure_keeps_filter_and_keystore_consistent() {
+    prop_check(
+        "full-pressure-atomicity",
+        40,
+        |g| {
+            // tight keyspace + tiny static filter → guaranteed Full
+            // pressure with interleaved deletes and duplicate inserts
+            let n = g.usize_in(200, 2500);
+            let keyspace = g.u64_below(2000) + 200;
+            g.vec(n, |g| {
+                let k = g.u64_below(keyspace);
+                if g.f64() < 0.7 {
+                    Op::Insert(k)
+                } else {
+                    Op::Delete(k)
+                }
+            })
+        },
+        |ops| {
+            let mut f = Ocf::new(OcfConfig {
+                mode: Mode::Static,
+                initial_capacity: 512,
+                min_capacity: 256,
+                ..OcfConfig::default()
+            });
+            let mut model = HashSet::new();
+            for op in ops {
+                match op {
+                    Op::Insert(k) => match f.insert(*k) {
+                        Ok(()) => {
+                            model.insert(*k);
+                        }
+                        Err(_) => {
+                            // failed insert must be a true no-op (a key
+                            // already present can never fail — duplicate
+                            // inserts return Ok before touching the table)
+                            if model.contains(k) || f.contains_exact(*k) {
+                                return false;
+                            }
+                        }
+                    },
+                    Op::Delete(k) => {
+                        if f.delete(*k) != model.remove(k) {
+                            return false;
+                        }
+                    }
+                    Op::Lookup(_) => {}
+                }
+                // the P9 triple-equality after EVERY op
+                if f.len() != model.len()
+                    || f.len() != f.keystore_len()
+                    || f.len() != f.fingerprint_count()
+                {
+                    return false;
+                }
+            }
+            // P1 for survivors + keystore agreement on a sample
+            model.iter().all(|&k| f.contains(k) && f.contains_exact(k))
+                && (0..500u64).all(|k| f.contains_exact(k) == model.contains(&k))
+        },
+    );
+}
+
+#[test]
+fn p10_sharded_matches_plain_ocf() {
+    prop_check(
+        "sharded-transparent",
+        20,
+        |g| {
+            let shards = *g.choose(&[1usize, 2, 4, 8]);
+            let case = gen_case(g, 2000, 1 << 12);
+            (shards, case)
+        },
+        |(shards, case)| {
+            let cfg = OcfConfig {
+                mode: case.mode,
+                initial_capacity: 2048,
+                ..OcfConfig::default()
+            };
+            let sharded = ShardedOcf::with_shards(*shards, cfg);
+            let mut model = HashSet::new();
+            for op in &case.ops {
+                match op {
+                    Op::Insert(k) => {
+                        if sharded.insert_one(*k).is_ok() {
+                            model.insert(*k);
+                        }
+                    }
+                    Op::Lookup(k) => {
+                        // probabilistic filter: a model-present key must hit
+                        if model.contains(k) && !sharded.contains_one(*k) {
+                            return false;
+                        }
+                    }
+                    Op::Delete(k) => {
+                        if sharded.delete_one(*k) != model.remove(k) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            if sharded.len() != model.len() {
+                return false;
+            }
+            let keys: Vec<u64> = model.iter().copied().collect();
+            sharded.contains_batch(&keys).iter().all(|&b| b)
+        },
+    );
+}
+
+#[test]
+fn p10_sharded_concurrent_disjoint_writers() {
+    let filter = ShardedOcf::with_shards(
+        8,
+        OcfConfig {
+            initial_capacity: 4096,
+            ..OcfConfig::default()
+        },
+    );
+    let nthreads = 6u64;
+    let per = 20_000u64;
+    std::thread::scope(|s| {
+        for t in 0..nthreads {
+            let filter = &filter;
+            s.spawn(move || {
+                // disjoint range per thread; mixed batched ops
+                let lo = t * per;
+                let keys: Vec<u64> = (lo..lo + per).collect();
+                for chunk in keys.chunks(1024) {
+                    for r in filter.insert_batch(chunk) {
+                        r.unwrap();
+                    }
+                }
+                // delete the first half of this thread's range
+                let dels: Vec<u64> = (lo..lo + per / 2).collect();
+                for (i, ok) in filter.delete_batch(&dels).iter().copied().enumerate() {
+                    assert!(ok, "thread {t}: delete of {} rejected", dels[i]);
+                }
+            });
+        }
+    });
+    // cross-check the merged state from the main thread
+    assert_eq!(filter.len(), (nthreads * per / 2) as usize);
+    for t in 0..nthreads {
+        let lo = t * per;
+        let dead: Vec<u64> = (lo..lo + per / 2).collect();
+        let live: Vec<u64> = (lo + per / 2..lo + per).collect();
+        assert!(
+            filter.contains_batch(&live).iter().all(|&b| b),
+            "thread {t}: lost live keys"
+        );
+        let dead_hits = dead
+            .iter()
+            .filter(|&&k| filter.contains_exact(k))
+            .count();
+        assert_eq!(dead_hits, 0, "thread {t}: deleted keys resurrected");
+    }
+    let stats = filter.stats();
+    assert_eq!(stats.inserts, nthreads * per);
+    assert_eq!(stats.deletes, nthreads * per / 2);
 }
 
 #[test]

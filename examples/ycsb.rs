@@ -47,10 +47,10 @@ fn main() {
         }
         let dt = t0.elapsed().as_secs_f64();
         let sc: u64 = (0..cluster.node_count())
-            .map(|i| cluster.node(i).stats.filter_short_circuits)
+            .map(|i| cluster.node(i).stats.filter_short_circuits())
             .sum();
         let gets: u64 = (0..cluster.node_count())
-            .map(|i| cluster.node(i).stats.gets)
+            .map(|i| cluster.node(i).stats.gets())
             .sum();
         println!(
             "| {} | {} | {} | {} | {:.1} |",

@@ -1,0 +1,133 @@
+//! probe_throughput — the probe-engine perf baseline.
+//!
+//! Runs the E10 arms (scalar vs prefetch-pipelined batched lookups on
+//! both bucket-table backends) and emits a `BENCH_probe.json`
+//! trajectory point so future PRs can diff probe throughput against
+//! this one. See `rust/src/filter/README.md` for how to read it.
+//!
+//! Env knobs:
+//!   `OCF_BENCH_SCALE` — fraction of paper scale (default 1.0 = 1M
+//!                       resident keys, 1M probes per arm);
+//!   `OCF_BENCH_SMOKE` — any value: tiny N (fast CI gate that mainly
+//!                       asserts the JSON artifact is emitted + valid);
+//!   `OCF_BENCH_JSON`  — output path (default: the committed
+//!                       `BENCH_probe.json` at the repo root).
+
+use ocf::exp::probe::{measure, render, speedup, ProbePoint, BATCH};
+use ocf::filter::PREFETCH_DEPTH;
+
+fn json_points(points: &[ProbePoint]) -> String {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"backend\": \"{}\", \"mode\": \"{}\", \"workload\": \"{}\", \
+                 \"probes\": {}, \"secs\": {:.6}, \"mops\": {:.3}, \"hits\": {}}}",
+                p.backend,
+                p.mode,
+                p.workload,
+                p.probes,
+                p.secs,
+                p.mops(),
+                p.hits
+            )
+        })
+        .collect();
+    rows.join(",\n")
+}
+
+fn main() {
+    let smoke = std::env::var("OCF_BENCH_SMOKE").is_ok();
+    let scale: f64 = std::env::var("OCF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let (n_keys, n_probes) = if smoke {
+        (20_000, 20_000)
+    } else {
+        (
+            ((1_000_000f64 * scale) as usize).max(20_000),
+            ((1_000_000f64 * scale) as usize).max(20_000),
+        )
+    };
+    // Default to the committed repo-root artifact regardless of CWD
+    // (cargo runs bench binaries from the package root, not the repo
+    // root — a bare relative path would strand the output in rust/).
+    let path = std::env::var("OCF_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_probe.json").into());
+
+    eprintln!("probe_throughput: {n_keys} resident keys, {n_probes} probes/arm (smoke={smoke})");
+    let points = measure(n_keys, n_probes);
+
+    println!(
+        "{}",
+        render(
+            format!(
+                "probe_throughput — scalar vs batched (prefetch depth {PREFETCH_DEPTH}, \
+                 {n_keys} keys)"
+            ),
+            &points,
+        )
+    );
+
+    // The acceptance bar this bench exists to track: batched negative
+    // lookups beat the scalar loop on both backends at full scale.
+    // (Smoke runs use cache-resident tables where prefetch can't help,
+    // so they only warn.)
+    for backend in ["flat", "packed"] {
+        let sp = speedup(&points, backend, "neg").unwrap_or(0.0);
+        if sp <= 1.0 {
+            let msg =
+                format!("{backend}/neg: batched {sp:.2}x scalar — pipeline not paying off");
+            if smoke {
+                eprintln!("WARN (smoke, cache-resident): {msg}");
+            } else {
+                eprintln!("WARN: {msg}");
+            }
+        }
+    }
+
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    // `measured: true` distinguishes real runs from the committed
+    // schema seed (`measured: false`); keep both files field-compatible.
+    let json = format!(
+        "{{\n  \"bench\": \"probe_throughput\",\n  \"unix_time\": {unix_time},\n  \
+         \"smoke\": {smoke},\n  \"measured\": true,\n  \
+         \"note\": \"regenerate with: cargo bench --bench probe_throughput (full scale)\",\n  \
+         \"n_keys\": {n_keys},\n  \"n_probes\": {n_probes},\n  \
+         \"batch\": {BATCH},\n  \"prefetch_depth\": {PREFETCH_DEPTH},\n  \"arms\": [\n{}\n  ],\n  \
+         \"speedup\": {{\"flat_neg\": {:.3}, \"packed_neg\": {:.3}, \
+         \"flat_pos\": {:.3}, \"packed_pos\": {:.3}}}\n}}\n",
+        json_points(&points),
+        speedup(&points, "flat", "neg").unwrap_or(0.0),
+        speedup(&points, "packed", "neg").unwrap_or(0.0),
+        speedup(&points, "flat", "pos").unwrap_or(0.0),
+        speedup(&points, "packed", "pos").unwrap_or(0.0),
+    );
+    std::fs::write(&path, &json).expect("write BENCH_probe.json");
+
+    // Emission self-check: the artifact must exist, round-trip, and
+    // carry every field the trajectory tooling keys on.
+    let back = std::fs::read_to_string(&path).expect("read back BENCH_probe.json");
+    assert_eq!(back, json, "artifact round-trip");
+    for field in [
+        "\"bench\": \"probe_throughput\"",
+        "\"measured\": true",
+        "\"arms\"",
+        "\"speedup\"",
+        "\"prefetch_depth\"",
+        "\"flat_neg\"",
+        "\"packed_neg\"",
+    ] {
+        assert!(back.contains(field), "BENCH_probe.json missing {field}");
+    }
+    assert_eq!(
+        back.matches("\"mode\": \"batched\"").count(),
+        4,
+        "expected 4 batched arms"
+    );
+    eprintln!("probe_throughput: wrote {path}");
+}

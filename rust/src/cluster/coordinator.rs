@@ -60,9 +60,9 @@ impl Coordinator {
             for &u in &query.u {
                 stats.pairs_generated += 1;
                 let key = (query.probe_key)(t, u);
-                let before_sc = v_node.stats.filter_short_circuits;
+                let before_sc = v_node.stats.filter_short_circuits();
                 let hit = v_node.get(key);
-                if v_node.stats.filter_short_circuits > before_sc {
+                if v_node.stats.filter_short_circuits() > before_sc {
                     stats.v_filter_pruned += 1;
                 } else {
                     stats.v_probes += 1;

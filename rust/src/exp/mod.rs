@@ -11,6 +11,7 @@
 //! | E7 | §I.B cartesian-product query fan-out              | [`cartesian`] |
 //! | E8 | ablations (g, fp_bits, k-band)                    | [`ablation`] |
 //! | E9 | sharded concurrent front-end scaling              | [`sharded`] |
+//! | E10 | probe engine: scalar vs batched lookups          | [`probe`]  |
 //!
 //! Every driver takes a [`Scale`] so the same code serves quick checks
 //! (`--scale 0.01`), CI, and full paper-scale runs, and returns a
@@ -22,6 +23,7 @@ pub mod burst;
 pub mod cartesian;
 pub mod fig2;
 pub mod fig3;
+pub mod probe;
 pub mod report;
 pub mod safety;
 pub mod sharded;
@@ -58,8 +60,9 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "cartesian" => Ok(cartesian::run(scale)),
             "ablation" => Ok(ablation::run(scale)),
             "sharded" => Ok(sharded::run(scale)),
+            "probe" => Ok(probe::run(scale)),
             other => Err(format!(
-                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded all)"
+                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe all)"
             )),
         }
     };
@@ -75,6 +78,7 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "cartesian",
             "ablation",
             "sharded",
+            "probe",
         ] {
             out.push_str(&one(n)?);
             out.push('\n');

@@ -1,0 +1,213 @@
+//! E10 — the memory-level-parallel probe engine: scalar vs batched.
+//!
+//! Measures lookup throughput of the scalar op-at-a-time path against
+//! the prefetch-pipelined `contains_batch` engine on both bucket-table
+//! backends ([`FlatTable`] one-`u32`-per-slot, [`PackedTable`] SWAR
+//! bit-packed), on negative- and positive-lookup workloads. Negative
+//! lookups are the paper's money shot (the read path's short-circuit)
+//! and the worst case for a scalar probe: primary miss → a second
+//! dependent cache miss on the alternate bucket. The batched engine
+//! overlaps ~[`PREFETCH_DEPTH`](crate::filter::PREFETCH_DEPTH) of
+//! those misses.
+//!
+//! `measure()` is shared with `benches/probe_throughput.rs`, which
+//! emits the `BENCH_probe.json` trajectory point.
+
+use super::report::{f, Table};
+use super::Scale;
+use crate::filter::{BucketTable, CuckooFilter, CuckooParams, FlatTable, MembershipFilter, PackedTable};
+use std::time::Instant;
+
+/// One measured arm.
+#[derive(Debug, Clone)]
+pub struct ProbePoint {
+    /// Bucket-table backend ("flat" | "packed").
+    pub backend: &'static str,
+    /// Probe mode ("scalar" | "batched").
+    pub mode: &'static str,
+    /// Workload ("neg" | "pos").
+    pub workload: &'static str,
+    /// Resident keys in the filter.
+    pub keys: usize,
+    /// Probes issued.
+    pub probes: usize,
+    /// Wallclock of the probe loop.
+    pub secs: f64,
+    /// Observed hits (sanity anchor: scalar and batched must agree).
+    pub hits: usize,
+}
+
+impl ProbePoint {
+    pub fn mops(&self) -> f64 {
+        if self.secs <= 0.0 {
+            0.0
+        } else {
+            self.probes as f64 / self.secs / 1e6
+        }
+    }
+}
+
+/// Probe chunk size for the batched arms: large enough to amortize the
+/// bulk hash + pipeline warmup, small enough to model request batches.
+pub const BATCH: usize = 4096;
+
+fn build<T: BucketTable>(n_keys: usize) -> CuckooFilter<T> {
+    let mut f = CuckooFilter::<T>::new(CuckooParams {
+        capacity: n_keys * 2, // paper-recommended 2× headroom
+        ..CuckooParams::default()
+    });
+    for k in 0..n_keys as u64 {
+        f.insert(k).expect("insert at 0.5 load cannot fail");
+    }
+    f
+}
+
+fn run_arms<T: BucketTable>(
+    backend: &'static str,
+    n_keys: usize,
+    n_probes: usize,
+    out: &mut Vec<ProbePoint>,
+) {
+    let filter = build::<T>(n_keys);
+    // negative probes: disjoint key range; positive probes: residents
+    let neg: Vec<u64> = (0..n_probes as u64).map(|i| (1u64 << 40) + i).collect();
+    let pos: Vec<u64> = (0..n_probes as u64).map(|i| i % n_keys as u64).collect();
+
+    for (workload, probes) in [("neg", &neg), ("pos", &pos)] {
+        // scalar: hash + two dependent bucket reads per key
+        let t0 = Instant::now();
+        let mut hits = 0usize;
+        for &k in probes.iter() {
+            hits += filter.contains(k) as usize;
+        }
+        let scalar_secs = t0.elapsed().as_secs_f64();
+        out.push(ProbePoint {
+            backend,
+            mode: "scalar",
+            workload,
+            keys: n_keys,
+            probes: probes.len(),
+            secs: scalar_secs,
+            hits,
+        });
+
+        // batched: bulk hash + prefetch-pipelined probes per chunk
+        let t0 = Instant::now();
+        let mut bhits = 0usize;
+        for chunk in probes.chunks(BATCH) {
+            let r = filter.contains_batch(chunk);
+            bhits += r.iter().filter(|&&h| h).count();
+        }
+        let batched_secs = t0.elapsed().as_secs_f64();
+        assert_eq!(hits, bhits, "{backend}/{workload}: batched answers diverged");
+        out.push(ProbePoint {
+            backend,
+            mode: "batched",
+            workload,
+            keys: n_keys,
+            probes: probes.len(),
+            secs: batched_secs,
+            hits: bhits,
+        });
+    }
+}
+
+/// Measure all arms: {flat, packed} × {scalar, batched} × {neg, pos}.
+pub fn measure(n_keys: usize, n_probes: usize) -> Vec<ProbePoint> {
+    let mut out = Vec::with_capacity(8);
+    run_arms::<FlatTable>("flat", n_keys, n_probes, &mut out);
+    run_arms::<PackedTable>("packed", n_keys, n_probes, &mut out);
+    out
+}
+
+/// Speedup of the batched arm over its scalar twin (same backend and
+/// workload); `None` if either arm is missing.
+pub fn speedup(points: &[ProbePoint], backend: &str, workload: &str) -> Option<f64> {
+    let find = |mode: &str| {
+        points
+            .iter()
+            .find(|p| p.backend == backend && p.workload == workload && p.mode == mode)
+    };
+    let (s, b) = (find("scalar")?, find("batched")?);
+    if s.mops() > 0.0 {
+        Some(b.mops() / s.mops())
+    } else {
+        None
+    }
+}
+
+/// Render measured points as the scalar-vs-batched markdown table
+/// (shared by the experiment driver and the `probe_throughput` bench
+/// so their outputs cannot drift).
+pub fn render(title: impl Into<String>, points: &[ProbePoint]) -> String {
+    let mut table = Table::new(title, &["backend", "workload", "mode", "Mops/s", "speedup"]);
+    for p in points {
+        let sp = if p.mode == "batched" {
+            speedup(points, p.backend, p.workload)
+                .map(|s| format!("{}x", f(s, 2)))
+                .unwrap_or_default()
+        } else {
+            String::new()
+        };
+        table.row(&[
+            p.backend.to_string(),
+            p.workload.to_string(),
+            p.mode.to_string(),
+            f(p.mops(), 2),
+            sp,
+        ]);
+    }
+    table.note(
+        "batched = bulk hash + depth-8 prefetch pipeline (alt bucket prefetched \
+         only on primary miss); scalar = hash + 2 dependent bucket reads per key. \
+         Negative lookups are the read path's short-circuit workload.",
+    );
+    table.markdown()
+}
+
+/// The experiment driver (paper scale: 1M resident keys, 1M probes).
+pub fn run(scale: Scale) -> String {
+    let n_keys = scale.n(1_000_000, 20_000);
+    let n_probes = scale.n(1_000_000, 20_000);
+    let points = measure(n_keys, n_probes);
+    render(
+        format!("E10 — probe engine scalar vs batched ({n_keys} keys, {n_probes} probes)"),
+        &points,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arms_agree_and_cover_grid() {
+        let points = measure(4_000, 4_000);
+        assert_eq!(points.len(), 8);
+        for backend in ["flat", "packed"] {
+            for workload in ["neg", "pos"] {
+                let arms: Vec<_> = points
+                    .iter()
+                    .filter(|p| p.backend == backend && p.workload == workload)
+                    .collect();
+                assert_eq!(arms.len(), 2, "{backend}/{workload}");
+                assert_eq!(arms[0].hits, arms[1].hits, "{backend}/{workload}");
+                assert!(speedup(&points, backend, workload).is_some());
+            }
+        }
+        // positive probes must actually hit
+        assert!(points
+            .iter()
+            .filter(|p| p.workload == "pos")
+            .all(|p| p.hits == p.probes));
+    }
+
+    #[test]
+    fn report_renders() {
+        let md = run(Scale(0.002));
+        assert!(md.contains("E10"));
+        assert!(md.contains("batched"));
+        assert!(md.contains("| flat |"));
+        assert!(md.contains("| packed |"));
+    }
+}

@@ -4,20 +4,71 @@
 //!
 //! * [`FlatTable`] — one `u32` per slot. Fast (word-aligned loads, no
 //!   bit twiddling); memory = `4 B × slots` regardless of `fp_bits`.
-//!   This is the hot-path default.
+//!   This is the hot-path default. Whole-bucket probes load the 16-byte
+//!   bucket once and compare all 4 lanes at once (SSE2 on x86_64, a
+//!   lane-mask loop elsewhere).
 //! * [`PackedTable`] — `fp_bits` per slot, bit-packed into `u64` words.
 //!   The space-optimal layout the cuckoo-filter literature assumes when
-//!   quoting bits/key; ~`fp_bits/32` of FlatTable's footprint at the
-//!   cost of shift/mask work per access.
+//!   quoting bits/key; ~`fp_bits/32` of FlatTable's footprint. Probes
+//!   load the whole bucket (≤ 128 bits) once and scan it with SWAR
+//!   broadcast-compare — no per-slot shift/mask extraction.
 //!
 //! Both store buckets of [`SLOTS`] = 4 fingerprints (paper §II.B:
 //! "recommended value for bucket size is 4"), with 0 = EMPTY. The
 //! generic bucket count is always a power of two so index masking is a
 //! single AND.
+//!
+//! The [`BucketTable::prefetch_bucket`] hook is the substrate of the
+//! batched probe engine (see `cuckoo.rs` and `rust/src/filter/README.md`):
+//! it issues a best-effort cache prefetch for a bucket so a software
+//! pipeline can overlap the memory latency of many probes.
 
 /// Slots per bucket. Frozen at 4 — also baked into the serialized
 /// frozen-table layout the Pallas probe kernel reads.
 pub const SLOTS: usize = 4;
+
+/// Architecture-gated read prefetch (no-op where unavailable).
+/// Prefetch never faults, so any address is safe to pass.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+pub(crate) fn prefetch_read<T>(p: *const T) {
+    use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+    unsafe {
+        _mm_prefetch::<{ _MM_HINT_T0 }>(p as *const i8);
+    }
+}
+
+/// No-op fallback for targets without a stable prefetch intrinsic.
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+pub(crate) fn prefetch_read<T>(p: *const T) {
+    let _ = p;
+}
+
+/// Bitmask (bits 0..SLOTS) of lanes in `s` equal to `fp`: the one-load
+/// four-compare primitive behind FlatTable's probe ops. SSE2 is
+/// baseline on x86_64: one 16-byte load, one broadcast, one parallel
+/// compare, one movemask.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn flat_lane_mask(s: &[u32; SLOTS], fp: u32) -> u32 {
+    use std::arch::x86_64::*;
+    unsafe {
+        let v = _mm_loadu_si128(s.as_ptr() as *const __m128i);
+        let q = _mm_set1_epi32(fp as i32);
+        _mm_movemask_ps(_mm_castsi128_ps(_mm_cmpeq_epi32(v, q))) as u32
+    }
+}
+
+/// Branch-free lane-mask fallback; auto-vectorizes on NEON et al.
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+fn flat_lane_mask(s: &[u32; SLOTS], fp: u32) -> u32 {
+    (s[0] == fp) as u32
+        | (((s[1] == fp) as u32) << 1)
+        | (((s[2] == fp) as u32) << 2)
+        | (((s[3] == fp) as u32) << 3)
+}
 
 /// Abstract fingerprint bucket storage.
 pub trait BucketTable: Clone {
@@ -38,6 +89,12 @@ pub trait BucketTable: Clone {
 
     /// Write slot `s` of bucket `b`.
     fn set(&mut self, b: usize, s: usize, fp: u32);
+
+    /// Best-effort cache prefetch of bucket `b` (no-op by default; the
+    /// batched probe engine issues these ~[`super::cuckoo::PREFETCH_DEPTH`]
+    /// probes ahead of the matching [`BucketTable::contains`]).
+    #[inline(always)]
+    fn prefetch_bucket(&self, _b: usize) {}
 
     /// Try to place `fp` in any empty slot of bucket `b`.
     #[inline]
@@ -107,6 +164,15 @@ pub struct FlatTable {
     fp_bits: u32,
 }
 
+impl FlatTable {
+    /// The 4-lane bucket as a fixed-size array (one bounds check).
+    #[inline(always)]
+    fn bucket(&self, b: usize) -> &[u32; SLOTS] {
+        let base = b * SLOTS;
+        self.slots[base..base + SLOTS].try_into().unwrap()
+    }
+}
+
 impl BucketTable for FlatTable {
     fn with_buckets(nbuckets: usize, fp_bits: u32) -> Self {
         assert!(nbuckets >= 1, "need at least one bucket");
@@ -137,12 +203,40 @@ impl BucketTable for FlatTable {
         self.slots[b * SLOTS + s] = fp;
     }
 
-    /// Branch-light whole-bucket probe (hot path override).
+    #[inline(always)]
+    fn prefetch_bucket(&self, b: usize) {
+        // Vec<u32> is only 4-byte aligned, so a 16-byte bucket can
+        // straddle a cache-line boundary: cover both ends (same-line
+        // duplicate prefetches coalesce for ~free).
+        let p = self.slots.as_ptr().wrapping_add(b * SLOTS);
+        prefetch_read(p);
+        prefetch_read(p.wrapping_add(SLOTS - 1));
+    }
+
+    /// One-load whole-bucket probe (hot path override).
     #[inline(always)]
     fn contains(&self, b: usize, fp: u32) -> bool {
-        let base = b * SLOTS;
-        let s = &self.slots[base..base + SLOTS];
-        (s[0] == fp) | (s[1] == fp) | (s[2] == fp) | (s[3] == fp)
+        flat_lane_mask(self.bucket(b), fp) != 0
+    }
+
+    #[inline(always)]
+    fn try_insert(&mut self, b: usize, fp: u32) -> bool {
+        let m = flat_lane_mask(self.bucket(b), 0);
+        if m == 0 {
+            return false;
+        }
+        self.slots[b * SLOTS + m.trailing_zeros() as usize] = fp;
+        true
+    }
+
+    #[inline(always)]
+    fn remove(&mut self, b: usize, fp: u32) -> bool {
+        let m = flat_lane_mask(self.bucket(b), fp);
+        if m == 0 {
+            return false;
+        }
+        self.slots[b * SLOTS + m.trailing_zeros() as usize] = 0;
+        true
     }
 
     fn memory_bytes(&self) -> usize {
@@ -155,11 +249,24 @@ impl BucketTable for FlatTable {
 }
 
 /// Bit-packed storage: `fp_bits` per slot in a `u64` word array.
+///
+/// Probe ops (`contains`/`try_insert`/`remove`) load the whole bucket —
+/// `SLOTS * fp_bits ≤ 128` bits — into a `u128` once and scan it with
+/// the SWAR zero-lane trick (`(x - lane_lsb) & !x & lane_msb`): the
+/// lowest marker bit is exactly the first lane equal to the broadcast
+/// fingerprint, with no per-slot shift/mask extraction. (Carry-borrow
+/// can plant spurious markers only *above* a real match, so presence
+/// tests and first-match indices are exact.)
 #[derive(Debug, Clone)]
 pub struct PackedTable {
     words: Vec<u64>,
     nbuckets: usize,
     fp_bits: u32,
+    /// SWAR constants: bit 0 / bit fp_bits-1 of each of the 4 lanes.
+    lane_lsb: u128,
+    lane_msb: u128,
+    /// Mask of the `SLOTS * fp_bits` live bucket bits.
+    bucket_mask: u128,
 }
 
 impl PackedTable {
@@ -171,11 +278,46 @@ impl PackedTable {
 
     #[inline(always)]
     fn mask(&self) -> u64 {
-        if self.fp_bits == 64 {
-            u64::MAX
-        } else {
-            (1u64 << self.fp_bits) - 1
+        // fp_bits is asserted to 1..=32 at construction, so the shift
+        // cannot overflow (the old `== 64` arm was dead code).
+        (1u64 << self.fp_bits) - 1
+    }
+
+    /// Bits per bucket (≤ 128).
+    #[inline(always)]
+    fn bucket_bits(&self) -> usize {
+        SLOTS * self.fp_bits as usize
+    }
+
+    /// Load bucket `b` — all 4 lanes, right-aligned — in one go.
+    #[inline(always)]
+    fn load_bucket(&self, b: usize) -> u128 {
+        let bit = b * self.bucket_bits();
+        let w = bit >> 6;
+        let off = (bit & 63) as u32;
+        // Two guard words at the tail make the 3-word window safe for
+        // every bucket (a 128-bit bucket at offset > 0 spans 3 words).
+        let lo = (self.words[w] as u128) | ((self.words[w + 1] as u128) << 64);
+        let mut v = lo >> off;
+        if off as usize + self.bucket_bits() > 128 {
+            v |= (self.words[w + 2] as u128) << (128 - off);
         }
+        v & self.bucket_mask
+    }
+
+    /// SWAR zero-lane markers for `bucket ^ broadcast(fp)`: nonzero iff
+    /// some lane equals `fp`; the lowest marker sits in the first such
+    /// lane (at its MSB position).
+    #[inline(always)]
+    fn match_lanes(&self, bucket: u128, fp: u32) -> u128 {
+        let x = bucket ^ (self.lane_lsb * fp as u128);
+        x.wrapping_sub(self.lane_lsb) & !x & self.lane_msb
+    }
+
+    /// Lane index of the lowest marker (callers check `m != 0`).
+    #[inline(always)]
+    fn marker_lane(&self, m: u128) -> usize {
+        (m.trailing_zeros() / self.fp_bits) as usize
     }
 }
 
@@ -184,12 +326,21 @@ impl BucketTable for PackedTable {
         assert!(nbuckets >= 1, "need at least one bucket");
         assert!((1..=32).contains(&fp_bits));
         let bits = nbuckets * SLOTS * fp_bits as usize;
+        let lane_lsb: u128 = (0..SLOTS).fold(0u128, |acc, i| acc | 1u128 << (i * fp_bits as usize));
+        let bucket_bits = SLOTS * fp_bits as usize;
         Self {
-            // +1 guard word lets get/set read across a word boundary
-            // without bounds special-casing.
-            words: vec![0u64; (bits + 63) / 64 + 1],
+            // +2 guard words: get/set read across one word boundary,
+            // and load_bucket reads a 3-word window.
+            words: vec![0u64; (bits + 63) / 64 + 2],
             nbuckets,
             fp_bits,
+            lane_lsb,
+            lane_msb: lane_lsb << (fp_bits - 1),
+            bucket_mask: if bucket_bits == 128 {
+                u128::MAX
+            } else {
+                (1u128 << bucket_bits) - 1
+            },
         }
     }
 
@@ -228,8 +379,77 @@ impl BucketTable for PackedTable {
         }
     }
 
+    #[inline(always)]
+    fn prefetch_bucket(&self, b: usize) {
+        // A bucket spans up to 3 words which can cross a cache-line
+        // boundary: prefetch its first and last word (coalesces when
+        // they share a line).
+        let (w0, _) = self.bit_pos(b, 0);
+        let end_w = ((b * SLOTS + SLOTS) * self.fp_bits as usize - 1) >> 6;
+        let p = self.words.as_ptr();
+        prefetch_read(p.wrapping_add(w0));
+        prefetch_read(p.wrapping_add(end_w));
+    }
+
+    /// SWAR whole-bucket probe: one load, broadcast-compare all lanes.
+    #[inline(always)]
+    fn contains(&self, b: usize, fp: u32) -> bool {
+        // broadcast requires an in-range fingerprint (same contract as set)
+        debug_assert!(u64::from(fp) <= self.mask());
+        self.match_lanes(self.load_bucket(b), fp) != 0
+    }
+
+    #[inline(always)]
+    fn try_insert(&mut self, b: usize, fp: u32) -> bool {
+        // Empty lanes are zero lanes of the bucket itself (fp = 0).
+        let m = self.match_lanes(self.load_bucket(b), 0);
+        if m == 0 {
+            return false;
+        }
+        let s = self.marker_lane(m);
+        self.set(b, s, fp);
+        true
+    }
+
+    #[inline(always)]
+    fn remove(&mut self, b: usize, fp: u32) -> bool {
+        debug_assert!(u64::from(fp) <= self.mask());
+        let m = self.match_lanes(self.load_bucket(b), fp);
+        if m == 0 {
+            return false;
+        }
+        let s = self.marker_lane(m);
+        self.set(b, s, 0);
+        true
+    }
+
     fn memory_bytes(&self) -> usize {
         self.words.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Word-at-a-time decode: walk the packed stream with an
+    /// incrementally maintained (word, offset) cursor instead of
+    /// recomputing a division per slot.
+    fn to_frozen(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.nbuckets * SLOTS);
+        let mask = self.mask();
+        let fp_bits = self.fp_bits;
+        let (mut w, mut off) = (0usize, 0u32);
+        for _ in 0..self.nbuckets * SLOTS {
+            let lo = self.words[w] >> off;
+            let hi = if off == 0 {
+                0
+            } else {
+                self.words[w + 1] << (64 - off)
+            };
+            out.push(((lo | hi) & mask) as u32);
+            off += fp_bits;
+            if off >= 64 {
+                off -= 64;
+                w += 1;
+            }
+        }
+        out
     }
 }
 
@@ -247,6 +467,7 @@ mod tests {
         assert_eq!(t.nbuckets(), 8);
         assert_eq!(t.occupancy(3), 0);
         assert!(!t.contains(3, 5));
+        t.prefetch_bucket(3); // smoke: must not fault
 
         assert!(t.try_insert(3, 5));
         assert!(t.contains(3, 5));
@@ -313,8 +534,80 @@ mod tests {
                 for s in 0..SLOTS {
                     assert_eq!(flat.get(b, s), packed.get(b, s), "bits={bits} b={b} s={s}");
                 }
+                // whole-bucket probes agree with slot-wise truth
+                for s in 0..SLOTS {
+                    let fp = flat.get(b, s);
+                    assert!(flat.contains(b, fp), "bits={bits} b={b}");
+                    assert!(packed.contains(b, fp), "bits={bits} b={b}");
+                }
             }
             assert_eq!(flat.to_frozen(), packed.to_frozen());
+        }
+    }
+
+    /// Differential check of the SWAR probe ops against the slot-wise
+    /// trait defaults, across every legal fingerprint width (including
+    /// the 1- and 2-bit degenerate lanes).
+    #[test]
+    fn packed_swar_matches_scalar_reference() {
+        use crate::util::SplitMix64;
+
+        /// A shadow backend that forces the slot-wise default impls.
+        #[derive(Clone)]
+        struct Naive(Vec<u32>, usize, u32);
+        impl BucketTable for Naive {
+            fn with_buckets(nb: usize, fp_bits: u32) -> Self {
+                Naive(vec![0; nb * SLOTS], nb, fp_bits)
+            }
+            fn nbuckets(&self) -> usize {
+                self.1
+            }
+            fn fp_bits(&self) -> u32 {
+                self.2
+            }
+            fn get(&self, b: usize, s: usize) -> u32 {
+                self.0[b * SLOTS + s]
+            }
+            fn set(&mut self, b: usize, s: usize, fp: u32) {
+                self.0[b * SLOTS + s] = fp;
+            }
+            fn memory_bytes(&self) -> usize {
+                0
+            }
+        }
+
+        for bits in 1..=32u32 {
+            let nb = 16;
+            let mut rng = SplitMix64::new(0xD1F + bits as u64);
+            let mut packed = PackedTable::with_buckets(nb, bits);
+            let mut naive = Naive::with_buckets(nb, bits);
+            let mask = if bits == 32 {
+                u64::from(u32::MAX)
+            } else {
+                (1u64 << bits) - 1
+            };
+            for step in 0..4_000 {
+                let b = rng.next_below(nb as u64) as usize;
+                let fp = ((rng.next_u64() & mask) as u32).max(1);
+                match step % 3 {
+                    0 => assert_eq!(
+                        packed.try_insert(b, fp),
+                        naive.try_insert(b, fp),
+                        "insert bits={bits} b={b} fp={fp}"
+                    ),
+                    1 => assert_eq!(
+                        packed.contains(b, fp),
+                        naive.contains(b, fp),
+                        "contains bits={bits} b={b} fp={fp}"
+                    ),
+                    _ => assert_eq!(
+                        packed.remove(b, fp),
+                        naive.remove(b, fp),
+                        "remove bits={bits} b={b} fp={fp}"
+                    ),
+                }
+            }
+            assert_eq!(packed.to_frozen(), naive.to_frozen(), "bits={bits}");
         }
     }
 
@@ -340,6 +633,9 @@ mod tests {
         let mut p = PackedTable::with_buckets(7, 12);
         p.set(6, 3, 0xABC);
         assert_eq!(p.get(6, 3), 0xABC);
+        assert!(p.contains(6, 0xABC), "SWAR probe on the last bucket");
+        assert!(p.try_insert(6, 0x123));
+        assert!(p.remove(6, 0x123));
     }
 
     #[test]
@@ -356,5 +652,28 @@ mod tests {
         assert_eq!(frozen.len(), 4 * SLOTS);
         assert_eq!(frozen[1 * SLOTS + 2], 77);
         assert_eq!(frozen.iter().filter(|&&x| x != 0).count(), 1);
+    }
+
+    #[test]
+    fn packed_frozen_word_decode_matches_layout() {
+        // the word-at-a-time to_frozen override must agree with the
+        // row-major contract for widths that straddle word boundaries
+        for bits in [4u32, 12, 13, 16, 21, 24, 29, 32] {
+            let nb = 33; // non-pow2, odd
+            let mut p = PackedTable::with_buckets(nb, bits);
+            let mask = if bits == 32 { u32::MAX } else { (1 << bits) - 1 };
+            for b in 0..nb {
+                for s in 0..SLOTS {
+                    p.set(b, s, ((b * SLOTS + s + 1) as u32).wrapping_mul(2654435761) & mask);
+                }
+            }
+            let frozen = p.to_frozen();
+            assert_eq!(frozen.len(), nb * SLOTS);
+            for b in 0..nb {
+                for s in 0..SLOTS {
+                    assert_eq!(frozen[b * SLOTS + s], p.get(b, s), "bits={bits} b={b} s={s}");
+                }
+            }
+        }
     }
 }

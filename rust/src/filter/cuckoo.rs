@@ -21,6 +21,15 @@ use super::fingerprint::{Hasher, HashTriple};
 use super::metrics::FilterStats;
 use super::{FilterError, MembershipFilter};
 use crate::util::SplitMix64;
+use std::collections::VecDeque;
+
+/// Software-pipeline depth of the batched probe engine: while key `i`
+/// resolves, the primary bucket of key `i + PREFETCH_DEPTH` is being
+/// prefetched (and alternate buckets of recent primary misses are in
+/// flight). ~8 keeps that many independent cache misses outstanding —
+/// about what one core's miss-handling registers sustain — without
+/// thrashing L1. See `rust/src/filter/README.md` for tuning notes.
+pub const PREFETCH_DEPTH: usize = 8;
 
 /// What to do with the evicted fingerprint when an insert exhausts its
 /// displacement budget.
@@ -220,6 +229,129 @@ impl<T: BucketTable> CuckooFilter<T> {
             Some((b, fp)) => fp == t.fp && (b == i1 || b == i2),
             None => false,
         }
+    }
+
+    /// Resolve the alternate-bucket half of a probe whose primary
+    /// bucket missed (`i2` = alternate index, already prefetched).
+    #[inline(always)]
+    fn resolve_alt(&self, i2: usize, t: HashTriple) -> bool {
+        if self.table.contains(i2, t.fp) {
+            return true;
+        }
+        match self.victim {
+            // the primary index is alt(alt) — the involution
+            Some((b, fp)) => {
+                fp == t.fp && (b == i2 || b == Hasher::alt_index(i2, t.fp, self.table.nbuckets()))
+            }
+            None => false,
+        }
+    }
+
+    /// Batched membership over pre-hashed triples, appended to `out`
+    /// positionally. This is the memory-level-parallel probe engine:
+    ///
+    /// 1. primary bucket indices are bulk-computed (tight vectorizable
+    ///    loop, no table access);
+    /// 2. a software pipeline walks the batch issuing a prefetch for
+    ///    the primary bucket of key `i + PREFETCH_DEPTH` while probing
+    ///    key `i`, so ~`PREFETCH_DEPTH` cache misses overlap instead of
+    ///    serializing;
+    /// 3. a primary miss prefetches its *alternate* bucket and parks
+    ///    the key in a short queue; it resolves ~`PREFETCH_DEPTH`
+    ///    iterations later, when the line has arrived. The alternate
+    ///    bucket is never touched (or prefetched) for primary hits.
+    pub fn contains_triples_into(&self, triples: &[HashTriple], out: &mut Vec<bool>) {
+        let nb = self.table.nbuckets();
+        let n = triples.len();
+        let base = out.len();
+        out.resize(base + n, false);
+        let out = &mut out[base..];
+
+        // Runs shorter than the pipeline depth get no overlap benefit;
+        // resolve them scalar so short lookup runs (e.g. a mutation-
+        // interleaved ingest batch) don't pay the scratch allocations.
+        if n <= PREFETCH_DEPTH {
+            for (o, &t) in out.iter_mut().zip(triples) {
+                *o = self.contains_triple(t);
+            }
+            return;
+        }
+
+        // Stage 1: bulk index computation.
+        let mut i1s: Vec<usize> = Vec::with_capacity(n);
+        i1s.extend(triples.iter().map(|&t| Hasher::primary_index(t, nb)));
+
+        // Warm the first window of primary buckets.
+        for &i1 in i1s.iter().take(PREFETCH_DEPTH) {
+            self.table.prefetch_bucket(i1);
+        }
+
+        // Stage 2: pipelined primary probes; misses park in `pending`
+        // (index into the batch, alternate bucket) behind their alt
+        // prefetch and drain with ~PREFETCH_DEPTH of slack.
+        let mut pending: VecDeque<(usize, usize)> = VecDeque::with_capacity(PREFETCH_DEPTH + 1);
+        for i in 0..n {
+            if let Some(&ahead) = i1s.get(i + PREFETCH_DEPTH) {
+                self.table.prefetch_bucket(ahead);
+            }
+            let t = triples[i];
+            if self.table.contains(i1s[i], t.fp) {
+                out[i] = true;
+            } else {
+                let i2 = Hasher::alt_index(i1s[i], t.fp, nb);
+                self.table.prefetch_bucket(i2);
+                pending.push_back((i, i2));
+                if pending.len() > PREFETCH_DEPTH {
+                    let (j, a) = pending.pop_front().unwrap();
+                    out[j] = self.resolve_alt(a, triples[j]);
+                }
+            }
+        }
+        // Stage 3: drain the tail of in-flight alternates.
+        for (j, a) in pending {
+            out[j] = self.resolve_alt(a, triples[j]);
+        }
+    }
+
+    /// Batched membership over pre-hashed triples (fresh vec).
+    pub fn contains_triples(&self, triples: &[HashTriple]) -> Vec<bool> {
+        let mut out = Vec::new();
+        self.contains_triples_into(triples, &mut out);
+        out
+    }
+
+    /// Batched membership: bulk-hash then pipeline the probes.
+    /// Bit-identical to calling [`MembershipFilter::contains`] per key.
+    pub fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
+        self.contains_triples(&self.hasher.hash_batch(keys))
+    }
+
+    /// Prefetch the primary bucket of `t` (the insert pipeline issues
+    /// these ahead of the matching [`CuckooFilter::insert_triple`]).
+    #[inline(always)]
+    pub fn prefetch_primary(&self, t: HashTriple) {
+        self.table
+            .prefetch_bucket(Hasher::primary_index(t, self.table.nbuckets()));
+    }
+
+    /// Batched insert: bulk-hash once, then insert sequentially with
+    /// the primary bucket of key `i + PREFETCH_DEPTH` prefetched while
+    /// key `i` inserts. Results are positionally aligned with `keys`
+    /// and bit-identical to a scalar insert loop (inserts mutate, so
+    /// they are pipelined on the fetch side only — application order is
+    /// preserved exactly, including eviction-walk RNG draws).
+    pub fn insert_batch(&mut self, keys: &[u64]) -> Vec<Result<(), FilterError>> {
+        let triples = self.hasher.hash_batch(keys);
+        triples
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                if let Some(&ahead) = triples.get(i + PREFETCH_DEPTH) {
+                    self.prefetch_primary(ahead);
+                }
+                self.insert_triple(t)
+            })
+            .collect()
     }
 
     /// Unverified delete of a pre-hashed triple (the unsafe primitive).
@@ -550,6 +682,71 @@ mod tests {
         for k in 0..100u64 {
             f.insert(k).unwrap();
         }
+    }
+
+    #[test]
+    fn batched_contains_matches_scalar() {
+        // positive + negative + victim-stash coverage, both backends
+        fn check<T: BucketTable>(policy: VictimPolicy) {
+            let mut f = CuckooFilter::<T>::new(CuckooParams {
+                capacity: 512,
+                victim_policy: policy,
+                ..Default::default()
+            });
+            for k in 0..600u64 {
+                let _ = f.insert(k); // saturate → stash/rollback paths
+            }
+            let probes: Vec<u64> = (0..600u64).chain(1_000_000..1_000_600).collect();
+            let batched = f.contains_batch(&probes);
+            for (&k, &b) in probes.iter().zip(&batched) {
+                assert_eq!(b, f.contains(k), "key {k}");
+            }
+            // triple-level path agrees too, and _into appends
+            let h = f.hasher();
+            let triples: Vec<HashTriple> = probes.iter().map(|&k| h.hash_key(k)).collect();
+            let mut out = vec![true]; // pre-existing content survives
+            f.contains_triples_into(&triples, &mut out);
+            assert_eq!(out.len(), probes.len() + 1);
+            assert!(out[0]);
+            assert_eq!(&out[1..], &batched[..]);
+        }
+        check::<FlatTable>(VictimPolicy::Stash);
+        check::<FlatTable>(VictimPolicy::Rollback);
+        check::<crate::filter::PackedTable>(VictimPolicy::Stash);
+        check::<crate::filter::PackedTable>(VictimPolicy::Rollback);
+    }
+
+    #[test]
+    fn batched_insert_matches_scalar_bit_identical() {
+        let params = CuckooParams {
+            capacity: 1000, // non-pow2: exercises the Lemire index path
+            victim_policy: VictimPolicy::Rollback,
+            ..Default::default()
+        };
+        let mut a = CuckooFilter::<FlatTable>::new(params);
+        let mut b = CuckooFilter::<FlatTable>::new(params);
+        let keys: Vec<u64> = (0..1200u64).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+        let batched = a.insert_batch(&keys);
+        let scalar: Vec<_> = keys.iter().map(|&k| b.insert(k)).collect();
+        assert_eq!(batched.len(), scalar.len());
+        for (i, (x, y)) in batched.iter().zip(&scalar).enumerate() {
+            assert_eq!(x.is_ok(), y.is_ok(), "key #{i}");
+        }
+        assert_eq!(a.to_frozen(), b.to_frozen(), "tables must be bit-identical");
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn batched_contains_empty_and_tiny() {
+        let f = filter(64);
+        assert!(f.contains_batch(&[]).is_empty());
+        // batches smaller than the pipeline depth still resolve fully
+        let mut f = filter(64);
+        f.insert(1).unwrap();
+        f.insert(2).unwrap();
+        let got = f.contains_batch(&[1, 2, 3]);
+        assert_eq!(got, vec![true, true, f.contains(3)]);
     }
 
     #[test]

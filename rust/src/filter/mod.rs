@@ -19,6 +19,24 @@
 //! All dynamic filters implement [`MembershipFilter`], so experiment
 //! drivers and the store layer are generic over the filter choice.
 //!
+//! ## The batched probe engine
+//!
+//! Filter throughput at scale is a *memory-parallelism* problem, not a
+//! compute problem: a scalar lookup is two dependent cache misses
+//! (primary bucket, then alternate). The probe engine
+//! ([`CuckooFilter::contains_triples_into`], surfaced as
+//! `contains_batch`/`insert_batch` on [`CuckooFilter`], [`Ocf`] and
+//! [`ShardedOcf`]) bulk-hashes a batch once
+//! ([`Hasher::hash_batch`]), then walks it as a software pipeline of
+//! depth [`PREFETCH_DEPTH`]: the primary bucket of key `i + D` is
+//! prefetched while key `i` resolves, and a primary miss prefetches its
+//! alternate bucket and re-queues itself ~D probes later — so ~D cache
+//! misses are always in flight. Bucket scans themselves are one-load
+//! whole-bucket compares (SSE2 on [`FlatTable`], SWAR broadcast-compare
+//! on [`PackedTable`]; see `bucket.rs`). Batched results are
+//! bit-identical to scalar loops — pinned by proptest P11. Details and
+//! tuning notes: `rust/src/filter/README.md`.
+//!
 //! ## State-consistency invariants
 //!
 //! The OCF wrapper pairs the probabilistic cuckoo table with an
@@ -71,7 +89,7 @@ pub mod xor;
 
 pub use bloom::{BloomFilter, CountingBloomFilter};
 pub use bucket::{BucketTable, FlatTable, PackedTable, SLOTS};
-pub use cuckoo::{CuckooFilter, CuckooParams, VictimPolicy};
+pub use cuckoo::{CuckooFilter, CuckooParams, VictimPolicy, PREFETCH_DEPTH};
 pub use eof::EofPolicy;
 pub use fingerprint::{mix32, mix64, Hasher, HashTriple};
 pub use keystore::KeyStore;

@@ -244,6 +244,51 @@ impl Ocf {
         self.filter.contains_triple(triple)
     }
 
+    /// Batched membership over pre-hashed triples, appended to `out`
+    /// positionally (the prefetch-pipelined probe engine — see
+    /// [`CuckooFilter::contains_triples_into`]).
+    pub fn contains_triples_into(&self, triples: &[HashTriple], out: &mut Vec<bool>) {
+        self.filter.contains_triples_into(triples, out);
+    }
+
+    /// Batched membership: bulk-hash once, then pipeline the probes.
+    /// Bit-identical to a scalar `contains` loop.
+    pub fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
+        self.filter.contains_batch(keys)
+    }
+
+    /// Batched insert: bulk-hash once, then drive the normal
+    /// [`Ocf::insert_hashed`] path with the primary bucket of key
+    /// `i + PREFETCH_DEPTH` prefetched while key `i` applies. Every
+    /// policy/keystore/resize side effect is identical to a scalar
+    /// insert loop (the prefetch is recomputed against the live table,
+    /// so a mid-batch resize cannot poison it).
+    pub fn insert_batch(&mut self, keys: &[u64]) -> Vec<Result<(), FilterError>> {
+        let triples = self.hasher().hash_batch(keys);
+        self.insert_batch_hashed(keys, &triples)
+    }
+
+    /// [`Ocf::insert_batch`] over a pre-hashed batch (`triples[i]` MUST
+    /// be `self.hasher().hash_key(keys[i])`; debug builds assert it).
+    pub fn insert_batch_hashed(
+        &mut self,
+        keys: &[u64],
+        triples: &[HashTriple],
+    ) -> Vec<Result<(), FilterError>> {
+        assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        keys.iter()
+            .zip(triples)
+            .enumerate()
+            .map(|(i, (&k, &t))| {
+                debug_assert_eq!(t, self.hasher().hash_key(k), "foreign triple");
+                if let Some(&ahead) = triples.get(i + super::cuckoo::PREFETCH_DEPTH) {
+                    self.filter.prefetch_primary(ahead);
+                }
+                self.insert_impl(k, t)
+            })
+            .collect()
+    }
+
     /// Verified delete with a pre-computed triple.
     pub fn delete_hashed(&mut self, key: u64, triple: HashTriple) -> bool {
         debug_assert_eq!(triple, self.hasher().hash_key(key), "foreign triple");
@@ -540,6 +585,30 @@ mod tests {
         assert_eq!(a.len(), b.len());
         assert_eq!(a.to_frozen(), b.to_frozen());
         assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    fn batch_apis_identical_to_scalar_through_resizes() {
+        // insert_batch drives resizes exactly like the scalar loop;
+        // contains_batch agrees key-for-key afterwards
+        for mode in [Mode::Pre, Mode::Eof, Mode::Static] {
+            let mut a = ocf(mode);
+            let mut b = ocf(mode);
+            let keys: Vec<u64> = (0..30_000u64).collect();
+            let rb = a.insert_batch(&keys);
+            for (i, &k) in keys.iter().enumerate() {
+                assert_eq!(rb[i].is_ok(), b.insert(k).is_ok(), "{mode:?} key {k}");
+            }
+            assert_eq!(a.len(), b.len(), "{mode:?}");
+            assert_eq!(a.capacity(), b.capacity(), "{mode:?}");
+            assert_eq!(a.to_frozen(), b.to_frozen(), "{mode:?}");
+            assert_eq!(a.stats(), b.stats(), "{mode:?}");
+            let probes: Vec<u64> = (0..60_000u64).step_by(7).collect();
+            let got = a.contains_batch(&probes);
+            for (&k, &g) in probes.iter().zip(&got) {
+                assert_eq!(g, b.contains(k), "{mode:?} key {k}");
+            }
+        }
     }
 
     #[test]

@@ -155,12 +155,14 @@ impl ShardedOcf {
 
     /// Insert a batch; results are positionally aligned with `keys`.
     pub fn insert_batch(&self, keys: &[u64]) -> Vec<Result<(), FilterError>> {
-        let triples: Vec<HashTriple> = keys.iter().map(|&k| self.hasher.hash_key(k)).collect();
+        let triples = self.hasher.hash_batch(keys);
         self.insert_batch_hashed(keys, &triples)
     }
 
     /// Insert a pre-hashed batch (`triples[i]` MUST be the hash of
-    /// `keys[i]` under [`ShardedOcf::hasher`]).
+    /// `keys[i]` under [`ShardedOcf::hasher`]). Each shard's group is
+    /// gathered contiguously and applied through the prefetch-pipelined
+    /// [`Ocf::insert_batch_hashed`] engine under one lock acquisition.
     pub fn insert_batch_hashed(
         &self,
         keys: &[u64],
@@ -168,13 +170,23 @@ impl ShardedOcf {
     ) -> Vec<Result<(), FilterError>> {
         assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
         let mut out: Vec<Result<(), FilterError>> = keys.iter().map(|_| Ok(())).collect();
+        let mut gkeys: Vec<u64> = Vec::new();
+        let mut gtriples: Vec<HashTriple> = Vec::new();
         for (sid, group) in self.group_by_shard(triples).iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            let mut shard = self.shards[sid].lock().unwrap();
+            gkeys.clear();
+            gtriples.clear();
             for &i in group {
-                out[i] = shard.insert_hashed(keys[i], triples[i]);
+                gkeys.push(keys[i]);
+                gtriples.push(triples[i]);
+            }
+            let mut shard = self.shards[sid].lock().unwrap();
+            let results = shard.insert_batch_hashed(&gkeys, &gtriples);
+            drop(shard);
+            for (&i, r) in group.iter().zip(results) {
+                out[i] = r;
             }
         }
         out
@@ -182,20 +194,30 @@ impl ShardedOcf {
 
     /// Batched membership; results aligned with `keys`.
     pub fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
-        let triples: Vec<HashTriple> = keys.iter().map(|&k| self.hasher.hash_key(k)).collect();
+        let triples = self.hasher.hash_batch(keys);
         self.contains_batch_hashed(&triples)
     }
 
-    /// Batched membership over pre-hashed triples.
+    /// Batched membership over pre-hashed triples. Each shard's group
+    /// is gathered contiguously and resolved by the prefetch-pipelined
+    /// probe engine ([`Ocf::contains_triples_into`]) under one lock
+    /// acquisition, then scattered back to input positions.
     pub fn contains_batch_hashed(&self, triples: &[HashTriple]) -> Vec<bool> {
         let mut out = vec![false; triples.len()];
+        let mut gtriples: Vec<HashTriple> = Vec::new();
+        let mut gout: Vec<bool> = Vec::new();
         for (sid, group) in self.group_by_shard(triples).iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
+            gtriples.clear();
+            gtriples.extend(group.iter().map(|&i| triples[i]));
+            gout.clear();
             let shard = self.shards[sid].lock().unwrap();
-            for &i in group {
-                out[i] = shard.contains_triple(triples[i]);
+            shard.contains_triples_into(&gtriples, &mut gout);
+            drop(shard);
+            for (&i, &r) in group.iter().zip(&gout) {
+                out[i] = r;
             }
         }
         out
@@ -203,7 +225,7 @@ impl ShardedOcf {
 
     /// Batched verified delete; results aligned with `keys`.
     pub fn delete_batch(&self, keys: &[u64]) -> Vec<bool> {
-        let triples: Vec<HashTriple> = keys.iter().map(|&k| self.hasher.hash_key(k)).collect();
+        let triples = self.hasher.hash_batch(keys);
         self.delete_batch_hashed(keys, &triples)
     }
 

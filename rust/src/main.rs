@@ -2,7 +2,7 @@
 //! line-protocol membership server.
 //!
 //! ```text
-//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|all>
+//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|all>
 //!         [--scale F]           # workload scale, 1.0 = paper scale
 //! ocf pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]
 //!              [--shards N]     # >1 = sharded concurrent filter front-end

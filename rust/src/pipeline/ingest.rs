@@ -10,9 +10,11 @@
 //!   no `Send` requirement leaks into the xla wrapper types.
 //!
 //! Each batch is hashed ONCE (on the XLA artifact when available) and
-//! the resulting triples drive `insert_hashed`/`contains_triple`/
-//! `delete_hashed`, so the accelerated hash is genuinely on the request
-//! path rather than a sidecar.
+//! the resulting triples drive `insert_hashed`/`delete_hashed`, so the
+//! accelerated hash is genuinely on the request path rather than a
+//! sidecar. Consecutive lookup runs are resolved by the prefetch-
+//! pipelined probe engine (`Ocf::contains_triples_into`), which keeps
+//! ~8 bucket fetches in flight instead of serializing cache misses.
 //!
 //! A third drive mode targets the concurrent front-end:
 //!
@@ -96,7 +98,11 @@ impl IngestPipeline {
     }
 
     /// Apply one batch: hash all keys once, then apply ops with the
-    /// precomputed triples.
+    /// precomputed triples. Consecutive lookup runs are resolved by the
+    /// prefetch-pipelined probe engine ([`Ocf::contains_triples_into`])
+    /// — semantically identical to op-at-a-time application because a
+    /// run breaks at every mutation, so a lookup can never be reordered
+    /// across an insert/delete.
     fn apply_batch(&self, batch: &[Op], filter: &mut Ocf, report: &mut IngestReport) {
         let keys: Vec<u64> = batch.iter().map(|op| op.key()).collect();
         let triples = self
@@ -104,21 +110,30 @@ impl IngestPipeline {
             .hash_batch(&keys)
             .expect("hash executor failed");
         let t0 = Instant::now();
-        for (op, &triple) in batch.iter().zip(&triples) {
-            match *op {
-                Op::Insert(k) => {
-                    let _ = filter.insert_hashed(k, triple);
-                    report.inserts += 1;
-                }
+        let mut lk_out: Vec<bool> = Vec::new();
+        let mut i = 0;
+        while i < batch.len() {
+            match batch[i] {
                 Op::Lookup(_) => {
-                    report.lookups += 1;
-                    if filter.contains_triple(triple) {
-                        report.lookup_hits += 1;
+                    let mut j = i;
+                    while j < batch.len() && matches!(batch[j], Op::Lookup(_)) {
+                        j += 1;
                     }
+                    lk_out.clear();
+                    filter.contains_triples_into(&triples[i..j], &mut lk_out);
+                    report.lookups += (j - i) as u64;
+                    report.lookup_hits += lk_out.iter().filter(|&&h| h).count() as u64;
+                    i = j;
+                }
+                Op::Insert(k) => {
+                    let _ = filter.insert_hashed(k, triples[i]);
+                    report.inserts += 1;
+                    i += 1;
                 }
                 Op::Delete(k) => {
-                    filter.delete_hashed(k, triple);
+                    filter.delete_hashed(k, triples[i]);
                     report.deletes += 1;
+                    i += 1;
                 }
             }
         }
@@ -159,21 +174,41 @@ impl IngestPipeline {
                     s.spawn(move || {
                         filter.with_shard(sid, |shard| {
                             let (mut ins, mut looks, mut hits, mut dels) = (0u64, 0u64, 0u64, 0u64);
-                            for &i in group {
+                            // consecutive lookups *within this shard's
+                            // group* run through the pipelined probe
+                            // engine; mutations break the run, so
+                            // in-shard op order is preserved exactly
+                            let mut scratch: Vec<crate::filter::HashTriple> = Vec::new();
+                            let mut lk_out: Vec<bool> = Vec::new();
+                            let mut gi = 0;
+                            while gi < group.len() {
+                                let i = group[gi];
                                 match batch[i] {
+                                    Op::Lookup(_) => {
+                                        let mut gj = gi;
+                                        while gj < group.len()
+                                            && matches!(batch[group[gj]], Op::Lookup(_))
+                                        {
+                                            gj += 1;
+                                        }
+                                        scratch.clear();
+                                        scratch
+                                            .extend(group[gi..gj].iter().map(|&x| triples[x]));
+                                        lk_out.clear();
+                                        shard.contains_triples_into(&scratch, &mut lk_out);
+                                        looks += (gj - gi) as u64;
+                                        hits += lk_out.iter().filter(|&&h| h).count() as u64;
+                                        gi = gj;
+                                    }
                                     Op::Insert(k) => {
                                         let _ = shard.insert_hashed(k, triples[i]);
                                         ins += 1;
-                                    }
-                                    Op::Lookup(_) => {
-                                        looks += 1;
-                                        if shard.contains_triple(triples[i]) {
-                                            hits += 1;
-                                        }
+                                        gi += 1;
                                     }
                                     Op::Delete(k) => {
                                         shard.delete_hashed(k, triples[i]);
                                         dels += 1;
+                                        gi += 1;
                                     }
                                 }
                             }

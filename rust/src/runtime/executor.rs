@@ -106,7 +106,7 @@ impl HashExecutor {
             }
             _ => {
                 self.native_calls.set(self.native_calls.get() + 1);
-                Ok(keys.iter().map(|&k| self.hasher.hash_key(k)).collect())
+                Ok(self.hasher.hash_batch(keys))
             }
         }
     }

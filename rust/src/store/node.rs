@@ -20,6 +20,7 @@ use super::flush::{FlushPolicy, FlushReason};
 use super::memtable::{Entry, Memtable};
 use super::sstable::SsTable;
 use crate::filter::{FilterError, FilterStats, MembershipFilter, Mode, Ocf, OcfConfig, ShardedOcf};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 /// Node configuration.
 #[derive(Debug, Clone, Copy)]
@@ -140,6 +141,15 @@ impl NodeFilter {
             NodeFilter::Sharded(f) => f.stats(),
         }
     }
+
+    /// Batched membership through the prefetch-pipelined probe engine
+    /// (positionally aligned with `keys`).
+    pub fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
+        match self {
+            NodeFilter::Single(f) => f.contains_batch(keys),
+            NodeFilter::Sharded(f) => f.contains_batch(keys),
+        }
+    }
 }
 
 impl NodeConfig {
@@ -158,21 +168,61 @@ impl NodeConfig {
     }
 }
 
-/// Node operation counters.
-#[derive(Debug, Clone, Default)]
+/// Node operation counters. Write-path counters stay plain `u64` (the
+/// write path holds `&mut self`); read-path counters are relaxed
+/// atomics so `get`/`get_batch` take `&self` and concurrent readers can
+/// drive the node filter directly (ROADMAP "sharded store read path").
+#[derive(Debug, Default)]
 pub struct NodeStats {
     pub puts: u64,
     pub deletes: u64,
-    pub gets: u64,
+    gets: AtomicU64,
     /// Reads answered "absent" by the node filter alone.
-    pub filter_short_circuits: u64,
+    filter_short_circuits: AtomicU64,
     /// SSTable probes skipped thanks to per-table frozen filters.
-    pub sstable_probes_skipped: u64,
+    sstable_probes_skipped: AtomicU64,
     /// SSTable probes that went to binary search.
-    pub sstable_probes: u64,
+    sstable_probes: AtomicU64,
     pub flushes: u64,
     pub flushes_premature: u64,
     pub compactions: u64,
+}
+
+impl NodeStats {
+    pub fn gets(&self) -> u64 {
+        self.gets.load(Relaxed)
+    }
+
+    /// Reads answered "absent" by the node filter alone.
+    pub fn filter_short_circuits(&self) -> u64 {
+        self.filter_short_circuits.load(Relaxed)
+    }
+
+    /// SSTable probes skipped thanks to per-table frozen filters.
+    pub fn sstable_probes_skipped(&self) -> u64 {
+        self.sstable_probes_skipped.load(Relaxed)
+    }
+
+    /// SSTable probes that went to binary search.
+    pub fn sstable_probes(&self) -> u64 {
+        self.sstable_probes.load(Relaxed)
+    }
+}
+
+impl Clone for NodeStats {
+    fn clone(&self) -> Self {
+        Self {
+            puts: self.puts,
+            deletes: self.deletes,
+            gets: AtomicU64::new(self.gets()),
+            filter_short_circuits: AtomicU64::new(self.filter_short_circuits()),
+            sstable_probes_skipped: AtomicU64::new(self.sstable_probes_skipped()),
+            sstable_probes: AtomicU64::new(self.sstable_probes()),
+            flushes: self.flushes,
+            flushes_premature: self.flushes_premature,
+            compactions: self.compactions,
+        }
+    }
 }
 
 /// A single storage node.
@@ -256,13 +306,46 @@ impl StorageNode {
         true
     }
 
-    /// Membership-test read.
-    pub fn get(&mut self, key: u64) -> bool {
-        self.stats.gets += 1;
+    /// Membership-test read. Takes `&self` (read-path stats are
+    /// relaxed atomics), so any number of reader threads can probe the
+    /// node concurrently with each other.
+    pub fn get(&self, key: u64) -> bool {
+        self.stats.gets.fetch_add(1, Relaxed);
         if !self.filter.contains(key) {
-            self.stats.filter_short_circuits += 1;
+            self.stats.filter_short_circuits.fetch_add(1, Relaxed);
             return false;
         }
+        self.read_tables(key)
+    }
+
+    /// Batched membership reads: one bulk hash + the prefetch-pipelined
+    /// filter probe short-circuit definitely-absent keys (the node's
+    /// negative-lookup fast path), then only survivors walk the
+    /// memtable/SSTable read path. Positionally aligned with `keys`;
+    /// answer-identical to calling [`StorageNode::get`] per key.
+    pub fn get_batch(&self, keys: &[u64]) -> Vec<bool> {
+        self.stats.gets.fetch_add(keys.len() as u64, Relaxed);
+        let pass = self.filter.contains_batch(keys);
+        let mut short = 0u64;
+        let out = keys
+            .iter()
+            .zip(&pass)
+            .map(|(&k, &p)| {
+                if p {
+                    self.read_tables(k)
+                } else {
+                    short += 1;
+                    false
+                }
+            })
+            .collect();
+        self.stats.filter_short_circuits.fetch_add(short, Relaxed);
+        out
+    }
+
+    /// The post-filter read path: memtable, then SSTables newest→oldest
+    /// gated by their frozen per-table filters.
+    fn read_tables(&self, key: u64) -> bool {
         match self.memtable.get(key) {
             Some(Entry::Put { .. }) => return true,
             Some(Entry::Tombstone) => return false,
@@ -270,10 +353,10 @@ impl StorageNode {
         }
         for t in self.sstables.iter().rev() {
             if !t.might_contain(key) {
-                self.stats.sstable_probes_skipped += 1;
+                self.stats.sstable_probes_skipped.fetch_add(1, Relaxed);
                 continue;
             }
-            self.stats.sstable_probes += 1;
+            self.stats.sstable_probes.fetch_add(1, Relaxed);
             match t.get(key) {
                 Some(Entry::Put { .. }) => return true,
                 Some(Entry::Tombstone) => return false,
@@ -463,12 +546,64 @@ mod tests {
         for k in 0..1000u64 {
             n.put(k).unwrap();
         }
-        let before = n.stats.filter_short_circuits;
+        let before = n.stats.filter_short_circuits();
         for k in 1_000_000..1_001_000u64 {
             n.get(k);
         }
-        let hits = n.stats.filter_short_circuits - before;
+        let hits = n.stats.filter_short_circuits() - before;
         assert!(hits > 950, "filter should kill most absent reads: {hits}");
+    }
+
+    #[test]
+    fn get_batch_matches_scalar_gets() {
+        for shards in [1usize, 4] {
+            let mut n = StorageNode::new(NodeConfig {
+                filter_shards: shards,
+                flush: FlushPolicy::small(500),
+                ..NodeConfig::default()
+            });
+            for k in 0..3000u64 {
+                n.put(k).unwrap();
+            }
+            for k in 0..500u64 {
+                n.delete(k);
+            }
+            let probes: Vec<u64> = (0..4000u64).chain(9_000_000..9_001_000).collect();
+            let batched = n.get_batch(&probes);
+            for (&k, &b) in probes.iter().zip(&batched) {
+                assert_eq!(b, n.get(k), "shards={shards} key {k}");
+            }
+            // batch counted once per key, and absent keys short-circuit
+            assert!(n.stats.gets() >= probes.len() as u64 * 2);
+            assert!(n.stats.filter_short_circuits() > 1000);
+        }
+    }
+
+    #[test]
+    fn concurrent_readers_share_the_node() {
+        // the ROADMAP "sharded store read path" item: get takes &self,
+        // so reader threads drive the (sharded) node filter directly
+        let mut n = StorageNode::new(NodeConfig {
+            filter_shards: 4,
+            flush: FlushPolicy::small(1000),
+            ..NodeConfig::default()
+        });
+        for k in 0..5000u64 {
+            n.put(k).unwrap();
+        }
+        let n = &n;
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                s.spawn(move || {
+                    for k in 0..5000u64 {
+                        assert!(n.get(k), "reader {t} key {k}");
+                    }
+                    let absent: Vec<u64> = (8_000_000..8_001_000).collect();
+                    assert!(n.get_batch(&absent).iter().all(|&b| !b));
+                });
+            }
+        });
+        assert_eq!(n.stats.gets(), 4 * (5000 + 1000));
     }
 
     #[test]

@@ -14,10 +14,16 @@
 //!      (including failed inserts) leaves `len()`, the resident
 //!      fingerprint count and the keystore mutually consistent;
 //!  P10 the sharded front-end is semantically transparent vs plain OCF
-//!      and safe under concurrent disjoint writers.
+//!      and safe under concurrent disjoint writers;
+//!  P11 the batched probe engine (`contains_batch`/`insert_batch`) is
+//!      bit-identical to scalar op loops for both table backends,
+//!      across non-power-of-two sizes and fingerprint widths 4..=32.
 
 use ocf::cluster::{Cluster, ReplicationConfig};
-use ocf::filter::{MembershipFilter, Mode, Ocf, OcfConfig, ShardedOcf};
+use ocf::filter::{
+    BucketTable, CuckooFilter, CuckooParams, FlatTable, MembershipFilter, Mode, Ocf, OcfConfig,
+    PackedTable, ShardedOcf, VictimPolicy,
+};
 use ocf::pipeline::{BatchPolicy, IngestPipeline};
 use ocf::runtime::HashExecutor;
 use ocf::store::{FlushPolicy, NodeConfig};
@@ -468,6 +474,119 @@ fn p8_replicated_writes_readable() {
                 }
             }
             keys.iter().all(|&k| c.get(k))
+        },
+    );
+}
+
+/// P11 case: a filter geometry + key/probe sets for the differential
+/// batched-vs-scalar check.
+#[derive(Debug, Clone)]
+struct BatchCase {
+    capacity: usize,
+    fp_bits: u32,
+    keys: Vec<u64>,
+    probes: Vec<u64>,
+}
+
+fn gen_batch_case(g: &mut Gen) -> BatchCase {
+    // deliberately includes non-power-of-two capacities so the Lemire
+    // index + mod-subtract alt mapping paths are covered
+    let capacity = *g.choose(&[192usize, 256, 500, 1000, 1024, 3000, 4096, 4100]);
+    let fp_bits = g.usize_in(4, 32) as u32;
+    let nkeys = g.usize_in(1, capacity); // up to saturation
+    let keys = g.vec(nkeys, |g| g.u64_below(1 << 20));
+    let nprobes = g.usize_in(1, 2000);
+    let probes = g.vec(nprobes, |g| g.u64_below(1 << 21)); // ~half absent
+    BatchCase {
+        capacity,
+        fp_bits,
+        keys,
+        probes,
+    }
+}
+
+fn p11_check<T: BucketTable>(case: &BatchCase) -> bool {
+    let params = CuckooParams {
+        capacity: case.capacity,
+        fp_bits: case.fp_bits,
+        victim_policy: VictimPolicy::Rollback,
+        ..CuckooParams::default()
+    };
+    let mut batched = CuckooFilter::<T>::new(params);
+    let mut scalar = CuckooFilter::<T>::new(params);
+    // insert_batch vs scalar insert loop: same accept/reject pattern,
+    // bit-identical tables (same eviction RNG draws in the same order)
+    let rb = batched.insert_batch(&case.keys);
+    for (i, &k) in case.keys.iter().enumerate() {
+        if rb[i].is_ok() != scalar.insert(k).is_ok() {
+            return false;
+        }
+    }
+    if batched.to_frozen() != scalar.to_frozen() || batched.len() != scalar.len() {
+        return false;
+    }
+    // contains_batch vs scalar contains loop, positionally aligned
+    let got = batched.contains_batch(&case.probes);
+    if got.len() != case.probes.len() {
+        return false;
+    }
+    case.probes
+        .iter()
+        .zip(&got)
+        .all(|(&k, &b)| b == scalar.contains(k))
+}
+
+#[test]
+fn p11_batched_probe_engine_matches_scalar() {
+    prop_check(
+        "batched-vs-scalar-flat",
+        40,
+        |g| gen_batch_case(g),
+        p11_check::<FlatTable>,
+    );
+    prop_check(
+        "batched-vs-scalar-packed",
+        40,
+        |g| gen_batch_case(g),
+        p11_check::<PackedTable>,
+    );
+}
+
+#[test]
+fn p11_ocf_batch_apis_match_scalar() {
+    // the OCF-level batch surface (resize policies in the loop) must
+    // stay transparent too
+    prop_check(
+        "ocf-batch-vs-scalar",
+        25,
+        |g| {
+            let mode = *g.choose(&[Mode::Pre, Mode::Eof, Mode::Static]);
+            let nkeys = g.usize_in(10, 4000);
+            let keys = g.vec(nkeys, |g| g.u64_below(1 << 16));
+            let probes = g.vec(1000, |g| g.u64_below(1 << 17));
+            (mode, keys, probes)
+        },
+        |(mode, keys, probes)| {
+            let cfg = OcfConfig {
+                mode: *mode,
+                initial_capacity: 1024,
+                min_capacity: 256,
+                ..OcfConfig::default()
+            };
+            let mut a = Ocf::new(cfg);
+            let mut b = Ocf::new(cfg);
+            let ra = a.insert_batch(keys);
+            for (i, &k) in keys.iter().enumerate() {
+                if ra[i].is_ok() != b.insert(k).is_ok() {
+                    return false;
+                }
+            }
+            if a.len() != b.len() || a.capacity() != b.capacity() || a.to_frozen() != b.to_frozen()
+            {
+                return false;
+            }
+            let got = a.contains_batch(probes);
+            probes.iter().zip(&got).all(|(&k, &g2)| g2 == b.contains(k))
         },
     );
 }

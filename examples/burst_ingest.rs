@@ -22,7 +22,8 @@ fn main() {
             mode: Mode::Eof,
             initial_capacity: 4096,
             ..OcfConfig::default()
-        },
+        }
+        .into(),
         flush: FlushPolicy::small(ops),
         ..NodeConfig::default()
     });

@@ -38,7 +38,9 @@ fn run_arm(label: &str, executor: HashExecutor, ops: usize) -> (Ocf, f64) {
         executor,
     );
     let mut gen = Preset::A.generator(1 << 22, 0xE2E_0CF);
-    let report = pipeline.run((0..ops).map(|_| gen.next_op()), &mut filter);
+    // executor-hashed path: the XLA artifact (when loaded) hashes each
+    // batch once; the triples drive the filter directly
+    let report = pipeline.run_hashed((0..ops).map(|_| gen.next_op()), &mut filter);
     println!(
         "[{label:>6}] {} | filter: len={} cap={} occ={:.2} resizes={} mem={}",
         report.render(),

@@ -4,7 +4,9 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use ocf::filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+use ocf::filter::{
+    BatchedFilter, FilterBuilder, MembershipFilter, Mode, Ocf, OcfConfig, ProbeSession,
+};
 
 fn main() {
     // 1. Build an OCF in the congestion-aware (EOF) mode. The paper
@@ -55,6 +57,39 @@ fn main() {
         filter.capacity(),
         filter.occupancy(),
         filter.stats().resizes_shrink,
+    );
+
+    // 6. Filter API v2: the batched trait surface with a reusable
+    //    ProbeSession — zero allocations per call once warm; the
+    //    engine-backed filters run the prefetch-pipelined probes.
+    let mut session = ProbeSession::new();
+    let keys: Vec<u64> = (500_000..508_192u64).collect();
+    let mut results = Vec::new();
+    filter.insert_batch_into(&keys, &mut session, &mut results);
+    assert!(results.iter().all(|r| r.is_ok()));
+    let mut hits = Vec::new();
+    filter.contains_batch_into(&keys, &mut session, &mut hits);
+    assert!(hits.iter().all(|&h| h), "no false negatives, batched");
+    let mut deleted = Vec::new();
+    filter.delete_batch_into(&keys, &mut session, &mut deleted);
+    assert!(deleted.iter().all(|&d| d), "verified batched deletes");
+
+    // 7. Any backend by name via the unified builder — here a bloom
+    //    baseline, which gets the same batched APIs from the trait's
+    //    scalar defaults (and can be driven through `dyn`).
+    let mut baseline = FilterBuilder::named("bloom")
+        .expect("known backend")
+        .with_initial_capacity(10_000)
+        .build()
+        .expect("valid config");
+    for r in baseline.insert_batch(&(0..10_000u64).collect::<Vec<_>>()) {
+        r.unwrap();
+    }
+    println!(
+        "builder[{}]: len={} memory={} (batch APIs for free)",
+        baseline.name(),
+        baseline.len(),
+        ocf::util::fmt_bytes(baseline.memory_bytes()),
     );
     println!("quickstart OK");
 }

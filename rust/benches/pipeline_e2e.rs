@@ -28,7 +28,8 @@ fn run_pipeline(label: &str, executor: HashExecutor, batch: usize, ops: usize) {
         executor,
     );
     let mut gen = MixGenerator::new(KeyDist::uniform(1 << 40), OpMix::new(0.5, 0.4, 0.1), 0xE2E);
-    let report = pipeline.run((0..ops).map(|_| gen.next_op()), &mut filter);
+    // executor-hashed Ocf path (XLA artifacts when built)
+    let report = pipeline.run_hashed((0..ops).map(|_| gen.next_op()), &mut filter);
     println!(
         "| {label} | batch={batch} | {} | p50 {} ns/batch | p99 {} ns/batch |",
         ocf::util::fmt_rate(report.ops_per_sec()),

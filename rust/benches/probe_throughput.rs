@@ -1,9 +1,11 @@
 //! probe_throughput — the probe-engine perf baseline.
 //!
 //! Runs the E10 arms (scalar vs prefetch-pipelined batched lookups on
-//! both bucket-table backends) and emits a `BENCH_probe.json`
-//! trajectory point so future PRs can diff probe throughput against
-//! this one. See `rust/src/filter/README.md` for how to read it.
+//! both bucket-table backends, the same engine through `&dyn
+//! BatchedFilter`, and a bloom default-batch baseline) and emits a
+//! `BENCH_probe.json` trajectory point so future PRs can diff probe
+//! throughput against this one. See `rust/src/filter/README.md` for
+//! how to read it.
 //!
 //! Env knobs:
 //!   `OCF_BENCH_SCALE` — fraction of paper scale (default 1.0 = 1M
@@ -13,7 +15,7 @@
 //!   `OCF_BENCH_JSON`  — output path (default: the committed
 //!                       `BENCH_probe.json` at the repo root).
 
-use ocf::exp::probe::{measure, render, speedup, ProbePoint, BATCH};
+use ocf::exp::probe::{dyn_overhead, measure, render, speedup, ProbePoint, BATCH};
 use ocf::filter::PREFETCH_DEPTH;
 
 fn json_points(points: &[ProbePoint]) -> String {
@@ -63,17 +65,18 @@ fn main() {
         "{}",
         render(
             format!(
-                "probe_throughput — scalar vs batched (prefetch depth {PREFETCH_DEPTH}, \
-                 {n_keys} keys)"
+                "probe_throughput — scalar vs batched vs batched-dyn (prefetch depth \
+                 {PREFETCH_DEPTH}, {n_keys} keys)"
             ),
             &points,
         )
     );
 
-    // The acceptance bar this bench exists to track: batched negative
-    // lookups beat the scalar loop on both backends at full scale.
-    // (Smoke runs use cache-resident tables where prefetch can't help,
-    // so they only warn.)
+    // The acceptance bars this bench exists to track: (1) batched
+    // negative lookups beat the scalar loop on both cuckoo backends at
+    // full scale; (2) the v2 trait indirection (batched-dyn vs batched)
+    // costs nothing measurable. (Smoke runs use cache-resident tables
+    // where prefetch can't help, so they only warn.)
     for backend in ["flat", "packed"] {
         let sp = speedup(&points, backend, "neg").unwrap_or(0.0);
         if sp <= 1.0 {
@@ -85,6 +88,13 @@ fn main() {
                 eprintln!("WARN: {msg}");
             }
         }
+        let dy = dyn_overhead(&points, backend, "neg").unwrap_or(0.0);
+        if dy < 0.95 {
+            eprintln!(
+                "WARN: {backend}/neg: dyn dispatch at {dy:.2}x of static batched — \
+                 trait indirection is showing up"
+            );
+        }
     }
 
     let unix_time = std::time::SystemTime::now()
@@ -95,17 +105,24 @@ fn main() {
     // schema seed (`measured: false`); keep both files field-compatible.
     let json = format!(
         "{{\n  \"bench\": \"probe_throughput\",\n  \"unix_time\": {unix_time},\n  \
-         \"smoke\": {smoke},\n  \"measured\": true,\n  \
+         \"smoke\": {smoke},\n  \"measured\": true,\n  \"phase\": \"post-trait-redesign\",\n  \
          \"note\": \"regenerate with: cargo bench --bench probe_throughput (full scale)\",\n  \
          \"n_keys\": {n_keys},\n  \"n_probes\": {n_probes},\n  \
          \"batch\": {BATCH},\n  \"prefetch_depth\": {PREFETCH_DEPTH},\n  \"arms\": [\n{}\n  ],\n  \
          \"speedup\": {{\"flat_neg\": {:.3}, \"packed_neg\": {:.3}, \
+         \"flat_pos\": {:.3}, \"packed_pos\": {:.3}, \"bloom_neg\": {:.3}}},\n  \
+         \"trait_overhead\": {{\"flat_neg\": {:.3}, \"packed_neg\": {:.3}, \
          \"flat_pos\": {:.3}, \"packed_pos\": {:.3}}}\n}}\n",
         json_points(&points),
         speedup(&points, "flat", "neg").unwrap_or(0.0),
         speedup(&points, "packed", "neg").unwrap_or(0.0),
         speedup(&points, "flat", "pos").unwrap_or(0.0),
         speedup(&points, "packed", "pos").unwrap_or(0.0),
+        speedup(&points, "bloom", "neg").unwrap_or(0.0),
+        dyn_overhead(&points, "flat", "neg").unwrap_or(0.0),
+        dyn_overhead(&points, "packed", "neg").unwrap_or(0.0),
+        dyn_overhead(&points, "flat", "pos").unwrap_or(0.0),
+        dyn_overhead(&points, "packed", "pos").unwrap_or(0.0),
     );
     std::fs::write(&path, &json).expect("write BENCH_probe.json");
 
@@ -118,16 +135,23 @@ fn main() {
         "\"measured\": true",
         "\"arms\"",
         "\"speedup\"",
+        "\"trait_overhead\"",
         "\"prefetch_depth\"",
         "\"flat_neg\"",
         "\"packed_neg\"",
     ] {
         assert!(back.contains(field), "BENCH_probe.json missing {field}");
     }
+    // 4 cuckoo batched arms + 2 bloom (default-impl) batched arms
     assert_eq!(
         back.matches("\"mode\": \"batched\"").count(),
+        6,
+        "expected 6 batched arms"
+    );
+    assert_eq!(
+        back.matches("\"mode\": \"batched-dyn\"").count(),
         4,
-        "expected 4 batched arms"
+        "expected 4 batched-dyn arms"
     );
     eprintln!("probe_throughput: wrote {path}");
 }

@@ -2,8 +2,9 @@
 //! replication, and the query coordinator for the paper's §I.B
 //! cartesian-product workload.
 //!
-//! The "data-center" is simulated in-process: N [`StorageNode`]s behind
-//! a [`Router`], with per-node op accounting so experiments can report
+//! The "data-center" is simulated in-process: N
+//! [`StorageNode`](crate::store::StorageNode)s behind a [`Cluster`]
+//! router, with per-node op accounting so experiments can report
 //! the fan-out asymmetries the paper describes ("the number of look-ups
 //! on the node containing T is much greater"). Replication is
 //! RF-way with filter-first quorum reads.
@@ -14,6 +15,6 @@ pub mod ring;
 pub mod router;
 
 pub use coordinator::{CartesianQuery, Coordinator, QueryStats};
-pub use replication::ReplicationConfig;
+pub use replication::{Consistency, ReplicationConfig};
 pub use ring::HashRing;
 pub use router::{Cluster, RouterStats};

@@ -34,9 +34,9 @@ impl Cluster {
     pub fn new(n: usize, vnodes: usize, template: NodeConfig, repl: ReplicationConfig) -> Self {
         let nodes = (0..n)
             .map(|i| {
-                let mut cfg = template;
+                let mut cfg = template.clone();
                 cfg.node_id = i as u64;
-                cfg.filter.seed = template.filter.seed ^ ((i as u64 + 1) << 17);
+                cfg.filter.ocf.seed = template.filter.ocf.seed ^ ((i as u64 + 1) << 17);
                 StorageNode::new(cfg)
             })
             .collect();
@@ -117,6 +117,62 @@ impl Cluster {
             }
         }
         false
+    }
+
+    /// Batched read fan-out: keys are grouped by replica and each
+    /// node's group is resolved through [`StorageNode::get_batch`] (the
+    /// filter-generic batched read path), in consultation "waves" —
+    /// wave `w` probes replica `w` of every still-unresolved key, so
+    /// the answers (and the per-node op accounting) are identical to a
+    /// scalar [`Cluster::get`] loop while each node sees one batched
+    /// probe per wave instead of a call per key.
+    pub fn get_batch(&mut self, keys: &[u64]) -> Vec<bool> {
+        self.stats.ops_routed += keys.len() as u64;
+        let mut out = vec![false; keys.len()];
+        // (key index, replica list) for every unresolved key
+        let mut pending: Vec<(usize, Vec<usize>)> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| (i, self.ring.replicas(k, self.repl.rf)))
+            .collect();
+        let mut wave = 0usize;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+        while !pending.is_empty() {
+            for g in groups.iter_mut() {
+                g.clear();
+            }
+            // a key participates in wave `w` only while w < need
+            let mut next_pending: Vec<(usize, Vec<usize>)> = Vec::new();
+            for (i, replicas) in pending.drain(..) {
+                let need = self.repl.read_consistency.required(replicas.len()).max(1);
+                if wave < need.min(replicas.len()) {
+                    groups[replicas[wave]].push(i);
+                    next_pending.push((i, replicas));
+                }
+            }
+            if next_pending.is_empty() {
+                break;
+            }
+            let mut gkeys: Vec<u64> = Vec::new();
+            for (node_id, group) in groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                self.stats.per_node_ops[node_id] += group.len() as u64;
+                gkeys.clear();
+                gkeys.extend(group.iter().map(|&i| keys[i]));
+                let answers = self.nodes[node_id].get_batch(&gkeys);
+                for (&i, hit) in group.iter().zip(answers) {
+                    if hit {
+                        out[i] = true;
+                    }
+                }
+            }
+            // keys answered positive leave the wave set
+            pending = next_pending.into_iter().filter(|(i, _)| !out[*i]).collect();
+            wave += 1;
+        }
+        out
     }
 
     /// Apply a workload op.
@@ -212,7 +268,7 @@ mod tests {
             3,
             32,
             NodeConfig {
-                filter_shards: 4,
+                filter: crate::filter::FilterBuilder::default().with_shards(4),
                 flush: FlushPolicy::small(10_000),
                 ..NodeConfig::default()
             },
@@ -238,5 +294,49 @@ mod tests {
         c.put(1).unwrap();
         assert!(c.get(1));
         assert!(c.delete(1));
+    }
+
+    #[test]
+    fn get_batch_matches_scalar_gets() {
+        use crate::cluster::replication::Consistency;
+        for read_consistency in [Consistency::One, Consistency::Quorum, Consistency::All] {
+            let mk = || {
+                let mut c = Cluster::new(
+                    4,
+                    32,
+                    NodeConfig {
+                        flush: FlushPolicy::small(10_000),
+                        ..NodeConfig::default()
+                    },
+                    ReplicationConfig {
+                        rf: 2,
+                        read_consistency,
+                        ..ReplicationConfig::default()
+                    },
+                );
+                for k in 0..2000u64 {
+                    c.put(k).unwrap();
+                }
+                c
+            };
+            let probes: Vec<u64> = (0..3000u64).collect();
+            let mut batched_cluster = mk();
+            let batched = batched_cluster.get_batch(&probes);
+            let mut scalar_cluster = mk();
+            let scalar: Vec<bool> = probes.iter().map(|&k| scalar_cluster.get(k)).collect();
+            assert_eq!(batched, scalar, "{read_consistency:?}");
+            // identical routing accounting, probe for probe
+            assert_eq!(
+                batched_cluster.stats.per_node_ops, scalar_cluster.stats.per_node_ops,
+                "{read_consistency:?}"
+            );
+            assert_eq!(
+                batched_cluster.stats.ops_routed,
+                scalar_cluster.stats.ops_routed
+            );
+            for k in 0..2000u64 {
+                assert!(batched[k as usize], "{read_consistency:?}: lost {k}");
+            }
+        }
     }
 }

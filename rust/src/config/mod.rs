@@ -6,18 +6,26 @@
 //! the parsed tree onto the typed configs of the filter, store and
 //! pipeline layers; every field has a default so a partial file (or no
 //! file) works. CLI `--set section.key=value` overrides come last.
+//!
+//! The `[filter]` section assembles a [`FilterBuilder`] — including
+//! `backend = "ocf-eof" | "sharded" | "bloom" | ...` and `shards = N` —
+//! so config files and the CLI select any filter backend by name; the
+//! builder's validation runs at load time and surfaces as a
+//! [`ConfigError`] instead of a construction panic later.
 
 pub mod parser;
 
 pub use parser::{ConfigError, ConfigTree, Value};
 
-use crate::filter::{Mode, OcfConfig};
+use crate::filter::{FilterBuilder, Mode};
 use crate::store::{FlushPolicy, NodeConfig};
 
 /// Typed application config assembled from file + overrides.
 #[derive(Debug, Clone)]
 pub struct OcfFileConfig {
-    pub filter: OcfConfig,
+    /// Filter construction surface (backend by name, capacity, mode
+    /// bands, shards, bloom fpr — see [`FilterBuilder`]).
+    pub filter: FilterBuilder,
     pub node: NodeConfig,
     /// Cluster shape.
     pub nodes: usize,
@@ -33,7 +41,7 @@ pub struct OcfFileConfig {
 impl Default for OcfFileConfig {
     fn default() -> Self {
         Self {
-            filter: OcfConfig::default(),
+            filter: FilterBuilder::default(),
             node: NodeConfig::default(),
             nodes: 3,
             vnodes: 64,
@@ -50,8 +58,13 @@ impl OcfFileConfig {
     pub fn from_tree(tree: &ConfigTree) -> Result<Self, ConfigError> {
         let mut cfg = Self::default();
 
+        if let Some(backend) = tree.get_str("filter", "backend")? {
+            cfg.filter
+                .set_backend(&backend)
+                .map_err(|e| ConfigError::Invalid(e.to_string()))?;
+        }
         if let Some(mode) = tree.get_str("filter", "mode")? {
-            cfg.filter.mode = match mode.as_str() {
+            cfg.filter.ocf.mode = match mode.as_str() {
                 "pre" => Mode::Pre,
                 "eof" => Mode::Eof,
                 "static" => Mode::Static,
@@ -63,48 +76,46 @@ impl OcfFileConfig {
             };
         }
         if let Some(v) = tree.get_int("filter", "initial_capacity")? {
-            cfg.filter.initial_capacity = v as usize;
+            cfg.filter.ocf.initial_capacity = v as usize;
         }
         if let Some(v) = tree.get_int("filter", "fp_bits")? {
-            cfg.filter.fp_bits = v as u32;
+            cfg.filter.ocf.fp_bits = v as u32;
         }
         if let Some(v) = tree.get_int("filter", "max_displacements")? {
-            cfg.filter.max_displacements = v as u32;
+            cfg.filter.ocf.max_displacements = v as u32;
         }
         if let Some(v) = tree.get_int("filter", "seed")? {
-            cfg.filter.seed = v as u64;
+            cfg.filter.ocf.seed = v as u64;
         }
         if let Some(v) = tree.get_float("filter", "o_min")? {
-            cfg.filter.o_min = v;
+            cfg.filter.ocf.o_min = v;
         }
         if let Some(v) = tree.get_float("filter", "o_max")? {
-            cfg.filter.o_max = v;
+            cfg.filter.ocf.o_max = v;
         }
         if let Some(v) = tree.get_float("filter", "k_min")? {
-            cfg.filter.k_min = v;
+            cfg.filter.ocf.k_min = v;
         }
         if let Some(v) = tree.get_float("filter", "k_max")? {
-            cfg.filter.k_max = v;
+            cfg.filter.ocf.k_max = v;
         }
         if let Some(v) = tree.get_float("filter", "g")? {
-            cfg.filter.g = v;
+            cfg.filter.ocf.g = v;
         }
         if let Some(v) = tree.get_int("filter", "min_capacity")? {
-            cfg.filter.min_capacity = v as usize;
+            cfg.filter.ocf.min_capacity = v as usize;
         }
         if let Some(v) = tree.get_int("filter", "max_capacity")? {
-            cfg.filter.max_capacity = Some(v as usize);
+            cfg.filter.ocf.max_capacity = Some(v as usize);
         }
         if let Some(v) = tree.get_bool("filter", "verify_deletes")? {
-            cfg.filter.verify_deletes = v;
+            cfg.filter.ocf.verify_deletes = v;
         }
         if let Some(v) = tree.get_int("filter", "shards")? {
-            if !(1..=1024).contains(&v) {
-                return Err(ConfigError::Invalid(format!(
-                    "filter.shards must be in 1..=1024, got {v}"
-                )));
-            }
-            cfg.node.filter_shards = v as usize;
+            cfg.filter.shards = v as usize;
+        }
+        if let Some(v) = tree.get_float("filter", "bloom_fpr")? {
+            cfg.filter.bloom_fpr = v;
         }
 
         if let Some(v) = tree.get_int("store", "max_memtable_keys")? {
@@ -143,7 +154,12 @@ impl OcfFileConfig {
             cfg.artifacts_dir = v;
         }
 
-        cfg.node.filter = cfg.filter;
+        // One validation pass for the whole knob combination (range
+        // checks for shards/fp_bits/bands live in the builder).
+        cfg.filter
+            .validate()
+            .map_err(|e| ConfigError::Invalid(e.to_string()))?;
+        cfg.node.filter = cfg.filter.clone();
         Ok(cfg)
     }
 
@@ -160,12 +176,14 @@ impl OcfFileConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::filter::{FilterBackend, MembershipFilter};
 
     #[test]
     fn defaults_without_file() {
         let cfg = OcfFileConfig::load("", &[]).unwrap();
         assert_eq!(cfg.nodes, 3);
-        assert_eq!(cfg.filter.mode, Mode::Eof);
+        assert_eq!(cfg.filter.ocf.mode, Mode::Eof);
+        assert_eq!(cfg.filter.backend, FilterBackend::Ocf);
     }
 
     #[test]
@@ -192,27 +210,50 @@ rf = 3
 batch_size = 4096
 "#;
         let cfg = OcfFileConfig::load(text, &[]).unwrap();
-        assert_eq!(cfg.filter.mode, Mode::Pre);
-        assert_eq!(cfg.filter.initial_capacity, 8192);
-        assert_eq!(cfg.filter.fp_bits, 12);
-        assert!(!cfg.filter.verify_deletes);
+        assert_eq!(cfg.filter.ocf.mode, Mode::Pre);
+        assert_eq!(cfg.filter.ocf.initial_capacity, 8192);
+        assert_eq!(cfg.filter.ocf.fp_bits, 12);
+        assert!(!cfg.filter.ocf.verify_deletes);
         assert_eq!(cfg.node.flush.max_memtable_keys, 5000);
         assert_eq!(cfg.node.flush.filter_pressure, Some(0.8));
         assert_eq!(cfg.nodes, 5);
         assert_eq!(cfg.rf, 3);
         assert_eq!(cfg.batch_size, 4096);
         // node filter config mirrors the filter section
-        assert_eq!(cfg.node.filter.fp_bits, 12);
+        assert_eq!(cfg.node.filter.ocf.fp_bits, 12);
+        assert_eq!(cfg.node.filter.describe(), "ocf-pre");
+    }
+
+    #[test]
+    fn backend_selectable_by_name() {
+        let cfg = OcfFileConfig::load("[filter]\nbackend = \"bloom\"\n", &[]).unwrap();
+        assert_eq!(cfg.filter.backend, FilterBackend::Bloom);
+        assert_eq!(cfg.filter.build().unwrap().name(), "bloom");
+
+        // mode-qualified backend names work through --set overrides too
+        let cfg = OcfFileConfig::load("", &["filter.backend=ocf-static".into()]).unwrap();
+        assert_eq!(cfg.filter.describe(), "ocf-static");
+
+        let cfg = OcfFileConfig::load("[filter]\nbackend = \"sharded\"\nshards = 8\n", &[])
+            .unwrap();
+        assert_eq!(cfg.filter.describe(), "sharded-ocf");
+        assert_eq!(cfg.filter.shards, 8);
+
+        assert!(OcfFileConfig::load("[filter]\nbackend = \"warp\"\n", &[]).is_err());
+        // bloom cannot shard — builder validation surfaces at load time
+        assert!(
+            OcfFileConfig::load("[filter]\nbackend = \"bloom\"\nshards = 4\n", &[]).is_err()
+        );
     }
 
     #[test]
     fn filter_shards_opt_in() {
         let cfg = OcfFileConfig::load("", &[]).unwrap();
-        assert_eq!(cfg.node.filter_shards, 1, "sharding is opt-in");
+        assert_eq!(cfg.node.filter.shards, 1, "sharding is opt-in");
         let cfg = OcfFileConfig::load("[filter]\nshards = 8\n", &[]).unwrap();
-        assert_eq!(cfg.node.filter_shards, 8);
+        assert_eq!(cfg.node.filter.shards, 8);
         let cfg = OcfFileConfig::load("", &["filter.shards=4".into()]).unwrap();
-        assert_eq!(cfg.node.filter_shards, 4);
+        assert_eq!(cfg.node.filter.shards, 4);
         assert!(OcfFileConfig::load("[filter]\nshards = 0\n", &[]).is_err());
         assert!(OcfFileConfig::load("[filter]\nshards = 1000000000\n", &[]).is_err());
     }
@@ -224,11 +265,17 @@ batch_size = 4096
             OcfFileConfig::load(text, &["cluster.nodes=7".into(), "filter.mode=static".into()])
                 .unwrap();
         assert_eq!(cfg.nodes, 7);
-        assert_eq!(cfg.filter.mode, Mode::Static);
+        assert_eq!(cfg.filter.ocf.mode, Mode::Static);
     }
 
     #[test]
     fn bad_mode_rejected() {
         assert!(OcfFileConfig::load("[filter]\nmode = \"warp\"\n", &[]).is_err());
+    }
+
+    #[test]
+    fn invalid_band_rejected_at_load() {
+        assert!(OcfFileConfig::load("[filter]\no_min = 0.9\no_max = 0.5\n", &[]).is_err());
+        assert!(OcfFileConfig::load("[filter]\nfp_bits = 40\n", &[]).is_err());
     }
 }

@@ -75,7 +75,8 @@ pub fn run_arms(ops: usize, seed: u64) -> (BurstRow, BurstRow) {
             mode: Mode::Static,
             initial_capacity: (ops / 8).next_power_of_two().max(2048),
             ..OcfConfig::default()
-        },
+        }
+        .into(),
         flush: FlushPolicy::small(ops).with_filter_pressure(0.85),
         ..NodeConfig::default()
     });
@@ -84,7 +85,8 @@ pub fn run_arms(ops: usize, seed: u64) -> (BurstRow, BurstRow) {
             mode: Mode::Eof,
             initial_capacity: 4096,
             ..OcfConfig::default()
-        },
+        }
+        .into(),
         flush: FlushPolicy::small(ops),
         ..NodeConfig::default()
     });

@@ -1,29 +1,40 @@
-//! E10 — the memory-level-parallel probe engine: scalar vs batched.
+//! E10 — the memory-level-parallel probe engine: scalar vs batched,
+//! now measured **through the capability traits**.
 //!
 //! Measures lookup throughput of the scalar op-at-a-time path against
-//! the prefetch-pipelined `contains_batch` engine on both bucket-table
-//! backends ([`FlatTable`] one-`u32`-per-slot, [`PackedTable`] SWAR
-//! bit-packed), on negative- and positive-lookup workloads. Negative
-//! lookups are the paper's money shot (the read path's short-circuit)
-//! and the worst case for a scalar probe: primary miss → a second
-//! dependent cache miss on the alternate bucket. The batched engine
-//! overlaps ~[`PREFETCH_DEPTH`](crate::filter::PREFETCH_DEPTH) of
-//! those misses.
+//! the batched [`BatchedFilter`] path on three backends —
+//! [`CuckooFilter<FlatTable>`], [`CuckooFilter<PackedTable>`] (both
+//! engine-overridden) and [`BloomFilter`] (default scalar batch impls —
+//! the baseline the trait redesign gave batch APIs for free) — on
+//! negative- and positive-lookup workloads. Negative lookups are the
+//! paper's money shot (the read path's short-circuit) and the worst
+//! case for a scalar probe: primary miss → a second dependent cache
+//! miss on the alternate bucket. The batched engine overlaps
+//! ~[`PREFETCH_DEPTH`](crate::filter::PREFETCH_DEPTH) of those misses.
+//!
+//! The cuckoo backends additionally run a **`batched-dyn`** arm — the
+//! identical batched probe driven through `&dyn BatchedFilter` — so
+//! every trajectory point carries direct evidence of what the v2 trait
+//! indirection costs (expected: nothing measurable; the virtual call is
+//! per *batch*, the probes inside are monomorphic).
 //!
 //! `measure()` is shared with `benches/probe_throughput.rs`, which
 //! emits the `BENCH_probe.json` trajectory point.
 
 use super::report::{f, Table};
 use super::Scale;
-use crate::filter::{BucketTable, CuckooFilter, CuckooParams, FlatTable, MembershipFilter, PackedTable};
+use crate::filter::{
+    BatchedFilter, BloomFilter, CuckooFilter, CuckooParams, FlatTable, MembershipFilter,
+    PackedTable, ProbeSession,
+};
 use std::time::Instant;
 
 /// One measured arm.
 #[derive(Debug, Clone)]
 pub struct ProbePoint {
-    /// Bucket-table backend ("flat" | "packed").
+    /// Backend ("flat" | "packed" | "bloom").
     pub backend: &'static str,
-    /// Probe mode ("scalar" | "batched").
+    /// Probe mode ("scalar" | "batched" | "batched-dyn").
     pub mode: &'static str,
     /// Workload ("neg" | "pos").
     pub workload: &'static str,
@@ -33,7 +44,7 @@ pub struct ProbePoint {
     pub probes: usize,
     /// Wallclock of the probe loop.
     pub secs: f64,
-    /// Observed hits (sanity anchor: scalar and batched must agree).
+    /// Observed hits (sanity anchor: all modes must agree).
     pub hits: usize,
 }
 
@@ -51,7 +62,59 @@ impl ProbePoint {
 /// bulk hash + pipeline warmup, small enough to model request batches.
 pub const BATCH: usize = 4096;
 
-fn build<T: BucketTable>(n_keys: usize) -> CuckooFilter<T> {
+/// Time the scalar loop and the batched loop (through `F`'s
+/// `BatchedFilter` impl, one reused [`ProbeSession`] — the zero-alloc
+/// pattern) over one probe set; push both points.
+fn time_arms<F: BatchedFilter + ?Sized>(
+    filter: &F,
+    backend: &'static str,
+    workload: &'static str,
+    n_keys: usize,
+    probes: &[u64],
+    out: &mut Vec<ProbePoint>,
+) -> usize {
+    // scalar: hash + two dependent bucket reads per key
+    let t0 = Instant::now();
+    let mut hits = 0usize;
+    for &k in probes {
+        hits += filter.contains(k) as usize;
+    }
+    let scalar_secs = t0.elapsed().as_secs_f64();
+    out.push(ProbePoint {
+        backend,
+        mode: "scalar",
+        workload,
+        keys: n_keys,
+        probes: probes.len(),
+        secs: scalar_secs,
+        hits,
+    });
+
+    // batched: bulk hash + prefetch-pipelined probes per chunk
+    let mut session = ProbeSession::with_capacity(BATCH);
+    let mut answers: Vec<bool> = Vec::with_capacity(BATCH);
+    let t0 = Instant::now();
+    let mut bhits = 0usize;
+    for chunk in probes.chunks(BATCH) {
+        answers.clear();
+        filter.contains_batch_into(chunk, &mut session, &mut answers);
+        bhits += answers.iter().filter(|&&h| h).count();
+    }
+    let batched_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(hits, bhits, "{backend}/{workload}: batched answers diverged");
+    out.push(ProbePoint {
+        backend,
+        mode: "batched",
+        workload,
+        keys: n_keys,
+        probes: probes.len(),
+        secs: batched_secs,
+        hits: bhits,
+    });
+    hits
+}
+
+fn build_cuckoo<T: crate::filter::BucketTable>(n_keys: usize) -> CuckooFilter<T> {
     let mut f = CuckooFilter::<T>::new(CuckooParams {
         capacity: n_keys * 2, // paper-recommended 2× headroom
         ..CuckooParams::default()
@@ -62,75 +125,97 @@ fn build<T: BucketTable>(n_keys: usize) -> CuckooFilter<T> {
     f
 }
 
-fn run_arms<T: BucketTable>(
+fn run_cuckoo_arms<T: crate::filter::BucketTable + 'static>(
     backend: &'static str,
     n_keys: usize,
     n_probes: usize,
     out: &mut Vec<ProbePoint>,
 ) {
-    let filter = build::<T>(n_keys);
+    let filter = build_cuckoo::<T>(n_keys);
     // negative probes: disjoint key range; positive probes: residents
     let neg: Vec<u64> = (0..n_probes as u64).map(|i| (1u64 << 40) + i).collect();
     let pos: Vec<u64> = (0..n_probes as u64).map(|i| i % n_keys as u64).collect();
 
     for (workload, probes) in [("neg", &neg), ("pos", &pos)] {
-        // scalar: hash + two dependent bucket reads per key
-        let t0 = Instant::now();
-        let mut hits = 0usize;
-        for &k in probes.iter() {
-            hits += filter.contains(k) as usize;
-        }
-        let scalar_secs = t0.elapsed().as_secs_f64();
-        out.push(ProbePoint {
-            backend,
-            mode: "scalar",
-            workload,
-            keys: n_keys,
-            probes: probes.len(),
-            secs: scalar_secs,
-            hits,
-        });
+        let hits = time_arms(&filter, backend, workload, n_keys, probes, out);
 
-        // batched: bulk hash + prefetch-pipelined probes per chunk
+        // batched through the trait object: same engine, virtual
+        // dispatch per batch — the trait-indirection cost probe
+        let dyn_filter: &dyn BatchedFilter = &filter;
+        let mut session = ProbeSession::with_capacity(BATCH);
+        let mut answers: Vec<bool> = Vec::with_capacity(BATCH);
         let t0 = Instant::now();
-        let mut bhits = 0usize;
+        let mut dhits = 0usize;
         for chunk in probes.chunks(BATCH) {
-            let r = filter.contains_batch(chunk);
-            bhits += r.iter().filter(|&&h| h).count();
+            answers.clear();
+            dyn_filter.contains_batch_into(chunk, &mut session, &mut answers);
+            dhits += answers.iter().filter(|&&h| h).count();
         }
-        let batched_secs = t0.elapsed().as_secs_f64();
-        assert_eq!(hits, bhits, "{backend}/{workload}: batched answers diverged");
+        let dyn_secs = t0.elapsed().as_secs_f64();
+        assert_eq!(hits, dhits, "{backend}/{workload}: dyn answers diverged");
         out.push(ProbePoint {
             backend,
-            mode: "batched",
+            mode: "batched-dyn",
             workload,
             keys: n_keys,
             probes: probes.len(),
-            secs: batched_secs,
-            hits: bhits,
+            secs: dyn_secs,
+            hits: dhits,
         });
     }
 }
 
-/// Measure all arms: {flat, packed} × {scalar, batched} × {neg, pos}.
+fn run_bloom_arms(n_keys: usize, n_probes: usize, out: &mut Vec<ProbePoint>) {
+    let mut f = BloomFilter::new(n_keys, 0.01, CuckooParams::default().seed);
+    for k in 0..n_keys as u64 {
+        f.insert(k).expect("bloom insert is infallible");
+    }
+    let neg: Vec<u64> = (0..n_probes as u64).map(|i| (1u64 << 40) + i).collect();
+    let pos: Vec<u64> = (0..n_probes as u64).map(|i| i % n_keys as u64).collect();
+    for (workload, probes) in [("neg", &neg), ("pos", &pos)] {
+        time_arms(&f, "bloom", workload, n_keys, probes, out);
+    }
+}
+
+/// Measure all arms: {flat, packed} × {scalar, batched, batched-dyn}
+/// × {neg, pos} plus bloom × {scalar, batched} × {neg, pos} — 16
+/// points.
 pub fn measure(n_keys: usize, n_probes: usize) -> Vec<ProbePoint> {
-    let mut out = Vec::with_capacity(8);
-    run_arms::<FlatTable>("flat", n_keys, n_probes, &mut out);
-    run_arms::<PackedTable>("packed", n_keys, n_probes, &mut out);
+    let mut out = Vec::with_capacity(16);
+    run_cuckoo_arms::<FlatTable>("flat", n_keys, n_probes, &mut out);
+    run_cuckoo_arms::<PackedTable>("packed", n_keys, n_probes, &mut out);
+    run_bloom_arms(n_keys, n_probes, &mut out);
     out
 }
 
 /// Speedup of the batched arm over its scalar twin (same backend and
 /// workload); `None` if either arm is missing.
 pub fn speedup(points: &[ProbePoint], backend: &str, workload: &str) -> Option<f64> {
+    ratio(points, backend, workload, "batched", "scalar")
+}
+
+/// `batched-dyn` ÷ `batched` throughput — the trait-indirection cost
+/// probe (≈ 1.0 means the v2 dispatch is free); `None` if either arm
+/// is missing.
+pub fn dyn_overhead(points: &[ProbePoint], backend: &str, workload: &str) -> Option<f64> {
+    ratio(points, backend, workload, "batched-dyn", "batched")
+}
+
+fn ratio(
+    points: &[ProbePoint],
+    backend: &str,
+    workload: &str,
+    num: &str,
+    den: &str,
+) -> Option<f64> {
     let find = |mode: &str| {
         points
             .iter()
             .find(|p| p.backend == backend && p.workload == workload && p.mode == mode)
     };
-    let (s, b) = (find("scalar")?, find("batched")?);
-    if s.mops() > 0.0 {
-        Some(b.mops() / s.mops())
+    let (d, n) = (find(den)?, find(num)?);
+    if d.mops() > 0.0 {
+        Some(n.mops() / d.mops())
     } else {
         None
     }
@@ -140,14 +225,14 @@ pub fn speedup(points: &[ProbePoint], backend: &str, workload: &str) -> Option<f
 /// (shared by the experiment driver and the `probe_throughput` bench
 /// so their outputs cannot drift).
 pub fn render(title: impl Into<String>, points: &[ProbePoint]) -> String {
-    let mut table = Table::new(title, &["backend", "workload", "mode", "Mops/s", "speedup"]);
+    let mut table = Table::new(title, &["backend", "workload", "mode", "Mops/s", "vs scalar"]);
     for p in points {
-        let sp = if p.mode == "batched" {
-            speedup(points, p.backend, p.workload)
+        let sp = if p.mode == "scalar" {
+            String::new()
+        } else {
+            ratio(points, p.backend, p.workload, p.mode, "scalar")
                 .map(|s| format!("{}x", f(s, 2)))
                 .unwrap_or_default()
-        } else {
-            String::new()
         };
         table.row(&[
             p.backend.to_string(),
@@ -159,7 +244,8 @@ pub fn render(title: impl Into<String>, points: &[ProbePoint]) -> String {
     }
     table.note(
         "batched = bulk hash + depth-8 prefetch pipeline (alt bucket prefetched \
-         only on primary miss); scalar = hash + 2 dependent bucket reads per key. \
+         only on primary miss); batched-dyn = the same through &dyn BatchedFilter \
+         (trait-indirection probe); bloom rides the default scalar batch impls. \
          Negative lookups are the read path's short-circuit workload.",
     );
     table.markdown()
@@ -183,19 +269,32 @@ mod tests {
     #[test]
     fn arms_agree_and_cover_grid() {
         let points = measure(4_000, 4_000);
-        assert_eq!(points.len(), 8);
+        assert_eq!(points.len(), 16);
         for backend in ["flat", "packed"] {
             for workload in ["neg", "pos"] {
                 let arms: Vec<_> = points
                     .iter()
                     .filter(|p| p.backend == backend && p.workload == workload)
                     .collect();
-                assert_eq!(arms.len(), 2, "{backend}/{workload}");
-                assert_eq!(arms[0].hits, arms[1].hits, "{backend}/{workload}");
+                assert_eq!(arms.len(), 3, "{backend}/{workload}");
+                assert!(
+                    arms.windows(2).all(|w| w[0].hits == w[1].hits),
+                    "{backend}/{workload}"
+                );
                 assert!(speedup(&points, backend, workload).is_some());
+                assert!(dyn_overhead(&points, backend, workload).is_some());
             }
         }
-        // positive probes must actually hit
+        for workload in ["neg", "pos"] {
+            let arms: Vec<_> = points
+                .iter()
+                .filter(|p| p.backend == "bloom" && p.workload == workload)
+                .collect();
+            assert_eq!(arms.len(), 2, "bloom/{workload}");
+            assert_eq!(arms[0].hits, arms[1].hits, "bloom/{workload}");
+        }
+        // positive probes must actually hit (all three backends have
+        // zero false negatives)
         assert!(points
             .iter()
             .filter(|p| p.workload == "pos")
@@ -207,7 +306,9 @@ mod tests {
         let md = run(Scale(0.002));
         assert!(md.contains("E10"));
         assert!(md.contains("batched"));
+        assert!(md.contains("batched-dyn"));
         assert!(md.contains("| flat |"));
         assert!(md.contains("| packed |"));
+        assert!(md.contains("| bloom |"));
     }
 }

@@ -13,7 +13,7 @@
 //! the crate's `mix64`, so no extra hash family is needed.
 
 use super::fingerprint::mix64;
-use super::{FilterError, MembershipFilter};
+use super::{BatchedFilter, FilterError, MembershipFilter};
 
 /// Compute (m bits, k hashes) for `n` expected items at `fpr` target.
 pub fn optimal_params(n: usize, fpr: f64) -> (usize, u32) {
@@ -126,6 +126,12 @@ impl MembershipFilter for BloomFilter {
     }
 }
 
+/// Batch APIs come for free from the trait's scalar defaults — this is
+/// the capability-trait payoff: every batched consumer (store
+/// `get_batch`, pipeline, cluster fan-out) accepts a bloom baseline
+/// with zero bloom-specific code.
+impl BatchedFilter for BloomFilter {}
+
 /// Counting bloom filter: 4-bit saturating counters → delete support
 /// at 4× the bit-bloom footprint.
 #[derive(Debug, Clone)]
@@ -229,6 +235,9 @@ impl MembershipFilter for CountingBloomFilter {
     }
 }
 
+/// Default (scalar) batch implementations — see [`BloomFilter`]'s.
+impl BatchedFilter for CountingBloomFilter {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,6 +313,30 @@ mod tests {
         f.insert(1).unwrap();
         let miss = (100..100_000u64).find(|&k| !f.contains(k)).unwrap();
         assert!(!f.delete(miss));
+    }
+
+    #[test]
+    fn default_batch_apis_match_scalar() {
+        // the free batch surface: identical answers, positional results
+        let mut f = BloomFilter::new(5_000, 0.01, 7);
+        let keys: Vec<u64> = (0..3000).collect();
+        for r in f.insert_batch(&keys) {
+            r.unwrap();
+        }
+        let probes: Vec<u64> = (0..6000).collect();
+        let got = f.contains_batch(&probes);
+        for (&k, &b) in probes.iter().zip(&got) {
+            assert_eq!(b, f.contains(k), "key {k}");
+        }
+        // bloom can't delete: batched deletes all report false
+        assert!(f.delete_batch(&keys).iter().all(|&d| !d));
+
+        let mut c = CountingBloomFilter::new(5_000, 0.01, 7);
+        for r in c.insert_batch(&keys) {
+            r.unwrap();
+        }
+        assert!(c.delete_batch(&keys).iter().all(|&d| d));
+        assert_eq!(c.len(), 0);
     }
 
     #[test]

@@ -71,7 +71,7 @@ fn flat_lane_mask(s: &[u32; SLOTS], fp: u32) -> u32 {
 }
 
 /// Abstract fingerprint bucket storage.
-pub trait BucketTable: Clone {
+pub trait BucketTable: Clone + std::fmt::Debug {
     /// Construct with `nbuckets` buckets (any size ≥ 1; power-of-two
     /// tables get the faster xor index mapping — see
     /// [`super::fingerprint::Hasher::alt_index`]), storing fingerprints
@@ -553,7 +553,7 @@ mod tests {
         use crate::util::SplitMix64;
 
         /// A shadow backend that forces the slot-wise default impls.
-        #[derive(Clone)]
+        #[derive(Clone, Debug)]
         struct Naive(Vec<u32>, usize, u32);
         impl BucketTable for Naive {
             fn with_buckets(nb: usize, fp_bits: u32) -> Self {

@@ -1,0 +1,510 @@
+//! `FilterBuilder` — one validated construction path for every filter
+//! backend, selectable **by name**.
+//!
+//! Subsumes what used to be four parallel config surfaces
+//! (`CuckooParams`, `OcfConfig`, `ShardedOcfConfig`,
+//! `NodeConfig::filter_shards`): the builder carries the knob superset,
+//! validates it once, and builds whichever capability surface the
+//! consumer needs —
+//!
+//! * [`FilterBuilder::build`] → [`DynFilter`]
+//!   (`Box<dyn BatchedFilter + Send + Sync>`) for single-writer
+//!   consumers (the storage node, experiments, the serve CLI);
+//! * [`FilterBuilder::build_concurrent`] → `Box<dyn ConcurrentFilter>`
+//!   for shared-reference consumers (`ShardedOcf` natively when the
+//!   backend shards, a [`MutexFilter`] wrap otherwise);
+//! * typed builders ([`FilterBuilder::build_ocf`],
+//!   [`FilterBuilder::build_sharded`]) where a concrete type is needed
+//!   (the XLA-hashed pipeline, shard-aware drivers).
+//!
+//! Backend names (config `[filter] backend = "..."` / CLI
+//! `--set filter.backend=...` / [`FilterBuilder::named`]):
+//!
+//! | name | filter |
+//! |---|---|
+//! | `ocf`, `ocf-eof` | [`Ocf`] in EOF (congestion-aware) mode |
+//! | `ocf-pre` | [`Ocf`] with static thresholds |
+//! | `ocf-static` | [`Ocf`] with resizing disabled (traditional arm) |
+//! | `sharded`, `sharded-ocf` | [`ShardedOcf`] over `shards` lock stripes |
+//! | `cuckoo` | raw [`CuckooFilter`] on [`FlatTable`] |
+//! | `cuckoo-packed` | raw [`CuckooFilter`] on [`PackedTable`] |
+//! | `bloom` | [`BloomFilter`] sized for `capacity` keys at `bloom_fpr` |
+//! | `counting-bloom` | [`CountingBloomFilter`] (delete-capable, 4×) |
+//! | `scalable-bloom` | [`ScalableBloomFilter`] (grows, no deletes) |
+//!
+//! An OCF-family backend with `shards > 1` builds the sharded
+//! front-end (the old `NodeConfig::filter_shards` semantics);
+//! non-shardable backends reject `shards > 1` at validation.
+
+use super::bloom::{BloomFilter, CountingBloomFilter};
+use super::concurrent::{ConcurrentFilter, MutexFilter};
+use super::cuckoo::{CuckooFilter, CuckooParams, VictimPolicy};
+use super::ocf::{Mode, Ocf, OcfConfig};
+use super::scalable_bloom::{SbfParams, ScalableBloomFilter};
+use super::sharded::ShardedOcf;
+use super::{BatchedFilter, FlatTable, PackedTable};
+
+/// The boxed batched filter every dynamic backend builds down to.
+pub type DynFilter = Box<dyn BatchedFilter + Send + Sync>;
+
+/// Builder validation / construction errors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BuilderError {
+    /// `backend` string not recognised.
+    UnknownBackend(String),
+    /// A knob (or knob combination) failed validation.
+    Invalid(String),
+}
+
+impl std::fmt::Display for BuilderError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuilderError::UnknownBackend(name) => write!(
+                f,
+                "unknown filter backend '{name}' (try: {})",
+                FilterBackend::NAMES.join(" ")
+            ),
+            BuilderError::Invalid(msg) => write!(f, "invalid filter config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for BuilderError {}
+
+/// Which filter family to construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FilterBackend {
+    /// [`Ocf`] — mode taken from the builder's [`OcfConfig`].
+    Ocf,
+    /// Raw [`CuckooFilter`] on the flat (one-`u32`-per-slot) table.
+    Cuckoo,
+    /// Raw [`CuckooFilter`] on the SWAR bit-packed table.
+    CuckooPacked,
+    /// Classic k-hash bloom (no deletes).
+    Bloom,
+    /// 4-bit counting bloom (delete-capable).
+    CountingBloom,
+    /// Scalable bloom (grows, no deletes).
+    ScalableBloom,
+}
+
+impl FilterBackend {
+    /// Every name [`FilterBuilder::named`] accepts.
+    pub const NAMES: &'static [&'static str] = &[
+        "ocf",
+        "ocf-eof",
+        "ocf-pre",
+        "ocf-static",
+        "sharded",
+        "sharded-ocf",
+        "cuckoo",
+        "cuckoo-packed",
+        "bloom",
+        "counting-bloom",
+        "scalable-bloom",
+    ];
+
+    /// Can this backend run under the sharded OCF front-end?
+    pub fn shardable(&self) -> bool {
+        matches!(self, FilterBackend::Ocf)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FilterBackend::Ocf => "ocf",
+            FilterBackend::Cuckoo => "cuckoo",
+            FilterBackend::CuckooPacked => "cuckoo-packed",
+            FilterBackend::Bloom => "bloom",
+            FilterBackend::CountingBloom => "counting-bloom",
+            FilterBackend::ScalableBloom => "scalable-bloom",
+        }
+    }
+}
+
+/// The unified filter construction surface. Fields are public (it is a
+/// config struct — the store/cluster/experiments mutate them with
+/// struct-update syntax); [`FilterBuilder::validate`] runs on every
+/// `build*`, so an invalid combination cannot construct a filter.
+#[derive(Debug, Clone)]
+pub struct FilterBuilder {
+    /// Filter family to build.
+    pub backend: FilterBackend,
+    /// The knob superset shared by the cuckoo/OCF family: capacity,
+    /// fingerprint width, seed, displacement budget, mode and resize
+    /// bands. Bloom backends use `initial_capacity`, `seed` (and
+    /// `bloom_fpr` below) from here.
+    pub ocf: OcfConfig,
+    /// Lock stripes for the concurrent front-end: 1 = unsharded;
+    /// `> 1` (OCF backend only) builds [`ShardedOcf`], rounded up to a
+    /// power of two.
+    pub shards: usize,
+    /// Target false-positive rate for the bloom family.
+    pub bloom_fpr: f64,
+    /// Victim policy for the **raw cuckoo** backends (the OCF family
+    /// always uses `Rollback` internally — see `OcfConfig`).
+    pub victim_policy: VictimPolicy,
+}
+
+impl Default for FilterBuilder {
+    fn default() -> Self {
+        Self {
+            backend: FilterBackend::Ocf,
+            ocf: OcfConfig::default(),
+            shards: 1,
+            bloom_fpr: 0.01,
+            victim_policy: VictimPolicy::Stash,
+        }
+    }
+}
+
+impl From<OcfConfig> for FilterBuilder {
+    /// An OCF config *is* a builder (the migration path for every
+    /// pre-v2 `NodeConfig { filter: OcfConfig { .. } }` call site).
+    fn from(ocf: OcfConfig) -> Self {
+        Self {
+            ocf,
+            ..Self::default()
+        }
+    }
+}
+
+impl FilterBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder for a backend selected by name (see the module docs for
+    /// the name table). Mode-qualified OCF names set `ocf.mode`.
+    pub fn named(name: &str) -> Result<Self, BuilderError> {
+        let mut b = Self::default();
+        b.set_backend(name)?;
+        Ok(b)
+    }
+
+    /// Re-point an existing builder at a (possibly mode- or
+    /// shard-qualified) backend name, keeping every other knob.
+    pub fn set_backend(&mut self, name: &str) -> Result<&mut Self, BuilderError> {
+        match name {
+            "ocf" => self.backend = FilterBackend::Ocf,
+            "ocf-eof" => {
+                self.backend = FilterBackend::Ocf;
+                self.ocf.mode = Mode::Eof;
+            }
+            "ocf-pre" => {
+                self.backend = FilterBackend::Ocf;
+                self.ocf.mode = Mode::Pre;
+            }
+            "ocf-static" => {
+                self.backend = FilterBackend::Ocf;
+                self.ocf.mode = Mode::Static;
+            }
+            "sharded" | "sharded-ocf" => {
+                self.backend = FilterBackend::Ocf;
+                if self.shards <= 1 {
+                    self.shards = 4;
+                }
+            }
+            "cuckoo" => self.backend = FilterBackend::Cuckoo,
+            "cuckoo-packed" => self.backend = FilterBackend::CuckooPacked,
+            "bloom" => self.backend = FilterBackend::Bloom,
+            "counting-bloom" => self.backend = FilterBackend::CountingBloom,
+            "scalable-bloom" => self.backend = FilterBackend::ScalableBloom,
+            other => return Err(BuilderError::UnknownBackend(other.to_string())),
+        }
+        Ok(self)
+    }
+
+    // ---- fluent knobs (struct-update syntax works too) ----
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn with_initial_capacity(mut self, capacity: usize) -> Self {
+        self.ocf.initial_capacity = capacity;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: Mode) -> Self {
+        self.ocf.mode = mode;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.ocf.seed = seed;
+        self
+    }
+
+    pub fn with_fp_bits(mut self, fp_bits: u32) -> Self {
+        self.ocf.fp_bits = fp_bits;
+        self
+    }
+
+    pub fn with_bloom_fpr(mut self, fpr: f64) -> Self {
+        self.bloom_fpr = fpr;
+        self
+    }
+
+    /// Display name of what `build` would construct ("ocf-eof",
+    /// "sharded-ocf", "bloom", ...).
+    pub fn describe(&self) -> &'static str {
+        match self.backend {
+            FilterBackend::Ocf if self.shards > 1 => "sharded-ocf",
+            FilterBackend::Ocf => match self.ocf.mode {
+                Mode::Pre => "ocf-pre",
+                Mode::Eof => "ocf-eof",
+                Mode::Static => "ocf-static",
+            },
+            other => other.as_str(),
+        }
+    }
+
+    /// The raw-cuckoo parameter view of the shared knobs.
+    pub fn cuckoo_params(&self) -> CuckooParams {
+        CuckooParams {
+            capacity: self.ocf.initial_capacity,
+            fp_bits: self.ocf.fp_bits,
+            max_displacements: self.ocf.max_displacements,
+            seed: self.ocf.seed,
+            victim_policy: self.victim_policy,
+        }
+    }
+
+    /// Validate the knob combination without building.
+    pub fn validate(&self) -> Result<(), BuilderError> {
+        let inv = |msg: String| Err(BuilderError::Invalid(msg));
+        let c = &self.ocf;
+        if !(1..=32).contains(&c.fp_bits) {
+            return inv(format!("fp_bits must be in 1..=32, got {}", c.fp_bits));
+        }
+        if c.initial_capacity == 0 {
+            return inv("initial_capacity must be > 0".into());
+        }
+        if c.max_displacements == 0 {
+            return inv("max_displacements must be > 0".into());
+        }
+        if c.o_min.is_nan() || c.o_max.is_nan() || c.o_min <= 0.0 || c.o_min >= c.o_max
+            || c.o_max >= 1.0
+        {
+            return inv(format!(
+                "resize band must satisfy 0 < o_min < o_max < 1, got [{}, {}]",
+                c.o_min, c.o_max
+            ));
+        }
+        if c.k_min.is_nan() || c.k_max.is_nan() || c.k_min >= c.k_max {
+            return inv(format!(
+                "K markers must satisfy k_min < k_max, got [{}, {}]",
+                c.k_min, c.k_max
+            ));
+        }
+        if c.g.is_nan() || c.g <= 0.0 || c.g > 1.0 {
+            return inv(format!("estimation gain g must be in (0, 1], got {}", c.g));
+        }
+        if c.safe_load.is_nan() || c.safe_load <= 0.0 || c.safe_load > 1.0 {
+            return inv(format!("safe_load must be in (0, 1], got {}", c.safe_load));
+        }
+        if let Some(max) = c.max_capacity {
+            if max < c.min_capacity {
+                return inv(format!(
+                    "max_capacity {max} below min_capacity {}",
+                    c.min_capacity
+                ));
+            }
+        }
+        if !(1..=1024).contains(&self.shards) {
+            return inv(format!("shards must be in 1..=1024, got {}", self.shards));
+        }
+        if self.shards > 1 && !self.backend.shardable() {
+            return inv(format!(
+                "backend '{}' cannot shard (the sharded front-end wraps the OCF \
+                 family); set shards = 1 or backend = \"sharded\"",
+                self.backend.as_str()
+            ));
+        }
+        if self.bloom_fpr.is_nan() || self.bloom_fpr <= 0.0 || self.bloom_fpr >= 1.0 {
+            return inv(format!(
+                "bloom_fpr must be in (0, 1), got {}",
+                self.bloom_fpr
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build the batched (single-writer) surface.
+    pub fn build(&self) -> Result<DynFilter, BuilderError> {
+        self.validate()?;
+        Ok(match self.backend {
+            FilterBackend::Ocf if self.shards > 1 => {
+                Box::new(ShardedOcf::with_shards(self.shards, self.ocf))
+            }
+            FilterBackend::Ocf => Box::new(Ocf::new(self.ocf)),
+            FilterBackend::Cuckoo => {
+                Box::new(CuckooFilter::<FlatTable>::new(self.cuckoo_params()))
+            }
+            FilterBackend::CuckooPacked => {
+                Box::new(CuckooFilter::<PackedTable>::new(self.cuckoo_params()))
+            }
+            FilterBackend::Bloom => Box::new(BloomFilter::new(
+                self.ocf.initial_capacity,
+                self.bloom_fpr,
+                self.ocf.seed,
+            )),
+            FilterBackend::CountingBloom => Box::new(CountingBloomFilter::new(
+                self.ocf.initial_capacity,
+                self.bloom_fpr,
+                self.ocf.seed,
+            )),
+            FilterBackend::ScalableBloom => Box::new(ScalableBloomFilter::new(
+                SbfParams {
+                    initial_capacity: self.ocf.initial_capacity,
+                    fpr: self.bloom_fpr,
+                    ..SbfParams::default()
+                },
+                self.ocf.seed,
+            )),
+        })
+    }
+
+    /// Build the shared-reference (`&self`) surface: [`ShardedOcf`]
+    /// natively when the backend shards, a [`MutexFilter`] wrap of the
+    /// batched build otherwise.
+    pub fn build_concurrent(&self) -> Result<Box<dyn ConcurrentFilter>, BuilderError> {
+        self.validate()?;
+        if self.backend == FilterBackend::Ocf && self.shards > 1 {
+            return Ok(Box::new(ShardedOcf::with_shards(self.shards, self.ocf)));
+        }
+        Ok(Box::new(MutexFilter::new(self.build()?)))
+    }
+
+    /// Build a concrete (unsharded) [`Ocf`] — for consumers that need
+    /// the triple-level `_hashed` surface (the XLA-hashed pipeline).
+    pub fn build_ocf(&self) -> Result<Ocf, BuilderError> {
+        self.validate()?;
+        match self.backend {
+            FilterBackend::Ocf => Ok(Ocf::new(self.ocf)),
+            other => Err(BuilderError::Invalid(format!(
+                "build_ocf on backend '{}'",
+                other.as_str()
+            ))),
+        }
+    }
+
+    /// Build a concrete [`ShardedOcf`] (shard count from `shards`,
+    /// minimum 1 — a one-shard front-end is valid and lock-compatible).
+    pub fn build_sharded(&self) -> Result<ShardedOcf, BuilderError> {
+        self.validate()?;
+        match self.backend {
+            FilterBackend::Ocf => Ok(ShardedOcf::with_shards(self.shards, self.ocf)),
+            other => Err(BuilderError::Invalid(format!(
+                "build_sharded on backend '{}'",
+                other.as_str()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::MembershipFilter;
+
+    #[test]
+    fn every_name_builds() {
+        for name in FilterBackend::NAMES {
+            let b = FilterBuilder::named(name).unwrap();
+            let f = b.build().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(f.is_empty(), "{name}");
+            let c = b
+                .build_concurrent()
+                .unwrap_or_else(|e| panic!("{name} concurrent: {e}"));
+            assert_eq!(c.len(), 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        let err = FilterBuilder::named("warp-filter").unwrap_err();
+        assert!(matches!(err, BuilderError::UnknownBackend(_)));
+        assert!(err.to_string().contains("warp-filter"));
+    }
+
+    #[test]
+    fn mode_qualified_names_set_mode() {
+        assert_eq!(
+            FilterBuilder::named("ocf-pre").unwrap().ocf.mode,
+            Mode::Pre
+        );
+        assert_eq!(
+            FilterBuilder::named("ocf-static").unwrap().ocf.mode,
+            Mode::Static
+        );
+        let sharded = FilterBuilder::named("sharded").unwrap();
+        assert!(sharded.shards > 1);
+        assert_eq!(sharded.describe(), "sharded-ocf");
+    }
+
+    #[test]
+    fn validation_catches_bad_knobs() {
+        let bad = |f: fn(&mut FilterBuilder)| {
+            let mut b = FilterBuilder::default();
+            f(&mut b);
+            b.validate().unwrap_err()
+        };
+        bad(|b| b.ocf.fp_bits = 0);
+        bad(|b| b.ocf.fp_bits = 33);
+        bad(|b| b.ocf.initial_capacity = 0);
+        bad(|b| b.ocf.o_min = 0.9); // o_min >= o_max
+        bad(|b| b.shards = 0);
+        bad(|b| b.shards = 2048);
+        bad(|b| b.bloom_fpr = 0.0);
+        bad(|b| {
+            b.backend = FilterBackend::Bloom;
+            b.shards = 4; // bloom cannot shard
+        });
+    }
+
+    #[test]
+    fn shards_build_sharded_front_end() {
+        let b = FilterBuilder::from(OcfConfig {
+            initial_capacity: 8192,
+            ..OcfConfig::default()
+        })
+        .with_shards(4);
+        let mut f = b.build().unwrap();
+        assert_eq!(f.name(), "sharded-ocf");
+        for k in 0..1000u64 {
+            f.insert(k).unwrap();
+        }
+        assert_eq!(f.len(), 1000);
+        assert_eq!(f.exact_len(), Some(1000));
+        let c = b.build_sharded().unwrap();
+        assert_eq!(c.shard_count(), 4);
+    }
+
+    #[test]
+    fn ocf_config_conversion_keeps_knobs() {
+        let b: FilterBuilder = OcfConfig {
+            mode: Mode::Pre,
+            initial_capacity: 12345,
+            fp_bits: 12,
+            ..OcfConfig::default()
+        }
+        .into();
+        assert_eq!(b.describe(), "ocf-pre");
+        assert_eq!(b.ocf.initial_capacity, 12345);
+        assert_eq!(b.cuckoo_params().fp_bits, 12);
+        let f = b.build().unwrap();
+        assert_eq!(f.name(), "ocf-pre");
+    }
+
+    #[test]
+    fn typed_builders_enforce_backend() {
+        assert!(FilterBuilder::named("bloom").unwrap().build_ocf().is_err());
+        assert!(FilterBuilder::named("cuckoo")
+            .unwrap()
+            .build_sharded()
+            .is_err());
+        assert!(FilterBuilder::named("ocf").unwrap().build_ocf().is_ok());
+    }
+}

@@ -1,0 +1,355 @@
+//! `ConcurrentFilter` — the shared-reference capability: filters that
+//! many threads can drive through `&self`.
+//!
+//! [`ShardedOcf`](super::ShardedOcf) implements it natively (lock
+//! stripes per shard, batched ops grouped by shard and applied under
+//! one lock acquisition each). Any [`BatchedFilter`] can join the
+//! concurrent world through the [`MutexFilter`] adapter — a single
+//! coarse lock, so it serializes writers, but it makes every backend
+//! (bloom included) valid anywhere a `ConcurrentFilter` is expected;
+//! the builder's [`build_concurrent`](super::FilterBuilder::build_concurrent)
+//! uses it for every non-sharded backend.
+//!
+//! Method names mirror [`MembershipFilter`](super::MembershipFilter)/
+//! [`BatchedFilter`] on purpose: generic code reads identically over
+//! either world, only the
+//! receiver mutability changes. (A type implementing both families —
+//! `ShardedOcf` — keeps same-named *inherent* methods, so concrete
+//! call sites never hit trait-method ambiguity.)
+
+use super::metrics::FilterStats;
+use super::session::ProbeSession;
+use super::{BatchedFilter, FilterError};
+use std::sync::Mutex;
+
+/// A membership filter safe to share across threads: every operation,
+/// including mutation, takes `&self`. Object-safe; `Send + Sync` is a
+/// supertrait so `Box<dyn ConcurrentFilter>` can cross threads.
+pub trait ConcurrentFilter: Send + Sync {
+    /// Add a key (interior locking).
+    fn insert(&self, key: u64) -> Result<(), FilterError>;
+
+    /// Membership test (may be a false positive, never a false
+    /// negative for a resident key).
+    fn contains(&self, key: u64) -> bool;
+
+    /// Remove a key; returns whether something was removed.
+    fn delete(&self, key: u64) -> bool;
+
+    /// Stored items (aggregated across any internal shards).
+    fn len(&self) -> usize;
+
+    /// Slot capacity (aggregated).
+    fn capacity(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Occupancy `len / capacity`.
+    fn occupancy(&self) -> f64 {
+        if self.capacity() == 0 {
+            0.0
+        } else {
+            self.len() as f64 / self.capacity() as f64
+        }
+    }
+
+    /// Filter heap bytes (excludes keystores).
+    fn memory_bytes(&self) -> usize;
+
+    /// Merged operation counters.
+    fn stats(&self) -> FilterStats {
+        FilterStats::new()
+    }
+
+    /// Short display name ("sharded-ocf", "mutex<bloom>", ...).
+    fn name(&self) -> &'static str;
+
+    /// Exact membership via an authoritative key store, when present
+    /// (see [`MembershipFilter::contains_exact`](super::MembershipFilter::contains_exact)).
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        let _ = key;
+        None
+    }
+
+    // ---- batched forms (defaults: scalar loops) ----
+
+    /// Batched membership appended positionally to `out`.
+    fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        let _ = session;
+        out.extend(keys.iter().map(|&k| self.contains(k)));
+    }
+
+    /// Batched insert appended positionally to `out`.
+    fn insert_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        let _ = session;
+        out.extend(keys.iter().map(|&k| self.insert(k)));
+    }
+
+    /// Batched delete appended positionally to `out`.
+    fn delete_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        let _ = session;
+        out.extend(keys.iter().map(|&k| self.delete(k)));
+    }
+
+    /// [`ConcurrentFilter::contains_batch_into`] into a fresh vec.
+    fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
+        let mut session = ProbeSession::new();
+        let mut out = Vec::with_capacity(keys.len());
+        self.contains_batch_into(keys, &mut session, &mut out);
+        out
+    }
+
+    /// [`ConcurrentFilter::insert_batch_into`] into a fresh vec.
+    fn insert_batch(&self, keys: &[u64]) -> Vec<Result<(), FilterError>> {
+        let mut session = ProbeSession::new();
+        let mut out = Vec::with_capacity(keys.len());
+        self.insert_batch_into(keys, &mut session, &mut out);
+        out
+    }
+
+    /// [`ConcurrentFilter::delete_batch_into`] into a fresh vec.
+    fn delete_batch(&self, keys: &[u64]) -> Vec<bool> {
+        let mut session = ProbeSession::new();
+        let mut out = Vec::with_capacity(keys.len());
+        self.delete_batch_into(keys, &mut session, &mut out);
+        out
+    }
+}
+
+impl<C: ConcurrentFilter + ?Sized> ConcurrentFilter for Box<C> {
+    fn insert(&self, key: u64) -> Result<(), FilterError> {
+        (**self).insert(key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        (**self).contains(key)
+    }
+    fn delete(&self, key: u64) -> bool {
+        (**self).delete(key)
+    }
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+    fn capacity(&self) -> usize {
+        (**self).capacity()
+    }
+    fn is_empty(&self) -> bool {
+        (**self).is_empty()
+    }
+    fn occupancy(&self) -> f64 {
+        (**self).occupancy()
+    }
+    fn memory_bytes(&self) -> usize {
+        (**self).memory_bytes()
+    }
+    fn stats(&self) -> FilterStats {
+        (**self).stats()
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        (**self).contains_exact(key)
+    }
+    fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        (**self).contains_batch_into(keys, session, out)
+    }
+    fn insert_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        (**self).insert_batch_into(keys, session, out)
+    }
+    fn delete_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        (**self).delete_batch_into(keys, session, out)
+    }
+}
+
+/// Coarse-lock adapter: any [`BatchedFilter`] behind one `Mutex`.
+///
+/// Writers serialize, but batched calls amortize the lock the same way
+/// the sharded front-end amortizes its stripes — one acquisition per
+/// batch, with the engine (when the inner filter has one) running under
+/// the lock. This is the "always works" arm of the concurrent world;
+/// use [`ShardedOcf`](super::ShardedOcf) when write scaling matters.
+#[derive(Debug, Default)]
+pub struct MutexFilter<F> {
+    inner: Mutex<F>,
+}
+
+impl<F: BatchedFilter + Send> MutexFilter<F> {
+    pub fn new(inner: F) -> Self {
+        Self {
+            inner: Mutex::new(inner),
+        }
+    }
+
+    /// Consume the adapter, returning the inner filter.
+    pub fn into_inner(self) -> F {
+        self.inner.into_inner().unwrap()
+    }
+
+    /// Run `f` with exclusive access to the inner filter under one lock
+    /// acquisition.
+    pub fn with_inner<R>(&self, f: impl FnOnce(&mut F) -> R) -> R {
+        let mut guard = self.inner.lock().unwrap();
+        f(&mut guard)
+    }
+}
+
+impl<F: BatchedFilter + Send> ConcurrentFilter for MutexFilter<F> {
+    fn insert(&self, key: u64) -> Result<(), FilterError> {
+        self.inner.lock().unwrap().insert(key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().contains(key)
+    }
+    fn delete(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().delete(key)
+    }
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+    fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity()
+    }
+    fn occupancy(&self) -> f64 {
+        self.inner.lock().unwrap().occupancy()
+    }
+    fn memory_bytes(&self) -> usize {
+        self.inner.lock().unwrap().memory_bytes()
+    }
+    fn stats(&self) -> FilterStats {
+        self.inner.lock().unwrap().stats()
+    }
+    fn name(&self) -> &'static str {
+        "mutex"
+    }
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        self.inner.lock().unwrap().contains_exact(key)
+    }
+    fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        self.inner
+            .lock()
+            .unwrap()
+            .contains_batch_into(keys, session, out)
+    }
+    fn insert_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        self.inner
+            .lock()
+            .unwrap()
+            .insert_batch_into(keys, session, out)
+    }
+    fn delete_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        self.inner
+            .lock()
+            .unwrap()
+            .delete_batch_into(keys, session, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::{Mode, Ocf, OcfConfig};
+    use std::sync::Arc;
+
+    fn mutexed() -> MutexFilter<Ocf> {
+        MutexFilter::new(Ocf::new(OcfConfig {
+            mode: Mode::Eof,
+            initial_capacity: 2048,
+            ..OcfConfig::default()
+        }))
+    }
+
+    #[test]
+    fn mutex_adapter_roundtrip() {
+        let f = mutexed();
+        let keys: Vec<u64> = (0..5000).collect();
+        for r in ConcurrentFilter::insert_batch(&f, &keys) {
+            r.unwrap();
+        }
+        assert_eq!(ConcurrentFilter::len(&f), 5000);
+        assert!(ConcurrentFilter::contains_batch(&f, &keys)
+            .iter()
+            .all(|&b| b));
+        assert_eq!(f.contains_exact(17), Some(true));
+        assert_eq!(f.contains_exact(1 << 40), Some(false));
+        let deleted = ConcurrentFilter::delete_batch(&f, &keys);
+        assert!(deleted.iter().all(|&d| d));
+        assert!(ConcurrentFilter::is_empty(&f));
+        assert_eq!(ConcurrentFilter::stats(&f).deletes, 5000);
+    }
+
+    #[test]
+    fn mutex_adapter_concurrent_writers() {
+        let f = Arc::new(mutexed());
+        let nthreads = 4u64;
+        let per = 5_000u64;
+        std::thread::scope(|s| {
+            for t in 0..nthreads {
+                let f = Arc::clone(&f);
+                s.spawn(move || {
+                    let keys: Vec<u64> = (t * per..(t + 1) * per).collect();
+                    for r in ConcurrentFilter::insert_batch(&*f, &keys) {
+                        r.unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(ConcurrentFilter::len(&*f), (nthreads * per) as usize);
+    }
+
+    #[test]
+    fn boxed_concurrent_filter_delegates() {
+        let f: Box<dyn ConcurrentFilter> = Box::new(mutexed());
+        f.insert(9).unwrap();
+        assert!(f.contains(9));
+        assert_eq!(f.contains_exact(9), Some(true));
+        assert!(f.delete(9));
+        assert_eq!(f.len(), 0);
+    }
+}

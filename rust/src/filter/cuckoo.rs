@@ -19,7 +19,8 @@
 use super::bucket::{BucketTable, FlatTable, SLOTS};
 use super::fingerprint::{Hasher, HashTriple};
 use super::metrics::FilterStats;
-use super::{FilterError, MembershipFilter};
+use super::session::ProbeSession;
+use super::{BatchedFilter, FilterError, MembershipFilter};
 use crate::util::SplitMix64;
 use std::collections::VecDeque;
 
@@ -320,12 +321,6 @@ impl<T: BucketTable> CuckooFilter<T> {
         out
     }
 
-    /// Batched membership: bulk-hash then pipeline the probes.
-    /// Bit-identical to calling [`MembershipFilter::contains`] per key.
-    pub fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
-        self.contains_triples(&self.hasher.hash_batch(keys))
-    }
-
     /// Prefetch the primary bucket of `t` (the insert pipeline issues
     /// these ahead of the matching [`CuckooFilter::insert_triple`]).
     #[inline(always)]
@@ -334,24 +329,20 @@ impl<T: BucketTable> CuckooFilter<T> {
             .prefetch_bucket(Hasher::primary_index(t, self.table.nbuckets()));
     }
 
-    /// Batched insert: bulk-hash once, then insert sequentially with
-    /// the primary bucket of key `i + PREFETCH_DEPTH` prefetched while
-    /// key `i` inserts. Results are positionally aligned with `keys`
-    /// and bit-identical to a scalar insert loop (inserts mutate, so
-    /// they are pipelined on the fetch side only — application order is
-    /// preserved exactly, including eviction-walk RNG draws).
-    pub fn insert_batch(&mut self, keys: &[u64]) -> Vec<Result<(), FilterError>> {
-        let triples = self.hasher.hash_batch(keys);
-        triples
-            .iter()
-            .enumerate()
-            .map(|(i, &t)| {
-                if let Some(&ahead) = triples.get(i + PREFETCH_DEPTH) {
-                    self.prefetch_primary(ahead);
-                }
-                self.insert_triple(t)
-            })
-            .collect()
+    /// Batched unverified delete over pre-hashed triples, appended to
+    /// `out` positionally. Deletes mutate, so (like inserts) only the
+    /// fetch side is pipelined: the primary bucket of triple
+    /// `i + PREFETCH_DEPTH` is prefetched while triple `i` applies;
+    /// application order — and therefore victim-cache re-homing — is
+    /// bit-identical to a scalar [`CuckooFilter::delete_triple`] loop.
+    pub fn delete_triples_into(&mut self, triples: &[HashTriple], out: &mut Vec<bool>) {
+        out.reserve(triples.len());
+        for (i, &t) in triples.iter().enumerate() {
+            if let Some(&ahead) = triples.get(i + PREFETCH_DEPTH) {
+                self.prefetch_primary(ahead);
+            }
+            out.push(self.delete_triple(t));
+        }
     }
 
     /// Unverified delete of a pre-hashed triple (the unsafe primitive).
@@ -423,6 +414,58 @@ impl<T: BucketTable> MembershipFilter for CuckooFilter<T> {
 
     fn name(&self) -> &'static str {
         "cuckoo"
+    }
+
+    fn stats(&self) -> FilterStats {
+        self.stats.clone()
+    }
+}
+
+/// The probe-engine overrides: bulk hashing lands in the session's
+/// triple buffer (no per-call allocation), lookups run the
+/// prefetch-pipelined [`CuckooFilter::contains_triples_into`], and
+/// mutations pipeline their bucket fetches [`PREFETCH_DEPTH`] ahead.
+/// All three are bit-identical to the scalar trait defaults (proptests
+/// P11/P12).
+impl<T: BucketTable> BatchedFilter for CuckooFilter<T> {
+    fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        self.contains_triples_into(&session.triples, out);
+    }
+
+    fn insert_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let triples = &session.triples;
+        out.reserve(triples.len());
+        for (i, &t) in triples.iter().enumerate() {
+            if let Some(&ahead) = triples.get(i + PREFETCH_DEPTH) {
+                self.prefetch_primary(ahead);
+            }
+            out.push(self.insert_triple(t));
+        }
+    }
+
+    fn delete_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        self.delete_triples_into(&session.triples, out);
     }
 }
 

@@ -16,8 +16,38 @@
 //! * [`BloomFilter`], [`CountingBloomFilter`], [`ScalableBloomFilter`],
 //!   [`XorFilter`] — the baselines the paper positions against.
 //!
-//! All dynamic filters implement [`MembershipFilter`], so experiment
-//! drivers and the store layer are generic over the filter choice.
+//! ## The capability-trait family (Filter API v2)
+//!
+//! Consumers never dispatch on concrete filter types; they bound (or
+//! box) one of three layered capability traits:
+//!
+//! * [`MembershipFilter`] — the scalar core: `insert`/`contains`/
+//!   `delete` plus sizing, memory and stats accessors, and *capability
+//!   probes* ([`MembershipFilter::contains_exact`],
+//!   [`MembershipFilter::exact_len`]) that expose an authoritative key
+//!   store when the filter carries one (OCF's verified-delete
+//!   machinery) without forcing one on filters that don't (bloom).
+//! * [`BatchedFilter`] `: MembershipFilter` — the amortized-probe
+//!   surface: `contains_batch_into` / `insert_batch_into` /
+//!   `delete_batch_into` writing into caller-owned output vectors with
+//!   a reusable [`ProbeSession`] holding the scratch (zero allocations
+//!   per call in steady state). Every method has a **default scalar
+//!   implementation**, so baselines (bloom/counting/scalable) get batch
+//!   APIs for free; [`CuckooFilter`], [`Ocf`] and [`ShardedOcf`]
+//!   override them with the prefetch-pipelined probe engine. Proptest
+//!   P12 pins default == override bit-identical.
+//! * [`ConcurrentFilter`] — the shared-reference surface (`&self`
+//!   insert/contains/delete + the same batched forms), implemented by
+//!   [`ShardedOcf`] natively and by the [`MutexFilter`] adapter for any
+//!   `BatchedFilter`.
+//!
+//! All three are object-safe; [`FilterBuilder`] selects any backend *by
+//! name* ("ocf-eof", "sharded", "bloom", …) and builds `Box<dyn
+//! BatchedFilter + Send + Sync>` ([`DynFilter`]) or
+//! `Box<dyn ConcurrentFilter>`, which is how the store, the config
+//! layer and the CLI pick filters at runtime. See
+//! `rust/src/filter/README.md` for the migration table from the old
+//! inherent-method API.
 //!
 //! ## The batched probe engine
 //!
@@ -74,6 +104,8 @@
 
 pub mod bloom;
 pub mod bucket;
+pub mod builder;
+pub mod concurrent;
 pub mod cuckoo;
 pub mod eof;
 pub mod fingerprint;
@@ -84,11 +116,14 @@ pub mod policy;
 pub mod pre;
 pub mod resize;
 pub mod scalable_bloom;
+pub mod session;
 pub mod sharded;
 pub mod xor;
 
 pub use bloom::{BloomFilter, CountingBloomFilter};
 pub use bucket::{BucketTable, FlatTable, PackedTable, SLOTS};
+pub use builder::{BuilderError, DynFilter, FilterBackend, FilterBuilder};
+pub use concurrent::{ConcurrentFilter, MutexFilter};
 pub use cuckoo::{CuckooFilter, CuckooParams, VictimPolicy, PREFETCH_DEPTH};
 pub use eof::EofPolicy;
 pub use fingerprint::{mix32, mix64, Hasher, HashTriple};
@@ -98,6 +133,7 @@ pub use ocf::{Mode, Ocf, OcfConfig};
 pub use policy::{FilterEvent, Occupancy, ResizeDecision, ResizePolicy};
 pub use pre::PrePolicy;
 pub use scalable_bloom::ScalableBloomFilter;
+pub use session::{ProbeSession, ShardScratch};
 pub use sharded::{ShardedOcf, ShardedOcfConfig};
 pub use xor::XorFilter;
 
@@ -127,7 +163,11 @@ impl std::error::Error for FilterError {}
 
 /// Common interface over all *dynamic* membership filters (xor is
 /// build-once and only implements lookup).
-pub trait MembershipFilter {
+///
+/// `Debug` is a supertrait so trait objects stay embeddable in
+/// `#[derive(Debug)]` aggregates (the storage node holds a
+/// [`DynFilter`]).
+pub trait MembershipFilter: std::fmt::Debug {
     /// Add a key. Filters with resize policies may grow; fixed-capacity
     /// filters return [`FilterError::Full`].
     fn insert(&mut self, key: u64) -> Result<(), FilterError>;
@@ -166,4 +206,185 @@ pub trait MembershipFilter {
 
     /// Short display name for reports ("cuckoo", "ocf-eof", ...).
     fn name(&self) -> &'static str;
+
+    // ---- capability probes (default: capability absent) ----
+
+    /// Exact (non-probabilistic) membership via an authoritative key
+    /// store, when the filter carries one. `None` means the capability
+    /// is absent (bloom family, raw cuckoo) and the caller must consult
+    /// its own ground truth; `Some(b)` is an exact answer (OCF family).
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        let _ = key;
+        None
+    }
+
+    /// Exact count of distinct live keys, when an authoritative key
+    /// store tracks it. `None` for filters whose `len()` is only an
+    /// operation count (bloom counts inserts, including duplicates).
+    fn exact_len(&self) -> Option<usize> {
+        None
+    }
+
+    /// Heap bytes of the authoritative key store backing
+    /// [`MembershipFilter::contains_exact`] (0 when the capability is
+    /// absent; reported separately from [`MembershipFilter::memory_bytes`]
+    /// to match the paper's filter-only memory accounting).
+    fn keystore_bytes(&self) -> usize {
+        0
+    }
+
+    /// Merged operation counters, when tracked (default: empty stats).
+    fn stats(&self) -> FilterStats {
+        FilterStats::new()
+    }
+}
+
+/// The amortized-probe capability: batched mutation/lookup writing into
+/// caller-owned buffers, with a reusable [`ProbeSession`] carrying the
+/// scratch (see `session.rs` for the zero-allocation reuse pattern).
+///
+/// Every method has a **default scalar implementation** in terms of
+/// [`MembershipFilter`], so `impl BatchedFilter for MyFilter {}` is all
+/// a new backend needs to join every batched consumer (the store's
+/// `get_batch`, the ingest pipeline, the cluster's batched read
+/// fan-out). Engine-backed filters override the `_into` methods with
+/// the prefetch-pipelined probe engine; results MUST stay bit-identical
+/// to the scalar defaults (pinned by proptests P11/P12).
+///
+/// Batched results are appended to `out` positionally aligned with
+/// `keys` (pre-existing contents of `out` are preserved).
+pub trait BatchedFilter: MembershipFilter {
+    /// Batched membership; appends `keys.len()` answers to `out`.
+    fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        let _ = session;
+        out.extend(keys.iter().map(|&k| self.contains(k)));
+    }
+
+    /// Batched insert; appends `keys.len()` results to `out`.
+    fn insert_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        let _ = session;
+        out.extend(keys.iter().map(|&k| self.insert(k)));
+    }
+
+    /// Batched delete; appends `keys.len()` answers to `out`.
+    fn delete_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        let _ = session;
+        out.extend(keys.iter().map(|&k| self.delete(k)));
+    }
+
+    // ---- allocating convenience wrappers ----
+
+    /// [`BatchedFilter::contains_batch_into`] into a fresh vec (a
+    /// throwaway session; hot loops should reuse one instead).
+    fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
+        let mut session = ProbeSession::new();
+        let mut out = Vec::with_capacity(keys.len());
+        self.contains_batch_into(keys, &mut session, &mut out);
+        out
+    }
+
+    /// [`BatchedFilter::insert_batch_into`] into a fresh vec.
+    fn insert_batch(&mut self, keys: &[u64]) -> Vec<Result<(), FilterError>> {
+        let mut session = ProbeSession::new();
+        let mut out = Vec::with_capacity(keys.len());
+        self.insert_batch_into(keys, &mut session, &mut out);
+        out
+    }
+
+    /// [`BatchedFilter::delete_batch_into`] into a fresh vec.
+    fn delete_batch(&mut self, keys: &[u64]) -> Vec<bool> {
+        let mut session = ProbeSession::new();
+        let mut out = Vec::with_capacity(keys.len());
+        self.delete_batch_into(keys, &mut session, &mut out);
+        out
+    }
+}
+
+// Boxed filters are filters: `Box<dyn BatchedFilter + Send + Sync>`
+// (the builder's `DynFilter`) drops into any generic consumer. The
+// delegation is written out method-by-method so capability probes and
+// engine overrides forward through the box instead of re-resolving to
+// the trait defaults.
+impl<F: MembershipFilter + ?Sized> MembershipFilter for Box<F> {
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        (**self).insert(key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        (**self).contains(key)
+    }
+    fn delete(&mut self, key: u64) -> bool {
+        (**self).delete(key)
+    }
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+    fn capacity(&self) -> usize {
+        (**self).capacity()
+    }
+    fn occupancy(&self) -> f64 {
+        (**self).occupancy()
+    }
+    fn is_empty(&self) -> bool {
+        (**self).is_empty()
+    }
+    fn memory_bytes(&self) -> usize {
+        (**self).memory_bytes()
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        (**self).contains_exact(key)
+    }
+    fn exact_len(&self) -> Option<usize> {
+        (**self).exact_len()
+    }
+    fn keystore_bytes(&self) -> usize {
+        (**self).keystore_bytes()
+    }
+    fn stats(&self) -> FilterStats {
+        (**self).stats()
+    }
+}
+
+impl<F: BatchedFilter + ?Sized> BatchedFilter for Box<F> {
+    fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        (**self).contains_batch_into(keys, session, out)
+    }
+    fn insert_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        (**self).insert_batch_into(keys, session, out)
+    }
+    fn delete_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        (**self).delete_batch_into(keys, session, out)
+    }
 }

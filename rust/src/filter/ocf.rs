@@ -27,7 +27,8 @@ use super::metrics::FilterStats;
 use super::policy::{FilterEvent, Occupancy, ResizePolicy, StaticPolicy};
 use super::pre::PrePolicy;
 use super::resize::{clamp_capacity, rebuild};
-use super::{FilterError, MembershipFilter};
+use super::session::ProbeSession;
+use super::{BatchedFilter, FilterError, MembershipFilter};
 
 /// OCF mode of operation, selected at initialization (paper §II.A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -251,48 +252,83 @@ impl Ocf {
         self.filter.contains_triples_into(triples, out);
     }
 
-    /// Batched membership: bulk-hash once, then pipeline the probes.
-    /// Bit-identical to a scalar `contains` loop.
-    pub fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
-        self.filter.contains_batch(keys)
-    }
-
-    /// Batched insert: bulk-hash once, then drive the normal
-    /// [`Ocf::insert_hashed`] path with the primary bucket of key
-    /// `i + PREFETCH_DEPTH` prefetched while key `i` applies. Every
-    /// policy/keystore/resize side effect is identical to a scalar
-    /// insert loop (the prefetch is recomputed against the live table,
-    /// so a mid-batch resize cannot poison it).
-    pub fn insert_batch(&mut self, keys: &[u64]) -> Vec<Result<(), FilterError>> {
-        let triples = self.hasher().hash_batch(keys);
-        self.insert_batch_hashed(keys, &triples)
-    }
-
-    /// [`Ocf::insert_batch`] over a pre-hashed batch (`triples[i]` MUST
-    /// be `self.hasher().hash_key(keys[i])`; debug builds assert it).
+    /// Batched insert over a pre-hashed batch (`triples[i]` MUST be
+    /// `self.hasher().hash_key(keys[i])`; debug builds assert it):
+    /// drives the normal [`Ocf::insert_hashed`] path with the primary
+    /// bucket of key `i + PREFETCH_DEPTH` prefetched while key `i`
+    /// applies. Every policy/keystore/resize side effect is identical
+    /// to a scalar insert loop (the prefetch is recomputed against the
+    /// live table, so a mid-batch resize cannot poison it).
+    ///
+    /// [`PREFETCH_DEPTH`]: super::cuckoo::PREFETCH_DEPTH
     pub fn insert_batch_hashed(
         &mut self,
         keys: &[u64],
         triples: &[HashTriple],
     ) -> Vec<Result<(), FilterError>> {
+        let mut out = Vec::with_capacity(keys.len());
+        self.insert_batch_hashed_into(keys, triples, &mut out);
+        out
+    }
+
+    /// [`Ocf::insert_batch_hashed`] appending into a caller-owned
+    /// result buffer (the zero-allocation form the sharded front-end
+    /// and the `BatchedFilter` override build on).
+    pub fn insert_batch_hashed_into(
+        &mut self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
         assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
-        keys.iter()
-            .zip(triples)
-            .enumerate()
-            .map(|(i, (&k, &t))| {
-                debug_assert_eq!(t, self.hasher().hash_key(k), "foreign triple");
-                if let Some(&ahead) = triples.get(i + super::cuckoo::PREFETCH_DEPTH) {
-                    self.filter.prefetch_primary(ahead);
-                }
-                self.insert_impl(k, t)
-            })
-            .collect()
+        out.reserve(keys.len());
+        for (i, (&k, &t)) in keys.iter().zip(triples).enumerate() {
+            debug_assert_eq!(t, self.hasher().hash_key(k), "foreign triple");
+            if let Some(&ahead) = triples.get(i + super::cuckoo::PREFETCH_DEPTH) {
+                self.filter.prefetch_primary(ahead);
+            }
+            out.push(self.insert_impl(k, t));
+        }
     }
 
     /// Verified delete with a pre-computed triple.
     pub fn delete_hashed(&mut self, key: u64, triple: HashTriple) -> bool {
         debug_assert_eq!(triple, self.hasher().hash_key(key), "foreign triple");
         self.delete_impl(key, triple)
+    }
+
+    /// Batched verified delete over a pre-hashed batch — the delete
+    /// twin of [`Ocf::insert_batch_hashed`]: the primary bucket of key
+    /// `i + PREFETCH_DEPTH` is prefetched while key `i`'s delete
+    /// applies, so the bucket fetches of a delete storm overlap instead
+    /// of serializing. Keystore verification, resize policy events and
+    /// rollback accounting are bit-identical to a scalar
+    /// [`Ocf::delete_hashed`] loop.
+    ///
+    /// [`PREFETCH_DEPTH`]: super::cuckoo::PREFETCH_DEPTH
+    pub fn delete_batch_hashed(&mut self, keys: &[u64], triples: &[HashTriple]) -> Vec<bool> {
+        let mut out = Vec::with_capacity(keys.len());
+        self.delete_batch_hashed_into(keys, triples, &mut out);
+        out
+    }
+
+    /// [`Ocf::delete_batch_hashed`] appending into a caller-owned
+    /// result buffer.
+    pub fn delete_batch_hashed_into(
+        &mut self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        out: &mut Vec<bool>,
+    ) {
+        assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        out.reserve(keys.len());
+        for (i, (&k, &t)) in keys.iter().zip(triples).enumerate() {
+            debug_assert_eq!(t, self.hasher().hash_key(k), "foreign triple");
+            if let Some(&ahead) = triples.get(i + super::cuckoo::PREFETCH_DEPTH) {
+                self.filter.prefetch_primary(ahead);
+            }
+            out.push(self.delete_impl(k, t));
+        }
     }
 
     /// The single insert path shared by `insert` and `insert_hashed`
@@ -488,6 +524,64 @@ impl MembershipFilter for Ocf {
             Mode::Eof => "ocf-eof",
             Mode::Static => "ocf-static",
         }
+    }
+
+    /// OCF carries an authoritative key store — exact answers.
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        Some(Ocf::contains_exact(self, key))
+    }
+
+    fn exact_len(&self) -> Option<usize> {
+        Some(self.keystore_len())
+    }
+
+    fn keystore_bytes(&self) -> usize {
+        Ocf::keystore_bytes(self)
+    }
+
+    fn stats(&self) -> FilterStats {
+        Ocf::stats(self)
+    }
+}
+
+/// The probe-engine overrides: bulk-hash into the session's triple
+/// buffer, then run the prefetch-pipelined engine — lookups through
+/// [`CuckooFilter::contains_triples_into`], mutations through the
+/// depth-pipelined [`Ocf::insert_batch_hashed_into`] /
+/// [`Ocf::delete_batch_hashed_into`] (every policy/keystore side effect
+/// scalar-identical; proptests P11/P12).
+impl BatchedFilter for Ocf {
+    fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        session.triples.clear();
+        self.hasher().hash_batch_into(keys, &mut session.triples);
+        self.contains_triples_into(&session.triples, out);
+    }
+
+    fn insert_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        session.triples.clear();
+        self.hasher().hash_batch_into(keys, &mut session.triples);
+        self.insert_batch_hashed_into(keys, &session.triples, out);
+    }
+
+    fn delete_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        session.triples.clear();
+        self.hasher().hash_batch_into(keys, &mut session.triples);
+        self.delete_batch_hashed_into(keys, &session.triples, out);
     }
 }
 

@@ -12,7 +12,7 @@
 //! paper's burst experiments exercise.
 
 use super::bloom::BloomFilter;
-use super::{FilterError, MembershipFilter};
+use super::{BatchedFilter, FilterError, MembershipFilter};
 
 /// Growth/tightening parameters from the SBF paper.
 #[derive(Debug, Clone, Copy)]
@@ -114,6 +114,10 @@ impl MembershipFilter for ScalableBloomFilter {
         "scalable-bloom"
     }
 }
+
+/// Default (scalar) batch implementations — the baseline rides every
+/// batched consumer with zero filter-specific code.
+impl BatchedFilter for ScalableBloomFilter {}
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,123 @@
+//! `ProbeSession` — caller-owned scratch for the zero-allocation
+//! batched filter APIs.
+//!
+//! Every `*_batch_into` method on [`BatchedFilter`](super::BatchedFilter)
+//! and [`ConcurrentFilter`](super::ConcurrentFilter) takes a
+//! `&mut ProbeSession` alongside the output vector. The session owns the
+//! intermediate buffers a batched probe needs — the bulk-hashed triples,
+//! and (for the sharded front-end) the per-shard gather/scatter scratch —
+//! so a hot loop that reuses one session across batches performs **zero
+//! allocations per call** once the buffers have grown to the steady-state
+//! batch size. This is what ended the per-call `Vec` allocations the PR-2
+//! engine paid in `Ocf::contains_batch` and friends.
+//!
+//! ```
+//! use ocf::filter::{BatchedFilter, Ocf, OcfConfig, ProbeSession};
+//!
+//! let mut f = Ocf::new(OcfConfig::default());
+//! let mut session = ProbeSession::new();
+//! let mut hits = Vec::new();
+//! for chunk in (0..100_000u64).collect::<Vec<_>>().chunks(4096) {
+//!     let mut results = Vec::new();
+//!     f.insert_batch_into(chunk, &mut session, &mut results);
+//!     hits.clear();
+//!     f.contains_batch_into(chunk, &mut session, &mut hits);
+//!     assert!(hits.iter().all(|&h| h)); // no false negatives
+//! }
+//! ```
+//!
+//! The contents of a session between calls are **unspecified scratch**:
+//! callers must never read state out of it, and any filter may clobber
+//! any buffer. Sessions are cheap to create (`Vec::new` does not
+//! allocate), so the allocating convenience wrappers
+//! (`contains_batch(&keys) -> Vec<bool>` etc.) just make a throwaway one.
+
+use super::fingerprint::HashTriple;
+use super::FilterError;
+
+/// Reusable scratch for one probing call-site. See the module docs.
+#[derive(Debug, Default)]
+pub struct ProbeSession {
+    /// Bulk-hash output: `triples[i]` is the hash triple of `keys[i]`
+    /// for the batch currently being processed.
+    pub triples: Vec<HashTriple>,
+    /// Per-shard gather/scatter scratch used by the sharded front-end.
+    pub shard: ShardScratch,
+}
+
+impl ProbeSession {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size the triple buffer for an expected batch size (optional;
+    /// buffers grow on first use either way).
+    pub fn with_capacity(batch: usize) -> Self {
+        Self {
+            triples: Vec::with_capacity(batch),
+            shard: ShardScratch::default(),
+        }
+    }
+
+    /// Heap bytes currently held by the session's buffers (diagnostic).
+    pub fn memory_bytes(&self) -> usize {
+        self.triples.capacity() * std::mem::size_of::<HashTriple>()
+            + self.shard.memory_bytes()
+    }
+}
+
+/// Scratch for the sharded front-end's group-by-shard batch plan:
+/// group index lists plus the contiguous per-shard key/triple/result
+/// buffers that are gathered, applied under one lock, and scattered
+/// back to input positions.
+#[derive(Debug, Default)]
+pub struct ShardScratch {
+    /// `groups[s]` lists the batch positions owned by shard `s`, in
+    /// input order. The outer vec is resized to the shard count; inner
+    /// vecs are cleared, not dropped, so their capacity is reused.
+    pub groups: Vec<Vec<usize>>,
+    /// Contiguous keys of the shard group currently being applied.
+    pub keys: Vec<u64>,
+    /// Contiguous triples of the shard group currently being applied.
+    pub triples: Vec<HashTriple>,
+    /// Per-group boolean results (contains/delete) before scatter.
+    pub bools: Vec<bool>,
+    /// Per-group insert results before scatter.
+    pub results: Vec<Result<(), FilterError>>,
+}
+
+impl ShardScratch {
+    /// Heap bytes currently held (diagnostic).
+    pub fn memory_bytes(&self) -> usize {
+        let groups: usize = self
+            .groups
+            .iter()
+            .map(|g| g.capacity() * std::mem::size_of::<usize>())
+            .sum();
+        groups
+            + self.groups.capacity() * std::mem::size_of::<Vec<usize>>()
+            + self.keys.capacity() * 8
+            + self.triples.capacity() * std::mem::size_of::<HashTriple>()
+            + self.bools.capacity()
+            + self.results.capacity() * std::mem::size_of::<Result<(), FilterError>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_session_is_empty_and_cheap() {
+        let s = ProbeSession::new();
+        assert_eq!(s.triples.len(), 0);
+        assert_eq!(s.memory_bytes(), 0, "Vec::new must not allocate");
+    }
+
+    #[test]
+    fn with_capacity_presizes_triples() {
+        let s = ProbeSession::with_capacity(1024);
+        assert!(s.triples.capacity() >= 1024);
+        assert!(s.memory_bytes() > 0);
+    }
+}

@@ -26,10 +26,12 @@
 //! high bits of `idx_hash` would skew non-power-of-two tables and how
 //! `mix32(idx_hash ^ fp)` avoids it.
 
+use super::concurrent::ConcurrentFilter;
 use super::fingerprint::{mix32, Hasher, HashTriple};
 use super::metrics::FilterStats;
 use super::ocf::{Ocf, OcfConfig};
-use super::{FilterError, MembershipFilter};
+use super::session::{ProbeSession, ShardScratch};
+use super::{BatchedFilter, FilterError, MembershipFilter};
 use std::sync::Mutex;
 
 /// Configuration for the sharded front-end.
@@ -116,14 +118,26 @@ impl ShardedOcf {
         f(&mut guard)
     }
 
-    /// Group triple indices by shard: `groups[s]` lists the positions
-    /// in `triples` owned by shard `s`, in input order. `pub(crate)` so
-    /// the pipeline's parallel apply stage shares this exact routing.
-    pub(crate) fn group_by_shard(&self, triples: &[HashTriple]) -> Vec<Vec<usize>> {
-        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+    /// Group triple indices by shard into a reusable buffer:
+    /// `groups[s]` lists the positions in `triples` owned by shard `s`,
+    /// in input order. Inner vectors are cleared, not dropped, so their
+    /// capacity survives across batches (the zero-allocation plan the
+    /// session-based batch APIs ride).
+    pub fn group_by_shard_into(&self, triples: &[HashTriple], groups: &mut Vec<Vec<usize>>) {
+        groups.resize_with(self.shards.len(), Vec::new);
+        for g in groups.iter_mut() {
+            g.clear();
+        }
         for (i, t) in triples.iter().enumerate() {
             groups[self.shard_of(*t)].push(i);
         }
+    }
+
+    /// [`ShardedOcf::group_by_shard_into`] into a fresh vec (the
+    /// pipeline's parallel apply stage shares this exact routing).
+    pub(crate) fn group_by_shard(&self, triples: &[HashTriple]) -> Vec<Vec<usize>> {
+        let mut groups = Vec::new();
+        self.group_by_shard_into(triples, &mut groups);
         groups
     }
 
@@ -152,11 +166,30 @@ impl ShardedOcf {
     }
 
     // ---- batched APIs: hash once, group by shard, one lock per shard ----
+    //
+    // The `_into` forms take the scratch explicitly ([`ShardScratch`] /
+    // [`ProbeSession`]) and append to caller-owned outputs — zero
+    // allocations per call once buffers reach steady state. The
+    // Vec-returning forms are convenience wrappers over them.
 
     /// Insert a batch; results are positionally aligned with `keys`.
     pub fn insert_batch(&self, keys: &[u64]) -> Vec<Result<(), FilterError>> {
         let triples = self.hasher.hash_batch(keys);
         self.insert_batch_hashed(keys, &triples)
+    }
+
+    /// [`ShardedOcf::insert_batch`] with hashing landing in the
+    /// session's triple buffer.
+    pub fn insert_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let ProbeSession { triples, shard } = session;
+        self.insert_batch_hashed_into(keys, triples, shard, out);
     }
 
     /// Insert a pre-hashed batch (`triples[i]` MUST be the hash of
@@ -168,28 +201,44 @@ impl ShardedOcf {
         keys: &[u64],
         triples: &[HashTriple],
     ) -> Vec<Result<(), FilterError>> {
+        let mut scratch = ShardScratch::default();
+        let mut out = Vec::with_capacity(keys.len());
+        self.insert_batch_hashed_into(keys, triples, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`ShardedOcf::insert_batch_hashed`] appending into caller-owned
+    /// scratch + output.
+    pub fn insert_batch_hashed_into(
+        &self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        scratch: &mut ShardScratch,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
         assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
-        let mut out: Vec<Result<(), FilterError>> = keys.iter().map(|_| Ok(())).collect();
-        let mut gkeys: Vec<u64> = Vec::new();
-        let mut gtriples: Vec<HashTriple> = Vec::new();
-        for (sid, group) in self.group_by_shard(triples).iter().enumerate() {
+        let base = out.len();
+        out.resize(base + keys.len(), Ok(()));
+        let out = &mut out[base..];
+        self.group_by_shard_into(triples, &mut scratch.groups);
+        for (sid, group) in scratch.groups.iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            gkeys.clear();
-            gtriples.clear();
+            scratch.keys.clear();
+            scratch.triples.clear();
             for &i in group {
-                gkeys.push(keys[i]);
-                gtriples.push(triples[i]);
+                scratch.keys.push(keys[i]);
+                scratch.triples.push(triples[i]);
             }
+            scratch.results.clear();
             let mut shard = self.shards[sid].lock().unwrap();
-            let results = shard.insert_batch_hashed(&gkeys, &gtriples);
+            shard.insert_batch_hashed_into(&scratch.keys, &scratch.triples, &mut scratch.results);
             drop(shard);
-            for (&i, r) in group.iter().zip(results) {
+            for (&i, r) in group.iter().zip(scratch.results.drain(..)) {
                 out[i] = r;
             }
         }
-        out
     }
 
     /// Batched membership; results aligned with `keys`.
@@ -198,29 +247,57 @@ impl ShardedOcf {
         self.contains_batch_hashed(&triples)
     }
 
+    /// [`ShardedOcf::contains_batch`] with hashing landing in the
+    /// session's triple buffer.
+    pub fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let ProbeSession { triples, shard } = session;
+        self.contains_batch_hashed_into(triples, shard, out);
+    }
+
     /// Batched membership over pre-hashed triples. Each shard's group
     /// is gathered contiguously and resolved by the prefetch-pipelined
     /// probe engine ([`Ocf::contains_triples_into`]) under one lock
     /// acquisition, then scattered back to input positions.
     pub fn contains_batch_hashed(&self, triples: &[HashTriple]) -> Vec<bool> {
-        let mut out = vec![false; triples.len()];
-        let mut gtriples: Vec<HashTriple> = Vec::new();
-        let mut gout: Vec<bool> = Vec::new();
-        for (sid, group) in self.group_by_shard(triples).iter().enumerate() {
+        let mut scratch = ShardScratch::default();
+        let mut out = Vec::with_capacity(triples.len());
+        self.contains_batch_hashed_into(triples, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`ShardedOcf::contains_batch_hashed`] appending into caller-owned
+    /// scratch + output.
+    pub fn contains_batch_hashed_into(
+        &self,
+        triples: &[HashTriple],
+        scratch: &mut ShardScratch,
+        out: &mut Vec<bool>,
+    ) {
+        let base = out.len();
+        out.resize(base + triples.len(), false);
+        let out = &mut out[base..];
+        self.group_by_shard_into(triples, &mut scratch.groups);
+        for (sid, group) in scratch.groups.iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            gtriples.clear();
-            gtriples.extend(group.iter().map(|&i| triples[i]));
-            gout.clear();
+            scratch.triples.clear();
+            scratch.triples.extend(group.iter().map(|&i| triples[i]));
+            scratch.bools.clear();
             let shard = self.shards[sid].lock().unwrap();
-            shard.contains_triples_into(&gtriples, &mut gout);
+            shard.contains_triples_into(&scratch.triples, &mut scratch.bools);
             drop(shard);
-            for (&i, &r) in group.iter().zip(&gout) {
+            for (&i, &r) in group.iter().zip(&scratch.bools) {
                 out[i] = r;
             }
         }
-        out
     }
 
     /// Batched verified delete; results aligned with `keys`.
@@ -229,20 +306,64 @@ impl ShardedOcf {
         self.delete_batch_hashed(keys, &triples)
     }
 
-    /// Batched verified delete over a pre-hashed batch.
+    /// [`ShardedOcf::delete_batch`] with hashing landing in the
+    /// session's triple buffer.
+    pub fn delete_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let ProbeSession { triples, shard } = session;
+        self.delete_batch_hashed_into(keys, triples, shard, out);
+    }
+
+    /// Batched verified delete over a pre-hashed batch. Like inserts,
+    /// each shard's group is gathered contiguously and applied through
+    /// the prefetch-pipelined [`Ocf::delete_batch_hashed`] engine under
+    /// a single lock acquisition (a delete storm overlaps its bucket
+    /// fetches instead of serializing per-key probes).
     pub fn delete_batch_hashed(&self, keys: &[u64], triples: &[HashTriple]) -> Vec<bool> {
+        let mut scratch = ShardScratch::default();
+        let mut out = Vec::with_capacity(keys.len());
+        self.delete_batch_hashed_into(keys, triples, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`ShardedOcf::delete_batch_hashed`] appending into caller-owned
+    /// scratch + output.
+    pub fn delete_batch_hashed_into(
+        &self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        scratch: &mut ShardScratch,
+        out: &mut Vec<bool>,
+    ) {
         assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
-        let mut out = vec![false; keys.len()];
-        for (sid, group) in self.group_by_shard(triples).iter().enumerate() {
+        let base = out.len();
+        out.resize(base + keys.len(), false);
+        let out = &mut out[base..];
+        self.group_by_shard_into(triples, &mut scratch.groups);
+        for (sid, group) in scratch.groups.iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            let mut shard = self.shards[sid].lock().unwrap();
+            scratch.keys.clear();
+            scratch.triples.clear();
             for &i in group {
-                out[i] = shard.delete_hashed(keys[i], triples[i]);
+                scratch.keys.push(keys[i]);
+                scratch.triples.push(triples[i]);
+            }
+            scratch.bools.clear();
+            let mut shard = self.shards[sid].lock().unwrap();
+            shard.delete_batch_hashed_into(&scratch.keys, &scratch.triples, &mut scratch.bools);
+            drop(shard);
+            for (&i, &r) in group.iter().zip(&scratch.bools) {
+                out[i] = r;
             }
         }
-        out
     }
 
     // ---- merged views across shards ----
@@ -315,6 +436,167 @@ impl ShardedOcf {
             .iter()
             .map(|s| s.lock().unwrap().len())
             .collect()
+    }
+}
+
+/// `&mut self` implies exclusive access, so the single-writer trait
+/// family is trivially satisfiable by the concurrent front-end — this
+/// is what lets the builder hand a `ShardedOcf` to any
+/// [`BatchedFilter`] consumer (e.g. a sharded node filter inside
+/// `StorageNode`). All methods delegate to the same-named inherent
+/// (`&self`) operations.
+impl MembershipFilter for ShardedOcf {
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        self.insert_one(key)
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.contains_one(key)
+    }
+
+    fn delete(&mut self, key: u64) -> bool {
+        self.delete_one(key)
+    }
+
+    fn len(&self) -> usize {
+        ShardedOcf::len(self)
+    }
+
+    fn capacity(&self) -> usize {
+        ShardedOcf::capacity(self)
+    }
+
+    fn occupancy(&self) -> f64 {
+        ShardedOcf::occupancy(self)
+    }
+
+    fn is_empty(&self) -> bool {
+        ShardedOcf::is_empty(self)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        ShardedOcf::memory_bytes(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded-ocf"
+    }
+
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        Some(ShardedOcf::contains_exact(self, key))
+    }
+
+    fn exact_len(&self) -> Option<usize> {
+        Some(ShardedOcf::len(self))
+    }
+
+    fn keystore_bytes(&self) -> usize {
+        ShardedOcf::keystore_bytes(self)
+    }
+
+    fn stats(&self) -> FilterStats {
+        ShardedOcf::stats(self)
+    }
+}
+
+impl BatchedFilter for ShardedOcf {
+    fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        ShardedOcf::contains_batch_into(self, keys, session, out)
+    }
+
+    fn insert_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        ShardedOcf::insert_batch_into(self, keys, session, out)
+    }
+
+    fn delete_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        ShardedOcf::delete_batch_into(self, keys, session, out)
+    }
+}
+
+/// The native shared-reference surface: every operation locks only the
+/// owning shard's stripe (batched forms: one acquisition per shard
+/// group), so M threads scale to min(M, shards).
+impl ConcurrentFilter for ShardedOcf {
+    fn insert(&self, key: u64) -> Result<(), FilterError> {
+        self.insert_one(key)
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.contains_one(key)
+    }
+
+    fn delete(&self, key: u64) -> bool {
+        self.delete_one(key)
+    }
+
+    fn len(&self) -> usize {
+        ShardedOcf::len(self)
+    }
+
+    fn capacity(&self) -> usize {
+        ShardedOcf::capacity(self)
+    }
+
+    fn occupancy(&self) -> f64 {
+        ShardedOcf::occupancy(self)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        ShardedOcf::memory_bytes(self)
+    }
+
+    fn stats(&self) -> FilterStats {
+        ShardedOcf::stats(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded-ocf"
+    }
+
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        Some(ShardedOcf::contains_exact(self, key))
+    }
+
+    fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        ShardedOcf::contains_batch_into(self, keys, session, out)
+    }
+
+    fn insert_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        ShardedOcf::insert_batch_into(self, keys, session, out)
+    }
+
+    fn delete_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        ShardedOcf::delete_batch_into(self, keys, session, out)
     }
 }
 

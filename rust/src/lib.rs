@@ -59,4 +59,7 @@ pub mod testutil;
 pub mod util;
 pub mod workload;
 
-pub use filter::{MembershipFilter, Mode, Ocf, OcfConfig};
+pub use filter::{
+    BatchedFilter, ConcurrentFilter, DynFilter, FilterBuilder, MembershipFilter, Mode, Ocf,
+    OcfConfig, ProbeSession,
+};

@@ -6,7 +6,9 @@
 //!         [--scale F]           # workload scale, 1.0 = paper scale
 //! ocf pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]
 //!              [--shards N]     # >1 = sharded concurrent filter front-end
+//!              [--backend NAME] # any FilterBuilder backend, trait-generic path
 //! ocf serve [--config FILE] [--set section.key=value ...]
+//!           # filter backend from [filter] backend = "..." / --set filter.backend=...
 //! ocf info [--artifacts DIR]
 //! ```
 //!
@@ -16,7 +18,7 @@
 use ocf::bench_harness;
 use ocf::config::OcfFileConfig;
 use ocf::exp::{self, Scale};
-use ocf::filter::{MembershipFilter, Ocf};
+use ocf::filter::{FilterBuilder, MembershipFilter, Ocf};
 use ocf::pipeline::{BatchPolicy, IngestPipeline};
 use ocf::runtime::{HashExecutor, PjrtEngine};
 use ocf::workload::{KeyDist, MixGenerator, OpMix};
@@ -48,7 +50,7 @@ fn print_help() {
         "ocf — Optimized Cuckoo Filter coordinator\n\n\
          commands:\n  \
          exp <name|all> [--scale F]   regenerate paper tables/figures\n  \
-         pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads] [--shards N]\n  \
+         pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads] [--shards N] [--backend NAME]\n  \
          serve [--config FILE] [--set section.key=value]\n  \
          info [--artifacts DIR]\n  \
          help"
@@ -101,6 +103,15 @@ fn cmd_pipeline(args: &[String]) -> i32 {
     let shards: usize = flag_value(args, "--shards")
         .and_then(|s| s.parse().ok())
         .unwrap_or(1);
+
+    if let Some(backend) = flag_value(args, "--backend") {
+        // Trait-generic path: any builder backend through the batched
+        // pipeline (native hashing inside the filter's engine).
+        if flag_value(args, "--artifacts").is_some() {
+            eprintln!("pipeline: --artifacts is ignored with --backend (trait path hashes natively)");
+        }
+        return cmd_pipeline_backend(&backend, ops, batch, shards);
+    }
 
     if shards > 1 {
         if flag_value(args, "--artifacts").is_some() {
@@ -161,7 +172,8 @@ fn cmd_pipeline(args: &[String]) -> i32 {
         )
     } else {
         let ops_iter = (0..ops).map(move |_| gen.next_op());
-        pipeline.run(ops_iter, &mut filter)
+        // executor-hashed Ocf path (XLA artifact when loaded)
+        pipeline.run_hashed(ops_iter, &mut filter)
     };
     println!("{}", report.render());
     println!(
@@ -173,6 +185,58 @@ fn cmd_pipeline(args: &[String]) -> i32 {
         filter.stats().resizes(),
     );
     let _ = bench_harness::render_table; // referenced by benches
+    0
+}
+
+/// Trait-generic pipeline: any [`FilterBuilder`] backend by name
+/// through `IngestPipeline::run` (engine-backed filters use their
+/// prefetch pipeline, baselines the default scalar batch impls).
+fn cmd_pipeline_backend(backend: &str, ops: usize, batch: usize, shards: usize) -> i32 {
+    let builder = match FilterBuilder::named(backend) {
+        // --shards only overrides when given (> 1); "sharded" keeps
+        // its own default shard count otherwise
+        Ok(b) if shards > 1 => b.with_shards(shards),
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("pipeline: {e}");
+            return 2;
+        }
+    };
+    let mut filter = match builder.build() {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("pipeline: {e}");
+            return 2;
+        }
+    };
+    // The trait-generic path hashes inside the filter's own batched
+    // engine; the executor is unused here, so build it from a bare
+    // Hasher instead of a throwaway filter.
+    let hasher = ocf::filter::Hasher::new(builder.ocf.seed, builder.ocf.fp_bits);
+    let mut pipeline = IngestPipeline::new(
+        BatchPolicy {
+            max_batch: batch,
+            ..BatchPolicy::default()
+        },
+        HashExecutor::native(hasher),
+    );
+    let mut gen = MixGenerator::new(
+        KeyDist::uniform(1 << 40),
+        OpMix::new(0.5, 0.4, 0.1),
+        0x0CF_11FE,
+    );
+    let ops_iter = (0..ops).map(move |_| gen.next_op());
+    let report = pipeline.run(ops_iter, &mut filter);
+    println!("{}", report.render());
+    println!(
+        "filter[{}]: len={} capacity={} occupancy={:.3} memory={} resizes={}",
+        filter.name(),
+        filter.len(),
+        filter.capacity(),
+        filter.occupancy(),
+        ocf::util::fmt_bytes(filter.memory_bytes()),
+        filter.stats().resizes(),
+    );
     0
 }
 
@@ -229,11 +293,19 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     eprintln!(
-        "ocf serve: mode={} capacity={} (line protocol: put K | get K | del K | stats | quit)",
-        cfg.filter.mode.as_str(),
-        cfg.filter.initial_capacity
+        "ocf serve: filter={} capacity={} (line protocol: put K | get K | del K | stats | quit)",
+        cfg.filter.describe(),
+        cfg.filter.ocf.initial_capacity
     );
-    let mut filter = Ocf::new(cfg.filter);
+    // Any backend by name, through the trait object (`[filter]
+    // backend = "..."` / `--set filter.backend=...`).
+    let mut filter = match cfg.filter.build() {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let mut out = stdout.lock();

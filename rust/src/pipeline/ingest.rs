@@ -1,30 +1,39 @@
-//! The ingest pump: workload → batcher → hash executor → filter apply.
+//! The ingest pump: workload → batcher → filter apply.
 //!
-//! Two drive modes:
+//! Since the Filter API v2 redesign the pipeline is **filter-generic**;
+//! the drive modes are:
 //!
-//! * [`IngestPipeline::run`] — single-threaded pull loop (deterministic;
-//!   what the experiments use so arms are comparable);
+//! * [`IngestPipeline::run`] — single-threaded pull loop over any
+//!   [`BatchedFilter`] (deterministic; what the experiments use so arms
+//!   are comparable). Each batch is split into runs of consecutive
+//!   same-kind ops and applied through the batched trait surface with
+//!   one reusable [`ProbeSession`] — engine-backed filters get the
+//!   prefetch pipeline, baselines get the scalar defaults, and the
+//!   apply loop performs zero allocations per batch in steady state.
+//! * [`IngestPipeline::run_concurrent`] — the same loop over any
+//!   [`ConcurrentFilter`] through `&self` (lock striping / interior
+//!   locking lives inside the filter).
+//! * [`IngestPipeline::run_hashed`] — the executor-specialized [`Ocf`]
+//!   path: each batch is hashed ONCE (on the XLA artifact when
+//!   available) and the triples drive `insert_hashed`/`delete_hashed`,
+//!   so the accelerated hash is genuinely on the request path rather
+//!   than a sidecar.
 //! * [`IngestPipeline::run_threaded`] — a producer thread feeding a
 //!   bounded channel (real backpressure) while the consumer batches,
 //!   executes, applies. The consumer thread owns the PJRT engine, so
 //!   no `Send` requirement leaks into the xla wrapper types.
+//! * [`IngestPipeline::run_sharded`] — the parallel-apply mode for the
+//!   sharded front-end: each hashed batch is grouped by shard and
+//!   fanned out across scoped threads, one per non-empty shard group,
+//!   each applying its group under a single lock acquisition
+//!   ([`ShardedOcf::with_shard`]).
 //!
-//! Each batch is hashed ONCE (on the XLA artifact when available) and
-//! the resulting triples drive `insert_hashed`/`delete_hashed`, so the
-//! accelerated hash is genuinely on the request path rather than a
-//! sidecar. Consecutive lookup runs are resolved by the prefetch-
-//! pipelined probe engine (`Ocf::contains_triples_into`), which keeps
-//! ~8 bucket fetches in flight instead of serializing cache misses.
-//!
-//! A third drive mode targets the concurrent front-end:
-//!
-//! * [`IngestPipeline::run_sharded`] — same pull loop, but each hashed
-//!   batch is grouped by shard and fanned out across scoped threads,
-//!   one per non-empty shard group, each applying its group under a
-//!   single lock acquisition ([`ShardedOcf::with_shard`]).
+//! Op order is preserved exactly in every mode: a run breaks at every
+//! op-kind change, so a lookup can never be reordered across an
+//! insert/delete (pinned by proptest P5).
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
-use crate::filter::{Ocf, ShardedOcf};
+use crate::filter::{BatchedFilter, ConcurrentFilter, FilterError, Ocf, ProbeSession, ShardedOcf};
 use crate::metrics::Histogram;
 use crate::runtime::HashExecutor;
 use crate::workload::Op;
@@ -86,7 +95,70 @@ impl IngestReport {
 /// The pipeline.
 pub struct IngestPipeline {
     pub batch_policy: BatchPolicy,
+    /// Bulk hasher for the executor-specialized modes
+    /// ([`IngestPipeline::run_hashed`] / [`IngestPipeline::run_threaded`]
+    /// / [`IngestPipeline::run_sharded`]); the trait-generic modes hash
+    /// inside the filter's own batched engine instead.
     pub executor: HashExecutor,
+}
+
+/// Reusable per-run scratch for the trait-generic apply loop: one
+/// [`ProbeSession`] plus the key/result gather buffers. Zero
+/// allocations per batch once warm.
+#[derive(Default)]
+struct ApplyScratch {
+    session: ProbeSession,
+    keys: Vec<u64>,
+    bools: Vec<bool>,
+    results: Vec<Result<(), FilterError>>,
+}
+
+/// Internal unification of the two batched apply surfaces —
+/// `&mut BatchedFilter` and `&ConcurrentFilter` — so the run-splitting
+/// loop exists exactly once.
+trait ApplyOps {
+    fn contains_into(&mut self, keys: &[u64], s: &mut ProbeSession, out: &mut Vec<bool>);
+    fn insert_into(
+        &mut self,
+        keys: &[u64],
+        s: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    );
+    fn delete_into(&mut self, keys: &[u64], s: &mut ProbeSession, out: &mut Vec<bool>);
+}
+
+impl<F: BatchedFilter + ?Sized> ApplyOps for &mut F {
+    fn contains_into(&mut self, keys: &[u64], s: &mut ProbeSession, out: &mut Vec<bool>) {
+        (**self).contains_batch_into(keys, s, out)
+    }
+    fn insert_into(
+        &mut self,
+        keys: &[u64],
+        s: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        (**self).insert_batch_into(keys, s, out)
+    }
+    fn delete_into(&mut self, keys: &[u64], s: &mut ProbeSession, out: &mut Vec<bool>) {
+        (**self).delete_batch_into(keys, s, out)
+    }
+}
+
+impl<C: ConcurrentFilter + ?Sized> ApplyOps for &C {
+    fn contains_into(&mut self, keys: &[u64], s: &mut ProbeSession, out: &mut Vec<bool>) {
+        (**self).contains_batch_into(keys, s, out)
+    }
+    fn insert_into(
+        &mut self,
+        keys: &[u64],
+        s: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        (**self).insert_batch_into(keys, s, out)
+    }
+    fn delete_into(&mut self, keys: &[u64], s: &mut ProbeSession, out: &mut Vec<bool>) {
+        (**self).delete_batch_into(keys, s, out)
+    }
 }
 
 impl IngestPipeline {
@@ -95,6 +167,110 @@ impl IngestPipeline {
             batch_policy,
             executor,
         }
+    }
+
+    /// Apply one batch through a capability-trait surface: split into
+    /// maximal runs of consecutive same-kind ops, each run driven as
+    /// one batched call (order inside a run and across runs is exactly
+    /// input order, so this is semantically identical to an
+    /// op-at-a-time loop).
+    fn apply_batch_caps<A: ApplyOps>(
+        batch: &[Op],
+        filter: &mut A,
+        scratch: &mut ApplyScratch,
+        report: &mut IngestReport,
+    ) {
+        let t0 = Instant::now();
+        let mut i = 0;
+        while i < batch.len() {
+            let mut j = i;
+            while j < batch.len()
+                && std::mem::discriminant(&batch[j]) == std::mem::discriminant(&batch[i])
+            {
+                j += 1;
+            }
+            scratch.keys.clear();
+            scratch.keys.extend(batch[i..j].iter().map(|op| op.key()));
+            match batch[i] {
+                Op::Lookup(_) => {
+                    scratch.bools.clear();
+                    filter.contains_into(&scratch.keys, &mut scratch.session, &mut scratch.bools);
+                    report.lookups += (j - i) as u64;
+                    report.lookup_hits += scratch.bools.iter().filter(|&&h| h).count() as u64;
+                }
+                Op::Insert(_) => {
+                    scratch.results.clear();
+                    filter.insert_into(&scratch.keys, &mut scratch.session, &mut scratch.results);
+                    report.inserts += (j - i) as u64;
+                }
+                Op::Delete(_) => {
+                    scratch.bools.clear();
+                    filter.delete_into(&scratch.keys, &mut scratch.session, &mut scratch.bools);
+                    report.deletes += (j - i) as u64;
+                }
+            }
+            i = j;
+        }
+        let dt = t0.elapsed().as_nanos() as u64;
+        report.batches += 1;
+        report.ops += batch.len() as u64;
+        report.batch_latency_ns.record(dt);
+        report.op_latency_ns.record(dt / batch.len().max(1) as u64);
+    }
+
+    /// Single-threaded pull pipeline over any [`BatchedFilter`] — the
+    /// trait-generic drive mode every backend (engine-accelerated or
+    /// default-batch baseline) shares.
+    pub fn run<F: BatchedFilter + ?Sized>(
+        &mut self,
+        ops: impl Iterator<Item = Op>,
+        filter: &mut F,
+    ) -> IngestReport {
+        let mut report = IngestReport::new();
+        let mut batcher = DynamicBatcher::new(self.batch_policy);
+        let mut scratch = ApplyScratch::default();
+        let mut filter: &mut F = filter;
+        let start = Instant::now();
+        for op in ops {
+            if let Some(batch) = batcher.push(op) {
+                Self::apply_batch_caps(&batch, &mut filter, &mut scratch, &mut report);
+            } else if let Some(batch) = batcher.poll(Instant::now()) {
+                Self::apply_batch_caps(&batch, &mut filter, &mut scratch, &mut report);
+            }
+        }
+        if let Some(batch) = batcher.drain() {
+            Self::apply_batch_caps(&batch, &mut filter, &mut scratch, &mut report);
+        }
+        report.elapsed_secs = start.elapsed().as_secs_f64();
+        report
+    }
+
+    /// Single-threaded pull pipeline over any [`ConcurrentFilter`]
+    /// (`&self`; interior locking). The serial twin of
+    /// [`IngestPipeline::run_sharded`] — use that one when the filter
+    /// is a [`ShardedOcf`] and the batch is big enough to fan out.
+    pub fn run_concurrent<C: ConcurrentFilter + ?Sized>(
+        &mut self,
+        ops: impl Iterator<Item = Op>,
+        filter: &C,
+    ) -> IngestReport {
+        let mut report = IngestReport::new();
+        let mut batcher = DynamicBatcher::new(self.batch_policy);
+        let mut scratch = ApplyScratch::default();
+        let mut filter: &C = filter;
+        let start = Instant::now();
+        for op in ops {
+            if let Some(batch) = batcher.push(op) {
+                Self::apply_batch_caps(&batch, &mut filter, &mut scratch, &mut report);
+            } else if let Some(batch) = batcher.poll(Instant::now()) {
+                Self::apply_batch_caps(&batch, &mut filter, &mut scratch, &mut report);
+            }
+        }
+        if let Some(batch) = batcher.drain() {
+            Self::apply_batch_caps(&batch, &mut filter, &mut scratch, &mut report);
+        }
+        report.elapsed_secs = start.elapsed().as_secs_f64();
+        report
     }
 
     /// Apply one batch: hash all keys once, then apply ops with the
@@ -259,8 +435,11 @@ impl IngestPipeline {
         report
     }
 
-    /// Single-threaded pull pipeline.
-    pub fn run(&mut self, ops: impl Iterator<Item = Op>, filter: &mut Ocf) -> IngestReport {
+    /// Single-threaded pull pipeline over a concrete [`Ocf`] with the
+    /// batch hashed ONCE by [`IngestPipeline::executor`] (the XLA
+    /// artifact when loaded) — the accelerated-hash request path.
+    /// Result-identical to the trait-generic [`IngestPipeline::run`].
+    pub fn run_hashed(&mut self, ops: impl Iterator<Item = Op>, filter: &mut Ocf) -> IngestReport {
         let mut report = IngestReport::new();
         let mut batcher = DynamicBatcher::new(self.batch_policy);
         let start = Instant::now();
@@ -363,10 +542,20 @@ mod tests {
         );
         let ops = gen.batch(20_000);
 
-        // arm 1: through the pipeline
+        // arm 1: through the trait-generic pipeline
         let (mut p, mut f1) = pipeline(512);
         let report = p.run(ops.iter().copied(), &mut f1);
         assert_eq!(report.ops, 20_000);
+
+        // arm 1b: through the executor-hashed Ocf path — identical
+        let (mut ph, mut fh) = pipeline(512);
+        let rh = ph.run_hashed(ops.iter().copied(), &mut fh);
+        assert_eq!(rh.ops, report.ops);
+        assert_eq!(rh.inserts, report.inserts);
+        assert_eq!(rh.lookup_hits, report.lookup_hits);
+        assert_eq!(rh.deletes, report.deletes);
+        assert_eq!(fh.len(), f1.len());
+        assert_eq!(fh.to_frozen(), f1.to_frozen());
 
         // arm 2: direct op-at-a-time
         let mut f2 = Ocf::new(*f1.config());
@@ -475,6 +664,91 @@ mod tests {
         for &k in &model {
             assert!(filter.contains_one(k), "false negative for {k}");
             assert!(filter.contains_exact(k), "keystore lost {k}");
+        }
+    }
+
+    #[test]
+    fn generic_run_accepts_any_batched_filter() {
+        // the redesign's point: the same pipeline drives a baseline
+        // with default (scalar) batch impls — here through `dyn`
+        let mut gen = MixGenerator::new(
+            KeyDist::uniform(1 << 14),
+            OpMix::new(0.6, 0.4, 0.0), // blooms cannot delete
+            13,
+        );
+        let ops = gen.batch(5_000);
+        let mut filter = crate::filter::FilterBuilder::named("bloom")
+            .unwrap()
+            .with_initial_capacity(1 << 14)
+            .build()
+            .unwrap();
+        let (mut p, _) = pipeline(256);
+        let report = p.run(ops.iter().copied(), &mut filter);
+        assert_eq!(report.ops, 5_000);
+        assert_eq!(report.inserts + report.lookups, 5_000);
+        // every inserted key must be contained (no false negatives)
+        for op in &ops {
+            if let Op::Insert(k) = op {
+                assert!(filter.contains(*k), "bloom lost {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_concurrent_matches_run_sharded() {
+        use std::collections::HashSet;
+        let mk_ops = || {
+            let mut gen = MixGenerator::new(
+                KeyDist::uniform(1 << 14),
+                OpMix::new(0.5, 0.3, 0.2),
+                77,
+            );
+            gen.batch(15_000)
+        };
+        let cfg = OcfConfig {
+            mode: Mode::Eof,
+            initial_capacity: 2048,
+            ..OcfConfig::default()
+        };
+        let a = crate::filter::ShardedOcf::with_shards(4, cfg);
+        let b = crate::filter::ShardedOcf::with_shards(4, cfg);
+        let mut pa = IngestPipeline::new(
+            BatchPolicy {
+                max_batch: 512,
+                max_delay: std::time::Duration::from_millis(10),
+            },
+            HashExecutor::native(a.hasher()),
+        );
+        let mut pb = IngestPipeline::new(
+            BatchPolicy {
+                max_batch: 512,
+                max_delay: std::time::Duration::from_millis(10),
+            },
+            HashExecutor::native(b.hasher()),
+        );
+        let ra = pa.run_concurrent(mk_ops().into_iter(), &a);
+        let rb = pb.run_sharded(mk_ops().iter().copied(), &b);
+        assert_eq!(ra.ops, rb.ops);
+        assert_eq!(ra.inserts, rb.inserts);
+        assert_eq!(ra.lookup_hits, rb.lookup_hits);
+        assert_eq!(ra.deletes, rb.deletes);
+        assert_eq!(a.len(), b.len());
+        // exact-membership agreement with the sequential model
+        let mut model = HashSet::new();
+        for op in mk_ops() {
+            match op {
+                Op::Insert(k) => {
+                    model.insert(k);
+                }
+                Op::Delete(k) => {
+                    model.remove(&k);
+                }
+                Op::Lookup(_) => {}
+            }
+        }
+        assert_eq!(a.len(), model.len());
+        for &k in &model {
+            assert!(a.contains_one(k), "false negative for {k}");
         }
     }
 

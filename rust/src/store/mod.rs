@@ -26,5 +26,5 @@ pub mod sstable;
 
 pub use flush::{FlushPolicy, FlushReason};
 pub use memtable::{Entry, Memtable};
-pub use node::{NodeConfig, NodeFilter, NodeStats, StorageNode};
+pub use node::{NodeConfig, NodeStats, StorageNode};
 pub use sstable::{FrozenFilter, SsTable};

@@ -1,4 +1,5 @@
-//! A storage node: memtable + SSTables + the node-level OCF filter.
+//! A storage node: memtable + SSTables + the node-level membership
+//! filter.
 //!
 //! This is the unit the paper's experiments live on. The node-level
 //! filter tracks the node's *live key population* (memtable + SSTables,
@@ -6,31 +7,52 @@
 //! each SSTable additionally carries its own frozen filter, Cassandra
 //! style, to prune run probes.
 //!
+//! Since the Filter API v2 redesign the node is **filter-generic**: it
+//! holds a [`DynFilter`] (`Box<dyn BatchedFilter + Send + Sync>`) built
+//! by the [`FilterBuilder`] in [`NodeConfig::filter`], so any backend —
+//! plain [`Ocf`](crate::filter::Ocf), the sharded concurrent front-end,
+//! a raw cuckoo, or a bloom baseline — drops in by name with no
+//! node-side dispatch (the old `NodeFilter` enum's hand-written
+//! method-by-method match is gone). Capability probes keep semantics
+//! exact for every backend:
+//!
+//! * delete verification uses [`MembershipFilter::contains_exact`] when
+//!   the filter carries an authoritative key store (the OCF family) and
+//!   falls back to the node's own ground truth (memtable + SSTables)
+//!   otherwise, so verified deletes stay safe even on a bloom filter
+//!   that cannot verify anything — and only exact filters delete their
+//!   own entries, so a probabilistic backend can go stale but can never
+//!   produce a false-negative read;
+//! * [`StorageNode::live_keys`] uses [`MembershipFilter::exact_len`]
+//!   when available and counts the live set directly when not.
+//!
 //! Read path for `get(k)`:
-//! 1. node OCF says "absent" → done (no memtable/SSTable work);
+//! 1. node filter says "absent" → done (no memtable/SSTable work);
 //! 2. memtable (put → found, tombstone → absent);
 //! 3. SSTables newest→oldest, each gated by its frozen filter.
 //!
-//! Write path: memtable upsert + OCF insert; then the [`FlushPolicy`]
-//! decides whether to freeze (premature flushes are exactly what a
-//! pressured fixed filter causes — experiment E6).
+//! Write path: memtable upsert + filter insert; then the
+//! [`FlushPolicy`] decides whether to freeze (premature flushes are
+//! exactly what a pressured fixed filter causes — experiment E6).
 
 use super::compaction::{merge_tables, CompactionPolicy};
 use super::flush::{FlushPolicy, FlushReason};
 use super::memtable::{Entry, Memtable};
 use super::sstable::SsTable;
-use crate::filter::{FilterError, FilterStats, MembershipFilter, Mode, Ocf, OcfConfig, ShardedOcf};
+use crate::filter::{
+    BatchedFilter, DynFilter, FilterBuilder, MembershipFilter, Mode, OcfConfig, ProbeSession,
+};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 /// Node configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct NodeConfig {
     pub node_id: u64,
-    pub filter: OcfConfig,
-    /// Shards for the node-level filter: 1 = plain single-threaded
-    /// [`Ocf`]; > 1 = the concurrent [`ShardedOcf`] front-end (rounded
-    /// up to a power of two).
-    pub filter_shards: usize,
+    /// Node-filter construction: backend, capacity, shards, seeds —
+    /// the whole surface (`FilterBuilder::from(ocf_config)` migrates
+    /// pre-v2 call sites; `.with_shards(n)` replaces the old
+    /// `filter_shards` field).
+    pub filter: FilterBuilder,
     pub flush: FlushPolicy,
     pub compaction: CompactionPolicy,
     /// Value-size proxy for puts (bytes accounted in the memtable).
@@ -41,113 +63,10 @@ impl Default for NodeConfig {
     fn default() -> Self {
         Self {
             node_id: 0,
-            filter: OcfConfig::default(),
-            filter_shards: 1,
+            filter: FilterBuilder::default(),
             flush: FlushPolicy::default(),
             compaction: CompactionPolicy::default(),
             value_len: 64,
-        }
-    }
-}
-
-/// The node-level live-set filter: plain OCF or the sharded concurrent
-/// front-end, selected by [`NodeConfig::filter_shards`]. Both variants
-/// expose the same surface, so the node's read/write paths are
-/// agnostic to the choice.
-#[derive(Debug)]
-pub enum NodeFilter {
-    Single(Box<Ocf>),
-    Sharded(ShardedOcf),
-}
-
-impl NodeFilter {
-    fn build(cfg: &NodeConfig, initial_capacity: usize) -> Self {
-        let fcfg = OcfConfig {
-            initial_capacity,
-            ..cfg.filter
-        };
-        if cfg.filter_shards > 1 {
-            NodeFilter::Sharded(ShardedOcf::with_shards(cfg.filter_shards, fcfg))
-        } else {
-            NodeFilter::Single(Box::new(Ocf::new(fcfg)))
-        }
-    }
-
-    pub fn insert(&mut self, key: u64) -> Result<(), FilterError> {
-        match self {
-            NodeFilter::Single(f) => f.insert(key),
-            NodeFilter::Sharded(f) => f.insert_one(key),
-        }
-    }
-
-    pub fn contains(&self, key: u64) -> bool {
-        match self {
-            NodeFilter::Single(f) => f.contains(key),
-            NodeFilter::Sharded(f) => f.contains_one(key),
-        }
-    }
-
-    /// Exact membership via the authoritative keystore(s).
-    pub fn contains_exact(&self, key: u64) -> bool {
-        match self {
-            NodeFilter::Single(f) => f.contains_exact(key),
-            NodeFilter::Sharded(f) => f.contains_exact(key),
-        }
-    }
-
-    pub fn delete(&mut self, key: u64) -> bool {
-        match self {
-            NodeFilter::Single(f) => f.delete(key),
-            NodeFilter::Sharded(f) => f.delete_one(key),
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        match self {
-            NodeFilter::Single(f) => f.len(),
-            NodeFilter::Sharded(f) => f.len(),
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    pub fn capacity(&self) -> usize {
-        match self {
-            NodeFilter::Single(f) => f.capacity(),
-            NodeFilter::Sharded(f) => f.capacity(),
-        }
-    }
-
-    pub fn occupancy(&self) -> f64 {
-        match self {
-            NodeFilter::Single(f) => f.occupancy(),
-            NodeFilter::Sharded(f) => f.occupancy(),
-        }
-    }
-
-    pub fn memory_bytes(&self) -> usize {
-        match self {
-            NodeFilter::Single(f) => f.memory_bytes(),
-            NodeFilter::Sharded(f) => f.memory_bytes(),
-        }
-    }
-
-    /// Aggregated filter stats (merged across shards when sharded).
-    pub fn stats(&self) -> FilterStats {
-        match self {
-            NodeFilter::Single(f) => f.stats(),
-            NodeFilter::Sharded(f) => f.stats(),
-        }
-    }
-
-    /// Batched membership through the prefetch-pipelined probe engine
-    /// (positionally aligned with `keys`).
-    pub fn contains_batch(&self, keys: &[u64]) -> Vec<bool> {
-        match self {
-            NodeFilter::Single(f) => f.contains_batch(keys),
-            NodeFilter::Sharded(f) => f.contains_batch(keys),
         }
     }
 }
@@ -161,7 +80,8 @@ impl NodeConfig {
                 mode: Mode::Static,
                 initial_capacity: capacity,
                 ..OcfConfig::default()
-            },
+            }
+            .into(),
             flush: FlushPolicy::default().with_filter_pressure(0.85),
             ..Self::default()
         }
@@ -225,24 +145,43 @@ impl Clone for NodeStats {
     }
 }
 
-/// A single storage node.
+/// A single storage node, generic over its live-set filter through the
+/// [`BatchedFilter`] trait object (see the module docs).
 #[derive(Debug)]
 pub struct StorageNode {
     cfg: NodeConfig,
     memtable: Memtable,
     sstables: Vec<SsTable>,
-    /// Node-level live-set filter (the paper's OCF; optionally sharded).
-    filter: NodeFilter,
+    /// Node-level live-set filter (any backend; built by name).
+    filter: DynFilter,
     next_generation: u64,
     pub stats: NodeStats,
 }
 
 impl StorageNode {
+    /// Build a node, constructing the filter from
+    /// [`NodeConfig::filter`].
+    ///
+    /// # Panics
+    /// If the filter builder fails validation (config-file and CLI
+    /// paths validate earlier with a proper error; programmatic
+    /// construction with invalid knobs is a bug).
     pub fn new(cfg: NodeConfig) -> Self {
+        let filter = cfg
+            .filter
+            .build()
+            .unwrap_or_else(|e| panic!("NodeConfig::filter: {e}"));
+        Self::with_filter(cfg, filter)
+    }
+
+    /// Build a node around an already-constructed filter (typed
+    /// callers that want to keep a handle on the concrete type can
+    /// box their own).
+    pub fn with_filter(cfg: NodeConfig, filter: DynFilter) -> Self {
         Self {
             memtable: Memtable::new(),
             sstables: Vec::new(),
-            filter: NodeFilter::build(&cfg, cfg.filter.initial_capacity),
+            filter,
             next_generation: 1,
             cfg,
             stats: NodeStats::default(),
@@ -253,8 +192,10 @@ impl StorageNode {
         &self.cfg
     }
 
-    pub fn filter(&self) -> &NodeFilter {
-        &self.filter
+    /// The node-level filter, as the capability trait it is used
+    /// through.
+    pub fn filter(&self) -> &(dyn BatchedFilter + Send + Sync) {
+        &*self.filter
     }
 
     pub fn sstable_count(&self) -> usize {
@@ -265,9 +206,14 @@ impl StorageNode {
         self.memtable.len()
     }
 
-    /// Total live keys on the node (exact, via the filter's keystore).
+    /// Total live keys on the node: exact via the filter's key store
+    /// when it has one, counted from the node's own tables otherwise.
     pub fn live_keys(&self) -> usize {
-        self.filter.len()
+        self.filter.exact_len().unwrap_or_else(|| {
+            let mut n = 0usize;
+            self.for_each_live_key(|_| n += 1);
+            n
+        })
     }
 
     /// Insert/overwrite a key. Returns Err only in Static filter mode
@@ -292,16 +238,36 @@ impl StorageNode {
         Ok(())
     }
 
-    /// Delete a key (verified against the node's authoritative state —
-    /// the paper's safe-delete path).
+    /// Delete a key, verified against the node's authoritative state —
+    /// the paper's safe-delete path. Filters with a key store answer
+    /// the verification exactly ([`MembershipFilter::contains_exact`]);
+    /// for the rest the node consults its own ground truth (memtable +
+    /// SSTables), so a bloom-backed node still never deletes an absent
+    /// key.
     pub fn delete(&mut self, key: u64) -> bool {
         self.stats.deletes += 1;
-        // authority: the OCF keystore tracks the node's live set exactly
-        if !self.filter.contains_exact(key) {
+        let exact = self.filter.contains_exact(key);
+        let live = match exact {
+            Some(live) => live,
+            None => self.read_tables(key),
+        };
+        if !live {
             return false;
         }
         self.memtable.delete(key);
-        self.filter.delete(key);
+        // Only filters with an authoritative key store delete their own
+        // entries — their removal is exact. For the rest the filter
+        // stays over-approximate (bloom semantics): a probabilistic
+        // delete (raw cuckoo's unverified fingerprint removal, counting
+        // bloom's counter decrement) could strip a *colliding live*
+        // key's evidence and turn the filter short-circuit in
+        // [`StorageNode::get`] into a false negative. Staleness only
+        // costs short-circuit efficiency, never correctness, and
+        // pressure-flush rebuilds re-tighten the filter from the live
+        // set.
+        if exact.is_some() {
+            self.filter.delete(key);
+        }
         self.maybe_flush();
         true
     }
@@ -322,7 +288,8 @@ impl StorageNode {
     /// filter probe short-circuit definitely-absent keys (the node's
     /// negative-lookup fast path), then only survivors walk the
     /// memtable/SSTable read path. Positionally aligned with `keys`;
-    /// answer-identical to calling [`StorageNode::get`] per key.
+    /// answer-identical to calling [`StorageNode::get`] per key — for
+    /// every backend, including default-batch baselines (proptest P12).
     pub fn get_batch(&self, keys: &[u64]) -> Vec<bool> {
         self.stats.gets.fetch_add(keys.len() as u64, Relaxed);
         let pass = self.filter.contains_batch(keys);
@@ -388,9 +355,13 @@ impl StorageNode {
         let run = self.memtable.drain_sorted();
         let gen = self.next_generation;
         self.next_generation += 1;
-        let seed = self.cfg.filter.seed ^ gen;
-        self.sstables
-            .push(SsTable::from_sorted_run(run, gen, self.cfg.filter.fp_bits, seed));
+        let seed = self.cfg.filter.ocf.seed ^ gen;
+        self.sstables.push(SsTable::from_sorted_run(
+            run,
+            gen,
+            self.cfg.filter.ocf.fp_bits,
+            seed,
+        ));
         // Fixed-filter nodes rebuild their node filter from the live set
         // after a pressure flush ("complete rebuild of the in-memory
         // data structures" — the cost the paper wants to avoid).
@@ -401,16 +372,22 @@ impl StorageNode {
     }
 
     fn rebuild_node_filter(&mut self) {
-        let mut fresh = NodeFilter::build(
-            &self.cfg,
-            (self.filter.len() * 2).max(self.cfg.filter.initial_capacity),
-        );
-        // live set = current filter keystore (exact)
-        let mut keys: Vec<u64> = Vec::with_capacity(self.filter.len());
+        let live = self.live_keys();
+        let capacity = (live * 2).max(self.cfg.filter.ocf.initial_capacity);
+        let mut fresh = self
+            .cfg
+            .filter
+            .clone()
+            .with_initial_capacity(capacity)
+            .build()
+            .expect("filter config was validated at node construction");
+        let mut keys: Vec<u64> = Vec::with_capacity(live);
         self.for_each_live_key(|k| keys.push(k));
-        for k in keys {
-            let _ = fresh.insert(k);
-        }
+        // Rebuild through the batched engine (bulk hash + pipelined
+        // inserts); failures are tolerated like the old per-key loop.
+        let mut session = ProbeSession::new();
+        let mut results = Vec::with_capacity(keys.len());
+        fresh.insert_batch_into(&keys, &mut session, &mut results);
         self.filter = fresh;
     }
 
@@ -463,11 +440,11 @@ impl StorageNode {
         let merged = merge_tables(&self.sstables, self.cfg.compaction.drop_tombstones);
         let gen = self.next_generation;
         self.next_generation += 1;
-        let seed = self.cfg.filter.seed ^ gen;
+        let seed = self.cfg.filter.ocf.seed ^ gen;
         self.sstables = vec![SsTable::from_sorted_run(
             merged,
             gen,
-            self.cfg.filter.fp_bits,
+            self.cfg.filter.ocf.fp_bits,
             seed,
         )];
     }
@@ -558,7 +535,7 @@ mod tests {
     fn get_batch_matches_scalar_gets() {
         for shards in [1usize, 4] {
             let mut n = StorageNode::new(NodeConfig {
-                filter_shards: shards,
+                filter: FilterBuilder::default().with_shards(shards),
                 flush: FlushPolicy::small(500),
                 ..NodeConfig::default()
             });
@@ -584,7 +561,7 @@ mod tests {
         // the ROADMAP "sharded store read path" item: get takes &self,
         // so reader threads drive the (sharded) node filter directly
         let mut n = StorageNode::new(NodeConfig {
-            filter_shards: 4,
+            filter: FilterBuilder::default().with_shards(4),
             flush: FlushPolicy::small(1000),
             ..NodeConfig::default()
         });
@@ -656,7 +633,8 @@ mod tests {
                 mode: Mode::Static,
                 initial_capacity: 2048,
                 ..OcfConfig::default()
-            },
+            }
+            .into(),
             ..NodeConfig::default()
         });
         for k in 0..10_000u64 {
@@ -680,7 +658,7 @@ mod tests {
     #[test]
     fn sharded_filter_node_roundtrip() {
         let mut n = StorageNode::new(NodeConfig {
-            filter_shards: 4,
+            filter: FilterBuilder::default().with_shards(4),
             flush: FlushPolicy::small(1000),
             ..NodeConfig::default()
         });
@@ -688,6 +666,7 @@ mod tests {
             n.put(k).unwrap();
         }
         assert!(n.stats.flushes > 0, "small policy must have flushed");
+        assert_eq!(n.filter().name(), "sharded-ocf");
         for k in (0..5000u64).step_by(13) {
             assert!(n.get(k), "{k}");
         }
@@ -706,6 +685,61 @@ mod tests {
         }
         single.delete(7);
         assert_eq!(n.live_keys(), single.live_keys());
+    }
+
+    #[test]
+    fn bloom_backed_node_works_end_to_end() {
+        // the dyn payoff: a baseline filter with no batch code, no
+        // keystore and no delete support still gives a correct node
+        let mut n = StorageNode::new(NodeConfig {
+            filter: FilterBuilder::named("bloom")
+                .unwrap()
+                .with_initial_capacity(10_000),
+            flush: FlushPolicy::small(1000),
+            ..NodeConfig::default()
+        });
+        assert_eq!(n.filter().name(), "bloom");
+        for k in 0..3000u64 {
+            n.put(k).unwrap();
+        }
+        assert_eq!(n.live_keys(), 3000, "live count without a keystore");
+        // verified deletes ride the node's own ground truth
+        assert!(n.delete(7));
+        assert!(!n.delete(7), "second delete rejected");
+        assert!(!n.delete(999_999), "absent delete rejected");
+        assert_eq!(n.live_keys(), 2999);
+        // batched reads through the default scalar batch impls
+        let probes: Vec<u64> = (0..4000u64).collect();
+        let batched = n.get_batch(&probes);
+        for (&k, &b) in probes.iter().zip(&batched) {
+            assert_eq!(b, n.get(k), "key {k}");
+        }
+        assert!(!n.get(7), "deleted key stays dead");
+        assert!(n.get(8));
+    }
+
+    #[test]
+    fn every_builder_backend_drives_a_node() {
+        // dyn object-safety smoke: each backend by name, same workload
+        for name in crate::filter::FilterBackend::NAMES {
+            let mut n = StorageNode::new(NodeConfig {
+                filter: FilterBuilder::named(name)
+                    .unwrap()
+                    .with_initial_capacity(8192),
+                flush: FlushPolicy::small(2000),
+                ..NodeConfig::default()
+            });
+            for k in 0..1000u64 {
+                n.put(k).unwrap_or_else(|e| panic!("{name}: put {k}: {e}"));
+            }
+            for k in (0..1000u64).step_by(7) {
+                assert!(n.get(k), "{name}: lost {k}");
+            }
+            assert!(n.delete(3), "{name}: verified delete of live key");
+            assert!(!n.get(3), "{name}: deleted key visible");
+            assert!(!n.delete(5_000_000), "{name}: absent delete accepted");
+            assert_eq!(n.live_keys(), 999, "{name}");
+        }
     }
 
     #[test]

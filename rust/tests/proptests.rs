@@ -17,16 +17,22 @@
 //!      and safe under concurrent disjoint writers;
 //!  P11 the batched probe engine (`contains_batch`/`insert_batch`) is
 //!      bit-identical to scalar op loops for both table backends,
-//!      across non-power-of-two sizes and fingerprint widths 4..=32.
+//!      across non-power-of-two sizes and fingerprint widths 4..=32;
+//!  P12 the Filter API v2 contract: for EVERY `BatchedFilter` backend
+//!      the builder can name (both bucket tables, non-pow2 sizes), the
+//!      engine-overridden batch impls are bit-identical to the default
+//!      scalar trait impls, `dyn` dispatch included — and a
+//!      bloom-backed `StorageNode::get_batch` equals its scalar `get`
+//!      loop end-to-end.
 
 use ocf::cluster::{Cluster, ReplicationConfig};
 use ocf::filter::{
-    BucketTable, CuckooFilter, CuckooParams, FlatTable, MembershipFilter, Mode, Ocf, OcfConfig,
-    PackedTable, ShardedOcf, VictimPolicy,
+    BatchedFilter, BucketTable, CuckooFilter, CuckooParams, FilterBuilder, FilterError,
+    FlatTable, MembershipFilter, Mode, Ocf, OcfConfig, PackedTable, ShardedOcf, VictimPolicy,
 };
 use ocf::pipeline::{BatchPolicy, IngestPipeline};
 use ocf::runtime::HashExecutor;
-use ocf::store::{FlushPolicy, NodeConfig};
+use ocf::store::{FlushPolicy, NodeConfig, StorageNode};
 use ocf::testutil::prop::{prop_check, Gen};
 use ocf::workload::Op;
 use std::collections::HashSet;
@@ -550,6 +556,203 @@ fn p11_batched_probe_engine_matches_scalar() {
         |g| gen_batch_case(g),
         p11_check::<PackedTable>,
     );
+}
+
+/// The P12 reference arm: expose ONLY the default (scalar)
+/// `BatchedFilter` implementations for any backend, hiding whatever
+/// engine overrides the inner filter has.
+#[derive(Debug)]
+struct DefaultBatch<F>(F);
+
+impl<F: MembershipFilter> MembershipFilter for DefaultBatch<F> {
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        self.0.insert(key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.0.contains(key)
+    }
+    fn delete(&mut self, key: u64) -> bool {
+        self.0.delete(key)
+    }
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+    fn capacity(&self) -> usize {
+        self.0.capacity()
+    }
+    fn memory_bytes(&self) -> usize {
+        self.0.memory_bytes()
+    }
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+}
+
+// No overrides: every batch method is the trait's scalar default.
+impl<F: MembershipFilter> BatchedFilter for DefaultBatch<F> {}
+
+/// P12 case: a backend name + geometry + op sets.
+#[derive(Debug, Clone)]
+struct V2Case {
+    backend: &'static str,
+    capacity: usize,
+    fp_bits: u32,
+    shards: usize,
+    keys: Vec<u64>,
+    probes: Vec<u64>,
+    deletes: Vec<u64>,
+}
+
+fn gen_v2_case(g: &mut Gen) -> V2Case {
+    let backend = *g.choose(&[
+        "ocf-eof",
+        "ocf-pre",
+        "ocf-static",
+        "sharded",
+        "cuckoo",
+        "cuckoo-packed",
+        "bloom",
+        "counting-bloom",
+        "scalable-bloom",
+    ]);
+    // non-power-of-two capacities exercise the Lemire index +
+    // mod-subtract alt mapping inside the engine-backed backends
+    let capacity = *g.choose(&[500usize, 1000, 1024, 3000, 4096, 4100]);
+    let fp_bits = g.usize_in(4, 32) as u32;
+    let nkeys = g.usize_in(1, 1500);
+    let keys = g.vec(nkeys, |g| g.u64_below(1 << 20));
+    let probes = g.vec(g.usize_in(1, 1500), |g| g.u64_below(1 << 21));
+    let deletes = g.vec(g.usize_in(1, 500), |g| g.u64_below(1 << 20));
+    V2Case {
+        backend,
+        capacity,
+        fp_bits,
+        shards: if backend == "sharded" {
+            *g.choose(&[2usize, 4, 8])
+        } else {
+            1
+        },
+        keys,
+        probes,
+        deletes,
+    }
+}
+
+fn v2_builder(case: &V2Case) -> FilterBuilder {
+    let mut b = FilterBuilder::named(case.backend).unwrap();
+    b.shards = case.shards.max(b.shards);
+    b.ocf.initial_capacity = case.capacity;
+    b.ocf.fp_bits = case.fp_bits;
+    b
+}
+
+#[test]
+fn p12_engine_batch_impls_match_default_scalar_impls() {
+    prop_check(
+        "v2-engine-vs-default",
+        40,
+        gen_v2_case,
+        |case| {
+            let builder = v2_builder(case);
+            // engine arm: the backend's real BatchedFilter impl,
+            // driven through `dyn` (object safety included in the pin)
+            let mut engine = builder.build().unwrap();
+            // reference arm: identical backend, default scalar impls
+            let mut default = DefaultBatch(builder.build().unwrap());
+
+            let ra = engine.insert_batch(&case.keys);
+            let rb = default.insert_batch(&case.keys);
+            if ra != rb || engine.len() != default.len() {
+                return false;
+            }
+            if engine.contains_batch(&case.probes) != default.contains_batch(&case.probes) {
+                return false;
+            }
+            let da = engine.delete_batch(&case.deletes);
+            let db = default.delete_batch(&case.deletes);
+            if da != db || engine.len() != default.len() {
+                return false;
+            }
+            engine.contains_batch(&case.probes) == default.contains_batch(&case.probes)
+        },
+    );
+}
+
+#[test]
+fn p12_bloom_backed_node_get_batch_matches_scalar() {
+    prop_check(
+        "v2-bloom-node-batch",
+        20,
+        |g| {
+            let nkeys = g.usize_in(10, 2000);
+            let keys = g.vec(nkeys, |g| g.u64_below(1 << 16));
+            let dels = g.vec(g.usize_in(1, 300), |g| g.u64_below(1 << 16));
+            let probes = g.vec(g.usize_in(1, 2000), |g| g.u64_below(1 << 17));
+            (keys, dels, probes)
+        },
+        |(keys, dels, probes)| {
+            let mut node = StorageNode::new(NodeConfig {
+                filter: FilterBuilder::named("bloom")
+                    .unwrap()
+                    .with_initial_capacity(1 << 16),
+                flush: FlushPolicy::small(500),
+                ..NodeConfig::default()
+            });
+            for &k in keys {
+                if node.put(k).is_err() {
+                    return false;
+                }
+            }
+            let mut model: HashSet<u64> = keys.iter().copied().collect();
+            for &k in dels {
+                if node.delete(k) != model.remove(&k) {
+                    return false;
+                }
+            }
+            // batched reads (default scalar batch impls on bloom) must
+            // equal the scalar read loop AND the exact model
+            let batched = node.get_batch(probes);
+            probes.iter().zip(&batched).all(|(&k, &b)| {
+                b == node.get(k) && (!model.contains(&k) || b)
+            }) && node.live_keys() == model.len()
+        },
+    );
+}
+
+#[test]
+fn p12_every_backend_drives_a_node_by_name() {
+    // dyn object-safety smoke across the whole builder name table:
+    // StorageNode (boxed BatchedFilter) + a mixed workload per backend
+    for name in ocf::filter::FilterBackend::NAMES {
+        let mut node = StorageNode::new(NodeConfig {
+            filter: FilterBuilder::named(name)
+                .unwrap()
+                .with_initial_capacity(16_384),
+            flush: FlushPolicy::small(1_500),
+            ..NodeConfig::default()
+        });
+        let mut model = HashSet::new();
+        for k in 0..4000u64 {
+            node.put(k).unwrap_or_else(|e| panic!("{name}: put {k}: {e}"));
+            model.insert(k);
+        }
+        for k in (0..4000u64).step_by(3) {
+            assert_eq!(node.delete(k), model.remove(&k), "{name}: delete {k}");
+        }
+        assert_eq!(node.live_keys(), model.len(), "{name}");
+        // Survivor visibility is guaranteed for EVERY backend: the node
+        // never forwards deletes to a filter that cannot verify them
+        // exactly, so probabilistic backends go stale instead of
+        // growing false negatives.
+        for &k in model.iter().take(500) {
+            assert!(node.get(k), "{name}: lost {k}");
+        }
+        let absent: Vec<u64> = (9_000_000..9_000_500).collect();
+        assert!(
+            node.get_batch(&absent).iter().all(|&b| !b),
+            "{name}: absent keys visible"
+        );
+    }
 }
 
 #[test]

@@ -122,7 +122,8 @@ fn premature_flush_counters_differ_between_arms() {
             mode: Mode::Static,
             initial_capacity: 4096,
             ..OcfConfig::default()
-        },
+        }
+        .into(),
         flush: FlushPolicy::small(1_000_000).with_filter_pressure(0.85),
         ..NodeConfig::default()
     });

@@ -1,0 +1,125 @@
+//! pipeline_pool — the pooled-ingest perf trajectory point.
+//!
+//! Runs the E11 arms (single-thread batched apply, scoped per-batch
+//! fan-out, persistent worker pool at several worker counts, and the
+//! filter-generic mutex-wrapped chunk dispatch) over one shared op
+//! stream and emits `BENCH_pipeline.json` so the speedup of the pooled
+//! engine over the scoped fan-out is *measured*, not asserted. See
+//! `rust/src/pipeline/README.md` for how to read it.
+//!
+//! Env knobs:
+//!   `OCF_BENCH_SCALE` — fraction of paper scale (default 1.0 = 2M ops
+//!                       per arm);
+//!   `OCF_BENCH_SMOKE` — any value: tiny N (fast CI gate that mainly
+//!                       asserts the JSON artifact is emitted + valid);
+//!   `OCF_BENCH_JSON`  — output path (default: the committed
+//!                       `BENCH_pipeline.json` at the repo root).
+
+use ocf::exp::pool::{best_pooled, measure, render, speedup, PoolPoint, BATCH, SHARDS};
+
+fn json_points(points: &[PoolPoint]) -> String {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"mode\": \"{}\", \"workers\": {}, \"ops\": {}, \"secs\": {:.6}, \
+                 \"mops\": {:.3}, \"batches\": {}, \"inserts\": {}, \"hits\": {}, \
+                 \"deletes\": {}}}",
+                p.mode, p.workers, p.ops, p.secs, p.mops(), p.batches, p.inserts, p.hits,
+                p.deletes
+            )
+        })
+        .collect();
+    rows.join(",\n")
+}
+
+fn main() {
+    let smoke = std::env::var("OCF_BENCH_SMOKE").is_ok();
+    let scale: f64 = std::env::var("OCF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let n_ops = if smoke {
+        20_000
+    } else {
+        ((2_000_000f64 * scale) as usize).max(20_000)
+    };
+    // Default to the committed repo-root artifact regardless of CWD
+    // (cargo runs bench binaries from the package root, not the repo
+    // root — a bare relative path would strand the output in rust/).
+    let path = std::env::var("OCF_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pipeline.json").into());
+
+    let worker_counts = [1usize, 2, 4, 8];
+    eprintln!("pipeline_pool: {n_ops} ops/arm, {SHARDS} shards, batch {BATCH} (smoke={smoke})");
+    let points = measure(n_ops, &worker_counts);
+
+    println!(
+        "{}",
+        render(
+            format!("pipeline_pool — pooled vs scoped vs single ({n_ops} ops, {SHARDS} shards)"),
+            &points,
+        )
+    );
+
+    // The acceptance bar this bench exists to track: the persistent
+    // pool beats the per-batch scoped fan-out at full scale. (Smoke
+    // runs are too small for stable ratios, so they only warn.)
+    let pooled_vs_scoped = speedup(&points, "pooled", "scoped").unwrap_or(0.0);
+    if pooled_vs_scoped <= 1.0 {
+        let msg = format!(
+            "pooled {pooled_vs_scoped:.2}x scoped — worker pool not paying for itself"
+        );
+        if smoke {
+            eprintln!("WARN (smoke, thread-startup dominated): {msg}");
+        } else {
+            eprintln!("WARN: {msg}");
+        }
+    }
+
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    // `measured: true` distinguishes real runs from the committed
+    // schema seed (`measured: false`); keep both files field-compatible.
+    let json = format!(
+        "{{\n  \"bench\": \"pipeline_pool\",\n  \"unix_time\": {unix_time},\n  \
+         \"smoke\": {smoke},\n  \"measured\": true,\n  \"phase\": \"pr4-pooled-ingest\",\n  \
+         \"note\": \"regenerate with: cargo bench --bench pipeline_pool (full scale)\",\n  \
+         \"n_ops\": {n_ops},\n  \"batch\": {BATCH},\n  \"shards\": {SHARDS},\n  \
+         \"arms\": [\n{}\n  ],\n  \
+         \"speedup\": {{\"pooled_vs_scoped\": {:.3}, \"pooled_vs_single\": {:.3}, \
+         \"scoped_vs_single\": {:.3}, \"best_pooled_workers\": {}}}\n}}\n",
+        json_points(&points),
+        pooled_vs_scoped,
+        speedup(&points, "pooled", "single").unwrap_or(0.0),
+        speedup(&points, "scoped", "single").unwrap_or(0.0),
+        best_pooled(&points).map(|p| p.workers).unwrap_or(0),
+    );
+    std::fs::write(&path, &json).expect("write BENCH_pipeline.json");
+
+    // Emission self-check: the artifact must exist, round-trip, and
+    // carry every field the trajectory tooling keys on.
+    let back = std::fs::read_to_string(&path).expect("read back BENCH_pipeline.json");
+    assert_eq!(back, json, "artifact round-trip");
+    for field in [
+        "\"bench\": \"pipeline_pool\"",
+        "\"measured\": true",
+        "\"arms\"",
+        "\"speedup\"",
+        "\"pooled_vs_scoped\"",
+        "\"best_pooled_workers\"",
+    ] {
+        assert!(back.contains(field), "BENCH_pipeline.json missing {field}");
+    }
+    assert_eq!(
+        back.matches("\"mode\": \"pooled\"").count(),
+        worker_counts.len(),
+        "expected one pooled arm per worker count"
+    );
+    for mode in ["\"mode\": \"single\"", "\"mode\": \"scoped\"", "\"mode\": \"pooled-mutex\""] {
+        assert_eq!(back.matches(mode).count(), 1, "expected one {mode} arm");
+    }
+    eprintln!("pipeline_pool: wrote {path}");
+}

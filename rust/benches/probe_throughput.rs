@@ -16,7 +16,7 @@
 //!                       `BENCH_probe.json` at the repo root).
 
 use ocf::exp::probe::{dyn_overhead, measure, render, speedup, ProbePoint, BATCH};
-use ocf::filter::PREFETCH_DEPTH;
+use ocf::filter::prefetch_depth;
 
 fn json_points(points: &[ProbePoint]) -> String {
     let rows: Vec<String> = points
@@ -58,6 +58,8 @@ fn main() {
     let path = std::env::var("OCF_BENCH_JSON")
         .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_probe.json").into());
 
+    // effective (env-overridable) engine depth — see the filter README
+    let depth = prefetch_depth();
     eprintln!("probe_throughput: {n_keys} resident keys, {n_probes} probes/arm (smoke={smoke})");
     let points = measure(n_keys, n_probes);
 
@@ -66,7 +68,7 @@ fn main() {
         render(
             format!(
                 "probe_throughput — scalar vs batched vs batched-dyn (prefetch depth \
-                 {PREFETCH_DEPTH}, {n_keys} keys)"
+                 {depth}, {n_keys} keys)"
             ),
             &points,
         )
@@ -108,7 +110,7 @@ fn main() {
          \"smoke\": {smoke},\n  \"measured\": true,\n  \"phase\": \"post-trait-redesign\",\n  \
          \"note\": \"regenerate with: cargo bench --bench probe_throughput (full scale)\",\n  \
          \"n_keys\": {n_keys},\n  \"n_probes\": {n_probes},\n  \
-         \"batch\": {BATCH},\n  \"prefetch_depth\": {PREFETCH_DEPTH},\n  \"arms\": [\n{}\n  ],\n  \
+         \"batch\": {BATCH},\n  \"prefetch_depth\": {depth},\n  \"arms\": [\n{}\n  ],\n  \
          \"speedup\": {{\"flat_neg\": {:.3}, \"packed_neg\": {:.3}, \
          \"flat_pos\": {:.3}, \"packed_pos\": {:.3}, \"bloom_neg\": {:.3}}},\n  \
          \"trait_overhead\": {{\"flat_neg\": {:.3}, \"packed_neg\": {:.3}, \

@@ -18,6 +18,7 @@ pub mod parser;
 pub use parser::{ConfigError, ConfigTree, Value};
 
 use crate::filter::{FilterBuilder, Mode};
+use crate::pipeline::PoolConfig;
 use crate::store::{FlushPolicy, NodeConfig};
 
 /// Typed application config assembled from file + overrides.
@@ -34,6 +35,10 @@ pub struct OcfFileConfig {
     /// Pipeline shape.
     pub batch_size: usize,
     pub queue_depth: usize,
+    /// Worker threads of the pooled ingest engine (`0` = auto).
+    pub workers: usize,
+    /// Task grain (ops) of the pooled engine's chunk-parallel dispatch.
+    pub chunk_size: usize,
     /// Artifacts directory for the PJRT runtime.
     pub artifacts_dir: String,
 }
@@ -48,6 +53,8 @@ impl Default for OcfFileConfig {
             rf: 1,
             batch_size: 1024,
             queue_depth: 64,
+            workers: 0,
+            chunk_size: 1024,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -148,7 +155,28 @@ impl OcfFileConfig {
             cfg.batch_size = v as usize;
         }
         if let Some(v) = tree.get_int("pipeline", "queue_depth")? {
+            if !(1..=65536).contains(&v) {
+                return Err(ConfigError::Invalid(format!(
+                    "pipeline.queue_depth must be 1..=65536, got {v}"
+                )));
+            }
             cfg.queue_depth = v as usize;
+        }
+        if let Some(v) = tree.get_int("pipeline", "workers")? {
+            if !(0..=4096).contains(&v) {
+                return Err(ConfigError::Invalid(format!(
+                    "pipeline.workers must be 0 (auto) ..= 4096, got {v}"
+                )));
+            }
+            cfg.workers = v as usize;
+        }
+        if let Some(v) = tree.get_int("pipeline", "chunk_size")? {
+            if v < 1 {
+                return Err(ConfigError::Invalid(format!(
+                    "pipeline.chunk_size must be >= 1, got {v}"
+                )));
+            }
+            cfg.chunk_size = v as usize;
         }
         if let Some(v) = tree.get_str("runtime", "artifacts_dir")? {
             cfg.artifacts_dir = v;
@@ -170,6 +198,16 @@ impl OcfFileConfig {
             tree.apply_override(ov)?;
         }
         Self::from_tree(&tree)
+    }
+
+    /// The pooled ingest engine's shape assembled from the `[pipeline]`
+    /// section (`workers` / `queue_depth` / `chunk_size`).
+    pub fn pool(&self) -> PoolConfig {
+        PoolConfig {
+            workers: self.workers,
+            queue_depth: self.queue_depth,
+            chunk: self.chunk_size,
+        }
     }
 }
 
@@ -256,6 +294,32 @@ batch_size = 4096
         assert_eq!(cfg.node.filter.shards, 4);
         assert!(OcfFileConfig::load("[filter]\nshards = 0\n", &[]).is_err());
         assert!(OcfFileConfig::load("[filter]\nshards = 1000000000\n", &[]).is_err());
+    }
+
+    #[test]
+    fn pipeline_pool_knobs_parse_and_validate() {
+        let cfg = OcfFileConfig::load("", &[]).unwrap();
+        assert_eq!(cfg.workers, 0, "pooled workers default to auto");
+        assert_eq!(cfg.chunk_size, 1024);
+        assert!(cfg.pool().effective_workers() >= 1);
+
+        let text = "[pipeline]\nworkers = 6\nqueue_depth = 8\nchunk_size = 256\n";
+        let cfg = OcfFileConfig::load(text, &[]).unwrap();
+        let pool = cfg.pool();
+        assert_eq!(pool.workers, 6);
+        assert_eq!(pool.queue_depth, 8);
+        assert_eq!(pool.chunk, 256);
+
+        // serve-style --set overrides hit the same keys
+        let cfg = OcfFileConfig::load("", &["pipeline.workers=3".into()]).unwrap();
+        assert_eq!(cfg.pool().effective_workers(), 3);
+
+        assert!(OcfFileConfig::load("[pipeline]\nworkers = 5000\n", &[]).is_err());
+        assert!(OcfFileConfig::load("[pipeline]\nchunk_size = 0\n", &[]).is_err());
+        // a negative/zero queue depth must not wrap into an unbounded
+        // backpressure window
+        assert!(OcfFileConfig::load("[pipeline]\nqueue_depth = 0\n", &[]).is_err());
+        assert!(OcfFileConfig::load("[pipeline]\nqueue_depth = -1\n", &[]).is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! | E8 | ablations (g, fp_bits, k-band)                    | [`ablation`] |
 //! | E9 | sharded concurrent front-end scaling              | [`sharded`] |
 //! | E10 | probe engine: scalar vs batched lookups          | [`probe`]  |
+//! | E11 | pooled ingest: persistent workers vs scoped fan-out | [`pool`] |
 //!
 //! Every driver takes a [`Scale`] so the same code serves quick checks
 //! (`--scale 0.01`), CI, and full paper-scale runs, and returns a
@@ -23,6 +24,7 @@ pub mod burst;
 pub mod cartesian;
 pub mod fig2;
 pub mod fig3;
+pub mod pool;
 pub mod probe;
 pub mod report;
 pub mod safety;
@@ -61,8 +63,9 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "ablation" => Ok(ablation::run(scale)),
             "sharded" => Ok(sharded::run(scale)),
             "probe" => Ok(probe::run(scale)),
+            "pool" => Ok(pool::run(scale)),
             other => Err(format!(
-                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe all)"
+                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool all)"
             )),
         }
     };
@@ -79,6 +82,7 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "ablation",
             "sharded",
             "probe",
+            "pool",
         ] {
             out.push_str(&one(n)?);
             out.push('\n');

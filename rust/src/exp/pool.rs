@@ -1,0 +1,276 @@
+//! E11 — the pooled ingest engine: persistent workers vs scoped
+//! fan-out vs a single thread.
+//!
+//! Drives the SAME op stream (a YCSB-style insert/lookup/delete mix)
+//! through four pipeline arms over identically-configured filters:
+//!
+//! * `single` — [`IngestPipeline::run_concurrent`]: one thread, the
+//!   batched `&self` trait surface (the no-parallelism floor);
+//! * `scoped` — [`IngestPipeline::run_sharded`]: the PR-1 design, a
+//!   fresh `thread::scope` fan-out per batch (thread startup on every
+//!   batch, hashing serialized against apply);
+//! * `pooled` — [`IngestPipeline::run_pooled`] at several worker
+//!   counts: persistent shard workers + staged hash/apply overlap;
+//! * `pooled-mutex` — `run_pooled` over a [`MutexFilter`]-wrapped OCF:
+//!   the filter-generic chunk dispatch (coarse lock, so this measures
+//!   pipeline overlap rather than apply parallelism).
+//!
+//! The sharded arms must produce **count-identical** reports (asserted
+//! here, property-tested as P13) — the speedup is measured against
+//! workloads that are provably the same work. `measure()` is shared
+//! with `benches/pipeline_pool.rs`, which emits the
+//! `BENCH_pipeline.json` trajectory point.
+//!
+//! [`IngestPipeline::run_concurrent`]: crate::pipeline::IngestPipeline::run_concurrent
+//! [`IngestPipeline::run_sharded`]: crate::pipeline::IngestPipeline::run_sharded
+//! [`IngestPipeline::run_pooled`]: crate::pipeline::IngestPipeline::run_pooled
+//! [`MutexFilter`]: crate::filter::MutexFilter
+
+use super::report::{f, Table};
+use super::Scale;
+use crate::filter::{MutexFilter, Ocf, OcfConfig, ShardedOcf};
+use crate::pipeline::{BatchPolicy, IngestPipeline, IngestReport, PoolConfig};
+use crate::runtime::HashExecutor;
+use crate::workload::{KeyDist, MixGenerator, Op, OpMix};
+use std::time::Duration;
+
+/// Shards of the concurrent front-end in every sharded arm.
+pub const SHARDS: usize = 8;
+/// Batch size of every arm (one size so the arms are comparable).
+pub const BATCH: usize = 4096;
+
+/// One measured arm.
+#[derive(Debug, Clone)]
+pub struct PoolPoint {
+    /// Arm ("single" | "scoped" | "pooled" | "pooled-mutex").
+    pub mode: &'static str,
+    /// Worker threads applying batches (1 for the serial arm; the
+    /// scoped arm peaks at one thread per non-empty shard group).
+    pub workers: usize,
+    pub ops: u64,
+    pub secs: f64,
+    pub batches: u64,
+    pub inserts: u64,
+    pub hits: u64,
+    pub deletes: u64,
+}
+
+impl PoolPoint {
+    pub fn mops(&self) -> f64 {
+        if self.secs <= 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / self.secs / 1e6
+        }
+    }
+}
+
+fn point(mode: &'static str, workers: usize, r: &IngestReport) -> PoolPoint {
+    PoolPoint {
+        mode,
+        workers,
+        ops: r.ops,
+        secs: r.elapsed_secs,
+        batches: r.batches,
+        inserts: r.inserts,
+        hits: r.lookup_hits,
+        deletes: r.deletes,
+    }
+}
+
+fn gen_ops(n: usize) -> Vec<Op> {
+    let mut gen = MixGenerator::new(KeyDist::uniform(1 << 24), OpMix::new(0.5, 0.3, 0.2), 0xE11);
+    gen.batch(n)
+}
+
+fn sharded() -> ShardedOcf {
+    ShardedOcf::with_shards(
+        SHARDS,
+        OcfConfig {
+            initial_capacity: 1 << 16,
+            ..OcfConfig::default()
+        },
+    )
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: BATCH,
+        max_delay: Duration::from_millis(5),
+    }
+}
+
+/// Measure every arm over one shared op stream. Sharded arms are
+/// asserted count-identical before any speedup is reported.
+pub fn measure(n_ops: usize, worker_counts: &[usize]) -> Vec<PoolPoint> {
+    let ops = gen_ops(n_ops);
+    let mut out = Vec::with_capacity(worker_counts.len() + 3);
+
+    // single thread, batched &self trait surface
+    {
+        let filter = sharded();
+        let mut p = IngestPipeline::new(policy(), HashExecutor::native(filter.hasher()));
+        let r = p.run_concurrent(ops.iter().copied(), &filter);
+        out.push(point("single", 1, &r));
+    }
+
+    // scoped per-batch fan-out (the pre-pool parallel mode)
+    {
+        let filter = sharded();
+        let mut p = IngestPipeline::new(policy(), HashExecutor::native(filter.hasher()));
+        let r = p.run_sharded(ops.iter().copied(), &filter);
+        out.push(point("scoped", SHARDS, &r));
+    }
+
+    // persistent pool at each worker count
+    for &w in worker_counts {
+        let filter = sharded();
+        let mut p = IngestPipeline::new(policy(), HashExecutor::native(filter.hasher()));
+        let cfg = PoolConfig {
+            workers: w,
+            queue_depth: 4,
+            chunk: 2048,
+        };
+        let r = p.run_pooled(ops.iter().copied(), &filter, &cfg);
+        out.push(point("pooled", w, &r));
+    }
+
+    // filter-generic chunk dispatch over a coarse-locked OCF
+    {
+        let filter = MutexFilter::new(Ocf::new(OcfConfig {
+            initial_capacity: 1 << 16,
+            ..OcfConfig::default()
+        }));
+        let mut p = IngestPipeline::new(
+            policy(),
+            HashExecutor::native(filter.with_inner(|fl| fl.hasher())),
+        );
+        let w = worker_counts.iter().copied().max().unwrap_or(4);
+        let cfg = PoolConfig {
+            workers: w,
+            queue_depth: 4,
+            chunk: 2048,
+        };
+        let r = p.run_pooled(ops.iter().copied(), &filter, &cfg);
+        out.push(point("pooled-mutex", w, &r));
+    }
+
+    // The speedups below are only meaningful because the sharded arms
+    // did provably identical work (P13 pins this property-wide).
+    let base = &out[0];
+    for p in &out[1..] {
+        assert_eq!(p.ops, base.ops, "{}: op count diverged", p.mode);
+        assert_eq!(p.inserts, base.inserts, "{}: inserts diverged", p.mode);
+        assert_eq!(p.deletes, base.deletes, "{}: deletes diverged", p.mode);
+        // hit counts are layout-dependent, so only arms sharing the
+        // sharded filter layout must agree exactly
+        if p.mode != "pooled-mutex" {
+            assert_eq!(p.hits, base.hits, "{}: lookup hits diverged", p.mode);
+        }
+    }
+    out
+}
+
+/// Throughput ratio `mode_a / mode_b` (best point of each mode);
+/// `None` if either arm is missing.
+pub fn speedup(points: &[PoolPoint], num: &str, den: &str) -> Option<f64> {
+    let best = |mode: &str| {
+        points
+            .iter()
+            .filter(|p| p.mode == mode)
+            .max_by(|a, b| a.mops().total_cmp(&b.mops()))
+    };
+    let (n, d) = (best(num)?, best(den)?);
+    if d.mops() > 0.0 {
+        Some(n.mops() / d.mops())
+    } else {
+        None
+    }
+}
+
+/// The best-throughput pooled point (the bench records its worker
+/// count alongside the speedups).
+pub fn best_pooled(points: &[PoolPoint]) -> Option<&PoolPoint> {
+    points
+        .iter()
+        .filter(|p| p.mode == "pooled")
+        .max_by(|a, b| a.mops().total_cmp(&b.mops()))
+}
+
+/// Render measured points as a markdown table (shared by the
+/// experiment driver and the `pipeline_pool` bench).
+pub fn render(title: impl Into<String>, points: &[PoolPoint]) -> String {
+    let mut table = Table::new(
+        title,
+        &["mode", "workers", "ops", "secs", "Mops/s", "vs single"],
+    );
+    let single = points.iter().find(|p| p.mode == "single").map(|p| p.mops());
+    for p in points {
+        let vs = match single {
+            Some(s) if s > 0.0 && p.mode != "single" => format!("{}x", f(p.mops() / s, 2)),
+            _ => String::new(),
+        };
+        table.row(&[
+            p.mode.to_string(),
+            p.workers.to_string(),
+            p.ops.to_string(),
+            f(p.secs, 3),
+            f(p.mops(), 2),
+            vs,
+        ]);
+    }
+    table.note(
+        "same op stream, same filter configs; sharded arms are asserted \
+         count-identical (inserts/hits/deletes) before speedups are \
+         reported. pooled = persistent workers + staged hash/apply \
+         overlap; scoped = per-batch thread::scope fan-out; pooled-mutex \
+         = filter-generic chunk dispatch behind one coarse lock.",
+    );
+    table.markdown()
+}
+
+/// The experiment driver (paper scale: 2M ops).
+pub fn run(scale: Scale) -> String {
+    let n_ops = scale.n(2_000_000, 20_000);
+    let max_w = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8);
+    let worker_counts: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&w| w == 1 || w <= max_w)
+        .collect();
+    let points = measure(n_ops, &worker_counts);
+    render(
+        format!("E11 — pooled ingest engine ({n_ops} ops, {SHARDS} shards, batch {BATCH})"),
+        &points,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arms_agree_and_cover_grid() {
+        let points = measure(20_000, &[1, 2]);
+        assert_eq!(points.len(), 5); // single + scoped + 2 pooled + pooled-mutex
+        for mode in ["single", "scoped", "pooled", "pooled-mutex"] {
+            assert!(points.iter().any(|p| p.mode == mode), "{mode} missing");
+        }
+        assert!(speedup(&points, "pooled", "single").is_some());
+        assert!(speedup(&points, "pooled", "scoped").is_some());
+        assert_eq!(best_pooled(&points).unwrap().mode, "pooled");
+        assert!(points.iter().all(|p| p.ops == 20_000));
+    }
+
+    #[test]
+    fn report_renders() {
+        let md = run(Scale(0.01));
+        assert!(md.contains("E11"));
+        assert!(md.contains("| single |"));
+        assert!(md.contains("| scoped |"));
+        assert!(md.contains("| pooled |"));
+        assert!(md.contains("| pooled-mutex |"));
+    }
+}

@@ -24,13 +24,49 @@ use super::{BatchedFilter, FilterError, MembershipFilter};
 use crate::util::SplitMix64;
 use std::collections::VecDeque;
 
-/// Software-pipeline depth of the batched probe engine: while key `i`
-/// resolves, the primary bucket of key `i + PREFETCH_DEPTH` is being
-/// prefetched (and alternate buckets of recent primary misses are in
-/// flight). ~8 keeps that many independent cache misses outstanding —
+/// Default software-pipeline depth of the batched probe engine: while
+/// key `i` resolves, the primary bucket of key `i + PREFETCH_DEPTH` is
+/// being prefetched (and alternate buckets of recent primary misses are
+/// in flight). ~8 keeps that many independent cache misses outstanding —
 /// about what one core's miss-handling registers sustain — without
 /// thrashing L1. See `rust/src/filter/README.md` for tuning notes.
+///
+/// Engine entry points call [`prefetch_depth`] instead of this constant
+/// so the depth can be retuned per process without a rebuild.
 pub const PREFETCH_DEPTH: usize = 8;
+
+static DEPTH_OVERRIDE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+
+/// Parse + validate an `OCF_PREFETCH_DEPTH` value: accepted depths are
+/// clamped into `1..=64` and rounded up to a power of two (the engine's
+/// windowing math assumes nothing, but pow2 keeps depths comparable
+/// across benches and avoids silly odd pipelines). `None` = invalid.
+fn parse_depth(s: &str) -> Option<usize> {
+    match s.trim().parse::<usize>() {
+        Ok(d) if d >= 1 => Some(d.min(64).next_power_of_two().min(64)),
+        _ => None,
+    }
+}
+
+/// Effective probe-pipeline depth for this process: [`PREFETCH_DEPTH`]
+/// unless the `OCF_PREFETCH_DEPTH` environment variable overrides it
+/// (validated and power-of-two-clamped into `1..=64`; an unparsable
+/// value falls back to the default with a one-time stderr warning).
+/// Read once and cached, so the engine's hot loops pay a single atomic
+/// load. See `rust/src/filter/README.md` ("The prefetch depth knob").
+#[inline]
+pub fn prefetch_depth() -> usize {
+    *DEPTH_OVERRIDE.get_or_init(|| match std::env::var("OCF_PREFETCH_DEPTH") {
+        Ok(s) => parse_depth(&s).unwrap_or_else(|| {
+            eprintln!(
+                "OCF_PREFETCH_DEPTH='{s}' invalid (want an integer in 1..=64); \
+                 using default {PREFETCH_DEPTH}"
+            );
+            PREFETCH_DEPTH
+        }),
+        Err(_) => PREFETCH_DEPTH,
+    })
+}
 
 /// What to do with the evicted fingerprint when an insert exhausts its
 /// displacement budget.
@@ -268,10 +304,14 @@ impl<T: BucketTable> CuckooFilter<T> {
         out.resize(base + n, false);
         let out = &mut out[base..];
 
+        // Engine entry: resolve the (env-overridable) pipeline depth
+        // once per batch — see `prefetch_depth`.
+        let depth = prefetch_depth();
+
         // Runs shorter than the pipeline depth get no overlap benefit;
         // resolve them scalar so short lookup runs (e.g. a mutation-
         // interleaved ingest batch) don't pay the scratch allocations.
-        if n <= PREFETCH_DEPTH {
+        if n <= depth {
             for (o, &t) in out.iter_mut().zip(triples) {
                 *o = self.contains_triple(t);
             }
@@ -283,16 +323,16 @@ impl<T: BucketTable> CuckooFilter<T> {
         i1s.extend(triples.iter().map(|&t| Hasher::primary_index(t, nb)));
 
         // Warm the first window of primary buckets.
-        for &i1 in i1s.iter().take(PREFETCH_DEPTH) {
+        for &i1 in i1s.iter().take(depth) {
             self.table.prefetch_bucket(i1);
         }
 
         // Stage 2: pipelined primary probes; misses park in `pending`
         // (index into the batch, alternate bucket) behind their alt
-        // prefetch and drain with ~PREFETCH_DEPTH of slack.
-        let mut pending: VecDeque<(usize, usize)> = VecDeque::with_capacity(PREFETCH_DEPTH + 1);
+        // prefetch and drain with ~depth of slack.
+        let mut pending: VecDeque<(usize, usize)> = VecDeque::with_capacity(depth + 1);
         for i in 0..n {
-            if let Some(&ahead) = i1s.get(i + PREFETCH_DEPTH) {
+            if let Some(&ahead) = i1s.get(i + depth) {
                 self.table.prefetch_bucket(ahead);
             }
             let t = triples[i];
@@ -302,7 +342,7 @@ impl<T: BucketTable> CuckooFilter<T> {
                 let i2 = Hasher::alt_index(i1s[i], t.fp, nb);
                 self.table.prefetch_bucket(i2);
                 pending.push_back((i, i2));
-                if pending.len() > PREFETCH_DEPTH {
+                if pending.len() > depth {
                     let (j, a) = pending.pop_front().unwrap();
                     out[j] = self.resolve_alt(a, triples[j]);
                 }
@@ -336,9 +376,10 @@ impl<T: BucketTable> CuckooFilter<T> {
     /// application order — and therefore victim-cache re-homing — is
     /// bit-identical to a scalar [`CuckooFilter::delete_triple`] loop.
     pub fn delete_triples_into(&mut self, triples: &[HashTriple], out: &mut Vec<bool>) {
+        let depth = prefetch_depth();
         out.reserve(triples.len());
         for (i, &t) in triples.iter().enumerate() {
-            if let Some(&ahead) = triples.get(i + PREFETCH_DEPTH) {
+            if let Some(&ahead) = triples.get(i + depth) {
                 self.prefetch_primary(ahead);
             }
             out.push(self.delete_triple(t));
@@ -448,9 +489,10 @@ impl<T: BucketTable> BatchedFilter for CuckooFilter<T> {
         session.triples.clear();
         self.hasher.hash_batch_into(keys, &mut session.triples);
         let triples = &session.triples;
+        let depth = prefetch_depth();
         out.reserve(triples.len());
         for (i, &t) in triples.iter().enumerate() {
-            if let Some(&ahead) = triples.get(i + PREFETCH_DEPTH) {
+            if let Some(&ahead) = triples.get(i + depth) {
                 self.prefetch_primary(ahead);
             }
             out.push(self.insert_triple(t));
@@ -472,6 +514,28 @@ impl<T: BucketTable> BatchedFilter for CuckooFilter<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn prefetch_depth_override_parsing() {
+        // valid values round up to a power of two inside 1..=64
+        assert_eq!(parse_depth("8"), Some(8));
+        assert_eq!(parse_depth(" 4 "), Some(4));
+        assert_eq!(parse_depth("1"), Some(1));
+        assert_eq!(parse_depth("3"), Some(4));
+        assert_eq!(parse_depth("33"), Some(64));
+        assert_eq!(parse_depth("64"), Some(64));
+        assert_eq!(parse_depth("4096"), Some(64), "clamped to 64");
+        // invalid values are rejected (the engine keeps the default)
+        assert_eq!(parse_depth("0"), None);
+        assert_eq!(parse_depth(""), None);
+        assert_eq!(parse_depth("-2"), None);
+        assert_eq!(parse_depth("eight"), None);
+        // unset env (the normal case in tests) yields the compile-time
+        // default; the OnceLock caches so this is stable process-wide
+        if std::env::var("OCF_PREFETCH_DEPTH").is_err() {
+            assert_eq!(prefetch_depth(), PREFETCH_DEPTH);
+        }
+    }
 
     fn filter(cap: usize) -> CuckooFilter<FlatTable> {
         CuckooFilter::new(CuckooParams {

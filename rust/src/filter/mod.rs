@@ -124,7 +124,7 @@ pub use bloom::{BloomFilter, CountingBloomFilter};
 pub use bucket::{BucketTable, FlatTable, PackedTable, SLOTS};
 pub use builder::{BuilderError, DynFilter, FilterBackend, FilterBuilder};
 pub use concurrent::{ConcurrentFilter, MutexFilter};
-pub use cuckoo::{CuckooFilter, CuckooParams, VictimPolicy, PREFETCH_DEPTH};
+pub use cuckoo::{prefetch_depth, CuckooFilter, CuckooParams, VictimPolicy, PREFETCH_DEPTH};
 pub use eof::EofPolicy;
 pub use fingerprint::{mix32, mix64, Hasher, HashTriple};
 pub use keystore::KeyStore;

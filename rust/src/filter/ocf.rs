@@ -281,10 +281,11 @@ impl Ocf {
         out: &mut Vec<Result<(), FilterError>>,
     ) {
         assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        let depth = super::cuckoo::prefetch_depth();
         out.reserve(keys.len());
         for (i, (&k, &t)) in keys.iter().zip(triples).enumerate() {
             debug_assert_eq!(t, self.hasher().hash_key(k), "foreign triple");
-            if let Some(&ahead) = triples.get(i + super::cuckoo::PREFETCH_DEPTH) {
+            if let Some(&ahead) = triples.get(i + depth) {
                 self.filter.prefetch_primary(ahead);
             }
             out.push(self.insert_impl(k, t));
@@ -321,10 +322,11 @@ impl Ocf {
         out: &mut Vec<bool>,
     ) {
         assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        let depth = super::cuckoo::prefetch_depth();
         out.reserve(keys.len());
         for (i, (&k, &t)) in keys.iter().zip(triples).enumerate() {
             debug_assert_eq!(t, self.hasher().hash_key(k), "foreign triple");
-            if let Some(&ahead) = triples.get(i + super::cuckoo::PREFETCH_DEPTH) {
+            if let Some(&ahead) = triples.get(i + depth) {
                 self.filter.prefetch_primary(ahead);
             }
             out.push(self.delete_impl(k, t));

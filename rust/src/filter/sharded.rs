@@ -111,8 +111,10 @@ impl ShardedOcf {
     }
 
     /// Run `f` with exclusive access to shard `sid` under a single lock
-    /// acquisition (the primitive the pipeline's parallel apply stage
-    /// builds its per-shard fan-out on).
+    /// acquisition — the worker-facing primitive both of the pipeline's
+    /// parallel apply stages (the scoped per-batch fan-out of
+    /// `run_sharded` and the persistent pool workers of `run_pooled`)
+    /// build their per-shard tasks on.
     pub fn with_shard<R>(&self, sid: usize, f: impl FnOnce(&mut Ocf) -> R) -> R {
         let mut guard = self.shards[sid].lock().unwrap();
         f(&mut guard)
@@ -134,8 +136,10 @@ impl ShardedOcf {
     }
 
     /// [`ShardedOcf::group_by_shard_into`] into a fresh vec (the
-    /// pipeline's parallel apply stage shares this exact routing).
-    pub(crate) fn group_by_shard(&self, triples: &[HashTriple]) -> Vec<Vec<usize>> {
+    /// pipeline's parallel apply stages share this exact routing, so a
+    /// batch planned outside the filter lands on the same shards the
+    /// batched APIs would pick).
+    pub fn group_by_shard(&self, triples: &[HashTriple]) -> Vec<Vec<usize>> {
         let mut groups = Vec::new();
         self.group_by_shard_into(triples, &mut groups);
         groups

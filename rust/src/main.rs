@@ -2,13 +2,16 @@
 //! line-protocol membership server.
 //!
 //! ```text
-//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|all>
+//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|pool|all>
 //!         [--scale F]           # workload scale, 1.0 = paper scale
 //! ocf pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]
 //!              [--shards N]     # >1 = sharded concurrent filter front-end
 //!              [--backend NAME] # any FilterBuilder backend, trait-generic path
+//!              [--workers N]    # persistent worker-pool mode (0 = auto);
+//!              [--queue-depth N] [--chunk N]   # pool backpressure + task grain
 //! ocf serve [--config FILE] [--set section.key=value ...]
 //!           # filter backend from [filter] backend = "..." / --set filter.backend=...
+//!           # pooled ingest shape from [pipeline] workers/queue_depth/chunk_size
 //! ocf info [--artifacts DIR]
 //! ```
 //!
@@ -19,7 +22,7 @@ use ocf::bench_harness;
 use ocf::config::OcfFileConfig;
 use ocf::exp::{self, Scale};
 use ocf::filter::{FilterBuilder, MembershipFilter, Ocf};
-use ocf::pipeline::{BatchPolicy, IngestPipeline};
+use ocf::pipeline::{BatchPolicy, IngestPipeline, PoolConfig};
 use ocf::runtime::{HashExecutor, PjrtEngine};
 use ocf::workload::{KeyDist, MixGenerator, OpMix};
 use std::io::{BufRead, Write};
@@ -50,7 +53,8 @@ fn print_help() {
         "ocf — Optimized Cuckoo Filter coordinator\n\n\
          commands:\n  \
          exp <name|all> [--scale F]   regenerate paper tables/figures\n  \
-         pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads] [--shards N] [--backend NAME]\n  \
+         pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads] [--shards N] [--backend NAME]\n           \
+         [--workers N] [--queue-depth N] [--chunk N]   worker-pool ingest (0 = auto workers)\n  \
          serve [--config FILE] [--set section.key=value]\n  \
          info [--artifacts DIR]\n  \
          help"
@@ -103,6 +107,38 @@ fn cmd_pipeline(args: &[String]) -> i32 {
     let shards: usize = flag_value(args, "--shards")
         .and_then(|s| s.parse().ok())
         .unwrap_or(1);
+
+    if let Some(raw) = flag_value(args, "--workers") {
+        // Persistent worker-pool mode: --backend sharded (or none) runs
+        // the native shard-group dispatch; any other backend is
+        // mutex-wrapped and chunk-parallel.
+        let workers = match raw.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("pipeline: --workers must be a non-negative integer (0 = auto), got '{raw}'");
+                return 2;
+            }
+        };
+        let pool = PoolConfig {
+            workers,
+            queue_depth: flag_value(args, "--queue-depth")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(PoolConfig::default().queue_depth),
+            chunk: flag_value(args, "--chunk")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(PoolConfig::default().chunk),
+        };
+        if threaded {
+            eprintln!("pipeline: --threads is ignored with --workers (the pool is the parallelism)");
+        }
+        return cmd_pipeline_pooled(
+            flag_value(args, "--backend").as_deref(),
+            ops,
+            batch,
+            shards,
+            pool,
+        );
+    }
 
     if let Some(backend) = flag_value(args, "--backend") {
         // Trait-generic path: any builder backend through the batched
@@ -272,6 +308,91 @@ fn cmd_pipeline_sharded(ops: usize, batch: usize, shards: usize) -> i32 {
     0
 }
 
+/// Worker-pool pipeline (`--workers`): long-lived shard/chunk workers
+/// with the producer hashing batch N+1 while batch N applies. The
+/// sharded backend takes the native per-shard dispatch; any other
+/// builder backend runs mutex-wrapped with chunk-parallel same-kind
+/// runs.
+fn cmd_pipeline_pooled(
+    backend: Option<&str>,
+    ops: usize,
+    batch: usize,
+    shards: usize,
+    pool: PoolConfig,
+) -> i32 {
+    let policy = BatchPolicy {
+        max_batch: batch,
+        ..BatchPolicy::default()
+    };
+    let mut gen = MixGenerator::new(
+        KeyDist::uniform(1 << 40),
+        OpMix::new(0.5, 0.4, 0.1),
+        0x0CF_11FE,
+    );
+    let ops_iter = (0..ops).map(move |_| gen.next_op());
+    match backend {
+        None | Some("sharded") => {
+            // Native path: default the shard count to the worker count
+            // so every worker owns at least one stripe.
+            let nshards = if shards > 1 {
+                shards
+            } else {
+                pool.effective_workers()
+            };
+            let filter =
+                ocf::filter::ShardedOcf::with_shards(nshards, ocf::filter::OcfConfig::default());
+            let mut pipeline =
+                IngestPipeline::new(policy, HashExecutor::native(filter.hasher()));
+            let report = pipeline.run_pooled(ops_iter, &filter, &pool);
+            println!("{}", report.render());
+            println!(
+                "pooled sharded filter: {} | shards={} len={} occupancy={:.3} memory={} resizes={}",
+                pool.describe(),
+                filter.shard_count(),
+                filter.len(),
+                filter.occupancy(),
+                ocf::util::fmt_bytes(filter.memory_bytes()),
+                filter.stats().resizes(),
+            );
+            0
+        }
+        Some(name) => {
+            let builder = match FilterBuilder::named(name) {
+                Ok(b) if shards > 1 => b.with_shards(shards),
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("pipeline: {e}");
+                    return 2;
+                }
+            };
+            let inner = match builder.build() {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("pipeline: {e}");
+                    return 2;
+                }
+            };
+            let filter = ocf::filter::MutexFilter::new(inner);
+            let hasher = ocf::filter::Hasher::new(builder.ocf.seed, builder.ocf.fp_bits);
+            let mut pipeline = IngestPipeline::new(policy, HashExecutor::native(hasher));
+            let report = pipeline.run_pooled(ops_iter, &filter, &pool);
+            println!("{}", report.render());
+            let (name, len, occupancy, memory) = filter.with_inner(|f| {
+                (f.name(), f.len(), f.occupancy(), f.memory_bytes())
+            });
+            println!(
+                "pooled mutex<{}> filter: {} | len={} occupancy={:.3} memory={}",
+                name,
+                pool.describe(),
+                len,
+                occupancy,
+                ocf::util::fmt_bytes(memory),
+            );
+            0
+        }
+    }
+}
+
 fn cmd_serve(args: &[String]) -> i32 {
     let cfg_text = flag_value(args, "--config")
         .map(|p| std::fs::read_to_string(&p).unwrap_or_else(|e| {
@@ -296,6 +417,13 @@ fn cmd_serve(args: &[String]) -> i32 {
         "ocf serve: filter={} capacity={} (line protocol: put K | get K | del K | stats | quit)",
         cfg.filter.describe(),
         cfg.filter.ocf.initial_capacity
+    );
+    eprintln!(
+        "ocf serve: [pipeline] batch={} {} (validated here; consumed by \
+         `ocf pipeline --workers` and run_pooled embedders — this \
+         line-protocol loop applies ops one at a time)",
+        cfg.batch_size,
+        cfg.pool().describe()
     );
     // Any backend by name, through the trait object (`[filter]
     // backend = "..."` / `--set filter.backend=...`).

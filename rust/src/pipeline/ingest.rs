@@ -27,16 +27,29 @@
 //!   fanned out across scoped threads, one per non-empty shard group,
 //!   each applying its group under a single lock acquisition
 //!   ([`ShardedOcf::with_shard`]).
+//! * [`IngestPipeline::run_pooled`] — the persistent worker-pool mode
+//!   (see [`pool`](super::pool)): shard/chunk workers are spawned ONCE
+//!   per run and fed through bounded queues, amortizing thread startup
+//!   across every batch, and the producer stages (bulk-hashes and
+//!   shard-groups) batch *N+1* while the workers apply batch *N* — the
+//!   hash/apply overlap `run_sharded`'s per-batch fan-out cannot
+//!   express. Filter-generic over [`PoolBackend`]: [`ShardedOcf`] gets
+//!   the native group-per-shard dispatch, any other
+//!   [`ConcurrentFilter`] the chunk-parallel default. Accounting is
+//!   count-identical to `run_sharded` (pinned by proptest P13).
 //!
 //! Op order is preserved exactly in every mode: a run breaks at every
 //! op-kind change, so a lookup can never be reordered across an
-//! insert/delete (pinned by proptest P5).
+//! insert/delete (pinned by proptest P5), and `run_pooled` settles
+//! batch *N* before dispatching batch *N+1*.
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::pool::{self, Dispatch, Partial, PoolBackend, PoolConfig, StagedBatch, WorkerPool};
 use crate::filter::{BatchedFilter, ConcurrentFilter, FilterError, Ocf, ProbeSession, ShardedOcf};
 use crate::metrics::Histogram;
 use crate::runtime::HashExecutor;
 use crate::workload::Op;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Pipeline outcome.
@@ -340,8 +353,11 @@ impl IngestPipeline {
         let t0 = Instant::now();
         let groups = filter.group_by_shard(&triples);
         let triples = &triples;
-        // (inserts, lookups, lookup_hits, deletes) per shard group
-        let partials: Vec<(u64, u64, u64, u64)> = std::thread::scope(|s| {
+        // one scoped thread per non-empty shard group, each applying
+        // its group through the shared engine-run walk
+        // ([`pool::apply_shard_group`] — also the pooled mode's task
+        // body, so the two parallel modes cannot drift)
+        let partials: Vec<Partial> = std::thread::scope(|s| {
             let handles: Vec<_> = groups
                 .iter()
                 .enumerate()
@@ -349,57 +365,18 @@ impl IngestPipeline {
                 .map(|(sid, group)| {
                     s.spawn(move || {
                         filter.with_shard(sid, |shard| {
-                            let (mut ins, mut looks, mut hits, mut dels) = (0u64, 0u64, 0u64, 0u64);
-                            // consecutive lookups *within this shard's
-                            // group* run through the pipelined probe
-                            // engine; mutations break the run, so
-                            // in-shard op order is preserved exactly
-                            let mut scratch: Vec<crate::filter::HashTriple> = Vec::new();
-                            let mut lk_out: Vec<bool> = Vec::new();
-                            let mut gi = 0;
-                            while gi < group.len() {
-                                let i = group[gi];
-                                match batch[i] {
-                                    Op::Lookup(_) => {
-                                        let mut gj = gi;
-                                        while gj < group.len()
-                                            && matches!(batch[group[gj]], Op::Lookup(_))
-                                        {
-                                            gj += 1;
-                                        }
-                                        scratch.clear();
-                                        scratch
-                                            .extend(group[gi..gj].iter().map(|&x| triples[x]));
-                                        lk_out.clear();
-                                        shard.contains_triples_into(&scratch, &mut lk_out);
-                                        looks += (gj - gi) as u64;
-                                        hits += lk_out.iter().filter(|&&h| h).count() as u64;
-                                        gi = gj;
-                                    }
-                                    Op::Insert(k) => {
-                                        let _ = shard.insert_hashed(k, triples[i]);
-                                        ins += 1;
-                                        gi += 1;
-                                    }
-                                    Op::Delete(k) => {
-                                        shard.delete_hashed(k, triples[i]);
-                                        dels += 1;
-                                        gi += 1;
-                                    }
-                                }
-                            }
-                            (ins, looks, hits, dels)
+                            pool::apply_shard_group(shard, batch, triples, group)
                         })
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
-        for (ins, looks, hits, dels) in partials {
-            report.inserts += ins;
-            report.lookups += looks;
-            report.lookup_hits += hits;
-            report.deletes += dels;
+        for p in partials {
+            report.inserts += p.inserts;
+            report.lookups += p.lookups;
+            report.lookup_hits += p.hits;
+            report.deletes += p.deletes;
         }
         let dt = t0.elapsed().as_nanos() as u64;
         report.batches += 1;
@@ -431,6 +408,52 @@ impl IngestPipeline {
         if let Some(batch) = batcher.drain() {
             self.apply_batch_sharded(&batch, filter, &mut report);
         }
+        report.elapsed_secs = start.elapsed().as_secs_f64();
+        report
+    }
+
+    /// Pull pipeline on the persistent worker pool: workers are spawned
+    /// once for the whole run (amortizing thread startup across every
+    /// batch) and the producer stages batch *N+1* — bulk hash via
+    /// [`IngestPipeline::executor`] plus shard grouping for the native
+    /// [`ShardedOcf`] backend — while the workers are still applying
+    /// batch *N*, so hashing and bucket probing overlap instead of
+    /// alternating. Dispatch is backend-shaped through [`PoolBackend`]:
+    /// shard-group tasks pinned per worker for [`ShardedOcf`],
+    /// chunk-parallel same-kind runs for everything else.
+    ///
+    /// For pre-hashing backends the executor's hasher MUST match the
+    /// filter's (as with [`IngestPipeline::run_sharded`]). Accounting is
+    /// count-identical to `run_sharded`/`run` on the same op stream
+    /// (proptest P13); batch latency is the dispatch→last-task-completion
+    /// window (workers timestamp each task), so producer-side staging of
+    /// the next batch never inflates the histograms.
+    pub fn run_pooled<C: PoolBackend + ?Sized>(
+        &mut self,
+        ops: impl Iterator<Item = Op>,
+        filter: &C,
+        cfg: &PoolConfig,
+    ) -> IngestReport {
+        let mut report = IngestReport::new();
+        let start = Instant::now();
+        let this: &Self = self;
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::new(scope, cfg.effective_workers(), cfg.effective_queue_depth());
+            let mut batcher = DynamicBatcher::new(this.batch_policy);
+            let mut state = PooledState::default();
+            for op in ops {
+                if let Some(batch) = batcher.push(op) {
+                    pump_pooled(&this.executor, batch, filter, &pool, cfg, &mut state, &mut report);
+                } else if let Some(batch) = batcher.poll(Instant::now()) {
+                    pump_pooled(&this.executor, batch, filter, &pool, cfg, &mut state, &mut report);
+                }
+            }
+            if let Some(batch) = batcher.drain() {
+                pump_pooled(&this.executor, batch, filter, &pool, cfg, &mut state, &mut report);
+            }
+            settle_pooled(&pool, &mut state, &mut report);
+            pool.shutdown();
+        });
         report.elapsed_secs = start.elapsed().as_secs_f64();
         report
     }
@@ -504,6 +527,104 @@ impl IngestPipeline {
         });
         report.elapsed_secs = start.elapsed().as_secs_f64();
         report
+    }
+}
+
+/// One dispatched-but-unsettled batch of the pooled pipeline.
+struct InFlight {
+    staged: Arc<StagedBatch>,
+    outcome: InFlightOutcome,
+    len: usize,
+    t0: Instant,
+}
+
+/// [`Dispatch`] with the apply timing already pinned down for the
+/// synchronous case, so settle latency never leaks into the batch
+/// histograms (the producer may settle arbitrarily late — only the
+/// dispatch→completion window is recorded).
+enum InFlightOutcome {
+    /// `n` task partials still to collect; the apply window closes at
+    /// the last task's completion instant.
+    Pending(usize),
+    /// Applied synchronously inside dispatch; `dt` was measured there.
+    Done { partial: Partial, dt: u64 },
+}
+
+/// Producer-side state of a pooled run: the in-flight batch plus the
+/// free list of recycled staging buffers (the "double buffer" — in
+/// steady state exactly two `StagedBatch`es alternate between staging
+/// and apply, so staging performs no allocations of its own).
+#[derive(Default)]
+struct PooledState {
+    free: Vec<StagedBatch>,
+    in_flight: Option<InFlight>,
+}
+
+/// Stage one batch (overlapping the in-flight batch's apply), settle
+/// the previous batch (the cross-batch order barrier), then dispatch.
+fn pump_pooled<'scope, C: PoolBackend + ?Sized>(
+    executor: &HashExecutor,
+    batch: Vec<Op>,
+    filter: &'scope C,
+    pool: &WorkerPool<'scope>,
+    cfg: &PoolConfig,
+    state: &mut PooledState,
+    report: &mut IngestReport,
+) {
+    let mut staged = state.free.pop().unwrap_or_default();
+    staged.reset(batch);
+    // bulk hash + shard grouping of THIS batch while the PREVIOUS one
+    // is still applying on the workers — the stage overlap
+    filter.stage(executor, &mut staged);
+    settle_pooled(pool, state, report);
+    let len = staged.ops.len();
+    let staged = Arc::new(staged);
+    let t0 = Instant::now();
+    let outcome = match filter.dispatch(&staged, pool, cfg.effective_chunk()) {
+        Dispatch::Pending(n) => InFlightOutcome::Pending(n),
+        Dispatch::Done(partial) => InFlightOutcome::Done {
+            partial,
+            dt: t0.elapsed().as_nanos() as u64,
+        },
+    };
+    state.in_flight = Some(InFlight {
+        staged,
+        outcome,
+        len,
+        t0,
+    });
+}
+
+/// Wait out the in-flight batch (if any), fold its partials into the
+/// report, and recycle its staging buffers.
+fn settle_pooled(pool: &WorkerPool<'_>, state: &mut PooledState, report: &mut IngestReport) {
+    let Some(fl) = state.in_flight.take() else {
+        return;
+    };
+    let (partial, dt) = match fl.outcome {
+        InFlightOutcome::Done { partial, dt } => (partial, dt),
+        InFlightOutcome::Pending(n) => {
+            let (partial, done_at) = pool.collect_timed(n);
+            let dt = done_at
+                .unwrap_or(fl.t0)
+                .saturating_duration_since(fl.t0)
+                .as_nanos() as u64;
+            (partial, dt)
+        }
+    };
+    report.inserts += partial.inserts;
+    report.lookups += partial.lookups;
+    report.lookup_hits += partial.hits;
+    report.deletes += partial.deletes;
+    report.batches += 1;
+    report.ops += fl.len as u64;
+    report.batch_latency_ns.record(dt);
+    report.op_latency_ns.record(dt / fl.len.max(1) as u64);
+    // all worker clones are dropped once collected, so this normally
+    // succeeds; if it ever doesn't we just skip the recycle
+    if let Ok(mut staged) = Arc::try_unwrap(fl.staged) {
+        staged.clear();
+        state.free.push(staged);
     }
 }
 
@@ -750,6 +871,181 @@ mod tests {
         for &k in &model {
             assert!(a.contains_one(k), "false negative for {k}");
         }
+    }
+
+    #[test]
+    fn pooled_matches_run_sharded_exactly() {
+        let mk_ops = || {
+            let mut gen = MixGenerator::new(
+                KeyDist::uniform(1 << 14),
+                OpMix::new(0.5, 0.3, 0.2),
+                4242,
+            );
+            gen.batch(20_000)
+        };
+        let cfg = OcfConfig {
+            mode: Mode::Eof,
+            initial_capacity: 2048,
+            ..OcfConfig::default()
+        };
+        let a = crate::filter::ShardedOcf::with_shards(4, cfg);
+        let b = crate::filter::ShardedOcf::with_shards(4, cfg);
+        let policy = BatchPolicy {
+            max_batch: 512,
+            max_delay: std::time::Duration::from_secs(10),
+        };
+        let ra = IngestPipeline::new(policy, HashExecutor::native(a.hasher()))
+            .run_sharded(mk_ops().into_iter(), &a);
+        let pcfg = PoolConfig {
+            workers: 3,
+            queue_depth: 2,
+            chunk: 256,
+        };
+        let rb = IngestPipeline::new(policy, HashExecutor::native(b.hasher()))
+            .run_pooled(mk_ops().into_iter(), &b, &pcfg);
+        // count-identical accounting, batch for batch
+        assert_eq!(ra.ops, rb.ops);
+        assert_eq!(ra.batches, rb.batches);
+        assert_eq!(ra.inserts, rb.inserts);
+        assert_eq!(ra.lookups, rb.lookups);
+        assert_eq!(ra.lookup_hits, rb.lookup_hits);
+        assert_eq!(ra.deletes, rb.deletes);
+        // bit-identical end state: same per-shard op streams
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.shard_lens(), b.shard_lens());
+        for probe in (0..1u64 << 14).step_by(97) {
+            assert_eq!(a.contains_one(probe), b.contains_one(probe), "{probe}");
+        }
+    }
+
+    #[test]
+    fn pooled_mutex_backend_matches_scalar_run() {
+        use crate::filter::MutexFilter;
+        let mk_ops = || {
+            let mut gen = MixGenerator::new(
+                KeyDist::uniform(1 << 12),
+                OpMix::new(0.5, 0.3, 0.2),
+                1717,
+            );
+            gen.batch(12_000)
+        };
+        // static sizing with ample headroom: capacity (and therefore
+        // false-positive behaviour) cannot depend on in-run interleaving
+        let cfg = OcfConfig {
+            mode: Mode::Static,
+            initial_capacity: 1 << 15,
+            min_capacity: 1 << 15,
+            ..OcfConfig::default()
+        };
+        let mut scalar = Ocf::new(cfg);
+        let hasher = scalar.hasher();
+        let policy = BatchPolicy {
+            max_batch: 333,
+            max_delay: std::time::Duration::from_secs(10),
+        };
+        let rs = IngestPipeline::new(policy, HashExecutor::native(hasher))
+            .run(mk_ops().into_iter(), &mut scalar);
+        let pooled = MutexFilter::new(Ocf::new(cfg));
+        let pcfg = PoolConfig {
+            workers: 4,
+            queue_depth: 2,
+            chunk: 64,
+        };
+        let rp = IngestPipeline::new(policy, HashExecutor::native(hasher))
+            .run_pooled(mk_ops().into_iter(), &pooled, &pcfg);
+        assert_eq!(rs.ops, rp.ops);
+        assert_eq!(rs.batches, rp.batches);
+        assert_eq!(rs.inserts, rp.inserts);
+        assert_eq!(rs.lookups, rp.lookups);
+        assert_eq!(rs.lookup_hits, rp.lookup_hits, "quiescent-run lookups must agree");
+        assert_eq!(rs.deletes, rp.deletes);
+        let inner = pooled.into_inner();
+        assert_eq!(inner.len(), scalar.len());
+        for probe in (0..1u64 << 12).step_by(31) {
+            assert_eq!(
+                inner.contains_exact(probe),
+                scalar.contains_exact(probe),
+                "{probe}"
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_single_kind_burst_fans_out() {
+        // a pure insert storm takes the fully-parallel single-run path
+        let filter = crate::filter::ShardedOcf::with_shards(
+            4,
+            OcfConfig {
+                initial_capacity: 4096,
+                ..OcfConfig::default()
+            },
+        );
+        let mut p = IngestPipeline::new(
+            BatchPolicy {
+                max_batch: 1024,
+                max_delay: std::time::Duration::from_millis(10),
+            },
+            HashExecutor::native(filter.hasher()),
+        );
+        let pcfg = PoolConfig {
+            workers: 4,
+            queue_depth: 4,
+            chunk: 128,
+        };
+        let n = 50_000u64;
+        let r = p.run_pooled((0..n).map(Op::Insert), &filter, &pcfg);
+        assert_eq!(r.ops, n);
+        assert_eq!(r.inserts, n);
+        assert_eq!(filter.len(), n as usize);
+        assert!(filter.contains_one(12_345));
+    }
+
+    #[test]
+    fn pooled_empty_stream_reports_zero() {
+        let filter = crate::filter::ShardedOcf::with_shards(2, OcfConfig::default());
+        let mut p = IngestPipeline::new(
+            BatchPolicy::default(),
+            HashExecutor::native(filter.hasher()),
+        );
+        let r = p.run_pooled(std::iter::empty(), &filter, &PoolConfig::default());
+        assert_eq!(r.ops, 0);
+        assert_eq!(r.batches, 0);
+        assert_eq!(filter.len(), 0);
+    }
+
+    #[test]
+    fn pooled_worker_count_is_transparent() {
+        let mk_ops = || {
+            let mut gen =
+                MixGenerator::new(KeyDist::uniform(1 << 13), OpMix::new(0.6, 0.2, 0.2), 55);
+            gen.batch(8_000)
+        };
+        let cfg = OcfConfig {
+            initial_capacity: 2048,
+            ..OcfConfig::default()
+        };
+        let mut reports = Vec::new();
+        let mut lens = Vec::new();
+        for workers in [1usize, 2, 8] {
+            let f = crate::filter::ShardedOcf::with_shards(4, cfg);
+            let mut p = IngestPipeline::new(
+                BatchPolicy {
+                    max_batch: 512,
+                    max_delay: std::time::Duration::from_secs(10),
+                },
+                HashExecutor::native(f.hasher()),
+            );
+            let pcfg = PoolConfig {
+                workers,
+                queue_depth: 1,
+                chunk: 512,
+            };
+            let r = p.run_pooled(mk_ops().into_iter(), &f, &pcfg);
+            reports.push((r.ops, r.inserts, r.lookups, r.lookup_hits, r.deletes));
+            lens.push(f.shard_lens());
+        }
+        assert!(reports.windows(2).all(|w| w[0] == w[1]), "{reports:?}");
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{lens:?}");
     }
 
     #[test]

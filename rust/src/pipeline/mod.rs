@@ -13,13 +13,23 @@
 //!   producer blocks when the consumer lags, bounding memory and
 //!   keeping tail latency honest (the "congestion" the paper's EOF
 //!   mode is named after, applied at the pipeline level).
-//! * [`ingest`] — the pump: single-threaded pull pipeline and a
-//!   two-thread producer/consumer variant with real backpressure.
+//! * [`ingest`] — the pump: the single-threaded pull pipelines, the
+//!   two-thread producer/consumer variant with real backpressure, the
+//!   scoped per-shard fan-out, and the pooled mode.
+//! * [`pool`] — the persistent worker-pool engine under
+//!   [`IngestPipeline::run_pooled`]: long-lived shard/chunk workers on
+//!   bounded queues, double-buffered staging so bulk hashing overlaps
+//!   the apply, filter-generic dispatch via [`PoolBackend`].
+//!
+//! See `rust/src/pipeline/README.md` for the run-mode matrix and how
+//! to read `BENCH_pipeline.json`.
 
 pub mod backpressure;
 pub mod batcher;
 pub mod ingest;
+pub mod pool;
 
 pub use backpressure::{CreditGate, TokenBucket};
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use ingest::{IngestPipeline, IngestReport};
+pub use pool::{BoundedQueue, Dispatch, Partial, PoolBackend, PoolConfig, StagedBatch, WorkerPool};

@@ -1,0 +1,819 @@
+//! The persistent worker-pool execution engine for ingest.
+//!
+//! `run_sharded` (PR 1) parallelized the apply stage by spawning a
+//! fresh `std::thread::scope` fan-out *per batch* — one thread per
+//! non-empty shard group, torn down before the next batch could hash.
+//! At serving batch sizes (~1–4k ops) thread startup is a significant
+//! fraction of the apply itself, and hashing serializes against
+//! probing. This module replaces that with machinery the pipeline's
+//! [`run_pooled`](super::IngestPipeline::run_pooled) mode builds on:
+//!
+//! * [`WorkerPool`] — long-lived workers spawned ONCE per run on a
+//!   `std::thread::scope`, each draining a bounded per-worker queue
+//!   ([`BoundedQueue`]). Idle workers park on a condvar and are woken
+//!   by the next submit; a full queue blocks the producer (bounded
+//!   memory, honest backpressure); [`WorkerPool::shutdown`] closes the
+//!   queues so workers exit cleanly and the scope join cannot hang.
+//! * [`StagedBatch`] — the double-buffered staging slot: the batch's
+//!   ops plus its bulk-hashed triples and shard grouping. The producer
+//!   stages batch *N+1* (hashing via [`Hasher::hash_batch`] through the
+//!   executor) while the workers are still applying batch *N*, so bulk
+//!   hashing overlaps bucket probing instead of alternating with it.
+//!   Settled buffers are recycled through a free list — zero staging
+//!   allocations per batch in steady state (hashing lands in the
+//!   recycled triple buffer via `HashExecutor::hash_batch_into`).
+//! * [`PoolBackend`] — how a [`ConcurrentFilter`] plugs into the pool.
+//!   [`ShardedOcf`] implements it natively: one task per non-empty
+//!   shard group, pinned to worker `shard % workers` (shard data stays
+//!   warm in one worker's cache), each task applying its whole group
+//!   through the prefetch-pipelined engine under a single lock
+//!   acquisition ([`apply_shard_group`]). Every other backend (e.g. a
+//!   [`MutexFilter`]-wrapped builder filter) gets the default
+//!   *chunk-parallel* dispatch: same-kind runs split into `chunk`-sized
+//!   tasks applied through the `&self` batched trait surface, with a
+//!   barrier at every op-kind boundary so a lookup can never be
+//!   reordered across an insert/delete.
+//!
+//! Op-order discipline (what keeps `run_pooled` accounting
+//! count-identical to `run_sharded` / `run`, pinned by proptest P13):
+//! batches are applied one at a time (the producer settles batch *N*
+//! before dispatching *N+1*); within a batch, the sharded path keeps
+//! per-key order because a key's ops always land in the same shard
+//! group in input order, and the chunked path keeps kind-runs
+//! serialized. Cross-key interleaving inside a same-kind run is the
+//! only freedom the pool takes — which commutes for op counts, exact
+//! membership, and (quiescent-state) lookup hits.
+//!
+//! [`Hasher::hash_batch`]: crate::filter::Hasher::hash_batch
+//! [`ConcurrentFilter`]: crate::filter::ConcurrentFilter
+//! [`ShardedOcf`]: crate::filter::ShardedOcf
+//! [`MutexFilter`]: crate::filter::MutexFilter
+
+use crate::filter::{
+    ConcurrentFilter, FilterError, HashTriple, MutexFilter, Ocf, ProbeSession, ShardedOcf,
+};
+use crate::runtime::HashExecutor;
+use crate::workload::Op;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Shape of the pooled ingest engine, surfaced through the `[pipeline]`
+/// config section and `ocf pipeline --workers/--queue-depth/--chunk`.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Worker threads. `0` = auto (the machine's available parallelism,
+    /// clamped to 2..=8).
+    pub workers: usize,
+    /// Per-worker bounded queue capacity (tasks). A full queue blocks
+    /// the producer — this is the pool's backpressure window.
+    pub queue_depth: usize,
+    /// Task grain for the generic chunk-parallel dispatch (ops per
+    /// task). The native sharded dispatch uses shard groups instead.
+    pub chunk: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            queue_depth: 64,
+            chunk: 1024,
+        }
+    }
+}
+
+impl PoolConfig {
+    /// Resolved worker count (`workers`, or auto when 0).
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(2, 8)
+        }
+    }
+
+    /// Queue capacity with the ≥ 1 floor applied.
+    pub fn effective_queue_depth(&self) -> usize {
+        self.queue_depth.max(1)
+    }
+
+    /// Chunk grain with the ≥ 1 floor applied.
+    pub fn effective_chunk(&self) -> usize {
+        self.chunk.max(1)
+    }
+
+    /// One-line rendering for banners/reports.
+    pub fn describe(&self) -> String {
+        let w = if self.workers == 0 {
+            format!("auto({})", self.effective_workers())
+        } else {
+            self.workers.to_string()
+        };
+        format!(
+            "workers={w} queue_depth={} chunk={}",
+            self.effective_queue_depth(),
+            self.effective_chunk()
+        )
+    }
+}
+
+/// Per-task accounting delta, merged into the batch's `IngestReport`
+/// entry when the producer settles the batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Partial {
+    pub inserts: u64,
+    pub lookups: u64,
+    pub hits: u64,
+    pub deletes: u64,
+}
+
+impl Partial {
+    /// Accumulate another task's delta.
+    pub fn absorb(&mut self, other: &Partial) {
+        self.inserts += other.inserts;
+        self.lookups += other.lookups;
+        self.hits += other.hits;
+        self.deletes += other.deletes;
+    }
+}
+
+/// What a [`PoolBackend::dispatch`] left behind.
+#[derive(Debug, Clone, Copy)]
+pub enum Dispatch {
+    /// `n` tasks are in flight; the caller must
+    /// [`collect`](WorkerPool::collect) exactly `n` partials before the
+    /// next dispatch (the cross-batch order barrier).
+    Pending(usize),
+    /// The dispatch applied the batch with internal barriers (the
+    /// mixed-run chunked path) and already collected its partials.
+    Done(Partial),
+}
+
+/// A unit of pooled work: applies some slice of the staged batch and
+/// returns its accounting delta.
+pub type Task<'scope> = Box<dyn FnOnce() -> Partial + Send + 'scope>;
+
+/// What a worker ships back per task: the (possibly panicked) outcome
+/// plus the completion instant, so the producer can time the apply
+/// itself rather than its own settle latency.
+type TaskResult = (std::thread::Result<Partial>, Instant);
+
+/// Closable bounded MPSC queue: `push` blocks while full, `pop` parks
+/// while empty (condvar wait — the pool's idle handling), `close` wakes
+/// everyone and drains to `None`.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    cap: usize,
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+#[derive(Debug)]
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocking push; returns the item back if the queue was closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        while st.items.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed AND drained (a
+    /// closed queue still hands out its backlog).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers get `Err`, idle consumers wake, the
+    /// backlog remains poppable.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Long-lived shard/chunk workers on a `std::thread::scope`: spawned
+/// once per run, fed through bounded per-worker queues, joined by the
+/// scope after [`WorkerPool::shutdown`]. Thread startup is paid once
+/// per *run* instead of once per *batch* (the whole point vs. the
+/// scoped fan-out in `run_sharded`).
+///
+/// The pool itself lives on the producer thread (`!Sync` by design —
+/// submits and collects are single-producer); workers only ever touch
+/// their queue and the results channel.
+pub struct WorkerPool<'scope> {
+    queues: Vec<Arc<BoundedQueue<Task<'scope>>>>,
+    results: Receiver<TaskResult>,
+    next: Cell<usize>,
+}
+
+impl<'scope> WorkerPool<'scope> {
+    /// Spawn `workers` threads on `scope`, each with a bounded queue of
+    /// `queue_depth` tasks.
+    pub fn new<'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        workers: usize,
+        queue_depth: usize,
+    ) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = std::sync::mpsc::channel::<TaskResult>();
+        let queues: Vec<Arc<BoundedQueue<Task<'scope>>>> = (0..workers)
+            .map(|_| Arc::new(BoundedQueue::new(queue_depth)))
+            .collect();
+        for queue in &queues {
+            let queue = Arc::clone(queue);
+            let tx = tx.clone();
+            scope.spawn(move || {
+                while let Some(task) = queue.pop() {
+                    // a panicking task must not kill the worker: the
+                    // payload is shipped to the producer (re-raised in
+                    // `collect`) so the run fails fast instead of
+                    // hanging the batch barrier on a dead sender
+                    let result = catch_unwind(AssertUnwindSafe(task));
+                    // receiver gone = the run is tearing down
+                    if tx.send((result, Instant::now())).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        Self {
+            queues,
+            results: rx,
+            next: Cell::new(0),
+        }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Submit to the next worker round-robin (blocking when its queue
+    /// is full).
+    pub fn submit(&self, task: Task<'scope>) {
+        let w = self.next.get();
+        self.next.set((w + 1) % self.queues.len());
+        self.submit_to(w, task);
+    }
+
+    /// Submit to a specific worker (`worker % worker_count` — the
+    /// sharded dispatch pins shard groups so a shard's table stays warm
+    /// in one worker's cache).
+    pub fn submit_to(&self, worker: usize, task: Task<'scope>) {
+        let w = worker % self.queues.len();
+        if self.queues[w].push(task).is_err() {
+            panic!("worker pool: submit after shutdown");
+        }
+    }
+
+    /// Block until `n` task partials have arrived; returns their sum.
+    /// With single-batch-in-flight dispatch this is the apply barrier.
+    /// A task that panicked has its payload re-raised here, on the
+    /// producer, so the run aborts instead of deadlocking.
+    pub fn collect(&self, n: usize) -> Partial {
+        self.collect_timed(n).0
+    }
+
+    /// [`WorkerPool::collect`] also reporting when the LAST of the `n`
+    /// tasks finished (`None` when `n == 0`) — the honest end of the
+    /// batch's apply window, independent of how late the producer calls
+    /// this.
+    pub fn collect_timed(&self, n: usize) -> (Partial, Option<Instant>) {
+        let mut total = Partial::default();
+        let mut last_done: Option<Instant> = None;
+        for _ in 0..n {
+            let (result, done_at) = self
+                .results
+                .recv()
+                .expect("worker pool: every worker died with tasks outstanding");
+            match result {
+                Ok(p) => total.absorb(&p),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+            last_done = Some(last_done.map_or(done_at, |t| t.max(done_at)));
+        }
+        (total, last_done)
+    }
+
+    /// Close every queue; workers finish their backlog and exit, so the
+    /// enclosing `thread::scope` joins promptly.
+    pub fn shutdown(&self) {
+        for q in &self.queues {
+            q.close();
+        }
+    }
+}
+
+/// Closing on drop means a panicking producer (e.g. a failed hash
+/// executor) still releases the parked workers — the enclosing
+/// `thread::scope` joins and the panic propagates instead of
+/// deadlocking.
+impl Drop for WorkerPool<'_> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One batch's staged state: the ops plus (for pre-hashing backends)
+/// the bulk-hashed triples and shard grouping. Producer-side staging of
+/// batch *N+1* overlaps the workers' apply of batch *N*; settled
+/// buffers are recycled through `run_pooled`'s free list.
+#[derive(Debug, Default)]
+pub struct StagedBatch {
+    /// The batch, in input order.
+    pub ops: Vec<Op>,
+    /// Gathered keys (`keys[i] == ops[i].key()`), staging scratch for
+    /// the bulk hash.
+    pub keys: Vec<u64>,
+    /// Bulk-hashed triples (`triples[i]` hashes `ops[i].key()`); empty
+    /// for backends whose `stage` is a no-op.
+    pub triples: Vec<HashTriple>,
+    /// Shard grouping: `groups[s]` lists batch positions owned by shard
+    /// `s`, in input order; empty for non-sharded backends.
+    pub groups: Vec<Vec<usize>>,
+}
+
+impl StagedBatch {
+    /// Load a fresh batch into (recycled) staging buffers.
+    pub fn reset(&mut self, batch: Vec<Op>) {
+        self.ops = batch;
+        self.clear_scratch();
+    }
+
+    /// Empty all buffers, keeping capacity for reuse.
+    pub fn clear(&mut self) {
+        self.ops.clear();
+        self.clear_scratch();
+    }
+
+    /// No stale routing may survive recycling: a backend that read
+    /// `groups` without re-staging would otherwise dispatch by a prior
+    /// batch's shard plan. Inner group vecs are cleared, not dropped,
+    /// so their capacity is reused.
+    fn clear_scratch(&mut self) {
+        self.keys.clear();
+        self.triples.clear();
+        for g in &mut self.groups {
+            g.clear();
+        }
+    }
+}
+
+/// How a concurrent filter rides the worker pool. The two provided
+/// methods implement the generic chunk-parallel path; [`ShardedOcf`]
+/// overrides both with the native hash-once/group-by-shard plan.
+pub trait PoolBackend: ConcurrentFilter {
+    /// Producer-side staging, running while the PREVIOUS batch is still
+    /// applying. The native sharded backend bulk-hashes the batch
+    /// through `executor` and groups it by shard; backends that hash
+    /// inside their batched ops (the chunked path) do nothing.
+    fn stage(&self, executor: &HashExecutor, staged: &mut StagedBatch) {
+        let _ = (executor, staged);
+    }
+
+    /// Dispatch the staged batch onto the pool. Implementations must
+    /// preserve per-key op order; the caller guarantees no other batch
+    /// is in flight.
+    fn dispatch<'scope>(
+        &'scope self,
+        staged: &Arc<StagedBatch>,
+        pool: &WorkerPool<'scope>,
+        chunk: usize,
+    ) -> Dispatch {
+        dispatch_chunked(self, staged, pool, chunk)
+    }
+}
+
+/// Native pooled backend: hash once on the producer, one task per
+/// non-empty shard group, each applying its group through the
+/// prefetch-pipelined engine under a single lock acquisition.
+impl PoolBackend for ShardedOcf {
+    fn stage(&self, executor: &HashExecutor, staged: &mut StagedBatch) {
+        let StagedBatch {
+            ops,
+            keys,
+            triples,
+            groups,
+        } = staged;
+        keys.clear();
+        keys.extend(ops.iter().map(|op| op.key()));
+        triples.clear();
+        executor
+            .hash_batch_into(keys, triples)
+            .expect("hash executor failed");
+        self.group_by_shard_into(triples, groups);
+    }
+
+    fn dispatch<'scope>(
+        &'scope self,
+        staged: &Arc<StagedBatch>,
+        pool: &WorkerPool<'scope>,
+        _chunk: usize,
+    ) -> Dispatch {
+        let workers = pool.worker_count();
+        let mut pending = 0;
+        for (sid, group) in staged.groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let st = Arc::clone(staged);
+            let filter: &'scope ShardedOcf = self;
+            pool.submit_to(
+                sid % workers,
+                Box::new(move || {
+                    filter.with_shard(sid, |shard| {
+                        apply_shard_group(shard, &st.ops, &st.triples, &st.groups[sid])
+                    })
+                }),
+            );
+            pending += 1;
+        }
+        Dispatch::Pending(pending)
+    }
+}
+
+/// Coarse-lock backends take the default chunk-parallel dispatch; the
+/// lock serializes the apply itself, but batching still amortizes it
+/// and the producer's staging/batching overlaps it.
+impl<F: crate::filter::BatchedFilter + Send> PoolBackend for MutexFilter<F> {}
+
+/// The generic chunk-parallel dispatch. A batch that is one maximal
+/// same-kind run (the burst case) fans out fully and returns
+/// [`Dispatch::Pending`], overlapping with the producer's next stage;
+/// a mixed batch is applied run-by-run with an internal barrier at
+/// every op-kind boundary (lookups must see every prior mutation) and
+/// returns [`Dispatch::Done`].
+pub fn dispatch_chunked<'scope, C: ConcurrentFilter + ?Sized>(
+    filter: &'scope C,
+    staged: &Arc<StagedBatch>,
+    pool: &WorkerPool<'scope>,
+    chunk: usize,
+) -> Dispatch {
+    let ops = &staged.ops;
+    let chunk = chunk.max(1);
+    if ops.is_empty() {
+        return Dispatch::Pending(0);
+    }
+    let single_run = ops
+        .windows(2)
+        .all(|w| std::mem::discriminant(&w[0]) == std::mem::discriminant(&w[1]));
+    if single_run {
+        let pending = submit_run_chunks(filter, staged, pool, chunk, 0, ops.len());
+        return Dispatch::Pending(pending);
+    }
+    let mut total = Partial::default();
+    let mut i = 0;
+    while i < ops.len() {
+        let mut j = i;
+        while j < ops.len()
+            && std::mem::discriminant(&ops[j]) == std::mem::discriminant(&ops[i])
+        {
+            j += 1;
+        }
+        let pending = submit_run_chunks(filter, staged, pool, chunk, i, j);
+        total.absorb(&pool.collect(pending));
+        i = j;
+    }
+    Dispatch::Done(total)
+}
+
+/// Fan one same-kind run `[start, end)` out as `chunk`-sized tasks;
+/// returns how many were submitted.
+fn submit_run_chunks<'scope, C: ConcurrentFilter + ?Sized>(
+    filter: &'scope C,
+    staged: &Arc<StagedBatch>,
+    pool: &WorkerPool<'scope>,
+    chunk: usize,
+    start: usize,
+    end: usize,
+) -> usize {
+    let mut pending = 0;
+    let mut s = start;
+    while s < end {
+        let e = (s + chunk).min(end);
+        let st = Arc::clone(staged);
+        pool.submit(Box::new(move || apply_run_concurrent(filter, &st.ops[s..e])));
+        pending += 1;
+        s = e;
+    }
+    pending
+}
+
+/// Per-worker-thread scratch for the chunk-parallel apply: the gathered
+/// keys, output buffers, and the [`ProbeSession`]. Thread-local so a
+/// long-lived pool worker reuses one set across every task of every
+/// batch — the chunked path is as allocation-free in steady state as
+/// the session-based batch APIs it calls.
+#[derive(Default)]
+struct RunScratch {
+    session: ProbeSession,
+    keys: Vec<u64>,
+    bools: Vec<bool>,
+    results: Vec<Result<(), FilterError>>,
+}
+
+thread_local! {
+    static RUN_SCRATCH: std::cell::RefCell<RunScratch> =
+        std::cell::RefCell::new(RunScratch::default());
+}
+
+/// Apply one same-kind run through the `&self` batched trait surface.
+fn apply_run_concurrent<C: ConcurrentFilter + ?Sized>(filter: &C, ops: &[Op]) -> Partial {
+    let mut partial = Partial::default();
+    let Some(first) = ops.first() else {
+        return partial;
+    };
+    debug_assert!(
+        ops.iter()
+            .all(|op| std::mem::discriminant(op) == std::mem::discriminant(first)),
+        "mixed-kind run handed to apply_run_concurrent"
+    );
+    RUN_SCRATCH.with(|cell| {
+        let scratch = &mut *cell.borrow_mut();
+        scratch.keys.clear();
+        scratch.keys.extend(ops.iter().map(|op| op.key()));
+        let keys = &scratch.keys;
+        match first {
+            Op::Lookup(_) => {
+                scratch.bools.clear();
+                filter.contains_batch_into(keys, &mut scratch.session, &mut scratch.bools);
+                partial.lookups = keys.len() as u64;
+                partial.hits = scratch.bools.iter().filter(|&&h| h).count() as u64;
+            }
+            Op::Insert(_) => {
+                scratch.results.clear();
+                filter.insert_batch_into(keys, &mut scratch.session, &mut scratch.results);
+                partial.inserts = keys.len() as u64;
+            }
+            Op::Delete(_) => {
+                scratch.bools.clear();
+                filter.delete_batch_into(keys, &mut scratch.session, &mut scratch.bools);
+                partial.deletes = keys.len() as u64;
+            }
+        }
+    });
+    partial
+}
+
+/// Apply one shard's group of a hashed batch against its locked shard —
+/// the worker-facing twin of `ShardedOcf`'s gather→engine→scatter batch
+/// plan, shared by `run_sharded`'s scoped fan-out and the pooled
+/// dispatch so the two modes cannot drift. Runs of consecutive
+/// same-kind ops *within the group* drive the prefetch-pipelined engine
+/// (`contains_triples_into` / `insert_batch_hashed_into` /
+/// `delete_batch_hashed_into`); a run breaks at every op-kind change,
+/// so in-shard op order — and therefore per-key order — is preserved
+/// exactly.
+pub fn apply_shard_group(
+    shard: &mut Ocf,
+    ops: &[Op],
+    triples: &[HashTriple],
+    group: &[usize],
+) -> Partial {
+    let mut partial = Partial::default();
+    let mut keys_s: Vec<u64> = Vec::new();
+    let mut triples_s: Vec<HashTriple> = Vec::new();
+    let mut bools: Vec<bool> = Vec::new();
+    let mut results: Vec<Result<(), FilterError>> = Vec::new();
+    let mut gi = 0;
+    while gi < group.len() {
+        let kind = std::mem::discriminant(&ops[group[gi]]);
+        let mut gj = gi;
+        while gj < group.len() && std::mem::discriminant(&ops[group[gj]]) == kind {
+            gj += 1;
+        }
+        triples_s.clear();
+        triples_s.extend(group[gi..gj].iter().map(|&x| triples[x]));
+        match ops[group[gi]] {
+            // lookups never touch keys, so only the triples are gathered
+            Op::Lookup(_) => {
+                bools.clear();
+                shard.contains_triples_into(&triples_s, &mut bools);
+                partial.lookups += (gj - gi) as u64;
+                partial.hits += bools.iter().filter(|&&h| h).count() as u64;
+            }
+            Op::Insert(_) => {
+                keys_s.clear();
+                keys_s.extend(group[gi..gj].iter().map(|&x| ops[x].key()));
+                results.clear();
+                shard.insert_batch_hashed_into(&keys_s, &triples_s, &mut results);
+                partial.inserts += (gj - gi) as u64;
+            }
+            Op::Delete(_) => {
+                keys_s.clear();
+                keys_s.extend(group[gi..gj].iter().map(|&x| ops[x].key()));
+                bools.clear();
+                shard.delete_batch_hashed_into(&keys_s, &triples_s, &mut bools);
+                partial.deletes += (gj - gi) as u64;
+            }
+        }
+        gi = gj;
+    }
+    partial
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::{Mode, OcfConfig};
+
+    #[test]
+    fn bounded_queue_fifo_and_close() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        q.close();
+        assert_eq!(q.push(9), Err(9), "closed queue rejects pushes");
+        // backlog still drains after close
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_blocks_until_consumed() {
+        let q = Arc::new(BoundedQueue::new(1));
+        let consumer = Arc::clone(&q);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = consumer.pop() {
+                    got.push(v);
+                }
+                assert_eq!(got, (0..100).collect::<Vec<u32>>());
+            });
+            for v in 0..100u32 {
+                q.push(v).unwrap(); // blocks at capacity 1; must not deadlock
+            }
+            q.close();
+        });
+    }
+
+    #[test]
+    fn pool_runs_tasks_and_collects_partials() {
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::new(scope, 3, 2);
+            assert_eq!(pool.worker_count(), 3);
+            for i in 0..50u64 {
+                pool.submit(Box::new(move || Partial {
+                    inserts: i,
+                    ..Partial::default()
+                }));
+            }
+            let total = pool.collect(50);
+            assert_eq!(total.inserts, (0..50).sum::<u64>());
+            pool.shutdown();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "task boom")]
+    fn worker_panic_propagates_instead_of_hanging() {
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::new(scope, 2, 2);
+            pool.submit(Box::new(|| panic!("task boom")));
+            pool.submit(Box::new(Partial::default));
+            // the panicked task's payload is re-raised here; the pool's
+            // close-on-drop then releases the surviving worker so the
+            // scope join completes and the panic reaches the harness
+            let _ = pool.collect(2);
+        });
+    }
+
+    #[test]
+    fn collect_timed_reports_completion_instant() {
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::new(scope, 2, 4);
+            let before = Instant::now();
+            for _ in 0..4 {
+                pool.submit(Box::new(Partial::default));
+            }
+            let (total, done) = pool.collect_timed(4);
+            assert_eq!(total, Partial::default());
+            let done = done.expect("4 tasks must report a completion time");
+            assert!(done >= before);
+            assert!(pool.collect_timed(0).1.is_none());
+            pool.shutdown();
+        });
+    }
+
+    #[test]
+    fn pool_submit_to_pins_worker() {
+        std::thread::scope(|scope| {
+            let pool = WorkerPool::new(scope, 2, 8);
+            for _ in 0..10 {
+                pool.submit_to(7, Box::new(|| Partial::default())); // 7 % 2 == worker 1
+            }
+            assert_eq!(pool.collect(10), Partial::default());
+            pool.shutdown();
+        });
+    }
+
+    #[test]
+    fn pool_config_defaults_and_describe() {
+        let cfg = PoolConfig::default();
+        assert!(cfg.effective_workers() >= 2);
+        assert!(cfg.describe().contains("auto("));
+        let cfg = PoolConfig {
+            workers: 3,
+            queue_depth: 0,
+            chunk: 0,
+        };
+        assert_eq!(cfg.effective_workers(), 3);
+        assert_eq!(cfg.effective_queue_depth(), 1);
+        assert_eq!(cfg.effective_chunk(), 1);
+        assert_eq!(cfg.describe(), "workers=3 queue_depth=1 chunk=1");
+    }
+
+    #[test]
+    fn apply_shard_group_matches_scalar_walk() {
+        let cfg = OcfConfig {
+            mode: Mode::Eof,
+            initial_capacity: 2048,
+            ..OcfConfig::default()
+        };
+        let mut pooled = Ocf::new(cfg);
+        let hasher = pooled.hasher();
+        let ops: Vec<Op> = (0..600u64)
+            .map(|i| match i % 4 {
+                0 | 1 => Op::Insert(i / 2),
+                2 => Op::Lookup(i / 2),
+                _ => Op::Delete(i / 3),
+            })
+            .collect();
+        let triples: Vec<HashTriple> =
+            ops.iter().map(|op| hasher.hash_key(op.key())).collect();
+        let group: Vec<usize> = (0..ops.len()).collect();
+        let p = apply_shard_group(&mut pooled, &ops, &triples, &group);
+
+        // twin filter driven by the scalar op-at-a-time walk
+        let mut scalar = Ocf::new(cfg);
+        let mut q = Partial::default();
+        for (op, &t) in ops.iter().zip(&triples) {
+            match *op {
+                Op::Lookup(_) => {
+                    q.lookups += 1;
+                    q.hits += scalar.contains_triple(t) as u64;
+                }
+                Op::Insert(k) => {
+                    let _ = scalar.insert_hashed(k, t);
+                    q.inserts += 1;
+                }
+                Op::Delete(k) => {
+                    scalar.delete_hashed(k, t);
+                    q.deletes += 1;
+                }
+            }
+        }
+        assert_eq!(p, q, "engine-run group apply must match the scalar walk");
+        assert_eq!(pooled.len(), scalar.len());
+        for probe in (0..1200u64).step_by(7) {
+            let t = hasher.hash_key(probe);
+            assert_eq!(pooled.contains_triple(t), scalar.contains_triple(t), "{probe}");
+        }
+    }
+}

@@ -96,17 +96,32 @@ impl HashExecutor {
 
     /// Hash a batch of keys into triples.
     pub fn hash_batch(&self, keys: &[u64]) -> Result<Vec<HashTriple>, RuntimeError> {
+        let mut out = Vec::with_capacity(keys.len());
+        self.hash_batch_into(keys, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`HashExecutor::hash_batch`] appending into a caller-owned
+    /// buffer — hot staging paths (the pooled pipeline) reuse one
+    /// across batches so bulk hashing allocates nothing in steady
+    /// state.
+    pub fn hash_batch_into(
+        &self,
+        keys: &[u64],
+        out: &mut Vec<HashTriple>,
+    ) -> Result<(), RuntimeError> {
         match (&self.engine, self.pick_batch(keys.len())) {
             (Some(engine), Some(batch)) if !keys.is_empty() => {
-                let mut out = Vec::with_capacity(keys.len());
+                out.reserve(keys.len());
                 for chunk in keys.chunks(batch) {
-                    self.hash_chunk_xla(engine, chunk, batch, &mut out)?;
+                    self.hash_chunk_xla(engine, chunk, batch, out)?;
                 }
-                Ok(out)
+                Ok(())
             }
             _ => {
                 self.native_calls.set(self.native_calls.get() + 1);
-                Ok(self.hasher.hash_batch(keys))
+                self.hasher.hash_batch_into(keys, out);
+                Ok(())
             }
         }
     }

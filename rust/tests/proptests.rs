@@ -23,14 +23,23 @@
 //!      engine-overridden batch impls are bit-identical to the default
 //!      scalar trait impls, `dyn` dispatch included — and a
 //!      bloom-backed `StorageNode::get_batch` equals its scalar `get`
-//!      loop end-to-end.
+//!      loop end-to-end;
+//!  P13 the pooled ingest engine is accounting-transparent: for
+//!      arbitrary op mixes, batch sizes, worker counts 1..=8, queue
+//!      depths and chunk grains, `run_pooled` over a `ShardedOcf`
+//!      produces a report count-identical (incl. lookup hits) to
+//!      `run_sharded` with identical filter end-state, and `run_pooled`
+//!      over a `MutexFilter`-wrapped OCF matches the scalar `run`'s op
+//!      counts, hits (static sizing: layout is interleaving-proof) and
+//!      exact end-state.
 
 use ocf::cluster::{Cluster, ReplicationConfig};
 use ocf::filter::{
     BatchedFilter, BucketTable, CuckooFilter, CuckooParams, FilterBuilder, FilterError,
-    FlatTable, MembershipFilter, Mode, Ocf, OcfConfig, PackedTable, ShardedOcf, VictimPolicy,
+    FlatTable, MembershipFilter, Mode, MutexFilter, Ocf, OcfConfig, PackedTable, ShardedOcf,
+    VictimPolicy,
 };
-use ocf::pipeline::{BatchPolicy, IngestPipeline};
+use ocf::pipeline::{BatchPolicy, IngestPipeline, PoolConfig};
 use ocf::runtime::HashExecutor;
 use ocf::store::{FlushPolicy, NodeConfig, StorageNode};
 use ocf::testutil::prop::{prop_check, Gen};
@@ -792,4 +801,106 @@ fn p11_ocf_batch_apis_match_scalar() {
             probes.iter().zip(&got).all(|(&k, &g2)| g2 == b.contains(k))
         },
     );
+}
+
+/// A P13 case: an op mix plus the whole pooled-engine knob surface.
+#[derive(Debug, Clone)]
+struct PoolCase {
+    ops: Vec<Op>,
+    mode: Mode,
+    batch: usize,
+    shards: usize,
+    workers: usize,
+    queue_depth: usize,
+    chunk: usize,
+}
+
+fn gen_pool_case(g: &mut Gen) -> PoolCase {
+    let case = gen_case(g, 1500, 1 << 12);
+    PoolCase {
+        ops: case.ops,
+        mode: case.mode,
+        batch: *g.choose(&[1usize, 7, 64, 333]),
+        shards: *g.choose(&[1usize, 2, 4]),
+        workers: g.usize_in(1, 8),
+        queue_depth: g.usize_in(1, 4),
+        chunk: *g.choose(&[1usize, 16, 128]),
+    }
+}
+
+#[test]
+fn p13_pooled_report_matches_sharded_and_scalar() {
+    prop_check("pooled-report-identity", 18, gen_pool_case, |case| {
+        let pool = PoolConfig {
+            workers: case.workers,
+            queue_depth: case.queue_depth,
+            chunk: case.chunk,
+        };
+        let policy = BatchPolicy {
+            max_batch: case.batch,
+            max_delay: std::time::Duration::from_secs(10),
+        };
+
+        // ---- sharded pair: run_pooled must equal run_sharded exactly
+        // (same per-shard op streams → bit-identical shards) ----
+        let cfg = OcfConfig {
+            mode: case.mode,
+            initial_capacity: 1024,
+            min_capacity: 256,
+            ..OcfConfig::default()
+        };
+        let a = ShardedOcf::with_shards(case.shards, cfg);
+        let b = ShardedOcf::with_shards(case.shards, cfg);
+        let ra = IngestPipeline::new(policy, HashExecutor::native(a.hasher()))
+            .run_sharded(case.ops.iter().copied(), &a);
+        let rb = IngestPipeline::new(policy, HashExecutor::native(b.hasher()))
+            .run_pooled(case.ops.iter().copied(), &b, &pool);
+        if (ra.ops, ra.batches, ra.inserts, ra.lookups, ra.lookup_hits, ra.deletes)
+            != (rb.ops, rb.batches, rb.inserts, rb.lookups, rb.lookup_hits, rb.deletes)
+        {
+            return false;
+        }
+        if a.len() != b.len() || a.shard_lens() != b.shard_lens() {
+            return false;
+        }
+        if !(0..(1u64 << 12))
+            .step_by(61)
+            .all(|k| a.contains_one(k) == b.contains_one(k))
+        {
+            return false;
+        }
+
+        // ---- generic pair: run_pooled over mutex<Ocf> vs scalar run.
+        // Static sizing with ample headroom makes capacity (and thus
+        // false-positive layout classes) independent of in-run
+        // interleaving, so even lookup hits must agree exactly. ----
+        let scfg = OcfConfig {
+            mode: Mode::Static,
+            initial_capacity: 1 << 14,
+            min_capacity: 1 << 14,
+            ..OcfConfig::default()
+        };
+        let mut scalar = Ocf::new(scfg);
+        let rs = IngestPipeline::new(policy, HashExecutor::native(scalar.hasher()))
+            .run(case.ops.iter().copied(), &mut scalar);
+        let pooled = MutexFilter::new(Ocf::new(scfg));
+        let rp = IngestPipeline::new(policy, HashExecutor::native(scalar.hasher()))
+            .run_pooled(case.ops.iter().copied(), &pooled, &pool);
+        if (rs.ops, rs.batches, rs.inserts, rs.lookups, rs.lookup_hits, rs.deletes)
+            != (rp.ops, rp.batches, rp.inserts, rp.lookups, rp.lookup_hits, rp.deletes)
+        {
+            return false;
+        }
+        let inner = pooled.into_inner();
+        if inner.len() != scalar.len() {
+            return false;
+        }
+        // exact end-state agreement, model included
+        let live = model_apply(&case.ops);
+        inner.len() == live.len()
+            && (0..(1u64 << 12))
+                .step_by(43)
+                .all(|k| inner.contains_exact(k) == scalar.contains_exact(k))
+            && live.iter().all(|&k| inner.contains_exact(k))
+    });
 }

@@ -16,7 +16,8 @@
 //!                       `BENCH_probe.json` at the repo root).
 
 use ocf::exp::probe::{dyn_overhead, measure, render, speedup, ProbePoint, BATCH};
-use ocf::filter::prefetch_depth;
+use ocf::filter::kernel::engine_info;
+use ocf::filter::tune;
 
 fn json_points(points: &[ProbePoint]) -> String {
     let rows: Vec<String> = points
@@ -24,10 +25,12 @@ fn json_points(points: &[ProbePoint]) -> String {
         .map(|p| {
             format!(
                 "    {{\"backend\": \"{}\", \"mode\": \"{}\", \"workload\": \"{}\", \
-                 \"probes\": {}, \"secs\": {:.6}, \"mops\": {:.3}, \"hits\": {}}}",
+                 \"kernel\": \"{}\", \"probes\": {}, \"secs\": {:.6}, \"mops\": {:.3}, \
+                 \"hits\": {}}}",
                 p.backend,
                 p.mode,
                 p.workload,
+                p.kernel,
                 p.probes,
                 p.secs,
                 p.mops(),
@@ -36,6 +39,34 @@ fn json_points(points: &[ProbePoint]) -> String {
         })
         .collect();
     rows.join(",\n")
+}
+
+/// The `tuner` JSON section: the kernel × depth microbench grid plus
+/// the winner, so every trajectory point records what the dispatch
+/// layer would pick on this host (and whether `OCF_TUNE` drove the
+/// run's actual selection).
+fn json_tuner(outcome: &tune::TuneOutcome, active_by_tuner: bool) -> String {
+    let grid: Vec<String> = outcome
+        .points
+        .iter()
+        .map(|p| {
+            format!(
+                "      {{\"kernel\": \"{}\", \"depth\": {}, \"mops\": {:.3}}}",
+                p.kernel, p.depth, p.mops
+            )
+        })
+        .collect();
+    format!(
+        "{{\n    \"kernel\": \"{}\", \"depth\": {}, \"applied\": {}, \
+         \"n_keys\": {}, \"n_probes\": {}, \"elapsed_ms\": {:.1},\n    \"grid\": [\n{}\n    ]\n  }}",
+        outcome.kernel.name(),
+        outcome.depth,
+        active_by_tuner,
+        outcome.n_keys,
+        outcome.n_probes,
+        outcome.elapsed_ms,
+        grid.join(",\n")
+    )
 }
 
 fn main() {
@@ -58,17 +89,37 @@ fn main() {
     let path = std::env::var("OCF_BENCH_JSON")
         .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_probe.json").into());
 
-    // effective (env-overridable) engine depth — see the filter README
-    let depth = prefetch_depth();
-    eprintln!("probe_throughput: {n_keys} resident keys, {n_probes} probes/arm (smoke={smoke})");
+    // effective (env/tuner-overridable) dispatch choices — filter README
+    let info = engine_info();
+    let depth = info.prefetch_depth;
+    eprintln!(
+        "probe_throughput: {n_keys} resident keys, {n_probes} probes/arm \
+         (smoke={smoke}, kernel={}, depth={depth})",
+        info.kernel
+    );
     let points = measure(n_keys, n_probes);
+
+    // kernel × depth microbench grid for the `tuner` JSON section.
+    // Under OCF_TUNE the startup sweep already ran inside engine_info()
+    // — reuse its cached outcome so the run isn't swept twice and the
+    // emitted grid is exactly the one that drove selection; otherwise
+    // run an informational sweep (smoke runs shrink it so the CI gate
+    // stays fast).
+    let tuner = if tune::requested() {
+        tune::auto_tune().clone()
+    } else if smoke {
+        tune::microbench(20_000, 4_096)
+    } else {
+        tune::microbench(tune::DEFAULT_KEYS, tune::DEFAULT_PROBES)
+    };
 
     println!(
         "{}",
         render(
             format!(
-                "probe_throughput — scalar vs batched vs batched-dyn (prefetch depth \
-                 {depth}, {n_keys} keys)"
+                "probe_throughput — scalar vs batched vs batched-dyn (kernel {}, \
+                 prefetch depth {depth}, {n_keys} keys)",
+                info.kernel
             ),
             &points,
         )
@@ -107,14 +158,17 @@ fn main() {
     // schema seed (`measured: false`); keep both files field-compatible.
     let json = format!(
         "{{\n  \"bench\": \"probe_throughput\",\n  \"unix_time\": {unix_time},\n  \
-         \"smoke\": {smoke},\n  \"measured\": true,\n  \"phase\": \"post-trait-redesign\",\n  \
+         \"smoke\": {smoke},\n  \"measured\": true,\n  \"phase\": \"post-kernel-dispatch\",\n  \
          \"note\": \"regenerate with: cargo bench --bench probe_throughput (full scale)\",\n  \
          \"n_keys\": {n_keys},\n  \"n_probes\": {n_probes},\n  \
-         \"batch\": {BATCH},\n  \"prefetch_depth\": {depth},\n  \"arms\": [\n{}\n  ],\n  \
+         \"batch\": {BATCH},\n  \"prefetch_depth\": {depth},\n  \
+         \"kernel\": \"{}\",\n  \"tuner\": {},\n  \"arms\": [\n{}\n  ],\n  \
          \"speedup\": {{\"flat_neg\": {:.3}, \"packed_neg\": {:.3}, \
          \"flat_pos\": {:.3}, \"packed_pos\": {:.3}, \"bloom_neg\": {:.3}}},\n  \
          \"trait_overhead\": {{\"flat_neg\": {:.3}, \"packed_neg\": {:.3}, \
          \"flat_pos\": {:.3}, \"packed_pos\": {:.3}}}\n}}\n",
+        info.kernel,
+        json_tuner(&tuner, info.tuned),
         json_points(&points),
         speedup(&points, "flat", "neg").unwrap_or(0.0),
         speedup(&points, "packed", "neg").unwrap_or(0.0),
@@ -139,11 +193,22 @@ fn main() {
         "\"speedup\"",
         "\"trait_overhead\"",
         "\"prefetch_depth\"",
+        "\"kernel\"",
+        "\"tuner\"",
+        "\"grid\"",
+        "\"applied\"",
         "\"flat_neg\"",
         "\"packed_neg\"",
     ] {
         assert!(back.contains(field), "BENCH_probe.json missing {field}");
     }
+    // every arm row carries its kernel attribution
+    assert_eq!(
+        back.matches("\"kernel\": ").count(),
+        // 14 arms + the tuner section + the top-level field
+        points.len() + 1 + 1 + tuner.points.len(),
+        "kernel fields missing from arms/tuner"
+    );
     // 4 cuckoo batched arms + 2 bloom (default-impl) batched arms
     assert_eq!(
         back.matches("\"mode\": \"batched\"").count(),

@@ -1,0 +1,272 @@
+//! E12 — per-kernel probe throughput: every runtime-dispatchable
+//! [`ProbeKernel`] variant measured on contains / insert / delete at
+//! three load factors.
+//!
+//! E10 answers "what does the batched pipeline buy over scalar loops";
+//! E12 answers the orthogonal question the dispatch layer introduces:
+//! "what does each *kernel* buy at a given occupancy". Load factor
+//! matters because it shifts the primary-hit rate — at 0.3 most
+//! negative probes short-circuit nowhere and both candidate buckets
+//! are scanned, at 0.85 positive probes usually hit the primary — which is
+//! exactly the regime difference between the fused pair compare and
+//! the lazy-alternate pipeline.
+//!
+//! Reuses the E10 harness conventions: [`BATCH`]-sized chunks through
+//! one reused [`ProbeSession`], hit counts asserted identical across
+//! kernels (they are observationally identical by P14 — a divergence
+//! here is a dispatch bug, not noise), and the shared
+//! [`Table`](super::report::Table) renderer.
+
+use super::probe::BATCH;
+use super::report::{f, Table};
+use super::Scale;
+use crate::filter::kernel::{self, ProbeKernel};
+use crate::filter::{
+    BatchedFilter, CuckooFilter, CuckooParams, FlatTable, MembershipFilter, ProbeSession,
+    VictimPolicy,
+};
+use std::time::Instant;
+
+/// One measured cell of the kernel sweep.
+#[derive(Debug, Clone)]
+pub struct KernelPoint {
+    /// Kernel variant.
+    pub kernel: &'static str,
+    /// Operation ("contains" | "insert" | "delete").
+    pub op: &'static str,
+    /// Target load factor the table was filled to.
+    pub load: f64,
+    /// Operations issued.
+    pub ops: usize,
+    /// Wallclock of the timed loop.
+    pub secs: f64,
+    /// Successful/hit operations (sanity anchor: must agree across
+    /// kernels for the same op × load).
+    pub hits: usize,
+}
+
+impl KernelPoint {
+    pub fn mops(&self) -> f64 {
+        if self.secs <= 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / self.secs / 1e6
+        }
+    }
+}
+
+/// The load factors swept (sparse / mid / near the paper's 0.9 cliff).
+pub const LOADS: &[f64] = &[0.3, 0.6, 0.85];
+
+fn build(cap: usize, k: &'static ProbeKernel, n_keys: usize) -> (CuckooFilter<FlatTable>, usize) {
+    let mut filter = CuckooFilter::<FlatTable>::with_kernel(
+        CuckooParams {
+            capacity: cap,
+            // Rollback: failed inserts near 0.85 load must not strand
+            // state, so every kernel sees an identical table.
+            victim_policy: VictimPolicy::Rollback,
+            ..CuckooParams::default()
+        },
+        k,
+    );
+    let mut resident = 0usize;
+    for key in 0..n_keys as u64 {
+        if filter.insert(key).is_ok() {
+            resident += 1;
+        }
+    }
+    (filter, resident)
+}
+
+/// Measure {available kernel} × [`LOADS`] × {contains, insert, delete}
+/// on a `cap`-slot flat-table filter, `n_ops` timed ops per cell.
+pub fn measure(cap: usize, n_ops: usize) -> Vec<KernelPoint> {
+    let kernels = kernel::available();
+    let mut out = Vec::with_capacity(kernels.len() * LOADS.len() * 3);
+    let mut session = ProbeSession::with_capacity(BATCH);
+    for &load in LOADS {
+        let n_keys = (cap as f64 * load) as usize;
+        // The workloads depend only on (load, resident) and resident is
+        // kernel-independent (P14) — build them once per load factor,
+        // not once per kernel.
+        let mut workloads: Option<(usize, Vec<u64>, Vec<u64>, Vec<u64>)> = None;
+        for &k in &kernels {
+            let (base, resident) = build(cap, k, n_keys);
+            if workloads.is_none() {
+                // contains: half resident, half absent probes (the
+                // mixed read path); insert: fresh keys; delete:
+                // resident keys (cycled).
+                let probes: Vec<u64> = (0..n_ops as u64)
+                    .map(|i| {
+                        if i % 2 == 0 {
+                            i % (resident.max(1) as u64)
+                        } else {
+                            (1u64 << 40) + i
+                        }
+                    })
+                    .collect();
+                let fresh: Vec<u64> = (0..n_ops as u64).map(|i| (1u64 << 41) + i).collect();
+                let dels: Vec<u64> = (0..n_ops as u64)
+                    .map(|i| i % (resident.max(1) as u64))
+                    .collect();
+                workloads = Some((resident, probes, fresh, dels));
+            }
+            let w = workloads.as_ref().expect("workloads just initialized");
+            assert_eq!(w.0, resident, "{}: kernel-divergent resident count", k.name());
+            let (probes, fresh, dels) = (&w.1, &w.2, &w.3);
+            let mut answers: Vec<bool> = Vec::with_capacity(BATCH);
+            let t0 = Instant::now();
+            let mut hits = 0usize;
+            for chunk in probes.chunks(BATCH) {
+                answers.clear();
+                base.contains_batch_into(chunk, &mut session, &mut answers);
+                hits += answers.iter().filter(|&&h| h).count();
+            }
+            out.push(KernelPoint {
+                kernel: k.name(),
+                op: "contains",
+                load,
+                ops: probes.len(),
+                secs: t0.elapsed().as_secs_f64(),
+                hits,
+            });
+
+            // insert: fresh keys on a clone (each kernel starts from
+            // its own — bit-identical — base table).
+            let mut f = base.clone();
+            let mut results = Vec::with_capacity(BATCH);
+            let t0 = Instant::now();
+            let mut ok = 0usize;
+            for chunk in fresh.chunks(BATCH) {
+                results.clear();
+                f.insert_batch_into(chunk, &mut session, &mut results);
+                ok += results.iter().filter(|r| r.is_ok()).count();
+            }
+            out.push(KernelPoint {
+                kernel: k.name(),
+                op: "insert",
+                load,
+                ops: fresh.len(),
+                secs: t0.elapsed().as_secs_f64(),
+                hits: ok,
+            });
+
+            // delete: resident keys on a clone (unverified raw-filter
+            // deletes — the bucket-scan cost, not keystore walks).
+            let mut f = base.clone();
+            let mut deleted: Vec<bool> = Vec::with_capacity(BATCH);
+            let t0 = Instant::now();
+            let mut removed = 0usize;
+            for chunk in dels.chunks(BATCH) {
+                deleted.clear();
+                f.delete_batch_into(chunk, &mut session, &mut deleted);
+                removed += deleted.iter().filter(|&&d| d).count();
+            }
+            out.push(KernelPoint {
+                kernel: k.name(),
+                op: "delete",
+                load,
+                ops: dels.len(),
+                secs: t0.elapsed().as_secs_f64(),
+                hits: removed,
+            });
+        }
+    }
+    out
+}
+
+/// Render the sweep (kernels side by side per op × load, speedup vs
+/// the scalar reference kernel).
+pub fn render(title: impl Into<String>, points: &[KernelPoint]) -> String {
+    let mut table = Table::new(title, &["load", "op", "kernel", "Mops/s", "vs scalar"]);
+    for p in points {
+        let vs = points
+            .iter()
+            .find(|q| q.kernel == "scalar" && q.op == p.op && q.load == p.load)
+            .filter(|q| q.mops() > 0.0)
+            .map(|q| format!("{}x", f(p.mops() / q.mops(), 2)))
+            .unwrap_or_default();
+        table.row(&[
+            f(p.load, 2),
+            p.op.to_string(),
+            p.kernel.to_string(),
+            f(p.mops(), 2),
+            vs,
+        ]);
+    }
+    table.note(
+        "Flat-table filter, batched engine, mixed pos/neg contains probes; \
+         insert/delete run on clones of one shared base table per kernel. \
+         Kernels are observationally identical (P14) — hit counts are \
+         asserted equal across kernels; only throughput may differ.",
+    );
+    table.markdown()
+}
+
+/// The experiment driver (full scale: 1M-slot table, 500k ops/cell).
+pub fn run(scale: Scale) -> String {
+    let cap = scale.n(1 << 20, 8_192);
+    let n_ops = scale.n(500_000, 8_192);
+    let points = measure(cap, n_ops);
+    assert_hits_agree(&points);
+    render(
+        format!("E12 — probe kernels × load factor ({cap} slots, {n_ops} ops/cell)"),
+        &points,
+    )
+}
+
+/// Hit counts must be kernel-independent for every op × load cell.
+pub fn assert_hits_agree(points: &[KernelPoint]) {
+    for p in points {
+        for q in points {
+            if p.op == q.op && p.load == q.load {
+                assert_eq!(
+                    p.hits, q.hits,
+                    "kernel divergence: {}/{} at load {} ({} vs {})",
+                    p.op, q.op, p.load, p.kernel, q.kernel
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_grid_and_kernels_agree() {
+        let points = measure(4_096, 4_096);
+        let kernels = kernel::available();
+        assert_eq!(points.len(), kernels.len() * LOADS.len() * 3);
+        assert_hits_agree(&points);
+        for k in &kernels {
+            for &load in LOADS {
+                for op in ["contains", "insert", "delete"] {
+                    assert!(
+                        points
+                            .iter()
+                            .any(|p| p.kernel == k.name() && p.load == load && p.op == op),
+                        "missing cell {}×{load}×{op}",
+                        k.name()
+                    );
+                }
+            }
+        }
+        // deletes of resident keys must actually delete
+        assert!(points
+            .iter()
+            .filter(|p| p.op == "delete")
+            .all(|p| p.hits > 0));
+    }
+
+    #[test]
+    fn report_renders() {
+        let md = run(Scale(0.002));
+        assert!(md.contains("E12"));
+        assert!(md.contains("| scalar |") || md.contains("| scalar "));
+        assert!(md.contains("contains"));
+        assert!(md.contains("insert"));
+        assert!(md.contains("delete"));
+    }
+}

@@ -13,6 +13,7 @@
 //! | E9 | sharded concurrent front-end scaling              | [`sharded`] |
 //! | E10 | probe engine: scalar vs batched lookups          | [`probe`]  |
 //! | E11 | pooled ingest: persistent workers vs scoped fan-out | [`pool`] |
+//! | E12 | SIMD probe kernels × load factor                  | [`kernel`] |
 //!
 //! Every driver takes a [`Scale`] so the same code serves quick checks
 //! (`--scale 0.01`), CI, and full paper-scale runs, and returns a
@@ -24,6 +25,7 @@ pub mod burst;
 pub mod cartesian;
 pub mod fig2;
 pub mod fig3;
+pub mod kernel;
 pub mod pool;
 pub mod probe;
 pub mod report;
@@ -64,8 +66,9 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "sharded" => Ok(sharded::run(scale)),
             "probe" => Ok(probe::run(scale)),
             "pool" => Ok(pool::run(scale)),
+            "kernel" => Ok(kernel::run(scale)),
             other => Err(format!(
-                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool all)"
+                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool kernel all)"
             )),
         }
     };
@@ -83,6 +86,7 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "sharded",
             "probe",
             "pool",
+            "kernel",
         ] {
             out.push_str(&one(n)?);
             out.push('\n');

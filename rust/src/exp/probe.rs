@@ -38,6 +38,9 @@ pub struct ProbePoint {
     pub mode: &'static str,
     /// Workload ("neg" | "pos").
     pub workload: &'static str,
+    /// Probe kernel the bucket scans dispatched to ("-" for backends
+    /// outside the kernel layer, e.g. bloom).
+    pub kernel: &'static str,
     /// Resident keys in the filter.
     pub keys: usize,
     /// Probes issued.
@@ -69,6 +72,7 @@ fn time_arms<F: BatchedFilter + ?Sized>(
     filter: &F,
     backend: &'static str,
     workload: &'static str,
+    kernel: &'static str,
     n_keys: usize,
     probes: &[u64],
     out: &mut Vec<ProbePoint>,
@@ -84,6 +88,7 @@ fn time_arms<F: BatchedFilter + ?Sized>(
         backend,
         mode: "scalar",
         workload,
+        kernel,
         keys: n_keys,
         probes: probes.len(),
         secs: scalar_secs,
@@ -106,6 +111,7 @@ fn time_arms<F: BatchedFilter + ?Sized>(
         backend,
         mode: "batched",
         workload,
+        kernel,
         keys: n_keys,
         probes: probes.len(),
         secs: batched_secs,
@@ -132,12 +138,14 @@ fn run_cuckoo_arms<T: crate::filter::BucketTable + 'static>(
     out: &mut Vec<ProbePoint>,
 ) {
     let filter = build_cuckoo::<T>(n_keys);
+    // the runtime-dispatched kernel the table's bucket scans route to
+    let kernel = filter.kernel().name();
     // negative probes: disjoint key range; positive probes: residents
     let neg: Vec<u64> = (0..n_probes as u64).map(|i| (1u64 << 40) + i).collect();
     let pos: Vec<u64> = (0..n_probes as u64).map(|i| i % n_keys as u64).collect();
 
     for (workload, probes) in [("neg", &neg), ("pos", &pos)] {
-        let hits = time_arms(&filter, backend, workload, n_keys, probes, out);
+        let hits = time_arms(&filter, backend, workload, kernel, n_keys, probes, out);
 
         // batched through the trait object: same engine, virtual
         // dispatch per batch — the trait-indirection cost probe
@@ -157,6 +165,7 @@ fn run_cuckoo_arms<T: crate::filter::BucketTable + 'static>(
             backend,
             mode: "batched-dyn",
             workload,
+            kernel,
             keys: n_keys,
             probes: probes.len(),
             secs: dyn_secs,
@@ -173,7 +182,9 @@ fn run_bloom_arms(n_keys: usize, n_probes: usize, out: &mut Vec<ProbePoint>) {
     let neg: Vec<u64> = (0..n_probes as u64).map(|i| (1u64 << 40) + i).collect();
     let pos: Vec<u64> = (0..n_probes as u64).map(|i| i % n_keys as u64).collect();
     for (workload, probes) in [("neg", &neg), ("pos", &pos)] {
-        time_arms(&f, "bloom", workload, n_keys, probes, out);
+        // bloom sits outside the kernel layer (default scalar batch
+        // impls) — recorded as "-" in the trajectory JSON
+        time_arms(&f, "bloom", workload, "-", n_keys, probes, out);
     }
 }
 
@@ -299,6 +310,11 @@ mod tests {
             .iter()
             .filter(|p| p.workload == "pos")
             .all(|p| p.hits == p.probes));
+        // kernel attribution: cuckoo arms carry the dispatched kernel,
+        // bloom (outside the kernel layer) is marked "-"
+        assert!(points
+            .iter()
+            .all(|p| (p.backend == "bloom") == (p.kernel == "-")));
     }
 
     #[test]

@@ -5,78 +5,64 @@
 //! * [`FlatTable`] — one `u32` per slot. Fast (word-aligned loads, no
 //!   bit twiddling); memory = `4 B × slots` regardless of `fp_bits`.
 //!   This is the hot-path default. Whole-bucket probes load the 16-byte
-//!   bucket once and compare all 4 lanes at once (SSE2 on x86_64, a
-//!   lane-mask loop elsewhere).
+//!   bucket once and compare all 4 lanes at once (SSE2/AVX2/NEON/SWAR
+//!   per the dispatched kernel).
 //! * [`PackedTable`] — `fp_bits` per slot, bit-packed into `u64` words.
 //!   The space-optimal layout the cuckoo-filter literature assumes when
 //!   quoting bits/key; ~`fp_bits/32` of FlatTable's footprint. Probes
-//!   load the whole bucket (≤ 128 bits) once and scan it with SWAR
-//!   broadcast-compare — no per-slot shift/mask extraction.
+//!   load the whole bucket (≤ 128 bits) once and scan it with the
+//!   kernel's packed broadcast-compare — no per-slot shift/mask
+//!   extraction.
 //!
 //! Both store buckets of [`SLOTS`] = 4 fingerprints (paper §II.B:
 //! "recommended value for bucket size is 4"), with 0 = EMPTY. The
 //! generic bucket count is always a power of two so index masking is a
 //! single AND.
 //!
+//! Every bucket *scan* — contains, insert-slot, remove, the fused
+//! primary+alternate pair probe and the 4-bucket gather — routes
+//! through the [`ProbeKernel`] captured at table construction (see
+//! `kernel.rs`): the process default comes from runtime SIMD detection
+//! / `OCF_SIMD` / the auto-tuner, and explicit-kernel constructors
+//! ([`BucketTable::with_buckets_kernel`]) let the tuner, E12 and
+//! proptest P14 pin any variant per instance. No intrinsics or SWAR
+//! arithmetic live in this file.
+//!
 //! The [`BucketTable::prefetch_bucket`] hook is the substrate of the
 //! batched probe engine (see `cuckoo.rs` and `rust/src/filter/README.md`):
 //! it issues a best-effort cache prefetch for a bucket so a software
 //! pipeline can overlap the memory latency of many probes.
 
+use super::kernel::{self, prefetch_read, ProbeKernel};
+
 /// Slots per bucket. Frozen at 4 — also baked into the serialized
 /// frozen-table layout the Pallas probe kernel reads.
 pub const SLOTS: usize = 4;
-
-/// Architecture-gated read prefetch (no-op where unavailable).
-/// Prefetch never faults, so any address is safe to pass.
-#[cfg(target_arch = "x86_64")]
-#[inline(always)]
-pub(crate) fn prefetch_read<T>(p: *const T) {
-    use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
-    unsafe {
-        _mm_prefetch::<{ _MM_HINT_T0 }>(p as *const i8);
-    }
-}
-
-/// No-op fallback for targets without a stable prefetch intrinsic.
-#[cfg(not(target_arch = "x86_64"))]
-#[inline(always)]
-pub(crate) fn prefetch_read<T>(p: *const T) {
-    let _ = p;
-}
-
-/// Bitmask (bits 0..SLOTS) of lanes in `s` equal to `fp`: the one-load
-/// four-compare primitive behind FlatTable's probe ops. SSE2 is
-/// baseline on x86_64: one 16-byte load, one broadcast, one parallel
-/// compare, one movemask.
-#[cfg(target_arch = "x86_64")]
-#[inline(always)]
-fn flat_lane_mask(s: &[u32; SLOTS], fp: u32) -> u32 {
-    use std::arch::x86_64::*;
-    unsafe {
-        let v = _mm_loadu_si128(s.as_ptr() as *const __m128i);
-        let q = _mm_set1_epi32(fp as i32);
-        _mm_movemask_ps(_mm_castsi128_ps(_mm_cmpeq_epi32(v, q))) as u32
-    }
-}
-
-/// Branch-free lane-mask fallback; auto-vectorizes on NEON et al.
-#[cfg(not(target_arch = "x86_64"))]
-#[inline(always)]
-fn flat_lane_mask(s: &[u32; SLOTS], fp: u32) -> u32 {
-    (s[0] == fp) as u32
-        | (((s[1] == fp) as u32) << 1)
-        | (((s[2] == fp) as u32) << 2)
-        | (((s[3] == fp) as u32) << 3)
-}
 
 /// Abstract fingerprint bucket storage.
 pub trait BucketTable: Clone + std::fmt::Debug {
     /// Construct with `nbuckets` buckets (any size ≥ 1; power-of-two
     /// tables get the faster xor index mapping — see
     /// [`super::fingerprint::Hasher::alt_index`]), storing fingerprints
-    /// of `fp_bits` significant bits.
-    fn with_buckets(nbuckets: usize, fp_bits: u32) -> Self;
+    /// of `fp_bits` significant bits, scanning buckets with `kernel`.
+    fn with_buckets_kernel(nbuckets: usize, fp_bits: u32, kernel: &'static ProbeKernel) -> Self;
+
+    /// [`BucketTable::with_buckets_kernel`] with the process-wide
+    /// dispatch choice ([`kernel::active`]) — the constructor every
+    /// production path uses.
+    fn with_buckets(nbuckets: usize, fp_bits: u32) -> Self
+    where
+        Self: Sized,
+    {
+        Self::with_buckets_kernel(nbuckets, fp_bits, kernel::active())
+    }
+
+    /// The probe kernel this table scans with. Required (no default):
+    /// a default returning the process-global choice would silently
+    /// misattribute any backend that forgot to report the kernel it
+    /// was actually pinned with — and kernel attribution feeds E12,
+    /// the bench JSON and CI's forced-kernel check.
+    fn kernel(&self) -> &'static ProbeKernel;
 
     /// Number of buckets.
     fn nbuckets(&self) -> usize;
@@ -112,6 +98,32 @@ pub trait BucketTable: Clone + std::fmt::Debug {
     #[inline]
     fn contains(&self, b: usize, fp: u32) -> bool {
         (0..SLOTS).any(|s| self.get(b, s) == fp)
+    }
+
+    /// Fused membership over a probe's candidate pair: does bucket `b1`
+    /// *or* `b2` contain `fp`? Kernel-backed tables override this with
+    /// the fused two-bucket compare (both buckets in one wide compare
+    /// on AVX2; two overlapped loads elsewhere), which is the
+    /// latency-optimal shape for scalar lookups — the two candidate
+    /// lines are fetched in parallel instead of serially on a primary
+    /// miss.
+    #[inline]
+    fn contains_pair(&self, b1: usize, b2: usize, fp: u32) -> bool {
+        self.contains(b1, fp) || self.contains(b2, fp)
+    }
+
+    /// Gathered membership over four independent probes: bit `j` of
+    /// the result is set iff bucket `bs[j]` contains `fps[j]`. The
+    /// batched probe engine's inner step (`contains_batch` resolves
+    /// primary buckets four at a time); kernel-backed tables override
+    /// with the multi-bucket gather compare.
+    #[inline]
+    fn contains4(&self, bs: &[usize; 4], fps: &[u32; 4]) -> u32 {
+        let mut m = 0u32;
+        for (j, (&b, &fp)) in bs.iter().zip(fps).enumerate() {
+            m |= (self.contains(b, fp) as u32) << j;
+        }
+        m
     }
 
     /// Remove one copy of `fp` from bucket `b`. Returns true if removed.
@@ -162,6 +174,7 @@ pub struct FlatTable {
     slots: Vec<u32>,
     nbuckets: usize,
     fp_bits: u32,
+    kernel: &'static ProbeKernel,
 }
 
 impl FlatTable {
@@ -171,17 +184,29 @@ impl FlatTable {
         let base = b * SLOTS;
         self.slots[base..base + SLOTS].try_into().unwrap()
     }
+
+    /// Copy of bucket `b`'s four lanes — the raw view proptest P14
+    /// feeds to every kernel's primitives.
+    pub fn bucket_lanes(&self, b: usize) -> [u32; SLOTS] {
+        *self.bucket(b)
+    }
 }
 
 impl BucketTable for FlatTable {
-    fn with_buckets(nbuckets: usize, fp_bits: u32) -> Self {
+    fn with_buckets_kernel(nbuckets: usize, fp_bits: u32, kernel: &'static ProbeKernel) -> Self {
         assert!(nbuckets >= 1, "need at least one bucket");
         assert!((1..=32).contains(&fp_bits));
         Self {
             slots: vec![0u32; nbuckets * SLOTS],
             nbuckets,
             fp_bits,
+            kernel,
         }
+    }
+
+    #[inline(always)]
+    fn kernel(&self) -> &'static ProbeKernel {
+        self.kernel
     }
 
     #[inline(always)]
@@ -216,27 +241,47 @@ impl BucketTable for FlatTable {
     /// One-load whole-bucket probe (hot path override).
     #[inline(always)]
     fn contains(&self, b: usize, fp: u32) -> bool {
-        flat_lane_mask(self.bucket(b), fp) != 0
+        self.kernel.flat_mask(self.bucket(b), fp) != 0
+    }
+
+    /// Fused candidate-pair probe (one wide compare on AVX2).
+    #[inline(always)]
+    fn contains_pair(&self, b1: usize, b2: usize, fp: u32) -> bool {
+        self.kernel.flat_pair(self.bucket(b1), self.bucket(b2), fp) != 0
+    }
+
+    /// Four-probe gather (two wide compares on AVX2).
+    #[inline(always)]
+    fn contains4(&self, bs: &[usize; 4], fps: &[u32; 4]) -> u32 {
+        let g = [
+            self.bucket(bs[0]),
+            self.bucket(bs[1]),
+            self.bucket(bs[2]),
+            self.bucket(bs[3]),
+        ];
+        self.kernel.flat_gather4(&g, fps)
     }
 
     #[inline(always)]
     fn try_insert(&mut self, b: usize, fp: u32) -> bool {
-        let m = flat_lane_mask(self.bucket(b), 0);
-        if m == 0 {
-            return false;
+        match self.kernel.flat_insert_slot(self.bucket(b)) {
+            Some(s) => {
+                self.slots[b * SLOTS + s] = fp;
+                true
+            }
+            None => false,
         }
-        self.slots[b * SLOTS + m.trailing_zeros() as usize] = fp;
-        true
     }
 
     #[inline(always)]
     fn remove(&mut self, b: usize, fp: u32) -> bool {
-        let m = flat_lane_mask(self.bucket(b), fp);
-        if m == 0 {
-            return false;
+        match self.kernel.flat_find_slot(self.bucket(b), fp) {
+            Some(s) => {
+                self.slots[b * SLOTS + s] = 0;
+                true
+            }
+            None => false,
         }
-        self.slots[b * SLOTS + m.trailing_zeros() as usize] = 0;
-        true
     }
 
     fn memory_bytes(&self) -> usize {
@@ -251,12 +296,11 @@ impl BucketTable for FlatTable {
 /// Bit-packed storage: `fp_bits` per slot in a `u64` word array.
 ///
 /// Probe ops (`contains`/`try_insert`/`remove`) load the whole bucket —
-/// `SLOTS * fp_bits ≤ 128` bits — into a `u128` once and scan it with
-/// the SWAR zero-lane trick (`(x - lane_lsb) & !x & lane_msb`): the
-/// lowest marker bit is exactly the first lane equal to the broadcast
-/// fingerprint, with no per-slot shift/mask extraction. (Carry-borrow
-/// can plant spurious markers only *above* a real match, so presence
-/// tests and first-match indices are exact.)
+/// `SLOTS * fp_bits ≤ 128` bits — into a `u128` once and hand it to the
+/// kernel's packed-scan primitive ([`ProbeKernel::packed_match`]; the
+/// SWAR zero-lane trick on every SIMD kernel, a per-lane loop on
+/// `scalar`): the lowest marker bit is exactly the first lane equal to
+/// the broadcast fingerprint, with no per-slot shift/mask extraction.
 #[derive(Debug, Clone)]
 pub struct PackedTable {
     words: Vec<u64>,
@@ -267,6 +311,7 @@ pub struct PackedTable {
     lane_msb: u128,
     /// Mask of the `SLOTS * fp_bits` live bucket bits.
     bucket_mask: u128,
+    kernel: &'static ProbeKernel,
 }
 
 impl PackedTable {
@@ -305,13 +350,12 @@ impl PackedTable {
         v & self.bucket_mask
     }
 
-    /// SWAR zero-lane markers for `bucket ^ broadcast(fp)`: nonzero iff
-    /// some lane equals `fp`; the lowest marker sits in the first such
-    /// lane (at its MSB position).
+    /// Kernel-dispatched match markers for `bucket` vs broadcast `fp`:
+    /// nonzero iff some lane equals `fp`; the lowest marker sits in the
+    /// first such lane (at its MSB position).
     #[inline(always)]
     fn match_lanes(&self, bucket: u128, fp: u32) -> u128 {
-        let x = bucket ^ (self.lane_lsb * fp as u128);
-        x.wrapping_sub(self.lane_lsb) & !x & self.lane_msb
+        self.kernel.packed_match(bucket, fp, self.lane_lsb, self.lane_msb)
     }
 
     /// Lane index of the lowest marker (callers check `m != 0`).
@@ -319,10 +363,22 @@ impl PackedTable {
     fn marker_lane(&self, m: u128) -> usize {
         (m.trailing_zeros() / self.fp_bits) as usize
     }
+
+    /// Bucket `b` as one right-aligned `u128` — the raw view proptest
+    /// P14 feeds to every kernel's packed primitives.
+    pub fn bucket_bits(&self, b: usize) -> u128 {
+        self.load_bucket(b)
+    }
+
+    /// The `(lane_lsb, lane_msb)` SWAR constants for this table's
+    /// fingerprint width (for kernel-level differential tests).
+    pub fn swar_consts(&self) -> (u128, u128) {
+        (self.lane_lsb, self.lane_msb)
+    }
 }
 
 impl BucketTable for PackedTable {
-    fn with_buckets(nbuckets: usize, fp_bits: u32) -> Self {
+    fn with_buckets_kernel(nbuckets: usize, fp_bits: u32, kernel: &'static ProbeKernel) -> Self {
         assert!(nbuckets >= 1, "need at least one bucket");
         assert!((1..=32).contains(&fp_bits));
         let bits = nbuckets * SLOTS * fp_bits as usize;
@@ -341,7 +397,13 @@ impl BucketTable for PackedTable {
             } else {
                 (1u128 << bucket_bits) - 1
             },
+            kernel,
         }
+    }
+
+    #[inline(always)]
+    fn kernel(&self) -> &'static ProbeKernel {
+        self.kernel
     }
 
     #[inline(always)]
@@ -391,12 +453,42 @@ impl BucketTable for PackedTable {
         prefetch_read(p.wrapping_add(end_w));
     }
 
-    /// SWAR whole-bucket probe: one load, broadcast-compare all lanes.
+    /// Whole-bucket probe: one load, broadcast-compare all lanes
+    /// through the kernel's packed scan.
     #[inline(always)]
     fn contains(&self, b: usize, fp: u32) -> bool {
         // broadcast requires an in-range fingerprint (same contract as set)
         debug_assert!(u64::from(fp) <= self.mask());
         self.match_lanes(self.load_bucket(b), fp) != 0
+    }
+
+    /// Fused candidate-pair probe: both bucket loads issued before
+    /// either scan so the two (possible) cache misses overlap.
+    #[inline(always)]
+    fn contains_pair(&self, b1: usize, b2: usize, fp: u32) -> bool {
+        debug_assert!(u64::from(fp) <= self.mask());
+        let (w1, w2) = (self.load_bucket(b1), self.load_bucket(b2));
+        let (m1, m2) = self.kernel.packed_pair(w1, w2, fp, self.lane_lsb, self.lane_msb);
+        (m1 | m2) != 0
+    }
+
+    /// Four-probe gather: all four bucket loads grouped ahead of the
+    /// scans (four u128 buckets in flight per compare group).
+    #[inline(always)]
+    fn contains4(&self, bs: &[usize; 4], fps: &[u32; 4]) -> u32 {
+        let w = [
+            self.load_bucket(bs[0]),
+            self.load_bucket(bs[1]),
+            self.load_bucket(bs[2]),
+            self.load_bucket(bs[3]),
+        ];
+        let mut m = 0u32;
+        for (j, (&b, &fp)) in w.iter().zip(fps).enumerate() {
+            debug_assert!(u64::from(fp) <= self.mask());
+            m |= ((self.kernel.packed_match(b, fp, self.lane_lsb, self.lane_msb) != 0) as u32)
+                << j;
+        }
+        m
     }
 
     #[inline(always)]
@@ -552,12 +644,18 @@ mod tests {
     fn packed_swar_matches_scalar_reference() {
         use crate::util::SplitMix64;
 
-        /// A shadow backend that forces the slot-wise default impls.
+        /// A shadow backend that forces the slot-wise default impls
+        /// (including the kernel-free probe defaults).
         #[derive(Clone, Debug)]
         struct Naive(Vec<u32>, usize, u32);
         impl BucketTable for Naive {
-            fn with_buckets(nb: usize, fp_bits: u32) -> Self {
+            fn with_buckets_kernel(nb: usize, fp_bits: u32, _k: &'static ProbeKernel) -> Self {
                 Naive(vec![0; nb * SLOTS], nb, fp_bits)
+            }
+            fn kernel(&self) -> &'static ProbeKernel {
+                // kernel-free shadow backend: every scan is the
+                // slot-wise default, which matches the scalar contract
+                &kernel::SCALAR
             }
             fn nbuckets(&self) -> usize {
                 self.1
@@ -652,6 +750,121 @@ mod tests {
         assert_eq!(frozen.len(), 4 * SLOTS);
         assert_eq!(frozen[1 * SLOTS + 2], 77);
         assert_eq!(frozen.iter().filter(|&&x| x != 0).count(), 1);
+    }
+
+    /// The fused pair / 4-probe gather overrides must agree with the
+    /// slot-wise trait defaults on both tables, for every kernel this
+    /// host can run.
+    #[test]
+    fn fused_and_gather_probes_match_defaults() {
+        use crate::util::SplitMix64;
+
+        fn check<T: BucketTable>(k: &'static ProbeKernel, bits: u32) {
+            let nb = 23; // non-pow2
+            let mut t = T::with_buckets_kernel(nb, bits, k);
+            assert!(std::ptr::eq(t.kernel(), k));
+            let mut rng = SplitMix64::new(0xF00D + bits as u64);
+            let mask = if bits == 32 {
+                u64::from(u32::MAX)
+            } else {
+                (1u64 << bits) - 1
+            };
+            for _ in 0..600 {
+                let b = rng.next_below(nb as u64) as usize;
+                let fp = ((rng.next_u64() & mask) as u32).max(1);
+                let _ = t.try_insert(b, fp);
+            }
+            for _ in 0..600 {
+                let b1 = rng.next_below(nb as u64) as usize;
+                let b2 = rng.next_below(nb as u64) as usize;
+                let fp = ((rng.next_u64() & mask) as u32).max(1);
+                assert_eq!(
+                    t.contains_pair(b1, b2, fp),
+                    t.contains(b1, fp) || t.contains(b2, fp),
+                    "{} bits={bits} pair ({b1},{b2})",
+                    k.name()
+                );
+                let bs = [
+                    b1,
+                    b2,
+                    rng.next_below(nb as u64) as usize,
+                    rng.next_below(nb as u64) as usize,
+                ];
+                let fps = [
+                    fp,
+                    t.get(b2, 0).max(1),
+                    ((rng.next_u64() & mask) as u32).max(1),
+                    t.get(bs[3], 2).max(1),
+                ];
+                let got = t.contains4(&bs, &fps);
+                for (j, (&b, &f)) in bs.iter().zip(&fps).enumerate() {
+                    assert_eq!(
+                        (got >> j) & 1 != 0,
+                        t.contains(b, f),
+                        "{} bits={bits} gather lane {j}",
+                        k.name()
+                    );
+                }
+            }
+        }
+
+        for k in kernel::available() {
+            check::<FlatTable>(k, 16);
+            check::<FlatTable>(k, 32);
+            for bits in [4u32, 12, 13, 21, 32] {
+                check::<PackedTable>(k, bits);
+            }
+        }
+    }
+
+    /// Tables built with different kernels must evolve bit-identically
+    /// under the same op sequence — the construction-level half of the
+    /// P14 guarantee (identical insert-slot choices included, since a
+    /// divergent slot choice shows up in `to_frozen`).
+    #[test]
+    fn explicit_kernel_tables_bit_identical() {
+        use crate::util::SplitMix64;
+
+        fn check<T: BucketTable>(bits: u32) {
+            let kernels = kernel::available();
+            let nb = 37;
+            let mut tables: Vec<T> = kernels
+                .iter()
+                .map(|&k| T::with_buckets_kernel(nb, bits, k))
+                .collect();
+            let mask = if bits == 32 {
+                u64::from(u32::MAX)
+            } else {
+                (1u64 << bits) - 1
+            };
+            let mut rng = SplitMix64::new(0xBEEF + bits as u64);
+            for step in 0..3_000 {
+                let b = rng.next_below(nb as u64) as usize;
+                let fp = ((rng.next_u64() & mask) as u32).max(1);
+                let reference = match step % 3 {
+                    0 => tables[0].try_insert(b, fp),
+                    1 => tables[0].contains(b, fp),
+                    _ => tables[0].remove(b, fp),
+                };
+                for (t, k) in tables[1..].iter_mut().zip(&kernels[1..]) {
+                    let got = match step % 3 {
+                        0 => t.try_insert(b, fp),
+                        1 => t.contains(b, fp),
+                        _ => t.remove(b, fp),
+                    };
+                    assert_eq!(got, reference, "{} bits={bits} step={step}", k.name());
+                }
+            }
+            let frozen = tables[0].to_frozen();
+            for (t, k) in tables[1..].iter().zip(&kernels[1..]) {
+                assert_eq!(t.to_frozen(), frozen, "{} bits={bits}", k.name());
+            }
+        }
+
+        check::<FlatTable>(16);
+        for bits in [5u32, 13, 29] {
+            check::<PackedTable>(bits);
+        }
     }
 
     #[test]

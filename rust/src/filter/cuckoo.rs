@@ -51,7 +51,9 @@ fn parse_depth(s: &str) -> Option<usize> {
 /// Effective probe-pipeline depth for this process: [`PREFETCH_DEPTH`]
 /// unless the `OCF_PREFETCH_DEPTH` environment variable overrides it
 /// (validated and power-of-two-clamped into `1..=64`; an unparsable
-/// value falls back to the default with a one-time stderr warning).
+/// value falls back with a one-time stderr warning — env mistakes are
+/// never swallowed silently), or — with the env unset and `OCF_TUNE`
+/// set — the startup auto-tuner's winner ([`super::tune::auto_tune`]).
 /// Read once and cached, so the engine's hot loops pay a single atomic
 /// load. See `rust/src/filter/README.md` ("The prefetch depth knob").
 #[inline]
@@ -64,6 +66,11 @@ pub fn prefetch_depth() -> usize {
             );
             PREFETCH_DEPTH
         }),
+        Err(_) if super::tune::requested() => {
+            let depth = super::tune::auto_tune().depth;
+            super::tune::mark_applied();
+            depth
+        }
         Err(_) => PREFETCH_DEPTH,
     })
 }
@@ -136,6 +143,15 @@ pub struct CuckooFilter<T: BucketTable = FlatTable> {
 
 impl<T: BucketTable> CuckooFilter<T> {
     pub fn new(params: CuckooParams) -> Self {
+        Self::with_kernel(params, super::kernel::active())
+    }
+
+    /// [`CuckooFilter::new`] with an explicit probe kernel instead of
+    /// the process-wide dispatch choice — the constructor the startup
+    /// auto-tuner, the E12 kernel experiment and proptest P14 use to
+    /// pin a variant per instance. All kernels are observationally
+    /// identical (P14), so this never changes answers, only speed.
+    pub fn with_kernel(params: CuckooParams, kernel: &'static super::kernel::ProbeKernel) -> Self {
         // Exact sizing: nbuckets = ceil(c / SLOTS), NOT rounded to a
         // power of two — OCF's resize policies hand down fine-grained
         // capacity targets (EOF: c + cα) and rounding would quantize
@@ -143,7 +159,7 @@ impl<T: BucketTable> CuckooFilter<T> {
         // xor fast path in the hasher automatically.
         let nbuckets = crate::util::ceil_div(params.capacity.max(SLOTS), SLOTS);
         Self {
-            table: T::with_buckets(nbuckets, params.fp_bits),
+            table: T::with_buckets_kernel(nbuckets, params.fp_bits, kernel),
             hasher: Hasher::new(params.seed, params.fp_bits),
             len: 0,
             max_displacements: params.max_displacements,
@@ -157,6 +173,18 @@ impl<T: BucketTable> CuckooFilter<T> {
 
     pub fn params(&self) -> &CuckooParams {
         &self.params
+    }
+
+    /// The probe kernel this filter's table scans with.
+    pub fn kernel(&self) -> &'static super::kernel::ProbeKernel {
+        self.table.kernel()
+    }
+
+    /// Read-only view of the underlying bucket table (the
+    /// kernel-differential tests feed its raw bucket views to every
+    /// kernel's primitives).
+    pub fn table(&self) -> &T {
+        &self.table
     }
 
     pub fn hasher(&self) -> Hasher {
@@ -251,15 +279,20 @@ impl<T: BucketTable> CuckooFilter<T> {
     }
 
     /// Membership of a pre-hashed triple.
+    ///
+    /// Scalar lookups probe the candidate pair *fused*
+    /// ([`BucketTable::contains_pair`]): both bucket loads issue
+    /// back-to-back (one wide compare on AVX2), so on big tables the
+    /// two potential cache misses overlap instead of serializing on a
+    /// primary miss — the latency-optimal shape for a single probe.
+    /// (The batched engine keeps its lazy alternate instead: there,
+    /// bandwidth wins — see [`CuckooFilter::contains_triples_into`].)
     #[inline]
     pub fn contains_triple(&self, t: HashTriple) -> bool {
         let nb = self.table.nbuckets();
         let i1 = Hasher::primary_index(t, nb);
-        if self.table.contains(i1, t.fp) {
-            return true;
-        }
         let i2 = Hasher::alt_index(i1, t.fp, nb);
-        if self.table.contains(i2, t.fp) {
+        if self.table.contains_pair(i1, i2, t.fp) {
             return true;
         }
         match self.victim {
@@ -292,21 +325,35 @@ impl<T: BucketTable> CuckooFilter<T> {
     /// 2. a software pipeline walks the batch issuing a prefetch for
     ///    the primary bucket of key `i + PREFETCH_DEPTH` while probing
     ///    key `i`, so ~`PREFETCH_DEPTH` cache misses overlap instead of
-    ///    serializing;
+    ///    serializing. Primary probes resolve **four keys per step**
+    ///    through the kernel's multi-bucket gather compare
+    ///    ([`BucketTable::contains4`] — two 256-bit compares on AVX2);
     /// 3. a primary miss prefetches its *alternate* bucket and parks
     ///    the key in a short queue; it resolves ~`PREFETCH_DEPTH`
     ///    iterations later, when the line has arrived. The alternate
     ///    bucket is never touched (or prefetched) for primary hits.
     pub fn contains_triples_into(&self, triples: &[HashTriple], out: &mut Vec<bool>) {
+        // Engine entry: resolve the (env/tuner-overridable) pipeline
+        // depth once per batch — see `prefetch_depth`.
+        self.contains_triples_into_depth(triples, out, prefetch_depth());
+    }
+
+    /// [`CuckooFilter::contains_triples_into`] with an explicit
+    /// pipeline depth — the entry the startup auto-tuner sweeps so
+    /// measuring a candidate depth never touches the process-wide
+    /// `OnceLock` it is about to seed. Results are depth-independent
+    /// (depth only schedules prefetches).
+    pub fn contains_triples_into_depth(
+        &self,
+        triples: &[HashTriple],
+        out: &mut Vec<bool>,
+        depth: usize,
+    ) {
         let nb = self.table.nbuckets();
         let n = triples.len();
         let base = out.len();
         out.resize(base + n, false);
         let out = &mut out[base..];
-
-        // Engine entry: resolve the (env-overridable) pipeline depth
-        // once per batch — see `prefetch_depth`.
-        let depth = prefetch_depth();
 
         // Runs shorter than the pipeline depth get no overlap benefit;
         // resolve them scalar so short lookup runs (e.g. a mutation-
@@ -327,11 +374,46 @@ impl<T: BucketTable> CuckooFilter<T> {
             self.table.prefetch_bucket(i1);
         }
 
-        // Stage 2: pipelined primary probes; misses park in `pending`
-        // (index into the batch, alternate bucket) behind their alt
-        // prefetch and drain with ~depth of slack.
+        // Stage 2: pipelined primary probes, four keys per gather;
+        // misses park in `pending` (index into the batch, alternate
+        // bucket) behind their alt prefetch and drain with ~depth of
+        // slack. Identical answers to the one-key-at-a-time walk —
+        // the gather only widens the compare.
         let mut pending: VecDeque<(usize, usize)> = VecDeque::with_capacity(depth + 1);
-        for i in 0..n {
+        let n4 = n - (n % 4);
+        let mut i = 0;
+        while i < n4 {
+            for j in i..i + 4 {
+                if let Some(&ahead) = i1s.get(j + depth) {
+                    self.table.prefetch_bucket(ahead);
+                }
+            }
+            let bs = [i1s[i], i1s[i + 1], i1s[i + 2], i1s[i + 3]];
+            let fps = [
+                triples[i].fp,
+                triples[i + 1].fp,
+                triples[i + 2].fp,
+                triples[i + 3].fp,
+            ];
+            let hits = self.table.contains4(&bs, &fps);
+            for j in 0..4 {
+                let idx = i + j;
+                if (hits >> j) & 1 != 0 {
+                    out[idx] = true;
+                } else {
+                    let i2 = Hasher::alt_index(bs[j], fps[j], nb);
+                    self.table.prefetch_bucket(i2);
+                    pending.push_back((idx, i2));
+                    if pending.len() > depth {
+                        let (p, a) = pending.pop_front().unwrap();
+                        out[p] = self.resolve_alt(a, triples[p]);
+                    }
+                }
+            }
+            i += 4;
+        }
+        // Tail (n % 4 keys): the one-key walk.
+        for i in n4..n {
             if let Some(&ahead) = i1s.get(i + depth) {
                 self.table.prefetch_bucket(ahead);
             }
@@ -343,8 +425,8 @@ impl<T: BucketTable> CuckooFilter<T> {
                 self.table.prefetch_bucket(i2);
                 pending.push_back((i, i2));
                 if pending.len() > depth {
-                    let (j, a) = pending.pop_front().unwrap();
-                    out[j] = self.resolve_alt(a, triples[j]);
+                    let (p, a) = pending.pop_front().unwrap();
+                    out[p] = self.resolve_alt(a, triples[p]);
                 }
             }
         }

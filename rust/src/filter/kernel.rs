@@ -1,0 +1,748 @@
+//! Runtime-dispatched SIMD probe kernels.
+//!
+//! Every bucket-scan primitive the probe engine executes — single-bucket
+//! contains/insert-slot/remove, the *fused two-bucket* compare for a
+//! probe's primary+alternate pair, and the *multi-bucket gather* behind
+//! `contains_batch` — lives behind one [`ProbeKernel`] vtable. Five
+//! implementations ship:
+//!
+//! | kernel   | flat (`FlatTable`) bucket scan        | packed (`PackedTable`) scan |
+//! |----------|---------------------------------------|-----------------------------|
+//! | `scalar` | per-lane compare loop                 | per-lane shift/mask loop    |
+//! | `swar`   | u128 zero-lane trick over the 4×u32   | u128 zero-lane trick        |
+//! | `sse2`   | 16-byte load + `_mm_cmpeq_epi32`      | u128 zero-lane trick        |
+//! | `avx2`   | SSE2 single; 256-bit fused pair and   | u128 SWAR, pair/gather      |
+//! |          | two-compare 4-bucket (16-lane) gather | unrolled four-wide for ILP  |
+//! | `neon`   | `vceqq_u32` + narrow movemask         | u128 zero-lane trick        |
+//!
+//! The packed layout bit-packs `fp_bits ∈ 1..=32` lanes, so arbitrary
+//! widths do not map onto fixed SIMD lanes; explicit SIMD pays off on
+//! the flat side while the packed side keeps the branch-free u128 SWAR
+//! core and gains ILP from the fused/gathered forms (four u128 buckets
+//! in flight per compare group).
+//!
+//! ## Dispatch
+//!
+//! The process-wide kernel is selected **once** at first engine entry
+//! via [`active`]: `OCF_SIMD=scalar|swar|sse2|avx2|neon` overrides
+//! (invalid or locally-unavailable values log a one-time warning and
+//! fall back), otherwise `OCF_TUNE` hands the choice to the startup
+//! auto-tuner ([`super::tune`]), otherwise the widest
+//! runtime-detected kernel wins (`std::arch::is_x86_feature_detected!`
+//! / `is_aarch64_feature_detected!`). Bucket tables capture the kernel
+//! pointer at construction ([`super::bucket::BucketTable::with_buckets_kernel`]),
+//! so per-op dispatch is a plain field load — no `OnceLock` traffic in
+//! the probe loop — and the tuner, the E12 experiment and proptest P14
+//! can pin any kernel explicitly without touching process state.
+//!
+//! ## Result contract (pinned by P14 + the in-module differential test)
+//!
+//! All kernels are observationally identical: same membership answers,
+//! same first-match lane, same insert-slot choice. Raw masks may differ
+//! above the first set bit (the SWAR zero-lane trick can plant spurious
+//! markers only *above* a real match), so the contract for
+//! [`ProbeKernel::flat_mask`] / [`ProbeKernel::packed_match`] is:
+//! **zero iff no lane matches; the lowest set bit identifies the first
+//! matching lane; higher bits are unspecified.** Every engine consumer
+//! (`contains` presence tests, `try_insert` first-empty-slot,
+//! `remove` first-match) only reads the mask through that contract.
+
+use super::bucket::SLOTS;
+use std::sync::OnceLock;
+
+/// Architecture-gated read prefetch (no-op where unavailable).
+/// Prefetch never faults, so any address is safe to pass.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+pub(crate) fn prefetch_read<T>(p: *const T) {
+    use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+    unsafe {
+        _mm_prefetch::<{ _MM_HINT_T0 }>(p as *const i8);
+    }
+}
+
+/// No-op fallback for targets without a stable prefetch intrinsic.
+#[cfg(not(target_arch = "x86_64"))]
+#[inline(always)]
+pub(crate) fn prefetch_read<T>(p: *const T) {
+    let _ = p;
+}
+
+/// The probe-kernel vtable: one function pointer per bucket-scan
+/// primitive, plus the semantic helpers (`flat_insert_slot`,
+/// `flat_find_slot`) the engine's contains/insert-slot/remove paths
+/// are written against. Instances are `&'static`; tables store the
+/// pointer so dispatch is a field load.
+pub struct ProbeKernel {
+    name: &'static str,
+    flat_mask_fn: fn(&[u32; SLOTS], u32) -> u32,
+    flat_pair_fn: fn(&[u32; SLOTS], &[u32; SLOTS], u32) -> u32,
+    flat_gather4_fn: fn(&[&[u32; SLOTS]; 4], &[u32; 4]) -> u32,
+    packed_match_fn: fn(u128, u32, u128, u128) -> u128,
+    packed_pair_fn: fn(u128, u128, u32, u128, u128) -> (u128, u128),
+}
+
+impl std::fmt::Debug for ProbeKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProbeKernel").field("name", &self.name).finish()
+    }
+}
+
+impl ProbeKernel {
+    /// Kernel name (`"scalar"`, `"swar"`, `"sse2"`, `"avx2"`, `"neon"`).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Is this kernel executable on the current host? Compile-time
+    /// baseline kernels are always available; `avx2`/`neon` consult the
+    /// runtime feature detectors.
+    pub fn is_available(&self) -> bool {
+        match self.name {
+            #[cfg(target_arch = "x86_64")]
+            "avx2" => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            "neon" => std::arch::is_aarch64_feature_detected!("neon"),
+            _ => true,
+        }
+    }
+
+    /// Lane mask of `fp` in a flat bucket. Contract: `0` iff no lane
+    /// matches; `trailing_zeros()` of a nonzero mask is the first
+    /// matching lane; higher bits are unspecified (see module docs).
+    #[inline(always)]
+    pub fn flat_mask(&self, s: &[u32; SLOTS], fp: u32) -> u32 {
+        (self.flat_mask_fn)(s, fp)
+    }
+
+    /// Fused two-bucket compare (the primary+alternate probe pair):
+    /// low [`SLOTS`] bits follow the [`ProbeKernel::flat_mask`]
+    /// contract for `a`, the next [`SLOTS`] bits for `b`.
+    #[inline(always)]
+    pub fn flat_pair(&self, a: &[u32; SLOTS], b: &[u32; SLOTS], fp: u32) -> u32 {
+        (self.flat_pair_fn)(a, b, fp)
+    }
+
+    /// Multi-bucket gather (the `contains_batch` inner step): bit `j`
+    /// of the result is set iff bucket `bs[j]` contains `fps[j]`.
+    #[inline(always)]
+    pub fn flat_gather4(&self, bs: &[&[u32; SLOTS]; 4], fps: &[u32; 4]) -> u32 {
+        (self.flat_gather4_fn)(bs, fps)
+    }
+
+    /// First empty slot of a flat bucket (the insert-slot primitive),
+    /// `None` when full. Identical across kernels (P14).
+    #[inline(always)]
+    pub fn flat_insert_slot(&self, s: &[u32; SLOTS]) -> Option<usize> {
+        match self.flat_mask(s, 0) {
+            0 => None,
+            m => Some(m.trailing_zeros() as usize),
+        }
+    }
+
+    /// First slot of a flat bucket holding `fp` (the remove primitive),
+    /// `None` when absent. Identical across kernels (P14).
+    #[inline(always)]
+    pub fn flat_find_slot(&self, s: &[u32; SLOTS], fp: u32) -> Option<usize> {
+        match self.flat_mask(s, fp) {
+            0 => None,
+            m => Some(m.trailing_zeros() as usize),
+        }
+    }
+
+    /// Packed-bucket match markers for `fp` broadcast across the four
+    /// `fp_bits`-wide lanes of `bucket` (`lane_lsb`/`lane_msb` are the
+    /// table's SWAR constants: bit 0 / bit `fp_bits-1` of each lane).
+    /// Contract: `0` iff no lane matches; the lowest set bit sits at
+    /// the MSB position of the first matching lane; higher bits are
+    /// unspecified.
+    #[inline(always)]
+    pub fn packed_match(&self, bucket: u128, fp: u32, lane_lsb: u128, lane_msb: u128) -> u128 {
+        (self.packed_match_fn)(bucket, fp, lane_lsb, lane_msb)
+    }
+
+    /// Fused two-bucket packed compare; each half follows the
+    /// [`ProbeKernel::packed_match`] contract.
+    #[inline(always)]
+    pub fn packed_pair(
+        &self,
+        b1: u128,
+        b2: u128,
+        fp: u32,
+        lane_lsb: u128,
+        lane_msb: u128,
+    ) -> (u128, u128) {
+        (self.packed_pair_fn)(b1, b2, fp, lane_lsb, lane_msb)
+    }
+}
+
+// ---------------------------------------------------------------------
+// scalar: portable per-lane loops (the reference every other kernel is
+// differentially tested against).
+// ---------------------------------------------------------------------
+
+fn scalar_flat_mask(s: &[u32; SLOTS], fp: u32) -> u32 {
+    (s[0] == fp) as u32
+        | (((s[1] == fp) as u32) << 1)
+        | (((s[2] == fp) as u32) << 2)
+        | (((s[3] == fp) as u32) << 3)
+}
+
+fn scalar_flat_pair(a: &[u32; SLOTS], b: &[u32; SLOTS], fp: u32) -> u32 {
+    scalar_flat_mask(a, fp) | (scalar_flat_mask(b, fp) << SLOTS)
+}
+
+fn scalar_flat_gather4(bs: &[&[u32; SLOTS]; 4], fps: &[u32; 4]) -> u32 {
+    let mut m = 0u32;
+    for (j, (b, &fp)) in bs.iter().zip(fps).enumerate() {
+        m |= ((scalar_flat_mask(b, fp) != 0) as u32) << j;
+    }
+    m
+}
+
+/// Per-lane packed scan: extract each `fp_bits`-wide lane and compare.
+/// Markers are planted at every matching lane's MSB, which satisfies
+/// (and is strictly cleaner than) the SWAR marker contract.
+fn scalar_packed_match(bucket: u128, fp: u32, lane_lsb: u128, lane_msb: u128) -> u128 {
+    let _ = lane_lsb;
+    // lane_msb = lane_lsb << (fp_bits - 1) with lane 0 anchored at bit
+    // 0, so the lane width is recoverable from its lowest set bit.
+    let w = lane_msb.trailing_zeros() + 1;
+    let mask = (1u128 << w) - 1;
+    let mut m = 0u128;
+    for i in 0..SLOTS as u32 {
+        let off = i * w;
+        if (bucket >> off) & mask == fp as u128 {
+            m |= 1u128 << (off + w - 1);
+        }
+    }
+    m
+}
+
+fn scalar_packed_pair(b1: u128, b2: u128, fp: u32, lane_lsb: u128, lane_msb: u128) -> (u128, u128) {
+    (
+        scalar_packed_match(b1, fp, lane_lsb, lane_msb),
+        scalar_packed_match(b2, fp, lane_lsb, lane_msb),
+    )
+}
+
+/// The portable reference kernel.
+pub static SCALAR: ProbeKernel = ProbeKernel {
+    name: "scalar",
+    flat_mask_fn: scalar_flat_mask,
+    flat_pair_fn: scalar_flat_pair,
+    flat_gather4_fn: scalar_flat_gather4,
+    packed_match_fn: scalar_packed_match,
+    packed_pair_fn: scalar_packed_pair,
+};
+
+// ---------------------------------------------------------------------
+// swar: the u128 zero-lane trick on both table layouts. On the flat
+// side the 4×u32 bucket is one u128 with 32-bit lanes; markers land at
+// each matching lane's bit 31 and are remapped to lane bits. Borrow
+// propagation can plant spurious markers only above a real match —
+// exactly the mask contract.
+// ---------------------------------------------------------------------
+
+const FLAT_LSB: u128 = 0x0000_0001_0000_0001_0000_0001_0000_0001;
+const FLAT_MSB: u128 = FLAT_LSB << 31;
+
+#[inline(always)]
+fn swar_flat_markers(s: &[u32; SLOTS], fp: u32) -> u128 {
+    let v = (s[0] as u128)
+        | ((s[1] as u128) << 32)
+        | ((s[2] as u128) << 64)
+        | ((s[3] as u128) << 96);
+    let x = v ^ (FLAT_LSB * fp as u128);
+    x.wrapping_sub(FLAT_LSB) & !x & FLAT_MSB
+}
+
+fn swar_flat_mask(s: &[u32; SLOTS], fp: u32) -> u32 {
+    let m = swar_flat_markers(s, fp);
+    // marker bit 31+32i → lane bit i (spurious-above-first survives the
+    // remap, which the mask contract permits)
+    (((m >> 31) & 1) | ((m >> 62) & 2) | ((m >> 93) & 4) | ((m >> 124) & 8)) as u32
+}
+
+fn swar_flat_pair(a: &[u32; SLOTS], b: &[u32; SLOTS], fp: u32) -> u32 {
+    swar_flat_mask(a, fp) | (swar_flat_mask(b, fp) << SLOTS)
+}
+
+fn swar_flat_gather4(bs: &[&[u32; SLOTS]; 4], fps: &[u32; 4]) -> u32 {
+    // four independent u128 scans; the compiler interleaves them (ILP)
+    let mut m = 0u32;
+    for (j, (b, &fp)) in bs.iter().zip(fps).enumerate() {
+        m |= ((swar_flat_markers(b, fp) != 0) as u32) << j;
+    }
+    m
+}
+
+fn swar_packed_match(bucket: u128, fp: u32, lane_lsb: u128, lane_msb: u128) -> u128 {
+    let x = bucket ^ (lane_lsb * fp as u128);
+    x.wrapping_sub(lane_lsb) & !x & lane_msb
+}
+
+fn swar_packed_pair(b1: u128, b2: u128, fp: u32, lane_lsb: u128, lane_msb: u128) -> (u128, u128) {
+    (
+        swar_packed_match(b1, fp, lane_lsb, lane_msb),
+        swar_packed_match(b2, fp, lane_lsb, lane_msb),
+    )
+}
+
+/// Branch-free u128 SWAR on both layouts (the portable fast kernel;
+/// `PackedTable`'s pre-dispatch default).
+pub static SWAR: ProbeKernel = ProbeKernel {
+    name: "swar",
+    flat_mask_fn: swar_flat_mask,
+    flat_pair_fn: swar_flat_pair,
+    flat_gather4_fn: swar_flat_gather4,
+    packed_match_fn: swar_packed_match,
+    packed_pair_fn: swar_packed_pair,
+};
+
+// ---------------------------------------------------------------------
+// sse2 (x86_64 baseline): one 16-byte load + broadcast + parallel
+// compare + movemask per flat bucket. Packed scans stay u128 SWAR.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::SLOTS;
+    use std::arch::x86_64::*;
+
+    #[inline(always)]
+    pub(super) fn sse2_flat_mask(s: &[u32; SLOTS], fp: u32) -> u32 {
+        // SAFETY: SSE2 is baseline on x86_64; loadu tolerates the
+        // 4-byte alignment of the slot array.
+        unsafe {
+            let v = _mm_loadu_si128(s.as_ptr() as *const __m128i);
+            let q = _mm_set1_epi32(fp as i32);
+            _mm_movemask_ps(_mm_castsi128_ps(_mm_cmpeq_epi32(v, q))) as u32
+        }
+    }
+
+    pub(super) fn sse2_flat_pair(a: &[u32; SLOTS], b: &[u32; SLOTS], fp: u32) -> u32 {
+        sse2_flat_mask(a, fp) | (sse2_flat_mask(b, fp) << SLOTS)
+    }
+
+    pub(super) fn sse2_flat_gather4(bs: &[&[u32; SLOTS]; 4], fps: &[u32; 4]) -> u32 {
+        let mut m = 0u32;
+        for (j, (b, &fp)) in bs.iter().zip(fps).enumerate() {
+            m |= ((sse2_flat_mask(b, fp) != 0) as u32) << j;
+        }
+        m
+    }
+
+    /// Fused pair: both 4-slot buckets in one 256-bit compare
+    /// (`lo` 128 = primary, `hi` 128 = alternate → 8-bit movemask maps
+    /// straight onto the pair-mask contract).
+    #[target_feature(enable = "avx2")]
+    unsafe fn avx2_flat_pair_impl(a: &[u32; SLOTS], b: &[u32; SLOTS], fp: u32) -> u32 {
+        let va = _mm_loadu_si128(a.as_ptr() as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr() as *const __m128i);
+        let v = _mm256_set_m128i(vb, va);
+        let q = _mm256_set1_epi32(fp as i32);
+        _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(v, q))) as u32
+    }
+
+    pub(super) fn avx2_flat_pair(a: &[u32; SLOTS], b: &[u32; SLOTS], fp: u32) -> u32 {
+        // SAFETY: the AVX2 kernel is only selectable after
+        // `is_x86_feature_detected!("avx2")` (see `is_available`).
+        unsafe { avx2_flat_pair_impl(a, b, fp) }
+    }
+
+    /// Gather: 4 buckets (16 lanes) against 4 per-bucket fingerprints
+    /// in two 256-bit compares.
+    #[target_feature(enable = "avx2")]
+    unsafe fn avx2_flat_gather4_impl(bs: &[&[u32; SLOTS]; 4], fps: &[u32; 4]) -> u32 {
+        let b0 = _mm_loadu_si128(bs[0].as_ptr() as *const __m128i);
+        let b1 = _mm_loadu_si128(bs[1].as_ptr() as *const __m128i);
+        let b2 = _mm_loadu_si128(bs[2].as_ptr() as *const __m128i);
+        let b3 = _mm_loadu_si128(bs[3].as_ptr() as *const __m128i);
+        let v01 = _mm256_set_m128i(b1, b0);
+        let v23 = _mm256_set_m128i(b3, b2);
+        let q01 = _mm256_set_m128i(_mm_set1_epi32(fps[1] as i32), _mm_set1_epi32(fps[0] as i32));
+        let q23 = _mm256_set_m128i(_mm_set1_epi32(fps[3] as i32), _mm_set1_epi32(fps[2] as i32));
+        let m01 = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(v01, q01))) as u32;
+        let m23 = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(v23, q23))) as u32;
+        let lanes = m01 | (m23 << 8);
+        ((lanes & 0x000F) != 0) as u32
+            | ((((lanes & 0x00F0) != 0) as u32) << 1)
+            | ((((lanes & 0x0F00) != 0) as u32) << 2)
+            | ((((lanes & 0xF000) != 0) as u32) << 3)
+    }
+
+    pub(super) fn avx2_flat_gather4(bs: &[&[u32; SLOTS]; 4], fps: &[u32; 4]) -> u32 {
+        // SAFETY: installed only after AVX2 runtime detection.
+        unsafe { avx2_flat_gather4_impl(bs, fps) }
+    }
+}
+
+/// SSE2 flat compares + SWAR packed scans — the pre-dispatch PR-2
+/// behaviour, now one selectable kernel.
+#[cfg(target_arch = "x86_64")]
+pub static SSE2: ProbeKernel = ProbeKernel {
+    name: "sse2",
+    flat_mask_fn: x86::sse2_flat_mask,
+    flat_pair_fn: x86::sse2_flat_pair,
+    flat_gather4_fn: x86::sse2_flat_gather4,
+    packed_match_fn: swar_packed_match,
+    packed_pair_fn: swar_packed_pair,
+};
+
+/// AVX2: 256-bit fused pair (two 4-slot buckets per compare) and
+/// two-compare 16-lane gather on the flat side; packed scans keep the
+/// u128 SWAR core (bit-packed lanes don't map to fixed SIMD lanes) and
+/// ride the pair/gather fusion for ILP.
+///
+/// Deliberately NOT `pub`: its safe wrappers execute
+/// `#[target_feature]` code, so a reference may only escape through
+/// the availability-checked lookups ([`by_name`] / [`available`] /
+/// [`active`]) — handing it to safe code on a non-AVX2 host would be
+/// unsound (SIGILL/UB from a safe call).
+#[cfg(target_arch = "x86_64")]
+static AVX2: ProbeKernel = ProbeKernel {
+    name: "avx2",
+    flat_mask_fn: x86::sse2_flat_mask,
+    flat_pair_fn: x86::avx2_flat_pair,
+    flat_gather4_fn: x86::avx2_flat_gather4,
+    packed_match_fn: swar_packed_match,
+    packed_pair_fn: swar_packed_pair,
+};
+
+// ---------------------------------------------------------------------
+// neon (aarch64): vceqq_u32 + narrowing movemask for flat buckets;
+// packed scans stay u128 SWAR.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::SLOTS;
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    unsafe fn neon_flat_mask_impl(s: &[u32; SLOTS], fp: u32) -> u32 {
+        let v = vld1q_u32(s.as_ptr());
+        let q = vdupq_n_u32(fp);
+        let eq = vceqq_u32(v, q); // 0xFFFF_FFFF per matching lane
+        let n = vmovn_u32(eq); // narrow to 0xFFFF per lane
+        let bits = vget_lane_u64::<0>(vreinterpret_u64_u16(n));
+        // bit 0 of each 16-bit half-lane → lane bits 0..4
+        let m = bits & 0x0001_0001_0001_0001;
+        ((m | (m >> 15) | (m >> 30) | (m >> 45)) & 0xF) as u32
+    }
+
+    pub(super) fn neon_flat_mask(s: &[u32; SLOTS], fp: u32) -> u32 {
+        // SAFETY: the NEON kernel is only selectable after
+        // `is_aarch64_feature_detected!("neon")` (see `is_available`).
+        unsafe { neon_flat_mask_impl(s, fp) }
+    }
+
+    pub(super) fn neon_flat_pair(a: &[u32; SLOTS], b: &[u32; SLOTS], fp: u32) -> u32 {
+        neon_flat_mask(a, fp) | (neon_flat_mask(b, fp) << SLOTS)
+    }
+
+    pub(super) fn neon_flat_gather4(bs: &[&[u32; SLOTS]; 4], fps: &[u32; 4]) -> u32 {
+        let mut m = 0u32;
+        for (j, (b, &fp)) in bs.iter().zip(fps).enumerate() {
+            m |= ((neon_flat_mask(b, fp) != 0) as u32) << j;
+        }
+        m
+    }
+}
+
+/// NEON flat compares + SWAR packed scans. Not `pub` for the same
+/// soundness reason as `AVX2`: references escape only through the
+/// availability-checked lookups.
+#[cfg(target_arch = "aarch64")]
+static NEON: ProbeKernel = ProbeKernel {
+    name: "neon",
+    flat_mask_fn: arm::neon_flat_mask,
+    flat_pair_fn: arm::neon_flat_pair,
+    flat_gather4_fn: arm::neon_flat_gather4,
+    packed_match_fn: swar_packed_match,
+    packed_pair_fn: swar_packed_pair,
+};
+
+// ---------------------------------------------------------------------
+// Selection.
+// ---------------------------------------------------------------------
+
+/// Every kernel name the dispatcher understands, across all
+/// architectures (`OCF_SIMD` values; availability is host-dependent).
+pub const NAMES: &[&str] = &["scalar", "swar", "sse2", "avx2", "neon"];
+
+/// The per-arch compiled-kernel table, widest first (the autodetection
+/// preference order).
+#[cfg(target_arch = "x86_64")]
+static COMPILED: [&ProbeKernel; 4] = [&AVX2, &SSE2, &SWAR, &SCALAR];
+#[cfg(target_arch = "aarch64")]
+static COMPILED: [&ProbeKernel; 3] = [&NEON, &SWAR, &SCALAR];
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+static COMPILED: [&ProbeKernel; 2] = [&SWAR, &SCALAR];
+
+/// Kernels compiled into this binary, widest first (the autodetection
+/// preference order). Private: entries are not availability-checked,
+/// and handing out a `#[target_feature]` kernel the host cannot run
+/// would make its safe wrappers unsound — use [`available`]/[`by_name`].
+fn compiled() -> &'static [&'static ProbeKernel] {
+    &COMPILED
+}
+
+/// Kernels executable on this host (runtime feature detection applied),
+/// widest first. P14 and the tuner iterate this.
+pub fn available() -> Vec<&'static ProbeKernel> {
+    compiled().iter().copied().filter(|k| k.is_available()).collect()
+}
+
+/// Look up an *available* kernel by name (`None` for unknown names and
+/// for kernels this host cannot run).
+pub fn by_name(name: &str) -> Option<&'static ProbeKernel> {
+    compiled()
+        .iter()
+        .copied()
+        .find(|k| k.name == name && k.is_available())
+}
+
+/// Widest runtime-detected kernel (never fails: `swar`/`scalar` are
+/// always available).
+pub fn detect_best() -> &'static ProbeKernel {
+    available()[0]
+}
+
+static ACTIVE: OnceLock<&'static ProbeKernel> = OnceLock::new();
+
+/// The process-wide kernel, selected once (see module docs for the
+/// `OCF_SIMD` → `OCF_TUNE` → autodetect resolution order) and cached in
+/// a `OnceLock`. Tables capture this at construction; explicit-kernel
+/// constructors bypass it.
+pub fn active() -> &'static ProbeKernel {
+    *ACTIVE.get_or_init(|| match std::env::var("OCF_SIMD") {
+        Ok(s) if !s.trim().is_empty() => {
+            let want = s.trim().to_ascii_lowercase();
+            match by_name(&want) {
+                Some(k) => k,
+                None => {
+                    // One-time warning (OnceLock init runs once): never
+                    // swallow a bad env value silently.
+                    let have: Vec<&str> = available().iter().map(|k| k.name).collect();
+                    let fallback = fallback_kernel();
+                    eprintln!(
+                        "OCF_SIMD='{s}' unknown or unavailable on this host \
+                         (available: {}); using {}",
+                        have.join("|"),
+                        fallback.name
+                    );
+                    fallback
+                }
+            }
+        }
+        _ => fallback_kernel(),
+    })
+}
+
+/// Non-env selection: the auto-tuner's winner when `OCF_TUNE` is set,
+/// else the widest detected kernel.
+fn fallback_kernel() -> &'static ProbeKernel {
+    if super::tune::requested() {
+        let k = super::tune::auto_tune().kernel;
+        super::tune::mark_applied();
+        k
+    } else {
+        detect_best()
+    }
+}
+
+/// A snapshot of the probe engine's process-wide dispatch choices, for
+/// startup banners and bench/stats JSON.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineInfo {
+    /// Active kernel name.
+    pub kernel: &'static str,
+    /// Effective pipeline depth (see [`super::cuckoo::prefetch_depth`]).
+    pub prefetch_depth: usize,
+    /// Whether the startup auto-tuner's verdict was actually applied
+    /// to at least one knob (false when env overrides decided both,
+    /// even with `OCF_TUNE` set — see [`super::tune::applied`]).
+    pub tuned: bool,
+}
+
+/// Resolve (and, under `OCF_TUNE`, run the startup auto-tuner for) the
+/// engine's dispatch choices. Both knobs are forced here before
+/// `tuned` is read, so the application flag is already settled.
+pub fn engine_info() -> EngineInfo {
+    let kernel = active().name;
+    let prefetch_depth = super::cuckoo::prefetch_depth();
+    EngineInfo {
+        kernel,
+        prefetch_depth,
+        tuned: super::tune::applied(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn buckets_for(rng: &mut SplitMix64, fp_bits: u32, n: usize) -> Vec<[u32; SLOTS]> {
+        let mask = if fp_bits == 32 {
+            u64::from(u32::MAX)
+        } else {
+            (1u64 << fp_bits) - 1
+        };
+        (0..n)
+            .map(|_| {
+                let mut b = [0u32; SLOTS];
+                for s in b.iter_mut() {
+                    // ~1/3 empty lanes so insert-slot paths get coverage
+                    *s = if rng.next_below(3) == 0 {
+                        0
+                    } else {
+                        (rng.next_u64() & mask) as u32
+                    };
+                }
+                b
+            })
+            .collect()
+    }
+
+    /// Pack a flat bucket view into the PackedTable lane layout.
+    fn pack(b: &[u32; SLOTS], fp_bits: u32) -> u128 {
+        b.iter()
+            .enumerate()
+            .fold(0u128, |acc, (i, &v)| acc | ((v as u128) << (i * fp_bits as usize)))
+    }
+
+    /// Every available kernel must agree with the scalar reference on
+    /// presence, first-match lane and insert-slot choice, for every
+    /// primitive, across fingerprint widths — the in-crate twin of
+    /// proptest P14.
+    #[test]
+    fn kernels_match_scalar_reference() {
+        let kernels = available();
+        assert!(!kernels.is_empty());
+        for k in &kernels {
+            assert!(NAMES.contains(&k.name()), "{}", k.name());
+        }
+        for &fp_bits in &[1u32, 4, 7, 8, 12, 13, 16, 21, 24, 29, 32] {
+            let mut rng = SplitMix64::new(0xC0DE + fp_bits as u64);
+            let bs = buckets_for(&mut rng, fp_bits, 64);
+            let mask = if fp_bits == 32 {
+                u64::from(u32::MAX)
+            } else {
+                (1u64 << fp_bits) - 1
+            };
+            let lane_lsb: u128 =
+                (0..SLOTS).fold(0u128, |acc, i| acc | 1u128 << (i * fp_bits as usize));
+            let lane_msb = lane_lsb << (fp_bits - 1);
+            for trial in 0..400 {
+                let a = &bs[rng.next_below(bs.len() as u64) as usize];
+                let b = &bs[rng.next_below(bs.len() as u64) as usize];
+                // half the probes are resident lanes, half random
+                let fp = if trial % 2 == 0 {
+                    a[rng.next_below(SLOTS as u64) as usize]
+                } else {
+                    (rng.next_u64() & mask) as u32
+                };
+                let want_mask = SCALAR.flat_mask(a, fp);
+                let want_slot = SCALAR.flat_insert_slot(a);
+                let want_find = SCALAR.flat_find_slot(a, fp);
+                let (pa, pb) = (pack(a, fp_bits), pack(b, fp_bits));
+                let want_pm = SCALAR.packed_match(pa, fp, lane_lsb, lane_msb);
+                for k in &kernels {
+                    let m = k.flat_mask(a, fp);
+                    assert_eq!(m != 0, want_mask != 0, "{} bits={fp_bits}", k.name());
+                    if m != 0 {
+                        assert_eq!(
+                            m.trailing_zeros(),
+                            want_mask.trailing_zeros(),
+                            "{} first-match bits={fp_bits}",
+                            k.name()
+                        );
+                    }
+                    assert_eq!(k.flat_insert_slot(a), want_slot, "{}", k.name());
+                    assert_eq!(k.flat_find_slot(a, fp), want_find, "{}", k.name());
+                    // fused pair: each nibble behaves like its single
+                    let p = k.flat_pair(a, b, fp);
+                    assert_eq!(p & 0xF != 0, want_mask != 0, "{} pair-a", k.name());
+                    assert_eq!(
+                        (p >> SLOTS) != 0,
+                        SCALAR.flat_mask(b, fp) != 0,
+                        "{} pair-b",
+                        k.name()
+                    );
+                    // gather4: per-bucket presence bits
+                    let idx: Vec<usize> =
+                        (0..4).map(|_| rng.next_below(bs.len() as u64) as usize).collect();
+                    let g = [&bs[idx[0]], &bs[idx[1]], &bs[idx[2]], &bs[idx[3]]];
+                    let fps = [fp, a[0].max(1), b[1].max(1), (rng.next_u64() & mask) as u32];
+                    let got = k.flat_gather4(&g, &fps);
+                    for j in 0..4 {
+                        assert_eq!(
+                            (got >> j) & 1 != 0,
+                            SCALAR.flat_mask(g[j], fps[j]) != 0,
+                            "{} gather lane {j}",
+                            k.name()
+                        );
+                    }
+                    // packed: presence + first-marker lane
+                    let pm = k.packed_match(pa, fp, lane_lsb, lane_msb);
+                    assert_eq!(pm != 0, want_pm != 0, "{} packed bits={fp_bits}", k.name());
+                    if pm != 0 {
+                        assert_eq!(
+                            pm.trailing_zeros() / fp_bits,
+                            want_pm.trailing_zeros() / fp_bits,
+                            "{} packed first lane bits={fp_bits}",
+                            k.name()
+                        );
+                    }
+                    let (q1, q2) = k.packed_pair(pa, pb, fp, lane_lsb, lane_msb);
+                    assert_eq!(q1 != 0, pm != 0, "{} packed pair-1", k.name());
+                    assert_eq!(
+                        q2 != 0,
+                        SCALAR.packed_match(pb, fp, lane_lsb, lane_msb) != 0,
+                        "{} packed pair-2",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn selection_surface() {
+        // compiled list is non-empty, scalar+swar always present and
+        // available, names resolve, unknown names don't
+        let names: Vec<&str> = compiled().iter().map(|k| k.name()).collect();
+        assert!(names.contains(&"scalar"));
+        assert!(names.contains(&"swar"));
+        assert!(by_name("scalar").is_some());
+        assert!(by_name("swar").is_some());
+        assert!(by_name("riscv-vector").is_none());
+        assert!(by_name("").is_none());
+        // detect_best is available and first-in-preference among available
+        let best = detect_best();
+        assert!(best.is_available());
+        assert!(std::ptr::eq(available()[0], best));
+        // active() is one of the available kernels and stable
+        let a = active();
+        assert!(available().iter().any(|k| std::ptr::eq(*k, a)));
+        assert!(std::ptr::eq(active(), a));
+        // if the env forces a valid kernel, active honours it
+        if let Ok(want) = std::env::var("OCF_SIMD") {
+            if let Some(k) = by_name(want.trim()) {
+                assert!(std::ptr::eq(a, k), "OCF_SIMD={want} not honoured");
+            }
+        }
+        let dbg = format!("{a:?}");
+        assert!(dbg.contains(a.name()));
+    }
+
+    #[test]
+    fn engine_info_snapshot() {
+        let ei = engine_info();
+        assert_eq!(ei.kernel, active().name());
+        assert!(ei.prefetch_depth >= 1 && ei.prefetch_depth <= 64);
+    }
+}

@@ -61,10 +61,15 @@
 //! depth [`PREFETCH_DEPTH`]: the primary bucket of key `i + D` is
 //! prefetched while key `i` resolves, and a primary miss prefetches its
 //! alternate bucket and re-queues itself ~D probes later — so ~D cache
-//! misses are always in flight. Bucket scans themselves are one-load
-//! whole-bucket compares (SSE2 on [`FlatTable`], SWAR broadcast-compare
-//! on [`PackedTable`]; see `bucket.rs`). Batched results are
-//! bit-identical to scalar loops — pinned by proptest P11. Details and
+//! misses are always in flight. Bucket scans themselves route through
+//! the runtime-dispatched [`ProbeKernel`] vtable (`kernel.rs`): one
+//! whole-bucket compare per scan, with `scalar`/`swar`/`sse2`/`avx2`/
+//! `neon` variants selected once per process (autodetected, `OCF_SIMD`
+//! override, or the `OCF_TUNE` startup auto-tuner — `tune.rs`), plus a
+//! fused primary+alternate pair compare for scalar lookups and a
+//! 4-bucket gather inside the batch walk. Batched results are
+//! bit-identical to scalar loops — pinned by proptest P11 — and every
+//! kernel is observationally identical — pinned by P14. Details and
 //! tuning notes: `rust/src/filter/README.md`.
 //!
 //! ## State-consistency invariants
@@ -109,6 +114,7 @@ pub mod concurrent;
 pub mod cuckoo;
 pub mod eof;
 pub mod fingerprint;
+pub mod kernel;
 pub mod keystore;
 pub mod metrics;
 pub mod ocf;
@@ -118,6 +124,7 @@ pub mod resize;
 pub mod scalable_bloom;
 pub mod session;
 pub mod sharded;
+pub mod tune;
 pub mod xor;
 
 pub use bloom::{BloomFilter, CountingBloomFilter};
@@ -127,6 +134,7 @@ pub use concurrent::{ConcurrentFilter, MutexFilter};
 pub use cuckoo::{prefetch_depth, CuckooFilter, CuckooParams, VictimPolicy, PREFETCH_DEPTH};
 pub use eof::EofPolicy;
 pub use fingerprint::{mix32, mix64, Hasher, HashTriple};
+pub use kernel::{EngineInfo, ProbeKernel};
 pub use keystore::KeyStore;
 pub use metrics::FilterStats;
 pub use ocf::{Mode, Ocf, OcfConfig};
@@ -135,6 +143,7 @@ pub use pre::PrePolicy;
 pub use scalable_bloom::ScalableBloomFilter;
 pub use session::{ProbeSession, ShardScratch};
 pub use sharded::{ShardedOcf, ShardedOcfConfig};
+pub use tune::{TuneOutcome, TunePoint};
 pub use xor::XorFilter;
 
 /// Errors from filter mutation.

@@ -231,6 +231,13 @@ impl Ocf {
         self.filter.nbuckets()
     }
 
+    /// The probe kernel the inner table scans with (the process-wide
+    /// dispatch choice — see [`super::kernel::active`]; rebuilds
+    /// re-resolve it, which is a no-op once the `OnceLock` is seeded).
+    pub fn kernel(&self) -> &'static super::kernel::ProbeKernel {
+        self.filter.kernel()
+    }
+
     /// Insert with a pre-computed hash triple (from the XLA batch
     /// executor) — skips the native hash. The triple MUST be
     /// `self.hasher().hash_key(key)`; debug builds assert it.

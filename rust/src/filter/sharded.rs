@@ -98,6 +98,13 @@ impl ShardedOcf {
         self.hasher
     }
 
+    /// The probe kernel every shard's table scans with (shards are
+    /// built from one template in one process, so the dispatch choice
+    /// is uniform; see [`super::kernel::active`]).
+    pub fn kernel(&self) -> &'static super::kernel::ProbeKernel {
+        self.shards[0].lock().unwrap().kernel()
+    }
+
     /// Shard index for a pre-hashed triple: high bits of a finalizer
     /// over the triple (NOT raw `idx_hash` bits, which the in-shard
     /// bucket mappings consume — see module docs).

@@ -1,0 +1,285 @@
+//! Startup auto-tuner for the probe engine's dispatch choices.
+//!
+//! The two knobs the engine exposes — the [`ProbeKernel`] variant and
+//! the prefetch pipeline depth — have host-dependent optima: how many
+//! cache misses a core keeps in flight, how wide its vector units are,
+//! and where the L2/L3 cliffs sit all vary across machines. Instead of
+//! freezing one guess per binary, [`microbench`] measures the full
+//! {available kernel × depth ∈ {1,2,4,…,64}} grid against a synthetic
+//! flat table (negative lookups — the prefetch-sensitive workload the
+//! read path short-circuits on) and picks the fastest cell.
+//!
+//! Wiring:
+//!
+//! * **`OCF_TUNE=1`** — the tuner runs once at first engine entry:
+//!   [`super::cuckoo::prefetch_depth`] and [`super::kernel::active`]
+//!   both consult [`auto_tune`] when their own env overrides
+//!   (`OCF_PREFETCH_DEPTH` / `OCF_SIMD`) are unset, so the winner lands
+//!   in the exact same `OnceLock` paths a manual override would.
+//! * **`ocf tune`** — runs [`microbench`] explicitly, prints the grid
+//!   and the `OCF_SIMD=… OCF_PREFETCH_DEPTH=…` exports to pin the
+//!   winner without re-tuning every start.
+//! * `probe_throughput` embeds the grid in `BENCH_probe.json` (the
+//!   `tuner` section) so trajectory points record what was chosen.
+//!
+//! The microbench drives the *real* engine
+//! ([`CuckooFilter::contains_triples_into_depth`] on tables built with
+//! an explicit kernel via
+//! [`BucketTable::with_buckets_kernel`](super::bucket::BucketTable::with_buckets_kernel)),
+//! not a simplified model — and because kernel and depth are passed
+//! explicitly, tuning never reads the globals it is about to seed (no
+//! `OnceLock` re-entrancy).
+
+use super::bucket::FlatTable;
+use super::cuckoo::{CuckooFilter, CuckooParams};
+use super::fingerprint::HashTriple;
+use super::kernel::{self, ProbeKernel};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Depths the tuner sweeps (powers of two inside the validated
+/// `1..=64` band `OCF_PREFETCH_DEPTH` accepts).
+pub const DEPTH_GRID: &[usize] = &[1, 2, 4, 8, 16, 32, 64];
+
+/// Default synthetic-table population: 2^18 resident keys → a ~2 MiB
+/// flat table, comfortably past L2 on current cores so prefetch depth
+/// actually matters.
+pub const DEFAULT_KEYS: usize = 1 << 18;
+
+/// Default probes per grid cell (small enough that the whole grid stays
+/// in the tens of milliseconds at startup).
+pub const DEFAULT_PROBES: usize = 1 << 15;
+
+/// One measured grid cell.
+#[derive(Debug, Clone)]
+pub struct TunePoint {
+    /// Kernel variant measured.
+    pub kernel: &'static str,
+    /// Pipeline depth measured.
+    pub depth: usize,
+    /// Million probes per second.
+    pub mops: f64,
+}
+
+/// The tuner's verdict plus the full grid it was derived from.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// Winning kernel.
+    pub kernel: &'static ProbeKernel,
+    /// Winning prefetch depth.
+    pub depth: usize,
+    /// Every measured cell, in sweep order.
+    pub points: Vec<TunePoint>,
+    /// Synthetic-table population used.
+    pub n_keys: usize,
+    /// Probes per cell.
+    pub n_probes: usize,
+    /// Wallclock of the whole sweep, milliseconds.
+    pub elapsed_ms: f64,
+}
+
+impl TuneOutcome {
+    /// The winning cell's throughput.
+    pub fn best_mops(&self) -> f64 {
+        self.points
+            .iter()
+            .filter(|p| p.kernel == self.kernel.name() && p.depth == self.depth)
+            .map(|p| p.mops)
+            .next_back()
+            .unwrap_or(0.0)
+    }
+}
+
+/// Is startup auto-tuning requested? (`OCF_TUNE` set to anything but
+/// empty/`0`.)
+pub fn requested() -> bool {
+    matches!(std::env::var("OCF_TUNE"), Ok(v) if !v.trim().is_empty() && v.trim() != "0")
+}
+
+static APPLIED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Record that a dispatch `OnceLock` actually consumed the tuner's
+/// verdict (called by `prefetch_depth()` / `kernel::active()` when the
+/// tuned value — not an env override — wins).
+pub(crate) fn mark_applied() {
+    APPLIED.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Did the startup auto-tuner's verdict actually drive at least one of
+/// the process-wide dispatch choices? False when `OCF_TUNE` is unset
+/// *and* when explicit `OCF_SIMD`/`OCF_PREFETCH_DEPTH` overrides
+/// decided both knobs (requesting a tune is not the same as applying
+/// one — the banner/bench metadata must not claim otherwise).
+pub fn applied() -> bool {
+    APPLIED.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// The cached startup tune (runs [`microbench`] at most once per
+/// process, at default sizes). `prefetch_depth()` / `kernel::active()`
+/// call this only when `OCF_TUNE` is set and their env override isn't.
+pub fn auto_tune() -> &'static TuneOutcome {
+    static TUNED: OnceLock<TuneOutcome> = OnceLock::new();
+    TUNED.get_or_init(|| {
+        let out = microbench(DEFAULT_KEYS, DEFAULT_PROBES);
+        eprintln!(
+            "ocf tune: kernel={} prefetch_depth={} ({:.1} Mops/s; {} cells in {:.1} ms)",
+            out.kernel.name(),
+            out.depth,
+            out.best_mops(),
+            out.points.len(),
+            out.elapsed_ms
+        );
+        out
+    })
+}
+
+/// Sweep {available kernel × [`DEPTH_GRID`]} on a synthetic flat table
+/// of `n_keys` resident keys at the paper-recommended 0.5 load,
+/// probing `n_probes` absent keys per cell, and return the fastest
+/// cell (ties break toward the earlier kernel in detection-preference
+/// order, then the shallower depth — stability over noise).
+///
+/// `n_probes` is floored to 4× the deepest grid depth: a batch with
+/// `n <= depth` takes the engine's scalar short-run fallback, so a
+/// smaller probe count would "measure" deep cells without ever running
+/// the pipeline at that depth — and could pin an unmeasured winner.
+pub fn microbench(n_keys: usize, n_probes: usize) -> TuneOutcome {
+    let n_probes = n_probes.max(4 * DEPTH_GRID[DEPTH_GRID.len() - 1]);
+    let t_all = Instant::now();
+    let kernels = kernel::available();
+    let params = CuckooParams {
+        capacity: (n_keys * 2).max(super::bucket::SLOTS),
+        ..CuckooParams::default()
+    };
+    let hasher = super::fingerprint::Hasher::new(params.seed, params.fp_bits);
+    // One shared probe set: absent keys (disjoint range), pre-hashed so
+    // cells time the probe pipeline, not the hash.
+    let triples: Vec<HashTriple> = (0..n_probes as u64)
+        .map(|i| hasher.hash_key((1u64 << 40) + i))
+        .collect();
+
+    let mut points = Vec::with_capacity(kernels.len() * DEPTH_GRID.len());
+    let mut best: Option<(&'static ProbeKernel, usize, f64)> = None;
+    let mut out = Vec::with_capacity(n_probes);
+    for k in kernels {
+        // One filter per kernel, reused across depths (the table's
+        // contents are identical by construction: same hasher, same
+        // insertion order, kernels agree on slot choices — P14).
+        let mut f = CuckooFilter::<FlatTable>::with_kernel(params, k);
+        for key in 0..n_keys as u64 {
+            // scalar inserts: insert_triple never consults the global
+            // depth/kernel the tuner may be seeding
+            let _ = f.insert_triple(hasher.hash_key(key));
+        }
+        for &depth in DEPTH_GRID {
+            // untimed warmup pass, then the timed pass
+            out.clear();
+            f.contains_triples_into_depth(&triples, &mut out, depth);
+            out.clear();
+            let t0 = Instant::now();
+            f.contains_triples_into_depth(&triples, &mut out, depth);
+            let secs = t0.elapsed().as_secs_f64();
+            let mops = if secs > 0.0 {
+                n_probes as f64 / secs / 1e6
+            } else {
+                0.0
+            };
+            debug_assert!(out.iter().filter(|&&h| h).count() <= n_probes);
+            points.push(TunePoint {
+                kernel: k.name(),
+                depth,
+                mops,
+            });
+            if best.map(|(_, _, b)| mops > b).unwrap_or(true) {
+                best = Some((k, depth, mops));
+            }
+        }
+    }
+    let (kernel, depth, _) = best.expect("at least one kernel is always available");
+    TuneOutcome {
+        kernel,
+        depth,
+        points,
+        n_keys,
+        n_probes,
+        elapsed_ms: t_all.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+/// Render an outcome as a markdown grid (the `ocf tune` report).
+pub fn render(out: &TuneOutcome) -> String {
+    use crate::exp::report::{f, Table};
+    let mut table = Table::new(
+        format!(
+            "ocf tune — kernel × prefetch-depth grid ({} keys, {} probes/cell)",
+            out.n_keys, out.n_probes
+        ),
+        &["kernel", "depth", "Mops/s", "winner"],
+    );
+    for p in &out.points {
+        let star = if p.kernel == out.kernel.name() && p.depth == out.depth {
+            "◀".to_string()
+        } else {
+            String::new()
+        };
+        table.row(&[p.kernel.to_string(), p.depth.to_string(), f(p.mops, 2), star]);
+    }
+    table.note(format!(
+        "winner: kernel={} depth={} ({:.1} ms sweep). Pin it with: \
+         OCF_SIMD={} OCF_PREFETCH_DEPTH={} — or export OCF_TUNE=1 to re-tune at every start.",
+        out.kernel.name(),
+        out.depth,
+        out.elapsed_ms,
+        out.kernel.name(),
+        out.depth
+    ));
+    table.markdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microbench_covers_grid_and_picks_a_cell() {
+        // tiny sizes: correctness of the sweep, not the numbers
+        let out = microbench(2_000, 2_000);
+        let kernels = kernel::available();
+        assert_eq!(out.points.len(), kernels.len() * DEPTH_GRID.len());
+        for k in &kernels {
+            for &d in DEPTH_GRID {
+                assert!(
+                    out.points.iter().any(|p| p.kernel == k.name() && p.depth == d),
+                    "missing cell {}×{d}",
+                    k.name()
+                );
+            }
+        }
+        assert!(DEPTH_GRID.contains(&out.depth));
+        assert!(kernels.iter().any(|k| std::ptr::eq(*k, out.kernel)));
+        assert!(out.best_mops() > 0.0);
+        // the winner really is the grid max
+        let max = out.points.iter().map(|p| p.mops).fold(0.0f64, f64::max);
+        assert!((out.best_mops() - max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_names_winner_and_exports() {
+        let out = microbench(1_000, 1_000);
+        let md = render(&out);
+        assert!(md.contains("ocf tune"));
+        assert!(md.contains("OCF_SIMD="));
+        assert!(md.contains("OCF_PREFETCH_DEPTH="));
+        assert!(md.contains(out.kernel.name()));
+    }
+
+    #[test]
+    fn requested_reads_env_shape() {
+        // can't set the process env safely in parallel tests; just pin
+        // the unset behaviour (CI never sets OCF_TUNE for unit tests)
+        if std::env::var("OCF_TUNE").is_err() {
+            assert!(!requested());
+            assert!(!applied(), "verdict applied without OCF_TUNE");
+        }
+    }
+}

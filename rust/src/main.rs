@@ -2,7 +2,7 @@
 //! line-protocol membership server.
 //!
 //! ```text
-//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|pool|all>
+//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|pool|kernel|all>
 //!         [--scale F]           # workload scale, 1.0 = paper scale
 //! ocf pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]
 //!              [--shards N]     # >1 = sharded concurrent filter front-end
@@ -12,6 +12,9 @@
 //! ocf serve [--config FILE] [--set section.key=value ...]
 //!           # filter backend from [filter] backend = "..." / --set filter.backend=...
 //!           # pooled ingest shape from [pipeline] workers/queue_depth/chunk_size
+//! ocf tune [--keys N] [--probes N]
+//!           # probe-engine microbench: kernel × prefetch-depth grid + the
+//!           # OCF_SIMD / OCF_PREFETCH_DEPTH exports to pin the winner
 //! ocf info [--artifacts DIR]
 //! ```
 //!
@@ -34,6 +37,7 @@ fn main() {
         Some("exp") => cmd_exp(&args[1..]),
         Some("pipeline") => cmd_pipeline(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("tune") => cmd_tune(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("help") | None => {
             print_help();
@@ -56,6 +60,7 @@ fn print_help() {
          pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads] [--shards N] [--backend NAME]\n           \
          [--workers N] [--queue-depth N] [--chunk N]   worker-pool ingest (0 = auto workers)\n  \
          serve [--config FILE] [--set section.key=value]\n  \
+         tune [--keys N] [--probes N]   probe-kernel × prefetch-depth microbench\n  \
          info [--artifacts DIR]\n  \
          help"
     );
@@ -393,6 +398,45 @@ fn cmd_pipeline_pooled(
     }
 }
 
+/// Explicit probe-engine tuning: run the kernel × prefetch-depth
+/// microbench grid ([`ocf::filter::tune::microbench`]) and print the
+/// winner plus the env exports that pin it (`OCF_TUNE=1` runs the same
+/// sweep implicitly at first engine entry).
+fn cmd_tune(args: &[String]) -> i32 {
+    let keys: usize = flag_value(args, "--keys")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(ocf::filter::tune::DEFAULT_KEYS);
+    let probes: usize = flag_value(args, "--probes")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(ocf::filter::tune::DEFAULT_PROBES);
+    if keys == 0 || probes == 0 {
+        eprintln!("tune: --keys and --probes must be positive");
+        return 2;
+    }
+    let floor = 4 * ocf::filter::tune::DEPTH_GRID[ocf::filter::tune::DEPTH_GRID.len() - 1];
+    let probes = if probes < floor {
+        eprintln!(
+            "tune: --probes {probes} raised to {floor} (deep grid cells need \
+             batches longer than the pipeline depth to measure anything)"
+        );
+        floor
+    } else {
+        probes
+    };
+    let available: Vec<&str> = ocf::filter::kernel::available()
+        .iter()
+        .map(|k| k.name())
+        .collect();
+    eprintln!(
+        "ocf tune: sweeping {{{}}} × depths {:?} ({keys} keys, {probes} probes/cell)",
+        available.join("|"),
+        ocf::filter::tune::DEPTH_GRID
+    );
+    let outcome = ocf::filter::tune::microbench(keys, probes);
+    println!("{}", ocf::filter::tune::render(&outcome));
+    0
+}
+
 fn cmd_serve(args: &[String]) -> i32 {
     let cfg_text = flag_value(args, "--config")
         .map(|p| std::fs::read_to_string(&p).unwrap_or_else(|e| {
@@ -424,6 +468,17 @@ fn cmd_serve(args: &[String]) -> i32 {
          line-protocol loop applies ops one at a time)",
         cfg.batch_size,
         cfg.pool().describe()
+    );
+    // Probe-engine dispatch: resolved once here (this is the "first
+    // engine entry" an OCF_TUNE startup auto-tune hangs off).
+    let engine = ocf::filter::kernel::engine_info();
+    eprintln!(
+        "ocf serve: probe engine kernel={} prefetch_depth={}{} \
+         (override: OCF_SIMD=scalar|swar|sse2|avx2|neon, OCF_PREFETCH_DEPTH=1..64, \
+         OCF_TUNE=1 auto-tunes both; see `ocf tune`)",
+        engine.kernel,
+        engine.prefetch_depth,
+        if engine.tuned { " [auto-tuned]" } else { "" }
     );
     // Any backend by name, through the trait object (`[filter]
     // backend = "..."` / `--set filter.backend=...`).

@@ -26,8 +26,9 @@
 //!   [`ShardedOcf`] implements it natively: one task per non-empty
 //!   shard group, pinned to worker `shard % workers` (shard data stays
 //!   warm in one worker's cache), each task applying its whole group
-//!   through the prefetch-pipelined engine under a single lock
-//!   acquisition ([`apply_shard_group`]). Every other backend (e.g. a
+//!   through the prefetch-pipelined engine — bucket scans dispatched
+//!   via the runtime-selected SIMD kernel (`filter::kernel`) — under a
+//!   single lock acquisition ([`apply_shard_group`]). Every other backend (e.g. a
 //!   [`MutexFilter`]-wrapped builder filter) gets the default
 //!   *chunk-parallel* dispatch: same-kind runs split into `chunk`-sized
 //!   tasks applied through the `&self` batched trait surface, with a

@@ -287,9 +287,13 @@ impl StorageNode {
     /// Batched membership reads: one bulk hash + the prefetch-pipelined
     /// filter probe short-circuit definitely-absent keys (the node's
     /// negative-lookup fast path), then only survivors walk the
-    /// memtable/SSTable read path. Positionally aligned with `keys`;
-    /// answer-identical to calling [`StorageNode::get`] per key — for
-    /// every backend, including default-batch baselines (proptest P12).
+    /// memtable/SSTable read path. Bucket scans inside the probe ride
+    /// the runtime-dispatched SIMD kernel vtable
+    /// (`filter::kernel` — autodetected / `OCF_SIMD` / auto-tuned), so
+    /// the node shares one dispatch story with every other engine
+    /// consumer. Positionally aligned with `keys`; answer-identical to
+    /// calling [`StorageNode::get`] per key — for every backend,
+    /// including default-batch baselines (proptest P12).
     pub fn get_batch(&self, keys: &[u64]) -> Vec<bool> {
         self.stats.gets.fetch_add(keys.len() as u64, Relaxed);
         let pass = self.filter.contains_batch(keys);

@@ -32,6 +32,13 @@
 //!      over a `MutexFilter`-wrapped OCF matches the scalar `run`'s op
 //!      counts, hits (static sizing: layout is interleaving-proof) and
 //!      exact end-state.
+//!  P14 every available `ProbeKernel` (scalar, SWAR, SSE2, AVX2/NEON
+//!      where detected) is observationally identical: kernel-level
+//!      primitives agree with the scalar reference on presence,
+//!      first-match lane and insert-slot choice on raw buckets of both
+//!      tables across fp widths 4..=32 and non-pow2 sizes, and whole
+//!      filters built per kernel stay bit-identical (`to_frozen`)
+//!      through arbitrary insert/contains/delete batches.
 
 use ocf::cluster::{Cluster, ReplicationConfig};
 use ocf::filter::{
@@ -800,6 +807,165 @@ fn p11_ocf_batch_apis_match_scalar() {
             let got = a.contains_batch(probes);
             probes.iter().zip(&got).all(|(&k, &g2)| g2 == b.contains(k))
         },
+    );
+}
+
+/// A P14 case: a table geometry plus op/probe sets for the per-kernel
+/// differential (fp widths 4..=32, non-pow2 bucket counts).
+#[derive(Debug, Clone)]
+struct KernelCase {
+    capacity: usize,
+    fp_bits: u32,
+    keys: Vec<u64>,
+    probes: Vec<u64>,
+    deletes: Vec<u64>,
+}
+
+fn gen_kernel_case(g: &mut Gen) -> KernelCase {
+    let capacity = *g.choose(&[192usize, 500, 1000, 1024, 3000, 4100]);
+    let fp_bits = g.usize_in(4, 32) as u32;
+    let nkeys = g.usize_in(1, capacity);
+    KernelCase {
+        capacity,
+        fp_bits,
+        keys: g.vec(nkeys, |g| g.u64_below(1 << 20)),
+        probes: g.vec(g.usize_in(1, 1500), |g| g.u64_below(1 << 21)),
+        deletes: g.vec(g.usize_in(1, 500), |g| g.u64_below(1 << 20)),
+    }
+}
+
+/// Filter-level half of P14: for each available kernel, a filter built
+/// with it must stay bit-identical to the scalar-kernel twin through
+/// the whole batched op surface (same accept/reject pattern, same
+/// eviction walks — i.e. identical insert-slot choices — same answers).
+fn p14_filter_check<T: BucketTable>(case: &KernelCase) -> bool {
+    use ocf::filter::kernel;
+    let params = CuckooParams {
+        capacity: case.capacity,
+        fp_bits: case.fp_bits,
+        victim_policy: VictimPolicy::Rollback,
+        ..CuckooParams::default()
+    };
+    let mut reference = CuckooFilter::<T>::with_kernel(params, &kernel::SCALAR);
+    let r_ins = reference.insert_batch(&case.keys);
+    let r_con = reference.contains_batch(&case.probes);
+    let r_del = reference.delete_batch(&case.deletes);
+    let r_frozen = reference.to_frozen();
+    for k in kernel::available() {
+        let mut f = CuckooFilter::<T>::with_kernel(params, k);
+        let ins = f.insert_batch(&case.keys);
+        if ins.len() != r_ins.len()
+            || ins.iter().zip(&r_ins).any(|(a, b)| a.is_ok() != b.is_ok())
+        {
+            return false;
+        }
+        if f.contains_batch(&case.probes) != r_con {
+            return false;
+        }
+        if f.delete_batch(&case.deletes) != r_del {
+            return false;
+        }
+        if f.to_frozen() != r_frozen || f.len() != reference.len() {
+            return false;
+        }
+    }
+    true
+}
+
+/// Primitive-level half of P14: every kernel's raw bucket scans agree
+/// with the scalar reference on presence, first-match lane and
+/// insert-slot choice, against live bucket contents of both tables.
+fn p14_primitive_check(case: &KernelCase) -> bool {
+    use ocf::filter::kernel::{self, SCALAR};
+    use ocf::filter::SLOTS;
+    let params = CuckooParams {
+        capacity: case.capacity,
+        fp_bits: case.fp_bits,
+        victim_policy: VictimPolicy::Rollback,
+        ..CuckooParams::default()
+    };
+    // Populate one flat + one packed table with the same keys (the
+    // filters insert identically across table backends by P11).
+    let mut flat = CuckooFilter::<FlatTable>::with_kernel(params, &SCALAR);
+    let mut packed = CuckooFilter::<PackedTable>::with_kernel(params, &SCALAR);
+    for &k in &case.keys {
+        let _ = flat.insert(k);
+        let _ = packed.insert(k);
+    }
+    let ft = flat.table();
+    let pt = packed.table();
+    let (lane_lsb, lane_msb) = pt.swar_consts();
+    let hasher = flat.hasher();
+    let nb = flat.nbuckets();
+    for &p in &case.probes {
+        let t = hasher.hash_key(p);
+        let b1 = ocf::filter::Hasher::primary_index(t, nb);
+        let b2 = ocf::filter::Hasher::alt_index(b1, t.fp, nb);
+        let lanes1 = ft.bucket_lanes(b1);
+        let lanes2 = ft.bucket_lanes(b2);
+        let bits1 = pt.bucket_bits(b1);
+        let want = SCALAR.flat_mask(&lanes1, t.fp);
+        let want_slot = SCALAR.flat_insert_slot(&lanes1);
+        let want_find = if want != 0 {
+            Some(want.trailing_zeros() as usize)
+        } else {
+            None
+        };
+        let want_pm = SCALAR.packed_match(bits1, t.fp, lane_lsb, lane_msb);
+        for k in kernel::available() {
+            let m = k.flat_mask(&lanes1, t.fp);
+            if (m != 0) != (want != 0) {
+                return false;
+            }
+            if m != 0 && m.trailing_zeros() != want.trailing_zeros() {
+                return false;
+            }
+            if k.flat_insert_slot(&lanes1) != want_slot {
+                return false;
+            }
+            if k.flat_find_slot(&lanes1, t.fp) != want_find {
+                return false;
+            }
+            let pair = k.flat_pair(&lanes1, &lanes2, t.fp);
+            if ((pair & ((1 << SLOTS) - 1)) != 0) != (want != 0)
+                || ((pair >> SLOTS) != 0) != (SCALAR.flat_mask(&lanes2, t.fp) != 0)
+            {
+                return false;
+            }
+            let pm = k.packed_match(bits1, t.fp, lane_lsb, lane_msb);
+            if (pm != 0) != (want_pm != 0) {
+                return false;
+            }
+            if pm != 0
+                && pm.trailing_zeros() / case.fp_bits
+                    != want_pm.trailing_zeros() / case.fp_bits
+            {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[test]
+fn p14_kernels_observationally_identical() {
+    prop_check(
+        "kernel-differential-flat",
+        25,
+        gen_kernel_case,
+        p14_filter_check::<FlatTable>,
+    );
+    prop_check(
+        "kernel-differential-packed",
+        25,
+        gen_kernel_case,
+        p14_filter_check::<PackedTable>,
+    );
+    prop_check(
+        "kernel-primitive-differential",
+        25,
+        gen_kernel_case,
+        p14_primitive_check,
     );
 }
 

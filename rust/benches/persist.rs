@@ -1,0 +1,205 @@
+//! persist — the persistent-tier perf baseline.
+//!
+//! Runs the E13 arms (restart recover-vs-rebuild, heap-vs-mmap batched
+//! probe throughput on the same frozen generation) and emits a
+//! `BENCH_persist.json` trajectory point so future PRs can diff
+//! restart cost and mmap-serving parity against this one. See
+//! `rust/src/store/README.md` for how to read it.
+//!
+//! Env knobs:
+//!   `OCF_BENCH_SCALE` — fraction of paper scale (default 1.0 = 1M
+//!                       resident keys, 1M probes per arm);
+//!   `OCF_BENCH_SMOKE` — any value: tiny N (fast CI gate that mainly
+//!                       asserts the JSON artifact is emitted + valid);
+//!   `OCF_BENCH_JSON`  — output path (default: the committed
+//!                       `BENCH_persist.json` at the repo root).
+
+use ocf::exp::persist::{measure, render, PersistOutcome, BATCH};
+use ocf::filter::kernel::engine_info;
+
+fn json_restarts(o: &PersistOutcome) -> String {
+    let rows: Vec<String> = o
+        .restarts
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"arm\": \"{}\", \"secs\": {:.6}, \"sstables\": {}, \
+                 \"filters_recovered\": {}, \"filters_rebuilt\": {}, \
+                 \"filter_recovery_rejected\": {}}}",
+                r.arm,
+                r.secs,
+                r.sstables,
+                r.filters_recovered,
+                r.filters_rebuilt,
+                r.filter_recovery_rejected
+            )
+        })
+        .collect();
+    rows.join(",\n")
+}
+
+fn json_probe_arms(o: &PersistOutcome) -> String {
+    let rows: Vec<String> = o
+        .probe_arms
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"backing\": \"{}\", \"workload\": \"{}\", \"probes\": {}, \
+                 \"secs\": {:.6}, \"mops\": {:.3}, \"hits\": {}}}",
+                p.backing,
+                p.workload,
+                p.probes,
+                p.secs,
+                p.mops(),
+                p.hits
+            )
+        })
+        .collect();
+    rows.join(",\n")
+}
+
+fn ratio(o: &PersistOutcome, backing: &str, workload: &str) -> f64 {
+    let heap = o
+        .probe_arms
+        .iter()
+        .find(|p| p.backing == "heap" && p.workload == workload)
+        .map(|p| p.mops())
+        .unwrap_or(0.0);
+    let arm = o
+        .probe_arms
+        .iter()
+        .find(|p| p.backing == backing && p.workload == workload)
+        .map(|p| p.mops())
+        .unwrap_or(0.0);
+    if heap > 0.0 {
+        arm / heap
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("OCF_BENCH_SMOKE").is_ok();
+    let scale: f64 = std::env::var("OCF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let (n_keys, n_probes) = if smoke {
+        (20_000, 20_000)
+    } else {
+        (
+            ((1_000_000f64 * scale) as usize).max(20_000),
+            ((1_000_000f64 * scale) as usize).max(20_000),
+        )
+    };
+    // Default to the committed repo-root artifact regardless of CWD
+    // (cargo runs bench binaries from the package root, not the repo
+    // root — a bare relative path would strand the output in rust/).
+    let path = std::env::var("OCF_BENCH_JSON")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_persist.json").into());
+
+    let info = engine_info();
+    eprintln!(
+        "persist: {n_keys} resident keys, {n_probes} probes/arm \
+         (smoke={smoke}, kernel={})",
+        info.kernel
+    );
+    let outcome = measure(n_keys, n_probes);
+
+    println!(
+        "{}",
+        render(
+            format!("persist — restart + probe backing (kernel {}, {n_keys} keys)", info.kernel),
+            &outcome,
+        )
+    );
+
+    // The acceptance bars this bench exists to track: (1) recover
+    // restarts materially faster than rebuild at full scale; (2) mmap
+    // probe throughput is at parity with heap (the mapping is free).
+    let recover = outcome.restarts.iter().find(|r| r.arm == "recover");
+    let rebuild = outcome.restarts.iter().find(|r| r.arm == "rebuild");
+    let restart_speedup = match (recover, rebuild) {
+        (Some(a), Some(b)) if a.secs > 0.0 => b.secs / a.secs,
+        _ => 0.0,
+    };
+    if restart_speedup <= 1.0 {
+        let msg = format!(
+            "recover at {restart_speedup:.2}x rebuild — persistence not paying off"
+        );
+        if smoke {
+            eprintln!("WARN (smoke, tiny tables): {msg}");
+        } else {
+            eprintln!("WARN: {msg}");
+        }
+    }
+    let mmap_present = outcome.probe_arms.iter().any(|p| p.backing == "mmap");
+    for workload in ["neg", "pos"] {
+        if !mmap_present {
+            break;
+        }
+        let r = ratio(&outcome, "mmap", workload);
+        if r < 0.9 {
+            eprintln!(
+                "WARN: mmap/{workload} at {r:.2}x of heap — mapped serving is not free here"
+            );
+        }
+    }
+
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    // `measured: true` distinguishes real runs from the committed
+    // schema seed (`measured: false`); keep both files field-compatible.
+    let json = format!(
+        "{{\n  \"bench\": \"persist\",\n  \"unix_time\": {unix_time},\n  \
+         \"smoke\": {smoke},\n  \"measured\": true,\n  \"phase\": \"post-persistent-tier\",\n  \
+         \"note\": \"regenerate with: cargo bench --bench persist (full scale)\",\n  \
+         \"n_keys\": {n_keys},\n  \"n_probes\": {n_probes},\n  \
+         \"batch\": {BATCH},\n  \"kernel\": \"{}\",\n  \"mmap_available\": {mmap_present},\n  \
+         \"restarts\": [\n{}\n  ],\n  \"probe_arms\": [\n{}\n  ],\n  \
+         \"restart_speedup\": {restart_speedup:.3},\n  \
+         \"mmap_vs_heap\": {{\"neg\": {:.3}, \"pos\": {:.3}}}\n}}\n",
+        info.kernel,
+        json_restarts(&outcome),
+        json_probe_arms(&outcome),
+        ratio(&outcome, "mmap", "neg"),
+        ratio(&outcome, "mmap", "pos"),
+    );
+    std::fs::write(&path, &json).expect("write BENCH_persist.json");
+
+    // Emission self-check: the artifact must exist, round-trip, and
+    // carry every field the trajectory tooling keys on.
+    let back = std::fs::read_to_string(&path).expect("read back BENCH_persist.json");
+    assert_eq!(back, json, "artifact round-trip");
+    for field in [
+        "\"bench\": \"persist\"",
+        "\"measured\": true",
+        "\"restarts\"",
+        "\"probe_arms\"",
+        "\"restart_speedup\"",
+        "\"mmap_vs_heap\"",
+        "\"filters_recovered\"",
+        "\"filters_rebuilt\"",
+        "\"filter_recovery_rejected\"",
+        "\"arm\": \"recover\"",
+        "\"arm\": \"rebuild\"",
+        "\"backing\": \"heap\"",
+    ] {
+        assert!(back.contains(field), "BENCH_persist.json missing {field}");
+    }
+    assert_eq!(
+        back.matches("\"backing\": \"heap\"").count(),
+        2,
+        "expected 2 heap probe arms"
+    );
+    if mmap_present {
+        assert_eq!(
+            back.matches("\"backing\": \"mmap\"").count(),
+            2,
+            "expected 2 mmap probe arms"
+        );
+    }
+    eprintln!("persist: wrote {path}");
+}

@@ -140,6 +140,14 @@ impl OcfFileConfig {
         if let Some(v) = tree.get_int("store", "max_sstables")? {
             cfg.node.compaction.max_tables = v as usize;
         }
+        if let Some(v) = tree.get_str("store", "persist_dir")? {
+            if v.is_empty() {
+                return Err(ConfigError::Invalid(
+                    "store.persist_dir must not be empty".to_string(),
+                ));
+            }
+            cfg.node.persist_dir = Some(v);
+        }
 
         if let Some(v) = tree.get_int("cluster", "nodes")? {
             cfg.nodes = v as usize;
@@ -239,6 +247,7 @@ verify_deletes = false
 [store]
 max_memtable_keys = 5000
 filter_pressure = 0.8
+persist_dir = "/tmp/ocf-data"
 
 [cluster]
 nodes = 5
@@ -260,6 +269,18 @@ batch_size = 4096
         // node filter config mirrors the filter section
         assert_eq!(cfg.node.filter.ocf.fp_bits, 12);
         assert_eq!(cfg.node.filter.describe(), "ocf-pre");
+        assert_eq!(cfg.node.persist_dir.as_deref(), Some("/tmp/ocf-data"));
+    }
+
+    #[test]
+    fn persist_dir_defaults_off_and_rejects_empty() {
+        let cfg = OcfFileConfig::load("", &[]).unwrap();
+        assert_eq!(cfg.node.persist_dir, None, "persistence is opt-in");
+        assert!(OcfFileConfig::load("[store]\npersist_dir = \"\"\n", &[]).is_err());
+        // settable through --set overrides like every other knob
+        let cfg =
+            OcfFileConfig::load("", &["store.persist_dir=/tmp/ocf-x".into()]).unwrap();
+        assert_eq!(cfg.node.persist_dir.as_deref(), Some("/tmp/ocf-x"));
     }
 
     #[test]

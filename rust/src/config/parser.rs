@@ -64,8 +64,13 @@ impl Value {
         if let Ok(f) = cleaned.parse::<f64>() {
             return Ok(Value::Float(f));
         }
-        // bare words act as strings (lenient; also covers enum-ish values)
-        if raw.chars().all(|c| c.is_alphanumeric() || c == '-' || c == '_') {
+        // bare words act as strings (lenient; also covers enum-ish
+        // values and filesystem paths — `store.persist_dir=/var/ocf`
+        // must work as a --set override without shell-quoted quotes)
+        if raw
+            .chars()
+            .all(|c| c.is_alphanumeric() || matches!(c, '-' | '_' | '/' | '.' | '~'))
+        {
             return Ok(Value::Str(raw.to_string()));
         }
         Err(ConfigError::Parse {
@@ -248,6 +253,12 @@ mod tests {
         assert_eq!(t.get_float("new", "k").unwrap(), Some(3.5));
         assert!(t.apply_override("malformed").is_err());
         assert!(t.apply_override("nodots=1").is_err());
+        // bare paths parse as strings (persist_dir overrides)
+        t.apply_override("store.persist_dir=/tmp/ocf.d").unwrap();
+        assert_eq!(
+            t.get_str("store", "persist_dir").unwrap().as_deref(),
+            Some("/tmp/ocf.d")
+        );
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! | E10 | probe engine: scalar vs batched lookups          | [`probe`]  |
 //! | E11 | pooled ingest: persistent workers vs scoped fan-out | [`pool`] |
 //! | E12 | SIMD probe kernels × load factor                  | [`kernel`] |
+//! | E13 | persistent tier: restart + mmap-vs-heap probes    | [`persist`] |
 //!
 //! Every driver takes a [`Scale`] so the same code serves quick checks
 //! (`--scale 0.01`), CI, and full paper-scale runs, and returns a
@@ -26,6 +27,7 @@ pub mod cartesian;
 pub mod fig2;
 pub mod fig3;
 pub mod kernel;
+pub mod persist;
 pub mod pool;
 pub mod probe;
 pub mod report;
@@ -67,8 +69,9 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "probe" => Ok(probe::run(scale)),
             "pool" => Ok(pool::run(scale)),
             "kernel" => Ok(kernel::run(scale)),
+            "persist" => Ok(persist::run(scale)),
             other => Err(format!(
-                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool kernel all)"
+                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool kernel persist all)"
             )),
         }
     };
@@ -87,6 +90,7 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "probe",
             "pool",
             "kernel",
+            "persist",
         ] {
             out.push_str(&one(n)?);
             out.push('\n');

@@ -1,0 +1,327 @@
+//! E13 — the persistent frozen-filter tier: restart time and
+//! mmap-vs-heap probe throughput.
+//!
+//! Two questions, both downstream of the on-disk format
+//! (`store::frozen`):
+//!
+//! 1. **Restart cost.** Reopening a populated `persist_dir` with valid
+//!    filter files (*recover*: validate + map, no table construction)
+//!    vs with the filter files deleted (*rebuild*: re-insert every run
+//!    key through the cuckoo build path). Recovery is the point of the
+//!    persistence tier — the rebuild arm is the restart cost it
+//!    removes. The [`NodeStats`] recovery counters
+//!    (`filters_recovered` / `filters_rebuilt` /
+//!    `filter_recovery_rejected`) are surfaced per arm so the report
+//!    shows *which* path each restart actually took.
+//! 2. **Probe parity.** Batched membership throughput on the same
+//!    frozen generation served heap-backed vs mmap-backed. Both route
+//!    through the identical [`BatchedFilter`] engine and kernel
+//!    dispatch; once the mapping is warm the numbers should be
+//!    indistinguishable — that is the claim that makes mmap-serving
+//!    free.
+//!
+//! `measure()` is shared with `benches/persist.rs`, which emits the
+//! `BENCH_persist.json` trajectory point.
+
+use super::report::{f, Table};
+use super::Scale;
+use crate::filter::{BatchedFilter, ProbeSession};
+use crate::store::{
+    Backing, FlushPolicy, FlushReason, FrozenStore, NodeConfig, StorageNode,
+};
+use std::time::Instant;
+
+/// Probe chunk size for the batched arms (matches E10).
+pub const BATCH: usize = 4096;
+
+/// One timed restart of the node.
+#[derive(Debug, Clone)]
+pub struct RestartArm {
+    /// "recover" (valid filter files) | "rebuild" (filter files gone).
+    pub arm: &'static str,
+    /// Wallclock of `StorageNode::recover`.
+    pub secs: f64,
+    pub sstables: usize,
+    pub filters_recovered: u64,
+    pub filters_rebuilt: u64,
+    pub filter_recovery_rejected: u64,
+}
+
+/// One timed batched-probe loop over a frozen generation.
+#[derive(Debug, Clone)]
+pub struct ProbeArm {
+    /// "heap" | "mmap".
+    pub backing: &'static str,
+    /// "neg" | "pos".
+    pub workload: &'static str,
+    pub probes: usize,
+    pub secs: f64,
+    pub hits: usize,
+}
+
+impl ProbeArm {
+    pub fn mops(&self) -> f64 {
+        if self.secs <= 0.0 {
+            0.0
+        } else {
+            self.probes as f64 / self.secs / 1e6
+        }
+    }
+}
+
+/// Everything E13 measures.
+#[derive(Debug, Clone)]
+pub struct PersistOutcome {
+    pub keys: usize,
+    pub restarts: Vec<RestartArm>,
+    pub probe_arms: Vec<ProbeArm>,
+}
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("ocf-e13-{tag}-{}-{n}", std::process::id()))
+}
+
+fn restart(cfg: &NodeConfig, arm: &'static str) -> (StorageNode, RestartArm) {
+    let t0 = Instant::now();
+    let node = StorageNode::recover(cfg.clone()).expect("recover scratch dir");
+    let secs = t0.elapsed().as_secs_f64();
+    let point = RestartArm {
+        arm,
+        secs,
+        sstables: node.sstable_count(),
+        filters_recovered: node.stats.filters_recovered(),
+        filters_rebuilt: node.stats.filters_rebuilt(),
+        filter_recovery_rejected: node.stats.filter_recovery_rejected(),
+    };
+    (node, point)
+}
+
+fn time_probe_arm(
+    filter: &crate::filter::FrozenTable,
+    backing: &'static str,
+    workload: &'static str,
+    probes: &[u64],
+) -> ProbeArm {
+    let mut session = ProbeSession::with_capacity(BATCH);
+    let mut answers: Vec<bool> = Vec::with_capacity(BATCH);
+    let t0 = Instant::now();
+    let mut hits = 0usize;
+    for chunk in probes.chunks(BATCH) {
+        answers.clear();
+        filter.contains_batch_into(chunk, &mut session, &mut answers);
+        hits += answers.iter().filter(|&&h| h).count();
+    }
+    ProbeArm {
+        backing,
+        workload,
+        probes: probes.len(),
+        secs: t0.elapsed().as_secs_f64(),
+        hits,
+    }
+}
+
+/// Measure restart (recover vs rebuild) and probe (heap vs mmap) arms
+/// over a freshly persisted population of `n_keys`.
+pub fn measure(n_keys: usize, n_probes: usize) -> PersistOutcome {
+    let dir = scratch_dir("measure");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = NodeConfig {
+        persist_dir: Some(dir.to_str().expect("utf-8 temp path").to_string()),
+        // One manual flush → one generation holding every key, so the
+        // probe arms (and their positive workload) see the full set.
+        flush: FlushPolicy::small(usize::MAX),
+        ..NodeConfig::default()
+    };
+
+    // Populate + freeze: one durable generation holding all keys.
+    let mut node = StorageNode::new(cfg.clone());
+    for k in 0..n_keys as u64 {
+        node.put(k).expect("put");
+    }
+    node.flush(FlushReason::MemtableKeys);
+    drop(node);
+
+    let mut restarts = Vec::with_capacity(2);
+
+    // Arm 1: recover — filter files valid, served in place.
+    let (node, point) = restart(&cfg, "recover");
+    assert_eq!(point.filters_rebuilt, 0, "recover arm must not rebuild");
+    drop(node);
+    restarts.push(point);
+
+    // Arm 2: rebuild — filter files deleted (the crash window where
+    // only runs survived); every filter reconstructed from its run.
+    let store = FrozenStore::open(&dir).expect("open scratch store");
+    for gen in store.generations().expect("list generations") {
+        let _ = std::fs::remove_file(store.filter_path(gen));
+    }
+    let (node, point) = restart(&cfg, "rebuild");
+    assert!(point.filters_rebuilt > 0, "rebuild arm must rebuild");
+    assert_eq!(
+        point.filter_recovery_rejected, 0,
+        "missing files are not rejections"
+    );
+    drop(node);
+    restarts.push(point);
+
+    // Probe arms: the same (largest) generation, heap vs mmap backing.
+    // The rebuild arm re-persisted healed filters, so loads succeed.
+    let gen = *store
+        .generations()
+        .expect("list generations")
+        .last()
+        .expect("at least one generation");
+    let heap = store
+        .load_filter_with(gen, Backing::Heap)
+        .expect("heap load");
+    let neg: Vec<u64> = (0..n_probes as u64).map(|i| (1u64 << 40) + i).collect();
+    let pos: Vec<u64> = (0..n_probes as u64)
+        .map(|i| i % n_keys.max(1) as u64)
+        .collect();
+    let mut probe_arms = Vec::with_capacity(4);
+    for (workload, probes) in [("neg", &neg), ("pos", &pos)] {
+        probe_arms.push(time_probe_arm(&heap, "heap", workload, probes));
+    }
+    match store.load_filter_with(gen, Backing::Mmap) {
+        Ok(mapped) => {
+            assert!(mapped.is_mapped());
+            for (workload, probes) in [("neg", &neg), ("pos", &pos)] {
+                let arm = time_probe_arm(&mapped, "mmap", workload, probes);
+                // parity anchor: identical answers off both backings
+                let twin = probe_arms
+                    .iter()
+                    .find(|p| p.backing == "heap" && p.workload == arm.workload)
+                    .expect("heap twin");
+                assert_eq!(arm.hits, twin.hits, "{}: backings diverged", arm.workload);
+                probe_arms.push(arm);
+            }
+        }
+        Err(e) => {
+            // Non-unix / big-endian targets: heap is the only backing.
+            eprintln!("E13: mmap arm unavailable on this target ({e}); heap arms only");
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+    PersistOutcome {
+        keys: n_keys,
+        restarts,
+        probe_arms,
+    }
+}
+
+/// Render the two E13 tables (shared by the experiment driver and the
+/// `persist` bench so their outputs cannot drift).
+pub fn render(title: impl Into<String>, o: &PersistOutcome) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(
+        title,
+        &[
+            "restart arm",
+            "ms",
+            "sstables",
+            "recovered",
+            "rebuilt",
+            "rejected",
+        ],
+    );
+    for r in &o.restarts {
+        t.row(&[
+            r.arm.to_string(),
+            f(r.secs * 1e3, 2),
+            r.sstables.to_string(),
+            r.filters_recovered.to_string(),
+            r.filters_rebuilt.to_string(),
+            r.filter_recovery_rejected.to_string(),
+        ]);
+    }
+    t.note(
+        "recover = validate + serve persisted filter files in place (mmap-backed \
+         where supported); rebuild = filter files deleted, every table's filter \
+         reconstructed from its run — the restart cost persistence removes. \
+         Counters are the NodeStats recovery counters.",
+    );
+    out.push_str(&t.markdown());
+    out.push('\n');
+
+    let mut t = Table::new(
+        format!("E13 — frozen-probe throughput by backing ({} keys)", o.keys),
+        &["backing", "workload", "Mops/s", "vs heap"],
+    );
+    for p in &o.probe_arms {
+        let ratio = if p.backing == "heap" {
+            String::new()
+        } else {
+            o.probe_arms
+                .iter()
+                .find(|q| q.backing == "heap" && q.workload == p.workload)
+                .filter(|q| q.mops() > 0.0)
+                .map(|q| format!("{}x", f(p.mops() / q.mops(), 2)))
+                .unwrap_or_default()
+        };
+        t.row(&[
+            p.backing.to_string(),
+            p.workload.to_string(),
+            f(p.mops(), 2),
+            ratio,
+        ]);
+    }
+    t.note(
+        "Same frozen generation, same BatchedFilter engine and kernel dispatch; \
+         the mmap arms read the words straight off the page cache (zero-copy). \
+         ≈1.0x is the expected (and desired) result.",
+    );
+    out.push_str(&t.markdown());
+    out
+}
+
+/// The experiment driver (paper scale: 1M resident keys, 1M probes).
+pub fn run(scale: Scale) -> String {
+    let n_keys = scale.n(1_000_000, 20_000);
+    let n_probes = scale.n(1_000_000, 20_000);
+    let outcome = measure(n_keys, n_probes);
+    render(
+        format!("E13 — persistent tier: restart recover vs rebuild ({n_keys} keys)"),
+        &outcome,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arms_cover_and_agree() {
+        let o = measure(5_000, 5_000);
+        assert_eq!(o.restarts.len(), 2);
+        assert_eq!(o.restarts[0].arm, "recover");
+        assert!(o.restarts[0].filters_recovered >= 1);
+        assert_eq!(o.restarts[1].arm, "rebuild");
+        assert!(o.restarts[1].filters_rebuilt >= 1);
+        // heap arms always present; mmap arms on supported targets
+        assert!(o.probe_arms.len() >= 2);
+        if cfg!(all(unix, target_endian = "little")) {
+            assert_eq!(o.probe_arms.len(), 4);
+        }
+        // positive probes must all hit (frozen tables keep the
+        // no-false-negative invariant across persist/reopen)
+        assert!(o
+            .probe_arms
+            .iter()
+            .filter(|p| p.workload == "pos")
+            .all(|p| p.hits == p.probes));
+    }
+
+    #[test]
+    fn report_renders() {
+        let md = run(Scale(0.005));
+        assert!(md.contains("E13"));
+        assert!(md.contains("recover"));
+        assert!(md.contains("rebuild"));
+        assert!(md.contains("| heap |"));
+        assert!(md.contains("recovered"));
+    }
+}

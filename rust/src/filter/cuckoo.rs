@@ -171,6 +171,40 @@ impl<T: BucketTable> CuckooFilter<T> {
         }
     }
 
+    /// Wrap an already-populated table as a probe-only filter: no
+    /// victim cache, zero displacement budget, `len` as recorded by the
+    /// producer. This is how frozen tables ([`super::frozen::FrozenTable`])
+    /// get the real batch engine — `contains_triple`'s fused pair
+    /// compare and the prefetch-pipelined `contains_triples_into` run
+    /// unchanged over the read-only table. The caller must pass the
+    /// `hasher` the table was built with (same seed and fingerprint
+    /// width), or probes are meaningless.
+    pub fn probe_only(table: T, hasher: Hasher, len: usize) -> Self {
+        debug_assert_eq!(
+            hasher.fp_mask.count_ones(),
+            table.fp_bits(),
+            "hasher fingerprint width must match the table's"
+        );
+        let params = CuckooParams {
+            capacity: table.nbuckets() * SLOTS,
+            fp_bits: table.fp_bits(),
+            max_displacements: 0,
+            seed: hasher.seed,
+            victim_policy: VictimPolicy::Rollback,
+        };
+        Self {
+            table,
+            hasher,
+            len,
+            max_displacements: 0,
+            victim_policy: VictimPolicy::Rollback,
+            victim: None,
+            evict_rng: SplitMix64::new(params.seed ^ 0xE71C_7ED0),
+            stats: FilterStats::new(),
+            params,
+        }
+    }
+
     pub fn params(&self) -> &CuckooParams {
         &self.params
     }

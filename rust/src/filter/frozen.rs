@@ -1,0 +1,494 @@
+//! Frozen (immutable, query-only) cuckoo tables behind the probe trait.
+//!
+//! A frozen table is the row-major `u32[nbuckets * SLOTS]` snapshot
+//! produced by [`BucketTable::to_frozen`] — the layout SSTable filters
+//! persist and the Pallas/XLA probe kernel consumes. This module makes
+//! that snapshot a *first-class probe target* instead of a bare slice:
+//!
+//! * [`FrozenBytes`] — where the words live: an owned heap allocation
+//!   (today's path) or a shared [`MmapRegion`] window straight over a
+//!   persisted filter file (`store::frozen`), so a recovered filter is
+//!   served zero-copy from the page cache.
+//! * [`FrozenView`] — a read-only [`BucketTable`] over those words.
+//!   Every probe routes through the same runtime-dispatched
+//!   [`ProbeKernel`] vtable as the mutable tables (whole-bucket
+//!   compares, fused pair probe, 4-bucket gather, prefetch), so frozen
+//!   probes get scalar/SWAR/SSE2/AVX2/NEON for free. Mutation panics —
+//!   frozen means frozen.
+//! * [`FrozenTable`] — the public filter type: a
+//!   [`CuckooFilter`]`<FrozenView>` built probe-only, which means the
+//!   *literal* prefetch-pipelined batch engine
+//!   ([`CuckooFilter::contains_triples_into`]) serves frozen probes.
+//!   For an mmap-backed table the pipeline's prefetches overlap
+//!   page-cache misses exactly the way they overlap cache misses on a
+//!   heap table.
+//!
+//! [`FrozenTable`] implements [`MembershipFilter`] + [`BatchedFilter`]
+//! (insert/delete report immutability instead of mutating), so frozen
+//! filters drop into every batched consumer unchanged — the acceptance
+//! bar for the persistent tier is that heap- and mmap-backed probes are
+//! the same engine, same kernel, same answers.
+
+use super::bucket::{BucketTable, SLOTS};
+use super::cuckoo::CuckooFilter;
+use super::fingerprint::{Hasher, HashTriple};
+use super::kernel::{self, prefetch_read, ProbeKernel};
+use super::session::ProbeSession;
+use super::{BatchedFilter, FilterError, MembershipFilter};
+use crate::util::MmapRegion;
+use std::sync::Arc;
+
+/// Backing storage of a frozen table's words.
+///
+/// Clones are cheap (`Arc` either way): an `SsTable` clone shares the
+/// same mapping/allocation instead of duplicating the filter.
+#[derive(Debug, Clone)]
+pub enum FrozenBytes {
+    /// Owned words on the heap (built in-process, or the portable
+    /// fallback when mapping is unavailable).
+    Heap(Arc<[u32]>),
+    /// A window into a read-only file mapping: `words` little-endian
+    /// `u32`s starting `offset_bytes` into the region. The offset must
+    /// be 4-byte aligned (the frozen format places the payload at a
+    /// page-aligned offset, which more than satisfies this).
+    Mapped {
+        region: Arc<MmapRegion>,
+        offset_bytes: usize,
+        words: usize,
+    },
+}
+
+impl FrozenBytes {
+    /// The table words, wherever they live.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[u32] {
+        match self {
+            FrozenBytes::Heap(v) => v,
+            FrozenBytes::Mapped {
+                region,
+                offset_bytes,
+                words,
+            } => {
+                let bytes = region.as_bytes();
+                debug_assert!(offset_bytes + words * 4 <= bytes.len());
+                let ptr = bytes[*offset_bytes..].as_ptr();
+                debug_assert_eq!(ptr as usize % std::mem::align_of::<u32>(), 0);
+                // Safe: the region outlives `self` (Arc), the range was
+                // bounds-checked at construction, and the pointer is
+                // 4-byte aligned (page-aligned payload offset). Word
+                // order is little-endian on disk == native here (the
+                // mmap path is only selected on little-endian targets;
+                // see `store::frozen`).
+                unsafe { std::slice::from_raw_parts(ptr as *const u32, *words) }
+            }
+        }
+    }
+
+    /// Is this a file mapping (vs an owned heap allocation)?
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, FrozenBytes::Mapped { .. })
+    }
+}
+
+/// A read-only [`BucketTable`] over frozen words. All probe ops are
+/// kernel-dispatched like [`FlatTable`](super::FlatTable) (the frozen
+/// layout *is* the flat layout); all mutation panics.
+#[derive(Debug, Clone)]
+pub struct FrozenView {
+    bytes: FrozenBytes,
+    nbuckets: usize,
+    fp_bits: u32,
+    kernel: &'static ProbeKernel,
+}
+
+impl FrozenView {
+    /// Wrap frozen `bytes` holding `nbuckets * SLOTS` words.
+    pub fn new(
+        bytes: FrozenBytes,
+        nbuckets: usize,
+        fp_bits: u32,
+        kernel: &'static ProbeKernel,
+    ) -> Self {
+        assert!(nbuckets >= 1, "need at least one bucket");
+        assert!((1..=32).contains(&fp_bits));
+        assert_eq!(
+            bytes.as_slice().len(),
+            nbuckets * SLOTS,
+            "frozen word count must match the bucket geometry"
+        );
+        Self {
+            bytes,
+            nbuckets,
+            fp_bits,
+            kernel,
+        }
+    }
+
+    #[inline(always)]
+    fn slots(&self) -> &[u32] {
+        self.bytes.as_slice()
+    }
+
+    /// The 4-lane bucket as a fixed-size array (one bounds check).
+    #[inline(always)]
+    fn bucket(&self, b: usize) -> &[u32; SLOTS] {
+        let base = b * SLOTS;
+        self.slots()[base..base + SLOTS].try_into().unwrap()
+    }
+
+    /// The backing storage (for persistence and diagnostics).
+    pub fn bytes(&self) -> &FrozenBytes {
+        &self.bytes
+    }
+}
+
+impl BucketTable for FrozenView {
+    /// An all-empty heap-backed view (satisfies the trait; real frozen
+    /// views come from [`FrozenView::new`] over snapshot or mapped
+    /// words).
+    fn with_buckets_kernel(nbuckets: usize, fp_bits: u32, kernel: &'static ProbeKernel) -> Self {
+        Self::new(
+            FrozenBytes::Heap(vec![0u32; nbuckets.max(1) * SLOTS].into()),
+            nbuckets.max(1),
+            fp_bits,
+            kernel,
+        )
+    }
+
+    #[inline(always)]
+    fn kernel(&self) -> &'static ProbeKernel {
+        self.kernel
+    }
+
+    #[inline(always)]
+    fn nbuckets(&self) -> usize {
+        self.nbuckets
+    }
+
+    fn fp_bits(&self) -> u32 {
+        self.fp_bits
+    }
+
+    #[inline(always)]
+    fn get(&self, b: usize, s: usize) -> u32 {
+        self.slots()[b * SLOTS + s]
+    }
+
+    /// Frozen tables are immutable; any write is a logic error. (All
+    /// trait mutation defaults — `try_insert`, `remove`, `swap` —
+    /// funnel through `set`, so this one panic covers them.)
+    fn set(&mut self, _b: usize, _s: usize, _fp: u32) {
+        panic!("FrozenView is immutable: frozen tables cannot be mutated");
+    }
+
+    #[inline(always)]
+    fn prefetch_bucket(&self, b: usize) {
+        // Same shape as FlatTable: a 16-byte bucket can straddle a
+        // cache-line boundary, cover both ends. On a mapped table a
+        // cold line is a page-cache miss — exactly what the batch
+        // engine's pipelined prefetches are for.
+        let p = self.slots().as_ptr().wrapping_add(b * SLOTS);
+        prefetch_read(p);
+        prefetch_read(p.wrapping_add(SLOTS - 1));
+    }
+
+    /// One-load whole-bucket probe (kernel-dispatched).
+    #[inline(always)]
+    fn contains(&self, b: usize, fp: u32) -> bool {
+        self.kernel.flat_mask(self.bucket(b), fp) != 0
+    }
+
+    /// Fused candidate-pair probe (one wide compare on AVX2).
+    #[inline(always)]
+    fn contains_pair(&self, b1: usize, b2: usize, fp: u32) -> bool {
+        self.kernel.flat_pair(self.bucket(b1), self.bucket(b2), fp) != 0
+    }
+
+    /// Four-probe gather (two wide compares on AVX2).
+    #[inline(always)]
+    fn contains4(&self, bs: &[usize; 4], fps: &[u32; 4]) -> u32 {
+        let g = [
+            self.bucket(bs[0]),
+            self.bucket(bs[1]),
+            self.bucket(bs[2]),
+            self.bucket(bs[3]),
+        ];
+        self.kernel.flat_gather4(&g, fps)
+    }
+
+    /// Heap bytes attributable to the table: the words for a heap
+    /// backing, 0 for a mapping (resident pages are page cache, not
+    /// heap — the "filter capacity bounded by SSD, not RAM" half of
+    /// the persistent tier).
+    fn memory_bytes(&self) -> usize {
+        match &self.bytes {
+            FrozenBytes::Heap(v) => v.len() * std::mem::size_of::<u32>(),
+            FrozenBytes::Mapped { .. } => 0,
+        }
+    }
+
+    fn to_frozen(&self) -> Vec<u32> {
+        self.slots().to_vec()
+    }
+}
+
+/// An immutable, query-only cuckoo filter over frozen words — heap- or
+/// mmap-backed, probe-served by the real batch engine.
+#[derive(Debug, Clone)]
+pub struct FrozenTable {
+    inner: CuckooFilter<FrozenView>,
+}
+
+impl FrozenTable {
+    /// Wrap frozen `bytes` (`nbuckets * SLOTS` words). `len` is the
+    /// resident fingerprint count recorded at freeze time; `seed` must
+    /// be the seed the words were built with or probes are garbage.
+    pub fn from_bytes(bytes: FrozenBytes, nbuckets: usize, fp_bits: u32, seed: u64, len: usize) -> Self {
+        let view = FrozenView::new(bytes, nbuckets, fp_bits, kernel::active());
+        Self {
+            inner: CuckooFilter::probe_only(view, Hasher::new(seed, fp_bits), len),
+        }
+    }
+
+    /// Heap-backed construction from owned words.
+    pub fn from_words(words: Vec<u32>, nbuckets: usize, fp_bits: u32, seed: u64, len: usize) -> Self {
+        Self::from_bytes(FrozenBytes::Heap(words.into()), nbuckets, fp_bits, seed, len)
+    }
+
+    /// Freeze a live filter: snapshot its table into an owned heap
+    /// backing (the classic `to_frozen` path, now engine-served).
+    pub fn snapshot<T: BucketTable>(f: &CuckooFilter<T>) -> Self {
+        let hasher = f.hasher();
+        Self::from_words(
+            f.to_frozen(),
+            f.nbuckets(),
+            hasher.fp_mask.count_ones(),
+            hasher.seed,
+            MembershipFilter::len(f),
+        )
+    }
+
+    /// The raw frozen words (persistence, the XLA probe path, tests).
+    pub fn words(&self) -> &[u32] {
+        self.inner.table().slots()
+    }
+
+    pub fn nbuckets(&self) -> usize {
+        self.inner.nbuckets()
+    }
+
+    pub fn hasher(&self) -> Hasher {
+        self.inner.hasher()
+    }
+
+    /// The probe kernel serving this table.
+    pub fn kernel(&self) -> &'static ProbeKernel {
+        self.inner.kernel()
+    }
+
+    /// Is the table served from a file mapping (vs heap words)?
+    pub fn is_mapped(&self) -> bool {
+        self.inner.table().bytes().is_mapped()
+    }
+
+    /// "mmap" or "heap" — for banners and reports.
+    pub fn backing(&self) -> &'static str {
+        if self.is_mapped() {
+            "mmap"
+        } else {
+            "heap"
+        }
+    }
+
+    /// Batched membership over pre-hashed triples — the literal
+    /// prefetch-pipelined probe engine
+    /// ([`CuckooFilter::contains_triples_into`]) over the frozen words.
+    pub fn contains_triples_into(&self, triples: &[HashTriple], out: &mut Vec<bool>) {
+        self.inner.contains_triples_into(triples, out);
+    }
+}
+
+impl MembershipFilter for FrozenTable {
+    /// Frozen tables are immutable: inserts are refused, never applied.
+    fn insert(&mut self, _key: u64) -> Result<(), FilterError> {
+        Err(FilterError::ResizeRefused(
+            "frozen table is immutable".to_string(),
+        ))
+    }
+
+    /// Scalar probe: the fused primary+alternate pair compare, same as
+    /// every live cuckoo filter.
+    fn contains(&self, key: u64) -> bool {
+        self.inner.contains(key)
+    }
+
+    /// Frozen tables are immutable: deletes remove nothing.
+    fn delete(&mut self, _key: u64) -> bool {
+        false
+    }
+
+    fn len(&self) -> usize {
+        MembershipFilter::len(&self.inner)
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.inner.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "frozen"
+    }
+}
+
+/// Batched probes ride the engine; batched mutations inherit the
+/// scalar defaults (which report immutability per key).
+impl BatchedFilter for FrozenTable {
+    fn contains_batch_into(&self, keys: &[u64], session: &mut ProbeSession, out: &mut Vec<bool>) {
+        self.inner.contains_batch_into(keys, session, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::cuckoo::CuckooParams;
+    use crate::filter::{FlatTable, PackedTable};
+
+    fn live_filter(n: u64, capacity: usize) -> CuckooFilter<FlatTable> {
+        let mut f = CuckooFilter::<FlatTable>::new(CuckooParams {
+            capacity,
+            ..CuckooParams::default()
+        });
+        for k in 0..n {
+            f.insert(k).unwrap();
+        }
+        f
+    }
+
+    #[test]
+    fn snapshot_answers_match_source() {
+        let f = live_filter(3000, 1 << 13);
+        let frozen = FrozenTable::snapshot(&f);
+        assert_eq!(MembershipFilter::len(&frozen), 3000);
+        assert!(!frozen.is_mapped());
+        assert_eq!(frozen.backing(), "heap");
+        for k in (0..3000u64).chain(5_000_000..5_003_000) {
+            assert_eq!(frozen.contains(k), f.contains(k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn snapshot_of_packed_table_matches() {
+        let mut f = CuckooFilter::<PackedTable>::new(CuckooParams {
+            capacity: 4096,
+            fp_bits: 13,
+            ..CuckooParams::default()
+        });
+        for k in 0..2000u64 {
+            f.insert(k).unwrap();
+        }
+        let frozen = FrozenTable::snapshot(&f);
+        // the snapshot widens packed lanes to the flat layout; answers
+        // are identical because fingerprints are value-preserved
+        for k in (0..2000u64).chain(9_000_000..9_002_000) {
+            assert_eq!(frozen.contains(k), f.contains(k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn batched_probe_matches_scalar_on_frozen() {
+        let f = live_filter(5000, 1 << 14);
+        let frozen = FrozenTable::snapshot(&f);
+        let probes: Vec<u64> = (0..5000u64).chain(7_000_000..7_005_000).collect();
+        let batched = frozen.contains_batch(&probes);
+        for (&k, &b) in probes.iter().zip(&batched) {
+            assert_eq!(b, frozen.contains(k), "key {k}");
+        }
+        // triple-level engine entry agrees too
+        let h = frozen.hasher();
+        let triples: Vec<HashTriple> = probes.iter().map(|&k| h.hash_key(k)).collect();
+        let mut out = Vec::new();
+        frozen.contains_triples_into(&triples, &mut out);
+        assert_eq!(out, batched);
+    }
+
+    #[test]
+    fn non_pow2_geometry_round_trips() {
+        // non-pow2 bucket counts take the Lemire index mapping; the
+        // frozen view must reproduce it bit-for-bit
+        let mut f = CuckooFilter::<FlatTable>::new(CuckooParams {
+            capacity: 1000, // 250 buckets, non-pow2
+            fp_bits: 11,
+            ..CuckooParams::default()
+        });
+        for k in 0..700u64 {
+            let _ = f.insert(k);
+        }
+        let frozen = FrozenTable::snapshot(&f);
+        assert_eq!(frozen.nbuckets(), 250);
+        for k in (0..700u64).chain(3_000_000..3_000_700) {
+            assert_eq!(frozen.contains(k), f.contains(k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn mutations_refused_without_panic() {
+        let f = live_filter(100, 1 << 10);
+        let mut frozen = FrozenTable::snapshot(&f);
+        assert!(matches!(
+            frozen.insert(42),
+            Err(FilterError::ResizeRefused(_))
+        ));
+        assert!(!frozen.delete(5), "delete on frozen removes nothing");
+        assert!(frozen.contains(5), "refused delete must not change answers");
+        assert_eq!(MembershipFilter::len(&frozen), 100);
+        // batched mutations inherit the refusing scalar defaults
+        let results = frozen.insert_batch(&[1, 2, 3]);
+        assert!(results.iter().all(|r| r.is_err()));
+        assert!(frozen.delete_batch(&[1, 2, 3]).iter().all(|&d| !d));
+    }
+
+    #[test]
+    #[should_panic(expected = "immutable")]
+    fn direct_table_write_panics() {
+        let f = live_filter(10, 256);
+        let mut frozen = FrozenView::new(
+            FrozenBytes::Heap(f.to_frozen().into()),
+            f.nbuckets(),
+            16,
+            kernel::active(),
+        );
+        frozen.set(0, 0, 1);
+    }
+
+    #[test]
+    fn frozen_view_word_count_enforced() {
+        let r = std::panic::catch_unwind(|| {
+            FrozenView::new(FrozenBytes::Heap(vec![0u32; 7].into()), 2, 16, kernel::active())
+        });
+        assert!(r.is_err(), "2 buckets need 8 words, 7 must be rejected");
+    }
+
+    #[test]
+    fn clones_share_backing() {
+        let f = live_filter(500, 1 << 11);
+        let a = FrozenTable::snapshot(&f);
+        let b = a.clone();
+        assert_eq!(a.words().as_ptr(), b.words().as_ptr(), "Arc-shared words");
+        assert_eq!(a.contains(5), b.contains(5));
+    }
+
+    #[test]
+    fn memory_accounting_by_backing() {
+        let f = live_filter(100, 1 << 10);
+        let frozen = FrozenTable::snapshot(&f);
+        assert_eq!(
+            MembershipFilter::memory_bytes(&frozen),
+            frozen.words().len() * 4
+        );
+    }
+}

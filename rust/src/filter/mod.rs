@@ -13,6 +13,11 @@
 //!   of) the key hash. Batched APIs group a pre-hashed batch by shard
 //!   and apply each shard's group under a single lock acquisition, so
 //!   M threads scale to min(M, shards) until the memory bus saturates.
+//! * [`FrozenTable`] — the immutable query-only tier: a frozen
+//!   row-major snapshot (heap- or mmap-backed, [`FrozenBytes`]) served
+//!   by the same probe engine and kernel dispatch as live filters.
+//!   SSTable filters and the persistent frozen store
+//!   (`store::frozen`) are built on it.
 //! * [`BloomFilter`], [`CountingBloomFilter`], [`ScalableBloomFilter`],
 //!   [`XorFilter`] — the baselines the paper positions against.
 //!
@@ -114,6 +119,7 @@ pub mod concurrent;
 pub mod cuckoo;
 pub mod eof;
 pub mod fingerprint;
+pub mod frozen;
 pub mod kernel;
 pub mod keystore;
 pub mod metrics;
@@ -134,6 +140,7 @@ pub use concurrent::{ConcurrentFilter, MutexFilter};
 pub use cuckoo::{prefetch_depth, CuckooFilter, CuckooParams, VictimPolicy, PREFETCH_DEPTH};
 pub use eof::EofPolicy;
 pub use fingerprint::{mix32, mix64, Hasher, HashTriple};
+pub use frozen::{FrozenBytes, FrozenTable, FrozenView};
 pub use kernel::{EngineInfo, ProbeKernel};
 pub use keystore::KeyStore;
 pub use metrics::FilterStats;

@@ -2,7 +2,7 @@
 //! line-protocol membership server.
 //!
 //! ```text
-//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|pool|kernel|all>
+//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|pool|kernel|persist|all>
 //!         [--scale F]           # workload scale, 1.0 = paper scale
 //! ocf pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]
 //!              [--shards N]     # >1 = sharded concurrent filter front-end
@@ -12,6 +12,9 @@
 //! ocf serve [--config FILE] [--set section.key=value ...]
 //!           # filter backend from [filter] backend = "..." / --set filter.backend=...
 //!           # pooled ingest shape from [pipeline] workers/queue_depth/chunk_size
+//!           # [store] persist_dir = "DIR" (or --set store.persist_dir=DIR) serves a
+//!           # crash-recoverable StorageNode: recovery at startup, `flush` command,
+//!           # exact found/absent answers, recovery counters in banner + stats
 //! ocf tune [--keys N] [--probes N]
 //!           # probe-engine microbench: kernel × prefetch-depth grid + the
 //!           # OCF_SIMD / OCF_PREFETCH_DEPTH exports to pin the winner
@@ -59,7 +62,7 @@ fn print_help() {
          exp <name|all> [--scale F]   regenerate paper tables/figures\n  \
          pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads] [--shards N] [--backend NAME]\n           \
          [--workers N] [--queue-depth N] [--chunk N]   worker-pool ingest (0 = auto workers)\n  \
-         serve [--config FILE] [--set section.key=value]\n  \
+         serve [--config FILE] [--set section.key=value]   (--set store.persist_dir=DIR = durable node mode)\n  \
          tune [--keys N] [--probes N]   probe-kernel × prefetch-depth microbench\n  \
          info [--artifacts DIR]\n  \
          help"
@@ -457,6 +460,12 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    // Persistent node mode: with [store] persist_dir set the server is
+    // a full StorageNode recovered from disk (memtable + SSTables +
+    // mmap-served frozen filters), not a bare filter.
+    if cfg.node.persist_dir.is_some() {
+        return cmd_serve_node(cfg);
+    }
     eprintln!(
         "ocf serve: filter={} capacity={} (line protocol: put K | get K | del K | stats | quit)",
         cfg.filter.describe(),
@@ -520,6 +529,97 @@ fn cmd_serve(args: &[String]) -> i32 {
                 filter.capacity(),
                 filter.occupancy(),
                 filter.stats().resizes()
+            ),
+            (Some("quit"), _) => break,
+            _ => "err unknown-command".into(),
+        };
+        if writeln!(out, "{reply}").is_err() {
+            break;
+        }
+    }
+    0
+}
+
+/// `ocf serve` with `[store] persist_dir`: a crash-recoverable storage
+/// node. Recovery happens before the banner so the recovered/rebuilt
+/// counts are visible at startup; `get` answers are exact
+/// (found/absent), and `flush` forces the memtable durable on demand
+/// (the crash-recovery CI smoke drives exactly this protocol).
+fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
+    use ocf::store::{FlushReason, StorageNode};
+    let dir = cfg.node.persist_dir.clone().unwrap_or_default();
+    let mut node = match StorageNode::recover(cfg.node.clone()) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("ocf serve: cannot open persist_dir '{dir}': {e}");
+            return 2;
+        }
+    };
+    eprintln!(
+        "ocf serve: node mode, persist_dir={dir} filter={} \
+         (line protocol: put K | get K | del K | flush | stats | quit)",
+        cfg.filter.describe(),
+    );
+    eprintln!(
+        "ocf serve: recovery: sstables={} filters_recovered={} filters_rebuilt={} \
+         filter_recovery_rejected={} live_keys={}",
+        node.sstable_count(),
+        node.stats.filters_recovered(),
+        node.stats.filters_rebuilt(),
+        node.stats.filter_recovery_rejected(),
+        node.live_keys(),
+    );
+    let engine = ocf::filter::kernel::engine_info();
+    eprintln!(
+        "ocf serve: probe engine kernel={} prefetch_depth={} (frozen filters probe \
+         through the same dispatch, heap- or mmap-backed)",
+        engine.kernel, engine.prefetch_depth,
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for line in stdin.lock().lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        let mut parts = line.split_whitespace();
+        let reply = match (parts.next(), parts.next()) {
+            (Some("put"), Some(k)) => match k.parse::<u64>() {
+                Ok(k) => match node.put(k) {
+                    Ok(()) => "ok".to_string(),
+                    Err(e) => format!("err {e}"),
+                },
+                Err(_) => "err bad-key".into(),
+            },
+            (Some("get"), Some(k)) => match k.parse::<u64>() {
+                // node answers are exact (filter + memtable + SSTables)
+                Ok(k) => if node.get(k) { "found" } else { "absent" }.to_string(),
+                Err(_) => "err bad-key".into(),
+            },
+            (Some("del"), Some(k)) => match k.parse::<u64>() {
+                Ok(k) => if node.delete(k) { "ok" } else { "rejected" }.to_string(),
+                Err(_) => "err bad-key".into(),
+            },
+            (Some("flush"), _) => {
+                if node.memtable_len() == 0 {
+                    "ok empty".to_string()
+                } else {
+                    node.flush(FlushReason::MemtableKeys);
+                    format!("ok sstables={}", node.sstable_count())
+                }
+            }
+            (Some("stats"), _) => format!(
+                "live_keys={} memtable={} sstables={} flushes={} compactions={} \
+                 filters_recovered={} filters_rebuilt={} filter_recovery_rejected={}",
+                node.live_keys(),
+                node.memtable_len(),
+                node.sstable_count(),
+                node.stats.flushes,
+                node.stats.compactions,
+                node.stats.filters_recovered(),
+                node.stats.filters_rebuilt(),
+                node.stats.filter_recovery_rejected(),
             ),
             (Some("quit"), _) => break,
             _ => "err unknown-command".into(),

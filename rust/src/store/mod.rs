@@ -13,18 +13,27 @@
 //! *memtable* is actually full. [`FlushPolicy`] captures both triggers
 //! so experiments can measure the difference (E6).
 //!
-//! The "disk" is simulated in-memory (this container has no durable
-//! store requirement; DESIGN.md §substitutions) — SSTables are
-//! immutable sorted runs with the same read amplification and filter
-//! behaviour a disk-backed implementation would show.
+//! Durability is opt-in per node: with [`NodeConfig::persist_dir`]
+//! unset, SSTables are in-memory sorted runs with the same read
+//! amplification and filter behaviour a disk-backed implementation
+//! would show (the pre-persistence behaviour, still the default for
+//! experiments). With it set, the [`frozen`] module persists every
+//! frozen generation — a checksummed run file (ground truth) plus a
+//! versioned, page-aligned filter file served back **zero-copy via
+//! mmap** on recovery — and [`StorageNode::recover`] reopens a node
+//! from disk, rebuilding only what fails validation. See
+//! `rust/src/store/README.md` for the on-disk format and the recovery
+//! state machine.
 
 pub mod compaction;
 pub mod flush;
+pub mod frozen;
 pub mod memtable;
 pub mod node;
 pub mod sstable;
 
 pub use flush::{FlushPolicy, FlushReason};
+pub use frozen::{Backing, FrozenStore, RecoverError, RunFile};
 pub use memtable::{Entry, Memtable};
 pub use node::{NodeConfig, NodeStats, StorageNode};
 pub use sstable::{FrozenFilter, SsTable};

@@ -37,11 +37,13 @@
 
 use super::compaction::{merge_tables, CompactionPolicy};
 use super::flush::{FlushPolicy, FlushReason};
+use super::frozen::FrozenStore;
 use super::memtable::{Entry, Memtable};
-use super::sstable::SsTable;
+use super::sstable::{FrozenFilter, SsTable};
 use crate::filter::{
     BatchedFilter, DynFilter, FilterBuilder, MembershipFilter, Mode, OcfConfig, ProbeSession,
 };
+use std::io;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 /// Node configuration.
@@ -57,6 +59,13 @@ pub struct NodeConfig {
     pub compaction: CompactionPolicy,
     /// Value-size proxy for puts (bytes accounted in the memtable).
     pub value_len: u32,
+    /// Directory of the persistent frozen-filter tier
+    /// ([`FrozenStore`]). `None` (the default) keeps the node fully
+    /// in-memory, exactly as before the tier existed. When set, every
+    /// flush/compaction persists its SSTable (run + frozen filter) and
+    /// [`StorageNode::recover`] can reopen the node from disk, serving
+    /// recovered filters straight off the file mapping.
+    pub persist_dir: Option<String>,
 }
 
 impl Default for NodeConfig {
@@ -67,6 +76,7 @@ impl Default for NodeConfig {
             flush: FlushPolicy::default(),
             compaction: CompactionPolicy::default(),
             value_len: 64,
+            persist_dir: None,
         }
     }
 }
@@ -106,6 +116,16 @@ pub struct NodeStats {
     pub flushes: u64,
     pub flushes_premature: u64,
     pub compactions: u64,
+    /// SSTable filters reopened from disk (validated, served in place —
+    /// possibly mmap-backed) during [`StorageNode::recover`].
+    filters_recovered: u64,
+    /// SSTable filters rebuilt from their run because the persisted
+    /// filter file was absent or rejected.
+    filters_rebuilt: u64,
+    /// Persisted filter files *present but rejected* at validation
+    /// (truncation, checksum mismatch, version skew) — a durability
+    /// event worth alerting on, unlike a merely-missing file.
+    filter_recovery_rejected: u64,
 }
 
 impl NodeStats {
@@ -127,6 +147,21 @@ impl NodeStats {
     pub fn sstable_probes(&self) -> u64 {
         self.sstable_probes.load(Relaxed)
     }
+
+    /// SSTable filters reopened from disk without a rebuild.
+    pub fn filters_recovered(&self) -> u64 {
+        self.filters_recovered
+    }
+
+    /// SSTable filters rebuilt from their run at recovery.
+    pub fn filters_rebuilt(&self) -> u64 {
+        self.filters_rebuilt
+    }
+
+    /// Persisted filter files rejected by validation at recovery.
+    pub fn filter_recovery_rejected(&self) -> u64 {
+        self.filter_recovery_rejected
+    }
 }
 
 impl Clone for NodeStats {
@@ -141,6 +176,9 @@ impl Clone for NodeStats {
             flushes: self.flushes,
             flushes_premature: self.flushes_premature,
             compactions: self.compactions,
+            filters_recovered: self.filters_recovered,
+            filters_rebuilt: self.filters_rebuilt,
+            filter_recovery_rejected: self.filter_recovery_rejected,
         }
     }
 }
@@ -154,6 +192,9 @@ pub struct StorageNode {
     sstables: Vec<SsTable>,
     /// Node-level live-set filter (any backend; built by name).
     filter: DynFilter,
+    /// The persistent frozen-filter tier, when
+    /// [`NodeConfig::persist_dir`] is set.
+    frozen_store: Option<FrozenStore>,
     next_generation: u64,
     pub stats: NodeStats,
 }
@@ -177,15 +218,141 @@ impl StorageNode {
     /// Build a node around an already-constructed filter (typed
     /// callers that want to keep a handle on the concrete type can
     /// box their own).
+    ///
+    /// # Panics
+    /// If [`NodeConfig::persist_dir`] is set but the directory cannot
+    /// be created/opened (use [`StorageNode::recover`] for a fallible
+    /// open that also reloads existing state).
     pub fn with_filter(cfg: NodeConfig, filter: DynFilter) -> Self {
+        let frozen_store = cfg.persist_dir.as_ref().map(|dir| {
+            FrozenStore::open(dir)
+                .unwrap_or_else(|e| panic!("persist_dir {dir:?}: {e}"))
+        });
         Self {
             memtable: Memtable::new(),
             sstables: Vec::new(),
             filter,
+            frozen_store,
             next_generation: 1,
             cfg,
             stats: NodeStats::default(),
         }
+    }
+
+    /// Reopen a node from its persistent tier instead of starting
+    /// empty: every generation in [`NodeConfig::persist_dir`] is
+    /// reloaded — its run decoded (ground truth) and its frozen filter
+    /// *recovered* from the persisted file when it validates (served in
+    /// place, mmap-backed where supported) or *rebuilt* from the run
+    /// when it is missing or rejected (checksum/version/truncation),
+    /// with the healed filter re-persisted. The node-level live-set
+    /// filter is always rebuilt from the recovered live keys (it is
+    /// derived state over data this tier does persist).
+    ///
+    /// Counters: `filters_recovered` / `filters_rebuilt` /
+    /// `filter_recovery_rejected` on [`NodeStats`] record what
+    /// happened; a run file that itself fails validation is skipped
+    /// with a warning (filters are derived from runs, so a lost run is
+    /// lost data — there is nothing to rebuild it from).
+    ///
+    /// # Panics
+    /// Like [`StorageNode::new`], if the filter builder fails
+    /// validation.
+    pub fn recover(cfg: NodeConfig) -> io::Result<Self> {
+        let Some(dir) = cfg.persist_dir.clone() else {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "StorageNode::recover requires NodeConfig::persist_dir",
+            ));
+        };
+        let store = FrozenStore::open(&dir)?;
+        let mut node = Self {
+            memtable: Memtable::new(),
+            sstables: Vec::new(),
+            filter: cfg
+                .filter
+                .build()
+                .unwrap_or_else(|e| panic!("NodeConfig::filter: {e}")),
+            frozen_store: None,
+            next_generation: 1,
+            cfg,
+            stats: NodeStats::default(),
+        };
+        // Pass 1: decode every generation's run (ground truth). A torn
+        // run is unrecoverable from this tier (the filter is derived
+        // from it, not vice versa): skip the generation rather than
+        // serving corrupt data.
+        let mut runs: Vec<(u64, super::frozen::RunFile)> = Vec::new();
+        for gen in store.generations()? {
+            match store.load_run(gen) {
+                Ok(run) => runs.push((gen, run)),
+                Err(e) => {
+                    eprintln!("ocf: persist: skipping generation {gen:#x}: run file invalid: {e}");
+                }
+            }
+        }
+        // A full-snapshot generation (compaction output) supersedes
+        // everything older; generations below the newest one are
+        // leftovers of an interrupted swap. Drop them — recovering them
+        // could resurrect keys whose tombstones the merge dropped.
+        let cutoff = runs
+            .iter()
+            .filter(|(_, r)| r.is_full_snapshot())
+            .map(|&(gen, _)| gen)
+            .max();
+        for (gen, run) in runs {
+            if let Some(cutoff) = cutoff {
+                if gen < cutoff {
+                    if let Err(e) = store.remove(gen) {
+                        eprintln!("ocf: persist: generation {gen:#x}: stale-input cleanup failed: {e}");
+                    }
+                    continue;
+                }
+            }
+            let run = run.records;
+            let filter = match store.load_filter(gen) {
+                Ok(table) => {
+                    node.stats.filters_recovered += 1;
+                    FrozenFilter::from_table(table)
+                }
+                Err(e) => {
+                    if e.is_rejection() {
+                        node.stats.filter_recovery_rejected += 1;
+                        eprintln!(
+                            "ocf: persist: generation {gen:#x}: filter file rejected ({e}); rebuilding from run"
+                        );
+                    }
+                    node.stats.filters_rebuilt += 1;
+                    let keys: Vec<u64> = run.iter().map(|&(k, _)| k).collect();
+                    let rebuilt = FrozenFilter::build(
+                        &keys,
+                        node.cfg.filter.ocf.fp_bits,
+                        node.cfg.filter.ocf.seed ^ gen,
+                    );
+                    // Heal the on-disk artifact so the next restart
+                    // recovers instead of rebuilding again.
+                    if let Err(e) = store.persist_filter(gen, &rebuilt) {
+                        eprintln!("ocf: persist: generation {gen:#x}: re-persist failed: {e}");
+                    }
+                    rebuilt
+                }
+            };
+            node.next_generation = node.next_generation.max(gen + 1);
+            node.sstables.push(SsTable::from_recovered(run, filter, gen));
+        }
+        // generations() is ascending, but make the newest-shadows-oldest
+        // invariant explicit rather than inherited.
+        node.sstables.sort_by_key(|t| t.generation);
+        node.frozen_store = Some(store);
+        if !node.sstables.is_empty() {
+            node.rebuild_node_filter();
+        }
+        Ok(node)
+    }
+
+    /// The persistent tier, when configured.
+    pub fn frozen_store(&self) -> Option<&FrozenStore> {
+        self.frozen_store.as_ref()
     }
 
     pub fn config(&self) -> &NodeConfig {
@@ -360,12 +527,18 @@ impl StorageNode {
         let gen = self.next_generation;
         self.next_generation += 1;
         let seed = self.cfg.filter.ocf.seed ^ gen;
-        self.sstables.push(SsTable::from_sorted_run(
-            run,
-            gen,
-            self.cfg.filter.ocf.fp_bits,
-            seed,
-        ));
+        let table = SsTable::from_sorted_run(run, gen, self.cfg.filter.ocf.fp_bits, seed);
+        // Durability hook: the freeze is the moment data leaves the
+        // (volatile) memtable, so persist the SSTable before serving
+        // from it. Persistence failure degrades to the in-memory tier
+        // (loud, not fatal): the node keeps answering correctly from
+        // RAM and only restart-recovery of this generation is lost.
+        if let Some(store) = &self.frozen_store {
+            if let Err(e) = store.persist(&table) {
+                eprintln!("ocf: persist: generation {gen:#x}: flush persist failed: {e}");
+            }
+        }
+        self.sstables.push(table);
         // Fixed-filter nodes rebuild their node filter from the live set
         // after a pressure flush ("complete rebuild of the in-memory
         // data structures" — the cost the paper wants to avoid).
@@ -445,12 +618,31 @@ impl StorageNode {
         let gen = self.next_generation;
         self.next_generation += 1;
         let seed = self.cfg.filter.ocf.seed ^ gen;
-        self.sstables = vec![SsTable::from_sorted_run(
-            merged,
-            gen,
-            self.cfg.filter.ocf.fp_bits,
-            seed,
-        )];
+        let table = SsTable::from_sorted_run(merged, gen, self.cfg.filter.ocf.fp_bits, seed);
+        // Atomic swap protocol: publish the merged generation first,
+        // remove the inputs after. A crash anywhere in between leaves
+        // old + new generations side by side, which recovers correctly
+        // — the merged table is the newest generation, so it shadows
+        // every record of its inputs (including dropped tombstones:
+        // a tombstone is only dropped once no shadowed Put survives
+        // below it, and after the swap nothing is below the merged
+        // table). Removal is idempotent, so a re-run compaction can
+        // finish the cleanup.
+        if let Some(store) = &self.frozen_store {
+            if let Err(e) = store.persist_full(&table) {
+                eprintln!("ocf: persist: generation {gen:#x}: compaction persist failed: {e}");
+            } else {
+                for old in &self.sstables {
+                    if let Err(e) = store.remove(old.generation) {
+                        eprintln!(
+                            "ocf: persist: generation {:#x}: cleanup failed: {e}",
+                            old.generation
+                        );
+                    }
+                }
+            }
+        }
+        self.sstables = vec![table];
     }
 
     /// Filter memory (node-level) + per-SSTable frozen filters.
@@ -744,6 +936,222 @@ mod tests {
             assert!(!n.delete(5_000_000), "{name}: absent delete accepted");
             assert_eq!(n.live_keys(), 999, "{name}");
         }
+    }
+
+    /// Unique scratch dir per test (no tempfile crate offline).
+    fn scratch(tag: &str) -> String {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "ocf-node-{tag}-{}-{n}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.to_str().unwrap().to_string()
+    }
+
+    fn persistent_cfg(dir: &str) -> NodeConfig {
+        NodeConfig {
+            flush: FlushPolicy::small(1000),
+            persist_dir: Some(dir.to_string()),
+            ..NodeConfig::default()
+        }
+    }
+
+    #[test]
+    fn recover_round_trips_membership() {
+        let dir = scratch("roundtrip");
+        let mut n = StorageNode::new(persistent_cfg(&dir));
+        for k in 0..5000u64 {
+            n.put(k).unwrap();
+        }
+        for k in 0..100u64 {
+            n.delete(k);
+        }
+        n.flush(FlushReason::MemtableKeys); // everything durable
+        let expect: Vec<(u64, bool)> = (0..6000u64).map(|k| (k, n.get(k))).collect();
+        let tables = n.sstable_count();
+        drop(n);
+
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert_eq!(r.sstable_count(), tables);
+        assert_eq!(
+            r.stats.filters_recovered(),
+            tables as u64,
+            "every persisted filter must recover without a rebuild"
+        );
+        assert_eq!(r.stats.filters_rebuilt(), 0);
+        assert_eq!(r.stats.filter_recovery_rejected(), 0);
+        if cfg!(all(unix, target_endian = "little")) {
+            assert!(
+                r.sstables.iter().all(|t| t.filter().is_mapped()),
+                "recovered filters serve off the file mapping"
+            );
+        }
+        for (k, want) in expect {
+            assert_eq!(r.get(k), want, "key {k} changed across restart");
+        }
+
+        // the recovered node keeps writing: generations don't collide
+        let mut r = r;
+        for k in 100_000..101_000u64 {
+            r.put(k).unwrap();
+        }
+        r.flush(FlushReason::MemtableKeys);
+        assert!(r.get(100_500));
+        let r2 = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert!(r2.get(100_500), "post-recovery flush must be durable too");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unflushed_memtable_is_not_durable() {
+        // this tier persists at freeze time (no WAL): only flushed
+        // data survives a restart, and recovery must not invent keys
+        let dir = scratch("memtable");
+        let mut n = StorageNode::new(persistent_cfg(&dir));
+        for k in 0..200u64 {
+            n.put(k).unwrap();
+        }
+        n.flush(FlushReason::MemtableKeys);
+        for k in 200..300u64 {
+            n.put(k).unwrap(); // stays in the memtable
+        }
+        drop(n);
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        for k in 0..200u64 {
+            assert!(r.get(k), "{k}");
+        }
+        for k in 200..300u64 {
+            assert!(!r.get(k), "{k} was never frozen, must not resurrect");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_filter_file_falls_back_to_rebuild_and_heals() {
+        let dir = scratch("corrupt");
+        let mut n = StorageNode::new(persistent_cfg(&dir));
+        for k in 0..3000u64 {
+            n.put(k).unwrap();
+        }
+        n.flush(FlushReason::MemtableKeys);
+        let gen = n.sstables[0].generation;
+        let path = n.frozen_store().unwrap().filter_path(gen);
+        drop(n);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert!(r.stats.filters_rebuilt() >= 1);
+        assert!(r.stats.filter_recovery_rejected() >= 1);
+        for k in (0..3000u64).step_by(17) {
+            assert!(r.get(k), "{k}");
+        }
+        drop(r);
+
+        // the rebuild re-persisted a valid filter: next restart recovers
+        let r2 = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert_eq!(r2.stats.filter_recovery_rejected(), 0, "healed on disk");
+        assert!(r2.stats.filters_recovered() >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_filter_file_rebuilds_without_rejection() {
+        let dir = scratch("missingfltr");
+        let mut n = StorageNode::new(persistent_cfg(&dir));
+        for k in 0..500u64 {
+            n.put(k).unwrap();
+        }
+        n.flush(FlushReason::MemtableKeys);
+        let gen = n.sstables[0].generation;
+        let path = n.frozen_store().unwrap().filter_path(gen);
+        drop(n);
+        std::fs::remove_file(&path).unwrap(); // the crash-between-run-and-filter window
+
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert_eq!(r.stats.filters_rebuilt(), 1);
+        assert_eq!(
+            r.stats.filter_recovery_rejected(),
+            0,
+            "absent is the normal crash window, not a rejection"
+        );
+        for k in (0..500u64).step_by(7) {
+            assert!(r.get(k), "{k}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interrupted_compaction_swap_does_not_resurrect_dropped_keys() {
+        use super::super::frozen::FrozenStore;
+        let dir = scratch("swapcrash");
+        let store = FrozenStore::open(&dir).unwrap();
+        // Crash state: compaction persisted its merged output (gen 2,
+        // full snapshot, tombstone for key 1 dropped) but died before
+        // cleaning up its input (gen 1, which still holds Put 1).
+        let old = SsTable::from_sorted_run(
+            vec![(1, Entry::Put { value_len: 8 }), (2, Entry::Put { value_len: 8 })],
+            1,
+            16,
+            7,
+        );
+        let merged = SsTable::from_sorted_run(vec![(2, Entry::Put { value_len: 8 })], 2, 16, 5);
+        store.persist(&old).unwrap();
+        store.persist_full(&merged).unwrap();
+
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert!(!r.get(1), "dropped tombstone's key must stay dead");
+        assert!(r.get(2));
+        assert_eq!(r.sstable_count(), 1, "stale input discarded");
+        assert_eq!(
+            store.generations().unwrap(),
+            vec![2],
+            "recovery finished the interrupted cleanup"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_swaps_persisted_generations() {
+        let dir = scratch("compact");
+        let mut n = StorageNode::new(NodeConfig {
+            flush: FlushPolicy::small(100),
+            compaction: CompactionPolicy {
+                max_tables: 3,
+                drop_tombstones: true,
+            },
+            persist_dir: Some(dir.clone()),
+            ..NodeConfig::default()
+        });
+        for k in 0..2000u64 {
+            n.put(k).unwrap();
+        }
+        assert!(n.stats.compactions > 0);
+        let on_disk = n.frozen_store().unwrap().generations().unwrap();
+        let in_mem: Vec<u64> = n.sstables.iter().map(|t| t.generation).collect();
+        assert_eq!(on_disk, in_mem, "disk mirrors the live table set");
+        drop(n);
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        for k in (0..2000u64).step_by(37) {
+            assert!(r.get(k), "{k}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_on_empty_or_missing_dir_starts_clean() {
+        let dir = scratch("fresh");
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert_eq!(r.sstable_count(), 0);
+        assert_eq!(r.stats.filters_recovered(), 0);
+        assert!(!r.get(1));
+        // and without persist_dir, recover is a config error
+        assert!(StorageNode::recover(NodeConfig::default()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,23 +1,29 @@
 //! Immutable sorted runs (SSTables) with frozen membership filters.
 //!
-//! An [`SsTable`] is created by a memtable flush or a compaction. Its
-//! [`FrozenFilter`] is the serialized form of a cuckoo table at flush
-//! time — the exact `u32[nbuckets * SLOTS]` layout the Pallas/XLA probe
-//! kernel consumes, so batched read paths can probe SSTable filters on
-//! the accelerator (see `runtime::executor`).
+//! An [`SsTable`] is created by a memtable flush, a compaction, or —
+//! since the persistent tier landed — recovery from a
+//! [`FrozenStore`](super::frozen::FrozenStore) directory. Its
+//! [`FrozenFilter`] wraps a [`FrozenTable`]: the exact
+//! `u32[nbuckets * SLOTS]` layout the probe kernels and the Pallas/XLA
+//! `hash_probe` artifact consume, backed either by an owned heap
+//! buffer (freshly frozen) or by an mmap of the persisted filter file
+//! (recovered) — probes are served identically off both through the
+//! same [`BatchedFilter`] engine.
 
 use super::memtable::Entry;
 use crate::filter::bucket::SLOTS;
 use crate::filter::cuckoo::{CuckooFilter, CuckooParams};
 use crate::filter::fingerprint::Hasher;
-use crate::filter::MembershipFilter;
+use crate::filter::{BatchedFilter, FrozenTable, MembershipFilter, ProbeSession};
 
 /// An immutable, query-only cuckoo-table snapshot.
+///
+/// A thin store-facing wrapper over [`FrozenTable`] that pins the
+/// build-time sizing policy (2× keys, pow2 buckets) and keeps the raw
+/// `table() -> &[u32]` view the XLA probe path consumes.
 #[derive(Debug, Clone)]
 pub struct FrozenFilter {
-    table: Vec<u32>,
-    nbuckets: usize,
-    hasher: Hasher,
+    frozen: FrozenTable,
 }
 
 impl FrozenFilter {
@@ -53,39 +59,78 @@ impl FrozenFilter {
             }
         }
         Self {
-            table: f.to_frozen(),
-            nbuckets: f.nbuckets(),
-            hasher: f.hasher(),
+            frozen: FrozenTable::snapshot(&f),
         }
     }
 
-    /// Membership probe (pure rust path; bit-identical to the XLA
+    /// Wrap an already-materialized frozen table (the recovery path:
+    /// `FrozenStore::load_filter` hands back a heap- or mmap-backed
+    /// [`FrozenTable`] decoded from disk).
+    pub fn from_table(frozen: FrozenTable) -> Self {
+        Self { frozen }
+    }
+
+    /// Membership probe (kernel-dispatched; bit-identical to the XLA
     /// `probe` artifact over the same `table()` buffer).
     #[inline]
     pub fn contains(&self, key: u64) -> bool {
-        let t = self.hasher.hash_key(key);
-        let i1 = Hasher::primary_index(t, self.nbuckets);
-        let i2 = Hasher::alt_index(i1, t.fp, self.nbuckets);
-        let b1 = &self.table[i1 * SLOTS..i1 * SLOTS + SLOTS];
-        let b2 = &self.table[i2 * SLOTS..i2 * SLOTS + SLOTS];
-        b1.contains(&t.fp) || b2.contains(&t.fp)
+        MembershipFilter::contains(&self.frozen, key)
     }
 
-    /// The raw frozen table (for the XLA probe path).
+    /// Batched membership through the prefetch-pipelined probe engine —
+    /// mmap-backed and heap-backed tables take the identical path.
+    pub fn contains_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<bool>,
+    ) {
+        self.frozen.contains_batch_into(keys, session, out)
+    }
+
+    /// The raw frozen table words (for the XLA probe path and the
+    /// on-disk encoder).
     pub fn table(&self) -> &[u32] {
-        &self.table
+        self.frozen.words()
+    }
+
+    /// The underlying probe-ready table.
+    pub fn frozen(&self) -> &FrozenTable {
+        &self.frozen
     }
 
     pub fn nbuckets(&self) -> usize {
-        self.nbuckets
+        self.frozen.nbuckets()
     }
 
     pub fn hasher(&self) -> Hasher {
-        self.hasher
+        self.frozen.hasher()
     }
 
+    /// Resident fingerprints (what the on-disk header records).
+    pub fn len(&self) -> usize {
+        MembershipFilter::len(&self.frozen)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether the words are served off a file mapping (recovered
+    /// filters on unix/LE) instead of an owned heap buffer.
+    pub fn is_mapped(&self) -> bool {
+        self.frozen.is_mapped()
+    }
+
+    /// `"mmap"` or `"heap"` — for banners and stats lines.
+    pub fn backing(&self) -> &'static str {
+        self.frozen.backing()
+    }
+
+    /// Heap bytes attributable to the filter (0 when mmap-backed: the
+    /// words live in the page cache, not the heap).
     pub fn memory_bytes(&self) -> usize {
-        self.table.len() * 4
+        MembershipFilter::memory_bytes(&self.frozen)
     }
 }
 
@@ -110,6 +155,19 @@ impl SsTable {
         // entry instead of resurrecting older versions below.
         let keys: Vec<u64> = run.iter().map(|&(k, _)| k).collect();
         let filter = FrozenFilter::build(&keys, fp_bits, seed);
+        Self {
+            run,
+            filter,
+            generation,
+        }
+    }
+
+    /// Reassemble from persisted artifacts: the run decoded from a
+    /// `.run` file plus a filter loaded (possibly mmap-backed) from the
+    /// matching `.fltr` file. The caller is responsible for having
+    /// validated both (`FrozenStore` does).
+    pub fn from_recovered(run: Vec<(u64, Entry)>, filter: FrozenFilter, generation: u64) -> Self {
+        debug_assert!(run.windows(2).all(|w| w[0].0 < w[1].0), "run must be sorted+deduped");
         Self {
             run,
             filter,
@@ -146,12 +204,19 @@ impl SsTable {
         &self.filter
     }
 
+    /// The full sorted run (what the persistence layer encodes as the
+    /// generation's ground truth).
+    pub fn run(&self) -> &[(u64, Entry)] {
+        &self.run
+    }
+
     /// Iterate records in key order.
     pub fn iter(&self) -> impl Iterator<Item = &(u64, Entry)> {
         self.run.iter()
     }
 
-    /// Simulated on-disk size.
+    /// Simulated on-disk size of the run payload (the `.run` file adds
+    /// a 40-byte header on top).
     pub fn data_bytes(&self) -> usize {
         self.run.len() * (8 + 5)
     }
@@ -224,6 +289,37 @@ mod tests {
         assert_eq!(f.table().len(), f.nbuckets() * SLOTS);
         let occupied = f.table().iter().filter(|&&x| x != 0).count();
         assert_eq!(occupied, 100);
+        assert_eq!(f.len(), 100, "snapshot must carry the resident count");
+        assert!(!f.is_mapped(), "freshly built filters are heap-backed");
+        assert_eq!(f.backing(), "heap");
+    }
+
+    #[test]
+    fn batched_probe_matches_scalar() {
+        let keys: Vec<u64> = (0..4000).map(|i| i * 7 + 1).collect();
+        let f = FrozenFilter::build(&keys, 13, 11);
+        let probes: Vec<u64> = (0..30_000u64).collect();
+        let mut session = ProbeSession::new();
+        let mut batched = Vec::new();
+        f.contains_batch_into(&probes, &mut session, &mut batched);
+        let scalar: Vec<bool> = probes.iter().map(|&k| f.contains(k)).collect();
+        assert_eq!(batched, scalar);
+    }
+
+    #[test]
+    fn from_recovered_round_trips() {
+        let keys: Vec<u64> = (0..3000).collect();
+        let original = table_of(&keys);
+        let rebuilt = SsTable::from_recovered(
+            original.run().to_vec(),
+            FrozenFilter::from_table(original.filter().frozen().clone()),
+            original.generation,
+        );
+        assert_eq!(rebuilt.len(), original.len());
+        for &k in &keys {
+            assert_eq!(rebuilt.get(k), original.get(k));
+            assert_eq!(rebuilt.might_contain(k), original.might_contain(k));
+        }
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Minimal read-only file memory-mapping.
+//!
+//! The crate is dependency-free, so on unix targets `mmap`/`munmap` are
+//! declared directly against the libc that `std` already links (the
+//! same trick `std` itself uses for its platform layer); no new crates,
+//! no build scripts. Non-unix targets compile the same API but report
+//! mapping as unsupported ([`MmapRegion::supported`] = false), and
+//! callers fall back to a heap read — the frozen-filter store does
+//! exactly that, so persistence works everywhere and zero-copy serving
+//! works where `mmap` exists.
+//!
+//! Only the read-only private mapping the frozen-filter tier needs is
+//! implemented: map a whole file, hand out `&[u8]`, unmap on drop. The
+//! region is `Send + Sync` (the kernel mapping is immutable and the
+//! file is never written through it).
+
+use std::fs::File;
+use std::io;
+
+#[cfg(unix)]
+mod sys {
+    //! Raw bindings to the 3 libc symbols we need. Constants cover the
+    //! unix platforms this crate targets (linux/macos/freebsd share
+    //! `PROT_READ = 1` and `MAP_PRIVATE = 2`).
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        pub fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+}
+
+/// A read-only memory mapping of an entire file.
+pub struct MmapRegion {
+    ptr: *const u8,
+    len: usize,
+}
+
+// The mapping is immutable (PROT_READ, MAP_PRIVATE) and owned: sharing
+// the region across threads is as safe as sharing a `&[u8]`.
+unsafe impl Send for MmapRegion {}
+unsafe impl Sync for MmapRegion {}
+
+impl std::fmt::Debug for MmapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapRegion").field("len", &self.len).finish()
+    }
+}
+
+impl MmapRegion {
+    /// Does this target support file mapping? When false,
+    /// [`MmapRegion::map_file`] always errors and callers should use
+    /// their heap-read fallback.
+    pub const fn supported() -> bool {
+        cfg!(unix)
+    }
+
+    /// Map the first `len` bytes of `file` read-only. `len` must be
+    /// > 0 and ≤ the file's length (mapping past EOF would fault on
+    /// first touch rather than fail cleanly, so it is rejected here).
+    #[cfg(unix)]
+    pub fn map_file(file: &File, len: usize) -> io::Result<MmapRegion> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "cannot map an empty range",
+            ));
+        }
+        let file_len = file.metadata()?.len();
+        if (len as u64) > file_len {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("map of {len} bytes exceeds file length {file_len}"),
+            ));
+        }
+        // Offset 0 is page-aligned on every page size, so the returned
+        // base is page-aligned and interior offsets keep their natural
+        // alignment (the frozen format places its u32 payload at a
+        // 4096-byte interior offset).
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(MmapRegion {
+            ptr: ptr as *const u8,
+            len,
+        })
+    }
+
+    #[cfg(not(unix))]
+    pub fn map_file(_file: &File, _len: usize) -> io::Result<MmapRegion> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "mmap is not available on this target; use the heap fallback",
+        ))
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn as_bytes(&self) -> &[u8] {
+        // Safe: the mapping is valid for `len` bytes until drop, and
+        // never written through (PROT_READ).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Mapped length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            // munmap accepts any length; the kernel rounds up to page
+            // granularity. Failure here is unrecoverable and harmless
+            // to ignore (the address range simply stays reserved).
+            let _ = sys::munmap(self.ptr as *mut core::ffi::c_void, self.len);
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_file(tag: &str, bytes: &[u8]) -> (std::path::PathBuf, File) {
+        let path = std::env::temp_dir().join(format!(
+            "ocf-mmap-test-{tag}-{}",
+            std::process::id()
+        ));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(bytes).unwrap();
+        f.sync_all().unwrap();
+        (path.clone(), File::open(&path).unwrap())
+    }
+
+    #[test]
+    fn maps_and_reads_file_contents() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let (path, f) = tmp_file("roundtrip", &data);
+        let m = MmapRegion::map_file(&f, data.len()).unwrap();
+        assert_eq!(m.as_bytes(), &data[..]);
+        assert_eq!(m.len(), data.len());
+        drop(m);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn partial_map_sees_prefix() {
+        let data = vec![7u8; 8192];
+        let (path, f) = tmp_file("prefix", &data);
+        let m = MmapRegion::map_file(&f, 100).unwrap();
+        assert_eq!(m.as_bytes(), &data[..100]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn zero_and_oversized_maps_rejected() {
+        let (path, f) = tmp_file("bounds", &[1, 2, 3]);
+        assert!(MmapRegion::map_file(&f, 0).is_err());
+        assert!(MmapRegion::map_file(&f, 4).is_err(), "past EOF must fail");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn region_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<MmapRegion>();
+        assert!(MmapRegion::supported());
+    }
+}

@@ -1,8 +1,24 @@
 //! Small deterministic utilities shared across the crate.
 
+pub mod mmap;
 pub mod rng;
 
+pub use mmap::MmapRegion;
 pub use rng::{SplitMix64, Xoshiro256pp};
+
+/// FNV-1a 64-bit checksum — the integrity check of the frozen-filter
+/// on-disk format (`store::frozen`). Not cryptographic; it guards
+/// against torn writes and bit rot, exactly like the per-block
+/// checksums of LSM stores. Kept in `util` so format tooling and tests
+/// share one definition.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
 
 /// Round `n` up to the next power of two (min 1).
 #[inline]
@@ -46,6 +62,16 @@ pub fn fmt_rate(ops_per_sec: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // offset basis for the empty input, published FNV-1a vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // sensitivity: one flipped bit changes the sum
+        assert_ne!(fnv1a64(&[0, 1, 2, 3]), fnv1a64(&[0, 1, 2, 2]));
+    }
 
     #[test]
     fn next_pow2_basics() {

@@ -39,6 +39,13 @@
 //!      tables across fp widths 4..=32 and non-pow2 sizes, and whole
 //!      filters built per kernel stay bit-identical (`to_frozen`)
 //!      through arbitrary insert/contains/delete batches.
+//!  P15 the persistent frozen tier is probe-transparent: a frozen
+//!      snapshot written through the v1 on-disk format and reopened
+//!      (heap-decoded, and mmap-backed where supported) answers every
+//!      probe identically to the in-memory table it came from — for
+//!      both bucket-table backends, fp widths 4..=32 and
+//!      non-power-of-two sizes — and the reopened words are
+//!      bit-identical to the written ones.
 
 use ocf::cluster::{Cluster, ReplicationConfig};
 use ocf::filter::{
@@ -1069,4 +1076,110 @@ fn p13_pooled_report_matches_sharded_and_scalar() {
                 .all(|k| inner.contains_exact(k) == scalar.contains_exact(k))
             && live.iter().all(|&k| inner.contains_exact(k))
     });
+}
+
+/// A P15 case: a filter population plus probe set over a geometry
+/// drawn from non-pow2 sizes and the full fingerprint-width range.
+#[derive(Debug, Clone)]
+struct PersistCase {
+    capacity: usize,
+    fp_bits: u32,
+    keys: Vec<u64>,
+    probes: Vec<u64>,
+}
+
+fn gen_persist_case(g: &mut Gen) -> PersistCase {
+    let capacity = *g.choose(&[192usize, 500, 1000, 1024, 3000, 4100]);
+    let fp_bits = g.usize_in(4, 32) as u32;
+    // ≤ half full so inserts are reliable across widths
+    let nkeys = g.usize_in(1, capacity / 2);
+    PersistCase {
+        capacity,
+        fp_bits,
+        keys: g.vec(nkeys, |g| g.u64_below(1 << 20)),
+        probes: g.vec(g.usize_in(1, 1500), |g| g.u64_below(1 << 21)),
+    }
+}
+
+/// P15 check for one bucket-table backend: build → snapshot → persist
+/// (v1 format) → reopen per backing → every probe answer and every
+/// table word identical to the source filter.
+fn p15_check<T: BucketTable>(dir: &std::path::Path, case: &PersistCase) -> bool {
+    use ocf::filter::FrozenTable;
+    use ocf::store::frozen::{read_filter_file, write_filter_file, Backing};
+    let mut f = CuckooFilter::<T>::new(CuckooParams {
+        capacity: case.capacity,
+        fp_bits: case.fp_bits,
+        victim_policy: VictimPolicy::Rollback,
+        ..CuckooParams::default()
+    });
+    for &k in &case.keys {
+        let _ = f.insert(k); // rejected inserts are fine: the snapshot
+                             // must match whatever state resulted
+    }
+    let snapshot = FrozenTable::snapshot(&f);
+    let path = dir.join(format!("p15-{}.fltr", case.capacity));
+    let hasher = snapshot.hasher();
+    write_filter_file(
+        &path,
+        snapshot.words(),
+        snapshot.nbuckets(),
+        case.fp_bits,
+        hasher.seed,
+        MembershipFilter::len(&snapshot),
+    )
+    .expect("write filter file");
+
+    let mut backings = vec![Backing::Heap];
+    if cfg!(all(unix, target_endian = "little")) {
+        backings.push(Backing::Mmap);
+        backings.push(Backing::Auto);
+    }
+    for backing in backings {
+        let reopened = match read_filter_file(&path, backing) {
+            Ok(t) => t,
+            Err(_) => return false,
+        };
+        if reopened.words() != snapshot.words() {
+            return false; // bit-identical words required
+        }
+        if reopened.nbuckets() != snapshot.nbuckets() {
+            return false;
+        }
+        // scalar probes vs the live filter, batched vs batched
+        if case
+            .probes
+            .iter()
+            .any(|&k| MembershipFilter::contains(&reopened, k) != f.contains(k))
+        {
+            return false;
+        }
+        if reopened.contains_batch(&case.probes) != snapshot.contains_batch(&case.probes) {
+            return false;
+        }
+        // no false negatives across the persistence boundary
+        if case
+            .keys
+            .iter()
+            .filter(|&&k| f.contains(k))
+            .any(|&k| !MembershipFilter::contains(&reopened, k))
+        {
+            return false;
+        }
+    }
+    true
+}
+
+#[test]
+fn p15_persisted_frozen_tier_is_probe_transparent() {
+    let dir = std::env::temp_dir().join(format!("ocf-p15-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    prop_check("persist-roundtrip-flat", 20, gen_persist_case, |case| {
+        p15_check::<FlatTable>(&dir, case)
+    });
+    prop_check("persist-roundtrip-packed", 20, gen_persist_case, |case| {
+        p15_check::<PackedTable>(&dir, case)
+    });
+    let _ = std::fs::remove_dir_all(&dir);
 }

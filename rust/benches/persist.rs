@@ -1,9 +1,10 @@
 //! persist — the persistent-tier perf baseline.
 //!
 //! Runs the E13 arms (restart recover-vs-rebuild, heap-vs-mmap batched
-//! probe throughput on the same frozen generation) and emits a
-//! `BENCH_persist.json` trajectory point so future PRs can diff
-//! restart cost and mmap-serving parity against this one. See
+//! probe throughput on the same frozen generation, and WAL ingest +
+//! replay cost per fsync policy) and emits a `BENCH_persist.json`
+//! trajectory point so future PRs can diff restart cost, mmap-serving
+//! parity, and the WAL's write-path price against this one. See
 //! `rust/src/store/README.md` for how to read it.
 //!
 //! Env knobs:
@@ -52,6 +53,26 @@ fn json_probe_arms(o: &PersistOutcome) -> String {
                 p.secs,
                 p.mops(),
                 p.hits
+            )
+        })
+        .collect();
+    rows.join(",\n")
+}
+
+fn json_wal_arms(o: &PersistOutcome) -> String {
+    let rows: Vec<String> = o
+        .wal_arms
+        .iter()
+        .map(|w| {
+            format!(
+                "    {{\"policy\": \"{}\", \"puts\": {}, \"ingest_secs\": {:.6}, \
+                 \"ingest_kops\": {:.1}, \"recover_secs\": {:.6}, \"wal_replayed\": {}}}",
+                w.policy,
+                w.puts,
+                w.ingest_secs,
+                w.ingest_kops(),
+                w.recover_secs,
+                w.wal_replayed
             )
         })
         .collect();
@@ -159,11 +180,13 @@ fn main() {
          \"n_keys\": {n_keys},\n  \"n_probes\": {n_probes},\n  \
          \"batch\": {BATCH},\n  \"kernel\": \"{}\",\n  \"mmap_available\": {mmap_present},\n  \
          \"restarts\": [\n{}\n  ],\n  \"probe_arms\": [\n{}\n  ],\n  \
+         \"wal_arms\": [\n{}\n  ],\n  \
          \"restart_speedup\": {restart_speedup:.3},\n  \
          \"mmap_vs_heap\": {{\"neg\": {:.3}, \"pos\": {:.3}}}\n}}\n",
         info.kernel,
         json_restarts(&outcome),
         json_probe_arms(&outcome),
+        json_wal_arms(&outcome),
         ratio(&outcome, "mmap", "neg"),
         ratio(&outcome, "mmap", "pos"),
     );
@@ -186,6 +209,12 @@ fn main() {
         "\"arm\": \"recover\"",
         "\"arm\": \"rebuild\"",
         "\"backing\": \"heap\"",
+        "\"wal_arms\"",
+        "\"policy\": \"off\"",
+        "\"policy\": \"always\"",
+        "\"policy\": \"every_64\"",
+        "\"policy\": \"os\"",
+        "\"wal_replayed\"",
     ] {
         assert!(back.contains(field), "BENCH_persist.json missing {field}");
     }

@@ -19,7 +19,7 @@ pub use parser::{ConfigError, ConfigTree, Value};
 
 use crate::filter::{FilterBuilder, Mode};
 use crate::pipeline::PoolConfig;
-use crate::store::{FlushPolicy, NodeConfig};
+use crate::store::{FlushPolicy, FsyncPolicy, NodeConfig};
 
 /// Typed application config assembled from file + overrides.
 #[derive(Debug, Clone)]
@@ -147,6 +147,32 @@ impl OcfFileConfig {
                 ));
             }
             cfg.node.persist_dir = Some(v);
+        }
+        if let Some(v) = tree.get_bool("store", "wal")? {
+            cfg.node.wal.enabled = v;
+        }
+        let fsync_every = match tree.get_int("store", "fsync_every")? {
+            Some(v) => {
+                if v < 1 {
+                    return Err(ConfigError::Invalid(format!(
+                        "store.fsync_every must be >= 1, got {v}"
+                    )));
+                }
+                v as u32
+            }
+            None => 32,
+        };
+        if let Some(v) = tree.get_str("store", "fsync")? {
+            cfg.node.wal.fsync = match v.as_str() {
+                "always" => FsyncPolicy::Always,
+                "every_n" => FsyncPolicy::EveryN(fsync_every),
+                "os" => FsyncPolicy::Os,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "store.fsync must be always|every_n|os, got '{other}'"
+                    )))
+                }
+            };
         }
 
         if let Some(v) = tree.get_int("cluster", "nodes")? {
@@ -281,6 +307,40 @@ batch_size = 4096
         let cfg =
             OcfFileConfig::load("", &["store.persist_dir=/tmp/ocf-x".into()]).unwrap();
         assert_eq!(cfg.node.persist_dir.as_deref(), Some("/tmp/ocf-x"));
+    }
+
+    #[test]
+    fn wal_knobs_parse_and_validate() {
+        let cfg = OcfFileConfig::load("", &[]).unwrap();
+        assert!(cfg.node.wal.enabled, "WAL defaults on");
+        assert_eq!(cfg.node.wal.fsync, FsyncPolicy::Always, "strictest default");
+
+        let text = "[store]\nwal = false\n";
+        let cfg = OcfFileConfig::load(text, &[]).unwrap();
+        assert!(!cfg.node.wal.enabled);
+
+        let text = "[store]\nfsync = \"every_n\"\nfsync_every = 128\n";
+        let cfg = OcfFileConfig::load(text, &[]).unwrap();
+        assert_eq!(cfg.node.wal.fsync, FsyncPolicy::EveryN(128));
+
+        // every_n without fsync_every takes the documented default
+        let cfg = OcfFileConfig::load("[store]\nfsync = \"every_n\"\n", &[]).unwrap();
+        assert_eq!(cfg.node.wal.fsync, FsyncPolicy::EveryN(32));
+
+        let cfg = OcfFileConfig::load("[store]\nfsync = \"os\"\n", &[]).unwrap();
+        assert_eq!(cfg.node.wal.fsync, FsyncPolicy::Os);
+
+        // --set overrides hit the same keys
+        let cfg = OcfFileConfig::load("", &["store.fsync=os".into(), "store.wal=false".into()])
+            .unwrap();
+        assert_eq!(cfg.node.wal.fsync, FsyncPolicy::Os);
+        assert!(!cfg.node.wal.enabled);
+
+        assert!(OcfFileConfig::load("[store]\nfsync = \"warp\"\n", &[]).is_err());
+        assert!(OcfFileConfig::load("[store]\nfsync_every = 0\n", &[]).is_err());
+        assert!(
+            OcfFileConfig::load("[store]\nfsync = \"every_n\"\nfsync_every = -4\n", &[]).is_err()
+        );
     }
 
     #[test]

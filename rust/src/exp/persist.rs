@@ -19,6 +19,11 @@
 //!    dispatch; once the mapping is warm the numbers should be
 //!    indistinguishable — that is the claim that makes mmap-serving
 //!    free.
+//! 3. **WAL cost** (PR 7). Unflushed ingest throughput under each
+//!    fsync policy (`off` / `always` / `every_64` / `os`) and the
+//!    recovery cost of replaying those puts after a crash with no
+//!    flush — the write-path price of "no acknowledged write is ever
+//!    lost", and what the group-commit knob buys back.
 //!
 //! `measure()` is shared with `benches/persist.rs`, which emits the
 //! `BENCH_persist.json` trajectory point.
@@ -27,7 +32,8 @@ use super::report::{f, Table};
 use super::Scale;
 use crate::filter::{BatchedFilter, ProbeSession};
 use crate::store::{
-    Backing, FlushPolicy, FlushReason, FrozenStore, NodeConfig, StorageNode,
+    Backing, FlushPolicy, FlushReason, FrozenStore, FsyncPolicy, NodeConfig, StorageNode,
+    WalConfig,
 };
 use std::time::Instant;
 
@@ -69,12 +75,37 @@ impl ProbeArm {
     }
 }
 
+/// One WAL fsync-policy arm: time `puts` unflushed puts, crash
+/// (drop without flush), time the replaying recovery.
+#[derive(Debug, Clone)]
+pub struct WalArm {
+    /// "off" | "always" | "every_64" | "os".
+    pub policy: String,
+    pub puts: usize,
+    pub ingest_secs: f64,
+    pub recover_secs: f64,
+    /// Ops replayed at recovery — 0 for "off" (those puts are simply
+    /// gone), `puts` for every enabled policy.
+    pub wal_replayed: u64,
+}
+
+impl WalArm {
+    pub fn ingest_kops(&self) -> f64 {
+        if self.ingest_secs <= 0.0 {
+            0.0
+        } else {
+            self.puts as f64 / self.ingest_secs / 1e3
+        }
+    }
+}
+
 /// Everything E13 measures.
 #[derive(Debug, Clone)]
 pub struct PersistOutcome {
     pub keys: usize,
     pub restarts: Vec<RestartArm>,
     pub probe_arms: Vec<ProbeArm>,
+    pub wal_arms: Vec<WalArm>,
 }
 
 fn scratch_dir(tag: &str) -> std::path::PathBuf {
@@ -133,6 +164,13 @@ pub fn measure(n_keys: usize, n_probes: usize) -> PersistOutcome {
         // One manual flush → one generation holding every key, so the
         // probe arms (and their positive workload) see the full set.
         flush: FlushPolicy::small(usize::MAX),
+        // Group-commit the populate phase: the restart arms measure
+        // filter recovery, not fsync latency (the WAL arms below
+        // measure that, deliberately).
+        wal: WalConfig {
+            enabled: true,
+            fsync: FsyncPolicy::EveryN(1024),
+        },
         ..NodeConfig::default()
     };
 
@@ -206,11 +244,86 @@ pub fn measure(n_keys: usize, n_probes: usize) -> PersistOutcome {
     }
 
     let _ = std::fs::remove_dir_all(&dir);
+
+    // WAL arms: unflushed ingest + crash + replaying recovery, per
+    // fsync policy. Capped — the `always` arm pays one fsync per put
+    // by contract, and 10k of those already tell the story.
+    let wal_arms = measure_wal(n_keys.min(10_000));
+
     PersistOutcome {
         keys: n_keys,
         restarts,
         probe_arms,
+        wal_arms,
     }
+}
+
+/// Time `n_puts` unflushed puts under each fsync policy, crash (drop
+/// with nothing flushed), and time the recovery that replays them.
+pub fn measure_wal(n_puts: usize) -> Vec<WalArm> {
+    let policies: [(&str, WalConfig); 4] = [
+        (
+            "off",
+            WalConfig {
+                enabled: false,
+                fsync: FsyncPolicy::Always,
+            },
+        ),
+        (
+            "always",
+            WalConfig {
+                enabled: true,
+                fsync: FsyncPolicy::Always,
+            },
+        ),
+        (
+            "every_64",
+            WalConfig {
+                enabled: true,
+                fsync: FsyncPolicy::EveryN(64),
+            },
+        ),
+        (
+            "os",
+            WalConfig {
+                enabled: true,
+                fsync: FsyncPolicy::Os,
+            },
+        ),
+    ];
+    let mut arms = Vec::with_capacity(policies.len());
+    for (name, wal) in policies {
+        let dir = scratch_dir(&format!("wal-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = NodeConfig {
+            persist_dir: Some(dir.to_str().expect("utf-8 temp path").to_string()),
+            flush: FlushPolicy::small(usize::MAX), // never flush: WAL-only durability
+            wal,
+            ..NodeConfig::default()
+        };
+        let mut node = StorageNode::new(cfg.clone());
+        let t0 = Instant::now();
+        for k in 0..n_puts as u64 {
+            node.put(k).expect("put");
+        }
+        let ingest_secs = t0.elapsed().as_secs_f64();
+        assert_eq!(node.stats.wal_append_failed(), 0, "{name}: degraded ingest");
+        drop(node); // crash analog: no flush, no shutdown hooks
+
+        let t0 = Instant::now();
+        let node = StorageNode::recover(cfg).expect("recover wal arm");
+        let recover_secs = t0.elapsed().as_secs_f64();
+        arms.push(WalArm {
+            policy: name.to_string(),
+            puts: n_puts,
+            ingest_secs,
+            recover_secs,
+            wal_replayed: node.stats.wal_replayed(),
+        });
+        drop(node);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    arms
 }
 
 /// Render the two E13 tables (shared by the experiment driver and the
@@ -275,6 +388,31 @@ pub fn render(title: impl Into<String>, o: &PersistOutcome) -> String {
          ≈1.0x is the expected (and desired) result.",
     );
     out.push_str(&t.markdown());
+    out.push('\n');
+
+    if let Some(puts) = o.wal_arms.first().map(|w| w.puts) {
+        let mut t = Table::new(
+            format!("E13 — WAL ingest cost and replay by fsync policy ({puts} unflushed puts)"),
+            &["wal", "ingest kops/s", "recover ms", "replayed"],
+        );
+        for w in &o.wal_arms {
+            t.row(&[
+                w.policy.clone(),
+                f(w.ingest_kops(), 1),
+                f(w.recover_secs * 1e3, 2),
+                w.wal_replayed.to_string(),
+            ]);
+        }
+        t.note(
+            "Puts are never flushed, then the node 'crashes' (drop) and recovers: \
+             with the WAL off they are simply gone (replayed = 0); any enabled \
+             policy replays all of them. `always` pays one fsync per put (the \
+             zero-loss-on-power-failure contract); `every_64` group-commits \
+             (≤63 records exposed to power loss, none to process death); `os` \
+             never syncs from the WAL.",
+        );
+        out.push_str(&t.markdown());
+    }
     out
 }
 
@@ -313,6 +451,16 @@ mod tests {
             .iter()
             .filter(|p| p.workload == "pos")
             .all(|p| p.hits == p.probes));
+        // WAL arms: off loses unflushed puts, every policy replays all
+        let policies: Vec<&str> = o.wal_arms.iter().map(|w| w.policy.as_str()).collect();
+        assert_eq!(policies, ["off", "always", "every_64", "os"]);
+        for w in &o.wal_arms {
+            if w.policy == "off" {
+                assert_eq!(w.wal_replayed, 0, "wal=off must not replay");
+            } else {
+                assert_eq!(w.wal_replayed, w.puts as u64, "{}: lost puts", w.policy);
+            }
+        }
     }
 
     #[test]

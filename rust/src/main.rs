@@ -556,17 +556,21 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
         }
     };
     eprintln!(
-        "ocf serve: node mode, persist_dir={dir} filter={} \
-         (line protocol: put K | get K | del K | flush | stats | quit)",
+        "ocf serve: node mode, persist_dir={dir} filter={} wal={} fsync={} \
+         (line protocol: put K | get K | del K | flush | compact | stats | quit)",
         cfg.filter.describe(),
+        if node.wal().is_some() { "on" } else { "off" },
+        cfg.node.wal.fsync.describe(),
     );
     eprintln!(
         "ocf serve: recovery: sstables={} filters_recovered={} filters_rebuilt={} \
-         filter_recovery_rejected={} live_keys={}",
+         filter_recovery_rejected={} wal_replayed={} wal_torn_tail={} live_keys={}",
         node.sstable_count(),
         node.stats.filters_recovered(),
         node.stats.filters_rebuilt(),
         node.stats.filter_recovery_rejected(),
+        node.stats.wal_replayed(),
+        node.stats.wal_torn_tail(),
         node.live_keys(),
     );
     let engine = ocf::filter::kernel::engine_info();
@@ -609,9 +613,15 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
                     format!("ok sstables={}", node.sstable_count())
                 }
             }
+            (Some("compact"), _) => {
+                node.compact();
+                format!("ok sstables={}", node.sstable_count())
+            }
             (Some("stats"), _) => format!(
                 "live_keys={} memtable={} sstables={} flushes={} compactions={} \
-                 filters_recovered={} filters_rebuilt={} filter_recovery_rejected={}",
+                 filters_recovered={} filters_rebuilt={} filter_recovery_rejected={} \
+                 wal_appends={} wal_replayed={} wal_torn_tail={} wal_append_failed={} \
+                 io_retries={}",
                 node.live_keys(),
                 node.memtable_len(),
                 node.sstable_count(),
@@ -620,6 +630,11 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
                 node.stats.filters_recovered(),
                 node.stats.filters_rebuilt(),
                 node.stats.filter_recovery_rejected(),
+                node.stats.wal_appends(),
+                node.stats.wal_replayed(),
+                node.stats.wal_torn_tail(),
+                node.stats.wal_append_failed(),
+                node.stats.io_retries(),
             ),
             (Some("quit"), _) => break,
             _ => "err unknown-command".into(),

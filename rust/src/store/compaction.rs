@@ -32,8 +32,8 @@ pub fn merge_tables(tables: &[SsTable], drop_tombstones: bool) -> Vec<(u64, Entr
     let mut merged: std::collections::BTreeMap<u64, Entry> = std::collections::BTreeMap::new();
     for t in tables {
         // tables is oldest→newest, so straight insertion overwrites
-        for &(k, e) in t.iter() {
-            merged.insert(k, e);
+        for (k, e) in t.iter() {
+            merged.insert(*k, e.clone());
         }
     }
     merged
@@ -52,21 +52,26 @@ mod tests {
 
     #[test]
     fn newest_version_wins() {
-        let old = sst(1, vec![(1, Entry::Put { value_len: 1 }), (2, Entry::Put { value_len: 1 })]);
-        let new = sst(2, vec![(2, Entry::Put { value_len: 99 })]);
+        let old = sst(1, vec![(1, Entry::put_sized(1)), (2, Entry::put_sized(1))]);
+        let new = sst(2, vec![(2, Entry::put_sized(99))]);
         let merged = merge_tables(&[old, new], true);
         assert_eq!(
             merged,
-            vec![
-                (1, Entry::Put { value_len: 1 }),
-                (2, Entry::Put { value_len: 99 })
-            ]
+            vec![(1, Entry::put_sized(1)), (2, Entry::put_sized(99))]
         );
     }
 
     #[test]
+    fn merged_values_are_the_newest_bytes() {
+        let old = sst(1, vec![(7, Entry::put(b"stale"))]);
+        let new = sst(2, vec![(7, Entry::put(b"fresh"))]);
+        let merged = merge_tables(&[old, new], true);
+        assert_eq!(merged, vec![(7, Entry::put(b"fresh"))]);
+    }
+
+    #[test]
     fn tombstones_shadow_then_drop() {
-        let old = sst(1, vec![(5, Entry::Put { value_len: 1 })]);
+        let old = sst(1, vec![(5, Entry::put_sized(1))]);
         let new = sst(2, vec![(5, Entry::Tombstone)]);
         let merged = merge_tables(&[old.clone(), new.clone()], true);
         assert!(merged.is_empty(), "tombstone must erase the old put");
@@ -76,8 +81,8 @@ mod tests {
 
     #[test]
     fn merge_preserves_sort_order() {
-        let a = sst(1, vec![(1, Entry::Put { value_len: 0 }), (5, Entry::Put { value_len: 0 })]);
-        let b = sst(2, vec![(2, Entry::Put { value_len: 0 }), (9, Entry::Put { value_len: 0 })]);
+        let a = sst(1, vec![(1, Entry::put_sized(0)), (5, Entry::put_sized(0))]);
+        let b = sst(2, vec![(2, Entry::put_sized(0)), (9, Entry::put_sized(0))]);
         let merged = merge_tables(&[a, b], true);
         let keys: Vec<u64> = merged.iter().map(|&(k, _)| k).collect();
         assert_eq!(keys, vec![1, 2, 5, 9]);

@@ -36,25 +36,36 @@
 //! | 64     | —    | zero padding to [`PAYLOAD_OFFSET`] |
 //! | 4096   | payload_len | table words, u32 LE each |
 
+use super::io::{RealIo, StoreIo};
 use super::memtable::Entry;
 use super::sstable::{FrozenFilter, SsTable};
 use crate::filter::bucket::SLOTS;
 use crate::filter::frozen::{FrozenBytes, FrozenTable};
-use crate::util::{fnv1a64, MmapRegion};
-use std::fs::{self, File};
-use std::io::{self, Read, Write};
+use crate::util::{fnv1a64, retry_transient, MmapRegion};
+use std::io::{self, Read};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Magic of a frozen-filter file.
 pub const FILTER_MAGIC: [u8; 8] = *b"OCF1FRZN";
 /// Magic of a sorted-run file.
 pub const RUN_MAGIC: [u8; 8] = *b"OCF1RUNS";
-/// Current format version. Readers reject any other version (forward
-/// *and* backward): a version bump means the layout changed, and a
-/// rejected filter file falls back to rebuild-from-run, so bumping is
-/// cheap — there is no silent cross-version reinterpretation.
+/// Current *filter*-file format version. Readers reject any other
+/// version (forward *and* backward): a version bump means the layout
+/// changed, and a rejected filter file falls back to rebuild-from-run,
+/// so bumping is cheap — there is no silent cross-version
+/// reinterpretation.
 pub const FORMAT_VERSION: u32 = 1;
+/// Current *run*-file format version. Bumped to 2 when run records
+/// gained inline value bytes (variable-length records). Runs are
+/// ground truth, so unlike the filter file the old version is still
+/// *readable*: a version-1 run (13-byte fixed records carrying only a
+/// value length) decodes with its values materialized as that many
+/// zero bytes — the explicit read-old/write-new migration the
+/// versioning policy requires.
+pub const RUN_FORMAT_VERSION: u32 = 2;
+const RUN_VERSION_LEGACY: u32 = 1;
 /// Byte offset of the filter payload. One page on every common page
 /// size's divisor chain (4 KiB pages, and 4096 divides 16 KiB/64 KiB
 /// pages' interior alignment since the file is mapped from offset 0),
@@ -63,8 +74,12 @@ pub const PAYLOAD_OFFSET: u64 = 4096;
 
 const FILTER_HEADER_LEN: usize = 64;
 const RUN_HEADER_LEN: usize = 40;
-/// Bytes per run record: key (8) + tag (1) + value_len (4).
+/// Fixed bytes per run record: key (8) + tag (1) + value_len (4).
+/// Version-2 records append `value_len` payload bytes after this
+/// prefix; version-1 records were exactly this long.
 const RUN_RECORD_LEN: usize = 13;
+/// Sanity cap on a single record's value payload (1 GiB).
+const MAX_VALUE_LEN: u32 = 1 << 30;
 
 /// Run-header flag: this generation is a **full-state snapshot** (a
 /// compaction output that merged *every* older generation), so all
@@ -119,7 +134,11 @@ impl std::fmt::Display for RecoverError {
             }
             RecoverError::BadMagic => write!(f, "bad magic (not an OCF artifact)"),
             RecoverError::BadVersion { found } => {
-                write!(f, "unsupported format version {found} (reader speaks {FORMAT_VERSION})")
+                write!(
+                    f,
+                    "unsupported format version {found} (reader speaks filter v{FORMAT_VERSION}, \
+                     run v{RUN_VERSION_LEGACY}-v{RUN_FORMAT_VERSION})"
+                )
             }
             RecoverError::BadHeader => write!(f, "header checksum mismatch"),
             RecoverError::BadParams(msg) => write!(f, "inconsistent parameters: {msg}"),
@@ -152,18 +171,41 @@ pub enum Backing {
 }
 
 /// Directory of persisted frozen filters + runs, one pair per SSTable
-/// generation. All writes are temp-file + rename atomic.
+/// generation. All writes are temp-file + rename atomic and absorb
+/// transient I/O errors with bounded retry (`util::retry`); every
+/// file operation goes through a [`StoreIo`] so faults can be
+/// injected deterministically in tests.
 #[derive(Debug, Clone)]
 pub struct FrozenStore {
     dir: PathBuf,
+    io: Arc<dyn StoreIo>,
+    /// Transient retries absorbed by this store's writes (shared
+    /// across clones); the node drains it into `NodeStats::io_retries`.
+    retries: Arc<AtomicU64>,
 }
 
 impl FrozenStore {
-    /// Open (creating if needed) a persistence directory.
+    /// Open (creating if needed) a persistence directory on the real
+    /// filesystem.
     pub fn open(dir: impl Into<PathBuf>) -> io::Result<Self> {
+        Self::open_with(dir, Arc::new(RealIo))
+    }
+
+    /// [`FrozenStore::open`] over an explicit I/O layer (fault
+    /// injection).
+    pub fn open_with(dir: impl Into<PathBuf>, io: Arc<dyn StoreIo>) -> io::Result<Self> {
         let dir = dir.into();
-        fs::create_dir_all(&dir)?;
-        Ok(Self { dir })
+        io.create_dir_all(&dir)?;
+        Ok(Self {
+            dir,
+            io,
+            retries: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// Drain the transient-retry counter.
+    pub fn take_retries(&self) -> u64 {
+        self.retries.swap(0, Ordering::Relaxed)
     }
 
     pub fn dir(&self) -> &Path {
@@ -196,7 +238,13 @@ impl FrozenStore {
     }
 
     fn persist_with_flags(&self, t: &SsTable, flags: u32) -> io::Result<()> {
-        write_run_file(&self.run_path(t.generation), t.run(), flags)?;
+        let r = write_run_file(
+            self.io.as_ref(),
+            &self.run_path(t.generation),
+            t.run(),
+            flags,
+        )?;
+        self.retries.fetch_add(r as u64, Ordering::Relaxed);
         self.persist_filter(t.generation, t.filter())
     }
 
@@ -204,14 +252,17 @@ impl FrozenStore {
     /// recovery path uses this to heal a rejected filter file after
     /// rebuilding from the run.
     pub fn persist_filter(&self, gen: u64, filter: &FrozenFilter) -> io::Result<()> {
-        write_filter_file(
+        let r = write_filter_file(
+            self.io.as_ref(),
             &self.filter_path(gen),
             filter.table(),
             filter.nbuckets(),
             filter.hasher().fp_mask.count_ones(),
             filter.hasher().seed,
             filter.len(),
-        )
+        )?;
+        self.retries.fetch_add(r as u64, Ordering::Relaxed);
+        Ok(())
     }
 
     /// Remove both files of generation `gen` (missing files are fine —
@@ -220,7 +271,7 @@ impl FrozenStore {
     /// two leaves a run-only generation, which recovery handles.
     pub fn remove(&self, gen: u64) -> io::Result<()> {
         for path in [self.filter_path(gen), self.run_path(gen)] {
-            match fs::remove_file(&path) {
+            match self.io.remove_file(&path) {
                 Ok(()) => {}
                 Err(e) if e.kind() == io::ErrorKind::NotFound => {}
                 Err(e) => return Err(e),
@@ -233,10 +284,7 @@ impl FrozenStore {
     /// the run is what makes a generation exist), ascending.
     pub fn generations(&self) -> io::Result<Vec<u64>> {
         let mut gens = Vec::new();
-        for entry in fs::read_dir(&self.dir)? {
-            let entry = entry?;
-            let name = entry.file_name();
-            let Some(name) = name.to_str() else { continue };
+        for name in self.io.read_dir(&self.dir)? {
             if let Some(hex) = name.strip_prefix("sst-").and_then(|s| s.strip_suffix(".run")) {
                 if let Ok(gen) = u64::from_str_radix(hex, 16) {
                     gens.push(gen);
@@ -255,12 +303,12 @@ impl FrozenStore {
 
     /// [`FrozenStore::load_filter`] with an explicit backing choice.
     pub fn load_filter_with(&self, gen: u64, backing: Backing) -> Result<FrozenTable, RecoverError> {
-        read_filter_file(&self.filter_path(gen), backing)
+        read_filter_file(self.io.as_ref(), &self.filter_path(gen), backing)
     }
 
     /// Open and validate generation `gen`'s sorted run.
     pub fn load_run(&self, gen: u64) -> Result<RunFile, RecoverError> {
-        read_run_file(&self.run_path(gen))
+        read_run_file(self.io.as_ref(), &self.run_path(gen))
     }
 }
 
@@ -281,33 +329,46 @@ impl RunFile {
 }
 
 /// Write `bytes` to `path` atomically: temp file in the same directory,
-/// fsync, rename over the target.
-fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+/// fsync, rename over the target. Transient errors (`EINTR`/`EAGAIN`)
+/// are absorbed with bounded retry; returns how many retries it took
+/// (callers surface that as `io_retries`). On error the temp file is
+/// cleaned up best-effort.
+fn atomic_write(io: &dyn StoreIo, path: &Path, bytes: &[u8]) -> io::Result<u32> {
     let tmp = path.with_extension("tmp");
-    {
-        let mut f = File::create(&tmp)?;
-        f.write_all(bytes)?;
-        // Durability point: the rename only publishes fsynced bytes.
-        f.sync_all()?;
+    let mut retries = 0u32;
+    let r = retry_transient(|| io.write(&tmp, bytes));
+    retries += r.retries;
+    if let Err(e) = r.result {
+        let _ = io.remove_file(&tmp);
+        return Err(e);
     }
-    match fs::rename(&tmp, path) {
-        Ok(()) => Ok(()),
+    // Durability point: the rename only publishes fsynced bytes.
+    let r = retry_transient(|| io.sync(&tmp));
+    retries += r.retries;
+    if let Err(e) = r.result {
+        let _ = io.remove_file(&tmp);
+        return Err(e);
+    }
+    match io.rename(&tmp, path) {
+        Ok(()) => Ok(retries),
         Err(e) => {
-            let _ = fs::remove_file(&tmp);
+            let _ = io.remove_file(&tmp);
             Err(e)
         }
     }
 }
 
 /// Encode + atomically write a frozen filter file (format v1).
+/// Returns the transient-retry count absorbed by the write.
 pub fn write_filter_file(
+    io: &dyn StoreIo,
     path: &Path,
     words: &[u32],
     nbuckets: usize,
     fp_bits: u32,
     seed: u64,
     len: usize,
-) -> io::Result<()> {
+) -> io::Result<u32> {
     assert_eq!(words.len(), nbuckets * SLOTS, "words must match geometry");
     let payload_len = words.len() * 4;
     let mut bytes = Vec::with_capacity(PAYLOAD_OFFSET as usize + payload_len);
@@ -328,7 +389,7 @@ pub fn write_filter_file(
     debug_assert_eq!(bytes.len(), FILTER_HEADER_LEN);
     bytes.resize(PAYLOAD_OFFSET as usize, 0);
     bytes.extend_from_slice(&payload);
-    atomic_write(path, &bytes)
+    atomic_write(io, path, &bytes)
 }
 
 /// Decoded filter-file header.
@@ -393,8 +454,12 @@ fn decode_filter_header(h: &[u8]) -> Result<FilterHeader, RecoverError> {
 /// Open, validate and decode a frozen filter file into a probe-ready
 /// [`FrozenTable`]. Every failure is a typed [`RecoverError`]; nothing
 /// here panics on malformed input.
-pub fn read_filter_file(path: &Path, backing: Backing) -> Result<FrozenTable, RecoverError> {
-    let mut file = File::open(path)?;
+pub fn read_filter_file(
+    io: &dyn StoreIo,
+    path: &Path,
+    backing: Backing,
+) -> Result<FrozenTable, RecoverError> {
+    let mut file = io.open_read(path)?;
     let file_len = file.metadata()?.len();
     let mut header = [0u8; FILTER_HEADER_LEN];
     let mut got = 0;
@@ -463,16 +528,25 @@ pub fn read_filter_file(path: &Path, backing: Backing) -> Result<FrozenTable, Re
     Ok(FrozenTable::from_bytes(bytes, h.nbuckets, h.fp_bits, h.seed, h.len))
 }
 
-/// Encode + atomically write a sorted-run file.
-pub fn write_run_file(path: &Path, run: &[(u64, Entry)], flags: u32) -> io::Result<()> {
+/// Encode + atomically write a sorted-run file (format v2: each
+/// record is a 13-byte prefix `key | tag | value_len` followed by the
+/// value bytes). Returns the transient-retry count absorbed.
+pub fn write_run_file(
+    io: &dyn StoreIo,
+    path: &Path,
+    run: &[(u64, Entry)],
+    flags: u32,
+) -> io::Result<u32> {
     debug_assert_eq!(flags & !RUN_FLAGS_KNOWN, 0, "unknown run flags");
-    let mut records = Vec::with_capacity(run.len() * RUN_RECORD_LEN);
-    for &(k, e) in run {
+    let payload: usize = run.iter().map(|(_, e)| RUN_RECORD_LEN + e.value_len()).sum();
+    let mut records = Vec::with_capacity(payload);
+    for (k, e) in run {
         records.extend_from_slice(&k.to_le_bytes());
         match e {
-            Entry::Put { value_len } => {
+            Entry::Put { value } => {
                 records.push(1);
-                records.extend_from_slice(&value_len.to_le_bytes());
+                records.extend_from_slice(&(value.len() as u32).to_le_bytes());
+                records.extend_from_slice(value);
             }
             Entry::Tombstone => {
                 records.push(0);
@@ -482,7 +556,7 @@ pub fn write_run_file(path: &Path, run: &[(u64, Entry)], flags: u32) -> io::Resu
     }
     let mut bytes = Vec::with_capacity(RUN_HEADER_LEN + records.len());
     bytes.extend_from_slice(&RUN_MAGIC);
-    bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&RUN_FORMAT_VERSION.to_le_bytes());
     bytes.extend_from_slice(&flags.to_le_bytes());
     bytes.extend_from_slice(&(run.len() as u64).to_le_bytes());
     bytes.extend_from_slice(&fnv1a64(&records).to_le_bytes());
@@ -490,12 +564,13 @@ pub fn write_run_file(path: &Path, run: &[(u64, Entry)], flags: u32) -> io::Resu
     bytes.extend_from_slice(&header_sum.to_le_bytes());
     debug_assert_eq!(bytes.len(), RUN_HEADER_LEN);
     bytes.extend_from_slice(&records);
-    atomic_write(path, &bytes)
+    atomic_write(io, path, &bytes)
 }
 
-/// Open, validate and decode a sorted-run file.
-pub fn read_run_file(path: &Path) -> Result<RunFile, RecoverError> {
-    let bytes = fs::read(path)?;
+/// Open, validate and decode a sorted-run file (v2, or legacy v1 with
+/// values materialized as zeroes).
+pub fn read_run_file(io: &dyn StoreIo, path: &Path) -> Result<RunFile, RecoverError> {
+    let bytes = io.read(path)?;
     if bytes.len() < RUN_HEADER_LEN {
         return Err(RecoverError::Truncated {
             expected: RUN_HEADER_LEN as u64,
@@ -506,7 +581,7 @@ pub fn read_run_file(path: &Path) -> Result<RunFile, RecoverError> {
         return Err(RecoverError::BadMagic);
     }
     let version = u32_at(&bytes, 8);
-    if version != FORMAT_VERSION {
+    if version != RUN_FORMAT_VERSION && version != RUN_VERSION_LEGACY {
         return Err(RecoverError::BadVersion { found: version });
     }
     if fnv1a64(&bytes[0..32]) != u64_at(&bytes, 32) {
@@ -518,29 +593,87 @@ pub fn read_run_file(path: &Path) -> Result<RunFile, RecoverError> {
             "unknown run flags {flags:#010x}"
         )));
     }
-    let count = u64_at(&bytes, 16) as usize;
-    let need = RUN_HEADER_LEN as u64 + count as u64 * RUN_RECORD_LEN as u64;
-    if (bytes.len() as u64) < need {
-        return Err(RecoverError::Truncated {
-            expected: need,
-            found: bytes.len() as u64,
-        });
+    let count = u64_at(&bytes, 16);
+
+    // Pass 1 — extent: find where the records region ends. Fixed
+    // arithmetic for v1; a bounds-checked prefix walk for v2 (records
+    // are variable-length, so the extent is data-dependent). Length
+    // problems surface as `Truncated` *before* the checksum runs, per
+    // the outside-in validation order.
+    let file_len = bytes.len() as u64;
+    let need = if version == RUN_VERSION_LEGACY {
+        let need = RUN_HEADER_LEN as u64 + count.saturating_mul(RUN_RECORD_LEN as u64);
+        if file_len < need {
+            return Err(RecoverError::Truncated {
+                expected: need,
+                found: file_len,
+            });
+        }
+        need
+    } else {
+        let mut need = RUN_HEADER_LEN as u64;
+        for _ in 0..count {
+            let prefix_end = need.saturating_add(RUN_RECORD_LEN as u64);
+            if file_len < prefix_end {
+                return Err(RecoverError::Truncated {
+                    expected: prefix_end,
+                    found: file_len,
+                });
+            }
+            let vlen = u32_at(&bytes, need as usize + 9);
+            if vlen > MAX_VALUE_LEN {
+                return Err(RecoverError::BadParams(format!("value_len {vlen}")));
+            }
+            need = prefix_end + vlen as u64;
+            if file_len < need {
+                return Err(RecoverError::Truncated {
+                    expected: need,
+                    found: file_len,
+                });
+            }
+        }
+        need
+    };
+    if file_len != need {
+        return Err(RecoverError::BadParams(format!(
+            "{} trailing bytes after {count} records",
+            file_len - need
+        )));
     }
+
+    // Pass 2 — integrity: the records checksum over the whole region.
     let records = &bytes[RUN_HEADER_LEN..need as usize];
     let found = fnv1a64(records);
     let expected = u64_at(&bytes, 24);
     if found != expected {
         return Err(RecoverError::ChecksumMismatch { expected, found });
     }
-    let mut run = Vec::with_capacity(count);
+
+    // Pass 3 — decode, validating tags and strict key order.
+    let mut run = Vec::with_capacity(count as usize);
     let mut prev: Option<u64> = None;
-    for rec in records.chunks_exact(RUN_RECORD_LEN) {
+    let mut off = 0usize;
+    for _ in 0..count {
+        let rec = &records[off..];
         let k = u64_at(rec, 0);
+        let vlen = u32_at(rec, 9) as usize;
         let entry = match rec[8] {
-            1 => Entry::Put {
-                value_len: u32_at(rec, 9),
-            },
-            0 => Entry::Tombstone,
+            1 => {
+                if version == RUN_VERSION_LEGACY {
+                    // v1 carried only the length; materialize zeroes.
+                    Entry::put_sized(vlen as u32)
+                } else {
+                    Entry::put(&rec[RUN_RECORD_LEN..RUN_RECORD_LEN + vlen])
+                }
+            }
+            0 => {
+                if version != RUN_VERSION_LEGACY && vlen != 0 {
+                    return Err(RecoverError::BadParams(format!(
+                        "tombstone with value_len {vlen}"
+                    )));
+                }
+                Entry::Tombstone
+            }
             tag => return Err(RecoverError::BadParams(format!("record tag {tag}"))),
         };
         if let Some(p) = prev {
@@ -552,6 +685,10 @@ pub fn read_run_file(path: &Path) -> Result<RunFile, RecoverError> {
         }
         prev = Some(k);
         run.push((k, entry));
+        off += RUN_RECORD_LEN;
+        if version != RUN_VERSION_LEGACY && rec[8] == 1 {
+            off += vlen;
+        }
     }
     Ok(RunFile { flags, records: run })
 }
@@ -560,6 +697,7 @@ pub fn read_run_file(path: &Path) -> Result<RunFile, RecoverError> {
 mod tests {
     use super::*;
     use crate::filter::{BatchedFilter, MembershipFilter};
+    use std::fs;
 
     /// Unique scratch dir per test (no tempfile crate offline).
     fn scratch(tag: &str) -> PathBuf {
@@ -576,7 +714,7 @@ mod tests {
 
     fn sample_table(n: u64, gen: u64) -> SsTable {
         let mut run: Vec<(u64, Entry)> = (0..n)
-            .map(|k| (k * 3, Entry::Put { value_len: 8 }))
+            .map(|k| (k * 3, Entry::put(&(k * 3).to_le_bytes())))
             .collect();
         run.push((n * 3 + 1, Entry::Tombstone));
         run.sort_by_key(|&(k, _)| k);
@@ -742,9 +880,10 @@ mod tests {
         let path = store.run_path(1);
         let good = fs::read(&path).unwrap();
 
+        // flip a key byte (the first record's first byte): the extent
+        // walk is unaffected, so the records checksum must catch it
         let mut bad = good.clone();
-        let last = bad.len() - 1;
-        bad[last] ^= 0x80;
+        bad[RUN_HEADER_LEN] ^= 0x80;
         fs::write(&path, &bad).unwrap();
         assert!(matches!(
             store.load_run(1),
@@ -760,8 +899,61 @@ mod tests {
     fn empty_run_round_trips() {
         let dir = scratch("empty");
         let path = dir.join("empty.run");
-        write_run_file(&path, &[], 0).unwrap();
-        assert_eq!(read_run_file(&path).unwrap().records, vec![]);
+        write_run_file(&RealIo, &path, &[], 0).unwrap();
+        assert_eq!(read_run_file(&RealIo, &path).unwrap().records, vec![]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_values_round_trip_bytes() {
+        let dir = scratch("values");
+        let path = dir.join("vals.run");
+        let run = vec![
+            (1u64, Entry::put(b"alpha")),
+            (2, Entry::Tombstone),
+            (3, Entry::put(b"")),
+            (4, Entry::put(b"a much longer payload with \x00 bytes \xff inside")),
+        ];
+        write_run_file(&RealIo, &path, &run, 0).unwrap();
+        let decoded = read_run_file(&RealIo, &path).unwrap();
+        assert_eq!(decoded.records, run, "values must survive the disk trip");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_v1_run_still_decodes_with_zeroed_values() {
+        // Hand-build a version-1 run file (fixed 13-byte records, no
+        // value bytes) exactly as the PR-6 writer laid it out: the
+        // migration contract is read-old/write-new.
+        let dir = scratch("legacy");
+        let path = dir.join("v1.run");
+        let mut records = Vec::new();
+        for (k, tag, vlen) in [(5u64, 1u8, 8u32), (9, 0, 0), (12, 1, 0)] {
+            records.extend_from_slice(&k.to_le_bytes());
+            records.push(tag);
+            records.extend_from_slice(&vlen.to_le_bytes());
+        }
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&RUN_MAGIC);
+        bytes.extend_from_slice(&RUN_VERSION_LEGACY.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // flags
+        bytes.extend_from_slice(&3u64.to_le_bytes()); // count
+        bytes.extend_from_slice(&fnv1a64(&records).to_le_bytes());
+        let header_sum = fnv1a64(&bytes);
+        bytes.extend_from_slice(&header_sum.to_le_bytes());
+        bytes.extend_from_slice(&records);
+        fs::write(&path, &bytes).unwrap();
+
+        let decoded = read_run_file(&RealIo, &path).unwrap();
+        assert_eq!(
+            decoded.records,
+            vec![
+                (5, Entry::put_sized(8)),
+                (9, Entry::Tombstone),
+                (12, Entry::put_sized(0)),
+            ],
+            "v1 values materialize as zeroes of the recorded length"
+        );
         let _ = fs::remove_dir_all(&dir);
     }
 

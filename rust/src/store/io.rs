@@ -1,0 +1,518 @@
+//! The store's I/O seam: every file operation the persistent tier
+//! performs goes through the [`StoreIo`] trait, so tests can swap the
+//! real filesystem for a deterministic fault injector.
+//!
+//! Two implementations:
+//!
+//! * [`RealIo`] — a zero-cost passthrough to `std::fs`. Production
+//!   nodes use this (it is the default when `NodeConfig::io` is
+//!   unset).
+//! * [`FaultyIo`] — wraps the real filesystem but injects faults
+//!   according to a seeded, fully deterministic [`FaultConfig`]:
+//!   numbered **crash-points** (every mutating operation gets an
+//!   ordinal; at the configured ordinal the "disk" dies, optionally
+//!   leaving a torn prefix of the in-flight write), **short writes**
+//!   on appends, one-shot **transient errors** (`EINTR`-style, to
+//!   exercise the retry path), and **ENOSPC** after a byte budget.
+//!
+//! The crash-point model is what makes systematic crash testing
+//! possible: a counting pass runs a workload against `FaultyIo` with
+//! no crash configured and reads [`FaultyIo::mutations`]; the sweep
+//! then re-runs the same deterministic workload once per ordinal
+//! `0..n` with `crash_after = Some(i)`, covering *every* distinct
+//! on-disk state the workload can be interrupted in. See
+//! `testutil::crash`.
+//!
+//! Design notes:
+//!
+//! * Operations are **path-based** (open/act/close per call) rather
+//!   than handle-based. That costs an `open` per WAL append, which is
+//!   deliberate: it keeps the fault injector stateless per-call and
+//!   the crash-point numbering stable. The WAL's group-commit fsync
+//!   policy amortises the part that actually dominates (the fsync).
+//! * Read-side operations never consume a crash-point ordinal (they
+//!   don't change disk state) but all fail once the injected crash
+//!   has fired — a dead disk is dead for reads too.
+//! * `create_dir_all` is treated as a setup-phase operation: it also
+//!   does not consume an ordinal, so a node can always be
+//!   *constructed* and the sweep exercises failures in the
+//!   interesting places (WAL segment creation onward).
+
+use std::fmt;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::SplitMix64;
+
+/// The file operations the persistent tier needs, abstracted for
+/// fault injection. All implementations must be `Send + Sync`: the
+/// store shares one instance across `FrozenStore`, the WAL, and
+/// recovery.
+pub trait StoreIo: fmt::Debug + Send + Sync {
+    /// Read an entire file.
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>>;
+    /// Open a file for reading (streamed reads / mmap). The returned
+    /// handle performs *real* filesystem reads — mapping a fake file
+    /// is not meaningful — but the open itself is gated.
+    fn open_read(&self, path: &Path) -> io::Result<File>;
+    /// List a directory's entry file names (not full paths).
+    fn read_dir(&self, path: &Path) -> io::Result<Vec<String>>;
+    /// Create/truncate `path` and write all of `bytes`.
+    fn write(&self, path: &Path, bytes: &[u8]) -> io::Result<()>;
+    /// Append `bytes` to `path` (creating it if absent), returning
+    /// how many bytes were actually appended — implementations may
+    /// legally write a **short** count; callers must loop.
+    fn append(&self, path: &Path, bytes: &[u8]) -> io::Result<usize>;
+    /// fsync `path`'s contents to stable storage.
+    fn sync(&self, path: &Path) -> io::Result<()>;
+    /// Atomically rename `from` to `to`.
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    /// Remove a file.
+    fn remove_file(&self, path: &Path) -> io::Result<()>;
+    /// Create a directory and its parents.
+    fn create_dir_all(&self, path: &Path) -> io::Result<()>;
+}
+
+/// Passthrough to the real filesystem.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealIo;
+
+impl StoreIo for RealIo {
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn open_read(&self, path: &Path) -> io::Result<File> {
+        File::open(path)
+    }
+
+    fn read_dir(&self, path: &Path) -> io::Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(path)? {
+            let entry = entry?;
+            if let Some(name) = entry.file_name().to_str() {
+                names.push(name.to_string());
+            }
+        }
+        Ok(names)
+    }
+
+    fn write(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        let mut f = File::create(path)?;
+        f.write_all(bytes)
+    }
+
+    fn append(&self, path: &Path, bytes: &[u8]) -> io::Result<usize> {
+        let mut f = OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(bytes)?;
+        Ok(bytes.len())
+    }
+
+    fn sync(&self, path: &Path) -> io::Result<()> {
+        // Open read-only: fsync flushes the file's dirty pages
+        // regardless of the descriptor's access mode.
+        File::open(path)?.sync_all()
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(path)
+    }
+}
+
+/// Deterministic fault plan for [`FaultyIo`]. Everything is derived
+/// from `seed` and the operation ordinal — re-running the same
+/// workload against the same config reproduces the same faults.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Seed for the torn-write length RNG.
+    pub seed: u64,
+    /// Crash (permanently fail all I/O) at mutating-operation ordinal
+    /// `n` — i.e. the op with `mutations() == n` fails and every
+    /// operation after it fails too.
+    pub crash_after: Option<u64>,
+    /// When crashing on a `write`/`append`, leave a *torn prefix* of
+    /// the in-flight bytes on disk (seeded-random length), modelling
+    /// a torn page at power loss. Checksums must catch it.
+    pub torn_tail: bool,
+    /// Every `k`-th mutating op (ordinals `k-1`, `2k-1`, ...) first
+    /// fails once with `ErrorKind::Interrupted`, then succeeds when
+    /// retried — exercises `util::retry` paths.
+    pub transient_every: Option<u64>,
+    /// Every `k`-th mutating op, an `append` writes only half its
+    /// bytes (short write) — callers must loop.
+    pub short_write_every: Option<u64>,
+    /// Fail writes/appends with an ENOSPC-style error once this many
+    /// payload bytes have been written through the injector.
+    pub enospc_after_bytes: Option<u64>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x0c_f1_0c_f1,
+            crash_after: None,
+            torn_tail: true,
+            transient_every: None,
+            short_write_every: None,
+            enospc_after_bytes: None,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct FaultState {
+    /// Ordinal counter over *mutating* ops (write/append/sync/rename/
+    /// remove_file). Reads don't count: they can't change disk state,
+    /// so they can't create new crash-recovery cases.
+    mutations: u64,
+    bytes_written: u64,
+    crashed: bool,
+    /// One-shot latch: the op retried after a transient failure must
+    /// succeed (otherwise `transient_every` would starve retries).
+    transient_pending: bool,
+    rng: SplitMix64,
+}
+
+/// A deterministic fault-injecting [`StoreIo`] over the real
+/// filesystem. Not a simulation: real files are written, so recovery
+/// code paths (mmap, read-back, checksum validation) run unmodified —
+/// only the *failure schedule* is synthetic.
+pub struct FaultyIo {
+    cfg: FaultConfig,
+    state: Mutex<FaultState>,
+}
+
+impl fmt::Debug for FaultyIo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.state.lock().unwrap();
+        f.debug_struct("FaultyIo")
+            .field("cfg", &self.cfg)
+            .field("mutations", &st.mutations)
+            .field("crashed", &st.crashed)
+            .finish()
+    }
+}
+
+fn crashed_err() -> io::Error {
+    io::Error::new(io::ErrorKind::Other, "injected crash: device is gone")
+}
+
+fn enospc_err() -> io::Error {
+    io::Error::new(
+        io::ErrorKind::Other,
+        "injected ENOSPC: no space left on device",
+    )
+}
+
+impl FaultyIo {
+    pub fn new(cfg: FaultConfig) -> Self {
+        let rng = SplitMix64::new(cfg.seed);
+        Self {
+            cfg,
+            state: Mutex::new(FaultState {
+                mutations: 0,
+                bytes_written: 0,
+                crashed: false,
+                transient_pending: false,
+                rng,
+            }),
+        }
+    }
+
+    /// A crash-point at ordinal `point` with torn tails on, seeded
+    /// for determinism — the sweep's standard configuration.
+    pub fn crash_at(seed: u64, point: u64) -> Self {
+        Self::new(FaultConfig {
+            seed,
+            crash_after: Some(point),
+            ..FaultConfig::default()
+        })
+    }
+
+    /// Mutating operations performed (or attempted) so far. A
+    /// counting pass reads this to learn a workload's crash-point
+    /// space.
+    pub fn mutations(&self) -> u64 {
+        self.state.lock().unwrap().mutations
+    }
+
+    /// Has the injected crash fired?
+    pub fn crashed(&self) -> bool {
+        self.state.lock().unwrap().crashed
+    }
+
+    /// Gate a mutating operation: assign it an ordinal and decide its
+    /// fate. `in_flight` carries the bytes being written (for torn
+    /// tails at the crash point). Returns the op's ordinal on
+    /// success.
+    fn gate_mutation(&self, in_flight: Option<(&Path, &[u8], bool)>) -> io::Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        if st.crashed {
+            return Err(crashed_err());
+        }
+        let op = st.mutations;
+        st.mutations += 1;
+        if let Some(n) = self.cfg.crash_after {
+            if op >= n {
+                st.crashed = true;
+                if self.cfg.torn_tail {
+                    if let Some((path, bytes, append)) = in_flight {
+                        // Torn prefix: 0..len bytes actually land.
+                        if !bytes.is_empty() {
+                            let torn = (st.rng.next_u64() as usize) % bytes.len();
+                            if torn > 0 {
+                                let real = RealIo;
+                                let _ = if append {
+                                    real.append(path, &bytes[..torn]).map(|_| ())
+                                } else {
+                                    real.write(path, &bytes[..torn])
+                                };
+                            }
+                        }
+                    }
+                }
+                return Err(crashed_err());
+            }
+        }
+        if st.transient_pending {
+            // The retry of a transient failure goes through.
+            st.transient_pending = false;
+        } else if let Some(k) = self.cfg.transient_every {
+            if k > 0 && (op + 1) % k == 0 {
+                st.transient_pending = true;
+                return Err(io::Error::new(
+                    io::ErrorKind::Interrupted,
+                    "injected transient EINTR",
+                ));
+            }
+        }
+        Ok(op)
+    }
+
+    fn charge_bytes(&self, len: usize) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(budget) = self.cfg.enospc_after_bytes {
+            if st.bytes_written.saturating_add(len as u64) > budget {
+                return Err(enospc_err());
+            }
+        }
+        st.bytes_written += len as u64;
+        Ok(())
+    }
+
+    fn check_alive(&self) -> io::Result<()> {
+        if self.state.lock().unwrap().crashed {
+            Err(crashed_err())
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl StoreIo for FaultyIo {
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        self.check_alive()?;
+        RealIo.read(path)
+    }
+
+    fn open_read(&self, path: &Path) -> io::Result<File> {
+        self.check_alive()?;
+        RealIo.open_read(path)
+    }
+
+    fn read_dir(&self, path: &Path) -> io::Result<Vec<String>> {
+        self.check_alive()?;
+        RealIo.read_dir(path)
+    }
+
+    fn write(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        self.gate_mutation(Some((path, bytes, false)))?;
+        self.charge_bytes(bytes.len())?;
+        RealIo.write(path, bytes)
+    }
+
+    fn append(&self, path: &Path, bytes: &[u8]) -> io::Result<usize> {
+        let op = self.gate_mutation(Some((path, bytes, true)))?;
+        let mut len = bytes.len();
+        if let Some(k) = self.cfg.short_write_every {
+            if k > 0 && (op + 1) % k == 0 && len > 1 {
+                len /= 2;
+            }
+        }
+        self.charge_bytes(len)?;
+        RealIo.append(path, &bytes[..len])?;
+        Ok(len)
+    }
+
+    fn sync(&self, path: &Path) -> io::Result<()> {
+        self.gate_mutation(None)?;
+        RealIo.sync(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        self.gate_mutation(None)?;
+        RealIo.rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        self.gate_mutation(None)?;
+        RealIo.remove_file(path)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        // Setup-phase: gated on liveness but not ordinal-numbered,
+        // so node construction is always reachable in a sweep.
+        self.check_alive()?;
+        RealIo.create_dir_all(path)
+    }
+}
+
+/// Read `path` fully via a [`StoreIo`] handle — helper shared by the
+/// frozen-format readers.
+pub fn read_via_handle(io: &dyn StoreIo, path: &Path) -> io::Result<Vec<u8>> {
+    let mut f = io.open_read(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ocf-io-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn real_io_roundtrip_append_read() {
+        let dir = scratch("real");
+        let p = dir.join("a.bin");
+        let io = RealIo;
+        io.write(&p, b"hello ").unwrap();
+        let n = io.append(&p, b"world").unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(io.read(&p).unwrap(), b"hello world");
+        io.sync(&p).unwrap();
+        let names = io.read_dir(&dir).unwrap();
+        assert!(names.contains(&"a.bin".to_string()));
+        io.remove_file(&p).unwrap();
+        assert!(io.read(&p).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_point_kills_all_subsequent_io() {
+        let dir = scratch("crash");
+        let p = dir.join("x.bin");
+        let io = FaultyIo::crash_at(1, 2);
+        io.write(&p, b"one").unwrap(); // op 0
+        io.sync(&p).unwrap(); // op 1
+        assert!(io.write(&p, b"three").is_err()); // op 2: crash fires
+        assert!(io.crashed());
+        assert!(io.read(&p).is_err(), "dead disk is dead for reads");
+        assert!(io.sync(&p).is_err());
+        assert!(io.append(&p, b"z").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_counting_is_deterministic() {
+        let dir = scratch("det");
+        let run = |io: &FaultyIo| {
+            let p = dir.join("d.bin");
+            let _ = io.write(&p, b"abc");
+            let _ = io.append(&p, b"def");
+            let _ = io.sync(&p);
+            let _ = io.remove_file(&p);
+        };
+        let a = FaultyIo::new(FaultConfig::default());
+        run(&a);
+        let b = FaultyIo::new(FaultConfig::default());
+        run(&b);
+        assert_eq!(a.mutations(), b.mutations());
+        assert_eq!(a.mutations(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_leaves_a_strict_prefix() {
+        let dir = scratch("torn");
+        let p = dir.join("t.bin");
+        // crash at op 0 (the write itself), torn tails on
+        let io = FaultyIo::crash_at(7, 0);
+        let payload = vec![0xabu8; 4096];
+        assert!(io.write(&p, &payload).is_err());
+        match std::fs::read(&p) {
+            Ok(bytes) => {
+                assert!(bytes.len() < payload.len(), "torn prefix must be short");
+                assert!(payload.starts_with(&bytes));
+            }
+            // torn length 0: nothing landed — also legal
+            Err(e) => assert_eq!(e.kind(), io::ErrorKind::NotFound),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn transient_fails_once_then_succeeds_on_retry() {
+        let dir = scratch("transient");
+        let p = dir.join("tr.bin");
+        let io = Arc::new(FaultyIo::new(FaultConfig {
+            transient_every: Some(1), // every op is transient-once
+            ..FaultConfig::default()
+        }));
+        let io2 = io.clone();
+        let r = crate::util::retry_transient(move || io2.write(&p, b"persisted"));
+        assert!(r.result.is_ok());
+        assert_eq!(r.retries, 1);
+        assert_eq!(std::fs::read(dir.join("tr.bin")).unwrap(), b"persisted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn short_writes_force_callers_to_loop() {
+        let dir = scratch("short");
+        let p = dir.join("s.bin");
+        let io = FaultyIo::new(FaultConfig {
+            short_write_every: Some(1), // every append is short
+            ..FaultConfig::default()
+        });
+        let payload = b"0123456789";
+        let mut off = 0;
+        while off < payload.len() {
+            off += io.append(&p, &payload[off..]).unwrap();
+        }
+        assert_eq!(std::fs::read(&p).unwrap(), payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn enospc_fires_after_byte_budget() {
+        let dir = scratch("enospc");
+        let p = dir.join("e.bin");
+        let io = FaultyIo::new(FaultConfig {
+            enospc_after_bytes: Some(10),
+            ..FaultConfig::default()
+        });
+        io.write(&p, b"12345").unwrap();
+        io.write(&p, b"12345").unwrap();
+        let err = io.write(&p, b"x").unwrap_err();
+        assert!(err.to_string().contains("ENOSPC"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

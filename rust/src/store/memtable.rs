@@ -1,31 +1,71 @@
 //! The in-memory write buffer (memtable) of a storage node.
 //!
-//! A sorted map from key to [`Entry`] (live value marker or tombstone).
+//! A sorted map from key to [`Entry`] (live value or tombstone).
 //! This is also the "in-memory key-store" the paper's verified-delete
 //! path consults (§IV) — [`Memtable::live_contains`] answers the
 //! authoritative question for keys that haven't been flushed yet.
+//!
+//! Since PR 7 entries carry **real value bytes** (shared `Arc<[u8]>`
+//! payloads, so cloning an entry is a refcount bump): the WAL logs
+//! them, flush serializes them into run files, and recovery
+//! round-trips them. `Entry` is therefore no longer `Copy`.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
-/// A memtable record: either a live key (with a value-size proxy — this
-/// store is membership-centric, so payloads are sizes not bytes) or a
+/// A value payload. `Arc<[u8]>` so entries clone cheaply across the
+/// memtable, the WAL record, and SSTable runs without copying bytes.
+pub type Value = Arc<[u8]>;
+
+/// Build a [`Value`] of `len` zero bytes — the payload shape used
+/// when a caller puts a bare key (`NodeConfig::value_len` sizing).
+pub fn zero_value(len: u32) -> Value {
+    Arc::from(vec![0u8; len as usize].into_boxed_slice())
+}
+
+/// A memtable record: either a live key with its value bytes or a
 /// tombstone shadowing older versions in SSTables.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Entry {
-    Put { value_len: u32 },
+    Put { value: Value },
     Tombstone,
+}
+
+impl Entry {
+    /// Construct a `Put` from a byte slice.
+    pub fn put(value: &[u8]) -> Self {
+        Entry::Put {
+            value: Arc::from(value),
+        }
+    }
+
+    /// Construct a `Put` holding `len` zero bytes (size-proxy
+    /// payloads, the pre-PR-7 behaviour — used widely in tests).
+    pub fn put_sized(len: u32) -> Self {
+        Entry::Put {
+            value: zero_value(len),
+        }
+    }
+
+    /// Payload length in bytes (0 for tombstones).
+    pub fn value_len(&self) -> usize {
+        match self {
+            Entry::Put { value } => value.len(),
+            Entry::Tombstone => 0,
+        }
+    }
 }
 
 /// Sorted in-memory write buffer.
 #[derive(Debug, Clone, Default)]
 pub struct Memtable {
     map: BTreeMap<u64, Entry>,
-    /// Approximate heap bytes (keys + entries + payload proxies).
+    /// Approximate heap bytes (keys + entries + payloads).
     approx_bytes: usize,
     live: usize,
 }
 
-const ENTRY_OVERHEAD: usize = 8 + 8; // key + entry tag/len, BTree overhead elided
+const ENTRY_OVERHEAD: usize = 8 + 8; // key + entry tag/ptr, BTree overhead elided
 
 impl Memtable {
     pub fn new() -> Self {
@@ -33,13 +73,15 @@ impl Memtable {
     }
 
     /// Upsert a live key. Returns true if the key was not live before.
-    pub fn put(&mut self, key: u64, value_len: u32) -> bool {
+    pub fn put(&mut self, key: u64, value: Value) -> bool {
+        let value_len = value.len();
         let was_live = matches!(self.map.get(&key), Some(Entry::Put { .. }));
-        let old = self.map.insert(key, Entry::Put { value_len });
-        if old.is_none() {
-            self.approx_bytes += ENTRY_OVERHEAD;
+        let old = self.map.insert(key, Entry::Put { value });
+        match old {
+            None => self.approx_bytes += ENTRY_OVERHEAD,
+            Some(e) => self.approx_bytes = self.approx_bytes.saturating_sub(e.value_len()),
         }
-        self.approx_bytes += value_len as usize;
+        self.approx_bytes += value_len;
         if !was_live {
             self.live += 1;
         }
@@ -50,8 +92,9 @@ impl Memtable {
     /// memtable* before (it may still shadow an SSTable version).
     pub fn delete(&mut self, key: u64) -> bool {
         let was_live = matches!(self.map.get(&key), Some(Entry::Put { .. }));
-        if self.map.insert(key, Entry::Tombstone).is_none() {
-            self.approx_bytes += ENTRY_OVERHEAD;
+        match self.map.insert(key, Entry::Tombstone) {
+            None => self.approx_bytes += ENTRY_OVERHEAD,
+            Some(e) => self.approx_bytes = self.approx_bytes.saturating_sub(e.value_len()),
         }
         if was_live {
             self.live -= 1;
@@ -62,7 +105,7 @@ impl Memtable {
     /// Three-valued read: `Some(Put)` live here, `Some(Tombstone)`
     /// deleted here (shadowing), `None` unknown — consult SSTables.
     pub fn get(&self, key: u64) -> Option<Entry> {
-        self.map.get(&key).copied()
+        self.map.get(&key).cloned()
     }
 
     /// Is the key live in this memtable?
@@ -111,9 +154,9 @@ mod tests {
     #[test]
     fn put_get_delete_cycle() {
         let mut m = Memtable::new();
-        assert!(m.put(5, 100));
-        assert!(!m.put(5, 50), "upsert of live key");
-        assert_eq!(m.get(5), Some(Entry::Put { value_len: 50 }));
+        assert!(m.put(5, zero_value(100)));
+        assert!(!m.put(5, zero_value(50)), "upsert of live key");
+        assert_eq!(m.get(5), Some(Entry::put_sized(50)));
         assert!(m.live_contains(5));
         assert!(m.delete(5));
         assert_eq!(m.get(5), Some(Entry::Tombstone));
@@ -142,7 +185,7 @@ mod tests {
     fn drain_sorted_is_sorted_and_empties() {
         let mut m = Memtable::new();
         for k in [5u64, 1, 9, 3, 7] {
-            m.put(k, 10);
+            m.put(k, zero_value(10));
         }
         m.delete(3);
         let run = m.drain_sorted();
@@ -155,18 +198,39 @@ mod tests {
     #[test]
     fn bytes_grow_with_payload() {
         let mut m = Memtable::new();
-        m.put(1, 1000);
+        m.put(1, zero_value(1000));
         let b1 = m.approx_bytes();
-        m.put(2, 0);
+        m.put(2, zero_value(0));
         assert!(m.approx_bytes() > b1);
         assert!(b1 >= 1000);
     }
 
     #[test]
+    fn upsert_accounts_replaced_payload() {
+        let mut m = Memtable::new();
+        m.put(1, zero_value(1000));
+        let big = m.approx_bytes();
+        m.put(1, zero_value(10));
+        assert!(m.approx_bytes() < big, "shrinking upsert must shrink bytes");
+        m.delete(1);
+        assert!(m.approx_bytes() <= ENTRY_OVERHEAD + 10);
+    }
+
+    #[test]
+    fn values_round_trip_bytes() {
+        let mut m = Memtable::new();
+        m.put(9, Arc::from(&b"payload-bytes"[..]));
+        match m.get(9) {
+            Some(Entry::Put { value }) => assert_eq!(&value[..], b"payload-bytes"),
+            other => panic!("expected Put, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn live_keys_excludes_tombstones() {
         let mut m = Memtable::new();
-        m.put(1, 0);
-        m.put(2, 0);
+        m.put(1, zero_value(0));
+        m.put(2, zero_value(0));
         m.delete(2);
         m.delete(3);
         let live: Vec<u64> = m.live_keys().collect();

@@ -24,16 +24,29 @@
 //! from disk, rebuilding only what fails validation. See
 //! `rust/src/store/README.md` for the on-disk format and the recovery
 //! state machine.
+//!
+//! Since PR 7 the persistent tier closes the acknowledged-write gap:
+//! a [`wal`] (write-ahead log) records every put/delete *before* the
+//! memtable applies it, so [`StorageNode::recover`] replays exactly
+//! the acknowledged operations that had not reached a durable
+//! SSTable — no acknowledged write is ever lost to a crash. All file
+//! operations go through the [`StoreIo`] seam ([`io`] module), whose
+//! deterministic [`FaultyIo`] injector powers the systematic
+//! crash-point sweep in `testutil::crash`.
 
 pub mod compaction;
 pub mod flush;
 pub mod frozen;
+pub mod io;
 pub mod memtable;
 pub mod node;
 pub mod sstable;
+pub mod wal;
 
 pub use flush::{FlushPolicy, FlushReason};
 pub use frozen::{Backing, FrozenStore, RecoverError, RunFile};
-pub use memtable::{Entry, Memtable};
+pub use io::{FaultConfig, FaultyIo, RealIo, StoreIo};
+pub use memtable::{Entry, Memtable, Value};
 pub use node::{NodeConfig, NodeStats, StorageNode};
 pub use sstable::{FrozenFilter, SsTable};
+pub use wal::{FsyncPolicy, Wal, WalConfig, WalRecord};

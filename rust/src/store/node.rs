@@ -31,20 +31,29 @@
 //! 2. memtable (put → found, tombstone → absent);
 //! 3. SSTables newest→oldest, each gated by its frozen filter.
 //!
-//! Write path: memtable upsert + filter insert; then the
-//! [`FlushPolicy`] decides whether to freeze (premature flushes are
-//! exactly what a pressured fixed filter causes — experiment E6).
+//! Write path: WAL append first (when a persistent tier is
+//! configured — see [`Wal`]), then memtable upsert + filter insert;
+//! then the [`FlushPolicy`] decides whether to freeze (premature
+//! flushes are exactly what a pressured fixed filter causes —
+//! experiment E6). The WAL append happening *before* the memtable
+//! apply is the durability contract: once `put`/`delete` returns,
+//! the operation is on disk and [`StorageNode::recover`] will replay
+//! it — no acknowledged write is ever lost to a crash.
 
 use super::compaction::{merge_tables, CompactionPolicy};
 use super::flush::{FlushPolicy, FlushReason};
 use super::frozen::FrozenStore;
-use super::memtable::{Entry, Memtable};
+use super::io::{RealIo, StoreIo};
+use super::memtable::{zero_value, Entry, Memtable, Value};
 use super::sstable::{FrozenFilter, SsTable};
+use super::wal::{self, FsyncPolicy, Wal, WalConfig, WalRecord};
 use crate::filter::{
     BatchedFilter, DynFilter, FilterBuilder, MembershipFilter, Mode, OcfConfig, ProbeSession,
 };
 use std::io;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
 
 /// Node configuration.
 #[derive(Debug, Clone)]
@@ -66,6 +75,13 @@ pub struct NodeConfig {
     /// [`StorageNode::recover`] can reopen the node from disk, serving
     /// recovered filters straight off the file mapping.
     pub persist_dir: Option<String>,
+    /// Memtable write-ahead logging (only meaningful together with
+    /// [`NodeConfig::persist_dir`]): enabled/fsync-policy knobs.
+    pub wal: WalConfig,
+    /// The I/O layer the persistent tier (FrozenStore + WAL) runs on.
+    /// `None` means the real filesystem; the crash-sweep harness
+    /// injects a seeded [`FaultyIo`](super::io::FaultyIo) here.
+    pub io: Option<Arc<dyn StoreIo>>,
 }
 
 impl Default for NodeConfig {
@@ -77,6 +93,8 @@ impl Default for NodeConfig {
             compaction: CompactionPolicy::default(),
             value_len: 64,
             persist_dir: None,
+            wal: WalConfig::default(),
+            io: None,
         }
     }
 }
@@ -126,6 +144,21 @@ pub struct NodeStats {
     /// (truncation, checksum mismatch, version skew) — a durability
     /// event worth alerting on, unlike a merely-missing file.
     filter_recovery_rejected: u64,
+    /// Payload records (puts/deletes, not flush markers) appended to
+    /// the WAL.
+    wal_appends: u64,
+    /// Payload records whose WAL append *failed* — the write was
+    /// acknowledged without its durability promise. Degraded, loud,
+    /// never silent.
+    wal_append_failed: u64,
+    /// Operations re-applied from the WAL by [`StorageNode::recover`].
+    wal_replayed: u64,
+    /// WAL segments whose decode stopped at a torn/corrupt tail
+    /// during recovery (the intact prefix was still replayed).
+    wal_torn_tail: u64,
+    /// Transient I/O errors absorbed by bounded retry
+    /// (`util::retry`) across the WAL and the frozen tier.
+    io_retries: u64,
 }
 
 impl NodeStats {
@@ -162,6 +195,32 @@ impl NodeStats {
     pub fn filter_recovery_rejected(&self) -> u64 {
         self.filter_recovery_rejected
     }
+
+    /// Payload records appended to the WAL.
+    pub fn wal_appends(&self) -> u64 {
+        self.wal_appends
+    }
+
+    /// Acknowledged writes whose WAL append failed (durability
+    /// degraded to freeze-time persistence for those ops).
+    pub fn wal_append_failed(&self) -> u64 {
+        self.wal_append_failed
+    }
+
+    /// Operations re-applied from the WAL at recovery.
+    pub fn wal_replayed(&self) -> u64 {
+        self.wal_replayed
+    }
+
+    /// WAL segments with a torn/corrupt tail tolerated at recovery.
+    pub fn wal_torn_tail(&self) -> u64 {
+        self.wal_torn_tail
+    }
+
+    /// Transient I/O errors absorbed by bounded retry.
+    pub fn io_retries(&self) -> u64 {
+        self.io_retries
+    }
 }
 
 impl Clone for NodeStats {
@@ -179,6 +238,11 @@ impl Clone for NodeStats {
             filters_recovered: self.filters_recovered,
             filters_rebuilt: self.filters_rebuilt,
             filter_recovery_rejected: self.filter_recovery_rejected,
+            wal_appends: self.wal_appends,
+            wal_append_failed: self.wal_append_failed,
+            wal_replayed: self.wal_replayed,
+            wal_torn_tail: self.wal_torn_tail,
+            io_retries: self.io_retries,
         }
     }
 }
@@ -195,8 +259,29 @@ pub struct StorageNode {
     /// The persistent frozen-filter tier, when
     /// [`NodeConfig::persist_dir`] is set.
     frozen_store: Option<FrozenStore>,
+    /// Memtable write-ahead log (persist_dir set + wal enabled).
+    /// `None` while configured-on means the WAL could not be opened —
+    /// the node serves on, counting every unlogged acknowledgement in
+    /// `wal_append_failed`.
+    wal: Option<Wal>,
+    /// The shared payload for bare-key puts (`value_len` zero bytes;
+    /// one allocation, refcounted per entry).
+    default_value: Value,
     next_generation: u64,
     pub stats: NodeStats,
+}
+
+/// Open the WAL, degrading loudly (not fatally) when the directory
+/// is unwritable: the node still serves, and `wal_append_failed`
+/// counts every acknowledgement whose durability promise was broken.
+fn open_wal(dir: &Path, io: Arc<dyn StoreIo>, policy: FsyncPolicy, first: u64) -> Option<Wal> {
+    match Wal::open(dir, io, policy, first) {
+        Ok(w) => Some(w),
+        Err(e) => {
+            eprintln!("ocf: wal: open failed (writes will not be logged): {e}");
+            None
+        }
+    }
 }
 
 impl StorageNode {
@@ -224,15 +309,24 @@ impl StorageNode {
     /// be created/opened (use [`StorageNode::recover`] for a fallible
     /// open that also reloads existing state).
     pub fn with_filter(cfg: NodeConfig, filter: DynFilter) -> Self {
+        let io: Arc<dyn StoreIo> = cfg.io.clone().unwrap_or_else(|| Arc::new(RealIo));
         let frozen_store = cfg.persist_dir.as_ref().map(|dir| {
-            FrozenStore::open(dir)
+            FrozenStore::open_with(dir, io.clone())
                 .unwrap_or_else(|e| panic!("persist_dir {dir:?}: {e}"))
         });
+        let wal = match &cfg.persist_dir {
+            Some(dir) if cfg.wal.enabled => {
+                open_wal(Path::new(dir), io, cfg.wal.fsync, 1)
+            }
+            _ => None,
+        };
         Self {
             memtable: Memtable::new(),
             sstables: Vec::new(),
             filter,
             frozen_store,
+            wal,
+            default_value: zero_value(cfg.value_len),
             next_generation: 1,
             cfg,
             stats: NodeStats::default(),
@@ -265,7 +359,8 @@ impl StorageNode {
                 "StorageNode::recover requires NodeConfig::persist_dir",
             ));
         };
-        let store = FrozenStore::open(&dir)?;
+        let io: Arc<dyn StoreIo> = cfg.io.clone().unwrap_or_else(|| Arc::new(RealIo));
+        let store = FrozenStore::open_with(&dir, io.clone())?;
         let mut node = Self {
             memtable: Memtable::new(),
             sstables: Vec::new(),
@@ -274,6 +369,8 @@ impl StorageNode {
                 .build()
                 .unwrap_or_else(|e| panic!("NodeConfig::filter: {e}")),
             frozen_store: None,
+            wal: None,
+            default_value: zero_value(cfg.value_len),
             next_generation: 1,
             cfg,
             stats: NodeStats::default(),
@@ -343,8 +440,73 @@ impl StorageNode {
         // generations() is ascending, but make the newest-shadows-oldest
         // invariant explicit rather than inherited.
         node.sstables.sort_by_key(|t| t.generation);
+        node.stats.io_retries += store.take_retries();
         node.frozen_store = Some(store);
-        if !node.sstables.is_empty() {
+        // Pass 3: WAL replay — re-apply every acknowledged operation
+        // that had not reached a durable SSTable at the crash. Each
+        // segment is staged independently: a FlushMarker inside it
+        // proves everything staged before the marker is covered by a
+        // persisted generation, so only the ops *after* the last
+        // marker re-enter the memtable.
+        let mut replayed_segments: Vec<u64> = Vec::new();
+        let mut max_segment = 0u64;
+        if node.cfg.wal.enabled {
+            for seg in wal::list_segments(io.as_ref(), Path::new(&dir))? {
+                max_segment = max_segment.max(seg);
+                match wal::replay_segment(io.as_ref(), Path::new(&dir), seg) {
+                    Ok(replay) => {
+                        if replay.torn {
+                            node.stats.wal_torn_tail += 1;
+                            eprintln!(
+                                "ocf: wal: segment {seg:#018x}: torn tail; intact prefix replayed"
+                            );
+                        }
+                        let mut staged: Vec<WalRecord> = Vec::new();
+                        for rec in replay.records {
+                            match rec {
+                                WalRecord::FlushMarker { .. } => staged.clear(),
+                                op => staged.push(op),
+                            }
+                        }
+                        for rec in staged {
+                            match rec {
+                                WalRecord::Put { key, value } => {
+                                    node.memtable.put(key, value);
+                                }
+                                WalRecord::Delete { key } => {
+                                    node.memtable.delete(key);
+                                }
+                                WalRecord::FlushMarker { .. } => unreachable!("cleared above"),
+                            }
+                            node.stats.wal_replayed += 1;
+                        }
+                        replayed_segments.push(seg);
+                    }
+                    Err(e) => {
+                        eprintln!("ocf: wal: segment {seg:#018x}: replay failed: {e}");
+                    }
+                }
+            }
+            match Wal::open(Path::new(&dir), io, node.cfg.wal.fsync, max_segment + 1) {
+                Ok(mut w) => {
+                    if node.memtable.is_empty() {
+                        // Nothing survived staging: the old segments
+                        // carry no live ops, so they can go now.
+                        w.retire_segments(&replayed_segments);
+                    } else {
+                        // The replayed ops live only in the memtable
+                        // until the next successful flush commits —
+                        // keep their segments until then.
+                        w.mark_replayed(replayed_segments);
+                    }
+                    node.wal = Some(w);
+                }
+                Err(e) => {
+                    eprintln!("ocf: wal: open failed (new writes will not be logged): {e}");
+                }
+            }
+        }
+        if !node.sstables.is_empty() || !node.memtable.is_empty() {
             node.rebuild_node_filter();
         }
         Ok(node)
@@ -353,6 +515,11 @@ impl StorageNode {
     /// The persistent tier, when configured.
     pub fn frozen_store(&self) -> Option<&FrozenStore> {
         self.frozen_store.as_ref()
+    }
+
+    /// The live write-ahead log, when configured and healthy.
+    pub fn wal(&self) -> Option<&Wal> {
+        self.wal.as_ref()
     }
 
     pub fn config(&self) -> &NodeConfig {
@@ -383,11 +550,34 @@ impl StorageNode {
         })
     }
 
-    /// Insert/overwrite a key. Returns Err only in Static filter mode
-    /// when the filter is wedged *and* flushing can't relieve it.
+    /// Insert/overwrite a key with the default (`value_len` zero-byte)
+    /// payload. Returns Err only in Static filter mode when the filter
+    /// is wedged *and* flushing can't relieve it.
     pub fn put(&mut self, key: u64) -> Result<(), crate::filter::FilterError> {
+        let value = self.default_value.clone();
+        self.put_arc(key, value)
+    }
+
+    /// Insert/overwrite a key with real value bytes. The bytes ride
+    /// the WAL record, the memtable entry, and the SSTable run —
+    /// [`StorageNode::get_value`] returns them, across restarts.
+    pub fn put_value(
+        &mut self,
+        key: u64,
+        value: &[u8],
+    ) -> Result<(), crate::filter::FilterError> {
+        self.put_arc(key, Arc::from(value))
+    }
+
+    fn put_arc(&mut self, key: u64, value: Value) -> Result<(), crate::filter::FilterError> {
         self.stats.puts += 1;
-        self.memtable.put(key, self.cfg.value_len);
+        // WAL first: by the time the memtable (and the caller) sees
+        // the write, it is as durable as the fsync policy promises.
+        self.wal_log(WalRecord::Put {
+            key,
+            value: value.clone(),
+        });
+        self.memtable.put(key, value);
         match self.filter.insert(key) {
             Ok(()) => {}
             Err(e) => {
@@ -421,6 +611,7 @@ impl StorageNode {
         if !live {
             return false;
         }
+        self.wal_log(WalRecord::Delete { key });
         self.memtable.delete(key);
         // Only filters with an authoritative key store delete their own
         // entries — their removal is exact. For the rest the filter
@@ -449,6 +640,35 @@ impl StorageNode {
             return false;
         }
         self.read_tables(key)
+    }
+
+    /// Value read: the payload bytes of a live key, `None` for
+    /// absent/deleted keys. Same path as [`StorageNode::get`]
+    /// (filter short-circuit, memtable, SSTables newest→oldest).
+    pub fn get_value(&self, key: u64) -> Option<Value> {
+        self.stats.gets.fetch_add(1, Relaxed);
+        if !self.filter.contains(key) {
+            self.stats.filter_short_circuits.fetch_add(1, Relaxed);
+            return None;
+        }
+        match self.memtable.get(key) {
+            Some(Entry::Put { value }) => return Some(value),
+            Some(Entry::Tombstone) => return None,
+            None => {}
+        }
+        for t in self.sstables.iter().rev() {
+            if !t.might_contain(key) {
+                self.stats.sstable_probes_skipped.fetch_add(1, Relaxed);
+                continue;
+            }
+            self.stats.sstable_probes.fetch_add(1, Relaxed);
+            match t.get(key) {
+                Some(Entry::Put { value }) => return Some(value),
+                Some(Entry::Tombstone) => return None,
+                None => {}
+            }
+        }
+        None
     }
 
     /// Batched membership reads: one bulk hash + the prefetch-pipelined
@@ -504,6 +724,30 @@ impl StorageNode {
         false
     }
 
+    /// Append one payload record to the WAL (no-op for fully
+    /// in-memory nodes). Failure is loud but not fatal: the op is
+    /// still applied, and `wal_append_failed` records the broken
+    /// durability promise — for that op the node degrades to the
+    /// pre-WAL freeze-time contract.
+    fn wal_log(&mut self, rec: WalRecord) {
+        let Some(w) = self.wal.as_mut() else {
+            if self.cfg.wal.enabled && self.cfg.persist_dir.is_some() {
+                // WAL configured on but unopenable: every
+                // acknowledgement without a log record is counted.
+                self.stats.wal_append_failed += 1;
+            }
+            return;
+        };
+        match w.append(&rec) {
+            Ok(()) => self.stats.wal_appends += 1,
+            Err(e) => {
+                self.stats.wal_append_failed += 1;
+                eprintln!("ocf: wal: append failed (durability degraded): {e}");
+            }
+        }
+        self.stats.io_retries += w.take_retries();
+    }
+
     fn maybe_flush(&mut self) {
         if let Some(reason) = self.cfg.flush.should_flush(
             self.memtable.approx_bytes(),
@@ -532,11 +776,30 @@ impl StorageNode {
         // (volatile) memtable, so persist the SSTable before serving
         // from it. Persistence failure degrades to the in-memory tier
         // (loud, not fatal): the node keeps answering correctly from
-        // RAM and only restart-recovery of this generation is lost.
+        // RAM — and with a WAL the sealed segment is parked as an
+        // orphan instead of retired, so the ops are still replayable.
+        let mut persisted = false;
         if let Some(store) = &self.frozen_store {
-            if let Err(e) = store.persist(&table) {
-                eprintln!("ocf: persist: generation {gen:#x}: flush persist failed: {e}");
+            match store.persist(&table) {
+                Ok(()) => persisted = true,
+                Err(e) => {
+                    eprintln!("ocf: persist: generation {gen:#x}: flush persist failed: {e}");
+                }
             }
+            self.stats.io_retries += store.take_retries();
+        }
+        if let Some(w) = self.wal.as_mut() {
+            if persisted {
+                // Marker after the data: its presence *proves* the
+                // generation is durable. A failed marker/rotation
+                // only costs an idempotent re-apply at recovery.
+                if let Err(e) = w.commit_flush(gen) {
+                    eprintln!("ocf: wal: generation {gen:#x}: flush commit failed: {e}");
+                }
+            } else {
+                w.abandon_flush();
+            }
+            self.stats.io_retries += w.take_retries();
         }
         self.sstables.push(table);
         // Fixed-filter nodes rebuild their node filter from the live set
@@ -581,7 +844,8 @@ impl StorageNode {
         // newest-first) shadow sstable versions
         let mut dead: std::collections::HashSet<u64> = std::collections::HashSet::new();
         for t in self.sstables.iter().rev() {
-            for &(k, e) in t.iter() {
+            for (k, e) in t.iter() {
+                let k = *k;
                 if seen.contains(&k) || dead.contains(&k) {
                     continue;
                 }
@@ -628,18 +892,32 @@ impl StorageNode {
         // below it, and after the swap nothing is below the merged
         // table). Removal is idempotent, so a re-run compaction can
         // finish the cleanup.
+        let mut snapshot_durable = false;
         if let Some(store) = &self.frozen_store {
-            if let Err(e) = store.persist_full(&table) {
-                eprintln!("ocf: persist: generation {gen:#x}: compaction persist failed: {e}");
-            } else {
-                for old in &self.sstables {
-                    if let Err(e) = store.remove(old.generation) {
-                        eprintln!(
-                            "ocf: persist: generation {:#x}: cleanup failed: {e}",
-                            old.generation
-                        );
+            match store.persist_full(&table) {
+                Ok(()) => {
+                    snapshot_durable = true;
+                    for old in &self.sstables {
+                        if let Err(e) = store.remove(old.generation) {
+                            eprintln!(
+                                "ocf: persist: generation {:#x}: cleanup failed: {e}",
+                                old.generation
+                            );
+                        }
                     }
                 }
+                Err(e) => {
+                    eprintln!("ocf: persist: generation {gen:#x}: compaction persist failed: {e}");
+                }
+            }
+            self.stats.io_retries += store.take_retries();
+        }
+        if snapshot_durable {
+            // A durable full snapshot covers every live key — any
+            // orphaned WAL segments (failed-flush eras) can go.
+            if let Some(w) = self.wal.as_mut() {
+                w.commit_snapshot();
+                self.stats.io_retries += w.take_retries();
             }
         }
         self.sstables = vec![table];
@@ -954,6 +1232,13 @@ mod tests {
         NodeConfig {
             flush: FlushPolicy::small(1000),
             persist_dir: Some(dir.to_string()),
+            // Group commit keeps the multi-thousand-put tests cheap;
+            // against in-process "crashes" (drop without flush) the
+            // write-through appends are durable regardless of policy.
+            wal: WalConfig {
+                enabled: true,
+                fsync: FsyncPolicy::EveryN(64),
+            },
             ..NodeConfig::default()
         }
     }
@@ -1005,9 +1290,9 @@ mod tests {
     }
 
     #[test]
-    fn unflushed_memtable_is_not_durable() {
-        // this tier persists at freeze time (no WAL): only flushed
-        // data survives a restart, and recovery must not invent keys
+    fn wal_makes_unflushed_memtable_durable() {
+        // the PR-7 contract: acknowledged writes survive a crash even
+        // when they never reached an SSTable — the WAL replays them
         let dir = scratch("memtable");
         let mut n = StorageNode::new(persistent_cfg(&dir));
         for k in 0..200u64 {
@@ -1015,16 +1300,130 @@ mod tests {
         }
         n.flush(FlushReason::MemtableKeys);
         for k in 200..300u64 {
+            n.put(k).unwrap(); // memtable-only, but WAL-logged
+        }
+        assert!(n.delete(5), "delete of a flushed key, memtable-only");
+        assert_eq!(n.stats.wal_append_failed(), 0);
+        drop(n); // no flush: simulated crash
+
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert!(
+            r.stats.wal_replayed() >= 101,
+            "unflushed ops must replay: {}",
+            r.stats.wal_replayed()
+        );
+        for k in 0..300u64 {
+            if k == 5 {
+                assert!(!r.get(k), "acknowledged delete must hold after replay");
+            } else {
+                assert!(r.get(k), "{k} was acknowledged, must survive");
+            }
+        }
+        assert!(!r.get(400), "recovery must not invent keys");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wal_disabled_restores_freeze_time_contract() {
+        // with the WAL off, only flushed data survives a restart —
+        // the pre-WAL behaviour, still available as a config choice
+        let dir = scratch("nowal");
+        let cfg = || NodeConfig {
+            wal: WalConfig {
+                enabled: false,
+                ..WalConfig::default()
+            },
+            ..persistent_cfg(&dir)
+        };
+        let mut n = StorageNode::new(cfg());
+        for k in 0..200u64 {
+            n.put(k).unwrap();
+        }
+        n.flush(FlushReason::MemtableKeys);
+        for k in 200..300u64 {
             n.put(k).unwrap(); // stays in the memtable
         }
+        assert_eq!(n.stats.wal_appends(), 0);
+        assert_eq!(n.stats.wal_append_failed(), 0, "disabled is not a failure");
         drop(n);
-        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        let r = StorageNode::recover(cfg()).unwrap();
+        assert_eq!(r.stats.wal_replayed(), 0);
         for k in 0..200u64 {
             assert!(r.get(k), "{k}");
         }
         for k in 200..300u64 {
             assert!(!r.get(k), "{k} was never frozen, must not resurrect");
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wal_values_round_trip_across_restart() {
+        let dir = scratch("walvalues");
+        // few ops → exercise the strict default policy here
+        let cfg = NodeConfig {
+            wal: WalConfig::default(), // fsync = Always
+            ..persistent_cfg(&dir)
+        };
+        let mut n = StorageNode::new(cfg);
+        n.put_value(1, b"alpha").unwrap();
+        n.put_value(2, b"").unwrap();
+        n.put_value(3, b"gamma-with-\x00-and-\xff").unwrap();
+        n.flush(FlushReason::MemtableKeys); // 1-3 via the SSTable path
+        n.put_value(4, b"unflushed-bytes").unwrap(); // 4 via WAL replay
+        n.put_value(1, b"alpha-v2").unwrap(); // upsert shadows the run
+        drop(n);
+
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert_eq!(r.get_value(1).as_deref(), Some(&b"alpha-v2"[..]));
+        assert_eq!(r.get_value(2).as_deref(), Some(&b""[..]));
+        assert_eq!(r.get_value(3).as_deref(), Some(&b"gamma-with-\x00-and-\xff"[..]));
+        assert_eq!(r.get_value(4).as_deref(), Some(&b"unflushed-bytes"[..]));
+        assert_eq!(r.get_value(9), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wal_segments_retire_once_flushed() {
+        let dir = scratch("walretire");
+        let mut n = StorageNode::new(persistent_cfg(&dir));
+        for k in 0..50u64 {
+            n.put(k).unwrap();
+        }
+        n.flush(FlushReason::MemtableKeys);
+        let wal = n.wal().expect("wal configured");
+        assert!(wal.segments_retired() >= 1, "flushed segment must retire");
+        let segs =
+            wal::list_segments(&RealIo, Path::new(&dir)).unwrap();
+        assert_eq!(segs.len(), 1, "only the active segment remains: {segs:?}");
+        drop(n);
+
+        // recovery of a clean shutdown retires the leftover segments
+        let r = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        assert_eq!(r.stats.wal_replayed(), 0, "clean shutdown: nothing staged");
+        let segs = wal::list_segments(&RealIo, Path::new(&dir)).unwrap();
+        assert_eq!(segs.len(), 1, "stale segments cleaned: {segs:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wal_replay_is_idempotent_across_double_recovery() {
+        let dir = scratch("walidem");
+        let mut n = StorageNode::new(persistent_cfg(&dir));
+        for k in 0..120u64 {
+            n.put(k).unwrap();
+        }
+        n.delete(3);
+        drop(n); // crash with everything in the WAL
+
+        let r1 = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        let snap1: Vec<bool> = (0..130u64).map(|k| r1.get(k)).collect();
+        drop(r1); // crash again before any flush: segments must survive
+
+        let r2 = StorageNode::recover(persistent_cfg(&dir)).unwrap();
+        let snap2: Vec<bool> = (0..130u64).map(|k| r2.get(k)).collect();
+        assert_eq!(snap1, snap2, "second replay must answer identically");
+        assert!(r2.stats.wal_replayed() >= 120);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -1094,12 +1493,12 @@ mod tests {
         // full snapshot, tombstone for key 1 dropped) but died before
         // cleaning up its input (gen 1, which still holds Put 1).
         let old = SsTable::from_sorted_run(
-            vec![(1, Entry::Put { value_len: 8 }), (2, Entry::Put { value_len: 8 })],
+            vec![(1, Entry::put_sized(8)), (2, Entry::put_sized(8))],
             1,
             16,
             7,
         );
-        let merged = SsTable::from_sorted_run(vec![(2, Entry::Put { value_len: 8 })], 2, 16, 5);
+        let merged = SsTable::from_sorted_run(vec![(2, Entry::put_sized(8))], 2, 16, 5);
         store.persist(&old).unwrap();
         store.persist_full(&merged).unwrap();
 

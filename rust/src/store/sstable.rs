@@ -192,12 +192,12 @@ impl SsTable {
         self.filter.contains(key)
     }
 
-    /// Exact lookup.
+    /// Exact lookup (entries clone cheaply — values are `Arc`-shared).
     pub fn get(&self, key: u64) -> Option<Entry> {
         self.run
             .binary_search_by_key(&key, |&(k, _)| k)
             .ok()
-            .map(|i| self.run[i].1)
+            .map(|i| self.run[i].1.clone())
     }
 
     pub fn filter(&self) -> &FrozenFilter {
@@ -215,10 +215,14 @@ impl SsTable {
         self.run.iter()
     }
 
-    /// Simulated on-disk size of the run payload (the `.run` file adds
-    /// a 40-byte header on top).
+    /// On-disk size of the run payload: a 13-byte fixed prefix per
+    /// record plus its value bytes (the `.run` file adds a 40-byte
+    /// header on top).
     pub fn data_bytes(&self) -> usize {
-        self.run.len() * (8 + 5)
+        self.run
+            .iter()
+            .map(|(_, e)| 13 + e.value_len())
+            .sum()
     }
 
     pub fn memory_bytes(&self) -> usize {
@@ -231,10 +235,8 @@ mod tests {
     use super::*;
 
     fn table_of(keys: &[u64]) -> SsTable {
-        let mut run: Vec<(u64, Entry)> = keys
-            .iter()
-            .map(|&k| (k, Entry::Put { value_len: 8 }))
-            .collect();
+        let mut run: Vec<(u64, Entry)> =
+            keys.iter().map(|&k| (k, Entry::put_sized(8))).collect();
         run.sort_by_key(|&(k, _)| k);
         SsTable::from_sorted_run(run, 1, 16, 7)
     }
@@ -245,7 +247,7 @@ mod tests {
         let t = table_of(&keys);
         for &k in &keys {
             assert!(t.might_contain(k), "filter must pass {k}");
-            assert_eq!(t.get(k), Some(Entry::Put { value_len: 8 }));
+            assert_eq!(t.get(k), Some(Entry::put_sized(8)));
         }
         assert_eq!(t.get(1), None);
         assert_eq!(t.len(), 5000);
@@ -273,9 +275,9 @@ mod tests {
     #[test]
     fn tombstones_are_findable() {
         let run = vec![
-            (1u64, Entry::Put { value_len: 4 }),
+            (1u64, Entry::put_sized(4)),
             (2, Entry::Tombstone),
-            (3, Entry::Put { value_len: 4 }),
+            (3, Entry::put_sized(4)),
         ];
         let t = SsTable::from_sorted_run(run, 2, 16, 3);
         assert!(t.might_contain(2), "tombstone must be indexed by the filter");

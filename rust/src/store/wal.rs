@@ -1,0 +1,681 @@
+//! Write-ahead log for the memtable: no acknowledged write is ever
+//! lost.
+//!
+//! Before any mutation is applied to the memtable, the node appends a
+//! length-prefixed, FNV-checksummed record here and (per the fsync
+//! policy) syncs it. On restart, [`replay_segment`] decodes the
+//! surviving segments and `StorageNode::recover` re-applies exactly
+//! the operations that had not yet reached a durable SSTable.
+//!
+//! ## Record format
+//!
+//! Every record is `len (u32) | checksum (u64, FNV-1a 64 over the
+//! payload) | payload`. Payloads:
+//!
+//! | tag | record | payload layout |
+//! |-----|--------|----------------|
+//! | 0 | `Delete` | `tag (u8) \| key (u64)` |
+//! | 1 | `Put` | `tag (u8) \| key (u64) \| value_len (u32) \| value bytes` |
+//! | 2 | `FlushMarker` | `tag (u8) \| generation (u64)` |
+//!
+//! All integers little-endian. A decoder that hits a short length
+//! prefix, a short payload, a bad checksum, or an unknown tag stops
+//! **at that point** and reports the tail as torn — everything before
+//! it is intact (records are append-ordered, and `atomic_write` is
+//! deliberately *not* used here: a WAL wants cheap appends, and the
+//! checksums give byte-precise torn-tail detection instead).
+//!
+//! ## Segments and their lifecycle
+//!
+//! One segment file per memtable incarnation, named
+//! `wal-<seg:016x>.log`, starting with a 32-byte header (magic
+//! `OCF1WALS`, version, segment id, header checksum). The active
+//! segment receives appends; at a successful flush the node calls
+//! [`Wal::commit_flush`], which appends a `FlushMarker` (proof the
+//! flushed SSTable generation is durable — the marker is written
+//! *after* the SSTable persists), rotates to a fresh segment, and
+//! retires every segment whose contents the marker covers.
+//!
+//! Failure legs keep the invariant "a segment is deleted only once
+//! its data is durable somewhere else":
+//!
+//! * flush persist **failed** → [`Wal::abandon_flush`]: rotate, but
+//!   park the sealed segment as *orphaned* (its ops live only in a
+//!   RAM SSTable now). Orphans are retired at the next successful
+//!   compaction snapshot ([`Wal::commit_snapshot`]) — the snapshot
+//!   re-persists every live key.
+//! * rotation itself fails (disk dying) → stay on the current
+//!   segment; replay handles mid-segment markers via per-segment
+//!   staging.
+//! * marker append fails → nothing is retired; replay re-applies ops
+//!   that are also in the durable SSTable, which is idempotent.
+//!
+//! ## Group commit (fsync policy)
+//!
+//! [`FsyncPolicy`] trades durability-against-power-loss for
+//! throughput: `Always` syncs every record, `EveryN(n)` syncs every
+//! n-th, `Os` never syncs (the OS flushes when it pleases). Against
+//! **process death** (SIGKILL) all three are equally safe — appends
+//! are write-through to the page cache, which survives the process.
+//! The policy only bounds loss when the *machine* dies.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::io::{read_via_handle, StoreIo};
+use super::memtable::Value;
+use crate::util::{fnv1a64, retry_transient};
+
+/// Segment file magic.
+pub const WAL_MAGIC: &[u8; 8] = b"OCF1WALS";
+/// Segment format version.
+pub const WAL_VERSION: u32 = 1;
+/// Segment header length in bytes.
+pub const WAL_HEADER_LEN: usize = 32;
+/// Per-record prefix: len (u32) + payload checksum (u64).
+pub const WAL_RECORD_PREFIX: usize = 4 + 8;
+/// Sanity cap on a single record's payload (1 GiB).
+const MAX_PAYLOAD: usize = 1 << 30;
+
+/// When (and whether) appends reach stable storage. See module docs
+/// for the exact durability contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync after every record — zero acknowledged loss even on
+    /// power failure.
+    Always,
+    /// fsync every n-th record (group commit) — at most n-1
+    /// acknowledged records lost on power failure.
+    EveryN(u32),
+    /// Never fsync from the WAL; the OS page cache decides.
+    Os,
+}
+
+impl Default for FsyncPolicy {
+    fn default() -> Self {
+        FsyncPolicy::Always
+    }
+}
+
+impl FsyncPolicy {
+    /// Stable textual form (used by the serve banner and E13 arms).
+    pub fn describe(&self) -> String {
+        match self {
+            FsyncPolicy::Always => "always".into(),
+            FsyncPolicy::EveryN(n) => format!("every_{n}"),
+            FsyncPolicy::Os => "os".into(),
+        }
+    }
+}
+
+/// Node-level WAL configuration (`[store] wal` / `fsync` /
+/// `fsync_every` in config files).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalConfig {
+    /// Log memtable mutations? Only meaningful with a `persist_dir`.
+    pub enabled: bool,
+    pub fsync: FsyncPolicy,
+}
+
+impl Default for WalConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            fsync: FsyncPolicy::Always,
+        }
+    }
+}
+
+/// One logged operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalRecord {
+    Put { key: u64, value: Value },
+    Delete { key: u64 },
+    /// SSTable generation `generation` is durable on disk; every
+    /// record before this marker (in this segment) is covered by it.
+    FlushMarker { generation: u64 },
+}
+
+impl WalRecord {
+    fn encode_payload(&self) -> Vec<u8> {
+        match self {
+            WalRecord::Delete { key } => {
+                let mut p = Vec::with_capacity(9);
+                p.push(0u8);
+                p.extend_from_slice(&key.to_le_bytes());
+                p
+            }
+            WalRecord::Put { key, value } => {
+                let mut p = Vec::with_capacity(13 + value.len());
+                p.push(1u8);
+                p.extend_from_slice(&key.to_le_bytes());
+                p.extend_from_slice(&(value.len() as u32).to_le_bytes());
+                p.extend_from_slice(value);
+                p
+            }
+            WalRecord::FlushMarker { generation } => {
+                let mut p = Vec::with_capacity(9);
+                p.push(2u8);
+                p.extend_from_slice(&generation.to_le_bytes());
+                p
+            }
+        }
+    }
+
+    fn decode_payload(p: &[u8]) -> Option<WalRecord> {
+        let (&tag, rest) = p.split_first()?;
+        match tag {
+            0 => {
+                let key = u64::from_le_bytes(rest.get(0..8)?.try_into().ok()?);
+                if rest.len() != 8 {
+                    return None;
+                }
+                Some(WalRecord::Delete { key })
+            }
+            1 => {
+                let key = u64::from_le_bytes(rest.get(0..8)?.try_into().ok()?);
+                let vlen = u32::from_le_bytes(rest.get(8..12)?.try_into().ok()?) as usize;
+                let bytes = rest.get(12..)?;
+                if bytes.len() != vlen {
+                    return None;
+                }
+                Some(WalRecord::Put {
+                    key,
+                    value: Arc::from(bytes),
+                })
+            }
+            2 => {
+                let generation = u64::from_le_bytes(rest.get(0..8)?.try_into().ok()?);
+                if rest.len() != 8 {
+                    return None;
+                }
+                Some(WalRecord::FlushMarker { generation })
+            }
+            _ => None,
+        }
+    }
+}
+
+fn encode_record(rec: &WalRecord) -> Vec<u8> {
+    let payload = rec.encode_payload();
+    let mut buf = Vec::with_capacity(WAL_RECORD_PREFIX + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    buf
+}
+
+fn encode_header(segment: u64) -> [u8; WAL_HEADER_LEN] {
+    let mut h = [0u8; WAL_HEADER_LEN];
+    h[0..8].copy_from_slice(WAL_MAGIC);
+    h[8..12].copy_from_slice(&WAL_VERSION.to_le_bytes());
+    // 12..16 reserved (zero)
+    h[16..24].copy_from_slice(&segment.to_le_bytes());
+    let sum = fnv1a64(&h[0..24]);
+    h[24..32].copy_from_slice(&sum.to_le_bytes());
+    h
+}
+
+/// Segment file name for id `segment`.
+pub fn segment_file_name(segment: u64) -> String {
+    format!("wal-{segment:016x}.log")
+}
+
+fn segment_path(dir: &Path, segment: u64) -> PathBuf {
+    dir.join(segment_file_name(segment))
+}
+
+/// List WAL segment ids present in `dir`, ascending. Stray names are
+/// ignored, exactly like `FrozenStore::generations`.
+pub fn list_segments(io: &dyn StoreIo, dir: &Path) -> io::Result<Vec<u64>> {
+    let mut segs = Vec::new();
+    for name in io.read_dir(dir)? {
+        if let Some(hex) = name
+            .strip_prefix("wal-")
+            .and_then(|s| s.strip_suffix(".log"))
+        {
+            if hex.len() == 16 {
+                if let Ok(id) = u64::from_str_radix(hex, 16) {
+                    segs.push(id);
+                }
+            }
+        }
+    }
+    segs.sort_unstable();
+    Ok(segs)
+}
+
+/// A decoded segment: the records that validated, in append order,
+/// plus whether the decode stopped early at a torn/corrupt tail.
+#[derive(Debug)]
+pub struct SegmentReplay {
+    pub segment: u64,
+    pub records: Vec<WalRecord>,
+    pub torn: bool,
+}
+
+/// Decode one segment, tolerating a torn tail: decoding stops at the
+/// first record whose length prefix, payload, or checksum doesn't
+/// hold, and everything decoded up to that point is returned with
+/// `torn = true`. A missing/short/corrupt *header* yields zero
+/// records (also `torn` — the segment existed, so something was cut
+/// short). Only real I/O errors (`ErrorKind` other than data
+/// problems) propagate as `Err`.
+pub fn replay_segment(io: &dyn StoreIo, dir: &Path, segment: u64) -> io::Result<SegmentReplay> {
+    let bytes = read_via_handle(io, &segment_path(dir, segment))?;
+    let mut out = SegmentReplay {
+        segment,
+        records: Vec::new(),
+        torn: false,
+    };
+    if bytes.len() < WAL_HEADER_LEN {
+        out.torn = true;
+        return Ok(out);
+    }
+    let h = &bytes[..WAL_HEADER_LEN];
+    let sum = u64::from_le_bytes(h[24..32].try_into().unwrap());
+    if &h[0..8] != WAL_MAGIC
+        || u32::from_le_bytes(h[8..12].try_into().unwrap()) != WAL_VERSION
+        || u64::from_le_bytes(h[16..24].try_into().unwrap()) != segment
+        || sum != fnv1a64(&h[0..24])
+    {
+        out.torn = true;
+        return Ok(out);
+    }
+    let mut off = WAL_HEADER_LEN;
+    while off < bytes.len() {
+        if bytes.len() - off < WAL_RECORD_PREFIX {
+            out.torn = true;
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        let want_sum = u64::from_le_bytes(bytes[off + 4..off + 12].try_into().unwrap());
+        let start = off + WAL_RECORD_PREFIX;
+        if len > MAX_PAYLOAD || bytes.len() - start < len {
+            out.torn = true;
+            break;
+        }
+        let payload = &bytes[start..start + len];
+        if fnv1a64(payload) != want_sum {
+            out.torn = true;
+            break;
+        }
+        match WalRecord::decode_payload(payload) {
+            Some(rec) => out.records.push(rec),
+            None => {
+                out.torn = true;
+                break;
+            }
+        }
+        off = start + len;
+    }
+    Ok(out)
+}
+
+/// The live write-ahead log of one `StorageNode`.
+///
+/// All methods absorb transient I/O errors via `util::retry`
+/// (harvest the count with [`Wal::take_retries`] — the node feeds it
+/// into `NodeStats::io_retries`).
+#[derive(Debug)]
+pub struct Wal {
+    dir: PathBuf,
+    io: Arc<dyn StoreIo>,
+    policy: FsyncPolicy,
+    /// Id of the segment currently receiving appends.
+    active: u64,
+    /// Records appended since the last sync (EveryN bookkeeping).
+    unsynced: u32,
+    /// Segments restored by recovery whose ops now live in the
+    /// current memtable — retired at the next successful flush.
+    replayed_pending: Vec<u64>,
+    /// Segments whose flush persist *failed* (data exists only in a
+    /// RAM SSTable) — retired at the next durable full snapshot.
+    orphaned: Vec<u64>,
+    appends: u64,
+    retries: u64,
+    segments_retired: u64,
+}
+
+impl Wal {
+    /// Open a WAL in `dir`, creating segment `first_segment` as the
+    /// active one. Recovery passes `max_existing + 1` so ids never
+    /// collide with segments from earlier incarnations.
+    pub fn open(
+        dir: &Path,
+        io: Arc<dyn StoreIo>,
+        policy: FsyncPolicy,
+        first_segment: u64,
+    ) -> io::Result<Wal> {
+        io.create_dir_all(dir)?;
+        let mut wal = Wal {
+            dir: dir.to_path_buf(),
+            io,
+            policy,
+            active: first_segment,
+            unsynced: 0,
+            replayed_pending: Vec::new(),
+            orphaned: Vec::new(),
+            appends: 0,
+            retries: 0,
+            segments_retired: 0,
+        };
+        wal.create_segment(first_segment)?;
+        Ok(wal)
+    }
+
+    fn create_segment(&mut self, segment: u64) -> io::Result<()> {
+        let path = segment_path(&self.dir, segment);
+        let header = encode_header(segment);
+        let r = retry_transient(|| self.io.write(&path, &header));
+        self.retries += r.retries as u64;
+        r.result?;
+        let r = retry_transient(|| self.io.sync(&path));
+        self.retries += r.retries as u64;
+        r.result
+    }
+
+    fn active_path(&self) -> PathBuf {
+        segment_path(&self.dir, self.active)
+    }
+
+    /// Park segment ids as replayed-pending (set by recovery: their
+    /// ops were re-applied into the live memtable).
+    pub fn mark_replayed(&mut self, segments: Vec<u64>) {
+        self.replayed_pending = segments;
+    }
+
+    /// Append one record and apply the fsync policy. On `Ok`, the
+    /// record is durable to the degree the policy promises.
+    pub fn append(&mut self, rec: &WalRecord) -> io::Result<()> {
+        let buf = encode_record(rec);
+        self.append_all(&buf)?;
+        self.appends += 1;
+        match self.policy {
+            FsyncPolicy::Always => self.sync()?,
+            FsyncPolicy::EveryN(n) => {
+                self.unsynced += 1;
+                if self.unsynced >= n.max(1) {
+                    self.sync()?;
+                }
+            }
+            FsyncPolicy::Os => {}
+        }
+        Ok(())
+    }
+
+    /// Write-through append that tolerates short writes (loops) and
+    /// transient errors (retries).
+    fn append_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        let path = self.active_path();
+        let mut off = 0usize;
+        while off < buf.len() {
+            let r = retry_transient(|| self.io.append(&path, &buf[off..]));
+            self.retries += r.retries as u64;
+            let n = r.result?;
+            if n == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    "wal append made no progress",
+                ));
+            }
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// fsync the active segment now, regardless of policy.
+    pub fn sync(&mut self) -> io::Result<()> {
+        let path = self.active_path();
+        let r = retry_transient(|| self.io.sync(&path));
+        self.retries += r.retries as u64;
+        r.result?;
+        self.unsynced = 0;
+        Ok(())
+    }
+
+    /// The flushed memtable's SSTable generation `generation` is
+    /// durable: append the marker, rotate to a fresh segment, and
+    /// retire everything the marker covers (the sealed segment plus
+    /// any replayed-pending ones).
+    ///
+    /// On error the WAL stays consistent but conservative: nothing is
+    /// retired, and if rotation failed appends continue into the old
+    /// segment (replay stages per-segment, so a mid-segment marker is
+    /// handled).
+    pub fn commit_flush(&mut self, generation: u64) -> io::Result<()> {
+        let marker = WalRecord::FlushMarker { generation };
+        let buf = encode_record(&marker);
+        self.append_all(&buf)?;
+        self.appends += 1;
+        self.sync()?;
+        let sealed = self.active;
+        self.rotate()?;
+        let mut retire = std::mem::take(&mut self.replayed_pending);
+        retire.push(sealed);
+        self.retire_segments(&retire);
+        Ok(())
+    }
+
+    /// The flush's SSTable persist failed: the drained memtable now
+    /// exists only in RAM. Rotate (best-effort) and keep the sealed
+    /// segment as an orphan until a durable snapshot covers it.
+    pub fn abandon_flush(&mut self) {
+        let sealed = self.active;
+        if self.rotate().is_ok() {
+            self.orphaned.push(sealed);
+        }
+        // Rotation failure: stay on the segment; nothing is lost,
+        // the next commit/abandon will try again.
+    }
+
+    /// A full compaction snapshot persisted durably: every live key
+    /// is covered, so orphaned segments can finally go.
+    pub fn commit_snapshot(&mut self) {
+        let orphans = std::mem::take(&mut self.orphaned);
+        self.retire_segments(&orphans);
+    }
+
+    fn rotate(&mut self) -> io::Result<()> {
+        let next = self.active + 1;
+        self.create_segment(next)?;
+        self.active = next;
+        self.unsynced = 0;
+        Ok(())
+    }
+
+    /// Best-effort deletion; a segment that refuses to die is
+    /// harmless (replay stages it and its marker clears it).
+    pub fn retire_segments(&mut self, segments: &[u64]) {
+        for &seg in segments {
+            match self.io.remove_file(&segment_path(&self.dir, seg)) {
+                Ok(()) => self.segments_retired += 1,
+                Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    eprintln!("ocf: wal: could not retire segment {seg:#018x}: {e}");
+                }
+            }
+        }
+    }
+
+    /// Records appended over this WAL's lifetime (markers included).
+    pub fn appends(&self) -> u64 {
+        self.appends
+    }
+
+    /// Segments deleted after their contents became durable.
+    pub fn segments_retired(&self) -> u64 {
+        self.segments_retired
+    }
+
+    /// Id of the segment currently receiving appends.
+    pub fn active_segment(&self) -> u64 {
+        self.active
+    }
+
+    pub fn policy(&self) -> FsyncPolicy {
+        self.policy
+    }
+
+    /// Drain the transient-retry counter (accumulates across every
+    /// operation since the last take).
+    pub fn take_retries(&mut self) -> u64 {
+        std::mem::take(&mut self.retries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::io::RealIo;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ocf-wal-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn rio() -> Arc<dyn StoreIo> {
+        Arc::new(RealIo)
+    }
+
+    fn put(key: u64, v: &[u8]) -> WalRecord {
+        WalRecord::Put {
+            key,
+            value: Arc::from(v),
+        }
+    }
+
+    #[test]
+    fn append_replay_roundtrip_all_record_kinds() {
+        let dir = scratch("roundtrip");
+        let mut wal = Wal::open(&dir, rio(), FsyncPolicy::Always, 1).unwrap();
+        let recs = vec![
+            put(1, b"alpha"),
+            put(2, b""),
+            WalRecord::Delete { key: 1 },
+            put(u64::MAX, b"max-key"),
+        ];
+        for r in &recs {
+            wal.append(r).unwrap();
+        }
+        let seg = replay_segment(rio().as_ref(), &dir, 1).unwrap();
+        assert!(!seg.torn);
+        assert_eq!(seg.records, recs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_tolerated_not_fatal() {
+        let dir = scratch("torn");
+        let mut wal = Wal::open(&dir, rio(), FsyncPolicy::Os, 1).unwrap();
+        wal.append(&put(10, b"kept")).unwrap();
+        wal.append(&put(11, b"kept-too")).unwrap();
+        // Simulate a torn final record: append garbage that parses as
+        // a length prefix pointing past EOF.
+        let path = segment_path(&dir, 1);
+        RealIo.append(&path, &[0xff, 0x00, 0x00, 0x00, 1, 2, 3]).unwrap();
+        let seg = replay_segment(rio().as_ref(), &dir, 1).unwrap();
+        assert!(seg.torn, "tail damage must be reported");
+        assert_eq!(seg.records.len(), 2, "intact prefix survives");
+        assert_eq!(seg.records[0], put(10, b"kept"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_mid_record_checksum_stops_decode() {
+        let dir = scratch("sum");
+        let mut wal = Wal::open(&dir, rio(), FsyncPolicy::Os, 3).unwrap();
+        wal.append(&put(1, b"first")).unwrap();
+        wal.append(&put(2, b"second")).unwrap();
+        let path = segment_path(&dir, 3);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one payload byte of the first record.
+        bytes[WAL_HEADER_LEN + WAL_RECORD_PREFIX + 2] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let seg = replay_segment(rio().as_ref(), &dir, 3).unwrap();
+        assert!(seg.torn);
+        assert!(
+            seg.records.is_empty(),
+            "nothing after corruption is trusted"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_header_yields_zero_records() {
+        let dir = scratch("hdr");
+        let path = segment_path(&dir, 9);
+        std::fs::write(&path, b"NOTAWAL!").unwrap();
+        let seg = replay_segment(rio().as_ref(), &dir, 9).unwrap();
+        assert!(seg.torn);
+        assert!(seg.records.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn commit_flush_rotates_and_retires() {
+        let dir = scratch("commit");
+        let mut wal = Wal::open(&dir, rio(), FsyncPolicy::Always, 1).unwrap();
+        wal.append(&put(1, b"v")).unwrap();
+        wal.commit_flush(42).unwrap();
+        assert_eq!(wal.active_segment(), 2);
+        assert_eq!(wal.segments_retired(), 1);
+        let segs = list_segments(rio().as_ref(), &dir).unwrap();
+        assert_eq!(segs, vec![2], "sealed segment gone, fresh one live");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn abandon_flush_keeps_orphan_until_snapshot() {
+        let dir = scratch("orphan");
+        let mut wal = Wal::open(&dir, rio(), FsyncPolicy::Always, 1).unwrap();
+        wal.append(&put(5, b"ram-only")).unwrap();
+        wal.abandon_flush();
+        assert_eq!(
+            list_segments(rio().as_ref(), &dir).unwrap(),
+            vec![1, 2],
+            "orphan survives the failed flush"
+        );
+        wal.append(&put(6, b"next-era")).unwrap();
+        wal.commit_snapshot();
+        assert_eq!(
+            list_segments(rio().as_ref(), &dir).unwrap(),
+            vec![2],
+            "snapshot retires the orphan"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn every_n_groups_syncs() {
+        let dir = scratch("groupsync");
+        let mut wal = Wal::open(&dir, rio(), FsyncPolicy::EveryN(4), 1).unwrap();
+        for k in 0..10 {
+            wal.append(&put(k, b"grouped")).unwrap();
+        }
+        // Contents are write-through regardless of sync cadence.
+        let seg = replay_segment(rio().as_ref(), &dir, 1).unwrap();
+        assert_eq!(seg.records.len(), 10);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn list_segments_ignores_strays() {
+        let dir = scratch("strays");
+        let _ = Wal::open(&dir, rio(), FsyncPolicy::Os, 7).unwrap();
+        std::fs::write(dir.join("wal-zzzz.log"), b"x").unwrap();
+        std::fs::write(dir.join("sst-0000000000000001.run"), b"x").unwrap();
+        assert_eq!(list_segments(rio().as_ref(), &dir).unwrap(), vec![7]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn policy_describe_strings() {
+        assert_eq!(FsyncPolicy::Always.describe(), "always");
+        assert_eq!(FsyncPolicy::EveryN(8).describe(), "every_8");
+        assert_eq!(FsyncPolicy::Os.describe(), "os");
+    }
+}

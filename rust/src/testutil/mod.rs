@@ -7,6 +7,8 @@
 //! Deterministic by construction (fixed seeds), so CI failures
 //! reproduce locally.
 
+pub mod crash;
 pub mod prop;
 
+pub use crash::{crash_sweep, standard_script, SweepReport};
 pub use prop::{prop_check, Gen};

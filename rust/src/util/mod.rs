@@ -1,9 +1,11 @@
 //! Small deterministic utilities shared across the crate.
 
 pub mod mmap;
+pub mod retry;
 pub mod rng;
 
 pub use mmap::MmapRegion;
+pub use retry::{is_transient, retry_transient, Retried, MAX_RETRIES};
 pub use rng::{SplitMix64, Xoshiro256pp};
 
 /// FNV-1a 64-bit checksum — the integrity check of the frozen-filter

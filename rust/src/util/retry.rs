@@ -1,0 +1,151 @@
+//! Bounded retry-with-backoff for *transient* I/O errors.
+//!
+//! POSIX file ops can fail spuriously with `EINTR` (a signal landed
+//! mid-syscall) or `EAGAIN`/`EWOULDBLOCK` (kernel buffer pressure on
+//! some filesystems); both map to [`std::io::ErrorKind::Interrupted`]
+//! / [`std::io::ErrorKind::WouldBlock`] in Rust. Those are the only
+//! error kinds worth retrying blindly — anything else (ENOSPC, EIO,
+//! permission errors) signals real state the caller must handle.
+//!
+//! [`retry_transient`] re-runs the operation up to a small fixed
+//! number of attempts with an exponential-ish spin/sleep backoff and
+//! reports *how many retries it absorbed*, so callers can surface the
+//! count (the store feeds it into the `io_retries` `NodeStats`
+//! counter — transient churn is a health signal even when every retry
+//! succeeds).
+//!
+//! The budget is deliberately tiny and the backoff deliberately short
+//! (micro-sleeps, ~1 ms worst case in total): this helper sits on
+//! write paths (`FrozenStore` atomic writes, WAL fsync) where hiding
+//! a persistent failure behind long sleeps would be worse than
+//! failing loudly.
+
+use std::io;
+use std::time::Duration;
+
+/// Maximum attempts per operation (1 initial + `MAX_RETRIES` retries).
+pub const MAX_RETRIES: u32 = 4;
+
+/// Outcome of [`retry_transient`]: the final result plus the number
+/// of transient failures that were absorbed along the way. `retries`
+/// can be non-zero even on `Ok` (that is the point of counting).
+#[derive(Debug)]
+pub struct Retried<T> {
+    pub result: io::Result<T>,
+    pub retries: u32,
+}
+
+impl<T> Retried<T> {
+    /// Unwrap into a plain `io::Result`, discarding the retry count.
+    pub fn into_result(self) -> io::Result<T> {
+        self.result
+    }
+}
+
+/// True when `kind` is a transient condition that a blind retry can
+/// legitimately clear (`EINTR` / `EAGAIN`).
+pub fn is_transient(kind: io::ErrorKind) -> bool {
+    matches!(kind, io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock)
+}
+
+/// Run `op`, retrying up to [`MAX_RETRIES`] times on transient errors
+/// with a short exponential backoff (10 µs, 40 µs, 160 µs, 640 µs).
+///
+/// Non-transient errors and exhaustion both surface as the final
+/// `Err`; the retry count is reported either way.
+pub fn retry_transient<T>(mut op: impl FnMut() -> io::Result<T>) -> Retried<T> {
+    let mut retries = 0u32;
+    loop {
+        match op() {
+            Ok(v) => {
+                return Retried {
+                    result: Ok(v),
+                    retries,
+                }
+            }
+            Err(e) if is_transient(e.kind()) && retries < MAX_RETRIES => {
+                // 10 µs · 4^n: long enough to let a signal storm or a
+                // momentarily full buffer drain, short enough to be
+                // invisible on the write path.
+                let backoff = Duration::from_micros(10u64 << (2 * retries));
+                std::thread::sleep(backoff);
+                retries += 1;
+            }
+            Err(e) => {
+                return Retried {
+                    result: Err(e),
+                    retries,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_try_success_counts_zero_retries() {
+        let r = retry_transient(|| Ok::<_, io::Error>(7));
+        assert_eq!(r.result.unwrap(), 7);
+        assert_eq!(r.retries, 0);
+    }
+
+    #[test]
+    fn transient_errors_are_absorbed_and_counted() {
+        let mut failures = 2;
+        let r = retry_transient(|| {
+            if failures > 0 {
+                failures -= 1;
+                Err(io::Error::new(io::ErrorKind::Interrupted, "EINTR"))
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(r.result.unwrap(), 42);
+        assert_eq!(r.retries, 2);
+    }
+
+    #[test]
+    fn wouldblock_is_transient_too() {
+        let mut failed = false;
+        let r = retry_transient(|| {
+            if !failed {
+                failed = true;
+                Err(io::Error::new(io::ErrorKind::WouldBlock, "EAGAIN"))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(r.result.is_ok());
+        assert_eq!(r.retries, 1);
+    }
+
+    #[test]
+    fn non_transient_errors_surface_immediately() {
+        let mut calls = 0;
+        let r = retry_transient(|| -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::PermissionDenied, "nope"))
+        });
+        assert_eq!(calls, 1, "must not retry a hard error");
+        assert_eq!(r.retries, 0);
+        assert_eq!(
+            r.result.unwrap_err().kind(),
+            io::ErrorKind::PermissionDenied
+        );
+    }
+
+    #[test]
+    fn budget_is_bounded() {
+        let mut calls = 0u32;
+        let r = retry_transient(|| -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::Interrupted, "EINTR forever"))
+        });
+        assert_eq!(calls, 1 + MAX_RETRIES);
+        assert_eq!(r.retries, MAX_RETRIES);
+        assert_eq!(r.result.unwrap_err().kind(), io::ErrorKind::Interrupted);
+    }
+}

@@ -1,0 +1,44 @@
+//! Tier-1 crash-point sweep: kill the "disk" at every mutating I/O
+//! operation of an ingest→flush→compact workload, recover, and assert
+//! the WAL's contract — every acknowledged write whose durability
+//! promise held is restored, every acknowledged delete stays dead,
+//! and degradation is loud (counters), never a panic.
+//!
+//! See `ocf::testutil::crash` for the sweep machinery and the
+//! acknowledged-durable model it checks against.
+
+use ocf::store::FsyncPolicy;
+use ocf::testutil::crash_sweep;
+
+#[test]
+fn sweep_every_crash_point_flat_bucket_backend() {
+    let report = crash_sweep("cuckoo", FsyncPolicy::Always);
+    assert!(
+        report.crash_points > 20,
+        "workload too small to mean anything: {report:?}"
+    );
+    assert!(
+        report.wal_replayed > 0,
+        "some crash points must recover via WAL replay: {report:?}"
+    );
+    assert!(
+        report.torn_tails > 0,
+        "torn-tail crash points must be visited: {report:?}"
+    );
+}
+
+#[test]
+fn sweep_every_crash_point_packed_bucket_backend() {
+    let report = crash_sweep("cuckoo-packed", FsyncPolicy::Always);
+    assert!(report.crash_points > 20, "{report:?}");
+    assert!(report.wal_replayed > 0, "{report:?}");
+}
+
+#[test]
+fn sweep_every_crash_point_under_group_commit() {
+    // Group commit changes the sync cadence (and so the crash-point
+    // space), not the process-crash durability: appends write through.
+    let report = crash_sweep("ocf", FsyncPolicy::EveryN(8));
+    assert!(report.crash_points > 10, "{report:?}");
+    assert!(report.wal_replayed > 0, "{report:?}");
+}

@@ -5,6 +5,13 @@
 //! asymmetries of §I.B. The router is also where the membership-filter
 //! economics show up cluster-wide: a read whose replica filter says
 //! "absent" never touches that node's SSTables.
+//!
+//! False-positive feedback is **per replica**: when a replica's read
+//! reaches its tables and misses, [`StorageNode::get`]/`get_batch`
+//! report the FP to that replica's *own* filter
+//! ([`crate::filter::FilterFeedback`]) inside the node read path —
+//! node filters are independently seeded, so an FP on one replica says
+//! nothing about the others and the router adds no extra mechanism.
 
 use super::replication::ReplicationConfig;
 use super::ring::HashRing;
@@ -90,6 +97,57 @@ impl Cluster {
         } else {
             Err(last_err.expect("failed write must carry an error"))
         }
+    }
+
+    /// Batched write fan-out (the ROADMAP "batched replica writes"
+    /// carry-over): every key still reaches all RF replicas, but keys
+    /// are grouped by replica node in one pass over the batch and each
+    /// node takes a single [`StorageNode::put_batch`] (WAL + memtable
+    /// per key, one bulk-hashed filter insert) instead of a call per
+    /// key per replica. Per-key results, consistency accounting
+    /// (`write_consistency.required` over the achievable replica set)
+    /// and `per_node_ops`/`ops_routed` are identical to a scalar
+    /// [`Cluster::put`] loop.
+    pub fn put_batch(&mut self, keys: &[u64]) -> Vec<Result<(), crate::filter::FilterError>> {
+        self.stats.ops_routed += keys.len() as u64;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+        let mut need: Vec<usize> = Vec::with_capacity(keys.len());
+        let mut ok = vec![0usize; keys.len()];
+        let mut last_err: Vec<Option<crate::filter::FilterError>> = vec![None; keys.len()];
+        for (i, &k) in keys.iter().enumerate() {
+            let replicas = self.ring.replicas(k, self.repl.rf);
+            need.push(self.repl.write_consistency.required(replicas.len()));
+            for &n in &replicas {
+                groups[n].push(i);
+            }
+        }
+        let mut gkeys: Vec<u64> = Vec::new();
+        for (node_id, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            self.stats.per_node_ops[node_id] += group.len() as u64;
+            gkeys.clear();
+            gkeys.extend(group.iter().map(|&i| keys[i]));
+            let results = self.nodes[node_id].put_batch(&gkeys);
+            for (&i, r) in group.iter().zip(results) {
+                match r {
+                    Ok(()) => ok[i] += 1,
+                    Err(e) => last_err[i] = Some(e),
+                }
+            }
+        }
+        (0..keys.len())
+            .map(|i| {
+                if ok[i] >= need[i] {
+                    Ok(())
+                } else {
+                    Err(last_err[i]
+                        .clone()
+                        .expect("failed write must carry an error"))
+                }
+            })
+            .collect()
     }
 
     /// Verified delete across replicas.
@@ -294,6 +352,60 @@ mod tests {
         c.put(1).unwrap();
         assert!(c.get(1));
         assert!(c.delete(1));
+    }
+
+    #[test]
+    fn put_batch_matches_scalar_puts() {
+        use crate::cluster::replication::Consistency;
+        for write_consistency in [Consistency::One, Consistency::Quorum, Consistency::All] {
+            let mk = || {
+                Cluster::new(
+                    4,
+                    32,
+                    NodeConfig {
+                        flush: FlushPolicy::small(10_000),
+                        ..NodeConfig::default()
+                    },
+                    ReplicationConfig {
+                        rf: 3,
+                        write_consistency,
+                        ..ReplicationConfig::default()
+                    },
+                )
+            };
+            let keys: Vec<u64> = (0..2000u64).collect();
+            let mut batched_cluster = mk();
+            for r in batched_cluster.put_batch(&keys) {
+                r.unwrap_or_else(|e| panic!("{write_consistency:?}: {e}"));
+            }
+            let mut scalar_cluster = mk();
+            for &k in &keys {
+                scalar_cluster.put(k).unwrap();
+            }
+            // identical routing accounting, replica for replica
+            assert_eq!(
+                batched_cluster.stats.per_node_ops, scalar_cluster.stats.per_node_ops,
+                "{write_consistency:?}"
+            );
+            assert_eq!(
+                batched_cluster.stats.ops_routed,
+                scalar_cluster.stats.ops_routed
+            );
+            // identical answers and replica placement
+            let probes: Vec<u64> = (0..3000u64).collect();
+            assert_eq!(
+                batched_cluster.get_batch(&probes),
+                scalar_cluster.get_batch(&probes),
+                "{write_consistency:?}"
+            );
+            for i in 0..4 {
+                assert_eq!(
+                    batched_cluster.node(i).live_keys(),
+                    scalar_cluster.node(i).live_keys(),
+                    "{write_consistency:?}: node {i}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod parser;
 
 pub use parser::{ConfigError, ConfigTree, Value};
 
-use crate::filter::{FilterBuilder, Mode};
+use crate::filter::{FilterBackend, FilterBuilder, Mode};
 use crate::pipeline::PoolConfig;
 use crate::store::{FlushPolicy, FsyncPolicy, NodeConfig};
 
@@ -123,6 +123,27 @@ impl OcfFileConfig {
         }
         if let Some(v) = tree.get_float("filter", "bloom_fpr")? {
             cfg.filter.bloom_fpr = v;
+        }
+        if let Some(v) = tree.get_int("filter", "ext_bits")? {
+            cfg.filter.ext_bits = v as u32;
+        }
+        if let Some(v) = tree.get_bool("filter", "adaptive")? {
+            // `adaptive = true` upgrades an OCF-family backend to its
+            // adaptive twin, keeping mode/shards/capacity knobs — the
+            // orthogonal spelling of `backend = "adaptive"`.
+            if v {
+                cfg.filter.backend = match cfg.filter.backend {
+                    FilterBackend::Ocf | FilterBackend::Adaptive => FilterBackend::Adaptive,
+                    FilterBackend::AdaptivePacked => FilterBackend::AdaptivePacked,
+                    other => {
+                        return Err(ConfigError::Invalid(format!(
+                            "filter.adaptive = true requires an OCF-family backend \
+                             (feedback needs the authoritative key store), got '{}'",
+                            other.as_str()
+                        )))
+                    }
+                };
+            }
         }
 
         if let Some(v) = tree.get_int("store", "max_memtable_keys")? {
@@ -362,6 +383,39 @@ batch_size = 4096
         // bloom cannot shard — builder validation surfaces at load time
         assert!(
             OcfFileConfig::load("[filter]\nbackend = \"bloom\"\nshards = 4\n", &[]).is_err()
+        );
+    }
+
+    #[test]
+    fn adaptive_knobs_parse() {
+        // by backend name
+        let cfg = OcfFileConfig::load("[filter]\nbackend = \"adaptive\"\n", &[]).unwrap();
+        assert_eq!(cfg.filter.backend, FilterBackend::Adaptive);
+        assert_eq!(cfg.filter.build().unwrap().name(), "adaptive-ocf");
+
+        // by the orthogonal bool, composing with shards
+        let cfg = OcfFileConfig::load("[filter]\nadaptive = true\nshards = 4\n", &[]).unwrap();
+        assert_eq!(cfg.filter.describe(), "sharded-adaptive-ocf");
+
+        // adaptive = false is a no-op
+        let cfg = OcfFileConfig::load("[filter]\nadaptive = false\n", &[]).unwrap();
+        assert_eq!(cfg.filter.backend, FilterBackend::Ocf);
+
+        // ext_bits flows to the builder; bad widths rejected at load
+        let cfg = OcfFileConfig::load("[filter]\nadaptive = true\next_bits = 12\n", &[])
+            .unwrap();
+        assert_eq!(cfg.filter.ext_bits, 12);
+        assert!(OcfFileConfig::load("[filter]\next_bits = 0\n", &[]).is_err());
+        assert!(OcfFileConfig::load("[filter]\next_bits = 17\n", &[]).is_err());
+
+        // --set override spelling
+        let cfg = OcfFileConfig::load("", &["filter.backend=adaptive".into()]).unwrap();
+        assert_eq!(cfg.filter.describe(), "adaptive-ocf");
+
+        // non-OCF backends cannot adapt
+        assert!(
+            OcfFileConfig::load("[filter]\nbackend = \"bloom\"\nadaptive = true\n", &[])
+                .is_err()
         );
     }
 

@@ -1,0 +1,436 @@
+//! E14 — adaptive fingerprints: sustained false-positive rate vs
+//! workload skew, static vs adaptive backend.
+//!
+//! The paper's filters are *static*: a negative key that collides with
+//! a stored fingerprint is a false positive **every time it is asked**.
+//! Real read workloads repeat themselves (Zipf-skewed caches, hot-key
+//! dashboards, retry storms), so the FP *rate you actually pay* is the
+//! FP probability weighted by how often the colliding keys recur. The
+//! adaptive backend (`filter::adaptive`) breaks exactly that product:
+//! the first table-miss on a reported FP rotates the victim slot's
+//! hash selector, so the *same* negative never costs a table read
+//! twice.
+//!
+//! Three workload arms, each run against two [`StorageNode`]s that are
+//! identical (capacity, fp bits, hash seed, resident keys — equal load
+//! factor) except for the filter backend (`ocf` vs `adaptive`):
+//!
+//! 1. **Skew sweep.** Negative lookups drawn Zipf(s) from a finite
+//!    universe, s ∈ {0, 0.9, 1.2} (s = 0 is uniform). A warmup window
+//!    lets the adaptive filter learn, then a measurement window reads
+//!    the *sustained* FP count off the node's ground-truth
+//!    `fp_observed` counter. The acceptance gate asserts the adaptive
+//!    arm sustains a ≥10× lower FP rate than static at s = 1.2.
+//! 2. **Adversarial repeat-negative loop.** A fixed negative set
+//!    hammered for `ROUNDS` rounds — the pathological client that
+//!    re-asks the same missing keys forever. Static pays the full FP
+//!    set every round; adaptive pays it once.
+//! 3. **Zero-false-negative audit.** After every arm, every resident
+//!    key is re-read and must still be found — adaptation must never
+//!    turn a stored key invisible (the filter-level proptests pin the
+//!    same invariant; this re-checks it end-to-end through the node).
+//!
+//! `KeyDist::zipf` (workload module) restricts itself to θ ∈ (0,1) for
+//! its analytic approximation, so this experiment carries its own
+//! exact finite-universe CDF sampler ([`ZipfCdf`]) valid for any
+//! s ≥ 0.
+
+use super::report::{f, Table};
+use super::Scale;
+use crate::filter::FilterBuilder;
+use crate::store::{FlushPolicy, NodeConfig, StorageNode};
+use crate::util::Xoshiro256pp;
+use std::time::Instant;
+
+/// Probe chunk size for the batched read path (matches E10/E13).
+pub const BATCH: usize = 4096;
+
+/// Rounds of the adversarial repeat-negative loop.
+pub const ROUNDS: usize = 50;
+
+/// Zipf exponents swept (0 = uniform).
+pub const SKEWS: [f64; 3] = [0.0, 0.9, 1.2];
+
+const SEED: u64 = 0xE14_AD_A9;
+/// Negative universes live far above every resident key.
+const ZIPF_NEG_BASE: u64 = 1 << 40;
+const ADV_NEG_BASE: u64 = 1 << 41;
+
+/// Exact finite-universe Zipf sampler: rank `r` (0-based) is drawn
+/// with probability `(r+1)^-s / H(n,s)` via a precomputed CDF and
+/// binary search. Valid for any `s >= 0`; `s = 0` is uniform.
+#[derive(Debug, Clone)]
+pub struct ZipfCdf {
+    cdf: Vec<f64>,
+}
+
+impl ZipfCdf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "empty universe");
+        assert!(s >= 0.0, "negative Zipf exponent");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        Self { cdf }
+    }
+
+    pub fn universe(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw a rank in `0..universe()`.
+    #[inline]
+    pub fn draw(&self, rng: &mut Xoshiro256pp) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// One (skew, backend) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct SkewArm {
+    pub skew: f64,
+    /// "ocf" (static) | "adaptive".
+    pub backend: &'static str,
+    /// Probes in the measurement window.
+    pub probes: usize,
+    /// Ground-truth FPs observed during warmup (the learning phase).
+    pub warm_fps: u64,
+    /// Ground-truth FPs observed during the measurement window — the
+    /// sustained cost.
+    pub fps: u64,
+    /// Whole-run remap count (0 for the static backend).
+    pub remapped: u64,
+    /// Whole-run suppressed-probe count (0 for the static backend).
+    pub suppressed: u64,
+    /// Wallclock of the measurement window.
+    pub secs: f64,
+}
+
+impl SkewArm {
+    /// Sustained FP rate over the measurement window.
+    pub fn fp_rate(&self) -> f64 {
+        self.fps as f64 / self.probes.max(1) as f64
+    }
+}
+
+/// One backend's run of the adversarial repeat-negative loop.
+#[derive(Debug, Clone)]
+pub struct AdvArm {
+    pub backend: &'static str,
+    pub rounds: usize,
+    /// Size of the hammered negative set.
+    pub set: usize,
+    /// FPs observed in round 1 — the FP keys present in the set.
+    pub first_round_fps: u64,
+    /// FPs observed across all rounds.
+    pub fps: u64,
+    pub suppressed: u64,
+}
+
+/// Everything E14 measures.
+#[derive(Debug, Clone)]
+pub struct AdaptiveOutcome {
+    pub keys: usize,
+    pub universe: usize,
+    pub warmup: usize,
+    pub skew_arms: Vec<SkewArm>,
+    pub adv_arms: Vec<AdvArm>,
+}
+
+/// Build a node with `n_keys` resident keys. Both arms get the same
+/// capacity (4× keys → 25% load factor), fp bits, and hash seed, so
+/// the *initial* FP key set is identical — only the backend differs.
+fn mk_node(backend: &'static str, n_keys: usize) -> StorageNode {
+    let mut filter = FilterBuilder::default()
+        .with_initial_capacity((n_keys * 4).max(1024))
+        .with_fp_bits(8)
+        .with_seed(SEED);
+    filter.set_backend(backend).expect("known backend");
+    let mut node = StorageNode::new(NodeConfig {
+        filter,
+        flush: FlushPolicy::small(usize::MAX),
+        ..NodeConfig::default()
+    });
+    let keys: Vec<u64> = (0..n_keys as u64).collect();
+    for chunk in keys.chunks(BATCH) {
+        for r in node.put_batch(chunk) {
+            r.expect("ingest under 25% load never saturates");
+        }
+    }
+    node
+}
+
+/// Probe `n` Zipf-drawn negatives through the node's batched read path
+/// and return the ground-truth FPs observed in the window.
+fn probe_window(node: &StorageNode, zipf: &ZipfCdf, rng: &mut Xoshiro256pp, n: usize) -> u64 {
+    let before = node.stats.fp_observed();
+    let mut buf: Vec<u64> = Vec::with_capacity(BATCH);
+    let mut left = n;
+    while left > 0 {
+        let take = BATCH.min(left);
+        buf.clear();
+        for _ in 0..take {
+            buf.push(ZIPF_NEG_BASE + zipf.draw(rng) as u64);
+        }
+        node.get_batch(&buf);
+        left -= take;
+    }
+    node.stats.fp_observed() - before
+}
+
+/// Every resident key must still be found — adaptation never costs a
+/// false negative.
+fn assert_no_false_negatives(node: &StorageNode, n_keys: usize, ctx: &str) {
+    let keys: Vec<u64> = (0..n_keys as u64).collect();
+    for chunk in keys.chunks(BATCH) {
+        for (&k, hit) in chunk.iter().zip(node.get_batch(chunk)) {
+            assert!(hit, "{ctx}: false negative for resident key {k}");
+        }
+    }
+}
+
+/// Run the skew sweep and the adversarial loop over `n_keys` resident
+/// keys, a `universe`-key negative universe, and `n_probes` measured
+/// probes per arm.
+pub fn measure(n_keys: usize, universe: usize, n_probes: usize) -> AdaptiveOutcome {
+    // Warmup covers the universe many times over so the sustained
+    // window measures the converged filter, not the learning slope.
+    let warmup = universe * 32;
+
+    let mut skew_arms = Vec::with_capacity(SKEWS.len() * 2);
+    for &skew in &SKEWS {
+        let zipf = ZipfCdf::new(universe, skew);
+        for backend in ["ocf", "adaptive"] {
+            let node = mk_node(backend, n_keys);
+            // Same seed per skew → both backends see the same draws.
+            let mut rng = Xoshiro256pp::new(SEED ^ skew.to_bits());
+            let warm_fps = probe_window(&node, &zipf, &mut rng, warmup);
+            let t0 = Instant::now();
+            let fps = probe_window(&node, &zipf, &mut rng, n_probes);
+            let secs = t0.elapsed().as_secs_f64();
+            assert_no_false_negatives(&node, n_keys, &format!("s={skew} {backend}"));
+            skew_arms.push(SkewArm {
+                skew,
+                backend,
+                probes: n_probes,
+                warm_fps,
+                fps,
+                remapped: node.stats.fp_remapped(),
+                suppressed: node.fp_suppressed(),
+                secs,
+            });
+        }
+    }
+
+    // Acceptance gate: ≥10× lower sustained FP rate at s = 1.2 (the
+    // repeated-negative skew the tentpole targets). The `.max(100)`
+    // floor keeps tiny smoke runs out of Poisson noise.
+    let static_12 = skew_arms
+        .iter()
+        .find(|a| a.backend == "ocf" && (a.skew - 1.2).abs() < 1e-9)
+        .expect("static s=1.2 arm");
+    let adaptive_12 = skew_arms
+        .iter()
+        .find(|a| a.backend == "adaptive" && (a.skew - 1.2).abs() < 1e-9)
+        .expect("adaptive s=1.2 arm");
+    assert!(
+        adaptive_12.fps * 10 <= static_12.fps.max(100),
+        "adaptive must sustain a >=10x lower FP rate at s=1.2: adaptive={} static={}",
+        adaptive_12.fps,
+        static_12.fps,
+    );
+
+    // Adversarial loop: a fixed negative set re-asked ROUNDS times.
+    let adv_set = (n_probes / 50).clamp(2_048, 8_192);
+    let set: Vec<u64> = (0..adv_set as u64).map(|i| ADV_NEG_BASE + i).collect();
+    let mut adv_arms = Vec::with_capacity(2);
+    for backend in ["ocf", "adaptive"] {
+        let node = mk_node(backend, n_keys);
+        let before = node.stats.fp_observed();
+        let mut first_round_fps = 0;
+        for round in 0..ROUNDS {
+            let b = node.stats.fp_observed();
+            for chunk in set.chunks(BATCH) {
+                node.get_batch(chunk);
+            }
+            if round == 0 {
+                first_round_fps = node.stats.fp_observed() - b;
+            }
+        }
+        let fps = node.stats.fp_observed() - before;
+        assert_no_false_negatives(&node, n_keys, &format!("adversarial {backend}"));
+        adv_arms.push(AdvArm {
+            backend,
+            rounds: ROUNDS,
+            set: adv_set,
+            first_round_fps,
+            fps,
+            suppressed: node.fp_suppressed(),
+        });
+    }
+    // Static re-pays the set's FP keys every round; adaptive pays them
+    // ~once (rare ambiguous slots — two fp-matching candidates — stay
+    // static, hence the conservative 2× bound; the table shows the
+    // real ratio, typically ≈ ROUNDS×).
+    assert!(
+        adv_arms[1].fps * 2 <= adv_arms[0].fps.max(ROUNDS as u64),
+        "adaptive must beat static on the repeat-negative loop: adaptive={} static={}",
+        adv_arms[1].fps,
+        adv_arms[0].fps,
+    );
+
+    AdaptiveOutcome {
+        keys: n_keys,
+        universe,
+        warmup,
+        skew_arms,
+        adv_arms,
+    }
+}
+
+/// Render the two E14 tables.
+pub fn render(title: impl Into<String>, o: &AdaptiveOutcome) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(
+        title,
+        &[
+            "skew",
+            "backend",
+            "warm FPs",
+            "window FPs",
+            "FP/Mprobe",
+            "remapped",
+            "suppressed",
+            "vs static",
+        ],
+    );
+    for a in &o.skew_arms {
+        let ratio = if a.backend == "adaptive" {
+            o.skew_arms
+                .iter()
+                .find(|s| s.backend == "ocf" && (s.skew - a.skew).abs() < 1e-9)
+                .map(|s| format!("{}x", f(s.fps as f64 / a.fps.max(1) as f64, 1)))
+                .unwrap_or_default()
+        } else {
+            String::new()
+        };
+        t.row(&[
+            f(a.skew, 1),
+            a.backend.to_string(),
+            a.warm_fps.to_string(),
+            a.fps.to_string(),
+            f(a.fp_rate() * 1e6, 1),
+            a.remapped.to_string(),
+            a.suppressed.to_string(),
+            ratio,
+        ]);
+    }
+    t.note(format!(
+        "{} resident keys, {}-key negative universe, {}-probe warmup then \
+         {}-probe measurement window; both backends share capacity, fp bits, \
+         hash seed and draw sequence (equal load factor, identical initial FP \
+         set). 'warm FPs' is the learning cost; 'window FPs' is the sustained \
+         cost; 'remapped'/'suppressed' are whole-run adaptive counters \
+         (identically 0 for static).",
+        o.keys,
+        o.universe,
+        o.warmup,
+        o.skew_arms.first().map_or(0, |a| a.probes),
+    ));
+    out.push_str(&t.markdown());
+    out.push('\n');
+
+    let mut t = Table::new(
+        format!(
+            "E14 — adversarial repeat-negative loop ({} negatives × {} rounds)",
+            o.adv_arms.first().map_or(0, |a| a.set),
+            ROUNDS,
+        ),
+        &["backend", "round-1 FPs", "total FPs", "suppressed", "vs static"],
+    );
+    for a in &o.adv_arms {
+        let ratio = if a.backend == "adaptive" {
+            o.adv_arms
+                .iter()
+                .find(|s| s.backend == "ocf")
+                .map(|s| format!("{}x", f(s.fps as f64 / a.fps.max(1) as f64, 1)))
+                .unwrap_or_default()
+        } else {
+            String::new()
+        };
+        t.row(&[
+            a.backend.to_string(),
+            a.first_round_fps.to_string(),
+            a.fps.to_string(),
+            a.suppressed.to_string(),
+            ratio,
+        ]);
+    }
+    t.note(
+        "The same missing keys re-asked every round. Static pays the set's FP \
+         keys every single round; adaptive pays each once (round-1 ≈ total), \
+         then the remapped slots suppress the repeats. Zero false negatives \
+         asserted for every arm after every workload.",
+    );
+    out.push_str(&t.markdown());
+    out
+}
+
+/// The experiment driver (paper scale: 200k resident keys, 100k-key
+/// negative universe, 1M measured probes per arm).
+pub fn run(scale: Scale) -> String {
+    let n_keys = scale.n(200_000, 4_096);
+    let universe = scale.n(100_000, 2_000);
+    let n_probes = scale.n(1_000_000, 20_000);
+    let outcome = measure(n_keys, universe, n_probes);
+    render(
+        format!(
+            "E14 — sustained FP rate vs workload skew, static vs adaptive ({n_keys} keys)"
+        ),
+        &outcome,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_cdf_is_exact_and_skewed() {
+        let mut rng = Xoshiro256pp::new(7);
+        // s = 0 is uniform: every rank reachable, roughly flat.
+        let z = ZipfCdf::new(100, 0.0);
+        let mut counts = [0u32; 100];
+        for _ in 0..20_000 {
+            counts[z.draw(&mut rng)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 50), "uniform draw starved a rank");
+        // s = 1.2 concentrates on the head: rank 0 beats rank 50 by a
+        // wide margin.
+        let z = ZipfCdf::new(100, 1.2);
+        let mut counts = [0u32; 100];
+        for _ in 0..20_000 {
+            counts[z.draw(&mut rng)] += 1;
+        }
+        assert!(counts[0] > 10 * counts[50].max(1), "{:?}", &counts[..5]);
+    }
+
+    #[test]
+    fn report_renders() {
+        // Floors: 4096 keys, 2000-key universe, 20k-probe windows. The
+        // acceptance asserts (>=10x at s=1.2, adversarial win, zero
+        // false negatives) run inside measure().
+        let md = run(Scale(0.002));
+        assert!(md.contains("E14"));
+        assert!(md.contains("| adaptive |"));
+        assert!(md.contains("1.2"));
+        assert!(md.contains("repeat-negative"));
+    }
+}

@@ -15,6 +15,7 @@
 //! | E11 | pooled ingest: persistent workers vs scoped fan-out | [`pool`] |
 //! | E12 | SIMD probe kernels × load factor                  | [`kernel`] |
 //! | E13 | persistent tier: restart + mmap-vs-heap probes    | [`persist`] |
+//! | E14 | adaptive fingerprints: sustained FP rate vs skew  | [`adaptive`] |
 //!
 //! Every driver takes a [`Scale`] so the same code serves quick checks
 //! (`--scale 0.01`), CI, and full paper-scale runs, and returns a
@@ -22,6 +23,7 @@
 //! functions).
 
 pub mod ablation;
+pub mod adaptive;
 pub mod burst;
 pub mod cartesian;
 pub mod fig2;
@@ -70,8 +72,9 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "pool" => Ok(pool::run(scale)),
             "kernel" => Ok(kernel::run(scale)),
             "persist" => Ok(persist::run(scale)),
+            "adaptive" => Ok(adaptive::run(scale)),
             other => Err(format!(
-                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool kernel persist all)"
+                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool kernel persist adaptive all)"
             )),
         }
     };
@@ -91,6 +94,7 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "pool",
             "kernel",
             "persist",
+            "adaptive",
         ] {
             out.push_str(&one(n)?);
             out.push('\n');

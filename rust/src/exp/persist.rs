@@ -51,6 +51,11 @@ pub struct RestartArm {
     pub filters_recovered: u64,
     pub filters_rebuilt: u64,
     pub filter_recovery_rejected: u64,
+    /// Read-path FP feedback counters right after restart — always 0:
+    /// adaptation state is never persisted (rebuild-on-recover), so a
+    /// reopened node starts at the static baseline.
+    pub fp_observed: u64,
+    pub fp_remapped: u64,
 }
 
 /// One timed batched-probe loop over a frozen generation.
@@ -126,6 +131,8 @@ fn restart(cfg: &NodeConfig, arm: &'static str) -> (StorageNode, RestartArm) {
         filters_recovered: node.stats.filters_recovered(),
         filters_rebuilt: node.stats.filters_rebuilt(),
         filter_recovery_rejected: node.stats.filter_recovery_rejected(),
+        fp_observed: node.stats.fp_observed(),
+        fp_remapped: node.stats.fp_remapped(),
     };
     (node, point)
 }
@@ -339,6 +346,7 @@ pub fn render(title: impl Into<String>, o: &PersistOutcome) -> String {
             "recovered",
             "rebuilt",
             "rejected",
+            "fp obs/remap",
         ],
     );
     for r in &o.restarts {
@@ -349,13 +357,16 @@ pub fn render(title: impl Into<String>, o: &PersistOutcome) -> String {
             r.filters_recovered.to_string(),
             r.filters_rebuilt.to_string(),
             r.filter_recovery_rejected.to_string(),
+            format!("{}/{}", r.fp_observed, r.fp_remapped),
         ]);
     }
     t.note(
         "recover = validate + serve persisted filter files in place (mmap-backed \
          where supported); rebuild = filter files deleted, every table's filter \
          reconstructed from its run — the restart cost persistence removes. \
-         Counters are the NodeStats recovery counters.",
+         Counters are the NodeStats recovery counters; the FP-feedback pair is \
+         0/0 by construction after any restart — adaptation state is never \
+         serialized (rebuild-on-recover; E14 measures the re-learning curve).",
     );
     out.push_str(&t.markdown());
     out.push('\n');

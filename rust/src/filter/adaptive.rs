@@ -1,0 +1,1261 @@
+//! Adaptive fingerprints — observed false positives get remapped so no
+//! hot negative key misses twice.
+//!
+//! A static cuckoo filter charges the *same* hot negative key the full
+//! false-positive cost on every repeat probe: under Zipfian or
+//! adversarial traffic the expensive store lookups concentrate on a
+//! handful of colliding keys forever. But our deployment has ground
+//! truth — `StorageNode::get` already detects every FP the moment the
+//! memtable/SSTable lookup misses — so the filter can *adapt*: learn
+//! from each observed FP and stop repeating it (the Adaptive Cuckoo
+//! Filter argument of Kopelowitz/McCauley/Porat and the
+//! remote-access-cost model of "Don't Thrash: How to Cache Your Hash
+//! on Flash"; see PAPERS.md).
+//!
+//! ## Design: selector-rotated fingerprint extensions
+//!
+//! [`AdaptiveOcf`] wraps an [`Ocf`] and adds a parallel **sidecar
+//! table**: one `AtomicU32` per slot (`nbuckets × SLOTS`), zero-
+//! initialized. The stored fingerprint itself is NEVER changed — the
+//! partial-key cuckoo geometry (`alt_index` depends only on the
+//! fingerprint) and delete safety depend on it — instead each sidecar
+//! entry carries an optional *extension check*:
+//!
+//! ```text
+//!   31            16 15             0
+//!  +----------------+----------------+
+//!  |  selector sel  |  extension ext |     0 = unadapted (no check)
+//!  +----------------+----------------+
+//!   sel ∈ 1..=max_selectors           ext = ext_hash(resident, sel)
+//! ```
+//!
+//! A probe for key `k` passes a slot iff the fingerprint matches AND
+//! (the entry is 0 OR `ext_hash(k, sel) == ext`). An unadapted filter
+//! therefore answers **bit-identically** to its static inner filter.
+//!
+//! ## The feedback path (no-new-false-negatives proof)
+//!
+//! [`FilterFeedback::report_false_positive`]`(key)` (a `&self`
+//! operation — it runs on the read path that detected the FP):
+//!
+//! 1. locate the slot whose fingerprint matches `key`'s in its two
+//!    candidate buckets — require **exactly one** match, else give up;
+//! 2. scan the inner filter's authoritative key store for live keys
+//!    whose fingerprint equals `key`'s and whose bucket pair covers
+//!    that slot — require **exactly one** candidate `r` (the true
+//!    resident is always among the candidates, so a singleton
+//!    candidate IS the resident), else give up;
+//! 3. rotate the slot's selector to the next variant `sel` for which
+//!    `ext_hash(r, sel) != ext_hash(key, sel)`, and CAS the entry to
+//!    `(sel << 16) | ext_hash(r, sel)`.
+//!
+//! Because the written extension is *derived from the verified
+//! resident* `r`, a probe for `r` always passes its own extension
+//! check: **a stored key can never be suppressed**, no matter how many
+//! FPs are reported, by whom, or how adversarially (reporting a
+//! resident key itself is caught at step 2/3 and refused). The
+//! reported key's probes now fail the extension check — its repeat-FP
+//! cost drops to zero — and any *other* negative key colliding with
+//! the same slot passes with probability `2^-ext_bits` instead of 1.
+//!
+//! ## Staleness protocol (`&mut` operations)
+//!
+//! A sidecar entry is only meaningful while its slot holds the
+//! resident it was derived from. Every mutation re-syncs:
+//!
+//! * **resize/rebuild** (`nbuckets` or the resize count changed): the
+//!   sidecar is reallocated zeroed — adaptation re-learns;
+//! * **eviction kicks** (cumulative kick count changed): slots moved,
+//!   so all entries are reset (skipped entirely while nothing is
+//!   adapted — the warmup fast path);
+//! * **delete**: the freed slot is unknown (either candidate bucket),
+//!   so both candidate buckets' entries are reset — empty slots must
+//!   stay unadapted so a future insert starts unadapted;
+//! * **plain insert** (no kicks, no resize): fills a previously empty
+//!   slot, whose entry is already 0 — nothing to do.
+//!
+//! `&mut` excludes all readers, so no probe can observe a stale entry
+//! mid-protocol; concurrent `&self` reports race only through the CAS,
+//! where the loser simply reports `false`.
+//!
+//! ## Persistence: rebuild-on-recover
+//!
+//! Sidecar state is deliberately NOT serialized. Frozen SSTable
+//! filters and the persistent frozen store serve *static* probe-only
+//! snapshots ([`FrozenTable`](super::FrozenTable) is a no-op
+//! [`FilterFeedback`]); the live node filter is rebuilt from recovered
+//! keys on startup, so adaptation resets and re-learns from live
+//! traffic — FP observations are workload state, not data.
+//!
+//! [`ShardedAdaptiveOcf`] is the concurrent front-end: N independent
+//! [`AdaptiveOcf`] shards behind lock stripes, the same shard routing
+//! (`mix32(idx_hash ^ fp)` finalizer) and gather/scatter batch plan as
+//! [`ShardedOcf`](super::ShardedOcf), with reports routed to the
+//! owning shard under its stripe lock.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::Mutex;
+
+use super::bucket::{BucketTable, FlatTable, SLOTS};
+use super::concurrent::ConcurrentFilter;
+use super::fingerprint::{mix32, mix64, Hasher, HashTriple};
+use super::metrics::FilterStats;
+use super::ocf::{Ocf, OcfConfig};
+use super::session::{ProbeSession, ShardScratch};
+use super::{BatchedFilter, FilterError, FilterFeedback, MembershipFilter};
+
+/// Widest supported extension check (the sidecar entry's low half).
+pub const MAX_EXT_BITS: u32 = 16;
+
+/// Selector field shift inside a sidecar entry.
+const SEL_SHIFT: u32 = 16;
+
+/// Salt folded into the extension hash per selector so each variant is
+/// an independent function of the key, decorrelated from the
+/// fingerprint/index hashes (which use `mix64(key ^ seed)` directly —
+/// `sel >= 1` guarantees a different mix input).
+const EXT_SALT: u64 = 0xA11F_EEDB_AC4B_EEF5;
+
+/// Configuration for the adaptive front-end.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveConfig {
+    /// The wrapped OCF's configuration (mode, capacity, fp bits, ...).
+    pub base: OcfConfig,
+    /// Extension-check width in bits (1..=[`MAX_EXT_BITS`]). Each
+    /// adapted slot rejects a colliding negative key with probability
+    /// `1 - 2^-ext_bits`; 8 is plenty and keeps headroom.
+    pub ext_bits: u32,
+    /// Distinct hash-selector variants to rotate through
+    /// (1..=65535). A remap needs a selector separating resident from
+    /// reported key, which fails with probability `~2^-ext_bits` per
+    /// variant — 15 variants make non-separation astronomically rare.
+    pub max_selectors: u32,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            base: OcfConfig::default(),
+            ext_bits: 8,
+            max_selectors: 15,
+        }
+    }
+}
+
+/// An [`Ocf`] wrapped with the per-slot adaptation sidecar. See the
+/// module docs for the scheme and its no-false-negatives argument.
+#[derive(Debug)]
+pub struct AdaptiveOcf<T: BucketTable = FlatTable> {
+    inner: Ocf<T>,
+    /// One entry per slot (`bucket * SLOTS + slot`); 0 = unadapted.
+    sidecar: Vec<AtomicU32>,
+    /// Count of nonzero sidecar entries. Exact: entries go 0→nonzero
+    /// only under `&self` CAS (counted on success) and nonzero→0 only
+    /// under `&mut` resets. `== 0` is the probe fast path.
+    adapted: AtomicUsize,
+    /// Geometry/stability epoch snapshots (see staleness protocol).
+    nbuckets_seen: usize,
+    kicks_seen: u64,
+    resizes_seen: u64,
+    /// Cached from the inner hasher/config.
+    seed: u64,
+    ext_mask: u32,
+    sel_max: u32,
+    /// Feedback counters (relaxed; surfaced through [`FilterStats`]).
+    fp_observed: AtomicU64,
+    fp_remapped: AtomicU64,
+    fp_suppressed: AtomicU64,
+}
+
+// Non-generic impl block (the `HashMap::new` pattern) so expression-
+// position `AdaptiveOcf::new(cfg)` resolves to the `FlatTable` default.
+impl AdaptiveOcf {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        Self::with_config(cfg)
+    }
+}
+
+impl<T: BucketTable> AdaptiveOcf<T> {
+    /// Backend-generic constructor
+    /// (`AdaptiveOcf::<PackedTable>::with_config`).
+    pub fn with_config(cfg: AdaptiveConfig) -> Self {
+        assert!(
+            (1..=MAX_EXT_BITS).contains(&cfg.ext_bits),
+            "ext_bits must be in 1..={MAX_EXT_BITS}"
+        );
+        assert!(
+            (1..=u16::MAX as u32).contains(&cfg.max_selectors),
+            "max_selectors must be in 1..=65535"
+        );
+        let inner = Ocf::<T>::with_config(cfg.base);
+        let mut f = Self {
+            seed: inner.hasher().seed,
+            ext_mask: (1u32 << cfg.ext_bits) - 1,
+            sel_max: cfg.max_selectors,
+            inner,
+            sidecar: Vec::new(),
+            adapted: AtomicUsize::new(0),
+            nbuckets_seen: 0,
+            kicks_seen: 0,
+            resizes_seen: 0,
+            fp_observed: AtomicU64::new(0),
+            fp_remapped: AtomicU64::new(0),
+            fp_suppressed: AtomicU64::new(0),
+        };
+        f.rebuild_sidecar();
+        f
+    }
+
+    /// The wrapped filter's hasher (shared triples remain valid).
+    pub fn hasher(&self) -> Hasher {
+        self.inner.hasher()
+    }
+
+    /// The wrapped filter's configuration.
+    pub fn config(&self) -> &OcfConfig {
+        self.inner.config()
+    }
+
+    /// Nonzero sidecar entries — how many slots currently carry an
+    /// extension check.
+    pub fn adapted_slots(&self) -> usize {
+        self.adapted.load(Relaxed)
+    }
+
+    /// Extension hash variant `sel` of `key` (masked to `ext_bits`).
+    #[inline(always)]
+    fn ext_of(&self, key: u64, sel: u32) -> u32 {
+        (mix64(key ^ self.seed ^ EXT_SALT.wrapping_mul(sel as u64)) >> 32) as u32 & self.ext_mask
+    }
+
+    /// Reallocate the sidecar zeroed against the current geometry and
+    /// resnapshot every epoch counter.
+    fn rebuild_sidecar(&mut self) {
+        let n = self.inner.nbuckets() * SLOTS;
+        self.sidecar = (0..n).map(|_| AtomicU32::new(0)).collect();
+        self.adapted.store(0, Relaxed);
+        self.nbuckets_seen = self.inner.nbuckets();
+        self.kicks_seen = self.inner.kicks();
+        self.resizes_seen = self.inner.resize_count();
+    }
+
+    /// Re-sync the sidecar after any `&mut` operation on the inner
+    /// filter (the staleness protocol from the module docs).
+    fn sync_after_mutation(&mut self) {
+        if self.inner.nbuckets() != self.nbuckets_seen
+            || self.inner.resize_count() != self.resizes_seen
+        {
+            // Rebuild (even to the same bucket count) reshuffles slots.
+            self.rebuild_sidecar();
+            return;
+        }
+        let kicks = self.inner.kicks();
+        if kicks != self.kicks_seen {
+            // Eviction kicks moved fingerprints between slots; every
+            // entry may now describe the wrong resident. (A rolled-back
+            // failed insert also bumps kicks — a spurious but safe
+            // reset.) Skipped while nothing is adapted.
+            if self.adapted.load(Relaxed) != 0 {
+                for c in &self.sidecar {
+                    c.store(0, Relaxed);
+                }
+                self.adapted.store(0, Relaxed);
+            }
+            self.kicks_seen = kicks;
+        }
+    }
+
+    /// Reset the sidecar entries of `t`'s two candidate buckets (after
+    /// a successful delete: the freed slot must return to unadapted,
+    /// and we don't know which of the pair it was).
+    fn reset_candidate_buckets(&mut self, t: HashTriple) {
+        if self.adapted.load(Relaxed) == 0 {
+            return;
+        }
+        let nb = self.inner.nbuckets();
+        let b1 = Hasher::primary_index(t, nb);
+        let b2 = Hasher::alt_index(b1, t.fp, nb);
+        let mut b = b1;
+        loop {
+            for s in 0..SLOTS {
+                if self.sidecar[b * SLOTS + s].swap(0, Relaxed) != 0 {
+                    self.adapted.fetch_sub(1, Relaxed);
+                }
+            }
+            if b == b2 {
+                break;
+            }
+            b = b2;
+        }
+    }
+
+    /// Adaptive membership with a pre-computed triple: the inner
+    /// engine's verdict, post-checked against the sidecar. Negative
+    /// probes keep the engine fast path untouched.
+    #[inline]
+    pub fn contains_keyed(&self, key: u64, t: HashTriple) -> bool {
+        if !self.inner.contains_triple(t) {
+            return false;
+        }
+        if self.adapted.load(Relaxed) == 0 {
+            return true;
+        }
+        self.check_positive(key, t)
+    }
+
+    /// Re-validate an engine-positive probe against the extension
+    /// checks of the fingerprint-matching slots.
+    fn check_positive(&self, key: u64, t: HashTriple) -> bool {
+        let nb = self.inner.nbuckets();
+        let table = self.inner.table();
+        let b1 = Hasher::primary_index(t, nb);
+        let b2 = Hasher::alt_index(b1, t.fp, nb);
+        let mut any_fp_slot = false;
+        let mut b = b1;
+        loop {
+            for s in 0..SLOTS {
+                if table.get(b, s) == t.fp {
+                    any_fp_slot = true;
+                    let e = self.sidecar[b * SLOTS + s].load(Relaxed);
+                    if e == 0 || self.ext_of(key, e >> SEL_SHIFT) == (e & 0xFFFF) {
+                        return true;
+                    }
+                }
+            }
+            if b == b2 {
+                break;
+            }
+            b = b2;
+        }
+        if !any_fp_slot {
+            // The engine's positive came from somewhere we can't see
+            // (victim cache; always empty under Rollback, but stay
+            // defensive) — trust it rather than risk a false negative.
+            return true;
+        }
+        self.fp_suppressed.fetch_add(1, Relaxed);
+        false
+    }
+
+    /// Batched adaptive membership over pre-hashed triples: the inner
+    /// prefetch-pipelined engine resolves the batch, then only the
+    /// positives are post-checked.
+    pub fn contains_keyed_batch_into(
+        &self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        out: &mut Vec<bool>,
+    ) {
+        assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        let base = out.len();
+        self.inner.contains_triples_into(triples, out);
+        if self.adapted.load(Relaxed) == 0 {
+            return;
+        }
+        for (i, o) in out[base..].iter_mut().enumerate() {
+            if *o {
+                *o = self.check_positive(keys[i], triples[i]);
+            }
+        }
+    }
+
+    /// Insert with a pre-computed triple (sharded front-end path).
+    pub fn insert_hashed(&mut self, key: u64, triple: HashTriple) -> Result<(), FilterError> {
+        let r = self.inner.insert_hashed(key, triple);
+        self.sync_after_mutation();
+        r
+    }
+
+    /// Verified delete with a pre-computed triple.
+    pub fn delete_hashed(&mut self, key: u64, triple: HashTriple) -> bool {
+        let removed = self.inner.delete_hashed(key, triple);
+        self.sync_after_mutation();
+        if removed {
+            self.reset_candidate_buckets(triple);
+        }
+        removed
+    }
+
+    /// Batched insert over a pre-hashed batch; one sidecar sync after
+    /// the whole batch (`&mut` excludes readers throughout).
+    pub fn insert_batch_hashed_into(
+        &mut self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        self.inner.insert_batch_hashed_into(keys, triples, out);
+        self.sync_after_mutation();
+    }
+
+    /// Batched verified delete over a pre-hashed batch.
+    pub fn delete_batch_hashed_into(
+        &mut self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        out: &mut Vec<bool>,
+    ) {
+        let base = out.len();
+        self.inner.delete_batch_hashed_into(keys, triples, out);
+        self.sync_after_mutation();
+        // Post-state geometry: if a shrink rebuilt the sidecar the
+        // resets below are no-ops on an all-zero table; otherwise the
+        // bucket mapping is unchanged since every delete applied.
+        for (i, &t) in triples.iter().enumerate() {
+            if out[base + i] {
+                self.reset_candidate_buckets(t);
+            }
+        }
+    }
+
+    /// Aggregated stats: the inner filter's, plus the feedback
+    /// counters.
+    pub fn stats(&self) -> FilterStats {
+        let mut s = self.inner.stats();
+        s.fp_observed = self.fp_observed.load(Relaxed);
+        s.fp_remapped = self.fp_remapped.load(Relaxed);
+        s.fp_suppressed = self.fp_suppressed.load(Relaxed);
+        s
+    }
+}
+
+impl<T: BucketTable> Clone for AdaptiveOcf<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: self.inner.clone(),
+            sidecar: self
+                .sidecar
+                .iter()
+                .map(|c| AtomicU32::new(c.load(Relaxed)))
+                .collect(),
+            adapted: AtomicUsize::new(self.adapted.load(Relaxed)),
+            nbuckets_seen: self.nbuckets_seen,
+            kicks_seen: self.kicks_seen,
+            resizes_seen: self.resizes_seen,
+            seed: self.seed,
+            ext_mask: self.ext_mask,
+            sel_max: self.sel_max,
+            fp_observed: AtomicU64::new(self.fp_observed.load(Relaxed)),
+            fp_remapped: AtomicU64::new(self.fp_remapped.load(Relaxed)),
+            fp_suppressed: AtomicU64::new(self.fp_suppressed.load(Relaxed)),
+        }
+    }
+}
+
+impl<T: BucketTable> FilterFeedback for AdaptiveOcf<T> {
+    /// The feedback path (module docs steps 1–3). `&self`: callable
+    /// straight from the read path that detected the FP; all state
+    /// changes go through one CAS on the slot's sidecar entry.
+    fn report_false_positive(&self, key: u64) -> bool {
+        self.fp_observed.fetch_add(1, Relaxed);
+        let t = self.inner.hasher().hash_key(key);
+        let nb = self.inner.nbuckets();
+        let table = self.inner.table();
+        let b1 = Hasher::primary_index(t, nb);
+        let b2 = Hasher::alt_index(b1, t.fp, nb);
+
+        // 1. Exactly one fingerprint-matching slot in the pair.
+        let mut slot: Option<(usize, usize)> = None;
+        let mut b = b1;
+        loop {
+            for s in 0..SLOTS {
+                if table.get(b, s) == t.fp {
+                    if slot.is_some() {
+                        return false; // ambiguous: two fp copies
+                    }
+                    slot = Some((b, s));
+                }
+            }
+            if b == b2 {
+                break;
+            }
+            b = b2;
+        }
+        let Some((sb, ss)) = slot else {
+            return false; // no longer resident (raced a delete)
+        };
+
+        // 2. Exactly one authoritative-keystore candidate for that
+        // slot. The true resident is always a candidate, so a
+        // singleton candidate IS the resident — the extension we
+        // derive from it can never suppress a stored key.
+        let hasher = self.inner.hasher();
+        let mut resident: Option<u64> = None;
+        for k in self.inner.iter_keys() {
+            let tk = hasher.hash_key(k);
+            if tk.fp != t.fp {
+                continue;
+            }
+            let kb1 = Hasher::primary_index(tk, nb);
+            if kb1 != sb && Hasher::alt_index(kb1, tk.fp, nb) != sb {
+                continue;
+            }
+            if resident.is_some() {
+                return false; // non-singleton: unsafe to remap
+            }
+            resident = Some(k);
+        }
+        let Some(r) = resident else {
+            return false;
+        };
+        if r == key {
+            // Caller's ground truth disagrees with the keystore (the
+            // key IS stored here) — never self-suppress.
+            return false;
+        }
+
+        // 3. Rotate to the next selector separating r from key, CAS it
+        // in. A concurrent report losing the race just returns false.
+        let cell = &self.sidecar[sb * SLOTS + ss];
+        let cur = cell.load(Relaxed);
+        let mut sel = (cur >> SEL_SHIFT) % self.sel_max + 1;
+        for _ in 0..self.sel_max {
+            let ext_r = self.ext_of(r, sel);
+            if self.ext_of(key, sel) != ext_r {
+                let entry = (sel << SEL_SHIFT) | ext_r;
+                if cell.compare_exchange(cur, entry, Relaxed, Relaxed).is_ok() {
+                    if cur == 0 {
+                        self.adapted.fetch_add(1, Relaxed);
+                    }
+                    self.fp_remapped.fetch_add(1, Relaxed);
+                    return true;
+                }
+                return false;
+            }
+            sel = sel % self.sel_max + 1;
+        }
+        // No selector separates them (prob ~2^-(ext_bits·max_selectors)).
+        false
+    }
+}
+
+impl<T: BucketTable> MembershipFilter for AdaptiveOcf<T> {
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        let t = self.inner.hasher().hash_key(key);
+        self.insert_hashed(key, t)
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        let t = self.inner.hasher().hash_key(key);
+        self.contains_keyed(key, t)
+    }
+
+    fn delete(&mut self, key: u64) -> bool {
+        let t = self.inner.hasher().hash_key(key);
+        self.delete_hashed(key, t)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.inner.memory_bytes() + self.sidecar.len() * std::mem::size_of::<AtomicU32>()
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive-ocf"
+    }
+
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        MembershipFilter::contains_exact(&self.inner, key)
+    }
+
+    fn exact_len(&self) -> Option<usize> {
+        MembershipFilter::exact_len(&self.inner)
+    }
+
+    fn keystore_bytes(&self) -> usize {
+        MembershipFilter::keystore_bytes(&self.inner)
+    }
+
+    fn stats(&self) -> FilterStats {
+        Self::stats(self)
+    }
+}
+
+/// Batched overrides: the inner engine resolves the batch, the sidecar
+/// post-checks only the positives (lookups) or re-syncs once per batch
+/// (mutations).
+impl<T: BucketTable> BatchedFilter for AdaptiveOcf<T> {
+    fn contains_batch_into(&self, keys: &[u64], session: &mut ProbeSession, out: &mut Vec<bool>) {
+        session.triples.clear();
+        self.inner.hasher().hash_batch_into(keys, &mut session.triples);
+        self.contains_keyed_batch_into(keys, &session.triples, out);
+    }
+
+    fn insert_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        session.triples.clear();
+        self.inner.hasher().hash_batch_into(keys, &mut session.triples);
+        self.insert_batch_hashed_into(keys, &session.triples, out);
+    }
+
+    fn delete_batch_into(&mut self, keys: &[u64], session: &mut ProbeSession, out: &mut Vec<bool>) {
+        session.triples.clear();
+        self.inner.hasher().hash_batch_into(keys, &mut session.triples);
+        self.delete_batch_hashed_into(keys, &session.triples, out);
+    }
+}
+
+/// N independent [`AdaptiveOcf`] shards behind per-shard lock stripes —
+/// the adaptive twin of [`ShardedOcf`](super::ShardedOcf), sharing its
+/// shard routing (finalizer over the triple) and gather/scatter batch
+/// plan. Reports lock only the owning shard, so feedback from
+/// concurrent readers contends exactly like any other shard access.
+#[derive(Debug)]
+pub struct ShardedAdaptiveOcf {
+    shards: Vec<Mutex<AdaptiveOcf>>,
+    shard_bits: u32,
+    hasher: Hasher,
+}
+
+impl ShardedAdaptiveOcf {
+    /// Build `n` shards (rounded up to a power of two) from a template
+    /// config whose capacities are divided across shards (the same
+    /// split as [`ShardedOcf::with_shards`](super::ShardedOcf::with_shards)).
+    pub fn with_shards(n: usize, cfg: AdaptiveConfig) -> Self {
+        let n = n.max(1).next_power_of_two();
+        let shard_cfg = AdaptiveConfig {
+            base: OcfConfig {
+                initial_capacity: crate::util::ceil_div(cfg.base.initial_capacity, n).max(64),
+                min_capacity: crate::util::ceil_div(cfg.base.min_capacity, n).max(64),
+                max_capacity: cfg
+                    .base
+                    .max_capacity
+                    .map(|m| crate::util::ceil_div(m, n).max(64)),
+                ..cfg.base
+            },
+            ..cfg
+        };
+        let shards: Vec<Mutex<AdaptiveOcf>> = (0..n)
+            .map(|_| Mutex::new(AdaptiveOcf::new(shard_cfg)))
+            .collect();
+        let hasher = shards[0].lock().unwrap().hasher();
+        Self {
+            shards,
+            shard_bits: n.trailing_zeros(),
+            hasher,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The hasher shared by every shard.
+    pub fn hasher(&self) -> Hasher {
+        self.hasher
+    }
+
+    /// Shard index for a pre-hashed triple (same finalizer as
+    /// [`ShardedOcf::shard_of`](super::ShardedOcf::shard_of)).
+    #[inline(always)]
+    pub fn shard_of(&self, t: HashTriple) -> usize {
+        if self.shard_bits == 0 {
+            0
+        } else {
+            (mix32(t.idx_hash ^ t.fp) >> (32 - self.shard_bits)) as usize
+        }
+    }
+
+    /// Run `f` with exclusive access to shard `sid` under one lock
+    /// acquisition.
+    pub fn with_shard<R>(&self, sid: usize, f: impl FnOnce(&mut AdaptiveOcf) -> R) -> R {
+        let mut guard = self.shards[sid].lock().unwrap();
+        f(&mut guard)
+    }
+
+    fn group_by_shard_into(&self, triples: &[HashTriple], groups: &mut Vec<Vec<usize>>) {
+        groups.resize_with(self.shards.len(), Vec::new);
+        for g in groups.iter_mut() {
+            g.clear();
+        }
+        for (i, t) in triples.iter().enumerate() {
+            groups[self.shard_of(*t)].push(i);
+        }
+    }
+
+    // ---- single-key operations (lock internally) ----
+
+    pub fn insert_one(&self, key: u64) -> Result<(), FilterError> {
+        let t = self.hasher.hash_key(key);
+        self.with_shard(self.shard_of(t), |s| s.insert_hashed(key, t))
+    }
+
+    pub fn contains_one(&self, key: u64) -> bool {
+        let t = self.hasher.hash_key(key);
+        self.with_shard(self.shard_of(t), |s| s.contains_keyed(key, t))
+    }
+
+    pub fn delete_one(&self, key: u64) -> bool {
+        let t = self.hasher.hash_key(key);
+        self.with_shard(self.shard_of(t), |s| s.delete_hashed(key, t))
+    }
+
+    /// Exact membership via the owning shard's authoritative store.
+    pub fn contains_exact(&self, key: u64) -> bool {
+        let t = self.hasher.hash_key(key);
+        self.with_shard(self.shard_of(t), |s| {
+            MembershipFilter::contains_exact(&*s, key).unwrap_or(false)
+        })
+    }
+
+    /// Report a ground-truth FP to the owning shard.
+    pub fn report_one(&self, key: u64) -> bool {
+        let t = self.hasher.hash_key(key);
+        self.with_shard(self.shard_of(t), |s| {
+            FilterFeedback::report_false_positive(&*s, key)
+        })
+    }
+
+    // ---- batched operations: hash once, group, one lock per shard ----
+
+    fn contains_batch_impl(
+        &self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        scratch: &mut ShardScratch,
+        out: &mut Vec<bool>,
+    ) {
+        assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        let base = out.len();
+        out.resize(base + keys.len(), false);
+        let out = &mut out[base..];
+        self.group_by_shard_into(triples, &mut scratch.groups);
+        for (sid, group) in scratch.groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            scratch.keys.clear();
+            scratch.triples.clear();
+            for &i in group {
+                scratch.keys.push(keys[i]);
+                scratch.triples.push(triples[i]);
+            }
+            scratch.bools.clear();
+            let shard = self.shards[sid].lock().unwrap();
+            shard.contains_keyed_batch_into(&scratch.keys, &scratch.triples, &mut scratch.bools);
+            drop(shard);
+            for (&i, &r) in group.iter().zip(&scratch.bools) {
+                out[i] = r;
+            }
+        }
+    }
+
+    fn insert_batch_impl(
+        &self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        scratch: &mut ShardScratch,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        let base = out.len();
+        out.resize(base + keys.len(), Ok(()));
+        let out = &mut out[base..];
+        self.group_by_shard_into(triples, &mut scratch.groups);
+        for (sid, group) in scratch.groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            scratch.keys.clear();
+            scratch.triples.clear();
+            for &i in group {
+                scratch.keys.push(keys[i]);
+                scratch.triples.push(triples[i]);
+            }
+            scratch.results.clear();
+            let mut shard = self.shards[sid].lock().unwrap();
+            shard.insert_batch_hashed_into(&scratch.keys, &scratch.triples, &mut scratch.results);
+            drop(shard);
+            for (&i, r) in group.iter().zip(scratch.results.drain(..)) {
+                out[i] = r;
+            }
+        }
+    }
+
+    fn delete_batch_impl(
+        &self,
+        keys: &[u64],
+        triples: &[HashTriple],
+        scratch: &mut ShardScratch,
+        out: &mut Vec<bool>,
+    ) {
+        assert_eq!(keys.len(), triples.len(), "keys/triples length mismatch");
+        let base = out.len();
+        out.resize(base + keys.len(), false);
+        let out = &mut out[base..];
+        self.group_by_shard_into(triples, &mut scratch.groups);
+        for (sid, group) in scratch.groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            scratch.keys.clear();
+            scratch.triples.clear();
+            for &i in group {
+                scratch.keys.push(keys[i]);
+                scratch.triples.push(triples[i]);
+            }
+            scratch.bools.clear();
+            let mut shard = self.shards[sid].lock().unwrap();
+            shard.delete_batch_hashed_into(&scratch.keys, &scratch.triples, &mut scratch.bools);
+            drop(shard);
+            for (&i, &r) in group.iter().zip(&scratch.bools) {
+                out[i] = r;
+            }
+        }
+    }
+
+    // ---- merged views across shards ----
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().capacity())
+            .sum()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().memory_bytes())
+            .sum()
+    }
+
+    pub fn keystore_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| MembershipFilter::keystore_bytes(&*s.lock().unwrap()))
+            .sum()
+    }
+
+    /// Merged stats across shards (feedback counters included).
+    pub fn stats(&self) -> FilterStats {
+        let mut out = FilterStats::new();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap().stats());
+        }
+        out
+    }
+
+    /// Total adapted slots across shards.
+    pub fn adapted_slots(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().adapted_slots())
+            .sum()
+    }
+}
+
+impl FilterFeedback for ShardedAdaptiveOcf {
+    fn report_false_positive(&self, key: u64) -> bool {
+        self.report_one(key)
+    }
+}
+
+/// `&mut self` implies exclusive access, so the single-writer trait
+/// family delegates to the same-named `&self` operations (mirroring
+/// [`ShardedOcf`](super::ShardedOcf)).
+impl MembershipFilter for ShardedAdaptiveOcf {
+    fn insert(&mut self, key: u64) -> Result<(), FilterError> {
+        self.insert_one(key)
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.contains_one(key)
+    }
+
+    fn delete(&mut self, key: u64) -> bool {
+        self.delete_one(key)
+    }
+
+    fn len(&self) -> usize {
+        ShardedAdaptiveOcf::len(self)
+    }
+
+    fn capacity(&self) -> usize {
+        ShardedAdaptiveOcf::capacity(self)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        ShardedAdaptiveOcf::memory_bytes(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded-adaptive-ocf"
+    }
+
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        Some(ShardedAdaptiveOcf::contains_exact(self, key))
+    }
+
+    fn exact_len(&self) -> Option<usize> {
+        Some(ShardedAdaptiveOcf::len(self))
+    }
+
+    fn keystore_bytes(&self) -> usize {
+        ShardedAdaptiveOcf::keystore_bytes(self)
+    }
+
+    fn stats(&self) -> FilterStats {
+        ShardedAdaptiveOcf::stats(self)
+    }
+}
+
+impl BatchedFilter for ShardedAdaptiveOcf {
+    fn contains_batch_into(&self, keys: &[u64], session: &mut ProbeSession, out: &mut Vec<bool>) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let ProbeSession { triples, shard } = session;
+        self.contains_batch_impl(keys, triples, shard, out);
+    }
+
+    fn insert_batch_into(
+        &mut self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let ProbeSession { triples, shard } = session;
+        self.insert_batch_impl(keys, triples, shard, out);
+    }
+
+    fn delete_batch_into(&mut self, keys: &[u64], session: &mut ProbeSession, out: &mut Vec<bool>) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let ProbeSession { triples, shard } = session;
+        self.delete_batch_impl(keys, triples, shard, out);
+    }
+}
+
+impl ConcurrentFilter for ShardedAdaptiveOcf {
+    fn insert(&self, key: u64) -> Result<(), FilterError> {
+        self.insert_one(key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        self.contains_one(key)
+    }
+    fn delete(&self, key: u64) -> bool {
+        self.delete_one(key)
+    }
+    fn len(&self) -> usize {
+        ShardedAdaptiveOcf::len(self)
+    }
+    fn capacity(&self) -> usize {
+        ShardedAdaptiveOcf::capacity(self)
+    }
+    fn memory_bytes(&self) -> usize {
+        ShardedAdaptiveOcf::memory_bytes(self)
+    }
+    fn stats(&self) -> FilterStats {
+        ShardedAdaptiveOcf::stats(self)
+    }
+    fn name(&self) -> &'static str {
+        "sharded-adaptive-ocf"
+    }
+    fn contains_exact(&self, key: u64) -> Option<bool> {
+        Some(ShardedAdaptiveOcf::contains_exact(self, key))
+    }
+    fn report_false_positive(&self, key: u64) -> bool {
+        self.report_one(key)
+    }
+    fn contains_batch_into(&self, keys: &[u64], session: &mut ProbeSession, out: &mut Vec<bool>) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let ProbeSession { triples, shard } = session;
+        self.contains_batch_impl(keys, triples, shard, out);
+    }
+    fn insert_batch_into(
+        &self,
+        keys: &[u64],
+        session: &mut ProbeSession,
+        out: &mut Vec<Result<(), FilterError>>,
+    ) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let ProbeSession { triples, shard } = session;
+        self.insert_batch_impl(keys, triples, shard, out);
+    }
+    fn delete_batch_into(&self, keys: &[u64], session: &mut ProbeSession, out: &mut Vec<bool>) {
+        session.triples.clear();
+        self.hasher.hash_batch_into(keys, &mut session.triples);
+        let ProbeSession { triples, shard } = session;
+        self.delete_batch_impl(keys, triples, shard, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filter::bucket::PackedTable;
+
+    fn cfg(fp_bits: u32, capacity: usize) -> AdaptiveConfig {
+        AdaptiveConfig {
+            base: OcfConfig {
+                fp_bits,
+                initial_capacity: capacity,
+                min_capacity: 256,
+                ..OcfConfig::default()
+            },
+            ..AdaptiveConfig::default()
+        }
+    }
+
+    /// The satellite's unit differential: with no FP ever reported the
+    /// adaptive filter answers bit-identically to the static inner
+    /// path, through inserts, deletes, resizes and batch APIs.
+    #[test]
+    fn adaptive_matches_static_when_no_reports() {
+        let base = OcfConfig {
+            initial_capacity: 1024,
+            min_capacity: 256,
+            ..OcfConfig::default()
+        };
+        let mut plain = Ocf::new(base);
+        let mut adaptive = AdaptiveOcf::new(AdaptiveConfig {
+            base,
+            ..AdaptiveConfig::default()
+        });
+        let keys: Vec<u64> = (0..20_000u64).collect();
+        let ra = adaptive.insert_batch(&keys);
+        let rp = plain.insert_batch(&keys);
+        for (a, p) in ra.iter().zip(&rp) {
+            assert_eq!(a.is_ok(), p.is_ok());
+        }
+        for k in (0..20_000u64).step_by(3) {
+            assert_eq!(adaptive.delete(k), plain.delete(k), "{k}");
+        }
+        assert_eq!(adaptive.len(), plain.len());
+        assert_eq!(adaptive.capacity(), plain.capacity());
+        let probes: Vec<u64> = (0..60_000u64).step_by(7).collect();
+        assert_eq!(adaptive.contains_batch(&probes), plain.contains_batch(&probes));
+        let s = adaptive.stats();
+        assert_eq!((s.fp_observed, s.fp_remapped, s.fp_suppressed), (0, 0, 0));
+        assert_eq!(adaptive.adapted_slots(), 0);
+    }
+
+    #[test]
+    fn packed_backend_matches_flat_when_no_reports() {
+        let c = cfg(16, 2048);
+        let mut flat = AdaptiveOcf::new(c);
+        let mut packed = AdaptiveOcf::<PackedTable>::with_config(c);
+        for k in 0..10_000u64 {
+            assert_eq!(flat.insert(k).is_ok(), packed.insert(k).is_ok(), "{k}");
+        }
+        for k in (0..30_000u64).step_by(11) {
+            assert_eq!(flat.contains(k), packed.contains(k), "{k}");
+        }
+    }
+
+    /// Find a negative key the filter false-positives on, report it,
+    /// and pin the convergence contract: the reported key is now
+    /// suppressed, every stored key is still present.
+    #[test]
+    fn reported_fp_suppressed_and_no_false_negatives() {
+        // narrow fingerprints → plentiful FPs to catch
+        let mut f = AdaptiveOcf::new(cfg(8, 8192));
+        let n = 4096u64;
+        for k in 0..n {
+            f.insert(k).unwrap();
+        }
+        let mut remapped = vec![];
+        for k in 1_000_000..1_200_000u64 {
+            if f.contains(k) && f.report_false_positive(k) {
+                assert!(!f.contains(k), "reported FP {k} must be suppressed");
+                remapped.push(k);
+                if remapped.len() >= 50 {
+                    break;
+                }
+            }
+        }
+        assert!(
+            remapped.len() >= 10,
+            "8-bit fingerprints over 200k probes must yield reportable FPs, got {}",
+            remapped.len()
+        );
+        // the no-new-false-negatives contract
+        for k in 0..n {
+            assert!(f.contains(k), "false negative {k} after adaptation");
+        }
+        let s = f.stats();
+        assert!(s.fp_remapped >= remapped.len() as u64);
+        assert!(s.fp_observed >= s.fp_remapped);
+        assert!(f.adapted_slots() > 0);
+    }
+
+    #[test]
+    fn reporting_resident_key_is_refused() {
+        let mut f = AdaptiveOcf::new(cfg(16, 2048));
+        for k in 0..1000u64 {
+            f.insert(k).unwrap();
+        }
+        for k in 0..1000u64 {
+            assert!(!f.report_false_positive(k), "resident {k} must be refused");
+            assert!(f.contains(k), "resident {k} suppressed by abuse report");
+        }
+    }
+
+    #[test]
+    fn remapped_slots_keys_stay_deletable_and_reinsertable() {
+        let mut f = AdaptiveOcf::new(cfg(8, 8192));
+        let n = 4096u64;
+        for k in 0..n {
+            f.insert(k).unwrap();
+        }
+        let mut reported = 0;
+        for k in 1_000_000..1_100_000u64 {
+            if f.contains(k) && f.report_false_positive(k) {
+                reported += 1;
+                if reported >= 20 {
+                    break;
+                }
+            }
+        }
+        assert!(reported > 0);
+        // every stored key — including residents of adapted slots —
+        // must remain verifiably delete-able, and re-insertable
+        for k in 0..n {
+            assert!(f.delete(k), "delete of {k} failed after adaptation");
+        }
+        assert_eq!(f.len(), 0);
+        assert_eq!(f.adapted_slots(), 0, "deletes must reset their buckets");
+        for k in 0..n {
+            f.insert(k).unwrap();
+            assert!(f.contains(k));
+        }
+    }
+
+    #[test]
+    fn adaptation_resets_on_resize() {
+        let mut f = AdaptiveOcf::new(cfg(8, 4096));
+        for k in 0..2000u64 {
+            f.insert(k).unwrap();
+        }
+        let mut reported = 0;
+        for k in 1_000_000..1_100_000u64 {
+            if f.contains(k) && f.report_false_positive(k) {
+                reported += 1;
+                if reported >= 5 {
+                    break;
+                }
+            }
+        }
+        assert!(reported > 0);
+        assert!(f.adapted_slots() > 0);
+        let before = f.capacity();
+        let mut k = 2000u64;
+        while f.capacity() == before {
+            f.insert(k).unwrap();
+            k += 1;
+        }
+        assert_eq!(f.adapted_slots(), 0, "resize must reset the sidecar");
+        for key in 0..k {
+            assert!(f.contains(key), "false negative {key} after resize");
+        }
+    }
+
+    #[test]
+    fn sharded_adaptive_roundtrip_and_feedback() {
+        let f = ShardedAdaptiveOcf::with_shards(4, cfg(8, 16_384));
+        let keys: Vec<u64> = (0..8000u64).collect();
+        for r in ConcurrentFilter::insert_batch(&f, &keys) {
+            r.unwrap();
+        }
+        assert_eq!(ConcurrentFilter::len(&f), 8000);
+        assert!(ConcurrentFilter::contains_batch(&f, &keys).iter().all(|&b| b));
+        // report every FP we can find; stored keys must survive
+        let mut reported = 0;
+        for k in 1_000_000..1_100_000u64 {
+            if ConcurrentFilter::contains(&f, k)
+                && ConcurrentFilter::report_false_positive(&f, k)
+            {
+                assert!(!ConcurrentFilter::contains(&f, k), "{k} not suppressed");
+                reported += 1;
+                if reported >= 20 {
+                    break;
+                }
+            }
+        }
+        assert!(reported > 0, "sharded feedback path never engaged");
+        assert!(f.adapted_slots() > 0);
+        assert!(ConcurrentFilter::contains_batch(&f, &keys).iter().all(|&b| b));
+        let s = ShardedAdaptiveOcf::stats(&f);
+        assert!(s.fp_remapped >= reported as u64);
+        // deletes still verified + exact
+        assert_eq!(ConcurrentFilter::contains_exact(&f, 17), Some(true));
+        assert_eq!(ConcurrentFilter::contains_exact(&f, 1 << 40), Some(false));
+        let deleted = ConcurrentFilter::delete_batch(&f, &keys);
+        assert!(deleted.iter().all(|&d| d));
+        assert!(ConcurrentFilter::is_empty(&f));
+    }
+
+    #[test]
+    fn repeat_negative_hammering_converges_to_zero_fp() {
+        let mut f = AdaptiveOcf::new(cfg(8, 8192));
+        for k in 0..4096u64 {
+            f.insert(k).unwrap();
+        }
+        // fixed adversarial negative set: hammer it, reporting every FP
+        let negatives: Vec<u64> = (5_000_000..5_002_000u64).collect();
+        for _round in 0..3 {
+            for &k in &negatives {
+                if f.contains(k) {
+                    f.report_false_positive(k);
+                }
+            }
+        }
+        // steady state: only non-singleton/unseparable leftovers may
+        // still collide — the hot set's FP rate must have collapsed
+        let residual = negatives.iter().filter(|&&k| f.contains(k)).count();
+        let initial = {
+            let mut g = AdaptiveOcf::new(cfg(8, 8192));
+            for k in 0..4096u64 {
+                g.insert(k).unwrap();
+            }
+            negatives.iter().filter(|&&k| g.contains(k)).count()
+        };
+        assert!(
+            residual * 10 <= initial.max(10),
+            "adaptation must cut the hot negative set's FPs ≥10×: {initial} → {residual}"
+        );
+        for k in 0..4096u64 {
+            assert!(f.contains(k), "false negative {k}");
+        }
+    }
+
+    #[test]
+    fn clone_preserves_adaptation() {
+        let mut f = AdaptiveOcf::new(cfg(8, 8192));
+        for k in 0..4096u64 {
+            f.insert(k).unwrap();
+        }
+        for k in 1_000_000..1_050_000u64 {
+            if f.contains(k) && f.report_false_positive(k) {
+                let g = f.clone();
+                assert!(!g.contains(k), "clone lost the suppression");
+                assert_eq!(g.adapted_slots(), f.adapted_slots());
+                return;
+            }
+        }
+        panic!("no reportable FP found");
+    }
+}

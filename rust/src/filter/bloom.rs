@@ -13,7 +13,7 @@
 //! the crate's `mix64`, so no extra hash family is needed.
 
 use super::fingerprint::mix64;
-use super::{BatchedFilter, FilterError, MembershipFilter};
+use super::{BatchedFilter, FilterError, FilterFeedback, MembershipFilter};
 
 /// Compute (m bits, k hashes) for `n` expected items at `fpr` target.
 pub fn optimal_params(n: usize, fpr: f64) -> (usize, u32) {
@@ -83,6 +83,10 @@ impl BloomFilter {
         set as f64 / self.m as f64
     }
 }
+
+// Bloom filters cannot adapt (no per-slot identity to remap) — no-op
+// feedback default.
+impl FilterFeedback for BloomFilter {}
 
 impl MembershipFilter for BloomFilter {
     fn insert(&mut self, key: u64) -> Result<(), FilterError> {
@@ -182,6 +186,8 @@ impl CountingBloomFilter {
         (h1.wrapping_add(i.wrapping_mul(h2)) % self.m as u64) as usize
     }
 }
+
+impl FilterFeedback for CountingBloomFilter {}
 
 impl MembershipFilter for CountingBloomFilter {
     fn insert(&mut self, key: u64) -> Result<(), FilterError> {

@@ -26,6 +26,8 @@
 //! | `ocf-pre` | [`Ocf`] with static thresholds |
 //! | `ocf-static` | [`Ocf`] with resizing disabled (traditional arm) |
 //! | `sharded`, `sharded-ocf` | [`ShardedOcf`] over `shards` lock stripes |
+//! | `adaptive` | [`AdaptiveOcf`] — OCF + FP-feedback sidecar (sharded when `shards > 1`) |
+//! | `adaptive-packed` | [`AdaptiveOcf`] over the SWAR bit-packed table |
 //! | `cuckoo` | raw [`CuckooFilter`] on [`FlatTable`] |
 //! | `cuckoo-packed` | raw [`CuckooFilter`] on [`PackedTable`] |
 //! | `bloom` | [`BloomFilter`] sized for `capacity` keys at `bloom_fpr` |
@@ -36,6 +38,7 @@
 //! front-end (the old `NodeConfig::filter_shards` semantics);
 //! non-shardable backends reject `shards > 1` at validation.
 
+use super::adaptive::{AdaptiveConfig, AdaptiveOcf, ShardedAdaptiveOcf, MAX_EXT_BITS};
 use super::bloom::{BloomFilter, CountingBloomFilter};
 use super::concurrent::{ConcurrentFilter, MutexFilter};
 use super::cuckoo::{CuckooFilter, CuckooParams, VictimPolicy};
@@ -76,6 +79,11 @@ impl std::error::Error for BuilderError {}
 pub enum FilterBackend {
     /// [`Ocf`] — mode taken from the builder's [`OcfConfig`].
     Ocf,
+    /// [`AdaptiveOcf`] — an OCF plus the false-positive feedback
+    /// sidecar ([`super::FilterFeedback`]); shards like `Ocf`.
+    Adaptive,
+    /// [`AdaptiveOcf`] over the SWAR bit-packed table.
+    AdaptivePacked,
     /// Raw [`CuckooFilter`] on the flat (one-`u32`-per-slot) table.
     Cuckoo,
     /// Raw [`CuckooFilter`] on the SWAR bit-packed table.
@@ -97,6 +105,8 @@ impl FilterBackend {
         "ocf-static",
         "sharded",
         "sharded-ocf",
+        "adaptive",
+        "adaptive-packed",
         "cuckoo",
         "cuckoo-packed",
         "bloom",
@@ -106,12 +116,14 @@ impl FilterBackend {
 
     /// Can this backend run under the sharded OCF front-end?
     pub fn shardable(&self) -> bool {
-        matches!(self, FilterBackend::Ocf)
+        matches!(self, FilterBackend::Ocf | FilterBackend::Adaptive)
     }
 
     pub fn as_str(&self) -> &'static str {
         match self {
             FilterBackend::Ocf => "ocf",
+            FilterBackend::Adaptive => "adaptive",
+            FilterBackend::AdaptivePacked => "adaptive-packed",
             FilterBackend::Cuckoo => "cuckoo",
             FilterBackend::CuckooPacked => "cuckoo-packed",
             FilterBackend::Bloom => "bloom",
@@ -143,6 +155,9 @@ pub struct FilterBuilder {
     /// Victim policy for the **raw cuckoo** backends (the OCF family
     /// always uses `Rollback` internally — see `OcfConfig`).
     pub victim_policy: VictimPolicy,
+    /// Extension-check width for the adaptive backends
+    /// (1..=[`MAX_EXT_BITS`]; see [`AdaptiveConfig::ext_bits`]).
+    pub ext_bits: u32,
 }
 
 impl Default for FilterBuilder {
@@ -153,6 +168,7 @@ impl Default for FilterBuilder {
             shards: 1,
             bloom_fpr: 0.01,
             victim_policy: VictimPolicy::Stash,
+            ext_bits: AdaptiveConfig::default().ext_bits,
         }
     }
 }
@@ -204,6 +220,8 @@ impl FilterBuilder {
                     self.shards = 4;
                 }
             }
+            "adaptive" => self.backend = FilterBackend::Adaptive,
+            "adaptive-packed" => self.backend = FilterBackend::AdaptivePacked,
             "cuckoo" => self.backend = FilterBackend::Cuckoo,
             "cuckoo-packed" => self.backend = FilterBackend::CuckooPacked,
             "bloom" => self.backend = FilterBackend::Bloom,
@@ -246,6 +264,11 @@ impl FilterBuilder {
         self
     }
 
+    pub fn with_ext_bits(mut self, ext_bits: u32) -> Self {
+        self.ext_bits = ext_bits;
+        self
+    }
+
     /// Display name of what `build` would construct ("ocf-eof",
     /// "sharded-ocf", "bloom", ...).
     pub fn describe(&self) -> &'static str {
@@ -256,7 +279,19 @@ impl FilterBuilder {
                 Mode::Eof => "ocf-eof",
                 Mode::Static => "ocf-static",
             },
+            FilterBackend::Adaptive if self.shards > 1 => "sharded-adaptive-ocf",
+            FilterBackend::Adaptive => "adaptive-ocf",
+            FilterBackend::AdaptivePacked => "adaptive-ocf-packed",
             other => other.as_str(),
+        }
+    }
+
+    /// The adaptive-backend view of the shared knobs.
+    pub fn adaptive_config(&self) -> AdaptiveConfig {
+        AdaptiveConfig {
+            base: self.ocf,
+            ext_bits: self.ext_bits,
+            ..AdaptiveConfig::default()
         }
     }
 
@@ -328,6 +363,12 @@ impl FilterBuilder {
                 self.bloom_fpr
             ));
         }
+        if !(1..=MAX_EXT_BITS).contains(&self.ext_bits) {
+            return inv(format!(
+                "ext_bits must be in 1..={MAX_EXT_BITS}, got {}",
+                self.ext_bits
+            ));
+        }
         Ok(())
     }
 
@@ -339,6 +380,13 @@ impl FilterBuilder {
                 Box::new(ShardedOcf::with_shards(self.shards, self.ocf))
             }
             FilterBackend::Ocf => Box::new(Ocf::new(self.ocf)),
+            FilterBackend::Adaptive if self.shards > 1 => Box::new(
+                ShardedAdaptiveOcf::with_shards(self.shards, self.adaptive_config()),
+            ),
+            FilterBackend::Adaptive => Box::new(AdaptiveOcf::new(self.adaptive_config())),
+            FilterBackend::AdaptivePacked => Box::new(
+                AdaptiveOcf::<PackedTable>::with_config(self.adaptive_config()),
+            ),
             FilterBackend::Cuckoo => {
                 Box::new(CuckooFilter::<FlatTable>::new(self.cuckoo_params()))
             }
@@ -374,6 +422,12 @@ impl FilterBuilder {
         if self.backend == FilterBackend::Ocf && self.shards > 1 {
             return Ok(Box::new(ShardedOcf::with_shards(self.shards, self.ocf)));
         }
+        if self.backend == FilterBackend::Adaptive && self.shards > 1 {
+            return Ok(Box::new(ShardedAdaptiveOcf::with_shards(
+                self.shards,
+                self.adaptive_config(),
+            )));
+        }
         Ok(Box::new(MutexFilter::new(self.build()?)))
     }
 
@@ -407,7 +461,7 @@ impl FilterBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::filter::MembershipFilter;
+    use crate::filter::{FilterFeedback, MembershipFilter};
 
     #[test]
     fn every_name_builds() {
@@ -458,6 +512,8 @@ mod tests {
         bad(|b| b.shards = 0);
         bad(|b| b.shards = 2048);
         bad(|b| b.bloom_fpr = 0.0);
+        bad(|b| b.ext_bits = 0);
+        bad(|b| b.ext_bits = MAX_EXT_BITS + 1);
         bad(|b| {
             b.backend = FilterBackend::Bloom;
             b.shards = 4; // bloom cannot shard
@@ -496,6 +552,46 @@ mod tests {
         assert_eq!(b.cuckoo_params().fp_bits, 12);
         let f = b.build().unwrap();
         assert_eq!(f.name(), "ocf-pre");
+    }
+
+    #[test]
+    fn adaptive_backend_builds_and_adapts() {
+        let b = FilterBuilder::named("adaptive")
+            .unwrap()
+            .with_initial_capacity(8192)
+            .with_fp_bits(8);
+        assert_eq!(b.describe(), "adaptive-ocf");
+        let mut f = b.build().unwrap();
+        assert_eq!(f.name(), "adaptive-ocf");
+        for k in 0..4096u64 {
+            f.insert(k).unwrap();
+        }
+        // feedback must work through the boxed trait-object surface
+        let mut reported = false;
+        for k in 1_000_000..1_100_000u64 {
+            if f.contains(k) && f.report_false_positive(k) {
+                assert!(!f.contains(k), "{k} not suppressed");
+                reported = true;
+                break;
+            }
+        }
+        assert!(reported, "no reportable FP at 8-bit fingerprints");
+        assert!(f.stats().fp_remapped >= 1);
+        // non-adaptive backends no-op the same call
+        let ocf = FilterBuilder::named("ocf").unwrap().build().unwrap();
+        assert!(!ocf.report_false_positive(1));
+
+        let sharded = FilterBuilder::named("adaptive").unwrap().with_shards(4);
+        assert_eq!(sharded.describe(), "sharded-adaptive-ocf");
+        assert_eq!(sharded.build().unwrap().name(), "sharded-adaptive-ocf");
+        assert_eq!(
+            sharded.build_concurrent().unwrap().name(),
+            "sharded-adaptive-ocf"
+        );
+        assert_eq!(
+            FilterBuilder::named("adaptive-packed").unwrap().describe(),
+            "adaptive-ocf-packed"
+        );
     }
 
     #[test]

@@ -73,6 +73,14 @@ pub trait ConcurrentFilter: Send + Sync {
         None
     }
 
+    /// Report a ground-truth false positive (see
+    /// [`FilterFeedback`](super::FilterFeedback)); adaptive backends
+    /// remap the offending entry, everything else no-ops.
+    fn report_false_positive(&self, key: u64) -> bool {
+        let _ = key;
+        false
+    }
+
     // ---- batched forms (defaults: scalar loops) ----
 
     /// Batched membership appended positionally to `out`.
@@ -167,6 +175,9 @@ impl<C: ConcurrentFilter + ?Sized> ConcurrentFilter for Box<C> {
     fn contains_exact(&self, key: u64) -> Option<bool> {
         (**self).contains_exact(key)
     }
+    fn report_false_positive(&self, key: u64) -> bool {
+        (**self).report_false_positive(key)
+    }
     fn contains_batch_into(
         &self,
         keys: &[u64],
@@ -255,6 +266,9 @@ impl<F: BatchedFilter + Send> ConcurrentFilter for MutexFilter<F> {
     }
     fn contains_exact(&self, key: u64) -> Option<bool> {
         self.inner.lock().unwrap().contains_exact(key)
+    }
+    fn report_false_positive(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().report_false_positive(key)
     }
     fn contains_batch_into(
         &self,

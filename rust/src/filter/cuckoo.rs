@@ -20,7 +20,7 @@ use super::bucket::{BucketTable, FlatTable, SLOTS};
 use super::fingerprint::{Hasher, HashTriple};
 use super::metrics::FilterStats;
 use super::session::ProbeSession;
-use super::{BatchedFilter, FilterError, MembershipFilter};
+use super::{BatchedFilter, FilterError, FilterFeedback, MembershipFilter};
 use crate::util::SplitMix64;
 use std::collections::VecDeque;
 
@@ -541,6 +541,10 @@ impl<T: BucketTable> CuckooFilter<T> {
             .chain(self.victim)
     }
 }
+
+// The raw table has no authoritative key store to verify a reported FP
+// against, so it cannot adapt safely — no-op feedback default.
+impl<T: BucketTable> FilterFeedback for CuckooFilter<T> {}
 
 impl<T: BucketTable> MembershipFilter for CuckooFilter<T> {
     fn insert(&mut self, key: u64) -> Result<(), FilterError> {

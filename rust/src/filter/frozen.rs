@@ -34,7 +34,7 @@ use super::cuckoo::CuckooFilter;
 use super::fingerprint::{Hasher, HashTriple};
 use super::kernel::{self, prefetch_read, ProbeKernel};
 use super::session::ProbeSession;
-use super::{BatchedFilter, FilterError, MembershipFilter};
+use super::{BatchedFilter, FilterError, FilterFeedback, MembershipFilter};
 use crate::util::MmapRegion;
 use std::sync::Arc;
 
@@ -307,6 +307,11 @@ impl FrozenTable {
         self.inner.contains_triples_into(triples, out);
     }
 }
+
+// Frozen snapshots are immutable probe-only tables: adaptation state is
+// not serialized and cannot be learned here — rebuild-on-recover policy
+// (see `filter/adaptive.rs` and `filter/README.md` "Adaptivity").
+impl FilterFeedback for FrozenTable {}
 
 impl MembershipFilter for FrozenTable {
     /// Frozen tables are immutable: inserts are refused, never applied.

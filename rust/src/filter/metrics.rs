@@ -35,6 +35,18 @@ pub struct FilterStats {
     /// Fingerprints silently dropped (traditional filter, Drop policy) —
     /// each one is a latent false negative.
     pub dropped_fingerprints: u64,
+    /// False positives reported through [`crate::filter::FilterFeedback`]
+    /// (`report_false_positive`) — ground-truth misses observed by a
+    /// caller that consulted its authoritative store.
+    pub fp_observed: u64,
+    /// Reported FPs that resulted in a selector rotation (the offending
+    /// slot now carries a fingerprint-extension word derived from its
+    /// verified resident — see `filter/adaptive.rs`).
+    pub fp_remapped: u64,
+    /// Probes the adaptive extension check rejected that the base
+    /// fingerprint compare would have passed — false positives the
+    /// adaptation *prevented*.
+    pub fp_suppressed: u64,
 }
 
 impl FilterStats {
@@ -81,6 +93,9 @@ impl FilterStats {
         self.rehashed_keys += other.rehashed_keys;
         self.victim_stashes += other.victim_stashes;
         self.dropped_fingerprints += other.dropped_fingerprints;
+        self.fp_observed += other.fp_observed;
+        self.fp_remapped += other.fp_remapped;
+        self.fp_suppressed += other.fp_suppressed;
     }
 }
 
@@ -123,6 +138,9 @@ mod tests {
             deletes: 20,
             lookups: 30,
             dropped_fingerprints: 5,
+            fp_observed: 7,
+            fp_remapped: 4,
+            fp_suppressed: 9,
             ..Default::default()
         };
         a.merge(&b);
@@ -130,5 +148,8 @@ mod tests {
         assert_eq!(a.deletes, 22);
         assert_eq!(a.lookups, 33);
         assert_eq!(a.dropped_fingerprints, 5);
+        assert_eq!(a.fp_observed, 7);
+        assert_eq!(a.fp_remapped, 4);
+        assert_eq!(a.fp_suppressed, 9);
     }
 }

@@ -45,6 +45,13 @@
 //!   insert/contains/delete + the same batched forms), implemented by
 //!   [`ShardedOcf`] natively and by the [`MutexFilter`] adapter for any
 //!   `BatchedFilter`.
+//! * [`FilterFeedback`] — the false-positive feedback capability
+//!   (`report_false_positive(key)`), a supertrait of
+//!   [`MembershipFilter`] with a no-op default; the adaptive backends
+//!   ([`AdaptiveOcf`], [`ShardedAdaptiveOcf`], `adaptive.rs`) override
+//!   it to rotate per-slot hash selectors so repeated false positives
+//!   on hot negative keys converge to ~zero without ever introducing a
+//!   false negative.
 //!
 //! All three are object-safe; [`FilterBuilder`] selects any backend *by
 //! name* ("ocf-eof", "sharded", "bloom", …) and builds `Box<dyn
@@ -112,6 +119,7 @@
 //! seed/fp_bits), so a batch is hashed exactly once and the triples are
 //! valid against every shard.
 
+pub mod adaptive;
 pub mod bloom;
 pub mod bucket;
 pub mod builder;
@@ -133,6 +141,7 @@ pub mod sharded;
 pub mod tune;
 pub mod xor;
 
+pub use adaptive::{AdaptiveConfig, AdaptiveOcf, ShardedAdaptiveOcf};
 pub use bloom::{BloomFilter, CountingBloomFilter};
 pub use bucket::{BucketTable, FlatTable, PackedTable, SLOTS};
 pub use builder::{BuilderError, DynFilter, FilterBackend, FilterBuilder};
@@ -177,13 +186,52 @@ impl std::fmt::Display for FilterError {
 
 impl std::error::Error for FilterError {}
 
+/// The false-positive feedback capability (Filter API v2.1).
+///
+/// A caller that consults its *authoritative* store after a positive
+/// filter answer — and finds the key absent — has observed a ground-
+/// truth false positive. [`FilterFeedback::report_false_positive`] lets
+/// it hand that observation back to the filter, so adaptive backends
+/// ([`AdaptiveOcf`], [`ShardedAdaptiveOcf`]) can rotate the offending
+/// slot's hash selector and stop that negative key (and its fingerprint
+/// neighborhood) from paying the FP cost on every repeat probe.
+///
+/// The default is a no-op returning `false`: every non-adaptive backend
+/// participates in the API without carrying adaptation state, and
+/// callers can report unconditionally without dispatching on backend
+/// identity. The method takes `&self` (interior mutability in adaptive
+/// backends) so it is callable on the read path where the FP is
+/// detected. It is advisory: reporting a key that is actually resident,
+/// or reporting the same FP concurrently from two threads, is safe and
+/// simply returns `false`.
+pub trait FilterFeedback {
+    /// Report that `key` was a ground-truth false positive (the filter
+    /// said yes; the authoritative store said no). Returns `true` iff
+    /// the filter adapted (remapped the offending entry) in response.
+    fn report_false_positive(&self, key: u64) -> bool {
+        let _ = key;
+        false
+    }
+}
+
+// Boxed feedback forwards (mirrors the MembershipFilter box blanket
+// below, so `DynFilter` exposes the capability too).
+impl<F: FilterFeedback + ?Sized> FilterFeedback for Box<F> {
+    fn report_false_positive(&self, key: u64) -> bool {
+        (**self).report_false_positive(key)
+    }
+}
+
 /// Common interface over all *dynamic* membership filters (xor is
 /// build-once and only implements lookup).
 ///
 /// `Debug` is a supertrait so trait objects stay embeddable in
 /// `#[derive(Debug)]` aggregates (the storage node holds a
-/// [`DynFilter`]).
-pub trait MembershipFilter: std::fmt::Debug {
+/// [`DynFilter`]). [`FilterFeedback`] is a supertrait so the FP
+/// feedback capability is reachable through any `dyn MembershipFilter`
+/// / [`DynFilter`] without a downcast (no-op default for non-adaptive
+/// backends).
+pub trait MembershipFilter: std::fmt::Debug + FilterFeedback {
     /// Add a key. Filters with resize policies may grow; fixed-capacity
     /// filters return [`FilterError::Full`].
     fn insert(&mut self, key: u64) -> Result<(), FilterError>;

@@ -19,6 +19,7 @@
 //! * deletes of never-inserted keys are rejected and never disturb
 //!   resident fingerprints.
 
+use super::bucket::{BucketTable, FlatTable};
 use super::cuckoo::{CuckooFilter, CuckooParams, VictimPolicy};
 use super::eof::EofPolicy;
 use super::fingerprint::HashTriple;
@@ -28,7 +29,7 @@ use super::policy::{FilterEvent, Occupancy, ResizePolicy, StaticPolicy};
 use super::pre::PrePolicy;
 use super::resize::{clamp_capacity, rebuild};
 use super::session::ProbeSession;
-use super::{BatchedFilter, FilterError, MembershipFilter};
+use super::{BatchedFilter, FilterError, FilterFeedback, MembershipFilter};
 
 /// OCF mode of operation, selected at initialization (paper §II.A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -147,9 +148,15 @@ impl Policy {
 }
 
 /// The Optimized Cuckoo Filter.
+///
+/// Generic over the bucket backend ([`FlatTable`] default,
+/// [`super::PackedTable`] for the bit-packed layout) so wrappers like
+/// the adaptive front-end (`filter/adaptive.rs`) can ride either
+/// layout; every existing `Ocf` type/constructor position resolves to
+/// the `FlatTable` default unchanged.
 #[derive(Debug, Clone)]
-pub struct Ocf {
-    filter: CuckooFilter,
+pub struct Ocf<T: BucketTable = FlatTable> {
+    filter: CuckooFilter<T>,
     keys: KeyStore,
     policy: Policy,
     cfg: OcfConfig,
@@ -158,8 +165,18 @@ pub struct Ocf {
     stats: FilterStats,
 }
 
+// Non-generic impl block (the `HashMap::new` pattern): expression-
+// position `Ocf::new(cfg)` unifies the inference variable with the
+// `FlatTable` default instead of staying ambiguous.
 impl Ocf {
     pub fn new(cfg: OcfConfig) -> Self {
+        Self::with_config(cfg)
+    }
+}
+
+impl<T: BucketTable> Ocf<T> {
+    /// Backend-generic constructor (`Ocf::<PackedTable>::with_config`).
+    pub fn with_config(cfg: OcfConfig) -> Self {
         let policy = match cfg.mode {
             Mode::Pre => Policy::Pre(PrePolicy::new(cfg.o_min, cfg.o_max, cfg.min_capacity)),
             Mode::Eof => Policy::Eof(EofPolicy::new(
@@ -229,6 +246,34 @@ impl Ocf {
 
     pub fn nbuckets(&self) -> usize {
         self.filter.nbuckets()
+    }
+
+    /// The inner bucket table (read-only) — the adaptive front-end
+    /// scans it slot-by-slot to locate fingerprint-matching entries.
+    pub fn table(&self) -> &T {
+        self.filter.table()
+    }
+
+    /// Iterate the authoritative key store (every live key, arbitrary
+    /// order). The adaptive front-end uses this as ground truth when
+    /// resolving which resident key occupies a reported-FP slot.
+    pub fn iter_keys(&self) -> impl Iterator<Item = u64> + '_ {
+        self.keys.iter()
+    }
+
+    /// Cumulative displacement (kick) count — monotone across rebuilds
+    /// (carried over in [`Ocf::maybe_resize`]), so wrappers can use it
+    /// as a cheap "did any slot move?" epoch.
+    pub fn kicks(&self) -> u64 {
+        self.filter.stats.kicks
+    }
+
+    /// Total resize events (grow + shrink) — paired with
+    /// [`Ocf::kicks`] as the slot-stability epoch: a rebuild back to
+    /// the *same* bucket count still reshuffles slots without
+    /// necessarily kicking.
+    pub fn resize_count(&self) -> u64 {
+        self.stats.resizes_grow + self.stats.resizes_shrink
     }
 
     /// The probe kernel the inner table scans with (the process-wide
@@ -495,7 +540,11 @@ impl Ocf {
     }
 }
 
-impl MembershipFilter for Ocf {
+// The raw OCF carries no adaptation sidecar; wrap it in
+// [`crate::filter::AdaptiveOcf`] for a real feedback path.
+impl<T: BucketTable> FilterFeedback for Ocf<T> {}
+
+impl<T: BucketTable> MembershipFilter for Ocf<T> {
     /// Insert (idempotent — OCF mirrors the upsert semantics of the
     /// data stores it serves; a duplicate insert is an Ok no-op).
     fn insert(&mut self, key: u64) -> Result<(), FilterError> {
@@ -537,7 +586,7 @@ impl MembershipFilter for Ocf {
 
     /// OCF carries an authoritative key store — exact answers.
     fn contains_exact(&self, key: u64) -> Option<bool> {
-        Some(Ocf::contains_exact(self, key))
+        Some(Self::contains_exact(self, key))
     }
 
     fn exact_len(&self) -> Option<usize> {
@@ -545,11 +594,11 @@ impl MembershipFilter for Ocf {
     }
 
     fn keystore_bytes(&self) -> usize {
-        Ocf::keystore_bytes(self)
+        Self::keystore_bytes(self)
     }
 
     fn stats(&self) -> FilterStats {
-        Ocf::stats(self)
+        Self::stats(self)
     }
 }
 
@@ -559,7 +608,7 @@ impl MembershipFilter for Ocf {
 /// depth-pipelined [`Ocf::insert_batch_hashed_into`] /
 /// [`Ocf::delete_batch_hashed_into`] (every policy/keystore side effect
 /// scalar-identical; proptests P11/P12).
-impl BatchedFilter for Ocf {
+impl<T: BucketTable> BatchedFilter for Ocf<T> {
     fn contains_batch_into(
         &self,
         keys: &[u64],

@@ -7,6 +7,7 @@
 //! doubled capacity until placement succeeds, so a resize never leaves
 //! the filter wedged.
 
+use super::bucket::BucketTable;
 use super::cuckoo::{CuckooFilter, CuckooParams};
 use super::keystore::KeyStore;
 use super::MembershipFilter;
@@ -50,12 +51,14 @@ pub struct RebuildOutcome {
 
 /// Build a fresh filter at `target_capacity` containing every key in
 /// `keys`, doubling on placement failure. The new filter keeps the old
-/// seed/fp parameters from `params` (updated capacity).
-pub fn rebuild(
+/// seed/fp parameters from `params` (updated capacity). Generic over
+/// the bucket backend so `Ocf<T>` rebuilds into the same table layout
+/// it started with.
+pub fn rebuild<T: BucketTable>(
     keys: &KeyStore,
     target_capacity: usize,
     params: CuckooParams,
-) -> (CuckooFilter, RebuildOutcome) {
+) -> (CuckooFilter<T>, RebuildOutcome) {
     let mut capacity = target_capacity.max(super::bucket::SLOTS);
     let mut attempts = 0u32;
     let mut rehashed = 0u64;
@@ -90,7 +93,7 @@ pub fn rebuild(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::filter::MembershipFilter;
+    use crate::filter::{FlatTable, MembershipFilter};
 
     fn keyset(n: u64) -> KeyStore {
         let mut ks = KeyStore::new();
@@ -117,7 +120,7 @@ mod tests {
     #[test]
     fn rebuild_preserves_all_keys() {
         let ks = keyset(5000);
-        let (f, out) = rebuild(&ks, 8192, CuckooParams::default());
+        let (f, out) = rebuild::<FlatTable>(&ks, 8192, CuckooParams::default());
         assert_eq!(f.len(), 5000);
         for k in 0..5000u64 {
             assert!(f.contains(k), "{k}");
@@ -131,7 +134,7 @@ mod tests {
     fn rebuild_retries_on_too_tight_target() {
         let ks = keyset(4000);
         // demand a capacity barely above len → guaranteed placement pain
-        let (f, out) = rebuild(&ks, 4096, CuckooParams::default());
+        let (f, out) = rebuild::<FlatTable>(&ks, 4096, CuckooParams::default());
         assert_eq!(f.len(), 4000);
         // whether it took 1 or more attempts, everything must be present
         for k in 0..4000u64 {
@@ -144,7 +147,7 @@ mod tests {
     #[test]
     fn rebuild_impossible_target_still_succeeds_by_doubling() {
         let ks = keyset(1000);
-        let (f, out) = rebuild(&ks, 8, CuckooParams::default()); // absurd target
+        let (f, out) = rebuild::<FlatTable>(&ks, 8, CuckooParams::default()); // absurd target
         assert_eq!(f.len(), 1000);
         assert!(out.achieved_capacity >= 1024, "{}", out.achieved_capacity);
         assert!(out.attempts > 1);
@@ -153,7 +156,7 @@ mod tests {
     #[test]
     fn rebuild_empty_keystore() {
         let ks = KeyStore::new();
-        let (f, out) = rebuild(&ks, 64, CuckooParams::default());
+        let (f, out) = rebuild::<FlatTable>(&ks, 64, CuckooParams::default());
         assert_eq!(f.len(), 0);
         assert_eq!(out.keys_rehashed, 0);
     }

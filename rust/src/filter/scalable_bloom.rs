@@ -12,7 +12,7 @@
 //! paper's burst experiments exercise.
 
 use super::bloom::BloomFilter;
-use super::{BatchedFilter, FilterError, MembershipFilter};
+use super::{BatchedFilter, FilterError, FilterFeedback, MembershipFilter};
 
 /// Growth/tightening parameters from the SBF paper.
 #[derive(Debug, Clone, Copy)]
@@ -74,6 +74,8 @@ impl ScalableBloomFilter {
         self.slices.push((slice, cap));
     }
 }
+
+impl FilterFeedback for ScalableBloomFilter {}
 
 impl MembershipFilter for ScalableBloomFilter {
     fn insert(&mut self, key: u64) -> Result<(), FilterError> {

@@ -31,7 +31,7 @@ use super::fingerprint::{mix32, Hasher, HashTriple};
 use super::metrics::FilterStats;
 use super::ocf::{Ocf, OcfConfig};
 use super::session::{ProbeSession, ShardScratch};
-use super::{BatchedFilter, FilterError, MembershipFilter};
+use super::{BatchedFilter, FilterError, FilterFeedback, MembershipFilter};
 use std::sync::Mutex;
 
 /// Configuration for the sharded front-end.
@@ -449,6 +449,10 @@ impl ShardedOcf {
             .collect()
     }
 }
+
+// Plain-`Ocf` shards carry no adaptation sidecar — no-op feedback
+// (use [`crate::filter::ShardedAdaptiveOcf`] for the adaptive variant).
+impl FilterFeedback for ShardedOcf {}
 
 /// `&mut self` implies exclusive access, so the single-writer trait
 /// family is trivially satisfiable by the concurrent front-end — this

@@ -467,9 +467,13 @@ fn cmd_serve(args: &[String]) -> i32 {
         return cmd_serve_node(cfg);
     }
     eprintln!(
-        "ocf serve: filter={} capacity={} (line protocol: put K | get K | del K | stats | quit)",
+        "ocf serve: filter={} capacity={} fp_feedback={} \
+         (line protocol: put K | get K | del K | stats | quit)",
         cfg.filter.describe(),
-        cfg.filter.ocf.initial_capacity
+        cfg.filter.ocf.initial_capacity,
+        // bare-filter mode has no ground truth to prove an FP against,
+        // so adaptive backends only learn here if an embedder reports
+        if cfg.filter.describe().contains("adaptive") { "available" } else { "off" },
     );
     eprintln!(
         "ocf serve: [pipeline] batch={} {} (validated here; consumed by \
@@ -524,11 +528,15 @@ fn cmd_serve(args: &[String]) -> i32 {
                 Err(_) => "err bad-key".into(),
             },
             (Some("stats"), _) => format!(
-                "len={} capacity={} occupancy={:.3} resizes={}",
+                "len={} capacity={} occupancy={:.3} resizes={} \
+                 fp_observed={} fp_remapped={} fp_suppressed={}",
                 filter.len(),
                 filter.capacity(),
                 filter.occupancy(),
-                filter.stats().resizes()
+                filter.stats().resizes(),
+                filter.stats().fp_observed,
+                filter.stats().fp_remapped,
+                filter.stats().fp_suppressed,
             ),
             (Some("quit"), _) => break,
             _ => "err unknown-command".into(),
@@ -556,9 +564,12 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
         }
     };
     eprintln!(
-        "ocf serve: node mode, persist_dir={dir} filter={} wal={} fsync={} \
+        "ocf serve: node mode, persist_dir={dir} filter={} fp_feedback={} wal={} fsync={} \
          (line protocol: put K | get K | del K | flush | compact | stats | quit)",
         cfg.filter.describe(),
+        // the node read path reports ground-truth FPs to the filter;
+        // adaptive backends remap on report, the rest no-op it
+        if cfg.filter.describe().contains("adaptive") { "adaptive" } else { "no-op" },
         if node.wal().is_some() { "on" } else { "off" },
         cfg.node.wal.fsync.describe(),
     );
@@ -621,7 +632,7 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
                 "live_keys={} memtable={} sstables={} flushes={} compactions={} \
                  filters_recovered={} filters_rebuilt={} filter_recovery_rejected={} \
                  wal_appends={} wal_replayed={} wal_torn_tail={} wal_append_failed={} \
-                 io_retries={}",
+                 io_retries={} fp_observed={} fp_remapped={} fp_suppressed={}",
                 node.live_keys(),
                 node.memtable_len(),
                 node.sstable_count(),
@@ -635,6 +646,9 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
                 node.stats.wal_torn_tail(),
                 node.stats.wal_append_failed(),
                 node.stats.io_retries(),
+                node.stats.fp_observed(),
+                node.stats.fp_remapped(),
+                node.fp_suppressed(),
             ),
             (Some("quit"), _) => break,
             _ => "err unknown-command".into(),

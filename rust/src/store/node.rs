@@ -48,7 +48,8 @@ use super::memtable::{zero_value, Entry, Memtable, Value};
 use super::sstable::{FrozenFilter, SsTable};
 use super::wal::{self, FsyncPolicy, Wal, WalConfig, WalRecord};
 use crate::filter::{
-    BatchedFilter, DynFilter, FilterBuilder, MembershipFilter, Mode, OcfConfig, ProbeSession,
+    BatchedFilter, DynFilter, FilterBuilder, FilterFeedback, MembershipFilter, Mode, OcfConfig,
+    ProbeSession,
 };
 use std::io;
 use std::path::Path;
@@ -131,6 +132,15 @@ pub struct NodeStats {
     sstable_probes_skipped: AtomicU64,
     /// SSTable probes that went to binary search.
     sstable_probes: AtomicU64,
+    /// Ground-truth false positives observed on the read path: the
+    /// node filter said "present" but memtable + SSTables had no live
+    /// version. Every one is reported to the filter through
+    /// [`FilterFeedback`]; adaptive backends learn from it.
+    fp_observed: AtomicU64,
+    /// Reported FPs the filter accepted (an adaptive backend rotated
+    /// the offending entry's selector — that key stops repeat-missing).
+    /// Zero on non-adaptive backends, whose report is a no-op.
+    fp_remapped: AtomicU64,
     pub flushes: u64,
     pub flushes_premature: u64,
     pub compactions: u64,
@@ -179,6 +189,16 @@ impl NodeStats {
     /// SSTable probes that went to binary search.
     pub fn sstable_probes(&self) -> u64 {
         self.sstable_probes.load(Relaxed)
+    }
+
+    /// Ground-truth false positives observed (and reported) on reads.
+    pub fn fp_observed(&self) -> u64 {
+        self.fp_observed.load(Relaxed)
+    }
+
+    /// Reported FPs the filter remapped (adaptive backends only).
+    pub fn fp_remapped(&self) -> u64 {
+        self.fp_remapped.load(Relaxed)
     }
 
     /// SSTable filters reopened from disk without a rebuild.
@@ -232,6 +252,8 @@ impl Clone for NodeStats {
             filter_short_circuits: AtomicU64::new(self.filter_short_circuits()),
             sstable_probes_skipped: AtomicU64::new(self.sstable_probes_skipped()),
             sstable_probes: AtomicU64::new(self.sstable_probes()),
+            fp_observed: AtomicU64::new(self.fp_observed()),
+            fp_remapped: AtomicU64::new(self.fp_remapped()),
             flushes: self.flushes,
             flushes_premature: self.flushes_premature,
             compactions: self.compactions,
@@ -341,7 +363,11 @@ impl StorageNode {
     /// when it is missing or rejected (checksum/version/truncation),
     /// with the healed filter re-persisted. The node-level live-set
     /// filter is always rebuilt from the recovered live keys (it is
-    /// derived state over data this tier does persist).
+    /// derived state over data this tier does persist); for an
+    /// adaptive backend that rebuild is also the persistence policy
+    /// for adaptation state — selector/extension sidecars are
+    /// workload-learned, never serialized, and re-learn from live
+    /// traffic after recovery (see `filter/adaptive.rs`).
     ///
     /// Counters: `filters_recovered` / `filters_rebuilt` /
     /// `filter_recovery_rejected` on [`NodeStats`] record what
@@ -632,14 +658,21 @@ impl StorageNode {
 
     /// Membership-test read. Takes `&self` (read-path stats are
     /// relaxed atomics), so any number of reader threads can probe the
-    /// node concurrently with each other.
+    /// node concurrently with each other. A filter "present" that the
+    /// tables then miss is a ground-truth false positive — it is
+    /// reported back to the filter ([`FilterFeedback`]) so adaptive
+    /// backends stop repeating it; other backends no-op the report.
     pub fn get(&self, key: u64) -> bool {
         self.stats.gets.fetch_add(1, Relaxed);
         if !self.filter.contains(key) {
             self.stats.filter_short_circuits.fetch_add(1, Relaxed);
             return false;
         }
-        self.read_tables(key)
+        let found = self.read_tables(key);
+        if !found {
+            self.report_false_positive(key);
+        }
+        found
     }
 
     /// Value read: the payload bytes of a live key, `None` for
@@ -668,7 +701,25 @@ impl StorageNode {
                 None => {}
             }
         }
+        self.report_false_positive(key);
         None
+    }
+
+    /// Read-path FP feedback: count the ground-truth miss, tell the
+    /// filter, count a successful remap. `&self` throughout — adaptive
+    /// backends take the report through an atomic sidecar.
+    fn report_false_positive(&self, key: u64) {
+        self.stats.fp_observed.fetch_add(1, Relaxed);
+        if self.filter.report_false_positive(key) {
+            self.stats.fp_remapped.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// FP probes the filter's adaptation suppressed (reported FPs that
+    /// no longer reach the tables). Lives in the filter's own stats —
+    /// the node never sees a suppressed probe, by design.
+    pub fn fp_suppressed(&self) -> u64 {
+        self.filter.stats().fp_suppressed
     }
 
     /// Batched membership reads: one bulk hash + the prefetch-pipelined
@@ -690,7 +741,11 @@ impl StorageNode {
             .zip(&pass)
             .map(|(&k, &p)| {
                 if p {
-                    self.read_tables(k)
+                    let found = self.read_tables(k);
+                    if !found {
+                        self.report_false_positive(k);
+                    }
+                    found
                 } else {
                     short += 1;
                     false
@@ -698,6 +753,43 @@ impl StorageNode {
             })
             .collect();
         self.stats.filter_short_circuits.fetch_add(short, Relaxed);
+        out
+    }
+
+    /// Batched puts: WAL + memtable per key in order (the same
+    /// durability contract as [`StorageNode::put`], record for
+    /// record), then one bulk-hashed, prefetch-pipelined filter
+    /// insert for the whole batch. Per-key results are positionally
+    /// aligned with `keys`; a saturated static filter triggers the
+    /// same pressure-flush-and-retry as the scalar path. Flush
+    /// policy is evaluated once after the batch instead of per key —
+    /// batch sizes are bounded by the pipeline's `batch_size`, so the
+    /// memtable overshoot is bounded too.
+    pub fn put_batch(&mut self, keys: &[u64]) -> Vec<Result<(), crate::filter::FilterError>> {
+        self.stats.puts += keys.len() as u64;
+        for &key in keys {
+            let value = self.default_value.clone();
+            self.wal_log(WalRecord::Put {
+                key,
+                value: value.clone(),
+            });
+            self.memtable.put(key, value);
+        }
+        let mut session = ProbeSession::with_capacity(keys.len());
+        let mut out = Vec::with_capacity(keys.len());
+        self.filter.insert_batch_into(keys, &mut session, &mut out);
+        for (i, &key) in keys.iter().enumerate() {
+            if out[i].is_err() {
+                // Same relief valve as the scalar path: a pressure
+                // flush clears the memtable (rebuilding the static
+                // filter from the live set), then one retry.
+                self.flush(FlushReason::FilterPressure);
+                if self.filter.insert(key).is_ok() {
+                    out[i] = Ok(());
+                }
+            }
+        }
+        self.maybe_flush();
         out
     }
 
@@ -1214,6 +1306,85 @@ mod tests {
             assert!(!n.delete(5_000_000), "{name}: absent delete accepted");
             assert_eq!(n.live_keys(), 999, "{name}");
         }
+    }
+
+    #[test]
+    fn put_batch_matches_scalar_put_loop() {
+        for shards in [1usize, 4] {
+            let cfg = || NodeConfig {
+                filter: FilterBuilder::default().with_shards(shards),
+                flush: FlushPolicy::small(700),
+                ..NodeConfig::default()
+            };
+            let keys: Vec<u64> = (0..3000u64).collect();
+            let mut batched = StorageNode::new(cfg());
+            for r in batched.put_batch(&keys) {
+                r.unwrap();
+            }
+            let mut scalar = StorageNode::new(cfg());
+            for &k in &keys {
+                scalar.put(k).unwrap();
+            }
+            assert_eq!(batched.stats.puts, scalar.stats.puts, "shards={shards}");
+            assert_eq!(batched.live_keys(), scalar.live_keys(), "shards={shards}");
+            let probes: Vec<u64> = (0..4000u64).collect();
+            assert_eq!(
+                batched.get_batch(&probes),
+                scalar.get_batch(&probes),
+                "shards={shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn node_reports_false_positives_to_adaptive_filter() {
+        // narrow fingerprints → plentiful FPs for the feedback loop
+        let adaptive_cfg = || NodeConfig {
+            filter: FilterBuilder::named("adaptive")
+                .unwrap()
+                .with_initial_capacity(16_384)
+                .with_fp_bits(8),
+            flush: FlushPolicy::small(1_000_000),
+            ..NodeConfig::default()
+        };
+        let mut n = StorageNode::new(adaptive_cfg());
+        for k in 0..4096u64 {
+            n.put(k).unwrap();
+        }
+        // first pass over a fixed negative set: every FP gets reported
+        let negatives: Vec<u64> = (1_000_000..1_008_000u64).collect();
+        assert!(n.get_batch(&negatives).iter().all(|&b| !b));
+        let observed = n.stats.fp_observed();
+        assert!(observed > 0, "8-bit fingerprints must collide somewhere");
+        assert!(n.stats.fp_remapped() > 0, "adaptive backend must remap");
+        // second pass: the learned set stops reaching the tables
+        assert!(n.get_batch(&negatives).iter().all(|&b| !b));
+        let repeat = n.stats.fp_observed() - observed;
+        assert!(
+            repeat * 10 <= observed.max(10),
+            "repeat FPs must collapse ≥10×: {observed} → {repeat}"
+        );
+        assert!(n.fp_suppressed() > 0, "suppressions surface via the filter");
+        // the contract that makes feedback safe: no false negatives
+        for k in 0..4096u64 {
+            assert!(n.get(k), "false negative {k} after adaptation");
+        }
+
+        // a static backend observes the same FPs but never remaps
+        let mut s = StorageNode::new(NodeConfig {
+            filter: FilterBuilder::default()
+                .with_initial_capacity(16_384)
+                .with_fp_bits(8),
+            flush: FlushPolicy::small(1_000_000),
+            ..NodeConfig::default()
+        });
+        for k in 0..4096u64 {
+            s.put(k).unwrap();
+        }
+        assert!(s.get_batch(&negatives).iter().all(|&b| !b));
+        assert!(s.stats.fp_observed() > 0);
+        assert_eq!(s.stats.fp_remapped(), 0, "static backend cannot adapt");
+        assert_eq!(s.fp_suppressed(), 0);
     }
 
     /// Unique scratch dir per test (no tempfile crate offline).

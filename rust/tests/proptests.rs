@@ -46,12 +46,22 @@
 //!      both bucket-table backends, fp widths 4..=32 and
 //!      non-power-of-two sizes — and the reopened words are
 //!      bit-identical to the written ones.
+//!  P16 WAL replay is idempotent and order-preserving: after a crash at
+//!      any injected fault point, recovery reconstructs exactly the
+//!      durable prefix (modulo the one in-flight op), twice over;
+//!  P17 adaptive fingerprints never cost a false negative: under random
+//!      op mixes interleaved with FP-report storms (absent *and*
+//!      resident keys hammered through `report_false_positive`), every
+//!      live key stays visible on both the scalar and batched probe
+//!      paths, remapped keys stay delete-able, and the sidecar drains
+//!      to zero once the filter empties — for both bucket tables and
+//!      the full selector/extension-width grid.
 
 use ocf::cluster::{Cluster, ReplicationConfig};
 use ocf::filter::{
-    BatchedFilter, BucketTable, CuckooFilter, CuckooParams, FilterBuilder, FilterError,
-    FlatTable, MembershipFilter, Mode, MutexFilter, Ocf, OcfConfig, PackedTable, ShardedOcf,
-    VictimPolicy,
+    AdaptiveConfig, AdaptiveOcf, BatchedFilter, BucketTable, CuckooFilter, CuckooParams,
+    FilterBuilder, FilterError, FilterFeedback, FlatTable, MembershipFilter, Mode, MutexFilter,
+    Ocf, OcfConfig, PackedTable, ShardedOcf, VictimPolicy,
 };
 use ocf::pipeline::{BatchPolicy, IngestPipeline, PoolConfig};
 use ocf::runtime::HashExecutor;
@@ -587,6 +597,12 @@ fn p11_batched_probe_engine_matches_scalar() {
 #[derive(Debug)]
 struct DefaultBatch<F>(F);
 
+impl<F: MembershipFilter> FilterFeedback for DefaultBatch<F> {
+    fn report_false_positive(&self, key: u64) -> bool {
+        self.0.report_false_positive(key)
+    }
+}
+
 impl<F: MembershipFilter> MembershipFilter for DefaultBatch<F> {
     fn insert(&mut self, key: u64) -> Result<(), FilterError> {
         self.0.insert(key)
@@ -637,6 +653,8 @@ fn gen_v2_case(g: &mut Gen) -> V2Case {
         "bloom",
         "counting-bloom",
         "scalable-bloom",
+        "adaptive",
+        "adaptive-packed",
     ]);
     // non-power-of-two capacities exercise the Lemire index +
     // mod-subtract alt mapping inside the engine-backed backends
@@ -1371,4 +1389,115 @@ fn p16_wal_replay_is_idempotent_and_order_preserving() {
             seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         )
     });
+}
+
+/// P17 case: an OCF geometry, a random op mix, and a set of "storm"
+/// keys hammered through the FP-feedback path — across the whole
+/// selector-count / extension-width grid.
+#[derive(Debug, Clone)]
+struct AdaptCase {
+    mode: Mode,
+    capacity: usize,
+    fp_bits: u32,
+    ext_bits: u32,
+    max_selectors: u32,
+    ops: Vec<Op>,
+    /// Reported every storm regardless of residency: the band overlaps
+    /// the op keyspace, so some are live (reports must be refused) and
+    /// some absent (reports may remap a colliding resident).
+    storms: Vec<u64>,
+}
+
+fn gen_adapt_case(g: &mut Gen) -> AdaptCase {
+    let case = gen_case(g, 2000, 1 << 14);
+    AdaptCase {
+        mode: case.mode,
+        capacity: *g.choose(&[256usize, 500, 1024, 3000]),
+        // narrow widths maximize fingerprint collisions → ambiguous
+        // (refused) reports; wide ones exercise the clean remap path
+        fp_bits: *g.choose(&[4u32, 8, 12, 16]),
+        ext_bits: *g.choose(&[1u32, 2, 4, 8, 16]),
+        max_selectors: *g.choose(&[1u32, 3, 15, 255]),
+        ops: case.ops,
+        storms: g.vec(g.usize_in(1, 100), |g| g.u64_below(1 << 15)),
+    }
+}
+
+fn p17_check<T: BucketTable>(case: &AdaptCase) -> bool {
+    let mut f = AdaptiveOcf::<T>::with_config(AdaptiveConfig {
+        base: OcfConfig {
+            mode: case.mode,
+            initial_capacity: case.capacity,
+            min_capacity: 256,
+            fp_bits: case.fp_bits,
+            ..OcfConfig::default()
+        },
+        ext_bits: case.ext_bits,
+        max_selectors: case.max_selectors,
+    });
+    let mut model: HashSet<u64> = HashSet::new();
+    for (i, op) in case.ops.iter().enumerate() {
+        match op {
+            Op::Insert(k) => {
+                if f.insert(*k).is_err() {
+                    return false;
+                }
+                model.insert(*k);
+            }
+            Op::Lookup(k) => {
+                // a positive the model disowns is a ground-truth FP —
+                // report it, exactly like the node read path does
+                if f.contains(*k) && !model.contains(k) {
+                    f.report_false_positive(*k);
+                }
+            }
+            Op::Delete(k) => {
+                if f.delete(*k) != model.remove(k) {
+                    return false;
+                }
+            }
+        }
+        // FP-report storm: hammer the storm set through the feedback
+        // path, resident keys included
+        if i % 256 == 255 {
+            for &s in &case.storms {
+                let resident = model.contains(&s);
+                let _ = f.report_false_positive(s);
+                if resident && !f.contains(s) {
+                    return false; // reporting a live key must be inert
+                }
+            }
+        }
+    }
+    // P1 under adaptation: every live key visible, scalar AND batched
+    let live: Vec<u64> = model.iter().copied().collect();
+    if live.iter().any(|&k| !f.contains(k)) {
+        return false;
+    }
+    if f.contains_batch(&live).iter().any(|&b| !b) {
+        return false;
+    }
+    // remapped keys stay delete-able, and the sidecar drains with them
+    for &k in &live {
+        if !f.delete(k) {
+            return false;
+        }
+    }
+    f.len() == 0 && f.adapted_slots() == 0
+}
+
+#[test]
+fn p17_adaptive_never_costs_a_false_negative() {
+    prop_check(
+        "adaptive-no-fn-flat",
+        20,
+        gen_adapt_case,
+        p17_check::<FlatTable>,
+    );
+    prop_check(
+        "adaptive-no-fn-packed",
+        20,
+        gen_adapt_case,
+        p17_check::<PackedTable>,
+    );
 }

@@ -1,0 +1,152 @@
+//! Hinted handoff: per-target-node queues of writes that missed a down
+//! replica.
+//!
+//! When a replica write fails because the node is unreachable (breaker
+//! open, or transient retries exhausted), the router acknowledges the
+//! op anyway if enough *other* replicas took it — but it must not
+//! forget the miss, or the recovered node would serve stale answers
+//! forever. Instead the miss is queued here as a [`Hint`] and replayed
+//! in FIFO order when the node's breaker half-opens.
+//!
+//! Two details carry the correctness argument of the chaos sweep:
+//!
+//! - **Sequencing.** Every hint records the cluster op-clock tick of
+//!   the op that produced it. On a verified-read disagreement, the
+//!   *latest pending hint* for the key is the truth (a pending
+//!   `Delete` newer than a pending `Put` means the key is gone — read
+//!   repair must not resurrect it).
+//! - **Supersession.** When a *direct* op on key `k` later succeeds at
+//!   node `n`, all pending `k`-hints at `n` are dropped: the node now
+//!   holds newer state than anything the queue could replay, and
+//!   replaying a stale `Put` over a fresh `Delete` would resurrect the
+//!   key.
+//!
+//! Capacity is bounded (`[cluster] handoff_capacity`); when a queue is
+//! full the *incoming* hint is dropped and counted — losing the newest
+//! hint is visible in `hints_dropped`, and the chaos-sweep contract
+//! only holds while that counter stays zero.
+
+use std::collections::VecDeque;
+
+/// The replayable payload of a missed replica write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HintOp {
+    Put(u64),
+    Delete(u64),
+}
+
+impl HintOp {
+    pub fn key(&self) -> u64 {
+        match *self {
+            HintOp::Put(k) | HintOp::Delete(k) => k,
+        }
+    }
+}
+
+/// One missed write: the op plus the cluster-clock tick it happened at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hint {
+    pub seq: u64,
+    pub op: HintOp,
+}
+
+/// Bounded FIFO of hints destined for one node.
+#[derive(Debug, Clone, Default)]
+pub struct HintQueue {
+    hints: VecDeque<Hint>,
+    capacity: usize,
+}
+
+impl HintQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            hints: VecDeque::new(),
+            capacity,
+        }
+    }
+
+    /// Queue a hint; `false` means the queue is full and the hint was
+    /// dropped (caller counts it — the durability contract is void).
+    pub fn push(&mut self, seq: u64, op: HintOp) -> bool {
+        if self.hints.len() >= self.capacity {
+            return false;
+        }
+        self.hints.push_back(Hint { seq, op });
+        true
+    }
+
+    pub fn front(&self) -> Option<Hint> {
+        self.hints.front().copied()
+    }
+
+    pub fn pop(&mut self) -> Option<Hint> {
+        self.hints.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.hints.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hints.is_empty()
+    }
+
+    /// Drop every pending hint for `key` (a newer direct op landed on
+    /// the target node). Returns how many were superseded.
+    pub fn supersede(&mut self, key: u64) -> usize {
+        let before = self.hints.len();
+        self.hints.retain(|h| h.op.key() != key);
+        before - self.hints.len()
+    }
+
+    /// The newest pending hint for `key`, if any — the read-repair
+    /// truth source on replica disagreement.
+    pub fn latest_for(&self, key: u64) -> Option<Hint> {
+        self.hints
+            .iter()
+            .filter(|h| h.op.key() == key)
+            .max_by_key(|h| h.seq)
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity_bound() {
+        let mut q = HintQueue::new(2);
+        assert!(q.push(1, HintOp::Put(10)));
+        assert!(q.push(2, HintOp::Delete(20)));
+        assert!(!q.push(3, HintOp::Put(30)), "full: incoming hint dropped");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().op, HintOp::Put(10));
+        assert_eq!(q.pop().unwrap().op, HintOp::Delete(20));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn supersede_removes_only_that_key() {
+        let mut q = HintQueue::new(8);
+        q.push(1, HintOp::Put(10));
+        q.push(2, HintOp::Put(20));
+        q.push(3, HintOp::Delete(10));
+        assert_eq!(q.supersede(10), 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.front().unwrap().op, HintOp::Put(20));
+        assert_eq!(q.supersede(99), 0);
+    }
+
+    #[test]
+    fn latest_for_picks_highest_seq() {
+        let mut q = HintQueue::new(8);
+        q.push(1, HintOp::Put(10));
+        q.push(5, HintOp::Delete(10));
+        q.push(3, HintOp::Put(10));
+        let latest = q.latest_for(10).unwrap();
+        assert_eq!(latest.seq, 5);
+        assert_eq!(latest.op, HintOp::Delete(10), "delete is the truth");
+        assert!(q.latest_for(11).is_none());
+    }
+}

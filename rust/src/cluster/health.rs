@@ -1,0 +1,198 @@
+//! Per-node health tracking: a circuit breaker over the replica op
+//! stream.
+//!
+//! Closed → open (after `threshold` consecutive *unreachable* failures;
+//! node-level refusals like a saturated filter don't count — the node
+//! answered) → half-open (cooldown expired; real ops trickle through as
+//! probes) → closed again (`probes` consecutive probe successes) or
+//! straight back to open (a probe fails).
+//!
+//! "Time" here is the cluster's deterministic op-tick clock, never wall
+//! time: a chaos sweep replaying the same seed sees bit-identical
+//! breaker transitions (proptest P18), and production cooldowns scale
+//! with traffic rather than idle seconds.
+
+/// Breaker thresholds (`[cluster] breaker_*` config keys).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Consecutive unreachable failures that open the breaker.
+    pub threshold: u32,
+    /// Op-ticks the breaker stays open before letting a probe through.
+    pub cooldown: u64,
+    /// Consecutive half-open probe successes that close it again.
+    pub probes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            threshold: 3,
+            cooldown: 64,
+            probes: 2,
+        }
+    }
+}
+
+/// Breaker state machine position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: every op passes.
+    Closed,
+    /// Tripped: ops fast-fail (and writes hint) until tick `until`.
+    Open { until: u64 },
+    /// Probing: ops pass; `successes` consecutive wins so far.
+    HalfOpen { successes: u32 },
+}
+
+/// Transition emitted by the record calls — the router turns these
+/// into `ClusterStats` counters and hint-replay triggers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerEvent {
+    None,
+    /// Closed/half-open → open.
+    Tripped,
+    /// Half-open → closed: the node is back; replay its hints.
+    Closed,
+}
+
+/// One node's health as the router sees it.
+#[derive(Debug, Clone)]
+pub struct NodeHealth {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    consecutive_failures: u32,
+}
+
+impl NodeHealth {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Self {
+            cfg,
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    pub fn is_open(&self) -> bool {
+        matches!(self.state, BreakerState::Open { .. })
+    }
+
+    /// May an op attempt the node at tick `now`? The open → half-open
+    /// transition happens here, so the op that finds the cooldown
+    /// expired *is* the first probe.
+    pub fn allows(&mut self, now: u64) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen { .. } => true,
+            BreakerState::Open { until } if now >= until => {
+                self.state = BreakerState::HalfOpen { successes: 0 };
+                true
+            }
+            BreakerState::Open { .. } => false,
+        }
+    }
+
+    /// The node answered (including a node-level refusal — it's alive).
+    pub fn record_success(&mut self) -> BreakerEvent {
+        self.consecutive_failures = 0;
+        match self.state {
+            BreakerState::HalfOpen { successes } => {
+                let successes = successes + 1;
+                if successes >= self.cfg.probes {
+                    self.state = BreakerState::Closed;
+                    BreakerEvent::Closed
+                } else {
+                    self.state = BreakerState::HalfOpen { successes };
+                    BreakerEvent::None
+                }
+            }
+            _ => BreakerEvent::None,
+        }
+    }
+
+    /// The node was unreachable (crashed, or transient retries
+    /// exhausted).
+    pub fn record_failure(&mut self, now: u64) -> BreakerEvent {
+        match self.state {
+            BreakerState::Closed => {
+                self.consecutive_failures += 1;
+                if self.consecutive_failures >= self.cfg.threshold {
+                    self.state = BreakerState::Open {
+                        until: now + self.cfg.cooldown,
+                    };
+                    BreakerEvent::Tripped
+                } else {
+                    BreakerEvent::None
+                }
+            }
+            BreakerState::HalfOpen { .. } => {
+                // a failed probe re-arms the full cooldown
+                self.consecutive_failures = 0;
+                self.state = BreakerState::Open {
+                    until: now + self.cfg.cooldown,
+                };
+                BreakerEvent::Tripped
+            }
+            BreakerState::Open { .. } => BreakerEvent::None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn health() -> NodeHealth {
+        NodeHealth::new(BreakerConfig {
+            threshold: 3,
+            cooldown: 10,
+            probes: 2,
+        })
+    }
+
+    #[test]
+    fn trips_after_threshold_consecutive_failures() {
+        let mut h = health();
+        assert_eq!(h.record_failure(0), BreakerEvent::None);
+        assert_eq!(h.record_failure(1), BreakerEvent::None);
+        assert_eq!(h.record_failure(2), BreakerEvent::Tripped);
+        assert!(h.is_open());
+        assert!(!h.allows(3), "open: ops fast-fail");
+        assert!(!h.allows(11), "cooldown counted from the tripping tick");
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let mut h = health();
+        h.record_failure(0);
+        h.record_failure(1);
+        assert_eq!(h.record_success(), BreakerEvent::None);
+        h.record_failure(2);
+        assert_eq!(h.record_failure(3), BreakerEvent::None, "streak restarted");
+        assert_eq!(h.record_failure(4), BreakerEvent::Tripped);
+    }
+
+    #[test]
+    fn half_open_probes_close_or_retrip() {
+        let mut h = health();
+        for t in 0..3 {
+            h.record_failure(t);
+        }
+        assert!(h.allows(12), "cooldown expired → probe allowed");
+        assert_eq!(h.state(), BreakerState::HalfOpen { successes: 0 });
+        assert_eq!(h.record_success(), BreakerEvent::None, "1 of 2 probes");
+        assert_eq!(h.record_success(), BreakerEvent::Closed, "2 of 2 → closed");
+        assert_eq!(h.state(), BreakerState::Closed);
+
+        // trip again; this time the probe fails → straight back to open
+        for t in 20..23 {
+            h.record_failure(t);
+        }
+        assert!(h.allows(40));
+        assert_eq!(h.record_failure(40), BreakerEvent::Tripped);
+        assert!(!h.allows(45));
+        assert!(h.allows(50), "re-armed cooldown from the probe failure");
+    }
+}

@@ -1,6 +1,6 @@
 //! The distributed layer: consistent-hash ring, request router,
-//! replication, and the query coordinator for the paper's §I.B
-//! cartesian-product workload.
+//! replication, fault handling, and the query coordinator for the
+//! paper's §I.B cartesian-product workload.
 //!
 //! The "data-center" is simulated in-process: N
 //! [`StorageNode`](crate::store::StorageNode)s behind a [`Cluster`]
@@ -8,13 +8,27 @@
 //! the fan-out asymmetries the paper describes ("the number of look-ups
 //! on the node containing T is much greater"). Replication is
 //! RF-way with filter-first quorum reads.
+//!
+//! Every replica op crosses the [`ReplicaProxy`] fault seam
+//! (`proxy.rs`, the replication-layer sibling of `store::StoreIo`),
+//! and the router layers a circuit breaker per node (`health.rs`),
+//! bounded retry with jitter, hinted handoff for missed writes
+//! (`handoff.rs`), read repair, and typed quorum errors on top. See
+//! `README.md` in this directory for the state machines and the
+//! failure-mode × consistency-level contract table.
 
 pub mod coordinator;
+pub mod handoff;
+pub mod health;
+pub mod proxy;
 pub mod replication;
 pub mod ring;
 pub mod router;
 
 pub use coordinator::{CartesianQuery, Coordinator, QueryStats};
+pub use handoff::{Hint, HintOp, HintQueue};
+pub use health::{BreakerConfig, BreakerEvent, BreakerState, NodeHealth};
+pub use proxy::{FaultPlane, FaultSchedule, OpCtx, RealProxy, ReplicaError, ReplicaProxy, Verdict};
 pub use replication::{Consistency, ReplicationConfig};
 pub use ring::HashRing;
-pub use router::{Cluster, RouterStats};
+pub use router::{Cluster, ClusterError, ClusterStats, ResilienceConfig, RouterStats};

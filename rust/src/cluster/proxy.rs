@@ -1,0 +1,374 @@
+//! The replica fault seam: every op the router sends to a node flows
+//! through a [`ReplicaProxy`], and the proxy consults a [`FaultPlane`]
+//! before forwarding.
+//!
+//! This mirrors the `StoreIo` design one layer down (`store::io`): in
+//! production the plane is [`RealProxy`] — zero-cost passthrough, the
+//! node is always reachable — while tests and the chaos sweep install a
+//! seeded [`FaultSchedule`] that makes the node transiently flaky,
+//! latent, or crashed over deterministic windows of the cluster op
+//! clock, then permanently healthy ("recovered") past a horizon.
+//!
+//! The plane decides *reachability*; it never corrupts answers. A node
+//! that is reachable gives its true answer, a node that isn't yields a
+//! [`ReplicaError`] the router must handle (retry, breaker, hint). That
+//! split keeps the chaos-sweep contract crisp: wrong answers can only
+//! come from the *router's* merging logic, which is exactly what the
+//! sweep is auditing.
+//!
+//! Determinism: [`FaultPlane::verdict`] is a pure function of
+//! `(clock, attempt)`. The same seed and the same op sequence replay
+//! bit-identically (proptest P18), exactly like `FaultyIo`'s
+//! crash-point enumeration.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::filter::FilterError;
+use crate::store::StorageNode;
+use crate::util::SplitMix64;
+
+/// What the fault plane says about one `(clock, attempt)` probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Forward the op; the node answers truthfully.
+    Healthy,
+    /// The op fails with a retryable error (dropped packet, brief GC
+    /// pause). Deeper windows need more attempts than shallow ones.
+    Transient,
+    /// The op succeeds but takes `us` extra microseconds; if that
+    /// exceeds the router's timeout it counts as a transient failure.
+    Latent { us: u64 },
+    /// The node is down: every attempt fails until the window ends.
+    Crashed,
+}
+
+/// Why a replica op did not produce an answer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReplicaError {
+    /// Retryable: the next attempt may succeed.
+    Transient,
+    /// The node is unreachable (crashed window or breaker open).
+    Down,
+    /// The node answered with a refusal of its own (filter full,
+    /// degraded read-only mode). The node is *alive* — this must not
+    /// trip the breaker.
+    Node(FilterError),
+}
+
+impl fmt::Display for ReplicaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplicaError::Transient => write!(f, "transient replica error"),
+            ReplicaError::Down => write!(f, "replica down"),
+            ReplicaError::Node(e) => write!(f, "replica refused: {e}"),
+        }
+    }
+}
+
+/// Deterministic reachability oracle for one replica.
+pub trait FaultPlane: fmt::Debug + Send + Sync {
+    /// Verdict for attempt `attempt` of the op at cluster tick `clock`.
+    /// Must be pure: same inputs, same verdict, forever.
+    fn verdict(&self, clock: u64, attempt: u32) -> Verdict;
+
+    /// One-line description for banners and sweep reports.
+    fn describe(&self) -> String;
+}
+
+/// Production plane: the node is always reachable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RealProxy;
+
+impl FaultPlane for RealProxy {
+    fn verdict(&self, _clock: u64, _attempt: u32) -> Verdict {
+        Verdict::Healthy
+    }
+
+    fn describe(&self) -> String {
+        "real".to_string()
+    }
+}
+
+/// One fault window over the op clock.
+#[derive(Debug, Clone, Copy)]
+enum Window {
+    /// Fails while `attempt < depth`: a retry budget ≥ depth clears it.
+    Transient { depth: u32 },
+    /// Adds `us` of synthetic latency per op.
+    Latent { us: u64 },
+    /// Unreachable for the whole window regardless of retries.
+    Crashed,
+}
+
+/// A seeded schedule of fault windows: `(start, end, kind)` half-open
+/// intervals over the cluster op clock, healthy in the gaps, and
+/// permanently healthy (recovered) at `horizon` and beyond — so every
+/// schedule eventually lets hint queues drain.
+#[derive(Debug, Clone)]
+pub struct FaultSchedule {
+    windows: Vec<(u64, u64, Window)>,
+    horizon: u64,
+}
+
+impl FaultSchedule {
+    /// Build a schedule from `seed` with expected fault density
+    /// `fault_rate` (0.0 = always healthy, 1.0 = nearly always
+    /// faulty) over clock ticks `[0, horizon)`.
+    pub fn seeded(seed: u64, fault_rate: f64, horizon: u64) -> Self {
+        let mut windows = Vec::new();
+        if fault_rate > 0.0 {
+            let rate = fault_rate.min(0.95);
+            let mut rng = SplitMix64::new(seed);
+            // expected healthy gap so that window/(window+gap) ≈ rate
+            let mean_gap = (12.0 * (1.0 - rate) / rate).max(1.0) as u64;
+            let mut cursor = 1 + rng.next_below(mean_gap.max(1)) * 2;
+            while cursor < horizon {
+                let len = 1 + rng.next_below(24);
+                let end = (cursor + len).min(horizon);
+                let kind = match rng.next_below(3) {
+                    0 => Window::Transient {
+                        depth: 1 + rng.next_below(4) as u32,
+                    },
+                    1 => Window::Latent {
+                        us: 50 << rng.next_below(8),
+                    },
+                    _ => Window::Crashed,
+                };
+                windows.push((cursor, end, kind));
+                cursor = end + 1 + rng.next_below(mean_gap.max(1)) * 2;
+            }
+        }
+        Self { windows, horizon }
+    }
+
+    pub fn horizon(&self) -> u64 {
+        self.horizon
+    }
+}
+
+impl FaultPlane for FaultSchedule {
+    fn verdict(&self, clock: u64, attempt: u32) -> Verdict {
+        if clock >= self.horizon {
+            return Verdict::Healthy; // recovered, forever
+        }
+        for &(start, end, kind) in &self.windows {
+            if clock >= start && clock < end {
+                return match kind {
+                    Window::Transient { depth } if attempt < depth => Verdict::Transient,
+                    Window::Transient { .. } => Verdict::Healthy,
+                    Window::Latent { us } => Verdict::Latent { us },
+                    Window::Crashed => Verdict::Crashed,
+                };
+            }
+        }
+        Verdict::Healthy
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "seeded schedule: {} windows over {} ticks",
+            self.windows.len(),
+            self.horizon
+        )
+    }
+}
+
+/// Per-op context the router threads through every proxy call.
+#[derive(Debug, Clone, Copy)]
+pub struct OpCtx {
+    /// Cluster op-clock tick of the op (not the attempt).
+    pub clock: u64,
+    /// Attempt index, 0 = first try (fed by `retry_transient_with`).
+    pub attempt: u32,
+    /// Latency above this counts as a timeout → transient failure.
+    pub timeout_us: u64,
+}
+
+/// The seam between the router and one `StorageNode`: consults the
+/// fault plane, then forwards. Management-plane access (`node()`,
+/// `node_mut()`) bypasses the plane — stats, flushes, and recovery
+/// tooling must work even on a "crashed" replica.
+#[derive(Debug)]
+pub struct ReplicaProxy {
+    node: StorageNode,
+    plane: Arc<dyn FaultPlane>,
+    synthetic_latency_us: u64,
+    timeouts: u64,
+}
+
+impl ReplicaProxy {
+    /// Production proxy: passthrough, always healthy.
+    pub fn real(node: StorageNode) -> Self {
+        Self::with_plane(node, Arc::new(RealProxy))
+    }
+
+    pub fn with_plane(node: StorageNode, plane: Arc<dyn FaultPlane>) -> Self {
+        Self {
+            node,
+            plane,
+            synthetic_latency_us: 0,
+            timeouts: 0,
+        }
+    }
+
+    /// Management-plane access (bypasses the fault plane).
+    pub fn node(&self) -> &StorageNode {
+        &self.node
+    }
+
+    /// Management-plane access (bypasses the fault plane).
+    pub fn node_mut(&mut self) -> &mut StorageNode {
+        &mut self.node
+    }
+
+    /// Synthetic latency accumulated from `Latent` verdicts that fit
+    /// inside the timeout (the E15 latency signal).
+    pub fn synthetic_latency_us(&self) -> u64 {
+        self.synthetic_latency_us
+    }
+
+    /// `Latent` verdicts that exceeded the timeout and were converted
+    /// into transient failures.
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts
+    }
+
+    pub fn plane_describe(&self) -> String {
+        self.plane.describe()
+    }
+
+    /// Consult the plane; `Err` means the op never reaches the node.
+    fn gate(&mut self, ctx: &OpCtx) -> Result<(), ReplicaError> {
+        match self.plane.verdict(ctx.clock, ctx.attempt) {
+            Verdict::Healthy => Ok(()),
+            Verdict::Transient => Err(ReplicaError::Transient),
+            Verdict::Latent { us } => {
+                if us > ctx.timeout_us {
+                    self.timeouts += 1;
+                    Err(ReplicaError::Transient) // a timeout is retryable
+                } else {
+                    self.synthetic_latency_us += us;
+                    Ok(())
+                }
+            }
+            Verdict::Crashed => Err(ReplicaError::Down),
+        }
+    }
+
+    pub fn put(&mut self, ctx: &OpCtx, key: u64) -> Result<(), ReplicaError> {
+        self.gate(ctx)?;
+        self.node.put(key).map_err(ReplicaError::Node)
+    }
+
+    pub fn put_batch(
+        &mut self,
+        ctx: &OpCtx,
+        keys: &[u64],
+    ) -> Result<Vec<Result<(), FilterError>>, ReplicaError> {
+        self.gate(ctx)?;
+        Ok(self.node.put_batch(keys))
+    }
+
+    pub fn get(&mut self, ctx: &OpCtx, key: u64) -> Result<bool, ReplicaError> {
+        self.gate(ctx)?;
+        Ok(self.node.get(key))
+    }
+
+    pub fn get_batch(&mut self, ctx: &OpCtx, keys: &[u64]) -> Result<Vec<bool>, ReplicaError> {
+        self.gate(ctx)?;
+        Ok(self.node.get_batch(keys))
+    }
+
+    pub fn delete(&mut self, ctx: &OpCtx, key: u64) -> Result<bool, ReplicaError> {
+        self.gate(ctx)?;
+        Ok(self.node.delete(key))
+    }
+
+    pub fn delete_batch(&mut self, ctx: &OpCtx, keys: &[u64]) -> Result<Vec<bool>, ReplicaError> {
+        self.gate(ctx)?;
+        Ok(self.node.delete_batch(keys))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_proxy_is_always_healthy() {
+        let p = RealProxy;
+        for clock in 0..100 {
+            assert_eq!(p.verdict(clock, 0), Verdict::Healthy);
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_recovers_at_horizon() {
+        let a = FaultSchedule::seeded(42, 0.3, 500);
+        let b = FaultSchedule::seeded(42, 0.3, 500);
+        for clock in 0..600 {
+            for attempt in 0..4 {
+                assert_eq!(a.verdict(clock, attempt), b.verdict(clock, attempt));
+            }
+        }
+        for clock in 500..600 {
+            assert_eq!(a.verdict(clock, 0), Verdict::Healthy, "past horizon");
+        }
+        // a non-trivial rate must actually produce faults
+        let faults = (0..500)
+            .filter(|&c| a.verdict(c, 0) != Verdict::Healthy)
+            .count();
+        assert!(faults > 0, "rate 0.3 over 500 ticks produced no faults");
+    }
+
+    #[test]
+    fn zero_rate_schedule_never_faults() {
+        let s = FaultSchedule::seeded(7, 0.0, 1000);
+        for clock in 0..1000 {
+            assert_eq!(s.verdict(clock, 0), Verdict::Healthy);
+        }
+    }
+
+    #[test]
+    fn transient_windows_clear_with_enough_attempts() {
+        // depth ≤ 4 by construction, so attempt 4 is always past it
+        let s = FaultSchedule::seeded(11, 0.5, 300);
+        for clock in 0..300 {
+            match s.verdict(clock, 0) {
+                Verdict::Transient => {
+                    assert_eq!(s.verdict(clock, 4), Verdict::Healthy);
+                }
+                Verdict::Crashed => {
+                    assert_eq!(s.verdict(clock, 4), Verdict::Crashed, "retries can't fix a crash");
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn latent_verdict_times_out_or_accumulates() {
+        let node = StorageNode::new(crate::store::NodeConfig::default());
+        #[derive(Debug)]
+        struct AlwaysLatent(u64);
+        impl FaultPlane for AlwaysLatent {
+            fn verdict(&self, _c: u64, _a: u32) -> Verdict {
+                Verdict::Latent { us: self.0 }
+            }
+            fn describe(&self) -> String {
+                "latent".into()
+            }
+        }
+        let mut p = ReplicaProxy::with_plane(node, Arc::new(AlwaysLatent(100)));
+        let fits = OpCtx { clock: 0, attempt: 0, timeout_us: 200 };
+        assert_eq!(p.get(&fits, 1).unwrap(), false);
+        assert_eq!(p.synthetic_latency_us(), 100);
+        assert_eq!(p.timeouts(), 0);
+
+        let exceeds = OpCtx { clock: 0, attempt: 0, timeout_us: 50 };
+        assert_eq!(p.get(&exceeds, 1), Err(ReplicaError::Transient));
+        assert_eq!(p.timeouts(), 1);
+        assert_eq!(p.synthetic_latency_us(), 100, "timed-out latency not accumulated");
+    }
+}

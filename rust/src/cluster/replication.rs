@@ -28,6 +28,27 @@ impl Consistency {
             Consistency::All => rf,
         }
     }
+
+    /// Parse a config-file value (`read_consistency = quorum`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "one" => Some(Consistency::One),
+            "quorum" => Some(Consistency::Quorum),
+            "all" => Some(Consistency::All),
+            _ => None,
+        }
+    }
+
+    /// Canonical config-file spelling (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: Consistency::parse
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Consistency::One => "one",
+            Consistency::Quorum => "quorum",
+            Consistency::All => "all",
+        }
+    }
 }
 
 impl Default for ReplicationConfig {
@@ -61,6 +82,15 @@ mod tests {
         assert_eq!(Consistency::Quorum.required(1), 1);
         assert_eq!(Consistency::One.required(3), 1);
         assert_eq!(Consistency::All.required(3), 3);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for c in [Consistency::One, Consistency::Quorum, Consistency::All] {
+            assert_eq!(Consistency::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(Consistency::parse(" Quorum "), Some(Consistency::Quorum));
+        assert_eq!(Consistency::parse("two"), None);
     }
 
     #[test]

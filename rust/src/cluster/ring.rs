@@ -34,6 +34,12 @@ impl HashRing {
         self.nodes
     }
 
+    /// The sorted `(token, node_id)` table — rebalance diagnostics
+    /// (proptest P18 verifies minimal movement against it).
+    pub fn tokens(&self) -> &[(u64, usize)] {
+        &self.tokens
+    }
+
     /// Primary owner of a key.
     pub fn primary(&self, key: u64) -> usize {
         self.walk(key).next().unwrap()

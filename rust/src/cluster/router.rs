@@ -1,4 +1,5 @@
-//! The cluster: N storage nodes behind a consistent-hash router.
+//! The cluster: N storage nodes behind a consistent-hash router, with
+//! real fault handling between them.
 //!
 //! In-process simulation of the data-center the paper targets: each op
 //! routes to its replica set; per-node op counts expose the fan-out
@@ -6,96 +7,416 @@
 //! economics show up cluster-wide: a read whose replica filter says
 //! "absent" never touches that node's SSTables.
 //!
+//! Every replica op flows through a [`ReplicaProxy`] — the fault seam
+//! (`proxy.rs`) — and the router layers the distributed-systems
+//! machinery on top:
+//!
+//! - **Retry with backoff + jitter** on transient replica errors
+//!   (`util::retry_transient_with`, budget = `[cluster] retry_budget`).
+//! - **Circuit breaker** per node (`health.rs`): consecutive
+//!   unreachable failures open it, ops then fast-fail until a cooldown
+//!   of op-ticks expires and half-open probes re-close it.
+//! - **Hinted handoff** (`handoff.rs`): a write that misses a down
+//!   replica is still acknowledged if `write_consistency.required`
+//!   other replicas took it, and the miss is queued as a hint that
+//!   replays when the target's breaker closes again.
+//! - **Read repair**: verified reads consult `read_consistency.required`
+//!   replicas; on disagreement the newest pending hint for the key
+//!   decides the truth (so a missed delete can never resurrect), the
+//!   divergent replicas are rewritten, and the repair is counted.
+//! - **Typed degraded-mode errors**: when consistency is unachievable
+//!   the caller gets [`ClusterError::QuorumLost`] — never a silently
+//!   wrong answer.
+//!
 //! False-positive feedback is **per replica**: when a replica's read
 //! reaches its tables and misses, [`StorageNode::get`]/`get_batch`
 //! report the FP to that replica's *own* filter
 //! ([`crate::filter::FilterFeedback`]) inside the node read path —
 //! node filters are independently seeded, so an FP on one replica says
 //! nothing about the others and the router adds no extra mechanism.
+//!
+//! Time is the deterministic **op clock**: each client op advances it
+//! by one tick, fault schedules and breaker cooldowns are expressed in
+//! ticks, and nothing reads wall time — the chaos sweep
+//! (`testutil::chaos`) replays bit-identically from a seed (P18).
 
+use std::fmt;
+use std::io;
+use std::sync::Arc;
+
+use super::handoff::{HintOp, HintQueue};
+use super::health::{BreakerConfig, BreakerEvent, NodeHealth};
+use super::proxy::{FaultPlane, OpCtx, RealProxy, ReplicaError, ReplicaProxy};
 use super::replication::ReplicationConfig;
 use super::ring::HashRing;
+use crate::filter::FilterError;
 use crate::store::{NodeConfig, StorageNode};
+use crate::util::{retry_transient_with, rng::GOLDEN_GAMMA};
 use crate::workload::Op;
 
-/// Router-level counters.
-#[derive(Debug, Clone, Default)]
-pub struct RouterStats {
+/// Why a cluster op could not be served at its consistency level.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterError {
+    /// Too few replicas were reachable: `got` of the `need` required
+    /// acknowledgements arrived. The op may have partially applied;
+    /// hints cover the missed replicas.
+    QuorumLost { need: usize, got: usize },
+    /// Enough replicas were reachable but they refused the op
+    /// (filter saturated, node degraded read-only).
+    Node(FilterError),
+}
+
+impl fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClusterError::QuorumLost { need, got } => {
+                write!(f, "quorum lost: needed {need} replicas, reached {got}")
+            }
+            ClusterError::Node(e) => write!(f, "replicas refused: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// Fault-handling knobs (`[cluster]` config keys).
+#[derive(Debug, Clone, Copy)]
+pub struct ResilienceConfig {
+    /// Transient-error retries per replica op (`retry_budget`).
+    pub retry_budget: u32,
+    /// Synthetic latency above this is a timeout (`timeout_us`).
+    pub timeout_us: u64,
+    /// Circuit-breaker thresholds (`breaker_*`).
+    pub breaker: BreakerConfig,
+    /// Max queued hints per target node (`handoff_capacity`).
+    pub handoff_capacity: usize,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self {
+            retry_budget: 3,
+            timeout_us: 2_000,
+            breaker: BreakerConfig::default(),
+            handoff_capacity: 4_096,
+        }
+    }
+}
+
+/// Router-level counters: routing fan-out plus the full fault-handling
+/// story (retries absorbed, breaker trips, hint life cycle, repairs,
+/// quorum losses). All deterministic under a seeded fault plane.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClusterStats {
     pub ops_routed: u64,
     /// Per-node op counts (fan-out visibility).
     pub per_node_ops: Vec<u64>,
+    /// Transient replica failures absorbed by retry.
+    pub retries: u64,
+    /// Breaker transitions into open.
+    pub breaker_trips: u64,
+    /// Hints queued for down replicas.
+    pub hints_queued: u64,
+    /// Hints successfully replayed onto recovered replicas.
+    pub hints_replayed: u64,
+    /// Hints lost (queue full, or target refused on replay) — the
+    /// no-lost-writes contract only holds while this is zero.
+    pub hints_dropped: u64,
+    /// Hints made obsolete by a newer direct op landing on the target.
+    pub hints_superseded: u64,
+    /// Divergent replicas rewritten by read repair.
+    pub read_repairs: u64,
+    /// Ops that failed with [`ClusterError::QuorumLost`] or a replica
+    /// refusal.
+    pub quorum_losses: u64,
 }
+
+/// Former name of [`ClusterStats`], kept for call sites that predate
+/// the fault-handling counters.
+pub type RouterStats = ClusterStats;
 
 /// An in-process cluster.
 #[derive(Debug)]
 pub struct Cluster {
     ring: HashRing,
-    nodes: Vec<StorageNode>,
+    proxies: Vec<ReplicaProxy>,
     repl: ReplicationConfig,
-    pub stats: RouterStats,
+    resilience: ResilienceConfig,
+    health: Vec<NodeHealth>,
+    hints: Vec<HintQueue>,
+    clock: u64,
+    /// Nodes whose breaker just closed; their hint queues replay at
+    /// the end of the current client op (never recursively inside it).
+    replay_due: Vec<usize>,
+    pub stats: ClusterStats,
 }
 
 impl Cluster {
-    /// Build `n` nodes from a config template (node_id/seed are
-    /// specialized per node so filters are independent).
+    /// Build `n` production nodes (always-healthy [`RealProxy`] planes,
+    /// default resilience) from a config template — node_id/seed are
+    /// specialized per node so filters are independent.
     pub fn new(n: usize, vnodes: usize, template: NodeConfig, repl: ReplicationConfig) -> Self {
-        let nodes = (0..n)
-            .map(|i| {
+        let planes: Vec<Arc<dyn FaultPlane>> = (0..n)
+            .map(|_| Arc::new(RealProxy) as Arc<dyn FaultPlane>)
+            .collect();
+        Self::with_fault_planes(n, vnodes, template, repl, ResilienceConfig::default(), planes)
+    }
+
+    /// [`Cluster::new`] with an explicit fault plane per node and
+    /// tuned resilience — the chaos-sweep entry point.
+    pub fn with_fault_planes(
+        n: usize,
+        vnodes: usize,
+        template: NodeConfig,
+        repl: ReplicationConfig,
+        resilience: ResilienceConfig,
+        planes: Vec<Arc<dyn FaultPlane>>,
+    ) -> Self {
+        assert_eq!(planes.len(), n, "one fault plane per node");
+        let proxies = planes
+            .into_iter()
+            .enumerate()
+            .map(|(i, plane)| {
                 let mut cfg = template.clone();
                 cfg.node_id = i as u64;
                 cfg.filter.ocf.seed = template.filter.ocf.seed ^ ((i as u64 + 1) << 17);
-                StorageNode::new(cfg)
+                ReplicaProxy::with_plane(StorageNode::new(cfg), plane)
             })
             .collect();
         Self {
             ring: HashRing::new(n, vnodes),
-            nodes,
+            proxies,
             repl,
-            stats: RouterStats {
-                ops_routed: 0,
+            resilience,
+            health: (0..n).map(|_| NodeHealth::new(resilience.breaker)).collect(),
+            hints: (0..n)
+                .map(|_| HintQueue::new(resilience.handoff_capacity))
+                .collect(),
+            clock: 0,
+            replay_due: Vec::new(),
+            stats: ClusterStats {
                 per_node_ops: vec![0; n],
+                ..ClusterStats::default()
             },
         }
     }
 
     pub fn node_count(&self) -> usize {
-        self.nodes.len()
+        self.proxies.len()
     }
 
     pub fn node(&self, i: usize) -> &StorageNode {
-        &self.nodes[i]
+        self.proxies[i].node()
     }
 
     pub fn node_mut(&mut self, i: usize) -> &mut StorageNode {
-        &mut self.nodes[i]
+        self.proxies[i].node_mut()
     }
 
     pub fn ring(&self) -> &HashRing {
         &self.ring
     }
 
-    /// Write to all RF replicas (the write consistency level governs
-    /// how many must succeed; in-process nodes never fail, so this is
-    /// an accounting distinction surfaced for experiments).
-    pub fn put(&mut self, key: u64) -> Result<(), crate::filter::FilterError> {
+    pub fn replication(&self) -> ReplicationConfig {
+        self.repl
+    }
+
+    pub fn resilience(&self) -> ResilienceConfig {
+        self.resilience
+    }
+
+    /// Current op-clock tick.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Advance the op clock without routing ops — lets harnesses age
+    /// out fault windows and breaker cooldowns deterministically.
+    pub fn advance_clock(&mut self, ticks: u64) {
+        self.clock += ticks;
+    }
+
+    /// Is node `i`'s breaker currently open?
+    pub fn breaker_open(&self, i: usize) -> bool {
+        self.health[i].is_open()
+    }
+
+    /// Total hints still queued across all nodes.
+    pub fn hints_pending(&self) -> usize {
+        self.hints.iter().map(|q| q.len()).sum()
+    }
+
+    /// Synthetic latency absorbed from latent fault windows, summed
+    /// across replicas (µs) — the E15 latency signal.
+    pub fn synthetic_latency_us(&self) -> u64 {
+        self.proxies.iter().map(|p| p.synthetic_latency_us()).sum()
+    }
+
+    /// Latent ops that exceeded the timeout, summed across replicas.
+    pub fn timeouts(&self) -> u64 {
+        self.proxies.iter().map(|p| p.timeouts()).sum()
+    }
+
+    fn tick(&mut self) -> u64 {
+        let t = self.clock;
+        self.clock += 1;
+        t
+    }
+
+    fn queue_hint(&mut self, n: usize, seq: u64, op: HintOp) {
+        if self.hints[n].push(seq, op) {
+            self.stats.hints_queued += 1;
+        } else {
+            self.stats.hints_dropped += 1;
+        }
+    }
+
+    /// One replica sub-op: breaker gate, bounded retry with seeded
+    /// jitter, health bookkeeping. `weight` is how many client ops
+    /// this call carries (batch group size; repairs pass 0) — charged
+    /// to `per_node_ops` only when the node actually answered, so
+    /// batched and scalar accounting stay identical in production.
+    fn replica_call<T>(
+        &mut self,
+        n: usize,
+        weight: u64,
+        mut op: impl FnMut(&mut ReplicaProxy, &OpCtx) -> Result<T, ReplicaError>,
+    ) -> Result<T, ReplicaError> {
+        let clock = self.clock;
+        if !self.health[n].allows(clock) {
+            return Err(ReplicaError::Down); // fast-fail, no retry burn
+        }
+        let budget = self.resilience.retry_budget;
+        let timeout_us = self.resilience.timeout_us;
+        // per-(node, tick) jitter stream: replicas retrying the same
+        // fault window don't sleep in lockstep, yet replays are exact
+        let jitter_seed = (n as u64 + 1).wrapping_mul(GOLDEN_GAMMA).wrapping_add(clock);
+        let proxy = &mut self.proxies[n];
+        let retried = retry_transient_with(budget, jitter_seed, |attempt| {
+            let ctx = OpCtx {
+                clock,
+                attempt,
+                timeout_us,
+            };
+            match op(proxy, &ctx) {
+                Ok(v) => Ok(Ok(v)),
+                Err(ReplicaError::Transient) => Err(io::Error::new(
+                    io::ErrorKind::Interrupted,
+                    "transient replica fault",
+                )),
+                // hard failures stop the retry loop immediately
+                Err(e) => Ok(Err(e)),
+            }
+        });
+        self.stats.retries += u64::from(retried.retries);
+        let outcome: Result<T, ReplicaError> = match retried.result {
+            Ok(inner) => inner,
+            Err(_) => Err(ReplicaError::Transient), // budget exhausted
+        };
+        match &outcome {
+            // a node-level refusal is still an *answer* — the node is
+            // alive, so it must not push the breaker toward open
+            Ok(_) | Err(ReplicaError::Node(_)) => {
+                self.stats.per_node_ops[n] += weight;
+                if self.health[n].record_success() == BreakerEvent::Closed {
+                    self.replay_due.push(n);
+                }
+            }
+            Err(_) => {
+                if self.health[n].record_failure(clock) == BreakerEvent::Tripped {
+                    self.stats.breaker_trips += 1;
+                }
+            }
+        }
+        outcome
+    }
+
+    /// Replay queues for every node whose breaker just closed. Runs at
+    /// the end of the client op (after read resolution — replaying
+    /// mid-read could erase the pending hint a resolution depends on).
+    fn drain_replay_due(&mut self) {
+        while let Some(n) = self.replay_due.pop() {
+            self.replay_node(n);
+        }
+    }
+
+    /// Replay node `n`'s hint queue in FIFO order until it drains or
+    /// the node becomes unreachable again.
+    fn replay_node(&mut self, n: usize) {
+        while let Some(hint) = self.hints[n].front() {
+            let res = self.replica_call(n, 0, |p, ctx| match hint.op {
+                HintOp::Put(k) => p.put(ctx, k).map(|()| true),
+                HintOp::Delete(k) => p.delete(ctx, k),
+            });
+            match res {
+                Ok(_) => {
+                    self.hints[n].pop();
+                    self.stats.hints_replayed += 1;
+                }
+                Err(ReplicaError::Node(_)) => {
+                    // alive but refusing (saturated/degraded): the hint
+                    // can never land — drop it loudly, contract void
+                    self.hints[n].pop();
+                    self.stats.hints_dropped += 1;
+                }
+                Err(_) => break, // unreachable again; retry next close
+            }
+        }
+    }
+
+    /// Replay every node's pending hints now (recovery tooling and the
+    /// chaos sweep's drain loop). Returns the hints still pending —
+    /// zero once all targets are reachable again.
+    pub fn replay_hints(&mut self) -> usize {
+        for n in 0..self.proxies.len() {
+            self.replay_node(n);
+        }
+        self.drain_replay_due();
+        self.hints_pending()
+    }
+
+    /// Write to all RF replicas. Acknowledged iff
+    /// `write_consistency.required` replicas took it; misses on down
+    /// replicas queue hints, misses on refusing replicas surface as
+    /// [`ClusterError::Node`].
+    pub fn put(&mut self, key: u64) -> Result<(), ClusterError> {
         self.stats.ops_routed += 1;
+        let seq = self.tick();
         let replicas = self.ring.replicas(key, self.repl.rf);
         // consistency is computed over the *achievable* replica set —
         // a 1-node cluster with rf=3 has quorum 1, not 2
         let need = self.repl.write_consistency.required(replicas.len());
-        let mut ok = 0;
-        let mut last_err = None;
+        let mut ok = 0usize;
+        let mut reachable = 0usize;
+        let mut node_err: Option<FilterError> = None;
         for &n in &replicas {
-            self.stats.per_node_ops[n] += 1;
-            match self.nodes[n].put(key) {
-                Ok(()) => ok += 1,
-                Err(e) => last_err = Some(e),
+            match self.replica_call(n, 1, |p, ctx| p.put(ctx, key)) {
+                Ok(()) => {
+                    ok += 1;
+                    reachable += 1;
+                    // the node now holds newer state than any pending
+                    // hint for this key could replay
+                    let s = self.hints[n].supersede(key);
+                    self.stats.hints_superseded += s as u64;
+                }
+                Err(ReplicaError::Node(e)) => {
+                    reachable += 1;
+                    node_err = Some(e);
+                }
+                Err(_) => self.queue_hint(n, seq, HintOp::Put(key)),
             }
         }
+        self.drain_replay_due();
         if ok >= need {
             Ok(())
         } else {
-            Err(last_err.expect("failed write must carry an error"))
+            self.stats.quorum_losses += 1;
+            match node_err {
+                // every replica answered yet too few accepted: the
+                // cluster is reachable but refusing, not partitioned
+                Some(e) if reachable == replicas.len() => Err(ClusterError::Node(e)),
+                _ => Err(ClusterError::QuorumLost { need, got: ok }),
+            }
         }
     }
 
@@ -105,15 +426,131 @@ impl Cluster {
     /// node takes a single [`StorageNode::put_batch`] (WAL + memtable
     /// per key, one bulk-hashed filter insert) instead of a call per
     /// key per replica. Per-key results, consistency accounting
-    /// (`write_consistency.required` over the achievable replica set)
-    /// and `per_node_ops`/`ops_routed` are identical to a scalar
-    /// [`Cluster::put`] loop.
-    pub fn put_batch(&mut self, keys: &[u64]) -> Vec<Result<(), crate::filter::FilterError>> {
+    /// (`write_consistency.required` over the achievable replica set),
+    /// hinting, and `per_node_ops`/`ops_routed` are identical to a
+    /// scalar [`Cluster::put`] loop.
+    pub fn put_batch(&mut self, keys: &[u64]) -> Vec<Result<(), ClusterError>> {
         self.stats.ops_routed += keys.len() as u64;
-        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+        let base = self.clock;
+        self.clock += keys.len() as u64;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.proxies.len()];
+        let mut need: Vec<usize> = Vec::with_capacity(keys.len());
+        let mut rf_count = vec![0usize; keys.len()];
+        let mut ok = vec![0usize; keys.len()];
+        let mut reachable = vec![0usize; keys.len()];
+        let mut last_err: Vec<Option<FilterError>> = vec![None; keys.len()];
+        for (i, &k) in keys.iter().enumerate() {
+            let replicas = self.ring.replicas(k, self.repl.rf);
+            need.push(self.repl.write_consistency.required(replicas.len()));
+            rf_count[i] = replicas.len();
+            for &n in &replicas {
+                groups[n].push(i);
+            }
+        }
+        let mut gkeys: Vec<u64> = Vec::new();
+        for node_id in 0..groups.len() {
+            let group = std::mem::take(&mut groups[node_id]);
+            if group.is_empty() {
+                continue;
+            }
+            gkeys.clear();
+            gkeys.extend(group.iter().map(|&i| keys[i]));
+            match self.replica_call(node_id, group.len() as u64, |p, ctx| {
+                p.put_batch(ctx, &gkeys)
+            }) {
+                Ok(results) => {
+                    for (&i, r) in group.iter().zip(results) {
+                        match r {
+                            Ok(()) => {
+                                ok[i] += 1;
+                                reachable[i] += 1;
+                                let s = self.hints[node_id].supersede(keys[i]);
+                                self.stats.hints_superseded += s as u64;
+                            }
+                            Err(e) => {
+                                reachable[i] += 1;
+                                last_err[i] = Some(e);
+                            }
+                        }
+                    }
+                }
+                Err(ReplicaError::Node(e)) => {
+                    for &i in &group {
+                        reachable[i] += 1;
+                        last_err[i] = Some(e.clone());
+                    }
+                }
+                Err(_) => {
+                    for &i in &group {
+                        self.queue_hint(node_id, base + i as u64, HintOp::Put(keys[i]));
+                    }
+                }
+            }
+        }
+        self.drain_replay_due();
+        (0..keys.len())
+            .map(|i| {
+                if ok[i] >= need[i] {
+                    Ok(())
+                } else {
+                    self.stats.quorum_losses += 1;
+                    match &last_err[i] {
+                        Some(e) if reachable[i] == rf_count[i] => {
+                            Err(ClusterError::Node(e.clone()))
+                        }
+                        _ => Err(ClusterError::QuorumLost {
+                            need: need[i],
+                            got: ok[i],
+                        }),
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Verified delete across replicas at the write consistency level
+    /// (the same accounting as [`Cluster::put`] — a delete is a write).
+    /// `Ok(true)` iff some acknowledging replica actually held the key.
+    pub fn delete(&mut self, key: u64) -> Result<bool, ClusterError> {
+        self.stats.ops_routed += 1;
+        let seq = self.tick();
+        let replicas = self.ring.replicas(key, self.repl.rf);
+        let need = self.repl.write_consistency.required(replicas.len());
+        let mut ok = 0usize;
+        let mut any = false;
+        for &n in &replicas {
+            match self.replica_call(n, 1, |p, ctx| p.delete(ctx, key)) {
+                Ok(was) => {
+                    ok += 1;
+                    any |= was;
+                    let s = self.hints[n].supersede(key);
+                    self.stats.hints_superseded += s as u64;
+                }
+                Err(ReplicaError::Node(_)) => {}
+                Err(_) => self.queue_hint(n, seq, HintOp::Delete(key)),
+            }
+        }
+        self.drain_replay_due();
+        if ok >= need {
+            Ok(any)
+        } else {
+            self.stats.quorum_losses += 1;
+            Err(ClusterError::QuorumLost { need, got: ok })
+        }
+    }
+
+    /// Batched delete fan-out, replica-grouped exactly like
+    /// [`Cluster::put_batch`]: one [`StorageNode::delete_batch`] per
+    /// node, per-key consistency accounting and hinting identical to a
+    /// scalar [`Cluster::delete`] loop.
+    pub fn delete_batch(&mut self, keys: &[u64]) -> Vec<Result<bool, ClusterError>> {
+        self.stats.ops_routed += keys.len() as u64;
+        let base = self.clock;
+        self.clock += keys.len() as u64;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.proxies.len()];
         let mut need: Vec<usize> = Vec::with_capacity(keys.len());
         let mut ok = vec![0usize; keys.len()];
-        let mut last_err: Vec<Option<crate::filter::FilterError>> = vec![None; keys.len()];
+        let mut any = vec![false; keys.len()];
         for (i, &k) in keys.iter().enumerate() {
             let replicas = self.ring.replicas(k, self.repl.rf);
             need.push(self.repl.write_consistency.required(replicas.len()));
@@ -122,135 +559,222 @@ impl Cluster {
             }
         }
         let mut gkeys: Vec<u64> = Vec::new();
-        for (node_id, group) in groups.iter().enumerate() {
+        for node_id in 0..groups.len() {
+            let group = std::mem::take(&mut groups[node_id]);
             if group.is_empty() {
                 continue;
             }
-            self.stats.per_node_ops[node_id] += group.len() as u64;
             gkeys.clear();
             gkeys.extend(group.iter().map(|&i| keys[i]));
-            let results = self.nodes[node_id].put_batch(&gkeys);
-            for (&i, r) in group.iter().zip(results) {
-                match r {
-                    Ok(()) => ok[i] += 1,
-                    Err(e) => last_err[i] = Some(e),
+            match self.replica_call(node_id, group.len() as u64, |p, ctx| {
+                p.delete_batch(ctx, &gkeys)
+            }) {
+                Ok(results) => {
+                    for (&i, was) in group.iter().zip(results) {
+                        ok[i] += 1;
+                        any[i] |= was;
+                        let s = self.hints[node_id].supersede(keys[i]);
+                        self.stats.hints_superseded += s as u64;
+                    }
+                }
+                Err(ReplicaError::Node(_)) => {}
+                Err(_) => {
+                    for &i in &group {
+                        self.queue_hint(node_id, base + i as u64, HintOp::Delete(keys[i]));
+                    }
                 }
             }
         }
+        self.drain_replay_due();
         (0..keys.len())
             .map(|i| {
                 if ok[i] >= need[i] {
-                    Ok(())
+                    Ok(any[i])
                 } else {
-                    Err(last_err[i]
-                        .clone()
-                        .expect("failed write must carry an error"))
+                    self.stats.quorum_losses += 1;
+                    Err(ClusterError::QuorumLost {
+                        need: need[i],
+                        got: ok[i],
+                    })
                 }
             })
             .collect()
     }
 
-    /// Verified delete across replicas.
-    pub fn delete(&mut self, key: u64) -> bool {
+    /// Read at the configured consistency: walk the replica set in
+    /// ring order until `read_consistency.required` replicas answered
+    /// (skipping unreachable ones), then resolve — on disagreement the
+    /// newest pending hint decides and divergent replicas are
+    /// repaired. Fewer answers than required is a typed
+    /// [`ClusterError::QuorumLost`], never a silent `false`.
+    pub fn get(&mut self, key: u64) -> Result<bool, ClusterError> {
         self.stats.ops_routed += 1;
+        self.tick();
         let replicas = self.ring.replicas(key, self.repl.rf);
-        let mut any = false;
+        let need = self.repl.read_consistency.required(replicas.len()).max(1);
+        let mut answers: Vec<(usize, bool)> = Vec::with_capacity(need);
         for &n in &replicas {
-            self.stats.per_node_ops[n] += 1;
-            any |= self.nodes[n].delete(key);
-        }
-        any
-    }
-
-    /// Read at the configured consistency: consult up to `required`
-    /// replicas, first positive wins (membership semantics).
-    pub fn get(&mut self, key: u64) -> bool {
-        self.stats.ops_routed += 1;
-        let replicas = self.ring.replicas(key, self.repl.rf);
-        let need = self.repl.read_consistency.required(replicas.len());
-        for &n in replicas.iter().take(need.max(1)) {
-            self.stats.per_node_ops[n] += 1;
-            if self.nodes[n].get(key) {
-                return true;
+            if answers.len() >= need {
+                break;
+            }
+            if let Ok(hit) = self.replica_call(n, 1, |p, ctx| p.get(ctx, key)) {
+                answers.push((n, hit));
             }
         }
-        false
+        let out = if answers.len() < need {
+            self.stats.quorum_losses += 1;
+            Err(ClusterError::QuorumLost {
+                need,
+                got: answers.len(),
+            })
+        } else {
+            Ok(self.resolve_read(key, &answers))
+        };
+        self.drain_replay_due();
+        out
     }
 
     /// Batched read fan-out: keys are grouped by replica and each
     /// node's group is resolved through [`StorageNode::get_batch`] (the
     /// filter-generic batched read path), in consultation "waves" —
-    /// wave `w` probes replica `w` of every still-unresolved key, so
-    /// the answers (and the per-node op accounting) are identical to a
-    /// scalar [`Cluster::get`] loop while each node sees one batched
-    /// probe per wave instead of a call per key.
-    pub fn get_batch(&mut self, keys: &[u64]) -> Vec<bool> {
+    /// wave `w` probes replica `w` of every key still short of its
+    /// required answer count, so the answers (and the per-node op
+    /// accounting) are identical to a scalar [`Cluster::get`] loop
+    /// while each node sees one batched probe per wave instead of a
+    /// call per key.
+    pub fn get_batch(&mut self, keys: &[u64]) -> Vec<Result<bool, ClusterError>> {
         self.stats.ops_routed += keys.len() as u64;
-        let mut out = vec![false; keys.len()];
-        // (key index, replica list) for every unresolved key
-        let mut pending: Vec<(usize, Vec<usize>)> = keys
+        self.clock += keys.len() as u64;
+        let replica_sets: Vec<Vec<usize>> = keys
             .iter()
-            .enumerate()
-            .map(|(i, &k)| (i, self.ring.replicas(k, self.repl.rf)))
+            .map(|&k| self.ring.replicas(k, self.repl.rf))
             .collect();
+        let needs: Vec<usize> = replica_sets
+            .iter()
+            .map(|r| self.repl.read_consistency.required(r.len()).max(1))
+            .collect();
+        let mut answers: Vec<Vec<(usize, bool)>> = vec![Vec::new(); keys.len()];
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.proxies.len()];
+        let mut gkeys: Vec<u64> = Vec::new();
         let mut wave = 0usize;
-        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
-        while !pending.is_empty() {
+        loop {
             for g in groups.iter_mut() {
                 g.clear();
             }
-            // a key participates in wave `w` only while w < need
-            let mut next_pending: Vec<(usize, Vec<usize>)> = Vec::new();
-            for (i, replicas) in pending.drain(..) {
-                let need = self.repl.read_consistency.required(replicas.len()).max(1);
-                if wave < need.min(replicas.len()) {
-                    groups[replicas[wave]].push(i);
-                    next_pending.push((i, replicas));
+            let mut active = false;
+            for i in 0..keys.len() {
+                // a key keeps consulting deeper replicas only while it
+                // is short of its required answers — under healthy
+                // planes that is exactly the first `need` replicas
+                if answers[i].len() < needs[i] && wave < replica_sets[i].len() {
+                    groups[replica_sets[i][wave]].push(i);
+                    active = true;
                 }
             }
-            if next_pending.is_empty() {
+            if !active {
                 break;
             }
-            let mut gkeys: Vec<u64> = Vec::new();
-            for (node_id, group) in groups.iter().enumerate() {
+            for node_id in 0..groups.len() {
+                let group = std::mem::take(&mut groups[node_id]);
                 if group.is_empty() {
                     continue;
                 }
-                self.stats.per_node_ops[node_id] += group.len() as u64;
                 gkeys.clear();
                 gkeys.extend(group.iter().map(|&i| keys[i]));
-                let answers = self.nodes[node_id].get_batch(&gkeys);
-                for (&i, hit) in group.iter().zip(answers) {
-                    if hit {
-                        out[i] = true;
+                if let Ok(hits) = self.replica_call(node_id, group.len() as u64, |p, ctx| {
+                    p.get_batch(ctx, &gkeys)
+                }) {
+                    for (&i, hit) in group.iter().zip(hits) {
+                        answers[i].push((node_id, hit));
                     }
                 }
             }
-            // keys answered positive leave the wave set
-            pending = next_pending.into_iter().filter(|(i, _)| !out[*i]).collect();
             wave += 1;
         }
+        let out: Vec<Result<bool, ClusterError>> = (0..keys.len())
+            .map(|i| {
+                if answers[i].len() < needs[i] {
+                    self.stats.quorum_losses += 1;
+                    Err(ClusterError::QuorumLost {
+                        need: needs[i],
+                        got: answers[i].len(),
+                    })
+                } else {
+                    Ok(self.resolve_read(keys[i], &answers[i]))
+                }
+            })
+            .collect();
+        self.drain_replay_due();
         out
     }
 
-    /// Apply a workload op.
+    /// Merge one key's replica answers; on disagreement, decide the
+    /// truth and repair the replicas that answered wrong.
+    ///
+    /// The truth rule carries the no-resurrection proof: a divergent
+    /// replica missed a write, and every missed write has a pending
+    /// hint (or `hints_dropped` says the contract is void) — so the
+    /// *newest pending hint* for the key is the write the divergent
+    /// replica hasn't seen. A pending `Delete` newer than anything
+    /// else means the key is gone, however many stale replicas still
+    /// answer `true`. With no pending hint, a positive answer wins:
+    /// reads are verified, so some replica provably holds the key.
+    fn resolve_read(&mut self, key: u64, answers: &[(usize, bool)]) -> bool {
+        let first = answers[0].1;
+        if answers.iter().all(|&(_, h)| h == first) {
+            return first;
+        }
+        let latest = self
+            .hints
+            .iter()
+            .filter_map(|q| q.latest_for(key))
+            .max_by_key(|h| h.seq);
+        let truth = match latest {
+            Some(h) => matches!(h.op, HintOp::Put(_)),
+            None => true,
+        };
+        for &(n, hit) in answers {
+            if hit == truth {
+                continue;
+            }
+            let repaired = if truth {
+                self.replica_call(n, 0, |p, ctx| p.put(ctx, key).map(|()| ()))
+            } else {
+                self.replica_call(n, 0, |p, ctx| p.delete(ctx, key).map(|_| ()))
+            };
+            if repaired.is_ok() {
+                let s = self.hints[n].supersede(key);
+                self.stats.hints_superseded += s as u64;
+                self.stats.read_repairs += 1;
+            }
+        }
+        truth
+    }
+
+    /// Apply a workload op (availability semantics: a quorum-lost read
+    /// reports "absent" here; callers that need the distinction use
+    /// the typed APIs).
     pub fn apply(&mut self, op: Op) -> bool {
         match op {
             Op::Insert(k) => self.put(k).is_ok(),
-            Op::Lookup(k) => self.get(k),
-            Op::Delete(k) => self.delete(k),
+            Op::Lookup(k) => self.get(k).unwrap_or(false),
+            Op::Delete(k) => self.delete(k).unwrap_or(false),
         }
     }
 
     /// Sum of filter memory across nodes.
     pub fn filter_memory_bytes(&self) -> usize {
-        self.nodes.iter().map(|n| n.filter_memory_bytes()).sum()
+        self.proxies.iter().map(|p| p.node().filter_memory_bytes()).sum()
     }
 
     /// Aggregate flush counts (premature, total).
     pub fn flush_counts(&self) -> (u64, u64) {
-        let premature = self.nodes.iter().map(|n| n.stats.flushes_premature).sum();
-        let total = self.nodes.iter().map(|n| n.stats.flushes).sum();
+        let premature = self
+            .proxies
+            .iter()
+            .map(|p| p.node().stats.flushes_premature)
+            .sum();
+        let total = self.proxies.iter().map(|p| p.node().stats.flushes).sum();
         (premature, total)
     }
 }
@@ -258,6 +782,8 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::proxy::Verdict;
+    use crate::cluster::replication::Consistency;
     use crate::store::FlushPolicy;
 
     fn cluster(n: usize, rf: usize) -> Cluster {
@@ -275,6 +801,47 @@ mod tests {
         )
     }
 
+    /// Crashed while `clock < until`, healthy afterwards.
+    #[derive(Debug)]
+    struct DownUntil(u64);
+
+    impl FaultPlane for DownUntil {
+        fn verdict(&self, clock: u64, _attempt: u32) -> Verdict {
+            if clock < self.0 {
+                Verdict::Crashed
+            } else {
+                Verdict::Healthy
+            }
+        }
+        fn describe(&self) -> String {
+            format!("down until tick {}", self.0)
+        }
+    }
+
+    /// 3-node rf=3 cluster where node 2 is down until `until`.
+    fn cluster_with_down_node(until: u64) -> Cluster {
+        let planes: Vec<Arc<dyn FaultPlane>> = vec![
+            Arc::new(RealProxy),
+            Arc::new(RealProxy),
+            Arc::new(DownUntil(until)),
+        ];
+        Cluster::with_fault_planes(
+            3,
+            32,
+            NodeConfig {
+                flush: FlushPolicy::small(10_000),
+                ..NodeConfig::default()
+            },
+            ReplicationConfig {
+                rf: 3,
+                read_consistency: Consistency::Quorum,
+                write_consistency: Consistency::Quorum,
+            },
+            ResilienceConfig::default(),
+            planes,
+        )
+    }
+
     #[test]
     fn put_get_across_cluster() {
         let mut c = cluster(4, 2);
@@ -282,9 +849,9 @@ mod tests {
             c.put(k).unwrap();
         }
         for k in 0..2000u64 {
-            assert!(c.get(k), "{k}");
+            assert!(c.get(k).unwrap(), "{k}");
         }
-        assert!(!c.get(999_999));
+        assert!(!c.get(999_999).unwrap());
     }
 
     #[test]
@@ -299,12 +866,12 @@ mod tests {
     fn delete_removes_from_all_replicas() {
         let mut c = cluster(3, 3);
         c.put(7).unwrap();
-        assert!(c.delete(7));
-        assert!(!c.get(7));
+        assert!(c.delete(7).unwrap());
+        assert!(!c.get(7).unwrap());
         for i in 0..3 {
             assert_eq!(c.node(i).live_keys(), 0);
         }
-        assert!(!c.delete(7), "second delete rejected everywhere");
+        assert!(!c.delete(7).unwrap(), "second delete rejected everywhere");
     }
 
     #[test]
@@ -339,24 +906,23 @@ mod tests {
             c.put(k).unwrap();
         }
         for k in 0..2000u64 {
-            assert!(c.get(k), "{k}");
+            assert!(c.get(k).unwrap(), "{k}");
         }
-        assert!(!c.get(999_999));
-        assert!(c.delete(42));
-        assert!(!c.get(42));
+        assert!(!c.get(999_999).unwrap());
+        assert!(c.delete(42).unwrap());
+        assert!(!c.get(42).unwrap());
     }
 
     #[test]
     fn single_node_cluster_degenerates_gracefully() {
         let mut c = cluster(1, 3);
         c.put(1).unwrap();
-        assert!(c.get(1));
-        assert!(c.delete(1));
+        assert!(c.get(1).unwrap());
+        assert!(c.delete(1).unwrap());
     }
 
     #[test]
     fn put_batch_matches_scalar_puts() {
-        use crate::cluster::replication::Consistency;
         for write_consistency in [Consistency::One, Consistency::Quorum, Consistency::All] {
             let mk = || {
                 Cluster::new(
@@ -393,11 +959,17 @@ mod tests {
             );
             // identical answers and replica placement
             let probes: Vec<u64> = (0..3000u64).collect();
-            assert_eq!(
-                batched_cluster.get_batch(&probes),
-                scalar_cluster.get_batch(&probes),
-                "{write_consistency:?}"
-            );
+            let batched_answers: Vec<bool> = batched_cluster
+                .get_batch(&probes)
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect();
+            let scalar_answers: Vec<bool> = scalar_cluster
+                .get_batch(&probes)
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect();
+            assert_eq!(batched_answers, scalar_answers, "{write_consistency:?}");
             for i in 0..4 {
                 assert_eq!(
                     batched_cluster.node(i).live_keys(),
@@ -410,7 +982,6 @@ mod tests {
 
     #[test]
     fn get_batch_matches_scalar_gets() {
-        use crate::cluster::replication::Consistency;
         for read_consistency in [Consistency::One, Consistency::Quorum, Consistency::All] {
             let mk = || {
                 let mut c = Cluster::new(
@@ -433,9 +1004,16 @@ mod tests {
             };
             let probes: Vec<u64> = (0..3000u64).collect();
             let mut batched_cluster = mk();
-            let batched = batched_cluster.get_batch(&probes);
+            let batched: Vec<bool> = batched_cluster
+                .get_batch(&probes)
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect();
             let mut scalar_cluster = mk();
-            let scalar: Vec<bool> = probes.iter().map(|&k| scalar_cluster.get(k)).collect();
+            let scalar: Vec<bool> = probes
+                .iter()
+                .map(|&k| scalar_cluster.get(k).unwrap())
+                .collect();
             assert_eq!(batched, scalar, "{read_consistency:?}");
             // identical routing accounting, probe for probe
             assert_eq!(
@@ -449,6 +1027,196 @@ mod tests {
             for k in 0..2000u64 {
                 assert!(batched[k as usize], "{read_consistency:?}: lost {k}");
             }
+        }
+    }
+
+    #[test]
+    fn delete_batch_matches_scalar_deletes() {
+        for write_consistency in [Consistency::One, Consistency::Quorum, Consistency::All] {
+            let mk = || {
+                let mut c = Cluster::new(
+                    4,
+                    32,
+                    NodeConfig {
+                        flush: FlushPolicy::small(10_000),
+                        ..NodeConfig::default()
+                    },
+                    ReplicationConfig {
+                        rf: 3,
+                        write_consistency,
+                        ..ReplicationConfig::default()
+                    },
+                );
+                for k in 0..1000u64 {
+                    c.put(k).unwrap();
+                }
+                c
+            };
+            // delete evens plus some never-inserted keys
+            let victims: Vec<u64> = (0..1500u64).filter(|k| k % 2 == 0).collect();
+            let mut batched_cluster = mk();
+            let batched: Vec<bool> = batched_cluster
+                .delete_batch(&victims)
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect();
+            let mut scalar_cluster = mk();
+            let scalar: Vec<bool> = victims
+                .iter()
+                .map(|&k| scalar_cluster.delete(k).unwrap())
+                .collect();
+            assert_eq!(batched, scalar, "{write_consistency:?}");
+            assert_eq!(
+                batched_cluster.stats.per_node_ops, scalar_cluster.stats.per_node_ops,
+                "{write_consistency:?}"
+            );
+            assert_eq!(
+                batched_cluster.stats.ops_routed,
+                scalar_cluster.stats.ops_routed
+            );
+            for i in 0..4 {
+                assert_eq!(
+                    batched_cluster.node(i).live_keys(),
+                    scalar_cluster.node(i).live_keys(),
+                    "{write_consistency:?}: node {i}"
+                );
+            }
+            // deleted keys are gone, odd keys survive
+            for k in 0..1000u64 {
+                assert_eq!(batched_cluster.get(k).unwrap(), k % 2 == 1, "{k}");
+            }
+        }
+    }
+
+    #[test]
+    fn down_replica_trips_breaker_and_queues_hints() {
+        let mut c = cluster_with_down_node(50);
+        for k in 0..30u64 {
+            c.put(k).unwrap_or_else(|e| panic!("quorum of 2 healthy replicas must ack: {e}"));
+        }
+        assert_eq!(c.stats.breaker_trips, 1, "node 2 tripped once");
+        assert!(c.breaker_open(2));
+        assert_eq!(c.stats.hints_queued, 30, "one hint per missed write");
+        assert_eq!(c.hints_pending(), 30);
+        assert_eq!(c.node(2).live_keys(), 0, "down node took nothing");
+        // reads at quorum never see a false negative meanwhile
+        for k in 0..30u64 {
+            assert!(c.get(k).unwrap(), "acked write {k} must be readable");
+        }
+    }
+
+    #[test]
+    fn hints_replay_after_recovery_and_drain_to_zero() {
+        let mut c = cluster_with_down_node(50);
+        for k in 0..30u64 {
+            c.put(k).unwrap();
+        }
+        assert_eq!(c.hints_pending(), 30);
+        // recover: past the fault window *and* the breaker cooldown
+        let cooldown = c.resilience().breaker.cooldown;
+        c.advance_clock(50 + cooldown);
+        let pending = c.replay_hints();
+        assert_eq!(pending, 0, "hint queues must drain after recovery");
+        assert_eq!(c.stats.hints_replayed, 30);
+        assert_eq!(c.stats.hints_dropped, 0);
+        assert!(!c.breaker_open(2));
+        assert_eq!(c.node(2).live_keys(), 30, "replayed writes landed");
+    }
+
+    #[test]
+    fn breaker_fast_fails_without_retry_burn() {
+        let mut c = cluster_with_down_node(1_000_000);
+        for k in 0..20u64 {
+            c.put(k).unwrap();
+        }
+        // only the pre-trip calls burned retries; breaker-open ops
+        // fast-fail (crashed verdicts are hard errors — no retry —
+        // so the retry counter stays at zero here)
+        assert_eq!(c.stats.retries, 0);
+        assert_eq!(c.stats.breaker_trips, 1);
+        assert_eq!(c.hints_pending(), 20, "fast-fail still queues hints");
+    }
+
+    #[test]
+    fn read_repair_fixes_divergent_replica() {
+        let mut c = cluster(3, 3);
+        // read at All so every replica is consulted
+        c.repl.read_consistency = Consistency::All;
+        c.put(7).unwrap();
+        // silently diverge node 0 behind the router's back
+        let victim = c.ring().replicas(7, 3)[0];
+        assert!(c.node_mut(victim).delete(7));
+        assert!(c.get(7).unwrap(), "no pending hints → positive answer wins");
+        assert_eq!(c.stats.read_repairs, 1);
+        assert!(c.node(victim).get(7), "divergent replica rewritten");
+        // now all replicas agree again — no further repairs
+        assert!(c.get(7).unwrap());
+        assert_eq!(c.stats.read_repairs, 1);
+    }
+
+    #[test]
+    fn pending_delete_hint_wins_read_repair_no_resurrection() {
+        let mut c = cluster_with_down_node(50);
+        c.repl.read_consistency = Consistency::All;
+        // while node 2 is still healthy... it isn't (down from tick 0),
+        // so seed node 2 directly: it holds the key, the others will
+        // process the delete
+        c.node_mut(2).put(99).unwrap();
+        c.node_mut(0).put(99).unwrap();
+        c.node_mut(1).put(99).unwrap();
+        let r = c.delete(99);
+        assert!(r.unwrap(), "quorum delete acked");
+        assert_eq!(c.hints_pending(), 1, "missed replica got a delete hint");
+        // node 2 recovers; the hint has NOT replayed yet. A read-All
+        // sees the stale positive — the pending delete hint must win.
+        c.advance_clock(50 + c.resilience().breaker.cooldown);
+        assert!(!c.get(99).unwrap(), "deleted key must not resurrect");
+        assert!(!c.node(2).get(99), "stale replica repaired to absent");
+        // drain: the repair superseded the hint (or replay deletes again)
+        assert_eq!(c.replay_hints(), 0);
+        assert!(!c.get(99).unwrap());
+    }
+
+    #[test]
+    fn quorum_lost_is_a_typed_error() {
+        // both of node 2's peers down forever: rf=3 quorum=2 writes
+        // can only ever reach 1 replica
+        let planes: Vec<Arc<dyn FaultPlane>> = vec![
+            Arc::new(RealProxy),
+            Arc::new(DownUntil(u64::MAX)),
+            Arc::new(DownUntil(u64::MAX)),
+        ];
+        let mut c = Cluster::with_fault_planes(
+            3,
+            32,
+            NodeConfig {
+                flush: FlushPolicy::small(10_000),
+                ..NodeConfig::default()
+            },
+            ReplicationConfig {
+                rf: 3,
+                read_consistency: Consistency::Quorum,
+                write_consistency: Consistency::Quorum,
+            },
+            ResilienceConfig::default(),
+            planes,
+        );
+        let mut saw_quorum_lost = false;
+        for k in 0..10u64 {
+            match c.put(k) {
+                Err(ClusterError::QuorumLost { need, got }) => {
+                    assert_eq!(need, 2);
+                    assert_eq!(got, 1);
+                    saw_quorum_lost = true;
+                }
+                other => panic!("expected QuorumLost, got {other:?}"),
+            }
+        }
+        assert!(saw_quorum_lost);
+        assert!(c.stats.quorum_losses >= 10);
+        match c.get(0) {
+            Err(ClusterError::QuorumLost { need: 2, got: 1 }) => {}
+            other => panic!("expected read QuorumLost, got {other:?}"),
         }
     }
 }

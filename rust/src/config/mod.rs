@@ -17,6 +17,7 @@ pub mod parser;
 
 pub use parser::{ConfigError, ConfigTree, Value};
 
+use crate::cluster::{Consistency, ReplicationConfig, ResilienceConfig};
 use crate::filter::{FilterBackend, FilterBuilder, Mode};
 use crate::pipeline::PoolConfig;
 use crate::store::{FlushPolicy, FsyncPolicy, NodeConfig};
@@ -32,6 +33,12 @@ pub struct OcfFileConfig {
     pub nodes: usize,
     pub vnodes: usize,
     pub rf: usize,
+    /// Read/write consistency levels (`one` | `quorum` | `all`).
+    pub read_consistency: Consistency,
+    pub write_consistency: Consistency,
+    /// Replica fault handling: retry budget, op timeout, circuit
+    /// breaker thresholds, hinted-handoff capacity.
+    pub resilience: ResilienceConfig,
     /// Pipeline shape.
     pub batch_size: usize,
     pub queue_depth: usize,
@@ -51,6 +58,9 @@ impl Default for OcfFileConfig {
             nodes: 3,
             vnodes: 64,
             rf: 1,
+            read_consistency: Consistency::One,
+            write_consistency: Consistency::Quorum,
+            resilience: ResilienceConfig::default(),
             batch_size: 1024,
             queue_depth: 64,
             workers: 0,
@@ -205,6 +215,68 @@ impl OcfFileConfig {
         if let Some(v) = tree.get_int("cluster", "rf")? {
             cfg.rf = v as usize;
         }
+        if let Some(s) = tree.get_str("cluster", "read_consistency")? {
+            cfg.read_consistency = Consistency::parse(&s).ok_or_else(|| {
+                ConfigError::Invalid(format!(
+                    "cluster.read_consistency must be one|quorum|all, got '{s}'"
+                ))
+            })?;
+        }
+        if let Some(s) = tree.get_str("cluster", "write_consistency")? {
+            cfg.write_consistency = Consistency::parse(&s).ok_or_else(|| {
+                ConfigError::Invalid(format!(
+                    "cluster.write_consistency must be one|quorum|all, got '{s}'"
+                ))
+            })?;
+        }
+        if let Some(v) = tree.get_int("cluster", "retry_budget")? {
+            if !(0..=16).contains(&v) {
+                return Err(ConfigError::Invalid(format!(
+                    "cluster.retry_budget must be 0..=16, got {v}"
+                )));
+            }
+            cfg.resilience.retry_budget = v as u32;
+        }
+        if let Some(v) = tree.get_int("cluster", "timeout_us")? {
+            if v < 1 {
+                return Err(ConfigError::Invalid(format!(
+                    "cluster.timeout_us must be >= 1, got {v}"
+                )));
+            }
+            cfg.resilience.timeout_us = v as u64;
+        }
+        if let Some(v) = tree.get_int("cluster", "breaker_threshold")? {
+            if v < 1 {
+                return Err(ConfigError::Invalid(format!(
+                    "cluster.breaker_threshold must be >= 1, got {v}"
+                )));
+            }
+            cfg.resilience.breaker.threshold = v as u32;
+        }
+        if let Some(v) = tree.get_int("cluster", "breaker_cooldown")? {
+            if v < 1 {
+                return Err(ConfigError::Invalid(format!(
+                    "cluster.breaker_cooldown must be >= 1 op-tick, got {v}"
+                )));
+            }
+            cfg.resilience.breaker.cooldown = v as u64;
+        }
+        if let Some(v) = tree.get_int("cluster", "breaker_probes")? {
+            if v < 1 {
+                return Err(ConfigError::Invalid(format!(
+                    "cluster.breaker_probes must be >= 1, got {v}"
+                )));
+            }
+            cfg.resilience.breaker.probes = v as u32;
+        }
+        if let Some(v) = tree.get_int("cluster", "handoff_capacity")? {
+            if v < 1 {
+                return Err(ConfigError::Invalid(format!(
+                    "cluster.handoff_capacity must be >= 1, got {v}"
+                )));
+            }
+            cfg.resilience.handoff_capacity = v as usize;
+        }
 
         if let Some(v) = tree.get_int("pipeline", "batch_size")? {
             cfg.batch_size = v as usize;
@@ -262,6 +334,16 @@ impl OcfFileConfig {
             workers: self.workers,
             queue_depth: self.queue_depth,
             chunk: self.chunk_size,
+        }
+    }
+
+    /// Replication policy assembled from the `[cluster]` section
+    /// (`rf` / `read_consistency` / `write_consistency`).
+    pub fn replication(&self) -> ReplicationConfig {
+        ReplicationConfig {
+            rf: self.rf,
+            read_consistency: self.read_consistency,
+            write_consistency: self.write_consistency,
         }
     }
 }
@@ -465,6 +547,54 @@ batch_size = 4096
                 .unwrap();
         assert_eq!(cfg.nodes, 7);
         assert_eq!(cfg.filter.ocf.mode, Mode::Static);
+    }
+
+    #[test]
+    fn cluster_resilience_knobs_parse_and_validate() {
+        let text = r#"
+[cluster]
+nodes = 5
+rf = 3
+read_consistency = "quorum"
+write_consistency = "all"
+retry_budget = 5
+timeout_us = 750
+breaker_threshold = 4
+breaker_cooldown = 128
+breaker_probes = 3
+handoff_capacity = 512
+"#;
+        let cfg = OcfFileConfig::load(text, &[]).unwrap();
+        assert_eq!(cfg.read_consistency, Consistency::Quorum);
+        assert_eq!(cfg.write_consistency, Consistency::All);
+        assert_eq!(cfg.resilience.retry_budget, 5);
+        assert_eq!(cfg.resilience.timeout_us, 750);
+        assert_eq!(cfg.resilience.breaker.threshold, 4);
+        assert_eq!(cfg.resilience.breaker.cooldown, 128);
+        assert_eq!(cfg.resilience.breaker.probes, 3);
+        assert_eq!(cfg.resilience.handoff_capacity, 512);
+        let repl = cfg.replication();
+        assert_eq!(repl.rf, 3);
+        assert_eq!(repl.write_consistency.required(repl.rf), 3);
+
+        // defaults when the section is silent
+        let d = OcfFileConfig::load("", &[]).unwrap();
+        assert_eq!(d.read_consistency, Consistency::One);
+        assert_eq!(d.write_consistency, Consistency::Quorum);
+        assert_eq!(d.resilience.retry_budget, 3);
+
+        // range/spelling validation is loud
+        for bad in [
+            "[cluster]\nread_consistency = \"two\"\n",
+            "[cluster]\nretry_budget = 17\n",
+            "[cluster]\ntimeout_us = 0\n",
+            "[cluster]\nbreaker_threshold = 0\n",
+            "[cluster]\nbreaker_cooldown = 0\n",
+            "[cluster]\nbreaker_probes = 0\n",
+            "[cluster]\nhandoff_capacity = 0\n",
+        ] {
+            assert!(OcfFileConfig::load(bad, &[]).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! | E12 | SIMD probe kernels × load factor                  | [`kernel`] |
 //! | E13 | persistent tier: restart + mmap-vs-heap probes    | [`persist`] |
 //! | E14 | adaptive fingerprints: sustained FP rate vs skew  | [`adaptive`] |
+//! | E15 | chaos: availability & latency vs replica faults   | [`chaos`]  |
 //!
 //! Every driver takes a [`Scale`] so the same code serves quick checks
 //! (`--scale 0.01`), CI, and full paper-scale runs, and returns a
@@ -26,6 +27,7 @@ pub mod ablation;
 pub mod adaptive;
 pub mod burst;
 pub mod cartesian;
+pub mod chaos;
 pub mod fig2;
 pub mod fig3;
 pub mod kernel;
@@ -73,8 +75,9 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "kernel" => Ok(kernel::run(scale)),
             "persist" => Ok(persist::run(scale)),
             "adaptive" => Ok(adaptive::run(scale)),
+            "chaos" => Ok(chaos::run(scale)),
             other => Err(format!(
-                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool kernel persist adaptive all)"
+                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool kernel persist adaptive chaos all)"
             )),
         }
     };
@@ -95,6 +98,7 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "kernel",
             "persist",
             "adaptive",
+            "chaos",
         ] {
             out.push_str(&one(n)?);
             out.push('\n');

@@ -170,6 +170,10 @@ pub enum FilterError {
     Full { kicks: u32, occupancy: f64 },
     /// A resize was required but the policy refused (e.g. capacity cap).
     ResizeRefused(String),
+    /// The write was refused before reaching the filter: the owning
+    /// node is in degraded read-only mode (e.g. its WAL hit ENOSPC and
+    /// further acknowledgements would be losable).
+    Unavailable(String),
 }
 
 impl std::fmt::Display for FilterError {
@@ -180,6 +184,7 @@ impl std::fmt::Display for FilterError {
                 "filter full: {kicks} displacements exhausted at occupancy {occupancy:.3}"
             ),
             FilterError::ResizeRefused(msg) => write!(f, "resize refused: {msg}"),
+            FilterError::Unavailable(msg) => write!(f, "write unavailable: {msg}"),
         }
     }
 }

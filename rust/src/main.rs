@@ -2,7 +2,7 @@
 //! line-protocol membership server.
 //!
 //! ```text
-//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|pool|kernel|persist|all>
+//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|pool|kernel|persist|adaptive|chaos|all>
 //!         [--scale F]           # workload scale, 1.0 = paper scale
 //! ocf pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]
 //!              [--shards N]     # >1 = sharded concurrent filter front-end
@@ -565,13 +565,28 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
     };
     eprintln!(
         "ocf serve: node mode, persist_dir={dir} filter={} fp_feedback={} wal={} fsync={} \
-         (line protocol: put K | get K | del K | flush | compact | stats | quit)",
+         degraded={} (line protocol: put K | get K | del K | flush | compact | stats | quit)",
         cfg.filter.describe(),
         // the node read path reports ground-truth FPs to the filter;
         // adaptive backends remap on report, the rest no-op it
         if cfg.filter.describe().contains("adaptive") { "adaptive" } else { "no-op" },
         if node.wal().is_some() { "on" } else { "off" },
         cfg.node.wal.fsync.describe(),
+        // flips true (and writes start refusing, loudly) if a WAL
+        // append ever hits ENOSPC — read-only degraded mode
+        node.stats.degraded(),
+    );
+    eprintln!(
+        "ocf serve: cluster policy: read={} write={} retry_budget={} timeout_us={} \
+         breaker=threshold:{}/cooldown:{}/probes:{} handoff_capacity={}",
+        cfg.read_consistency.as_str(),
+        cfg.write_consistency.as_str(),
+        cfg.resilience.retry_budget,
+        cfg.resilience.timeout_us,
+        cfg.resilience.breaker.threshold,
+        cfg.resilience.breaker.cooldown,
+        cfg.resilience.breaker.probes,
+        cfg.resilience.handoff_capacity,
     );
     eprintln!(
         "ocf serve: recovery: sstables={} filters_recovered={} filters_rebuilt={} \
@@ -632,7 +647,7 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
                 "live_keys={} memtable={} sstables={} flushes={} compactions={} \
                  filters_recovered={} filters_rebuilt={} filter_recovery_rejected={} \
                  wal_appends={} wal_replayed={} wal_torn_tail={} wal_append_failed={} \
-                 io_retries={} fp_observed={} fp_remapped={} fp_suppressed={}",
+                 io_retries={} fp_observed={} fp_remapped={} fp_suppressed={} degraded={}",
                 node.live_keys(),
                 node.memtable_len(),
                 node.sstable_count(),
@@ -649,6 +664,7 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
                 node.stats.fp_observed(),
                 node.stats.fp_remapped(),
                 node.fp_suppressed(),
+                node.stats.degraded(),
             ),
             (Some("quit"), _) => break,
             _ => "err unknown-command".into(),

@@ -169,6 +169,12 @@ pub struct NodeStats {
     /// Transient I/O errors absorbed by bounded retry
     /// (`util::retry`) across the WAL and the frozen tier.
     io_retries: u64,
+    /// The node is in read-only degraded mode: a WAL append hit
+    /// ENOSPC, so further writes would be acknowledged without any
+    /// durability path to recover them. Writes are refused
+    /// ([`crate::filter::FilterError::Unavailable`]) until an operator
+    /// intervenes; reads keep serving.
+    degraded: bool,
 }
 
 impl NodeStats {
@@ -241,6 +247,11 @@ impl NodeStats {
     pub fn io_retries(&self) -> u64 {
         self.io_retries
     }
+
+    /// Read-only degraded mode (WAL out of disk space; writes refused).
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
 }
 
 impl Clone for NodeStats {
@@ -265,6 +276,7 @@ impl Clone for NodeStats {
             wal_replayed: self.wal_replayed,
             wal_torn_tail: self.wal_torn_tail,
             io_retries: self.io_retries,
+            degraded: self.degraded,
         }
     }
 }
@@ -296,6 +308,19 @@ pub struct StorageNode {
 /// Open the WAL, degrading loudly (not fatally) when the directory
 /// is unwritable: the node still serves, and `wal_append_failed`
 /// counts every acknowledgement whose durability promise was broken.
+/// Out-of-space detection across real errors (`raw_os_error` 28) and
+/// the injected kind [`super::io::FaultyIo`] produces.
+fn is_enospc(e: &std::io::Error) -> bool {
+    e.raw_os_error() == Some(28) || e.to_string().contains("ENOSPC")
+}
+
+/// The refusal every write path returns while degraded.
+fn degraded_refusal() -> crate::filter::FilterError {
+    crate::filter::FilterError::Unavailable(
+        "node is read-only degraded (WAL out of disk space)".to_string(),
+    )
+}
+
 fn open_wal(dir: &Path, io: Arc<dyn StoreIo>, policy: FsyncPolicy, first: u64) -> Option<Wal> {
     match Wal::open(dir, io, policy, first) {
         Ok(w) => Some(w),
@@ -596,6 +621,9 @@ impl StorageNode {
     }
 
     fn put_arc(&mut self, key: u64, value: Value) -> Result<(), crate::filter::FilterError> {
+        if self.stats.degraded {
+            return Err(degraded_refusal());
+        }
         self.stats.puts += 1;
         // WAL first: by the time the memtable (and the caller) sees
         // the write, it is as durable as the fsync policy promises.
@@ -628,6 +656,12 @@ impl StorageNode {
     /// SSTables), so a bloom-backed node still never deletes an absent
     /// key.
     pub fn delete(&mut self, key: u64) -> bool {
+        if self.stats.degraded {
+            // read-only mode: a delete is a write too — refusing it
+            // leaves the key verifiably live, so "nothing deleted" is
+            // the honest answer
+            return false;
+        }
         self.stats.deletes += 1;
         let exact = self.filter.contains_exact(key);
         let live = match exact {
@@ -766,6 +800,9 @@ impl StorageNode {
     /// batch sizes are bounded by the pipeline's `batch_size`, so the
     /// memtable overshoot is bounded too.
     pub fn put_batch(&mut self, keys: &[u64]) -> Vec<Result<(), crate::filter::FilterError>> {
+        if self.stats.degraded {
+            return keys.iter().map(|_| Err(degraded_refusal())).collect();
+        }
         self.stats.puts += keys.len() as u64;
         for &key in keys {
             let value = self.default_value.clone();
@@ -791,6 +828,16 @@ impl StorageNode {
         }
         self.maybe_flush();
         out
+    }
+
+    /// Batched deletes: the scalar verified-delete per key, positionally
+    /// aligned with `keys`. The win of the batched form lives a layer
+    /// up — `Cluster::delete_batch` groups a batch by replica node and
+    /// issues one call per node — while each key here still gets the
+    /// full verification + WAL + tombstone treatment (deletes cannot
+    /// skip per-key verification the way bulk-hashed inserts can).
+    pub fn delete_batch(&mut self, keys: &[u64]) -> Vec<bool> {
+        keys.iter().map(|&k| self.delete(k)).collect()
     }
 
     /// The post-filter read path: memtable, then SSTables newest→oldest
@@ -834,7 +881,20 @@ impl StorageNode {
             Ok(()) => self.stats.wal_appends += 1,
             Err(e) => {
                 self.stats.wal_append_failed += 1;
-                eprintln!("ocf: wal: append failed (durability degraded): {e}");
+                // Disk full is not transient churn: every further
+                // acknowledged write would be losable. Flip into
+                // read-only degraded mode — this op was already
+                // applied (its caller was promised), the next write
+                // is refused at the door.
+                if is_enospc(&e) && !self.stats.degraded {
+                    self.stats.degraded = true;
+                    eprintln!(
+                        "ocf: wal: append hit ENOSPC — node entering read-only \
+                         degraded mode (writes refused until space is freed): {e}"
+                    );
+                } else {
+                    eprintln!("ocf: wal: append failed (durability degraded): {e}");
+                }
             }
         }
         self.stats.io_retries += w.take_retries();
@@ -1735,5 +1795,65 @@ mod tests {
             n.delete(k);
         }
         assert_eq!(n.live_keys(), 50);
+    }
+
+    #[test]
+    fn delete_batch_matches_scalar_deletes() {
+        let mut batched = node();
+        let mut scalar = node();
+        for k in 0..300u64 {
+            batched.put(k).unwrap();
+            scalar.put(k).unwrap();
+        }
+        // mix of live, already-deleted, and never-present keys
+        let victims: Vec<u64> = (0..400u64).filter(|k| k % 3 == 0).collect();
+        let b = batched.delete_batch(&victims);
+        let s: Vec<bool> = victims.iter().map(|&k| scalar.delete(k)).collect();
+        assert_eq!(b, s);
+        assert_eq!(batched.live_keys(), scalar.live_keys());
+        assert_eq!(batched.stats.deletes, scalar.stats.deletes);
+    }
+
+    #[test]
+    fn enospc_flips_node_into_read_only_degraded_mode() {
+        use super::super::io::{FaultConfig, FaultyIo};
+        let dir = scratch("enospc");
+        let mut cfg = persistent_cfg(&dir);
+        cfg.io = Some(Arc::new(FaultyIo::new(FaultConfig {
+            // enough budget for the WAL header + a handful of appends
+            enospc_after_bytes: Some(512),
+            ..FaultConfig::default()
+        })));
+        let mut n = StorageNode::new(cfg);
+        // writes succeed until the disk "fills"
+        let mut accepted = 0u64;
+        for k in 0..200u64 {
+            match n.put(k) {
+                Ok(()) => accepted += 1,
+                Err(crate::filter::FilterError::Unavailable(_)) => break,
+                Err(e) => panic!("unexpected refusal: {e}"),
+            }
+        }
+        assert!(accepted > 0, "some writes must land before the disk fills");
+        assert!(accepted < 200, "the byte budget must eventually fire");
+        assert!(n.stats.degraded(), "ENOSPC must flip the degraded flag");
+        assert!(n.stats.wal_append_failed() > 0);
+        // the flip is sticky: every write path refuses at the door
+        assert!(matches!(
+            n.put(9999),
+            Err(crate::filter::FilterError::Unavailable(_))
+        ));
+        assert!(n
+            .put_batch(&[1_000, 1_001])
+            .iter()
+            .all(|r| matches!(r, Err(crate::filter::FilterError::Unavailable(_)))));
+        assert!(!n.delete(0), "read-only mode refuses deletes");
+        let puts_after = n.stats.puts;
+        let _ = n.put(10_000);
+        assert_eq!(n.stats.puts, puts_after, "refused writes are not counted");
+        // reads keep serving the pre-degradation state
+        assert!(n.get(0), "accepted writes stay readable");
+        assert!(!n.get(9999), "refused write never became visible");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,368 @@
+//! Chaos sweeping for the replication layer — the cluster-level
+//! counterpart of [`crate::testutil::crash`].
+//!
+//! The crash sweep proves the WAL's durability contract by enumerating
+//! every crash point; the chaos sweep proves the *router's* fault
+//! contract by enumerating seeded fault schedules: each node gets its
+//! own [`FaultSchedule`] (transient / latent / crashed windows over the
+//! op clock, recovered past a horizon), a scripted workload runs
+//! against the cluster, and the availability contract is asserted op
+//! by op against an acknowledged-state model:
+//!
+//! * **No lost acks**: a key whose put was acknowledged at the write
+//!   consistency level must never read `false` (quorum-lost reads are
+//!   typed errors, not answers, and are exempt).
+//! * **No resurrections**: a key whose delete was acknowledged must
+//!   never read `true` again.
+//! * **Convergence**: after the fault horizon, hint queues drain to
+//!   zero with nothing dropped, and every non-uncertain key is in the
+//!   model's state on *all* of its replicas.
+//! * **Full availability when healthy**: a zero-rate schedule must ack
+//!   every write and lose no quorum (the control arm).
+//!
+//! Ops that fail with [`ClusterError::QuorumLost`] mark their key
+//! *uncertain* (the write may have partially applied; its hints will
+//! replay later) — the model excludes them from the point asserts,
+//! exactly like the crash sweep's single in-flight uncertain op.
+//!
+//! Everything is a pure function of `(seed, ops, fault_rate)`: the
+//! workload, the schedules, the retry jitter, and the breaker cooldowns
+//! all derive from the seed and the op clock, so a failing schedule
+//! replays bit-identically (proptest P18 asserts this).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::cluster::{
+    Cluster, ClusterError, ClusterStats, Consistency, FaultPlane, FaultSchedule,
+    ReplicationConfig, ResilienceConfig,
+};
+use crate::cluster::health::BreakerConfig;
+use crate::store::{FlushPolicy, NodeConfig};
+use crate::util::{rng::GOLDEN_GAMMA, SplitMix64};
+
+/// What the acknowledged-state model knows about one key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Truth {
+    /// Last acknowledged write was a put: reads must say present.
+    Present,
+    /// Last acknowledged write was a delete (or the key was never
+    /// written): reads must say absent.
+    Absent,
+    /// A quorum-lost write may have partially applied; no point assert
+    /// holds until the next acknowledged write.
+    Uncertain,
+}
+
+/// The deterministic fingerprint of one schedule run — two runs with
+/// the same `(seed, ops, fault_rate)` must produce equal outcomes
+/// (proptest P18's chaos-determinism property).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosOutcome {
+    /// Full router counters, including `per_node_ops`.
+    pub stats: ClusterStats,
+    /// `live_keys` per node after the drain.
+    pub per_node_live: Vec<u64>,
+    /// Per-op answer codes: `0` absent, `1` present/acked, `2`
+    /// quorum lost.
+    pub answers: Vec<u8>,
+    pub writes_attempted: u64,
+    pub writes_acked: u64,
+    /// Clock advances the drain loop needed before hints hit zero.
+    pub drain_rounds: u64,
+    /// Synthetic latency absorbed from latent windows (µs).
+    pub synthetic_latency_us: u64,
+    /// Latent ops that exceeded the timeout.
+    pub timeouts: u64,
+}
+
+/// Aggregate counters over a multi-schedule sweep.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosReport {
+    pub schedules: u64,
+    pub ops: u64,
+    pub writes_attempted: u64,
+    pub writes_acked: u64,
+    pub quorum_losses: u64,
+    pub retries: u64,
+    pub breaker_trips: u64,
+    pub hints_queued: u64,
+    pub hints_replayed: u64,
+    pub hints_superseded: u64,
+    pub read_repairs: u64,
+    pub timeouts: u64,
+}
+
+/// Keys the scripted workload draws from — small enough that puts,
+/// deletes, and reads collide constantly.
+const KEY_SPACE: u64 = 512;
+
+/// The sweep's fixed policy: quorum reads *and* writes over rf=3, so
+/// R + W > RF and the no-lost-acks argument is airtight.
+fn sweep_replication() -> ReplicationConfig {
+    ReplicationConfig {
+        rf: 3,
+        read_consistency: Consistency::Quorum,
+        write_consistency: Consistency::Quorum,
+    }
+}
+
+/// Tight-but-realistic fault handling for sweep runs: a small retry
+/// budget, a breaker that trips fast and probes once, ample hint space.
+fn sweep_resilience() -> ResilienceConfig {
+    ResilienceConfig {
+        retry_budget: 2,
+        timeout_us: 1_000,
+        breaker: BreakerConfig {
+            threshold: 3,
+            cooldown: 48,
+            probes: 1,
+        },
+        handoff_capacity: 4_096,
+    }
+}
+
+/// Build the sweep cluster: `3 + seed % 3` nodes, each behind its own
+/// seeded fault schedule with fault density `fault_rate` over
+/// `[0, ops)` ticks and guaranteed recovery afterwards.
+fn sweep_cluster(seed: u64, ops: usize, fault_rate: f64) -> Cluster {
+    let n = 3 + (seed % 3) as usize;
+    let planes: Vec<Arc<dyn FaultPlane>> = (0..n)
+        .map(|node| {
+            let node_seed = seed ^ (node as u64 + 1).wrapping_mul(GOLDEN_GAMMA);
+            Arc::new(FaultSchedule::seeded(node_seed, fault_rate, ops as u64))
+                as Arc<dyn FaultPlane>
+        })
+        .collect();
+    Cluster::with_fault_planes(
+        n,
+        32,
+        NodeConfig {
+            flush: FlushPolicy::small(10_000),
+            ..NodeConfig::default()
+        },
+        sweep_replication(),
+        sweep_resilience(),
+        planes,
+    )
+}
+
+/// Run one seeded schedule: scripted workload, per-op contract asserts,
+/// recovery drain, final all-replica audit. Panics with the seed, rate,
+/// and op index on any violation; returns the run's deterministic
+/// fingerprint otherwise.
+pub fn run_one_schedule(seed: u64, ops: usize, fault_rate: f64) -> ChaosOutcome {
+    let mut cluster = sweep_cluster(seed, ops, fault_rate);
+    let mut model: BTreeMap<u64, Truth> = BTreeMap::new();
+    let mut rng = SplitMix64::new(seed.wrapping_mul(GOLDEN_GAMMA) ^ 0xc4a0_5eed);
+    let mut answers: Vec<u8> = Vec::with_capacity(ops);
+    let mut writes_attempted = 0u64;
+    let mut writes_acked = 0u64;
+    let ctx = |i: usize| format!("seed {seed:#x}, rate {fault_rate}, op {i}/{ops}");
+
+    for i in 0..ops {
+        let key = rng.next_below(KEY_SPACE);
+        let truth = model.get(&key).copied().unwrap_or(Truth::Absent);
+        // ~50% put / 20% delete / 30% get
+        match rng.next_below(10) {
+            0..=4 => {
+                writes_attempted += 1;
+                match cluster.put(key) {
+                    Ok(()) => {
+                        writes_acked += 1;
+                        model.insert(key, Truth::Present);
+                        answers.push(1);
+                    }
+                    Err(e) => {
+                        assert!(
+                            matches!(e, ClusterError::QuorumLost { .. }),
+                            "{}: put must fail typed, got {e}",
+                            ctx(i)
+                        );
+                        model.insert(key, Truth::Uncertain);
+                        answers.push(2);
+                    }
+                }
+            }
+            5..=6 => {
+                writes_attempted += 1;
+                match cluster.delete(key) {
+                    Ok(was) => {
+                        writes_acked += 1;
+                        if truth == Truth::Present {
+                            assert!(
+                                was,
+                                "{}: acked delete of a present key found nothing",
+                                ctx(i)
+                            );
+                        }
+                        model.insert(key, Truth::Absent);
+                        answers.push(u8::from(was));
+                    }
+                    Err(e) => {
+                        assert!(
+                            matches!(e, ClusterError::QuorumLost { .. }),
+                            "{}: delete must fail typed, got {e}",
+                            ctx(i)
+                        );
+                        model.insert(key, Truth::Uncertain);
+                        answers.push(2);
+                    }
+                }
+            }
+            _ => match cluster.get(key) {
+                Ok(hit) => {
+                    match truth {
+                        Truth::Present => assert!(
+                            hit,
+                            "{}: FALSE NEGATIVE — acked write of {key} read absent",
+                            ctx(i)
+                        ),
+                        Truth::Absent => assert!(
+                            !hit,
+                            "{}: RESURRECTION — deleted key {key} read present",
+                            ctx(i)
+                        ),
+                        Truth::Uncertain => {}
+                    }
+                    answers.push(u8::from(hit));
+                }
+                Err(e) => {
+                    assert!(
+                        matches!(e, ClusterError::QuorumLost { .. }),
+                        "{}: get must fail typed, got {e}",
+                        ctx(i)
+                    );
+                    answers.push(2);
+                }
+            },
+        }
+    }
+
+    // Recovery: the clock is at the fault horizon, so every plane is
+    // permanently healthy — hint queues must drain completely once the
+    // breakers' cooldowns elapse.
+    let cooldown = cluster.resilience().breaker.cooldown;
+    let mut drain_rounds = 0u64;
+    while cluster.replay_hints() > 0 {
+        drain_rounds += 1;
+        assert!(
+            drain_rounds < 64,
+            "seed {seed:#x}, rate {fault_rate}: hints refuse to drain \
+             ({} pending after {drain_rounds} rounds)",
+            cluster.hints_pending()
+        );
+        cluster.advance_clock(cooldown + 1);
+    }
+    assert_eq!(
+        cluster.stats.hints_dropped, 0,
+        "seed {seed:#x}, rate {fault_rate}: dropped hints void the contract"
+    );
+
+    // Converged audit: every non-uncertain key is in its modelled state
+    // on every one of its replicas.
+    let rf = cluster.replication().rf;
+    for (&key, &truth) in &model {
+        let expect = match truth {
+            Truth::Present => true,
+            Truth::Absent => false,
+            Truth::Uncertain => continue,
+        };
+        for n in cluster.ring().replicas(key, rf) {
+            assert_eq!(
+                cluster.node(n).get(key),
+                expect,
+                "seed {seed:#x}, rate {fault_rate}: replica {n} diverged on \
+                 key {key} (model {truth:?}) after drain"
+            );
+        }
+    }
+
+    let per_node_live = (0..cluster.node_count())
+        .map(|n| cluster.node(n).live_keys() as u64)
+        .collect();
+    ChaosOutcome {
+        synthetic_latency_us: cluster.synthetic_latency_us(),
+        timeouts: cluster.timeouts(),
+        stats: cluster.stats.clone(),
+        per_node_live,
+        answers,
+        writes_attempted,
+        writes_acked,
+        drain_rounds,
+    }
+}
+
+/// Fault densities a sweep cycles through; the 0.0 arm is the control
+/// (full availability required).
+pub const SWEEP_RATES: [f64; 4] = [0.0, 0.05, 0.15, 0.3];
+
+/// Sweep `schedules` seeded runs of `ops` ops each, cycling over
+/// [`SWEEP_RATES`]; asserts the contract inside every run plus full
+/// availability on the control arms, and returns aggregate counters.
+pub fn chaos_sweep(schedules: usize, ops: usize) -> ChaosReport {
+    let mut report = ChaosReport::default();
+    for i in 0..schedules {
+        let rate = SWEEP_RATES[i % SWEEP_RATES.len()];
+        let seed = 0xc4a0_5000 + i as u64;
+        let out = run_one_schedule(seed, ops, rate);
+        if rate == 0.0 {
+            assert_eq!(
+                out.writes_acked, out.writes_attempted,
+                "seed {seed:#x}: healthy control arm must ack every write"
+            );
+            assert_eq!(
+                out.stats.quorum_losses, 0,
+                "seed {seed:#x}: healthy control arm lost a quorum"
+            );
+        }
+        report.schedules += 1;
+        report.ops += out.answers.len() as u64;
+        report.writes_attempted += out.writes_attempted;
+        report.writes_acked += out.writes_acked;
+        report.quorum_losses += out.stats.quorum_losses;
+        report.retries += out.stats.retries;
+        report.breaker_trips += out.stats.breaker_trips;
+        report.hints_queued += out.stats.hints_queued;
+        report.hints_replayed += out.stats.hints_replayed;
+        report.hints_superseded += out.stats.hints_superseded;
+        report.read_repairs += out.stats.read_repairs;
+        report.timeouts += out.timeouts;
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_schedule_is_fully_available() {
+        let out = run_one_schedule(0xc0_01, 400, 0.0);
+        assert_eq!(out.writes_acked, out.writes_attempted);
+        assert_eq!(out.stats.quorum_losses, 0);
+        assert_eq!(out.stats.hints_queued, 0);
+        assert_eq!(out.drain_rounds, 0);
+        assert!(!out.answers.contains(&2), "no quorum losses when healthy");
+    }
+
+    #[test]
+    fn chaotic_schedule_engages_the_fault_machinery() {
+        let out = run_one_schedule(0xc4_a05, 600, 0.3);
+        // a 30% fault density over 600 ticks must exercise *some* of
+        // the machinery — retries, hints, or breaker trips
+        assert!(
+            out.stats.retries + out.stats.hints_queued + out.stats.breaker_trips > 0,
+            "rate 0.3 engaged nothing: {:?}",
+            out.stats
+        );
+        assert_eq!(out.stats.hints_dropped, 0);
+    }
+
+    #[test]
+    fn same_seed_replays_bit_identically() {
+        let a = run_one_schedule(0x5eed, 300, 0.2);
+        let b = run_one_schedule(0x5eed, 300, 0.2);
+        assert_eq!(a, b, "chaos runs must be pure functions of the seed");
+    }
+}

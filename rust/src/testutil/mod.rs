@@ -5,10 +5,14 @@
 //! random cases from a seeded RNG, run the property, and on failure
 //! *minimize* the case with a user-supplied shrinker before reporting.
 //! Deterministic by construction (fixed seeds), so CI failures
-//! reproduce locally.
+//! reproduce locally. [`crash`] sweeps every WAL crash point and
+//! [`chaos`] sweeps seeded replica fault schedules — the durability
+//! and availability contracts, proven mechanically.
 
+pub mod chaos;
 pub mod crash;
 pub mod prop;
 
+pub use chaos::{chaos_sweep, run_one_schedule, ChaosOutcome, ChaosReport, Truth};
 pub use crash::{crash_sweep, standard_script, SweepReport};
 pub use prop::{prop_check, Gen};

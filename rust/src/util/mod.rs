@@ -5,7 +5,7 @@ pub mod retry;
 pub mod rng;
 
 pub use mmap::MmapRegion;
-pub use retry::{is_transient, retry_transient, Retried, MAX_RETRIES};
+pub use retry::{is_transient, retry_transient, retry_transient_with, Retried, MAX_RETRIES};
 pub use rng::{SplitMix64, Xoshiro256pp};
 
 /// FNV-1a 64-bit checksum — the integrity check of the frozen-filter

@@ -54,21 +54,48 @@ pub fn is_transient(kind: io::ErrorKind) -> bool {
 /// Non-transient errors and exhaustion both surface as the final
 /// `Err`; the retry count is reported either way.
 pub fn retry_transient<T>(mut op: impl FnMut() -> io::Result<T>) -> Retried<T> {
+    retry_transient_with(MAX_RETRIES, 0, |_| op())
+}
+
+/// [`retry_transient`] with a caller-chosen budget and optional seeded
+/// jitter — the shape the cluster router needs, where the budget is a
+/// `[cluster] retry_budget` config key rather than a compile-time
+/// constant and many replicas may be retrying the same fault window.
+///
+/// `op` receives the attempt index (0 = first try), so callers can
+/// thread it into per-attempt context. A non-zero `jitter_seed` adds a
+/// deterministic pseudo-random 0..=50% to each backoff step so replicas
+/// don't sleep in lockstep (the classic retry thundering herd); the
+/// jitter only perturbs *sleep durations*, never control flow, so
+/// seeded runs stay bit-reproducible.
+pub fn retry_transient_with<T>(
+    budget: u32,
+    jitter_seed: u64,
+    mut op: impl FnMut(u32) -> io::Result<T>,
+) -> Retried<T> {
     let mut retries = 0u32;
     loop {
-        match op() {
+        match op(retries) {
             Ok(v) => {
                 return Retried {
                     result: Ok(v),
                     retries,
                 }
             }
-            Err(e) if is_transient(e.kind()) && retries < MAX_RETRIES => {
+            Err(e) if is_transient(e.kind()) && retries < budget => {
                 // 10 µs · 4^n: long enough to let a signal storm or a
                 // momentarily full buffer drain, short enough to be
-                // invisible on the write path.
-                let backoff = Duration::from_micros(10u64 << (2 * retries));
-                std::thread::sleep(backoff);
+                // invisible on the write path. The exponent is capped
+                // so a generous configured budget can't sleep seconds.
+                let base = 10u64 << (2 * retries.min(4));
+                let jitter = if jitter_seed == 0 {
+                    0
+                } else {
+                    let mut rng =
+                        crate::util::rng::SplitMix64::new(jitter_seed ^ u64::from(retries));
+                    rng.next_below(base / 2 + 1)
+                };
+                std::thread::sleep(Duration::from_micros(base + jitter));
                 retries += 1;
             }
             Err(e) => {
@@ -135,6 +162,27 @@ mod tests {
             r.result.unwrap_err().kind(),
             io::ErrorKind::PermissionDenied
         );
+    }
+
+    #[test]
+    fn configurable_budget_and_attempt_indices() {
+        let mut seen = Vec::new();
+        let r = retry_transient_with(2, 0x5EED, |attempt| -> io::Result<()> {
+            seen.push(attempt);
+            Err(io::Error::new(io::ErrorKind::Interrupted, "EINTR"))
+        });
+        assert_eq!(seen, vec![0, 1, 2], "1 initial + 2 retries, indexed");
+        assert_eq!(r.retries, 2);
+        assert!(r.result.is_err());
+
+        // budget 0 = fail-fast on the first transient
+        let mut calls = 0;
+        let r = retry_transient_with(0, 0, |_| -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::WouldBlock, "EAGAIN"))
+        });
+        assert_eq!(calls, 1);
+        assert_eq!(r.retries, 0);
     }
 
     #[test]

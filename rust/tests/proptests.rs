@@ -56,8 +56,16 @@
 //!      paths, remapped keys stay delete-able, and the sidecar drains
 //!      to zero once the filter empties — for both bucket tables and
 //!      the full selector/extension-width grid.
+//!  P18 the chaos layer is deterministic and the ring rebalance is
+//!      minimal: (a) a chaos-sweep run is a pure function of its seed —
+//!      same `(seed, ops, fault_rate)` reproduces bit-identical answers
+//!      and counters; (b) adding one node to an `n`-node ring moves
+//!      only the keys the new node captures (primary changes iff the
+//!      new node is the new primary, replica-set growth ⊆ {new node},
+//!      at most one old replica displaced per key), with the moved
+//!      fraction near 1/(n+1) — and node removal is the exact mirror.
 
-use ocf::cluster::{Cluster, ReplicationConfig};
+use ocf::cluster::{Cluster, HashRing, ReplicationConfig};
 use ocf::filter::{
     AdaptiveConfig, AdaptiveOcf, BatchedFilter, BucketTable, CuckooFilter, CuckooParams,
     FilterBuilder, FilterError, FilterFeedback, FlatTable, MembershipFilter, Mode, MutexFilter,
@@ -67,6 +75,7 @@ use ocf::pipeline::{BatchPolicy, IngestPipeline, PoolConfig};
 use ocf::runtime::HashExecutor;
 use ocf::store::{FlushPolicy, NodeConfig, StorageNode};
 use ocf::testutil::prop::{prop_check, Gen};
+use ocf::testutil::run_one_schedule;
 use ocf::workload::Op;
 use std::collections::HashSet;
 
@@ -512,7 +521,7 @@ fn p8_replicated_writes_readable() {
                     return false;
                 }
             }
-            keys.iter().all(|&k| c.get(k))
+            keys.iter().all(|&k| c.get(k).unwrap_or(false))
         },
     );
 }
@@ -1499,5 +1508,85 @@ fn p17_adaptive_never_costs_a_false_negative() {
         20,
         gen_adapt_case,
         p17_check::<PackedTable>,
+    );
+}
+
+#[test]
+fn p18_chaos_runs_are_pure_functions_of_the_seed() {
+    prop_check(
+        "chaos-determinism",
+        6,
+        |g| {
+            let seed = g.u64();
+            let ops = g.usize_in(100, 300);
+            let rate = *g.choose(&[0.0, 0.1, 0.25]);
+            (seed, ops, rate)
+        },
+        |&(seed, ops, rate)| {
+            let a = run_one_schedule(seed, ops, rate);
+            let b = run_one_schedule(seed, ops, rate);
+            // bit-identical fingerprints: answers, counters, per-node
+            // state, drain behaviour — the whole ChaosOutcome
+            a == b
+        },
+    );
+}
+
+#[test]
+fn p18_ring_rebalance_moves_only_the_new_nodes_keys() {
+    const SAMPLE: u64 = 2000;
+    prop_check(
+        "ring-minimal-movement",
+        12,
+        |g| {
+            let n = g.usize_in(2, 8);
+            let vnodes = *g.choose(&[32usize, 64]);
+            let rf = g.usize_in(1, 3);
+            (n, vnodes, rf)
+        },
+        |&(n, vnodes, rf)| {
+            let small = HashRing::new(n, vnodes);
+            let big = HashRing::new(n + 1, vnodes); // adds node id `n`
+            let mut moved = 0u64;
+            for k in 0..SAMPLE {
+                let old_p = small.primary(k);
+                let new_p = big.primary(k);
+                // primary changes iff the added node captured the key
+                // (the same statement read right-to-left is the
+                // removal direction: dropping node `n` from `big`
+                // yields `small` exactly)
+                if (old_p != new_p) != (new_p == n) {
+                    return false;
+                }
+                if old_p != new_p {
+                    moved += 1;
+                }
+                let old_r = small.replicas(k, rf);
+                let new_r = big.replicas(k, rf);
+                // replica sets keep their size and stay distinct
+                if old_r.len() != rf.min(n) || new_r.len() != rf.min(n + 1) {
+                    return false;
+                }
+                // growth is confined to the added node...
+                if new_r.iter().any(|x| !old_r.contains(x) && *x != n) {
+                    return false;
+                }
+                // ...which displaces at most one old replica
+                if old_r.iter().filter(|x| !new_r.contains(x)).count() > 1 {
+                    return false;
+                }
+                // removal mirror: every big-ring replica other than
+                // the (to-be-removed) node `n` survives into the
+                // small ring
+                if new_r.iter().any(|x| *x != n && !old_r.contains(x)) {
+                    return false;
+                }
+            }
+            // the new node owns ~1/(n+1) of the space; movement beyond
+            // 3x that (plus slack for small samples) means keys moved
+            // between *surviving* nodes
+            let bound = 3.0 / (n as f64 + 1.0) + 0.05;
+            (moved as f64 / SAMPLE as f64) < bound
+        },
     );
 }

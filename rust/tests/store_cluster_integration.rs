@@ -66,19 +66,19 @@ fn cluster_consistency_under_burst_workload() {
             }
             Op::Lookup(k) => {
                 if model.contains(&k) {
-                    assert!(cluster.get(k), "lost {k}");
+                    assert!(cluster.get(k).unwrap(), "lost {k}");
                 }
             }
             Op::Delete(k) => {
                 let was = model.remove(&k);
-                let got = cluster.delete(k);
+                let got = cluster.delete(k).unwrap();
                 assert_eq!(got, was, "delete({k}) disagreement");
             }
         }
     }
     // audit a sample of live keys
     for &k in model.iter().take(2_000) {
-        assert!(cluster.get(k), "retention of {k}");
+        assert!(cluster.get(k).unwrap(), "retention of {k}");
     }
 }
 

@@ -99,6 +99,24 @@ impl HintQueue {
         before - self.hints.len()
     }
 
+    /// Pending hints in FIFO order. The membership transfer's commit
+    /// gate scans this: a range may only hand off once its gainers
+    /// hold every dual-applied write, i.e. no hint for a key in the
+    /// range is still pending against them.
+    pub fn iter(&self) -> impl Iterator<Item = &Hint> {
+        self.hints.iter()
+    }
+
+    /// Drop every pending hint (the target node left the ring; its
+    /// acked state is owned by the new replica set). Returns how many
+    /// were retired — the caller counts them so the hint conservation
+    /// law stays exact.
+    pub fn retire_all(&mut self) -> usize {
+        let n = self.hints.len();
+        self.hints.clear();
+        n
+    }
+
     /// The newest pending hint for `key`, if any — the read-repair
     /// truth source on replica disagreement.
     pub fn latest_for(&self, key: u64) -> Option<Hint> {

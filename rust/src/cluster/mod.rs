@@ -24,6 +24,7 @@ pub mod proxy;
 pub mod replication;
 pub mod ring;
 pub mod router;
+pub mod transfer;
 
 pub use coordinator::{CartesianQuery, Coordinator, QueryStats};
 pub use handoff::{Hint, HintOp, HintQueue};
@@ -32,3 +33,4 @@ pub use proxy::{FaultPlane, FaultSchedule, OpCtx, RealProxy, ReplicaError, Repli
 pub use replication::{Consistency, ReplicationConfig};
 pub use ring::HashRing;
 pub use router::{Cluster, ClusterError, ClusterStats, ResilienceConfig, RouterStats};
+pub use transfer::{MembershipChange, MembershipError, RangeState, RangeTransfer, RingTransition};

@@ -285,6 +285,43 @@ impl ReplicaProxy {
         Ok(self.node.delete(key))
     }
 
+    /// Value write — the receiving side of a membership range stream.
+    /// Crosses the fault plane like every replica op, so chaos
+    /// schedules can kill the *joiner* mid-transfer.
+    pub fn put_value(&mut self, ctx: &OpCtx, key: u64, value: &[u8]) -> Result<(), ReplicaError> {
+        self.gate(ctx)?;
+        self.node.put_value(key, value).map_err(ReplicaError::Node)
+    }
+
+    /// Value read — the donor side of a membership range stream.
+    /// `Ok(None)` means the key is no longer live on this replica.
+    pub fn get_value(
+        &mut self,
+        ctx: &OpCtx,
+        key: u64,
+    ) -> Result<Option<crate::store::Value>, ReplicaError> {
+        self.gate(ctx)?;
+        Ok(self.node.get_value(key))
+    }
+
+    /// One bounded page of live keys in the token arc `(lo, hi]`,
+    /// ascending, strictly after `after` — the donor enumeration step
+    /// of the membership transfer. Going through the plane (rather
+    /// than the management path) is the point: a crashed donor stalls
+    /// the stream exactly like a crashed RPC peer would, and the
+    /// transfer must recover when the donor does.
+    pub fn stream_page(
+        &mut self,
+        ctx: &OpCtx,
+        lo: u64,
+        hi: u64,
+        after: Option<u64>,
+        limit: usize,
+    ) -> Result<Vec<u64>, ReplicaError> {
+        self.gate(ctx)?;
+        Ok(self.node.live_keys_in_arc(lo, hi, after, limit))
+    }
+
     pub fn delete_batch(&mut self, ctx: &OpCtx, keys: &[u64]) -> Result<Vec<bool>, ReplicaError> {
         self.gate(ctx)?;
         Ok(self.node.delete_batch(keys))

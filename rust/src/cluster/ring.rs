@@ -4,34 +4,107 @@
 //! `vnodes` tokens placed by hashing `(node_id, vnode_index)`; a key
 //! routes to the first token clockwise from `mix64(key)`, and the next
 //! RF-1 *distinct* nodes clockwise are its replicas.
+//!
+//! Node ids are **stable**: the ring tracks an explicit member list,
+//! so [`HashRing::add_node`] / [`HashRing::remove_node`] change which
+//! ids own tokens without renumbering anyone — the property the live
+//! membership protocol (`transfer.rs`) depends on, and the one P18
+//! pins: growing `new(n)` by `add_node(n)` is bit-identical to a fresh
+//! `new(n + 1)` build, because every token is a pure function of
+//! `(node_id, vnode_index)`.
 
 use crate::filter::fingerprint::mix64;
 
+/// Token placement for one `(node, vnode)` pair. The XOR constant
+/// perturbs the *combined* id — it used to sit inside the `|` due to
+/// operator precedence (`^` binds tighter), silently perturbing only
+/// the vnode half; `ring_tokens_pin_exact_layout` pins the intended
+/// layout so it cannot regress either way again.
+fn token_for(node: usize, vnode: usize) -> u64 {
+    mix64((((node as u64) << 32) | vnode as u64) ^ 0x51A7_ED00)
+}
+
 /// Token ring over physical node ids.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HashRing {
     /// (token, node_id), sorted by token.
     tokens: Vec<(u64, usize)>,
-    nodes: usize,
+    /// Active node ids, sorted. Ids are stable across joins/leaves;
+    /// they index the cluster's proxy/hint/health tables directly.
+    members: Vec<usize>,
+    vnodes: usize,
 }
 
 impl HashRing {
     pub fn new(nodes: usize, vnodes: usize) -> Self {
-        assert!(nodes > 0 && vnodes > 0);
-        let mut tokens = Vec::with_capacity(nodes * vnodes);
-        for n in 0..nodes {
+        let members: Vec<usize> = (0..nodes).collect();
+        Self::with_members(&members, vnodes)
+    }
+
+    /// Build a ring over an explicit member-id set (stable-id joins and
+    /// leaves rebuild through here, so incremental and fresh builds
+    /// can never drift apart).
+    pub fn with_members(members: &[usize], vnodes: usize) -> Self {
+        assert!(!members.is_empty() && vnodes > 0);
+        let mut members = members.to_vec();
+        members.sort_unstable();
+        members.dedup();
+        let mut tokens = Vec::with_capacity(members.len() * vnodes);
+        for &n in &members {
             for v in 0..vnodes {
-                let token = mix64(((n as u64) << 32) | v as u64 ^ 0x51A7_ED00);
-                tokens.push((token, n));
+                tokens.push((token_for(n, v), n));
             }
         }
         tokens.sort_unstable();
+        // token collisions across nodes resolve to the smallest node id
+        // (sort order of the (token, id) pair), deterministically
         tokens.dedup_by_key(|t| t.0);
-        Self { tokens, nodes }
+        Self {
+            tokens,
+            members,
+            vnodes,
+        }
+    }
+
+    /// Add a member id to the ring. Other nodes' tokens are untouched,
+    /// so only keys the new node captures move (P18).
+    pub fn add_node(&mut self, id: usize) {
+        assert!(
+            !self.members.contains(&id),
+            "node {id} is already a ring member"
+        );
+        let mut members = self.members.clone();
+        members.push(id);
+        *self = Self::with_members(&members, self.vnodes);
+    }
+
+    /// Remove a member id from the ring; its arcs fall to the next
+    /// node clockwise.
+    pub fn remove_node(&mut self, id: usize) {
+        assert!(
+            self.members.contains(&id),
+            "node {id} is not a ring member"
+        );
+        assert!(self.members.len() > 1, "cannot empty the ring");
+        let members: Vec<usize> = self.members.iter().copied().filter(|&m| m != id).collect();
+        *self = Self::with_members(&members, self.vnodes);
     }
 
     pub fn node_count(&self) -> usize {
-        self.nodes
+        self.members.len()
+    }
+
+    /// Active member ids, sorted.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        self.members.contains(&id)
+    }
+
+    pub fn vnodes(&self) -> usize {
+        self.vnodes
     }
 
     /// The sorted `(token, node_id)` table — rebalance diagnostics
@@ -42,14 +115,22 @@ impl HashRing {
 
     /// Primary owner of a key.
     pub fn primary(&self, key: u64) -> usize {
-        self.walk(key).next().unwrap()
+        self.walk(mix64(key)).next().unwrap()
     }
 
     /// The first `rf` *distinct* nodes clockwise from the key's token.
     pub fn replicas(&self, key: u64, rf: usize) -> Vec<usize> {
-        let rf = rf.min(self.nodes);
+        self.replicas_at(mix64(key), rf)
+    }
+
+    /// Replica walk from a raw ring position (already-mixed token).
+    /// The membership planner uses this to compute the replica set of
+    /// a whole token arc at once: every key hashing into the arc walks
+    /// from the same ring slot, so one call covers the arc.
+    pub fn replicas_at(&self, token: u64, rf: usize) -> Vec<usize> {
+        let rf = rf.min(self.members.len());
         let mut out = Vec::with_capacity(rf);
-        for n in self.walk(key) {
+        for n in self.walk(token) {
             if !out.contains(&n) {
                 out.push(n);
                 if out.len() == rf {
@@ -60,23 +141,23 @@ impl HashRing {
         out
     }
 
-    /// Clockwise node walk starting at the key's token.
-    fn walk(&self, key: u64) -> impl Iterator<Item = usize> + '_ {
-        let h = mix64(key);
-        let start = self.tokens.partition_point(|&(t, _)| t < h);
+    /// Clockwise node walk starting at ring position `token`.
+    fn walk(&self, token: u64) -> impl Iterator<Item = usize> + '_ {
+        let start = self.tokens.partition_point(|&(t, _)| t < token);
         (0..self.tokens.len()).map(move |i| self.tokens[(start + i) % self.tokens.len()].1)
     }
 
-    /// Fraction of a large key sample owned by each node (balance
-    /// diagnostic).
+    /// Fraction of a large key sample owned by each *member* (balance
+    /// diagnostic), in member order.
     pub fn ownership(&self, sample: u64) -> Vec<f64> {
-        let mut counts = vec![0u64; self.nodes];
+        let max_id = *self.members.last().unwrap();
+        let mut counts = vec![0u64; max_id + 1];
         for k in 0..sample {
             counts[self.primary(k)] += 1;
         }
-        counts
-            .into_iter()
-            .map(|c| c as f64 / sample as f64)
+        self.members
+            .iter()
+            .map(|&n| counts[n] as f64 / sample as f64)
             .collect()
     }
 }
@@ -143,5 +224,65 @@ mod tests {
             spread(&fine) < spread(&coarse),
             "fine {fine:?} vs coarse {coarse:?}"
         );
+    }
+
+    /// Pins the token formula: the XOR constant perturbs the combined
+    /// `(node << 32) | vnode` id, not just the vnode half, and the same
+    /// inputs always produce the same sorted, collision-deduped layout.
+    #[test]
+    fn ring_tokens_pin_exact_layout() {
+        let ring = HashRing::new(3, 16);
+        let mut expect: Vec<(u64, usize)> = Vec::new();
+        for n in 0..3usize {
+            for v in 0..16usize {
+                expect.push((
+                    mix64((((n as u64) << 32) | v as u64) ^ 0x51A7_ED00),
+                    n,
+                ));
+            }
+        }
+        expect.sort_unstable();
+        expect.dedup_by_key(|t| t.0);
+        assert_eq!(ring.tokens(), expect.as_slice());
+        // determinism: two builds are bit-identical
+        assert_eq!(HashRing::new(3, 16), HashRing::new(3, 16));
+        // dedup leaves strictly increasing tokens
+        for w in ring.tokens().windows(2) {
+            assert!(w[0].0 < w[1].0, "tokens must be strictly increasing");
+        }
+    }
+
+    #[test]
+    fn incremental_add_matches_fresh_build() {
+        for n in 1..6usize {
+            let mut grown = HashRing::new(n, 32);
+            grown.add_node(n);
+            assert_eq!(grown, HashRing::new(n + 1, 32), "grow {n} -> {}", n + 1);
+        }
+    }
+
+    #[test]
+    fn remove_undoes_add_and_keeps_ids_stable() {
+        let fresh = HashRing::new(4, 32);
+        let mut ring = fresh.clone();
+        ring.add_node(4);
+        assert!(ring.contains(4));
+        ring.remove_node(4);
+        assert_eq!(ring, fresh);
+        // removing a middle id keeps the survivors' ids (and tokens)
+        let mut holey = HashRing::new(4, 32);
+        holey.remove_node(1);
+        assert_eq!(holey.members(), &[0, 2, 3]);
+        for &(_, n) in holey.tokens() {
+            assert_ne!(n, 1, "removed node must own no tokens");
+        }
+        // survivors' tokens are exactly their old tokens
+        let survivor_tokens: Vec<(u64, usize)> = fresh
+            .tokens()
+            .iter()
+            .copied()
+            .filter(|&(_, n)| n != 1)
+            .collect();
+        assert_eq!(holey.tokens(), survivor_tokens.as_slice());
     }
 }

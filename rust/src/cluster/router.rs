@@ -35,6 +35,12 @@
 //! node filters are independently seeded, so an FP on one replica says
 //! nothing about the others and the router adds no extra mechanism.
 //!
+//! - **Live membership** (`transfer.rs`): [`Cluster::add_node`] /
+//!   [`Cluster::remove_node`] stream captured ranges to the new owners
+//!   through the same proxy seam, dual-applying concurrent writes and
+//!   flipping reads per range only once the commit gate proves the
+//!   gainers hold every acked write. See [`Cluster::pump_transfers`].
+//!
 //! Time is the deterministic **op clock**: each client op advances it
 //! by one tick, fault schedules and breaker cooldowns are expressed in
 //! ticks, and nothing reads wall time — the chaos sweep
@@ -49,6 +55,8 @@ use super::health::{BreakerConfig, BreakerEvent, NodeHealth};
 use super::proxy::{FaultPlane, OpCtx, RealProxy, ReplicaError, ReplicaProxy};
 use super::replication::ReplicationConfig;
 use super::ring::HashRing;
+use super::transfer::{MembershipChange, MembershipError, RangeState, RingTransition};
+use crate::filter::fingerprint::mix64;
 use crate::filter::FilterError;
 use crate::store::{NodeConfig, StorageNode};
 use crate::util::{retry_transient_with, rng::GOLDEN_GAMMA};
@@ -90,6 +98,9 @@ pub struct ResilienceConfig {
     pub breaker: BreakerConfig,
     /// Max queued hints per target node (`handoff_capacity`).
     pub handoff_capacity: usize,
+    /// Keys streamed per membership-transfer pump (`transfer_batch`) —
+    /// bounds how much range-handoff work piggybacks on one client op.
+    pub transfer_batch: usize,
 }
 
 impl Default for ResilienceConfig {
@@ -99,6 +110,7 @@ impl Default for ResilienceConfig {
             timeout_us: 2_000,
             breaker: BreakerConfig::default(),
             handoff_capacity: 4_096,
+            transfer_batch: 64,
         }
     }
 }
@@ -129,6 +141,28 @@ pub struct ClusterStats {
     /// Ops that failed with [`ClusterError::QuorumLost`] or a replica
     /// refusal.
     pub quorum_losses: u64,
+    /// Membership transitions begun (`add_node` / `remove_node`).
+    pub transfers_started: u64,
+    /// Membership transitions fully handed off.
+    pub transfers_completed: u64,
+    /// Transfer pumps that hit an unreachable donor or gainer and will
+    /// retry the same position later.
+    pub transfers_retried: u64,
+    /// Distinct keys enumerated from donors during transfers (the
+    /// conservation-law numerator).
+    pub keys_captured: u64,
+    /// Captured keys that reached a gainer via the stream.
+    pub keys_streamed: u64,
+    /// Captured keys resolved by a newer direct write instead of a
+    /// stream copy. At completion
+    /// `keys_captured == keys_streamed + keys_superseded` — nothing is
+    /// silently dropped (proptest P19).
+    pub keys_superseded: u64,
+    /// Gauge: captured ranges not yet handed off.
+    pub ranges_pending: u64,
+    /// Hints retired because their target node left the ring (the new
+    /// owners hold the writes; the conservation law counts these).
+    pub hints_retired: u64,
 }
 
 /// Former name of [`ClusterStats`], kept for call sites that predate
@@ -148,6 +182,15 @@ pub struct Cluster {
     /// Nodes whose breaker just closed; their hint queues replay at
     /// the end of the current client op (never recursively inside it).
     replay_due: Vec<usize>,
+    /// Config template new members are specialized from (node_id and
+    /// filter seed are derived per id, so ids stay stable forever).
+    template: NodeConfig,
+    /// Ids that left the ring. Slots are never reused: a retired id
+    /// keeps its proxy/health/hint entries (inert) so every other id
+    /// still indexes those tables directly.
+    retired: Vec<bool>,
+    /// The in-flight membership change, if any. One at a time.
+    transition: Option<RingTransition>,
     pub stats: ClusterStats,
 }
 
@@ -194,6 +237,9 @@ impl Cluster {
                 .collect(),
             clock: 0,
             replay_due: Vec::new(),
+            template,
+            retired: vec![false; n],
+            transition: None,
             stats: ClusterStats {
                 per_node_ops: vec![0; n],
                 ..ClusterStats::default()
@@ -244,6 +290,26 @@ impl Cluster {
     /// Total hints still queued across all nodes.
     pub fn hints_pending(&self) -> usize {
         self.hints.iter().map(|q| q.len()).sum()
+    }
+
+    /// Is a membership transition still streaming?
+    pub fn transfer_active(&self) -> bool {
+        self.transition.is_some()
+    }
+
+    /// The in-flight membership transition, if any.
+    pub fn transition(&self) -> Option<&RingTransition> {
+        self.transition.as_ref()
+    }
+
+    /// Captured ranges not yet handed off.
+    pub fn ranges_pending(&self) -> usize {
+        self.transition.as_ref().map_or(0, |t| t.pending())
+    }
+
+    /// Has node `i` left the ring? (Its id is never reused.)
+    pub fn is_retired(&self, i: usize) -> bool {
+        self.retired[i]
     }
 
     /// Synthetic latency absorbed from latent fault windows, summed
@@ -375,6 +441,338 @@ impl Cluster {
         self.hints_pending()
     }
 
+    /// Join a new node (production plane): allocate the next stable id,
+    /// plan the ring transition, and start streaming its captured
+    /// ranges. Reads keep routing to the old owners until each range's
+    /// commit gate proves the joiner holds every acked write.
+    pub fn add_node(&mut self) -> Result<usize, MembershipError> {
+        self.add_node_with_plane(Arc::new(RealProxy))
+    }
+
+    /// [`Cluster::add_node`] with an explicit fault plane — the chaos
+    /// harness uses this to kill the joiner mid-transfer.
+    pub fn add_node_with_plane(
+        &mut self,
+        plane: Arc<dyn FaultPlane>,
+    ) -> Result<usize, MembershipError> {
+        if self.transition.is_some() {
+            return Err(MembershipError::TransferInProgress);
+        }
+        let id = self.proxies.len();
+        let mut cfg = self.template.clone();
+        cfg.node_id = id as u64;
+        cfg.filter.ocf.seed = self.template.filter.ocf.seed ^ ((id as u64 + 1) << 17);
+        self.proxies
+            .push(ReplicaProxy::with_plane(StorageNode::new(cfg), plane));
+        self.health.push(NodeHealth::new(self.resilience.breaker));
+        self.hints
+            .push(HintQueue::new(self.resilience.handoff_capacity));
+        self.stats.per_node_ops.push(0);
+        self.retired.push(false);
+        let old = self.ring.clone();
+        let mut new = old.clone();
+        new.add_node(id);
+        self.begin_transition(MembershipChange::Join(id), old, new);
+        Ok(id)
+    }
+
+    /// Decommission node `id`: stream every range it serves to the
+    /// successors first, then drop it from the ring. The node keeps
+    /// serving reads (and taking writes) for its arcs until each one
+    /// commits — removal is the join protocol run in reverse, not a
+    /// crash.
+    pub fn remove_node(&mut self, id: usize) -> Result<(), MembershipError> {
+        if self.transition.is_some() {
+            return Err(MembershipError::TransferInProgress);
+        }
+        if id >= self.proxies.len() || self.retired[id] || !self.ring.contains(id) {
+            return Err(MembershipError::UnknownNode(id));
+        }
+        if self.ring.node_count() <= 1 {
+            return Err(MembershipError::LastNode);
+        }
+        let old = self.ring.clone();
+        let mut new = old.clone();
+        new.remove_node(id);
+        self.begin_transition(MembershipChange::Leave(id), old, new);
+        Ok(())
+    }
+
+    fn begin_transition(&mut self, change: MembershipChange, old: HashRing, new: HashRing) {
+        let tr = RingTransition::plan(change, old, new, self.repl.rf);
+        self.stats.transfers_started += 1;
+        self.stats.ranges_pending = tr.ranges.len() as u64;
+        let empty = tr.ranges.is_empty();
+        self.transition = Some(tr);
+        if empty {
+            // no arc gains a node (e.g. shrinking below RF): the
+            // remaining owners already hold every key — flip now
+            self.finish_transition();
+        }
+    }
+
+    /// Every range handed off: install the new ring. A leaver is
+    /// marked retired and its pending hints are retired with it (the
+    /// commit gates proved the new owners hold those writes).
+    fn finish_transition(&mut self) {
+        let Some(tr) = self.transition.take() else {
+            return;
+        };
+        self.ring = tr.new;
+        if let MembershipChange::Leave(id) = tr.change {
+            self.retired[id] = true;
+            let retired = self.hints[id].retire_all();
+            self.stats.hints_retired += retired as u64;
+        }
+        self.stats.transfers_completed += 1;
+        self.stats.ranges_pending = 0;
+    }
+
+    /// Replica set for a key, transfer-aware: a key in a captured
+    /// range routes to the old owners until its range commits, then to
+    /// the new set; un-captured arcs have identical replica walks in
+    /// both rings, so the current ring serves them.
+    fn replicas_for(&self, key: u64) -> Vec<usize> {
+        if let Some(tr) = &self.transition {
+            if let Some(r) = tr.range_for(mix64(key)) {
+                return if r.committed() {
+                    r.new_replicas.clone()
+                } else {
+                    r.old_replicas.clone()
+                };
+            }
+        }
+        self.ring.replicas(key, self.repl.rf)
+    }
+
+    /// While a key's range is still streaming, a client write must
+    /// reach the future owners too: apply it to every gainer (weight 0
+    /// — the old set carries the consistency accounting), record
+    /// success in the range's `overridden` mask so the stream never
+    /// clobbers the newer state with a stale donor copy, and hint the
+    /// gainer on a miss exactly like any down replica — the commit
+    /// gate refuses to flip the range until that hint drains.
+    fn dual_apply(&mut self, key: u64, seq: u64, put: bool) {
+        let Some(tr) = &self.transition else {
+            return;
+        };
+        let Some(ridx) = tr.range_index(mix64(key)) else {
+            return;
+        };
+        if tr.ranges[ridx].committed() {
+            return;
+        }
+        let gainers = tr.ranges[ridx].gainers.clone();
+        for (gi, &g) in gainers.iter().enumerate() {
+            let res = if put {
+                self.replica_call(g, 0, |p, ctx| p.put(ctx, key))
+            } else {
+                self.replica_call(g, 0, |p, ctx| p.delete(ctx, key).map(|_| ()))
+            };
+            match res {
+                Ok(()) => {
+                    let s = self.hints[g].supersede(key);
+                    self.stats.hints_superseded += s as u64;
+                    let r = &mut self.transition.as_mut().unwrap().ranges[ridx];
+                    *r.overridden.entry(key).or_insert(0) |= 1 << gi;
+                }
+                Err(_) => {
+                    let op = if put { HintOp::Put(key) } else { HintOp::Delete(key) };
+                    self.queue_hint(g, seq, op);
+                }
+            }
+        }
+    }
+
+    /// Drive the in-flight transfer one bounded step: page the current
+    /// donor of the first non-committed range (`transfer_batch` keys),
+    /// land each key on the gainers, and try the range's commit gate
+    /// once every donor is exhausted. Called automatically after every
+    /// client op; harness drain loops call it directly. Returns the
+    /// ranges still pending (0 = no transfer, or it just completed).
+    pub fn pump_transfers(&mut self) -> usize {
+        let Some(tr) = self.transition.as_ref() else {
+            return 0;
+        };
+        let Some(ridx) = tr.ranges.iter().position(|r| !r.committed()) else {
+            self.finish_transition();
+            return 0;
+        };
+        let (lo, hi, old_replicas, gainers) = {
+            let r = &tr.ranges[ridx];
+            (r.lo, r.hi, r.old_replicas.clone(), r.gainers.clone())
+        };
+        let batch = self.resilience.transfer_batch.max(1);
+        let range = &mut self.transition.as_mut().unwrap().ranges[ridx];
+        if range.state == RangeState::Pending {
+            range.state = RangeState::Streaming;
+        }
+        let mut donor_idx = range.donor_idx;
+        let mut cursor = range.cursor;
+        if donor_idx < old_replicas.len() {
+            let donor = old_replicas[donor_idx];
+            match self.replica_call(donor, 0, |p, ctx| p.stream_page(ctx, lo, hi, cursor, batch)) {
+                Ok(page) => {
+                    let short_page = page.len() < batch;
+                    let mut stalled = false;
+                    for key in page {
+                        if !self.stream_key(ridx, donor, key, &gainers) {
+                            // unreachable donor or gainer mid-key: hold
+                            // the cursor here and retry later
+                            self.stats.transfers_retried += 1;
+                            stalled = true;
+                            break;
+                        }
+                        cursor = Some(key);
+                    }
+                    if !stalled && short_page {
+                        // donor fully enumerated; next donor from the top
+                        donor_idx += 1;
+                        cursor = None;
+                    }
+                    let r = &mut self.transition.as_mut().unwrap().ranges[ridx];
+                    r.donor_idx = donor_idx;
+                    r.cursor = cursor;
+                }
+                Err(_) => self.stats.transfers_retried += 1,
+            }
+        }
+        if donor_idx >= old_replicas.len() {
+            self.try_commit(ridx, &gainers, lo, hi);
+        }
+        self.drain_replay_due();
+        match &self.transition {
+            Some(tr) => {
+                let pending = tr.pending();
+                self.stats.ranges_pending = pending as u64;
+                if pending == 0 {
+                    self.finish_transition();
+                    0
+                } else {
+                    pending
+                }
+            }
+            None => 0,
+        }
+    }
+
+    /// Land one enumerated key on every gainer that has neither a
+    /// stream copy nor newer dual-applied state. Returns `false` if a
+    /// replica call failed — the pump must not advance the cursor past
+    /// this key.
+    fn stream_key(&mut self, ridx: usize, donor: usize, key: u64, gainers: &[usize]) -> bool {
+        {
+            let r = &mut self.transition.as_mut().unwrap().ranges[ridx];
+            if r.captured.insert(key) {
+                self.stats.keys_captured += 1;
+            }
+            if r.done.contains(&key) {
+                return true;
+            }
+        }
+        // the newest pending hint is newer than any donor copy: if it
+        // is a delete, every donor still listing the key is stale and
+        // streaming it would resurrect — skip, the commit-time sweep
+        // accounts for it (same truth rule as read repair)
+        let deleted_pending = self
+            .hints
+            .iter()
+            .filter_map(|q| q.latest_for(key))
+            .max_by_key(|h| h.seq)
+            .is_some_and(|h| matches!(h.op, HintOp::Delete(_)));
+        if deleted_pending {
+            return true;
+        }
+        let (mut streamed, overridden, full) = {
+            let r = &self.transition.as_ref().unwrap().ranges[ridx];
+            (
+                r.streamed.get(&key).copied().unwrap_or(0),
+                r.overridden.get(&key).copied().unwrap_or(0),
+                r.full_mask(),
+            )
+        };
+        // fetched lazily, once, from the donor that enumerated the key
+        let mut value: Option<Option<crate::store::Value>> = None;
+        let mut failed = false;
+        for (gi, &g) in gainers.iter().enumerate() {
+            let bit = 1u32 << gi;
+            if (streamed | overridden) & bit != 0 {
+                continue;
+            }
+            if value.is_none() {
+                match self.replica_call(donor, 0, |p, ctx| p.get_value(ctx, key)) {
+                    Ok(v) => value = Some(v),
+                    Err(_) => {
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+            let Some(Some(v)) = value.clone() else {
+                // vanished from this donor across pump retries: a later
+                // donor or the commit-time sweep owns it now
+                break;
+            };
+            match self.replica_call(g, 0, |p, ctx| p.put_value(ctx, key, &v)) {
+                Ok(()) => streamed |= bit,
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        let r = &mut self.transition.as_mut().unwrap().ranges[ridx];
+        if streamed != 0 {
+            r.streamed.insert(key, streamed);
+        }
+        if (streamed | overridden) == full && r.done.insert(key) {
+            if streamed != 0 {
+                self.stats.keys_streamed += 1;
+            } else {
+                self.stats.keys_superseded += 1;
+            }
+        }
+        !failed
+    }
+
+    /// The commit gate: a range hands off only when every donor has
+    /// been fully paged *and* no pending hint against a gainer names a
+    /// key in the arc. At that point the gainers provably hold every
+    /// acked write for the range — streamed, dual-applied, or
+    /// hint-replayed — so flipping reads to the new replica set
+    /// preserves the quorum-overlap argument across the flip.
+    fn try_commit(&mut self, ridx: usize, gainers: &[usize], lo: u64, hi: u64) {
+        // give the gainers' queues one replay chance right now
+        for &g in gainers {
+            self.replay_node(g);
+        }
+        let in_arc = |token: u64| {
+            if lo < hi {
+                lo < token && token <= hi
+            } else if lo > hi {
+                token > lo || token <= hi
+            } else {
+                true
+            }
+        };
+        let blocked = gainers
+            .iter()
+            .any(|&g| self.hints[g].iter().any(|h| in_arc(mix64(h.op.key()))));
+        if blocked {
+            return;
+        }
+        let r = &mut self.transition.as_mut().unwrap().ranges[ridx];
+        // keys enumerated once but resolved by newer direct writes
+        // (deleted mid-transfer, or landed on the gainers via
+        // dual-apply/hint replay) — never silently dropped
+        let leftovers: Vec<u64> = r.captured.difference(&r.done).copied().collect();
+        for k in leftovers {
+            r.done.insert(k);
+            self.stats.keys_superseded += 1;
+        }
+        r.state = RangeState::HandedOff;
+    }
+
     /// Write to all RF replicas. Acknowledged iff
     /// `write_consistency.required` replicas took it; misses on down
     /// replicas queue hints, misses on refusing replicas surface as
@@ -382,7 +780,7 @@ impl Cluster {
     pub fn put(&mut self, key: u64) -> Result<(), ClusterError> {
         self.stats.ops_routed += 1;
         let seq = self.tick();
-        let replicas = self.ring.replicas(key, self.repl.rf);
+        let replicas = self.replicas_for(key);
         // consistency is computed over the *achievable* replica set —
         // a 1-node cluster with rf=3 has quorum 1, not 2
         let need = self.repl.write_consistency.required(replicas.len());
@@ -406,7 +804,9 @@ impl Cluster {
                 Err(_) => self.queue_hint(n, seq, HintOp::Put(key)),
             }
         }
+        self.dual_apply(key, seq, true);
         self.drain_replay_due();
+        self.pump_transfers();
         if ok >= need {
             Ok(())
         } else {
@@ -430,6 +830,11 @@ impl Cluster {
     /// hinting, and `per_node_ops`/`ops_routed` are identical to a
     /// scalar [`Cluster::put`] loop.
     pub fn put_batch(&mut self, keys: &[u64]) -> Vec<Result<(), ClusterError>> {
+        if self.transition.is_some() {
+            // routing is per-arc while a transfer streams: take the
+            // scalar path so dual-apply and pump accounting stay exact
+            return keys.iter().map(|&k| self.put(k)).collect();
+        }
         self.stats.ops_routed += keys.len() as u64;
         let base = self.clock;
         self.clock += keys.len() as u64;
@@ -514,7 +919,7 @@ impl Cluster {
     pub fn delete(&mut self, key: u64) -> Result<bool, ClusterError> {
         self.stats.ops_routed += 1;
         let seq = self.tick();
-        let replicas = self.ring.replicas(key, self.repl.rf);
+        let replicas = self.replicas_for(key);
         let need = self.repl.write_consistency.required(replicas.len());
         let mut ok = 0usize;
         let mut any = false;
@@ -530,7 +935,9 @@ impl Cluster {
                 Err(_) => self.queue_hint(n, seq, HintOp::Delete(key)),
             }
         }
+        self.dual_apply(key, seq, false);
         self.drain_replay_due();
+        self.pump_transfers();
         if ok >= need {
             Ok(any)
         } else {
@@ -544,6 +951,9 @@ impl Cluster {
     /// node, per-key consistency accounting and hinting identical to a
     /// scalar [`Cluster::delete`] loop.
     pub fn delete_batch(&mut self, keys: &[u64]) -> Vec<Result<bool, ClusterError>> {
+        if self.transition.is_some() {
+            return keys.iter().map(|&k| self.delete(k)).collect();
+        }
         self.stats.ops_routed += keys.len() as u64;
         let base = self.clock;
         self.clock += keys.len() as u64;
@@ -610,7 +1020,7 @@ impl Cluster {
     pub fn get(&mut self, key: u64) -> Result<bool, ClusterError> {
         self.stats.ops_routed += 1;
         self.tick();
-        let replicas = self.ring.replicas(key, self.repl.rf);
+        let replicas = self.replicas_for(key);
         let need = self.repl.read_consistency.required(replicas.len()).max(1);
         let mut answers: Vec<(usize, bool)> = Vec::with_capacity(need);
         for &n in &replicas {
@@ -631,6 +1041,7 @@ impl Cluster {
             Ok(self.resolve_read(key, &answers))
         };
         self.drain_replay_due();
+        self.pump_transfers();
         out
     }
 
@@ -643,6 +1054,9 @@ impl Cluster {
     /// while each node sees one batched probe per wave instead of a
     /// call per key.
     pub fn get_batch(&mut self, keys: &[u64]) -> Vec<Result<bool, ClusterError>> {
+        if self.transition.is_some() {
+            return keys.iter().map(|&k| self.get(k)).collect();
+        }
         self.stats.ops_routed += keys.len() as u64;
         self.clock += keys.len() as u64;
         let replica_sets: Vec<Vec<usize>> = keys
@@ -1218,5 +1632,171 @@ mod tests {
             Err(ClusterError::QuorumLost { need: 2, got: 1 }) => {}
             other => panic!("expected read QuorumLost, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn join_streams_all_data_and_flips_the_ring() {
+        let mut c = cluster(3, 3);
+        for k in 0..500u64 {
+            c.put(k).unwrap();
+        }
+        let id = c.add_node().unwrap();
+        assert_eq!(id, 3, "stable ids: next free slot");
+        assert!(c.transfer_active());
+        // reads during the transfer never miss (old owners serve)
+        for k in 0..500u64 {
+            assert!(c.get(k).unwrap(), "{k} during transfer");
+        }
+        while c.pump_transfers() > 0 {}
+        assert!(!c.transfer_active());
+        assert!(c.ring().contains(3));
+        assert_eq!(c.ring().node_count(), 4);
+        assert!(c.node(3).live_keys() > 0, "joiner received streamed keys");
+        assert_eq!(c.stats.transfers_started, 1);
+        assert_eq!(c.stats.transfers_completed, 1);
+        assert_eq!(
+            c.stats.keys_captured,
+            c.stats.keys_streamed + c.stats.keys_superseded,
+            "conservation law"
+        );
+        // post-flip: every key on every new-ring replica, reads hit
+        for k in 0..500u64 {
+            assert!(c.get(k).unwrap(), "{k} after flip");
+            for &n in &c.ring().replicas(k, 3) {
+                assert!(c.node(n).get(k), "key {k} missing on replica {n}");
+            }
+        }
+        assert!(!c.get(999_999).unwrap());
+    }
+
+    #[test]
+    fn leave_streams_to_successors_and_retires_the_node() {
+        let mut c = cluster(4, 2);
+        for k in 0..400u64 {
+            c.put(k).unwrap();
+        }
+        c.remove_node(1).unwrap();
+        while c.pump_transfers() > 0 {}
+        assert!(!c.transfer_active());
+        assert!(!c.ring().contains(1));
+        assert!(c.is_retired(1));
+        for k in 0..400u64 {
+            assert!(c.get(k).unwrap(), "{k} after leave");
+            for &n in &c.ring().replicas(k, 2) {
+                assert_ne!(n, 1, "retired node must own nothing");
+                assert!(c.node(n).get(k), "key {k} missing on replica {n}");
+            }
+        }
+        assert_eq!(
+            c.stats.keys_captured,
+            c.stats.keys_streamed + c.stats.keys_superseded
+        );
+        assert_eq!(
+            c.remove_node(1),
+            Err(MembershipError::UnknownNode(1)),
+            "a retired id cannot be removed twice"
+        );
+    }
+
+    #[test]
+    fn membership_guards_reject_invalid_requests() {
+        let mut c = cluster(2, 2);
+        c.add_node().unwrap();
+        assert_eq!(c.add_node(), Err(MembershipError::TransferInProgress));
+        assert_eq!(c.remove_node(0), Err(MembershipError::TransferInProgress));
+        while c.pump_transfers() > 0 {}
+        assert_eq!(c.remove_node(9), Err(MembershipError::UnknownNode(9)));
+        let mut solo = cluster(1, 2);
+        assert_eq!(solo.remove_node(0), Err(MembershipError::LastNode));
+    }
+
+    #[test]
+    fn shrinking_below_rf_flips_immediately() {
+        // 3 nodes at rf=3: survivors already hold everything, so the
+        // leave plan has no gainers and completes without streaming
+        let mut c = cluster(3, 3);
+        for k in 0..100u64 {
+            c.put(k).unwrap();
+        }
+        c.remove_node(2).unwrap();
+        assert!(!c.transfer_active(), "nothing to stream");
+        assert!(c.is_retired(2));
+        assert_eq!(c.stats.keys_captured, 0);
+        for k in 0..100u64 {
+            assert!(c.get(k).unwrap(), "{k}");
+        }
+    }
+
+    #[test]
+    fn writes_during_transfer_dual_apply_and_survive_the_flip() {
+        let mut c = cluster(3, 3);
+        for k in 0..200u64 {
+            c.put(k).unwrap();
+        }
+        c.add_node().unwrap();
+        // interleave fresh writes and deletes with the stream (each op
+        // pumps one bounded batch)
+        for k in 200..400u64 {
+            c.put(k).unwrap();
+        }
+        for k in 0..100u64 {
+            c.delete(k).unwrap();
+        }
+        while c.pump_transfers() > 0 {}
+        assert!(!c.transfer_active());
+        for k in 0..100u64 {
+            assert!(!c.get(k).unwrap(), "deleted {k} resurrected");
+            for &n in &c.ring().replicas(k, 3) {
+                assert!(!c.node(n).get(k), "deleted {k} still live on {n}");
+            }
+        }
+        for k in 100..400u64 {
+            assert!(c.get(k).unwrap(), "{k} lost across the flip");
+            for &n in &c.ring().replicas(k, 3) {
+                assert!(c.node(n).get(k), "key {k} missing on {n}");
+            }
+        }
+        assert_eq!(
+            c.stats.keys_captured,
+            c.stats.keys_streamed + c.stats.keys_superseded
+        );
+    }
+
+    #[test]
+    fn joiner_death_mid_transfer_stalls_then_completes() {
+        let mut c = cluster(3, 3);
+        for k in 0..300u64 {
+            c.put(k).unwrap();
+        }
+        // clock is now 300; the joiner is unreachable until tick 400
+        let id = c.add_node_with_plane(Arc::new(DownUntil(400))).unwrap();
+        for _ in 0..40 {
+            c.pump_transfers();
+        }
+        assert!(
+            c.transfer_active(),
+            "stream cannot finish against a dead joiner"
+        );
+        assert!(c.stats.transfers_retried > 0);
+        // reads keep serving from the old owners meanwhile
+        for k in 0..300u64 {
+            assert!(c.get(k).unwrap(), "{k} while joiner is down");
+        }
+        c.advance_clock(400 + c.resilience().breaker.cooldown);
+        let mut rounds = 0;
+        while c.pump_transfers() > 0 {
+            rounds += 1;
+            assert!(rounds < 100_000, "transfer must complete after recovery");
+        }
+        assert!(!c.transfer_active());
+        assert!(c.node(id).live_keys() > 0);
+        for k in 0..300u64 {
+            assert!(c.get(k).unwrap(), "{k} after recovery and flip");
+        }
+        assert_eq!(
+            c.stats.keys_captured,
+            c.stats.keys_streamed + c.stats.keys_superseded
+        );
+        assert_eq!(c.hints_pending(), 0);
     }
 }

@@ -1,0 +1,368 @@
+//! Live membership: the range-transfer plan that moves a joining (or
+//! leaving) node's captured data without ever breaking the PR-9
+//! contract.
+//!
+//! A membership change is a **ring transition** `old → new`. Splitting
+//! the ring at the union of both rings' tokens yields arcs on which
+//! *both* replica walks are constant, so the whole transition reduces
+//! to a finite list of [`RangeTransfer`]s — the arcs whose new replica
+//! set *gains* a node (the joiner, or the successor of a leaver). Each
+//! range is an independent little state machine:
+//!
+//! ```text
+//!   Pending ──(first pump)──▶ Streaming ──(commit gate)──▶ HandedOff
+//! ```
+//!
+//! - **Streaming**: every old replica of the arc is paged in key order
+//!   through the proxy seam (`stream_page` → `get_value` on the donor,
+//!   `put_value` on each gainer), bounded `transfer_batch` keys per
+//!   pump. Enumerating the *union* of all old replicas (not just the
+//!   primary) is what makes donor death survivable: a write acked at
+//!   quorum lives on ≥ 2 old replicas, so a single stale or crashed
+//!   donor can never starve the gainer of an acked key. A donor that
+//!   is unreachable simply stalls its range (counted in
+//!   `transfers_retried`) until it recovers — reads keep routing to
+//!   the old owners meanwhile, which is always safe.
+//! - **Dual-apply**: a client write to a key in a non-committed range
+//!   applies to the old replica set (which carries the consistency
+//!   accounting) *and* to every gainer. A gainer that takes it is
+//!   recorded in `overridden` — the stream must not later overwrite
+//!   that newer state with a stale donor copy (the seq-tagged
+//!   supersession rule of `handoff.rs`, applied to streaming). A
+//!   gainer that misses it gets a hint, exactly like any down replica.
+//! - **Commit gate**: a range hands off only when every donor has been
+//!   fully paged *and* no hint destined to a gainer still names a key
+//!   in the arc. At that point the gainer provably holds every acked
+//!   write for the range (streamed, dual-applied, or hint-replayed),
+//!   so flipping reads from the old owners to the new replica set
+//!   preserves the R+W > RF overlap argument across the flip.
+//!
+//! The conservation law (proptest P19): every captured key is streamed
+//! exactly once or superseded by a newer direct write — at completion
+//! `keys_captured == keys_streamed + keys_superseded`, and nothing is
+//! ever silently dropped.
+//!
+//! Everything here is a pure function of the rings and the op
+//! sequence: `BTreeMap`/`BTreeSet` state, sorted pages, deterministic
+//! donor order — membership chaos runs replay bit-identically from
+//! their seed.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::ring::HashRing;
+
+/// Which membership change a transition is carrying out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipChange {
+    /// Node `id` is joining: it is the gainer of every range.
+    Join(usize),
+    /// Node `id` is leaving: each of its arcs falls to a successor.
+    Leave(usize),
+}
+
+impl MembershipChange {
+    pub fn node(&self) -> usize {
+        match *self {
+            MembershipChange::Join(id) | MembershipChange::Leave(id) => id,
+        }
+    }
+}
+
+/// Why a membership request was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipError {
+    /// Another transition is still streaming; one at a time.
+    TransferInProgress,
+    /// The id is not an active ring member (never added, or retired).
+    UnknownNode(usize),
+    /// Removing the last member would empty the ring.
+    LastNode,
+}
+
+impl std::fmt::Display for MembershipError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MembershipError::TransferInProgress => {
+                write!(f, "a membership transfer is already in progress")
+            }
+            MembershipError::UnknownNode(id) => write!(f, "node {id} is not an active member"),
+            MembershipError::LastNode => write!(f, "cannot remove the last ring member"),
+        }
+    }
+}
+
+impl std::error::Error for MembershipError {}
+
+/// Per-range transfer progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RangeState {
+    /// Planned, no pump has touched it yet.
+    Pending,
+    /// Donors are being paged; reads still route to the old owners.
+    Streaming,
+    /// Committed: reads route to the new replica set.
+    HandedOff,
+}
+
+/// One captured token arc `(lo, hi]` (wrapping when `lo > hi`) and the
+/// state of moving its keys to the gainers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RangeTransfer {
+    pub lo: u64,
+    pub hi: u64,
+    /// Replica walk of the arc in the old ring — the donors, and the
+    /// read/write targets until the range commits.
+    pub old_replicas: Vec<usize>,
+    /// Replica walk of the arc in the new ring.
+    pub new_replicas: Vec<usize>,
+    /// `new_replicas − old_replicas`: the nodes that must be fed.
+    pub gainers: Vec<usize>,
+    pub state: RangeState,
+    /// Index into `old_replicas` of the donor currently being paged.
+    pub donor_idx: usize,
+    /// Last key fully resolved from the current donor's pages.
+    pub cursor: Option<u64>,
+    /// key → bitmask over `gainers` of stream copies that landed.
+    pub streamed: BTreeMap<u64, u32>,
+    /// key → bitmask over `gainers` holding newer *direct* state (a
+    /// dual-applied write) — the stream must skip these.
+    pub overridden: BTreeMap<u64, u32>,
+    /// Every key any donor has enumerated (conservation numerator).
+    pub captured: BTreeSet<u64>,
+    /// Keys fully resolved (every gainer streamed or overridden).
+    pub done: BTreeSet<u64>,
+}
+
+impl RangeTransfer {
+    /// Does ring position `token` fall in this arc?
+    pub fn contains(&self, token: u64) -> bool {
+        if self.lo < self.hi {
+            self.lo < token && token <= self.hi
+        } else if self.lo > self.hi {
+            token > self.lo || token <= self.hi
+        } else {
+            true // single-token union: the arc is the whole ring
+        }
+    }
+
+    pub fn committed(&self) -> bool {
+        self.state == RangeState::HandedOff
+    }
+
+    /// Bitmask with one bit per gainer, all set.
+    pub fn full_mask(&self) -> u32 {
+        if self.gainers.len() >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.gainers.len()) - 1
+        }
+    }
+}
+
+/// A planned `old → new` ring transition: the full set of captured
+/// ranges plus both rings, owned by the router while it streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RingTransition {
+    pub change: MembershipChange,
+    pub old: HashRing,
+    pub new: HashRing,
+    /// Captured arcs, sorted by `hi` (the wrap arc, if captured, is
+    /// first — it has the smallest `hi`).
+    pub ranges: Vec<RangeTransfer>,
+}
+
+impl RingTransition {
+    /// Split the ring at the union of both rings' tokens and keep the
+    /// arcs whose new replica walk gains a node. On every kept arc the
+    /// old and new replica sets are constant (no union token lies
+    /// strictly inside an arc, and both rings' tokens are subsets of
+    /// the union), so one [`HashRing::replicas_at`] call per ring
+    /// covers the whole arc.
+    pub fn plan(change: MembershipChange, old: HashRing, new: HashRing, rf: usize) -> Self {
+        let mut cuts: Vec<u64> = old
+            .tokens()
+            .iter()
+            .chain(new.tokens().iter())
+            .map(|&(t, _)| t)
+            .collect();
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut ranges = Vec::new();
+        for (i, &hi) in cuts.iter().enumerate() {
+            let lo = if i == 0 { *cuts.last().unwrap() } else { cuts[i - 1] };
+            let old_replicas = old.replicas_at(hi, rf);
+            let new_replicas = new.replicas_at(hi, rf);
+            let gainers: Vec<usize> = new_replicas
+                .iter()
+                .copied()
+                .filter(|n| !old_replicas.contains(n))
+                .collect();
+            if gainers.is_empty() {
+                continue;
+            }
+            assert!(gainers.len() <= 32, "gainer bitmask is u32");
+            ranges.push(RangeTransfer {
+                lo,
+                hi,
+                old_replicas,
+                new_replicas,
+                gainers,
+                state: RangeState::Pending,
+                donor_idx: 0,
+                cursor: None,
+                streamed: BTreeMap::new(),
+                overridden: BTreeMap::new(),
+                captured: BTreeSet::new(),
+                done: BTreeSet::new(),
+            });
+        }
+        Self {
+            change,
+            old,
+            new,
+            ranges,
+        }
+    }
+
+    /// Index of the captured range containing ring position `token`,
+    /// if any — `None` means the arc's replica sets are identical in
+    /// both rings and either walk may serve it.
+    pub fn range_index(&self, token: u64) -> Option<usize> {
+        let idx = self.ranges.partition_point(|r| r.hi < token);
+        if idx < self.ranges.len() && self.ranges[idx].contains(token) {
+            return Some(idx);
+        }
+        // the wrap arc (lo > hi) sorts first by `hi`; tokens above
+        // every `hi` belong to it when it was captured
+        if self
+            .ranges
+            .first()
+            .is_some_and(|r| r.lo > r.hi && r.contains(token))
+        {
+            return Some(0);
+        }
+        None
+    }
+
+    pub fn range_for(&self, token: u64) -> Option<&RangeTransfer> {
+        self.range_index(token).map(|i| &self.ranges[i])
+    }
+
+    /// Ranges not yet handed off.
+    pub fn pending(&self) -> usize {
+        self.ranges.iter().filter(|r| !r.committed()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sorted(mut v: Vec<usize>) -> Vec<usize> {
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn join_plan_routes_old_until_commit_then_new() {
+        let old = HashRing::new(4, 32);
+        let mut grown = old.clone();
+        grown.add_node(4);
+        let mut tr = RingTransition::plan(MembershipChange::Join(4), old.clone(), grown.clone(), 3);
+        assert!(!tr.ranges.is_empty(), "a join must capture ranges");
+        for r in &tr.ranges {
+            assert_eq!(r.gainers, vec![4], "the joiner is the only gainer");
+            assert!(!r.old_replicas.contains(&4));
+            assert!(r.new_replicas.contains(&4));
+        }
+        for k in 0..4000u64 {
+            let token = crate::filter::fingerprint::mix64(k);
+            let old_r = old.replicas(k, 3);
+            let new_r = grown.replicas(k, 3);
+            match tr.range_for(token) {
+                Some(r) => {
+                    assert_eq!(r.old_replicas, old_r, "key {k}");
+                    assert_eq!(r.new_replicas, new_r, "key {k}");
+                    assert!(new_r.contains(&4), "captured arc must involve the joiner");
+                }
+                None => {
+                    // un-captured arcs must be identical in both rings —
+                    // routing with either is correct
+                    assert_eq!(old_r, new_r, "key {k}: uncaptured arc diverged");
+                }
+            }
+        }
+        // commit everything: every key now walks the new ring
+        for r in &mut tr.ranges {
+            r.state = RangeState::HandedOff;
+        }
+        for k in 0..1000u64 {
+            let token = crate::filter::fingerprint::mix64(k);
+            if let Some(r) = tr.range_for(token) {
+                assert!(r.committed());
+                assert_eq!(r.new_replicas, grown.replicas(k, 3));
+            }
+        }
+    }
+
+    #[test]
+    fn leave_plan_gains_exactly_one_successor_per_range() {
+        let old = HashRing::new(5, 32);
+        let mut shrunk = old.clone();
+        shrunk.remove_node(2);
+        let tr = RingTransition::plan(MembershipChange::Leave(2), old.clone(), shrunk.clone(), 3);
+        assert!(!tr.ranges.is_empty());
+        for r in &tr.ranges {
+            assert_eq!(r.gainers.len(), 1, "one successor per captured arc");
+            assert!(r.old_replicas.contains(&2), "only node-2 arcs are captured");
+            assert!(!r.new_replicas.contains(&2));
+            assert!(!r.gainers.contains(&2));
+        }
+        // arcs that lose node 2 but gain nobody cannot exist at rf=3
+        // with 4 survivors; every changed arc is captured
+        for k in 0..4000u64 {
+            let old_r = sorted(old.replicas(k, 3));
+            let new_r = sorted(shrunk.replicas(k, 3));
+            if old_r != new_r {
+                let token = crate::filter::fingerprint::mix64(k);
+                assert!(tr.range_for(token).is_some(), "changed key {k} not captured");
+            }
+        }
+    }
+
+    #[test]
+    fn shrinking_below_rf_captures_nothing() {
+        // 3 nodes at rf=3: removing one leaves rf capped at 2 —
+        // survivors already hold everything, nothing to stream
+        let old = HashRing::new(3, 32);
+        let mut shrunk = old.clone();
+        shrunk.remove_node(1);
+        let tr = RingTransition::plan(MembershipChange::Leave(1), old, shrunk, 3);
+        assert!(tr.ranges.is_empty(), "no gainers when survivors ⊆ old replicas");
+        assert_eq!(tr.pending(), 0);
+    }
+
+    #[test]
+    fn range_lookup_covers_the_whole_ring_consistently() {
+        let old = HashRing::new(3, 16);
+        let mut grown = old.clone();
+        grown.add_node(3);
+        let tr = RingTransition::plan(MembershipChange::Join(3), old, grown, 3);
+        // every captured range must resolve to itself; bounds exact
+        for (i, r) in tr.ranges.iter().enumerate() {
+            assert_eq!(tr.range_index(r.hi), Some(i), "hi is inside its own arc");
+            assert_ne!(
+                tr.range_index(r.lo),
+                Some(i),
+                "lo is excluded from the arc"
+            );
+        }
+    }
+
+    #[test]
+    fn membership_errors_render() {
+        assert!(MembershipError::TransferInProgress.to_string().contains("in progress"));
+        assert!(MembershipError::UnknownNode(7).to_string().contains('7'));
+        assert!(MembershipError::LastNode.to_string().contains("last"));
+    }
+}

@@ -277,6 +277,14 @@ impl OcfFileConfig {
             }
             cfg.resilience.handoff_capacity = v as usize;
         }
+        if let Some(v) = tree.get_int("cluster", "transfer_batch")? {
+            if !(1..=65536).contains(&v) {
+                return Err(ConfigError::Invalid(format!(
+                    "cluster.transfer_batch must be 1..=65536, got {v}"
+                )));
+            }
+            cfg.resilience.transfer_batch = v as usize;
+        }
 
         if let Some(v) = tree.get_int("pipeline", "batch_size")? {
             cfg.batch_size = v as usize;
@@ -563,6 +571,7 @@ breaker_threshold = 4
 breaker_cooldown = 128
 breaker_probes = 3
 handoff_capacity = 512
+transfer_batch = 128
 "#;
         let cfg = OcfFileConfig::load(text, &[]).unwrap();
         assert_eq!(cfg.read_consistency, Consistency::Quorum);
@@ -573,6 +582,7 @@ handoff_capacity = 512
         assert_eq!(cfg.resilience.breaker.cooldown, 128);
         assert_eq!(cfg.resilience.breaker.probes, 3);
         assert_eq!(cfg.resilience.handoff_capacity, 512);
+        assert_eq!(cfg.resilience.transfer_batch, 128);
         let repl = cfg.replication();
         assert_eq!(repl.rf, 3);
         assert_eq!(repl.write_consistency.required(repl.rf), 3);
@@ -592,6 +602,7 @@ handoff_capacity = 512
             "[cluster]\nbreaker_cooldown = 0\n",
             "[cluster]\nbreaker_probes = 0\n",
             "[cluster]\nhandoff_capacity = 0\n",
+            "[cluster]\ntransfer_batch = 0\n",
         ] {
             assert!(OcfFileConfig::load(bad, &[]).is_err(), "{bad}");
         }

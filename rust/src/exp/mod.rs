@@ -17,6 +17,7 @@
 //! | E13 | persistent tier: restart + mmap-vs-heap probes    | [`persist`] |
 //! | E14 | adaptive fingerprints: sustained FP rate vs skew  | [`adaptive`] |
 //! | E15 | chaos: availability & latency vs replica faults   | [`chaos`]  |
+//! | E16 | membership: availability & transfer effort vs faults | [`membership`] |
 //!
 //! Every driver takes a [`Scale`] so the same code serves quick checks
 //! (`--scale 0.01`), CI, and full paper-scale runs, and returns a
@@ -31,6 +32,7 @@ pub mod chaos;
 pub mod fig2;
 pub mod fig3;
 pub mod kernel;
+pub mod membership;
 pub mod persist;
 pub mod pool;
 pub mod probe;
@@ -76,8 +78,9 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "persist" => Ok(persist::run(scale)),
             "adaptive" => Ok(adaptive::run(scale)),
             "chaos" => Ok(chaos::run(scale)),
+            "membership" => Ok(membership::run(scale)),
             other => Err(format!(
-                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool kernel persist adaptive chaos all)"
+                "unknown experiment '{other}' (try: table1 fig2 fig3 sweep safety burst cartesian ablation sharded probe pool kernel persist adaptive chaos membership all)"
             )),
         }
     };
@@ -99,6 +102,7 @@ pub fn run(name: &str, scale: Scale) -> Result<String, String> {
             "persist",
             "adaptive",
             "chaos",
+            "membership",
         ] {
             out.push_str(&one(n)?);
             out.push('\n');

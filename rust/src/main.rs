@@ -2,7 +2,7 @@
 //! line-protocol membership server.
 //!
 //! ```text
-//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|pool|kernel|persist|adaptive|chaos|all>
+//! ocf exp <table1|fig2|fig3|sweep|safety|burst|cartesian|ablation|sharded|probe|pool|kernel|persist|adaptive|chaos|membership|all>
 //!         [--scale F]           # workload scale, 1.0 = paper scale
 //! ocf pipeline [--ops N] [--batch N] [--artifacts DIR] [--threads]
 //!              [--shards N]     # >1 = sharded concurrent filter front-end
@@ -578,7 +578,7 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
     );
     eprintln!(
         "ocf serve: cluster policy: read={} write={} retry_budget={} timeout_us={} \
-         breaker=threshold:{}/cooldown:{}/probes:{} handoff_capacity={}",
+         breaker=threshold:{}/cooldown:{}/probes:{} handoff_capacity={} transfer_batch={}",
         cfg.read_consistency.as_str(),
         cfg.write_consistency.as_str(),
         cfg.resilience.retry_budget,
@@ -587,6 +587,7 @@ fn cmd_serve_node(cfg: OcfFileConfig) -> i32 {
         cfg.resilience.breaker.cooldown,
         cfg.resilience.breaker.probes,
         cfg.resilience.handoff_capacity,
+        cfg.resilience.transfer_batch,
     );
     eprintln!(
         "ocf serve: recovery: sstables={} filters_recovered={} filters_rebuilt={} \

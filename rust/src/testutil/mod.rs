@@ -13,6 +13,9 @@ pub mod chaos;
 pub mod crash;
 pub mod prop;
 
-pub use chaos::{chaos_sweep, run_one_schedule, ChaosOutcome, ChaosReport, Truth};
+pub use chaos::{
+    chaos_sweep, membership_sweep, run_one_membership_schedule, run_one_schedule, ChaosOutcome,
+    ChaosReport, Truth,
+};
 pub use crash::{crash_sweep, standard_script, SweepReport};
 pub use prop::{prop_check, Gen};

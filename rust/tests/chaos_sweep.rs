@@ -10,8 +10,20 @@
 //! acknowledged-state model it checks against. All contract asserts
 //! fire *inside* the sweep; the checks here prove the sweep was not
 //! vacuous — faults actually happened and the machinery actually ran.
+//!
+//! The membership tests extend the same contract across topology
+//! changes: nodes join and leave mid-schedule with streaming range
+//! handoff, donors and joiners die mid-transfer, and the sweep still
+//! proves no acked write lost, no resurrection, queues drained, and
+//! every replica set converged to the *new* ring.
 
-use ocf::testutil::{chaos_sweep, run_one_schedule};
+use std::sync::Arc;
+
+use ocf::cluster::{
+    Cluster, Consistency, FaultPlane, RealProxy, ReplicationConfig, ResilienceConfig, Verdict,
+};
+use ocf::store::{FlushPolicy, NodeConfig};
+use ocf::testutil::{chaos_sweep, membership_sweep, run_one_membership_schedule, run_one_schedule};
 
 #[test]
 fn sweep_seeded_schedules_across_fault_rates() {
@@ -35,8 +47,9 @@ fn sweep_seeded_schedules_across_fault_rates() {
     );
     assert_eq!(
         report.hints_queued,
-        report.hints_replayed + report.hints_superseded,
-        "every queued hint must replay or be superseded: {report:?}"
+        report.hints_replayed + report.hints_superseded + report.hints_retired,
+        "every queued hint must replay, be superseded, or retire with \
+         its decommissioned target: {report:?}"
     );
     assert!(
         report.breaker_trips > 0,
@@ -60,6 +73,138 @@ fn heavy_fault_rate_still_converges() {
         out.answers.iter().any(|&a| a == 2),
         "typed quorum-lost answers must surface to the client"
     );
+}
+
+#[test]
+fn membership_sweep_holds_the_contract_across_topology_changes() {
+    // 8 schedules cycle the rate ladder twice; every schedule runs a
+    // join around ops/3 and a leave around 2·ops/3, both under the
+    // same seeded fault planes as the replicas. All PR-9 contract
+    // asserts (no lost acks, no resurrection, typed errors, drained
+    // queues, convergence to the *final* ring) fire inside the run.
+    let report = membership_sweep(8, 400);
+    assert_eq!(report.schedules, 8);
+    assert_eq!(
+        report.transfers_started, 16,
+        "one join and one leave per schedule: {report:?}"
+    );
+    assert_eq!(report.transfers_completed, 16, "{report:?}");
+    assert!(
+        report.keys_streamed > 0,
+        "joins over a populated key space must stream keys: {report:?}"
+    );
+    assert!(
+        report.transfers_retried > 0,
+        "faulted arms never killed a donor or joiner mid-transfer: {report:?}"
+    );
+    assert_eq!(
+        report.hints_queued,
+        report.hints_replayed + report.hints_superseded + report.hints_retired,
+        "hint conservation across membership changes: {report:?}"
+    );
+}
+
+#[test]
+fn heavy_fault_rate_membership_still_converges() {
+    // Past the sweep ladder: 40% fault density across a join and a
+    // leave. run_one_membership_schedule asserts the whole contract
+    // internally — including the transfer conservation law.
+    let out = run_one_membership_schedule(0xbad_70_90, 700, 0.4);
+    assert_eq!(out.stats.transfers_completed, 2);
+    assert_eq!(out.stats.hints_dropped, 0, "{:?}", out.stats);
+    assert_eq!(
+        out.stats.keys_captured,
+        out.stats.keys_streamed + out.stats.keys_superseded,
+        "{:?}",
+        out.stats
+    );
+}
+
+/// Crashed while `start <= clock < end`, healthy otherwise.
+#[derive(Debug)]
+struct DownDuring(u64, u64);
+
+impl FaultPlane for DownDuring {
+    fn verdict(&self, clock: u64, _attempt: u32) -> Verdict {
+        if clock >= self.0 && clock < self.1 {
+            Verdict::Crashed
+        } else {
+            Verdict::Healthy
+        }
+    }
+    fn describe(&self) -> String {
+        format!("down during [{}, {})", self.0, self.1)
+    }
+}
+
+#[test]
+fn donor_death_mid_transfer_stalls_the_range_and_recovers() {
+    // 3-node rf=3 cluster: every range's donor set includes node 0, so
+    // killing node 0 mid-transfer must stall every commit (the union
+    // enumeration refuses to hand off a range whose donor was never
+    // fully paged) without breaking reads, then complete after
+    // recovery.
+    let planes: Vec<Arc<dyn FaultPlane>> = vec![
+        Arc::new(DownDuring(310, 600)),
+        Arc::new(RealProxy),
+        Arc::new(RealProxy),
+    ];
+    let mut c = Cluster::with_fault_planes(
+        3,
+        32,
+        NodeConfig {
+            flush: FlushPolicy::small(10_000),
+            ..NodeConfig::default()
+        },
+        ReplicationConfig {
+            rf: 3,
+            read_consistency: Consistency::Quorum,
+            write_consistency: Consistency::Quorum,
+        },
+        ResilienceConfig::default(),
+        planes,
+    );
+    for k in 0..300u64 {
+        c.put(k).unwrap();
+    }
+    let id = c.add_node().unwrap();
+    c.advance_clock(20); // into node 0's crash window
+    for _ in 0..60 {
+        c.pump_transfers();
+    }
+    assert!(
+        c.transfer_active(),
+        "no range may commit while donor 0 is unreachable"
+    );
+    assert!(c.stats.transfers_retried > 0, "{:?}", c.stats);
+    // reads keep serving from the surviving old owners
+    for k in 0..300u64 {
+        assert!(c.get(k).unwrap(), "{k} while the donor is down");
+    }
+    // writes during the stall dual-apply to the joiner or hint it
+    for k in 300..340u64 {
+        c.put(k).unwrap();
+    }
+    c.advance_clock(600 + c.resilience().breaker.cooldown);
+    let mut rounds = 0u64;
+    while c.pump_transfers() > 0 || c.replay_hints() > 0 {
+        rounds += 1;
+        assert!(rounds < 100_000, "transfer must complete after recovery");
+    }
+    assert!(!c.transfer_active());
+    assert!(c.node(id).live_keys() > 0, "joiner received the stream");
+    assert_eq!(
+        c.stats.keys_captured,
+        c.stats.keys_streamed + c.stats.keys_superseded,
+        "{:?}",
+        c.stats
+    );
+    for k in 0..340u64 {
+        assert!(c.get(k).unwrap(), "{k} after recovery");
+        for &n in &c.ring().replicas(k, 3) {
+            assert!(c.node(n).get(k), "key {k} missing on replica {n}");
+        }
+    }
 }
 
 #[test]
